@@ -1,0 +1,149 @@
+"""AOT lowering: jax → HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text (NOT `lowered.compiler_ir("hlo").serialize()`): jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all f32; shapes in artifacts/manifest.json):
+ * conv_conv_fused.hlo.txt   — whole fused model, Pallas P2-tiled (L1+L2)
+ * conv_conv_ref.hlo.txt     — whole layer-by-layer model (oracle)
+ * conv_stage1_first.hlo.txt — conv1 on the first (haloed) tile
+ * conv_stage1_steady.hlo.txt— conv1 on a steady fresh tile
+ * conv_stage2.hlo.txt       — conv2 on one intermediate tile
+ * mlp_fused.hlo.txt / mlp_ref.hlo.txt / mlp_stage{1,2}.hlo.txt
+
+The stage executables let the rust coordinator own the inter-layer schedule
+(retain vs recompute) while PJRT runs per-tile compute — python never on the
+request path. `make artifacts` is incremental: this script is a no-op when
+artifacts are newer than python/compile/**.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---- the fixed e2e configuration (examples/e2e_fused_pipeline.rs) ----
+ROWS = 32          # P2 = output rows of conv2
+CH = 16            # C1 = M1 = M2
+TILE_P = 8         # inter-layer tile along P2
+TOKENS, D1, E1, E2 = 64, 64, 128, 64
+TILE_M = 16
+
+HALO1 = 2          # conv1 output halo consumed by conv2
+HALO_T = 4         # total input halo (two 3x3 layers)
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_all(outdir: str) -> dict:
+    h = ROWS + HALO_T
+    x = f32(CH, h, h)
+    w1 = f32(CH, CH, 3, 3)
+    w2 = f32(CH, CH, 3, 3)
+
+    artifacts = {}
+
+    def emit(name, fn, *specs, meta=None):
+        text = to_hlo_text(fn, *specs)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in specs],
+            **(meta or {}),
+        }
+        print(f"  {name}: {len(text)} chars, inputs {[s.shape for s in specs]}")
+
+    # Whole-model variants.
+    emit(
+        "conv_conv_fused",
+        functools.partial(model.conv_conv_fused, tile_p=TILE_P),
+        x, w1, w2,
+        meta={"tile_p": TILE_P},
+    )
+    emit("conv_conv_ref", model.conv_conv_layerwise, x, w1, w2)
+
+    # Per-tile stage executables for the rust-driven pipeline (retain
+    # dataflow): the first tile produces tile_p + HALO1 intermediate rows;
+    # steady tiles produce tile_p fresh rows.
+    first_in_rows = TILE_P + HALO1 + 2   # fresh fmap2 rows + conv1 halo
+    steady_in_rows = TILE_P + 2
+    emit(
+        "conv_stage1_first",
+        model.conv_stage,
+        f32(CH, first_in_rows, h), w1,
+        meta={"fresh_rows": TILE_P + HALO1},
+    )
+    emit(
+        "conv_stage1_steady",
+        model.conv_stage,
+        f32(CH, steady_in_rows, h), w1,
+        meta={"fresh_rows": TILE_P},
+    )
+    emit(
+        "conv_stage2",
+        model.conv_stage,
+        f32(CH, TILE_P + HALO1, h - 2), w2,
+        meta={"out_rows": TILE_P},
+    )
+
+    # fc+fc variants.
+    xm = f32(TOKENS, D1)
+    wm1 = f32(D1, E1)
+    wm2 = f32(E1, E2)
+    emit(
+        "mlp_fused",
+        functools.partial(model.fc_fc_fused, tile_m=TILE_M),
+        xm, wm1, wm2,
+        meta={"tile_m": TILE_M},
+    )
+    emit("mlp_ref", model.fc_fc_layerwise, xm, wm1, wm2)
+    emit("mlp_stage1", model.fc_stage, f32(TILE_M, D1), wm1)
+    emit("mlp_stage2", model.fc_stage, f32(TILE_M, E1), wm2)
+
+    manifest = {
+        "config": {
+            "rows": ROWS, "channels": CH, "tile_p": TILE_P,
+            "halo1": HALO1, "halo_total": HALO_T,
+            "tokens": TOKENS, "d1": D1, "e1": E1, "e2": E2, "tile_m": TILE_M,
+        },
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    print(f"lowering artifacts to {outdir}")
+    build_all(outdir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: fused conv+conv with inter-layer P-tiling.
+
+This kernel *executes* the dataflow the LoopTree model reasons about: the
+grid iterates over P2 tiles of the last layer's output; each grid step
+computes the producer (conv1) tile — including the halo rows, i.e. the
+paper's RECOMPUTE retention-recomputation choice, since Pallas grid steps
+are independent — and immediately consumes it with conv2. Only a tile of the
+intermediate fmap (Fmap2) ever exists, in VMEM scratch.
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation):
+ * the haloed dynamic-slice of the input expresses the HBM↔VMEM overlap
+   schedule the paper expresses with inter-layer tiling;
+ * the VMEM footprint of one grid step — `C·(Tp+halo+?)·W` input rows plus
+   `M1·(Tp+halo2)·(W-2)` intermediate rows — is exactly the model's
+   predicted occupancy for the `P2` schedule with innermost retention
+   (recompute);
+ * `interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+   custom-calls; numerics are identical to a TPU lowering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_tile(x, w):
+    """Valid conv on a tile via shifted-slice accumulation.
+
+    x: [C, H, W]; w: [M, C, R, S] -> [M, H-R+1, W-S+1]. Written as R·S
+    channel-contracting einsums so it lowers to MXU-friendly matmuls instead
+    of a window gather (the TPU analogue of the paper's MAC-array mapping).
+    """
+    m, _, r, s = w.shape
+    h_out = x.shape[1] - r + 1
+    w_out = x.shape[2] - s + 1
+    acc = jnp.zeros((m, h_out, w_out), dtype=jnp.float32)
+    for dr in range(r):
+        for ds in range(s):
+            patch = x[:, dr : dr + h_out, ds : ds + w_out]
+            acc = acc + jnp.einsum(
+                "chw,mc->mhw",
+                patch,
+                w[:, :, dr, ds],
+                preferred_element_type=jnp.float32,
+            )
+    return acc.astype(x.dtype)
+
+
+def _fused_kernel(x_ref, w1_ref, w2_ref, o_ref, *, tile_p, halo):
+    """One grid step: slice the haloed input rows, conv1, then conv2."""
+    i = pl.program_id(0)
+    # Haloed input block: rows [i*tile_p, i*tile_p + tile_p + halo).
+    x = x_ref[:, pl.ds(i * tile_p, tile_p + halo), :]
+    fmap2_tile = _conv_tile(x, w1_ref[...])  # recomputed halo included
+    o_ref[...] = _conv_tile(fmap2_tile, w2_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p",))
+def fused_conv_conv(x, w1, w2, tile_p=8):
+    """Fused conv+conv, P2-tiled: x [C,H,W], w1 [M1,C,R,S], w2 [M2,M1,R,S].
+
+    `tile_p` is the inter-layer tile along the output-row rank (P2). The
+    output height must be divisible by `tile_p` (ragged tiles are exercised
+    on the rust side, which drives per-tile executables directly).
+    """
+    c, h, wdt = x.shape
+    m1, _, r1, s1 = w1.shape
+    m2, _, r2, s2 = w2.shape
+    halo = (r1 - 1) + (r2 - 1)
+    p_out = h - halo
+    q_out = wdt - (s1 - 1) - (s2 - 1)
+    assert p_out % tile_p == 0, f"P2={p_out} not divisible by tile {tile_p}"
+    grid = (p_out // tile_p,)
+
+    kernel = functools.partial(_fused_kernel, tile_p=tile_p, halo=halo)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Full input resident; the kernel takes haloed slices (Pallas
+            # block indexing cannot express overlapping blocks directly).
+            pl.BlockSpec(x.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w1.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(w2.shape, lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m2, tile_p, q_out), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m2, p_out, q_out), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def vmem_footprint_words(c, w, m1, tile_p, halo1, halo_total):
+    """Estimated VMEM words for one grid step (DESIGN.md §Perf): the haloed
+    input block plus the intermediate tile — the model's occupancy
+    prediction for the P2 schedule with innermost retention."""
+    in_rows = tile_p + halo_total
+    fmap2_rows = tile_p + halo1
+    return c * in_rows * w + m1 * fmap2_rows * (w - 2)

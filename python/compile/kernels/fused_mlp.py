@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: fused fc+fc with token (M) tiling.
+
+The transformer feed-forward fusion set (paper Table X row 3). Token tiles
+never overlap (`m` appears bare in every access), so there is no
+retention-recomputation choice (paper §VI-C) — each grid step computes one
+token tile end to end, with the intermediate activations living only in
+registers/VMEM. This is the degenerate-but-important case of the paper's
+taxonomy, and the kernel demonstrates it executably.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One token tile through both layers: (x @ W1) @ W2."""
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32).astype(x.dtype)
+    o_ref[...] = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32).astype(
+        x.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def fused_fc_fc(x, w1, w2, tile_m=16):
+    """Fused fc+fc, token-tiled: x [M, D1], w1 [D1, E1], w2 [E1, E2].
+
+    `tile_m` is the inter-layer tile along the token rank. M must be
+    divisible by `tile_m`.
+    """
+    m, d1 = x.shape
+    _, e1 = w1.shape
+    _, e2 = w2.shape
+    assert m % tile_m == 0, f"M={m} not divisible by tile {tile_m}"
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d1), lambda i: (i, 0)),
+            pl.BlockSpec((d1, e1), lambda i: (0, 0)),
+            pl.BlockSpec((e1, e2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, e2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, e2), x.dtype),
+        interpret=True,
+    )(x, w1, w2)

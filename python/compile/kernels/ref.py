@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the fused-layer kernels.
+
+These are the correctness references (the L1 Pallas kernels and the L2 fused
+models are checked against them with `assert_allclose` in python/tests/).
+Everything here is straight-line jax.numpy — no Pallas, no tiling.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d(x, w):
+    """Valid 2D convolution (cross-correlation, the DNN convention).
+
+    x: [C, H, W] input fmap; w: [M, C, R, S] filters -> [M, H-R+1, W-S+1].
+    """
+    out = lax.conv_general_dilated(
+        x[None],  # [1, C, H, W]
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def conv_conv(x, w1, w2):
+    """The paper's conv+conv fusion set (Table X row 1), layer by layer."""
+    return conv2d(conv2d(x, w1), w2)
+
+
+def conv_conv_intermediate(x, w1):
+    """The intermediate fmap (Fmap2) — for halo/retention checks."""
+    return conv2d(x, w1)
+
+
+def fc_fc(x, w1, w2):
+    """The paper's fc+fc fusion set (Table X row 3): x [M, D1] -> [M, E2]."""
+    return (x @ w1) @ w2
+
+
+def pwise_dwise_pwise(x, w1, wd, w2):
+    """MobileNetV2 block (Table X row 2): pwise -> 3x3 dwise -> pwise.
+
+    x: [C1, H, W]; w1: [M1, C1]; wd: [M1, 3, 3]; w2: [C3out, M1].
+    """
+    h = jnp.einsum("chw,mc->mhw", x, w1)
+    # Depthwise 3x3, valid: per-channel convolution.
+    d = lax.conv_general_dilated(
+        h[None],
+        wd[:, None, :, :],  # [M1, 1, 3, 3]
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=h.shape[0],
+    )[0]
+    return jnp.einsum("mhw,cm->chw", d, w2)
+
+
+def attention(q, k, v):
+    """Fused self-attention reference: scores -> softmax -> attend.
+
+    q, k, v: [B, H, T, E] -> [B, H, T, E].
+    """
+    s = jnp.einsum("bhme,bhne->bhmn", q, k) / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhmn,bhne->bhme", p, v)

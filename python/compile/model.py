@@ -1,0 +1,78 @@
+"""L2: the fusion-set compute graphs in JAX, calling the L1 kernels.
+
+Two dataflows per fusion set:
+ * `*_fused`       — inter-layer tiled, via the Pallas kernels;
+ * `*_layerwise`   — the layer-by-layer baseline (paper Fig 1(b)).
+
+Plus the *per-tile stage functions* the rust L3 coordinator drives: one
+compiled executable per stage/tile-shape variant, so the coordinator can own
+the inter-layer schedule (retain or recompute) at runtime, exactly as the
+paper's taxonomy separates the schedule (L3 choice) from the per-tile
+compute (L1/L2 artifact).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import fused_conv, fused_mlp, ref
+
+
+# ---------------------------------------------------------------- conv+conv
+
+def conv_conv_fused(x, w1, w2, tile_p=8):
+    """Inter-layer P2-tiled fused conv+conv (Pallas, recompute dataflow)."""
+    return fused_conv.fused_conv_conv(x, w1, w2, tile_p=tile_p)
+
+
+def conv_conv_layerwise(x, w1, w2):
+    """Layer-by-layer baseline: whole Fmap2 materialized."""
+    return ref.conv_conv(x, w1, w2)
+
+
+def conv_stage(x_block, w):
+    """One conv stage on one tile: the artifact the rust coordinator drives.
+
+    x_block: [C, rows, W] (rows = fresh tile rows + producer halo);
+    w: [M, C, R, S] -> [M, rows-R+1, W-S+1].
+    """
+    return fused_conv._conv_tile(x_block, w)
+
+
+# --------------------------------------------------------------------- fc+fc
+
+def fc_fc_fused(x, w1, w2, tile_m=16):
+    """Token-tiled fused fc+fc (Pallas)."""
+    return fused_mlp.fused_fc_fc(x, w1, w2, tile_m=tile_m)
+
+
+def fc_fc_layerwise(x, w1, w2):
+    return ref.fc_fc(x, w1, w2)
+
+
+def fc_stage(x_tile, w):
+    """One fc stage on one token tile: x [Tm, D] @ w [D, E]."""
+    return jnp.dot(x_tile, w, preferred_element_type=jnp.float32).astype(x_tile.dtype)
+
+
+# ------------------------------------------------------------------- params
+
+def init_conv_conv(rows, channels, key_scale=0.02):
+    """Deterministic pseudo-random parameters (no RNG dependency at build
+    time keeps artifacts reproducible byte-for-byte)."""
+    import numpy as np
+
+    rng = np.random.default_rng(20240916)  # the paper's DOI date
+    h = rows + 4  # two 3x3 halos
+    x = rng.standard_normal((channels, h, h), dtype=np.float32) * 1.0
+    w1 = rng.standard_normal((channels, channels, 3, 3), dtype=np.float32) * key_scale
+    w2 = rng.standard_normal((channels, channels, 3, 3), dtype=np.float32) * key_scale
+    return jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2)
+
+
+def init_fc_fc(tokens, d1, e1, e2, key_scale=0.02):
+    import numpy as np
+
+    rng = np.random.default_rng(20240916)
+    x = rng.standard_normal((tokens, d1), dtype=np.float32)
+    w1 = rng.standard_normal((d1, e1), dtype=np.float32) * key_scale
+    w2 = rng.standard_normal((e1, e2), dtype=np.float32) * key_scale
+    return jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w2)

@@ -1,0 +1,126 @@
+"""L1 kernel correctness: Pallas fused kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and tile sizes; assert_allclose against ref.py is
+the core correctness signal for the compile path (the same functions are
+AOT-lowered into the artifacts the rust runtime executes).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import fused_conv, fused_mlp, ref
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ----------------------------------------------------------- fused conv+conv
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    tile_p=st.sampled_from([2, 4]),
+    ch=st.integers(min_value=1, max_value=6),
+    width=st.integers(min_value=9, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_conv_conv_matches_ref(tiles, tile_p, ch, width, seed):
+    rng = np.random.default_rng(seed)
+    p_out = tiles * tile_p
+    h = p_out + 4
+    x = rand(rng, ch, h, width)
+    w1 = rand(rng, ch, ch, 3, 3, scale=0.1)
+    w2 = rand(rng, ch, ch, 3, 3, scale=0.1)
+    got = fused_conv.fused_conv_conv(x, w1, w2, tile_p=tile_p)
+    want = ref.conv_conv(x, w1, w2)
+    assert got.shape == want.shape
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_fused_conv_single_tile_degenerates_to_layerwise():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 4, 12, 12)
+    w1 = rand(rng, 4, 4, 3, 3, scale=0.1)
+    w2 = rand(rng, 4, 4, 3, 3, scale=0.1)
+    got = fused_conv.fused_conv_conv(x, w1, w2, tile_p=8)  # one tile
+    want = ref.conv_conv(x, w1, w2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_fused_conv_rejects_indivisible_tiles():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 2, 11, 11)  # P2 = 7, not divisible by 4
+    w = rand(rng, 2, 2, 3, 3)
+    with pytest.raises(AssertionError):
+        fused_conv.fused_conv_conv(x, w, w, tile_p=4)
+
+
+def test_conv_tile_helper_matches_lax():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 3, 10, 9)
+    w = rand(rng, 5, 3, 3, 3, scale=0.1)
+    got = fused_conv._conv_tile(x, w)
+    want = ref.conv2d(x, w)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_conv_tile_5x5_kernel():
+    rng = np.random.default_rng(2)
+    x = rand(rng, 2, 12, 12)
+    w = rand(rng, 3, 2, 5, 5, scale=0.1)
+    got = fused_conv._conv_tile(x, w)
+    want = ref.conv2d(x, w)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- fused fc+fc
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    tile_m=st.sampled_from([4, 8]),
+    d1=st.integers(min_value=2, max_value=32),
+    e1=st.integers(min_value=2, max_value=32),
+    e2=st.integers(min_value=2, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_fc_fc_matches_ref(tiles, tile_m, d1, e1, e2, seed):
+    rng = np.random.default_rng(seed)
+    m = tiles * tile_m
+    x = rand(rng, m, d1)
+    w1 = rand(rng, d1, e1, scale=0.1)
+    w2 = rand(rng, e1, e2, scale=0.1)
+    got = fused_mlp.fused_fc_fc(x, w1, w2, tile_m=tile_m)
+    want = ref.fc_fc(x, w1, w2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------- reference self-checks
+
+def test_ref_pwise_dwise_pwise_shapes():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 4, 10, 10)
+    w1 = rand(rng, 24, 4, scale=0.1)
+    wd = rand(rng, 24, 3, 3, scale=0.1)
+    w2 = rand(rng, 4, 24, scale=0.1)
+    out = ref.pwise_dwise_pwise(x, w1, wd, w2)
+    assert out.shape == (4, 8, 8)
+
+
+def test_ref_attention_is_softmax_weighted():
+    rng = np.random.default_rng(4)
+    q = rand(rng, 1, 2, 6, 4)
+    k = rand(rng, 1, 2, 6, 4)
+    v = rand(rng, 1, 2, 6, 4)
+    out = ref.attention(q, k, v)
+    assert out.shape == (1, 2, 6, 4)
+    # Attention outputs are convex combinations of values along tokens.
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    o = np.asarray(out)
+    assert (o >= vmin - 1e-4).all() and (o <= vmax + 1e-4).all()

@@ -1,0 +1,80 @@
+"""L2 model + AOT path tests: fused vs layerwise equivalence, stage-tile
+composition (the schedule the rust coordinator drives), and HLO text
+artifact generation."""
+
+import json
+import os
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_fused_equals_layerwise_conv():
+    x, w1, w2 = model.init_conv_conv(rows=16, channels=4)
+    fused = model.conv_conv_fused(x, w1, w2, tile_p=4)
+    layerwise = model.conv_conv_layerwise(x, w1, w2)
+    assert_allclose(np.asarray(fused), np.asarray(layerwise), rtol=2e-4, atol=2e-4)
+
+
+def test_fused_equals_layerwise_mlp():
+    x, w1, w2 = model.init_fc_fc(tokens=32, d1=16, e1=24, e2=8)
+    fused = model.fc_fc_fused(x, w1, w2, tile_m=8)
+    layerwise = model.fc_fc_layerwise(x, w1, w2)
+    assert_allclose(np.asarray(fused), np.asarray(layerwise), rtol=2e-4, atol=2e-4)
+
+
+def test_stage_composition_retain_dataflow():
+    """Drive the per-tile stage functions exactly as the rust coordinator
+    does (retain dataflow: first tile produces tile+halo intermediate rows,
+    steady tiles produce fresh rows only) and check against the oracle."""
+    rows, ch, tile_p, halo1 = 16, 3, 4, 2
+    x, w1, w2 = model.init_conv_conv(rows=rows, channels=ch)
+    want = ref.conv_conv(x, w1, w2)
+
+    h = x.shape[1]
+    fmap2_rows = []  # retained intermediate band (list of row arrays)
+    out_tiles = []
+    produced = 0  # fmap2 rows produced so far
+    for i in range(rows // tile_p):
+        if i == 0:
+            fresh = tile_p + halo1
+            x_block = x[:, 0 : fresh + 2, :]
+        else:
+            fresh = tile_p
+            x_block = x[:, produced : produced + fresh + 2, :]
+        f2 = model.conv_stage(x_block, w1)  # [ch, fresh, h-2]
+        assert f2.shape[1] == fresh
+        fmap2_rows.append(np.asarray(f2))
+        produced += fresh
+        band = np.concatenate(fmap2_rows, axis=1)[:, -(tile_p + halo1) :, :]
+        out_tiles.append(np.asarray(model.conv_stage(jnp.asarray(band), w2)))
+    got = np.concatenate(out_tiles, axis=1)
+    assert_allclose(got, np.asarray(want), rtol=2e-4, atol=2e-4)
+    assert produced == rows + halo1  # fmap2 fully produced, exactly once
+
+
+def test_aot_emits_parseable_hlo(tmp_path):
+    outdir = str(tmp_path)
+    manifest = aot.build_all(outdir)
+    assert "conv_conv_fused" in manifest["artifacts"]
+    for name, meta in manifest["artifacts"].items():
+        path = os.path.join(outdir, meta["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        # HLO text module header — what HloModuleProto::from_text_file needs.
+        assert text.lstrip().startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text, name
+    with open(os.path.join(outdir, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["config"]["tile_p"] == aot.TILE_P
+
+
+def test_aot_config_consistency():
+    # Shapes in the manifest must compose: stage2 consumes stage1's output.
+    assert aot.ROWS % aot.TILE_P == 0
+    assert aot.TOKENS % aot.TILE_M == 0

@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 14: buffer capacity required for algorithmic-
+//! minimum off-chip transfers across partitioned-ranks/schedule choices.
+
+use looptree::casestudies::fig14;
+use looptree::util::bench::bench_once;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (bars, t) = bench_once("fig14 sweep", || fig14::run(!full));
+    println!("{}", fig14::render(&bars));
+    println!("{}", t.report());
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 15: recomputation vs capacity Pareto fronts per
+//! schedule on pwise+dwise+pwise.
+
+use looptree::casestudies::fig15;
+use looptree::util::bench::bench_once;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (curves, t) = bench_once("fig15 sweep", || fig15::run(!full));
+    println!("{}", fig15::render(&curves));
+    println!("{}", t.report());
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Fig 16: per-tensor vs uniform retention trade-off.
+
+use looptree::casestudies::fig16;
+use looptree::util::bench::bench_once;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (res, t) = bench_once("fig16 sweep", || fig16::run(!full));
+    println!("{}", fig16::render(&res));
+    println!("{}", t.report());
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 17: per-intermediate-fmap retain-recompute choices
+//! on conv+conv+conv.
+
+use looptree::casestudies::fig17;
+use looptree::util::bench::bench_once;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (curves, t) = bench_once("fig17 sweep", || fig17::run(!full));
+    println!("{}", fig17::render(&curves));
+    println!("{}", t.report());
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 18: tiled fusion vs best-of(layer-by-layer,
+//! untiled fusion) transfers/capacity fronts.
+
+use looptree::casestudies::fig18;
+use looptree::util::bench::bench_once;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (fronts, t) = bench_once("fig18 sweep", || fig18::run(!full));
+    println!("{}", fig18::render(&fronts));
+    println!("{}", t.report());
+}

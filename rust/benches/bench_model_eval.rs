@@ -1,0 +1,75 @@
+//! Model-evaluation throughput: the paper's §IV claim that the analytical
+//! model is orders of magnitude faster than simulation. Times model and
+//! simulator on identical configurations and reports the ratio, plus raw
+//! mapping-evaluations/second across workload sizes.
+
+use looptree::arch::Arch;
+use looptree::einsum::workloads;
+use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
+use looptree::model::{evaluate, EvalOptions};
+use looptree::sim::simulate;
+use looptree::util::bench::bench;
+
+fn main() {
+    let arch = Arch::generic(1 << 20);
+    let opts = EvalOptions::default();
+    println!("== model evaluation throughput ==");
+    for (rows, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8), (112, 64, 14)] {
+        let fs = workloads::conv_conv(rows, ch);
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let mapping = InterLayerMapping::tiled(
+            vec![Partition { dim: p2, tile }],
+            Parallelism::Sequential,
+        );
+        let r = bench(
+            &format!("model conv_conv r{rows} c{ch} tile{tile}"),
+            3,
+            20,
+            || evaluate(&fs, &arch, &mapping, &opts).unwrap(),
+        );
+        println!("{}", r.report());
+        println!(
+            "    = {:.0} mapping evaluations/sec",
+            1.0 / r.mean.as_secs_f64()
+        );
+    }
+
+    println!("\n== two-level (P2,Q2) heavy walk ==");
+    {
+        let fs = workloads::conv_conv(56, 64);
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let q2 = fs.last().rank_index("Q2").unwrap();
+        let mapping = InterLayerMapping::tiled(
+            vec![
+                Partition { dim: p2, tile: 4 },
+                Partition { dim: q2, tile: 7 },
+            ],
+            Parallelism::Sequential,
+        );
+        let r = bench("model conv_conv r56 c64 P2,Q2 (104 iters)", 2, 10, || {
+            evaluate(&fs, &arch, &mapping, &opts).unwrap()
+        });
+        println!("{}", r.report());
+    }
+
+    println!("\n== model vs element-level simulator (same config) ==");
+    let fs = workloads::conv_conv(20, 8);
+    let p2 = fs.last().rank_index("P2").unwrap();
+    let mapping = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 4 }],
+        Parallelism::Sequential,
+    );
+    let m = bench("analytical model", 3, 20, || {
+        evaluate(&fs, &arch, &mapping, &opts).unwrap()
+    });
+    let s = bench("simulator", 1, 3, || simulate(&fs, &arch, &mapping).unwrap());
+    println!("{}", m.report());
+    println!("{}", s.report());
+    println!(
+        "speedup: {:.0}x (paper cites analytical models up to 1000x faster [36])",
+        s.mean.as_secs_f64() / m.mean.as_secs_f64()
+    );
+}
+
+#[allow(dead_code)]
+fn two_level() {}

@@ -1,0 +1,58 @@
+//! Search-algorithm benchmark: exhaustive vs random vs annealing vs genetic
+//! on the same objective and budget (paper §VII-C: prior search strategies
+//! adapt to the LoopTree mapspace).
+
+use looptree::arch::Arch;
+use looptree::coordinator::Coordinator;
+use looptree::einsum::workloads;
+use looptree::mapspace::MapSpaceConfig;
+use looptree::model::Metrics;
+use looptree::search;
+use looptree::util::bench::bench_once;
+
+fn main() {
+    let fs = workloads::conv_conv(28, 64);
+    let arch = Arch::generic(128);
+    let pool = Coordinator::new(0);
+    let objective = |m: &Metrics| -> f64 {
+        let p = if m.capacity_ok { 1.0 } else { 1e9 };
+        p * m.latency_cycles as f64 * m.energy.total_pj()
+    };
+
+    let cfg = MapSpaceConfig {
+        schedules: vec![
+            vec!["P2".into()],
+            vec!["P2".into(), "Q2".into()],
+            vec!["C2".into()],
+            vec!["C2".into(), "P2".into()],
+        ],
+        tile_sizes: vec![2, 4, 8],
+        ..Default::default()
+    };
+    let (ex, t) = bench_once("exhaustive", || {
+        search::exhaustive(&fs, &arch, &cfg, objective, &pool).unwrap()
+    });
+    println!("{}  -> best {:.3e} over {} mappings", t.report(), ex.best.score, ex.evaluated.len());
+
+    let (rnd, t) = bench_once("random (500 samples)", || {
+        search::random_search(&fs, &arch, 500, 7, objective, &pool).unwrap()
+    });
+    println!("{}  -> best {:.3e}", t.report(), rnd.best.score);
+
+    let (ann, t) = bench_once("annealing (500 iters)", || {
+        search::annealing(&fs, &arch, 500, 7, objective).unwrap()
+    });
+    println!("{}  -> best {:.3e}", t.report(), ann.best.score);
+
+    let (gen_, t) = bench_once("genetic (20x25)", || {
+        search::genetic(&fs, &arch, 20, 25, 7, objective, &pool).unwrap()
+    });
+    println!("{}  -> best {:.3e}", t.report(), gen_.best.score);
+
+    println!(
+        "\nquality vs exhaustive optimum: random {:.2}x, annealing {:.2}x, genetic {:.2}x",
+        rnd.best.score / ex.best.score,
+        ann.best.score / ex.best.score,
+        gen_.best.score / ex.best.score
+    );
+}

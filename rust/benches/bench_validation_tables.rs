@@ -1,0 +1,26 @@
+//! Regenerates the validation tables (paper Tables V-VIII + Fig 13 series)
+//! and times each design's model evaluation.
+
+use looptree::util::bench::bench_once;
+use looptree::validation::{self, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Test };
+    println!("scale: {scale:?} (pass --full for publication-sized workloads)\n");
+    let mut all = Vec::new();
+    for (name, f) in [
+        ("DepFin (Table V row)", validation::validate_depfin as fn(Scale) -> Vec<_>),
+        ("Fused-layer CNN (Table VI)", validation::validate_fused_cnn),
+        ("ISAAC (Table VII)", validation::validate_isaac),
+        ("PipeLayer (Table VIII)", validation::validate_pipelayer),
+        ("FLAT (Fig 13)", validation::validate_flat),
+    ] {
+        let (rows, t) = bench_once(name, || f(scale));
+        println!("{}", t.report());
+        all.extend(rows);
+    }
+    println!("\n{}", validation::summarize(&all));
+    let worst = all.iter().map(|r| r.error_pct()).fold(0.0f64, f64::max);
+    println!("worst-case model-vs-reference error: {worst:.2}% (paper: <= 4%)");
+}

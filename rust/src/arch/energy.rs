@@ -1,0 +1,101 @@
+//! accelergy-lite: per-action energy estimation.
+//!
+//! Replaces the Accelergy [42] backend: the LoopTree model only consumes
+//! pJ-per-action numbers, which we derive from component class + size with
+//! scaling rules anchored to published 45 nm measurements (Horowitz,
+//! ISSCC'14 "Computing's energy problem", the numbers Eyeriss [11] and the
+//! Accelergy component library are calibrated against):
+//!
+//! * 16-bit MAC ≈ 1.0 pJ (0.4 pJ multiply + add + pipeline overhead)
+//! * 8 KiB SRAM access ≈ 10 pJ/16-bit word; energy ∝ √capacity
+//! * register file access ≈ 0.5–1 pJ/word
+//! * DRAM ≈ 650 pJ/16-bit word (≈ 1.3 nJ per 32-bit access)
+//! * NoC ≈ 0.8 pJ/word/hop (Eyeriss-class 65 nm mesh, scaled)
+//!
+//! Absolute joules matter less than *ratios* for the paper's case studies
+//! (DRAM ≈ 650× a MAC, GLB ≈ 10–30× a register), and those ratios are
+//! faithful to the sources above.
+
+/// SRAM write energy relative to read (slightly higher drive cost).
+pub const SRAM_WRITE_FACTOR: f64 = 1.1;
+
+/// NoC hop energy per 16-bit word (pJ).
+pub const NOC_HOP_PJ_PER_WORD: f64 = 0.8;
+
+/// Reference points for the SRAM scaling rule.
+const SRAM_REF_BYTES: f64 = 8.0 * 1024.0;
+const SRAM_REF_PJ_16B: f64 = 10.0;
+
+/// Energy per word access of an SRAM of `capacity_bytes`, for `word_bits`
+/// wide words. Scales with √capacity (bitline/wordline length) and linearly
+/// with word width.
+pub fn sram_access_pj(capacity_bytes: i64, word_bits: u32) -> f64 {
+    let cap = (capacity_bytes.max(64)) as f64;
+    let width_scale = word_bits as f64 / 16.0;
+    SRAM_REF_PJ_16B * (cap / SRAM_REF_BYTES).sqrt() * width_scale
+}
+
+/// Energy per word access of a small register file.
+pub fn regfile_access_pj(capacity_bytes: i64, word_bits: u32) -> f64 {
+    let width_scale = word_bits as f64 / 16.0;
+    // 0.5 pJ at 64 B, mild growth with size.
+    let cap = capacity_bytes.max(16) as f64;
+    0.5 * (cap / 64.0).sqrt().max(1.0) * width_scale
+}
+
+/// DRAM energy per word (pJ).
+pub fn dram_access_pj(word_bits: u32) -> f64 {
+    // 1.3 nJ per 32-bit access (Horowitz) → 650 pJ per 16-bit word.
+    650.0 * word_bits as f64 / 16.0
+}
+
+/// MAC energy (pJ) by operand width.
+pub fn mac_energy_pj(word_bits: u32) -> f64 {
+    match word_bits {
+        8 => 0.3,
+        16 => 1.0,
+        32 => 3.7,
+        w => 1.0 * (w as f64 / 16.0).powi(2), // multiplier area ∝ width²
+    }
+}
+
+/// Relative cost of non-MAC ops (paper workloads include max-pool and
+/// softmax-ish elementwise stages).
+pub fn op_energy_pj(kind: crate::einsum::OpKind, mac_pj: f64) -> f64 {
+    match kind {
+        crate::einsum::OpKind::Mac => mac_pj,
+        // A comparator is far cheaper than a multiplier.
+        crate::einsum::OpKind::Max => 0.1 * mac_pj,
+        crate::einsum::OpKind::Elementwise => 0.5 * mac_pj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_scaling_monotone() {
+        let small = sram_access_pj(8 * 1024, 16);
+        let big = sram_access_pj(512 * 1024, 16);
+        assert!(big > small);
+        // √(64×) = 8×
+        assert!((big / small - 8.0).abs() < 1e-9);
+        assert!((small - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dram_dominates_sram_dominates_mac() {
+        let dram = dram_access_pj(16);
+        let glb = sram_access_pj(256 * 1024, 16);
+        let mac = mac_energy_pj(16);
+        assert!(dram > 5.0 * glb, "dram {dram} vs glb {glb}");
+        assert!(glb > 10.0 * mac, "glb {glb} vs mac {mac}");
+    }
+
+    #[test]
+    fn width_scaling() {
+        assert!(mac_energy_pj(32) > 3.0 * mac_energy_pj(16));
+        assert!(sram_access_pj(8192, 32) > sram_access_pj(8192, 16));
+    }
+}

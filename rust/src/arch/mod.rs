@@ -1,0 +1,17 @@
+//! Accelerator architecture specification + accelergy-lite energy backend.
+//!
+//! The paper's model takes "an architecture expressed as a set of buffers and
+//! compute units" (§III) and uses Accelergy [42] to turn action counts into
+//! energy. This module provides both: [`Arch`] describes the buffer
+//! hierarchy, the compute array, and the NoC; [`energy`] estimates per-action
+//! energy from component class and size, with constants documented against
+//! published numbers.
+
+pub mod energy;
+mod spec;
+pub mod presets;
+
+pub use spec::{Arch, BufferLevel, ComputeSpec, NocSpec};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,123 @@
+//! Architecture presets for the validation targets (paper Table V) and the
+//! case studies. Parameters follow each publication's description; where the
+//! publication leaves something unstated the generic Eyeriss-class defaults
+//! apply and the choice is noted.
+
+use super::{energy, Arch, BufferLevel, ComputeSpec, NocSpec};
+
+/// Fused-layer CNN [16]: Virtex-7 FPGA accelerator, 32-bit fixed-point in
+/// BRAM, ~100 MHz, modest DSP array. Separate weight / IO / tile buffers are
+/// modeled as one GLB level whose per-tensor occupancy the model reports
+/// individually (the paper's WBuf / IOBuf / TBuf split).
+pub fn fused_cnn() -> Arch {
+    let word_bits = 32;
+    Arch {
+        name: "fused-cnn-fpga".into(),
+        levels: vec![
+            BufferLevel::dram(4.0, word_bits),
+            BufferLevel::sram("BRAM", 2 * 1024 * 1024, 32.0, word_bits),
+        ],
+        compute: ComputeSpec {
+            macs: 780, // the paper's DSP-slice budget
+            mac_energy_pj: energy::mac_energy_pj(word_bits),
+            clock_ghz: 0.1,
+        },
+        noc: NocSpec { rows: 26, cols: 30, hop_energy_pj: energy::NOC_HOP_PJ_PER_WORD },
+        word_bytes: 4,
+    }
+}
+
+/// ISAAC [17]: ReRAM crossbar tiles; what LoopTree models is the eDRAM
+/// inter-tile buffering and the column-partitioned pipeline. 16-bit data.
+pub fn isaac() -> Arch {
+    let word_bits = 16;
+    Arch {
+        name: "isaac".into(),
+        levels: vec![
+            BufferLevel::dram(8.0, word_bits),
+            BufferLevel::sram("eDRAM", 64 * 1024, 64.0, word_bits),
+        ],
+        compute: ComputeSpec {
+            macs: 1024, // crossbar-equivalent MACs per tile group
+            mac_energy_pj: 0.3, // in-situ analog MAC is cheap
+            clock_ghz: 1.2,
+        },
+        noc: NocSpec { rows: 12, cols: 14, hop_energy_pj: energy::NOC_HOP_PJ_PER_WORD },
+        word_bytes: 2,
+    }
+}
+
+/// PipeLayer [18]: ReRAM training accelerator, batch-partitioned pipeline.
+pub fn pipelayer() -> Arch {
+    let word_bits = 16;
+    Arch {
+        name: "pipelayer".into(),
+        levels: vec![
+            BufferLevel::dram(8.0, word_bits),
+            BufferLevel::sram("Buf", 256 * 1024, 64.0, word_bits),
+        ],
+        compute: ComputeSpec {
+            macs: 2048,
+            mac_energy_pj: 0.3,
+            clock_ghz: 1.0,
+        },
+        noc: NocSpec { rows: 16, cols: 16, hop_energy_pj: energy::NOC_HOP_PJ_PER_WORD },
+        word_bytes: 2,
+    }
+}
+
+/// FLAT [30]: a TPU-like systolic accelerator for attention; large on-chip
+/// buffer, bf16 datapath.
+pub fn flat() -> Arch {
+    let word_bits = 16;
+    Arch {
+        name: "flat".into(),
+        levels: vec![
+            BufferLevel::dram(32.0, word_bits),
+            BufferLevel::sram("VMEM", 16 * 1024 * 1024, 256.0, word_bits),
+        ],
+        compute: ComputeSpec {
+            macs: 16384, // 128×128 systolic array
+            mac_energy_pj: energy::mac_energy_pj(word_bits),
+            clock_ghz: 0.94,
+        },
+        noc: NocSpec { rows: 128, cols: 128, hop_energy_pj: energy::NOC_HOP_PJ_PER_WORD },
+        word_bytes: 2,
+    }
+}
+
+/// DepFin [43]: 12 nm depth-first CNN processor; 1 MiB-class on-chip SRAM,
+/// 8-bit datapath.
+pub fn depfin() -> Arch {
+    let word_bits = 8;
+    Arch {
+        name: "depfin".into(),
+        levels: vec![
+            BufferLevel::dram(16.0, word_bits),
+            BufferLevel::sram("L2", 1024 * 1024, 128.0, word_bits),
+        ],
+        compute: ComputeSpec {
+            macs: 1024,
+            mac_energy_pj: energy::mac_energy_pj(word_bits),
+            clock_ghz: 0.2,
+        },
+        noc: NocSpec { rows: 32, cols: 32, hop_energy_pj: energy::NOC_HOP_PJ_PER_WORD },
+        word_bytes: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn presets_validate() {
+        for a in [
+            super::fused_cnn(),
+            super::isaac(),
+            super::pipelayer(),
+            super::flat(),
+            super::depfin(),
+        ] {
+            assert!(a.validate().is_ok(), "{} invalid", a.name);
+        }
+    }
+}

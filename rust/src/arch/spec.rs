@@ -1,0 +1,185 @@
+//! Architecture data model: buffer hierarchy, compute array, NoC.
+
+use super::energy;
+
+/// One level of the buffer hierarchy. Level 0 is always off-chip (DRAM);
+/// level 1 is the on-chip global buffer whose capacity the fused-layer
+/// mapping trades against transfers and recomputation; further levels (PE
+/// scratchpads / register files) feed the intra-layer analysis.
+#[derive(Debug, Clone)]
+pub struct BufferLevel {
+    pub name: String,
+    /// `None` = unbounded (off-chip).
+    pub capacity_bytes: Option<i64>,
+    /// Sustained bandwidth toward the level below (words of `word_bytes` per
+    /// cycle across the whole level).
+    pub bandwidth_words_per_cycle: f64,
+    /// Energy per word read / written (pJ).
+    pub read_energy_pj: f64,
+    pub write_energy_pj: f64,
+}
+
+impl BufferLevel {
+    /// A DRAM-like unbounded backing store.
+    pub fn dram(bandwidth_words_per_cycle: f64, word_bits: u32) -> Self {
+        BufferLevel {
+            name: "DRAM".into(),
+            capacity_bytes: None,
+            bandwidth_words_per_cycle,
+            read_energy_pj: energy::dram_access_pj(word_bits),
+            write_energy_pj: energy::dram_access_pj(word_bits),
+        }
+    }
+
+    /// An on-chip SRAM buffer; access energy estimated from capacity.
+    pub fn sram(name: &str, capacity_bytes: i64, bandwidth_words_per_cycle: f64, word_bits: u32) -> Self {
+        let e = energy::sram_access_pj(capacity_bytes, word_bits);
+        BufferLevel {
+            name: name.into(),
+            capacity_bytes: Some(capacity_bytes),
+            bandwidth_words_per_cycle,
+            read_energy_pj: e,
+            write_energy_pj: e * energy::SRAM_WRITE_FACTOR,
+        }
+    }
+
+    /// A small register file close to the MACs.
+    pub fn regfile(name: &str, capacity_bytes: i64, word_bits: u32) -> Self {
+        let e = energy::regfile_access_pj(capacity_bytes, word_bits);
+        BufferLevel {
+            name: name.into(),
+            capacity_bytes: Some(capacity_bytes),
+            bandwidth_words_per_cycle: f64::INFINITY,
+            read_energy_pj: e,
+            write_energy_pj: e,
+        }
+    }
+}
+
+/// The compute array.
+#[derive(Debug, Clone)]
+pub struct ComputeSpec {
+    /// Number of MAC units (peak ops/cycle).
+    pub macs: i64,
+    /// Energy per MAC (pJ); `Max`/`Elementwise` ops are scaled from this
+    /// (see [`energy`]).
+    pub mac_energy_pj: f64,
+    /// Clock (GHz) — used only to convert cycles to wall-clock in reports.
+    pub clock_ghz: f64,
+}
+
+/// Network-on-chip geometry for multicast hop counting: an `rows × cols`
+/// mesh of PE groups fed from the global buffer.
+#[derive(Debug, Clone)]
+pub struct NocSpec {
+    pub rows: i64,
+    pub cols: i64,
+    /// Energy per word per hop (pJ).
+    pub hop_energy_pj: f64,
+}
+
+impl NocSpec {
+    /// Average hop count from the buffer (at the mesh edge) to a PE,
+    /// assuming X-Y routing: hops(r, c) = r + c + 1.
+    pub fn avg_hops(&self) -> f64 {
+        // Mean of (r + c + 1) over the mesh.
+        (self.rows as f64 - 1.0) / 2.0 + (self.cols as f64 - 1.0) / 2.0 + 1.0
+    }
+
+    /// Hop count to multicast one word to `n` PEs (a minimal X-Y multicast
+    /// tree over a contiguous block of the mesh).
+    pub fn multicast_hops(&self, n: i64) -> f64 {
+        if n <= 0 {
+            return 0.0;
+        }
+        let n = n.min(self.rows * self.cols) as f64;
+        let cols = self.cols as f64;
+        // A contiguous block of n PEs spans ceil(n/cols) rows; the tree walks
+        // each occupied row plus the column spine.
+        let rows_spanned = (n / cols).ceil();
+        let row_width = n.min(cols);
+        rows_spanned * row_width + rows_spanned
+    }
+
+    pub fn num_pes(&self) -> i64 {
+        self.rows * self.cols
+    }
+}
+
+/// A complete architecture: ordered buffer levels (outermost first: DRAM at
+/// index 0, GLB at 1, deeper levels after), compute, NoC, word size.
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub name: String,
+    pub levels: Vec<BufferLevel>,
+    pub compute: ComputeSpec,
+    pub noc: NocSpec,
+    pub word_bytes: i64,
+}
+
+impl Arch {
+    /// Index of the on-chip global buffer level.
+    pub const GLB: usize = 1;
+
+    pub fn dram(&self) -> &BufferLevel {
+        &self.levels[0]
+    }
+
+    pub fn glb(&self) -> &BufferLevel {
+        &self.levels[Self::GLB]
+    }
+
+    /// On-chip capacity available to the fused-layer mapping (bytes).
+    pub fn glb_capacity(&self) -> Option<i64> {
+        self.glb().capacity_bytes
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.levels.len() < 2 {
+            return Err("need at least DRAM + one on-chip level".into());
+        }
+        if self.levels[0].capacity_bytes.is_some() {
+            return Err("level 0 must be unbounded off-chip".into());
+        }
+        if self.compute.macs <= 0 {
+            return Err("compute.macs must be positive".into());
+        }
+        if self.word_bytes <= 0 {
+            return Err("word_bytes must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// A generic Eyeriss-class architecture used by tests/examples:
+    /// 16-bit words, 256 KiB GLB, 16×16 PE mesh, 1 GHz.
+    pub fn generic(glb_kib: i64) -> Arch {
+        let word_bits = 16;
+        Arch {
+            name: format!("generic-{glb_kib}KiB"),
+            levels: vec![
+                BufferLevel::dram(16.0, word_bits),
+                BufferLevel::sram("GLB", glb_kib * 1024, 64.0, word_bits),
+                BufferLevel::regfile("RF", 512, word_bits),
+            ],
+            compute: ComputeSpec {
+                macs: 256,
+                mac_energy_pj: energy::mac_energy_pj(word_bits),
+                clock_ghz: 1.0,
+            },
+            noc: NocSpec {
+                rows: 16,
+                cols: 16,
+                hop_energy_pj: energy::NOC_HOP_PJ_PER_WORD,
+            },
+            word_bytes: (word_bits / 8) as i64,
+        }
+    }
+
+    /// Same architecture with unbounded GLB — used when searching for the
+    /// *required* capacity rather than checking against a budget.
+    pub fn unbounded_glb(&self) -> Arch {
+        let mut a = self.clone();
+        a.levels[Self::GLB].capacity_bytes = None;
+        a
+    }
+}

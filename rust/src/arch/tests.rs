@@ -1,0 +1,49 @@
+use super::*;
+
+#[test]
+fn generic_arch_validates() {
+    let a = Arch::generic(256);
+    assert!(a.validate().is_ok());
+    assert_eq!(a.glb_capacity(), Some(256 * 1024));
+    assert_eq!(a.word_bytes, 2);
+}
+
+#[test]
+fn unbounded_glb() {
+    let a = Arch::generic(256).unbounded_glb();
+    assert_eq!(a.glb_capacity(), None);
+    assert!(a.validate().is_ok());
+}
+
+#[test]
+fn invalid_archs_rejected() {
+    let mut a = Arch::generic(256);
+    a.levels[0].capacity_bytes = Some(1024);
+    assert!(a.validate().is_err());
+
+    let mut b = Arch::generic(256);
+    b.compute.macs = 0;
+    assert!(b.validate().is_err());
+
+    let mut c = Arch::generic(256);
+    c.levels.truncate(1);
+    assert!(c.validate().is_err());
+}
+
+#[test]
+fn noc_hops_monotone_in_fanout() {
+    let noc = NocSpec { rows: 16, cols: 16, hop_energy_pj: 1.0 };
+    let h1 = noc.multicast_hops(1);
+    let h16 = noc.multicast_hops(16);
+    let h256 = noc.multicast_hops(256);
+    assert!(h1 < h16 && h16 < h256);
+    assert!(noc.multicast_hops(0) == 0.0);
+    // Saturates at the mesh size.
+    assert_eq!(noc.multicast_hops(256), noc.multicast_hops(10_000));
+}
+
+#[test]
+fn dram_energy_exceeds_glb() {
+    let a = Arch::generic(256);
+    assert!(a.dram().read_energy_pj > a.glb().read_energy_pj);
+}

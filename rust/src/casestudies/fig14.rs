@@ -1,0 +1,214 @@
+//! Fig 14: buffer capacity required for algorithmic-minimum off-chip
+//! transfers under different partitioned-ranks/schedule choices, without
+//! recomputation — across the three fusion sets and shape sweeps.
+//!
+//! Paper takeaway 1: the best schedule fully reuses (and therefore fully
+//! retains) the *smallest* tensors; choices differ by up to 10×, and no
+//! single choice wins for every fusion-set shape.
+
+use super::{eval, study_tiles};
+use crate::einsum::{workloads, FusionSet, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::util::table::Table;
+
+/// One bar of the figure: a schedule's minimum capacity at alg-min
+/// transfers.
+#[derive(Debug, Clone)]
+pub struct Bar {
+    pub fusion_set: String,
+    pub shape: String,
+    pub schedule: String,
+    /// Minimum on-chip capacity (elements) achieving alg-min transfers with
+    /// zero recomputation; `None` if the schedule cannot achieve it.
+    pub capacity: Option<i64>,
+    /// Per-tensor capacity breakdown at the optimum.
+    pub breakdown: Vec<(String, i64)>,
+}
+
+/// Candidate schedules per fusion set (rank names of the last layer): the
+/// paper's compared choices.
+fn candidate_schedules(fs: &FusionSet) -> Vec<Vec<String>> {
+    let n = fs.num_layers();
+    let last = fs.last();
+    let mut cands: Vec<Vec<String>> = Vec::new();
+    for names in [
+        vec![format!("P{n}")],
+        vec![format!("P{n}"), format!("Q{n}")],
+        vec![format!("C{n}")],
+        vec![format!("M{n}")],
+        vec![format!("C{n}"), format!("P{n}")],
+        vec![format!("E{n}")],
+        vec![format!("D{n}")],
+    ] {
+        if names.iter().all(|r| last.rank_index(r).is_some()) {
+            cands.push(names);
+        }
+    }
+    cands
+}
+
+/// Minimum capacity at alg-min transfers for one schedule (searching tile
+/// shapes and per-tensor retention; paper Table IX row B).
+pub fn min_capacity_algmin(fs: &FusionSet, schedule: &[String]) -> Option<(i64, Vec<(String, i64)>, i64)> {
+    let last = fs.last();
+    let dims: Vec<usize> = schedule.iter().map(|r| last.rank_index(r).unwrap()).collect();
+    let algmin = fs.algmin_offchip_elems();
+    let mut best: Option<(i64, Vec<(String, i64)>, i64)> = None;
+
+    // Tile-size cross product.
+    let tiles_per_level: Vec<Vec<i64>> =
+        dims.iter().map(|&d| study_tiles(last.rank_sizes[d])).collect();
+    let mut stack = vec![0usize; dims.len()];
+    let mut done = false;
+    while !done {
+        let partitions: Vec<Partition> = dims
+            .iter()
+            .zip(&stack)
+            .enumerate()
+            .map(|(lvl, (&dim, &ti))| Partition { dim, tile: tiles_per_level[lvl][ti] })
+            .collect();
+        let k = partitions.len();
+        // Retention variants: for each non-output tensor, the level is the
+        // shallowest that avoids refetch — found by trying deepest-first and
+        // keeping the best feasible combination. Exhaustive over (k+1)^t is
+        // affordable for t ≤ 4 non-output tensors and k ≤ 2.
+        let tensors: Vec<TensorId> = fs
+            .tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind != TensorKind::OutputFmap)
+            .map(|(i, _)| TensorId(i))
+            .collect();
+        let combos = (k + 1).pow(tensors.len() as u32);
+        for combo in 0..combos {
+            let mut mapping =
+                InterLayerMapping::tiled(partitions.clone(), Parallelism::Sequential);
+            let mut c = combo;
+            for &t in &tensors {
+                mapping = mapping.with_retention(t, c % (k + 1));
+                c /= k + 1;
+            }
+            let m = eval(fs, &mapping);
+            if m.recompute_ops != 0 || m.offchip_total() != algmin {
+                continue;
+            }
+            let cap: i64 = m.per_tensor_occupancy.iter().sum();
+            if best.as_ref().map(|(b, _, _)| cap < *b).unwrap_or(true) {
+                let breakdown = fs
+                    .tensors
+                    .iter()
+                    .zip(&m.per_tensor_occupancy)
+                    .map(|(t, &o)| (t.name.clone(), o))
+                    .collect();
+                best = Some((cap, breakdown, algmin));
+            }
+        }
+        // Odometer.
+        let mut lvl = dims.len();
+        loop {
+            if lvl == 0 {
+                done = true;
+                break;
+            }
+            lvl -= 1;
+            stack[lvl] += 1;
+            if stack[lvl] < tiles_per_level[lvl].len() {
+                break;
+            }
+            stack[lvl] = 0;
+        }
+        if dims.is_empty() {
+            break;
+        }
+    }
+    best
+}
+
+/// Run the full figure: every fusion set × shape × schedule.
+pub fn run(fast: bool) -> Vec<Bar> {
+    let mut bars = Vec::new();
+    let conv_shapes: &[(i64, i64)] = if fast {
+        &[(28, 32), (14, 128)]
+    } else {
+        &workloads::CONV_CONV_SHAPES
+    };
+    let pdp_shapes: &[(i64, i64)] = if fast {
+        &[(28, 16)]
+    } else {
+        &workloads::PDP_SHAPES
+    };
+    let fc_shapes: &[(i64, i64)] = if fast {
+        &[(512, 256)]
+    } else {
+        &workloads::FC_FC_SHAPES
+    };
+
+    let mut sets: Vec<(String, FusionSet)> = Vec::new();
+    for &(r, c) in conv_shapes {
+        sets.push((format!("r{r},c{c}"), workloads::conv_conv(r, c)));
+    }
+    for &(r, c) in pdp_shapes {
+        sets.push((format!("r{r},c{c}"), workloads::pwise_dwise_pwise(r, c)));
+    }
+    for &(t, e) in fc_shapes {
+        sets.push((format!("t{t},e{e}"), workloads::fc_fc(t, e)));
+    }
+
+    for (shape, fs) in sets {
+        for sched in candidate_schedules(&fs) {
+            let res = min_capacity_algmin(&fs, &sched);
+            bars.push(Bar {
+                fusion_set: fs.name.split('(').next().unwrap_or(&fs.name).to_string(),
+                shape: shape.clone(),
+                schedule: sched.join(","),
+                capacity: res.as_ref().map(|(c, _, _)| *c),
+                breakdown: res.map(|(_, b, _)| b).unwrap_or_default(),
+            });
+        }
+    }
+    bars
+}
+
+/// Render the figure as a table (the bench/CLI output).
+pub fn render(bars: &[Bar]) -> String {
+    let mut t = Table::new(&["fusion set", "shape", "schedule", "capacity @ algmin", "largest tensors"]);
+    for b in bars {
+        let mut top = b.breakdown.clone();
+        top.sort_by_key(|(_, v)| -v);
+        let top_str = top
+            .iter()
+            .take(2)
+            .map(|(n, v)| format!("{n}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        t.row(&[
+            b.fusion_set.clone(),
+            b.shape.clone(),
+            b.schedule.clone(),
+            b.capacity.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
+            top_str,
+        ]);
+    }
+    // Spread per (fusion set, shape): the paper's "up to 10×" observation.
+    let mut out = t.render();
+    let mut groups: Vec<(String, String)> = bars
+        .iter()
+        .map(|b| (b.fusion_set.clone(), b.shape.clone()))
+        .collect();
+    groups.dedup();
+    out.push('\n');
+    for (fsn, shape) in groups {
+        let caps: Vec<i64> = bars
+            .iter()
+            .filter(|b| b.fusion_set == fsn && b.shape == shape)
+            .filter_map(|b| b.capacity)
+            .collect();
+        if let (Some(&min), Some(&max)) = (caps.iter().min(), caps.iter().max()) {
+            out.push_str(&format!(
+                "{fsn} {shape}: schedule choice spread = {:.1}x (min {min}, max {max})\n",
+                max as f64 / min as f64
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,145 @@
+//! Fig 15: recomputation vs. required buffer capacity Pareto fronts for
+//! different partitioned-ranks/schedule choices on pwise+dwise+pwise.
+//!
+//! Paper takeaway 2: retention-recomputation, partitioned ranks, and
+//! schedule must be explored *together* — with recomputation allowed, the
+//! capacity-optimal schedule changes, and the Pareto slope differs per
+//! schedule (recomputing small fmap tiles buys little when filters dominate
+//! the buffer).
+
+use super::{eval, study_tiles};
+use crate::einsum::{workloads, FusionSet, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::mapspace::{pareto_front, ParetoPoint};
+use crate::util::table::Table;
+
+/// One Pareto point: normalized recompute vs capacity, with breakdown.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub recompute_frac: f64,
+    pub capacity: i64,
+    pub breakdown: Vec<(String, i64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub shape: String,
+    pub schedule: String,
+    pub points: Vec<Point>,
+}
+
+/// Pareto front of (recompute, capacity) for one schedule, alg-min
+/// transfers enforced (paper Table IX row C).
+pub fn pareto_for_schedule(fs: &FusionSet, schedule: &[String]) -> Vec<Point> {
+    let last = fs.last();
+    let dims: Vec<usize> = schedule.iter().map(|r| last.rank_index(r).unwrap()).collect();
+    let algmin = fs.algmin_offchip_elems();
+    let mut pts: Vec<ParetoPoint<Point>> = Vec::new();
+
+    let tiles_per_level: Vec<Vec<i64>> =
+        dims.iter().map(|&d| study_tiles(last.rank_sizes[d])).collect();
+    let tensors: Vec<TensorId> = fs
+        .tensors
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.kind != TensorKind::OutputFmap)
+        .map(|(i, _)| TensorId(i))
+        .collect();
+
+    let mut stack = vec![0usize; dims.len()];
+    let mut done = dims.is_empty();
+    while !done {
+        let partitions: Vec<Partition> = dims
+            .iter()
+            .zip(&stack)
+            .enumerate()
+            .map(|(lvl, (&dim, &ti))| Partition { dim, tile: tiles_per_level[lvl][ti] })
+            .collect();
+        let k = partitions.len();
+        let combos = (k + 1).pow(tensors.len() as u32);
+        for combo in 0..combos {
+            let mut mapping =
+                InterLayerMapping::tiled(partitions.clone(), Parallelism::Sequential);
+            let mut c = combo;
+            for &t in &tensors {
+                mapping = mapping.with_retention(t, c % (k + 1));
+                c /= k + 1;
+            }
+            let m = eval(fs, &mapping);
+            if m.offchip_total() != algmin {
+                continue; // the study fixes transfers at the alg. minimum
+            }
+            let cap: i64 = m.per_tensor_occupancy.iter().sum();
+            let p = Point {
+                recompute_frac: m.recompute_fraction(),
+                capacity: cap,
+                breakdown: fs
+                    .tensors
+                    .iter()
+                    .zip(&m.per_tensor_occupancy)
+                    .map(|(t, &o)| (t.name.clone(), o))
+                    .collect(),
+            };
+            pts.push(ParetoPoint { x: p.recompute_frac, y: cap as f64, payload: p });
+        }
+        let mut lvl = dims.len();
+        loop {
+            if lvl == 0 {
+                done = true;
+                break;
+            }
+            lvl -= 1;
+            stack[lvl] += 1;
+            if stack[lvl] < tiles_per_level[lvl].len() {
+                break;
+            }
+            stack[lvl] = 0;
+        }
+    }
+    pareto_front(pts).into_iter().map(|p| p.payload).collect()
+}
+
+/// Run the figure: pwise+dwise+pwise shape sweep × schedule candidates.
+pub fn run(fast: bool) -> Vec<Curve> {
+    let shapes: &[(i64, i64)] = if fast { &[(28, 16)] } else { &workloads::PDP_SHAPES };
+    let mut out = Vec::new();
+    for &(r, c) in shapes {
+        let fs = workloads::pwise_dwise_pwise(r, c);
+        for sched in [
+            vec!["P3".to_string()],
+            vec!["P3".to_string(), "Q3".to_string()],
+            vec!["P3".to_string(), "C3".to_string(), "Q3".to_string()],
+            vec!["C3".to_string(), "P3".to_string(), "Q3".to_string()],
+        ] {
+            let points = pareto_for_schedule(&fs, &sched);
+            out.push(Curve {
+                shape: format!("r{r},c{c}"),
+                schedule: sched.join(","),
+                points,
+            });
+        }
+    }
+    out
+}
+
+pub fn render(curves: &[Curve]) -> String {
+    let mut t = Table::new(&["shape", "schedule", "recompute", "capacity", "dominant tensor"]);
+    for c in curves {
+        for p in &c.points {
+            let dom = p
+                .breakdown
+                .iter()
+                .max_by_key(|(_, v)| *v)
+                .map(|(n, v)| format!("{n}={v}"))
+                .unwrap_or_default();
+            t.row(&[
+                c.shape.clone(),
+                c.schedule.clone(),
+                format!("{:.3}", p.recompute_frac),
+                p.capacity.to_string(),
+                dom,
+            ]);
+        }
+    }
+    t.render()
+}

@@ -1,0 +1,155 @@
+//! Fig 16: per-tensor vs. uniform retention on conv+conv — off-chip
+//! transfers against buffer capacity, plus the capacity breakdown at the
+//! minimum-transfer point.
+//!
+//! Paper takeaway 3: per-tensor retention adapts each tensor's retained
+//! tile to its own reuse pattern; uniform retention over-retains filters.
+
+use super::eval;
+use crate::einsum::{workloads, FusionSet, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::mapspace::{pareto_front, ParetoPoint};
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub capacity: i64,
+    pub offchip: i64,
+    pub breakdown: Vec<(String, i64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Result14 {
+    pub per_tensor: Vec<Point>,
+    pub uniform: Vec<Point>,
+}
+
+fn explore(fs: &FusionSet, uniform: bool) -> Vec<Point> {
+    let last = fs.last();
+    let p = last.rank_index("P2").unwrap();
+    let q = last.rank_index("Q2").unwrap();
+    let c = last.rank_index("C2").unwrap();
+    let algmin_ops = fs.total_ops();
+    let mut pts: Vec<ParetoPoint<Point>> = Vec::new();
+
+    // Schedule candidates with varied tile sizes.
+    let mut parted: Vec<Vec<Partition>> = Vec::new();
+    for &(d1, d2) in &[(p, q), (c, p), (p, c)] {
+        for &t1 in &super::study_tiles(last.rank_sizes[d1]) {
+            for &t2 in &super::study_tiles(last.rank_sizes[d2]) {
+                parted.push(vec![
+                    Partition { dim: d1, tile: t1 },
+                    Partition { dim: d2, tile: t2 },
+                ]);
+            }
+        }
+    }
+    let tensors: Vec<TensorId> = fs
+        .tensors
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.kind != TensorKind::OutputFmap)
+        .map(|(i, _)| TensorId(i))
+        .collect();
+
+    for partitions in parted {
+        let k = partitions.len();
+        if uniform {
+            for lvl in 0..=k {
+                let mapping = InterLayerMapping::tiled(partitions.clone(), Parallelism::Sequential)
+                    .with_uniform_retention(lvl);
+                let m = eval(fs, &mapping);
+                if m.total_ops != algmin_ops {
+                    continue; // no recomputation in this study
+                }
+                let cap: i64 = m.per_tensor_occupancy.iter().sum();
+                pts.push(ParetoPoint {
+                    x: cap as f64,
+                    y: m.offchip_total() as f64,
+                    payload: Point {
+                        capacity: cap,
+                        offchip: m.offchip_total(),
+                        breakdown: breakdown(fs, &m.per_tensor_occupancy),
+                    },
+                });
+            }
+        } else {
+            let combos = (k + 1).pow(tensors.len() as u32);
+            for combo in 0..combos {
+                let mut mapping =
+                    InterLayerMapping::tiled(partitions.clone(), Parallelism::Sequential);
+                let mut cc = combo;
+                for &t in &tensors {
+                    mapping = mapping.with_retention(t, cc % (k + 1));
+                    cc /= k + 1;
+                }
+                let m = eval(fs, &mapping);
+                if m.total_ops != algmin_ops {
+                    continue;
+                }
+                let cap: i64 = m.per_tensor_occupancy.iter().sum();
+                pts.push(ParetoPoint {
+                    x: cap as f64,
+                    y: m.offchip_total() as f64,
+                    payload: Point {
+                        capacity: cap,
+                        offchip: m.offchip_total(),
+                        breakdown: breakdown(fs, &m.per_tensor_occupancy),
+                    },
+                });
+            }
+        }
+    }
+    pareto_front(pts).into_iter().map(|p| p.payload).collect()
+}
+
+fn breakdown(fs: &FusionSet, occ: &[i64]) -> Vec<(String, i64)> {
+    fs.tensors
+        .iter()
+        .zip(occ)
+        .map(|(t, &o)| (t.name.clone(), o))
+        .collect()
+}
+
+pub fn run(fast: bool) -> Result14 {
+    let (r, c) = if fast { (28, 32) } else { (56, 64) };
+    let fs = workloads::conv_conv(r, c);
+    Result14 {
+        per_tensor: explore(&fs, false),
+        uniform: explore(&fs, true),
+    }
+}
+
+pub fn render(res: &Result14) -> String {
+    let mut t = Table::new(&["mapspace", "capacity", "offchip", "Filter1+Filter2 share"]);
+    for (tag, pts) in [("per-tensor", &res.per_tensor), ("uniform", &res.uniform)] {
+        for p in pts {
+            let filters: i64 = p
+                .breakdown
+                .iter()
+                .filter(|(n, _)| n.starts_with("Filter"))
+                .map(|(_, v)| *v)
+                .sum();
+            t.row(&[
+                tag.to_string(),
+                p.capacity.to_string(),
+                p.offchip.to_string(),
+                format!("{:.0}%", 100.0 * filters as f64 / p.capacity.max(1) as f64),
+            ]);
+        }
+    }
+    let mut out = t.render();
+    // The headline: capacity at the min-transfer point.
+    let best = |pts: &[Point]| -> Option<(i64, i64)> {
+        pts.iter()
+            .min_by_key(|p| (p.offchip, p.capacity))
+            .map(|p| (p.capacity, p.offchip))
+    };
+    if let (Some((cp, _)), Some((cu, _))) = (best(&res.per_tensor), best(&res.uniform)) {
+        out.push_str(&format!(
+            "\nper-tensor retention reduces capacity at min transfers: {cu} -> {cp} ({:.1}x)\n",
+            cu as f64 / cp.max(1) as f64
+        ));
+    }
+    out
+}

@@ -1,0 +1,80 @@
+//! Fig 17: per-intermediate-fmap retain-recompute choices on
+//! conv+conv+conv with the P3,Q3 schedule.
+//!
+//! Paper takeaway 4: mixed per-fmap choices beat uniform ones; recomputing
+//! *later* fmaps compounds into earlier layers, so "recompute Fmap2 /
+//! retain Fmap3" dominates "retain Fmap2 / recompute Fmap3".
+
+use super::{eval, study_tiles};
+use crate::einsum::{workloads, TensorId};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::mapspace::{pareto_front, ParetoPoint};
+use crate::util::table::Table;
+
+/// A (choice-pair) curve: retain/recompute per fmap.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    /// e.g. "retain/recompute" for (Fmap2, Fmap3).
+    pub choices: String,
+    /// (normalized recompute, capacity) Pareto points.
+    pub points: Vec<(f64, i64)>,
+}
+
+pub fn run(fast: bool) -> Vec<Curve> {
+    let (r, c) = if fast { (24, 8) } else { (56, 32) };
+    let fs = workloads::conv_conv_conv(r, c);
+    let last = fs.last();
+    let p3 = last.rank_index("P3").unwrap();
+    let q3 = last.rank_index("Q3").unwrap();
+    let fmap2 = TensorId(2);
+    let fmap3 = TensorId(4);
+    debug_assert_eq!(fs.tensor(fmap2).name, "Fmap2");
+    debug_assert_eq!(fs.tensor(fmap3).name, "Fmap3");
+
+    let mut curves = Vec::new();
+    // Retention level 1 = retain the P3 band (no recompute across P3);
+    // level 2 = keep only the P3,Q3 box (recompute the halo).
+    for (l2, l3, tag) in [
+        (1usize, 1usize, "retain/retain"),
+        (2, 1, "recompute/retain"),
+        (1, 2, "retain/recompute"),
+        (2, 2, "recompute/recompute"),
+    ] {
+        let mut pts: Vec<ParetoPoint<(f64, i64)>> = Vec::new();
+        for &tp in &study_tiles(last.rank_sizes[p3]) {
+            for &tq in &study_tiles(last.rank_sizes[q3]) {
+                let mapping = InterLayerMapping::tiled(
+                    vec![
+                        Partition { dim: p3, tile: tp },
+                        Partition { dim: q3, tile: tq },
+                    ],
+                    Parallelism::Sequential,
+                )
+                .with_retention(fmap2, l2)
+                .with_retention(fmap3, l3);
+                let m = eval(&fs, &mapping);
+                let cap: i64 = m.per_tensor_occupancy.iter().sum();
+                pts.push(ParetoPoint {
+                    x: m.recompute_fraction(),
+                    y: cap as f64,
+                    payload: (m.recompute_fraction(), cap),
+                });
+            }
+        }
+        curves.push(Curve {
+            choices: tag.into(),
+            points: pareto_front(pts).into_iter().map(|p| p.payload).collect(),
+        });
+    }
+    curves
+}
+
+pub fn render(curves: &[Curve]) -> String {
+    let mut t = Table::new(&["Fmap2/Fmap3 choice", "recompute frac", "capacity"]);
+    for c in curves {
+        for &(rf, cap) in &c.points {
+            t.row(&[c.choices.clone(), format!("{rf:.3}"), cap.to_string()]);
+        }
+    }
+    t.render()
+}

@@ -1,0 +1,181 @@
+//! Fig 18: tiled fusion vs. the best of layer-by-layer / untiled fusion —
+//! off-chip transfers against available on-chip capacity (no recompute).
+//!
+//! Paper takeaway 5: tiled fusion reaches the algorithmic transfer minimum
+//! at far smaller capacity than untiled fusion, but *below* that capacity
+//! the layer-by-layer baseline often wins (intra-layer reuse is more
+//! abundant than inter-layer reuse).
+
+use super::eval;
+use crate::einsum::{workloads, FusionSet, FusionSetBuilder, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::mapspace::{pareto_front, ParetoPoint};
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Fronts {
+    /// (capacity, offchip) Pareto points for tiled fusion.
+    pub fused: Vec<(i64, i64)>,
+    /// Best-of(layer-by-layer, untiled fusion) baseline.
+    pub baseline: Vec<(i64, i64)>,
+}
+
+/// Tiled-fusion front: P2,Q2 schedules, per-tensor retention, no recompute.
+fn fused_front(fs: &FusionSet) -> Vec<(i64, i64)> {
+    let last = fs.last();
+    let p = last.rank_index("P2").unwrap();
+    let q = last.rank_index("Q2").unwrap();
+    let tensors: Vec<TensorId> = fs
+        .tensors
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.kind != TensorKind::OutputFmap)
+        .map(|(i, _)| TensorId(i))
+        .collect();
+    let mut pts = Vec::new();
+    for &tp in &super::study_tiles(last.rank_sizes[p]) {
+        for &tq in &super::study_tiles(last.rank_sizes[q]) {
+            let partitions = vec![
+                Partition { dim: p, tile: tp },
+                Partition { dim: q, tile: tq },
+            ];
+            let k = partitions.len();
+            let combos = (k + 1).pow(tensors.len() as u32);
+            for combo in 0..combos {
+                let mut mapping =
+                    InterLayerMapping::tiled(partitions.clone(), Parallelism::Sequential);
+                let mut c = combo;
+                for &t in &tensors {
+                    mapping = mapping.with_retention(t, c % (k + 1));
+                    c /= k + 1;
+                }
+                let m = eval(fs, &mapping);
+                if m.recompute_ops != 0 {
+                    continue;
+                }
+                let cap: i64 = m.per_tensor_occupancy.iter().sum();
+                pts.push(ParetoPoint {
+                    x: cap as f64,
+                    y: m.offchip_total() as f64,
+                    payload: (cap, m.offchip_total()),
+                });
+            }
+        }
+    }
+    // Untiled fusion also belongs to the fused mapspace's extreme.
+    let m = eval(fs, &InterLayerMapping::untiled(Parallelism::Sequential));
+    let cap: i64 = m.per_tensor_occupancy.iter().sum();
+    pts.push(ParetoPoint { x: cap as f64, y: m.offchip_total() as f64, payload: (cap, m.offchip_total()) });
+    pareto_front(pts).into_iter().map(|p| p.payload).collect()
+}
+
+/// Layer-by-layer baseline: each conv as its own single-layer "fusion set";
+/// the intermediate crosses the chip boundary twice. Combined capacity is
+/// the max across layers (buffers are reused between layers); combined
+/// transfers are the sum.
+fn layer_by_layer_front(rows: i64, channels: i64) -> Vec<(i64, i64)> {
+    // Layer 1: input (rows+2)² -> rows²; layer 2: rows² -> (rows-2)².
+    let l1 = FusionSetBuilder::new("l1", &[channels, rows + 2, rows + 2])
+        .conv2d(channels, 3, 3, 1)
+        .build();
+    let l2 = FusionSetBuilder::new("l2", &[channels, rows, rows])
+        .conv2d(channels, 3, 3, 1)
+        .build();
+    let f1 = single_layer_front(&l1);
+    let f2 = single_layer_front(&l2);
+    let mut pts = Vec::new();
+    for &(c1, t1) in &f1 {
+        for &(c2, t2) in &f2 {
+            pts.push(ParetoPoint {
+                x: c1.max(c2) as f64,
+                y: (t1 + t2) as f64,
+                payload: (c1.max(c2), t1 + t2),
+            });
+        }
+    }
+    pareto_front(pts).into_iter().map(|p| p.payload).collect()
+}
+
+fn single_layer_front(fs: &FusionSet) -> Vec<(i64, i64)> {
+    let last = fs.last();
+    let tensors: Vec<TensorId> = fs
+        .tensors
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.kind != TensorKind::OutputFmap)
+        .map(|(i, _)| TensorId(i))
+        .collect();
+    let mut pts = Vec::new();
+    // Intra-layer tilings: single-rank P1/C1/M1 partitioning + untiled.
+    let mut schedules: Vec<Vec<Partition>> = vec![vec![]];
+    for name in ["P1", "C1", "M1"] {
+        if let Some(d) = last.rank_index(name) {
+            for &t in &super::study_tiles(last.rank_sizes[d]) {
+                schedules.push(vec![Partition { dim: d, tile: t }]);
+            }
+        }
+    }
+    for partitions in schedules {
+        let k = partitions.len();
+        let combos = (k + 1).pow(tensors.len() as u32);
+        for combo in 0..combos {
+            let mut mapping =
+                InterLayerMapping::tiled(partitions.clone(), Parallelism::Sequential);
+            let mut c = combo;
+            for &t in &tensors {
+                mapping = mapping.with_retention(t, c % (k + 1));
+                c /= k + 1;
+            }
+            let m = eval(fs, &mapping);
+            let cap: i64 = m.per_tensor_occupancy.iter().sum();
+            pts.push(ParetoPoint {
+                x: cap as f64,
+                y: m.offchip_total() as f64,
+                payload: (cap, m.offchip_total()),
+            });
+        }
+    }
+    pareto_front(pts).into_iter().map(|p| p.payload).collect()
+}
+
+pub fn run(fast: bool) -> Fronts {
+    let (rows, channels) = if fast { (28, 32) } else { (56, 64) };
+    let fs = workloads::conv_conv(rows, channels);
+    Fronts {
+        fused: fused_front(&fs),
+        baseline: layer_by_layer_front(rows, channels),
+    }
+}
+
+pub fn render(f: &Fronts) -> String {
+    let mut t = Table::new(&["dataflow", "capacity", "offchip transfers"]);
+    for &(c, tr) in &f.fused {
+        t.row(&["tiled fused".into(), c.to_string(), tr.to_string()]);
+    }
+    for &(c, tr) in &f.baseline {
+        t.row(&["layer-by-layer".into(), c.to_string(), tr.to_string()]);
+    }
+    let mut out = t.render();
+    // The crossover summary.
+    let fused_min_t = f.fused.iter().map(|&(_, t)| t).min().unwrap_or(0);
+    let fused_cap_at_min = f
+        .fused
+        .iter()
+        .filter(|&&(_, t)| t == fused_min_t)
+        .map(|&(c, _)| c)
+        .min()
+        .unwrap_or(0);
+    let base_min_t = f.baseline.iter().map(|&(_, t)| t).min().unwrap_or(0);
+    let base_cap_at_min = f
+        .baseline
+        .iter()
+        .filter(|&&(_, t)| t == base_min_t)
+        .map(|&(c, _)| c)
+        .min()
+        .unwrap_or(0);
+    out.push_str(&format!(
+        "\nfused reaches its min transfers ({fused_min_t}) at capacity {fused_cap_at_min}; \
+         baseline min transfers ({base_min_t}) at capacity {base_cap_at_min}\n"
+    ));
+    out
+}

@@ -1,0 +1,52 @@
+//! Case studies (paper §VI, Figs 14–18): the experiments that show why the
+//! extended design space matters. Each driver regenerates one figure's data
+//! as printable rows; the matching `rust/benches/bench_fig1X.rs` binaries
+//! print them under `cargo bench`, and `looptree casestudy figNN` runs them
+//! from the CLI.
+//!
+//! Experimental knobs follow the paper's setup table (Table IX): the
+//! independent variable is swept, everything else is searched; searches run
+//! on the unbounded-GLB generic architecture because the studies measure
+//! *required* capacity.
+
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod fig17;
+pub mod fig18;
+
+use crate::arch::Arch;
+use crate::einsum::FusionSet;
+use crate::mapping::InterLayerMapping;
+use crate::model::{evaluate, EvalOptions, Metrics};
+
+/// The case-study architecture: generic Eyeriss-class, unbounded GLB.
+pub fn study_arch() -> Arch {
+    Arch::generic(1 << 20).unbounded_glb()
+}
+
+/// Evaluate, panicking on structural errors (case-study mappings are
+/// generated, so errors are bugs).
+pub fn eval(fs: &FusionSet, mapping: &InterLayerMapping) -> Metrics {
+    evaluate(fs, &study_arch(), mapping, &EvalOptions::default())
+        .unwrap_or_else(|e| panic!("{}: {e}", fs.name))
+}
+
+/// Tile-size choices for a rank in the studies: extent/8 and extent/4
+/// (small enough to show tiling benefits, large enough to keep the
+/// analytical walks fast — the paper's qualitative conclusions are
+/// tile-size independent).
+pub fn study_tiles(extent: i64) -> Vec<i64> {
+    let mut v: Vec<i64> = [extent / 8, extent / 4]
+        .into_iter()
+        .filter(|&t| t >= 1)
+        .collect();
+    v.dedup();
+    if v.is_empty() {
+        v.push(1);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests;

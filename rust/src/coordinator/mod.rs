@@ -1,0 +1,129 @@
+//! Parallel DSE job coordination.
+//!
+//! The mapspace searches evaluate thousands of independent mappings; this
+//! module fans them out over a worker pool (std threads + an atomic work
+//! queue — the offline image has no tokio, and model evaluation is pure CPU
+//! work with no I/O to overlap). The coordinator is also used by the e2e
+//! example to drive batched PJRT tile execution.
+
+use crate::arch::Arch;
+use crate::einsum::FusionSet;
+use crate::mapping::InterLayerMapping;
+use crate::model::{evaluate, EvalOptions, Metrics};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A worker pool for embarrassingly parallel DSE jobs.
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    workers: usize,
+}
+
+impl Coordinator {
+    /// `workers = 0` ⇒ use available parallelism.
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            workers
+        };
+        Coordinator { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Evaluate every mapping; results preserve input order. Individual
+    /// failures are reported per slot, not propagated.
+    pub fn evaluate_all(
+        &self,
+        fs: &FusionSet,
+        arch: &Arch,
+        mappings: &[InterLayerMapping],
+        opts: &EvalOptions,
+    ) -> Vec<Result<Metrics, String>> {
+        self.run(mappings.len(), |i| evaluate(fs, arch, &mappings[i], opts))
+    }
+
+    /// Generic indexed fan-out: run `job(i)` for `i in 0..n` on the pool.
+    pub fn run<T, F>(&self, n: usize, job: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut results: Vec<Option<T>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+        let results = Mutex::new(results);
+        let next = AtomicUsize::new(0);
+        let nworkers = self.workers.min(n).max(1);
+
+        std::thread::scope(|scope| {
+            for _ in 0..nworkers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = job(i);
+                    results.lock().unwrap()[i] = Some(out);
+                });
+            }
+        });
+        results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("worker skipped a slot"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::workloads;
+    use crate::mapspace::{MapSpace, MapSpaceConfig};
+
+    #[test]
+    fn parallel_matches_serial() {
+        let fs = workloads::conv_conv(14, 8);
+        let arch = Arch::generic(1 << 20);
+        let cfg = MapSpaceConfig {
+            schedules: vec![vec!["P2".into()]],
+            tile_sizes: vec![2, 4],
+            uniform_retention: true,
+            ..Default::default()
+        };
+        let ms = MapSpace::enumerate(&fs, &cfg);
+        let opts = EvalOptions::default();
+        let par = Coordinator::new(4).evaluate_all(&fs, &arch, ms.mappings(), &opts);
+        let ser = Coordinator::new(1).evaluate_all(&fs, &arch, ms.mappings(), &opts);
+        assert_eq!(par.len(), ser.len());
+        for (p, s) in par.iter().zip(&ser) {
+            let (p, s) = (p.as_ref().unwrap(), s.as_ref().unwrap());
+            assert_eq!(p.offchip_reads, s.offchip_reads);
+            assert_eq!(p.occupancy_peak, s.occupancy_peak);
+            assert_eq!(p.latency_cycles, s.latency_cycles);
+        }
+    }
+
+    #[test]
+    fn run_preserves_order() {
+        let c = Coordinator::new(3);
+        let out = c.run(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_job_list() {
+        let c = Coordinator::new(2);
+        let out: Vec<usize> = c.run(0, |i| i);
+        assert!(out.is_empty());
+    }
+}

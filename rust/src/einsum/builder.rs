@@ -1,0 +1,419 @@
+//! Ergonomic construction of fusion sets from standard DNN layer types.
+//!
+//! The builder tracks the "current fmap" (the output of the last layer added)
+//! and wires each new layer's input access to it, creating weight tensors as
+//! needed. Rank naming follows the paper's Table II convention with a layer
+//! suffix: `M2`, `P2`, `C2`, …
+
+use super::spec::{EinsumSpec, FusionSet, OpKind, TensorAccess, TensorId, TensorInfo, TensorKind};
+use crate::poly::{AffineExpr, AffineMap};
+
+/// Builder for a [`FusionSet`] chain.
+pub struct FusionSetBuilder {
+    name: String,
+    tensors: Vec<TensorInfo>,
+    einsums: Vec<EinsumSpec>,
+    /// The tensor the next layer will consume.
+    cur_fmap: TensorId,
+    layer_idx: usize,
+}
+
+impl FusionSetBuilder {
+    /// Start a fusion set whose first layer consumes a fmap of shape
+    /// `input_shape` (e.g. `[C, H, W]` for convs, `[M, D]` for FC stacks).
+    pub fn new(name: &str, input_shape: &[i64]) -> Self {
+        let tensors = vec![TensorInfo {
+            name: "Fmap1".into(),
+            shape: input_shape.to_vec(),
+            kind: TensorKind::InputFmap,
+        }];
+        FusionSetBuilder {
+            name: name.into(),
+            tensors,
+            einsums: Vec::new(),
+            cur_fmap: TensorId(0),
+            layer_idx: 0,
+        }
+    }
+
+    fn add_tensor(&mut self, name: String, shape: Vec<i64>, kind: TensorKind) -> TensorId {
+        self.tensors.push(TensorInfo { name, shape, kind });
+        TensorId(self.tensors.len() - 1)
+    }
+
+    /// Demote the previous output fmap (if any) to an intermediate: called
+    /// when a new layer consumes it.
+    fn demote_cur_to_intermediate(&mut self) {
+        if !self.einsums.is_empty() {
+            self.tensors[self.cur_fmap.0].kind = TensorKind::Intermediate;
+        }
+    }
+
+    fn next_layer(&mut self) -> usize {
+        self.layer_idx += 1;
+        self.layer_idx
+    }
+
+    fn cur_shape(&self) -> &[i64] {
+        &self.tensors[self.cur_fmap.0].shape
+    }
+
+    /// 2D convolution: `Out[m,p,q] = Σ_{c,r,s} In[c, p·st+r, q·st+s] · W[m,c,r,s]`.
+    /// Input must be `[C, H, W]`; output is `[M, P, Q]` with
+    /// `P = (H - r) / st + 1`.
+    pub fn conv2d(&mut self, m: i64, r: i64, s: i64, stride: i64) -> &mut Self {
+        let li = self.next_layer();
+        let (c, h, w) = match *self.cur_shape() {
+            [c, h, w] => (c, h, w),
+            _ => panic!("conv2d requires a [C,H,W] input fmap"),
+        };
+        let p = (h - r) / stride + 1;
+        let q = (w - s) / stride + 1;
+        assert!(p > 0 && q > 0, "conv2d output would be empty");
+        self.demote_cur_to_intermediate();
+        let in_fmap = self.cur_fmap;
+        let wt = self.add_tensor(format!("Filter{li}"), vec![m, c, r, s], TensorKind::Weight);
+        let out = self.add_tensor(format!("Fmap{}", li + 1), vec![m, p, q], TensorKind::OutputFmap);
+        // Local ranks: [M, P, Q, C, R, S] = dims 0..6.
+        let (dm, dp, dq, dc, dr, ds) = (0, 1, 2, 3, 4, 5);
+        let conv = |i: usize, k: usize| {
+            if stride == 1 {
+                AffineExpr::sum((i, 1), (k, 1))
+            } else {
+                AffineExpr::sum((i, stride), (k, 1))
+            }
+        };
+        self.einsums.push(EinsumSpec {
+            name: format!("Conv{li}"),
+            rank_names: suffixed(&["M", "P", "Q", "C", "R", "S"], li),
+            rank_sizes: vec![m, p, q, c, r, s],
+            output: TensorAccess {
+                tensor: out,
+                map: AffineMap::identity(&[dm, dp, dq]),
+            },
+            inputs: vec![
+                TensorAccess {
+                    tensor: in_fmap,
+                    map: AffineMap::new(vec![
+                        AffineExpr::var(dc),
+                        conv(dp, dr),
+                        conv(dq, ds),
+                    ]),
+                },
+                TensorAccess {
+                    tensor: wt,
+                    map: AffineMap::identity(&[dm, dc, dr, ds]),
+                },
+            ],
+            op_kind: OpKind::Mac,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
+    /// Pointwise (1×1) convolution: `Out[m,p,q] = Σ_c In[c,p,q] · W[m,c]`.
+    pub fn pointwise(&mut self, m: i64) -> &mut Self {
+        let li = self.next_layer();
+        let (c, h, w) = match *self.cur_shape() {
+            [c, h, w] => (c, h, w),
+            _ => panic!("pointwise requires a [C,H,W] input fmap"),
+        };
+        self.demote_cur_to_intermediate();
+        let in_fmap = self.cur_fmap;
+        let wt = self.add_tensor(format!("Filter{li}"), vec![m, c], TensorKind::Weight);
+        let out = self.add_tensor(format!("Fmap{}", li + 1), vec![m, h, w], TensorKind::OutputFmap);
+        let (dm, dp, dq, dc) = (0, 1, 2, 3);
+        self.einsums.push(EinsumSpec {
+            name: format!("Pwise{li}"),
+            rank_names: suffixed(&["M", "P", "Q", "C"], li),
+            rank_sizes: vec![m, h, w, c],
+            output: TensorAccess {
+                tensor: out,
+                map: AffineMap::identity(&[dm, dp, dq]),
+            },
+            inputs: vec![
+                TensorAccess {
+                    tensor: in_fmap,
+                    map: AffineMap::identity(&[dc, dp, dq]),
+                },
+                TensorAccess {
+                    tensor: wt,
+                    map: AffineMap::identity(&[dm, dc]),
+                },
+            ],
+            op_kind: OpKind::Mac,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
+    /// Depthwise convolution: `Out[m,p,q] = Σ_{r,s} In[m, p·st+r, q·st+s] · W[m,r,s]`.
+    /// The channel rank `M` is shared between input and output (no channel
+    /// reduction) — the distinctive reuse pattern of MobileNet blocks.
+    pub fn depthwise(&mut self, r: i64, s: i64, stride: i64) -> &mut Self {
+        let li = self.next_layer();
+        let (c, h, w) = match *self.cur_shape() {
+            [c, h, w] => (c, h, w),
+            _ => panic!("depthwise requires a [C,H,W] input fmap"),
+        };
+        let p = (h - r) / stride + 1;
+        let q = (w - s) / stride + 1;
+        self.demote_cur_to_intermediate();
+        let in_fmap = self.cur_fmap;
+        let wt = self.add_tensor(format!("Filter{li}"), vec![c, r, s], TensorKind::Weight);
+        let out = self.add_tensor(format!("Fmap{}", li + 1), vec![c, p, q], TensorKind::OutputFmap);
+        let (dm, dp, dq, dr, ds) = (0, 1, 2, 3, 4);
+        let conv = |i: usize, k: usize| {
+            if stride == 1 {
+                AffineExpr::sum((i, 1), (k, 1))
+            } else {
+                AffineExpr::sum((i, stride), (k, 1))
+            }
+        };
+        self.einsums.push(EinsumSpec {
+            name: format!("Dwise{li}"),
+            rank_names: suffixed(&["M", "P", "Q", "R", "S"], li),
+            rank_sizes: vec![c, p, q, r, s],
+            output: TensorAccess {
+                tensor: out,
+                map: AffineMap::identity(&[dm, dp, dq]),
+            },
+            inputs: vec![
+                TensorAccess {
+                    tensor: in_fmap,
+                    map: AffineMap::new(vec![
+                        AffineExpr::var(dm),
+                        conv(dp, dr),
+                        conv(dq, ds),
+                    ]),
+                },
+                TensorAccess {
+                    tensor: wt,
+                    map: AffineMap::identity(&[dm, dr, ds]),
+                },
+            ],
+            op_kind: OpKind::Mac,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
+    /// Max pooling: `Out[m,p,q] = max_{r,s} In[m, p·st+r, q·st+s]` — same
+    /// access structure as depthwise but no weights and `Max` ops.
+    pub fn maxpool(&mut self, k: i64, stride: i64) -> &mut Self {
+        let li = self.next_layer();
+        let (c, h, w) = match *self.cur_shape() {
+            [c, h, w] => (c, h, w),
+            _ => panic!("maxpool requires a [C,H,W] input fmap"),
+        };
+        let p = (h - k) / stride + 1;
+        let q = (w - k) / stride + 1;
+        self.demote_cur_to_intermediate();
+        let in_fmap = self.cur_fmap;
+        let out = self.add_tensor(format!("Fmap{}", li + 1), vec![c, p, q], TensorKind::OutputFmap);
+        let (dm, dp, dq, dr, ds) = (0, 1, 2, 3, 4);
+        let conv = |i: usize, kk: usize| {
+            if stride == 1 {
+                AffineExpr::sum((i, 1), (kk, 1))
+            } else {
+                AffineExpr::sum((i, stride), (kk, 1))
+            }
+        };
+        self.einsums.push(EinsumSpec {
+            name: format!("Pool{li}"),
+            rank_names: suffixed(&["M", "P", "Q", "R", "S"], li),
+            rank_sizes: vec![c, p, q, k, k],
+            output: TensorAccess {
+                tensor: out,
+                map: AffineMap::identity(&[dm, dp, dq]),
+            },
+            inputs: vec![TensorAccess {
+                tensor: in_fmap,
+                map: AffineMap::new(vec![AffineExpr::var(dm), conv(dp, dr), conv(dq, ds)]),
+            }],
+            op_kind: OpKind::Max,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
+    /// Fully connected: `Out[m,e] = Σ_d In[m,d] · W[d,e]`. Input `[M, D]`.
+    pub fn fc(&mut self, e: i64) -> &mut Self {
+        let li = self.next_layer();
+        let (m, d) = match *self.cur_shape() {
+            [m, d] => (m, d),
+            _ => panic!("fc requires a [M,D] input fmap"),
+        };
+        self.demote_cur_to_intermediate();
+        let in_fmap = self.cur_fmap;
+        let wt = self.add_tensor(format!("Filter{li}"), vec![d, e], TensorKind::Weight);
+        let out = self.add_tensor(format!("Fmap{}", li + 1), vec![m, e], TensorKind::OutputFmap);
+        let (dm, de, dd) = (0, 1, 2);
+        self.einsums.push(EinsumSpec {
+            name: format!("Fc{li}"),
+            rank_names: suffixed(&["M", "E", "D"], li),
+            rank_sizes: vec![m, e, d],
+            output: TensorAccess {
+                tensor: out,
+                map: AffineMap::identity(&[dm, de]),
+            },
+            inputs: vec![
+                TensorAccess {
+                    tensor: in_fmap,
+                    map: AffineMap::identity(&[dm, dd]),
+                },
+                TensorAccess {
+                    tensor: wt,
+                    map: AffineMap::identity(&[dd, de]),
+                },
+            ],
+            op_kind: OpKind::Mac,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
+    /// Batched conv2d for PipeLayer-style batch partitioning. Input must be
+    /// `[B, C, H, W]`; output is `[B, M, P, Q]`.
+    pub fn conv2d_batched(&mut self, m: i64, r: i64, s: i64, stride: i64) -> &mut Self {
+        let li = self.next_layer();
+        let (b, c, h, w) = match *self.cur_shape() {
+            [b, c, h, w] => (b, c, h, w),
+            _ => panic!("conv2d_batched requires a [B,C,H,W] input fmap"),
+        };
+        let p = (h - r) / stride + 1;
+        let q = (w - s) / stride + 1;
+        self.demote_cur_to_intermediate();
+        let in_fmap = self.cur_fmap;
+        let wt = self.add_tensor(format!("Filter{li}"), vec![m, c, r, s], TensorKind::Weight);
+        let out =
+            self.add_tensor(format!("Fmap{}", li + 1), vec![b, m, p, q], TensorKind::OutputFmap);
+        let (db, dm, dp, dq, dc, dr, ds) = (0, 1, 2, 3, 4, 5, 6);
+        let conv = |i: usize, k: usize| {
+            if stride == 1 {
+                AffineExpr::sum((i, 1), (k, 1))
+            } else {
+                AffineExpr::sum((i, stride), (k, 1))
+            }
+        };
+        self.einsums.push(EinsumSpec {
+            name: format!("Conv{li}"),
+            rank_names: suffixed(&["B", "M", "P", "Q", "C", "R", "S"], li),
+            rank_sizes: vec![b, m, p, q, c, r, s],
+            output: TensorAccess {
+                tensor: out,
+                map: AffineMap::identity(&[db, dm, dp, dq]),
+            },
+            inputs: vec![
+                TensorAccess {
+                    tensor: in_fmap,
+                    map: AffineMap::new(vec![
+                        AffineExpr::var(db),
+                        AffineExpr::var(dc),
+                        conv(dp, dr),
+                        conv(dq, ds),
+                    ]),
+                },
+                TensorAccess {
+                    tensor: wt,
+                    map: AffineMap::identity(&[dm, dc, dr, ds]),
+                },
+            ],
+            op_kind: OpKind::Mac,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
+    /// Attention score matmul: `L[b,h,m,n] = Σ_e Q[b,h,m,e] · K[b,h,n,e]`.
+    /// Input (the query) must be `[B, Hd, M, E]`; the key tensor is created
+    /// as a weight-like streamed tensor of the same shape.
+    pub fn attention_scores(&mut self, n: i64) -> &mut Self {
+        let li = self.next_layer();
+        let (b, hd, m, e) = match *self.cur_shape() {
+            [b, hd, m, e] => (b, hd, m, e),
+            _ => panic!("attention_scores requires a [B,H,M,E] input"),
+        };
+        self.demote_cur_to_intermediate();
+        let q = self.cur_fmap;
+        let k = self.add_tensor(format!("Key{li}"), vec![b, hd, n, e], TensorKind::Weight);
+        let out = self.add_tensor(format!("Fmap{}", li + 1), vec![b, hd, m, n], TensorKind::OutputFmap);
+        let (db, dh, dm, dn, de) = (0, 1, 2, 3, 4);
+        self.einsums.push(EinsumSpec {
+            name: format!("Scores{li}"),
+            rank_names: suffixed(&["B", "H", "M", "N", "E"], li),
+            rank_sizes: vec![b, hd, m, n, e],
+            output: TensorAccess {
+                tensor: out,
+                map: AffineMap::identity(&[db, dh, dm, dn]),
+            },
+            inputs: vec![
+                TensorAccess {
+                    tensor: q,
+                    map: AffineMap::identity(&[db, dh, dm, de]),
+                },
+                TensorAccess {
+                    tensor: k,
+                    map: AffineMap::identity(&[db, dh, dn, de]),
+                },
+            ],
+            op_kind: OpKind::Mac,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
+    /// Attention value matmul: `O[b,h,m,e] = Σ_n S[b,h,m,n] · V[b,h,n,e]`
+    /// where `S` is the (softmaxed, modeled in-place) score tensor.
+    pub fn attention_values(&mut self, e: i64) -> &mut Self {
+        let li = self.next_layer();
+        let (b, hd, m, n) = match *self.cur_shape() {
+            [b, hd, m, n] => (b, hd, m, n),
+            _ => panic!("attention_values requires a [B,H,M,N] input"),
+        };
+        self.demote_cur_to_intermediate();
+        let s = self.cur_fmap;
+        let v = self.add_tensor(format!("Value{li}"), vec![b, hd, n, e], TensorKind::Weight);
+        let out = self.add_tensor(format!("Fmap{}", li + 1), vec![b, hd, m, e], TensorKind::OutputFmap);
+        let (db, dh, dm, de, dn) = (0, 1, 2, 3, 4);
+        self.einsums.push(EinsumSpec {
+            name: format!("Attend{li}"),
+            rank_names: suffixed(&["B", "H", "M", "E", "N"], li),
+            rank_sizes: vec![b, hd, m, e, n],
+            output: TensorAccess {
+                tensor: out,
+                map: AffineMap::identity(&[db, dh, dm, de]),
+            },
+            inputs: vec![
+                TensorAccess {
+                    tensor: s,
+                    map: AffineMap::identity(&[db, dh, dm, dn]),
+                },
+                TensorAccess {
+                    tensor: v,
+                    map: AffineMap::identity(&[db, dh, dn, de]),
+                },
+            ],
+            op_kind: OpKind::Mac,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
+    /// Finish and validate.
+    pub fn build(&mut self) -> FusionSet {
+        let fs = FusionSet {
+            name: std::mem::take(&mut self.name),
+            tensors: std::mem::take(&mut self.tensors),
+            einsums: std::mem::take(&mut self.einsums),
+        };
+        if let Err(e) = fs.validate() {
+            panic!("invalid fusion set `{}`: {e}", fs.name);
+        }
+        fs
+    }
+}
+
+fn suffixed(names: &[&str], li: usize) -> Vec<String> {
+    names.iter().map(|n| format!("{n}{li}")).collect()
+}

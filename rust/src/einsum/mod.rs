@@ -1,0 +1,17 @@
+//! Extended-Einsum workload IR (paper §II-B).
+//!
+//! DNN layers are *tensor algebra operations*: each layer is an Einsum with
+//! named ranks, a dense box iteration domain, and per-tensor affine accesses
+//! (`p`, `p+r`, `2p+r`, …). A [`FusionSet`] is a chain of Einsums where each
+//! layer's output fmap is the next layer's input fmap (the *intermediate*
+//! fmaps whose retention-recomputation the mapping controls).
+
+mod spec;
+mod builder;
+pub mod workloads;
+
+pub use builder::FusionSetBuilder;
+pub use spec::{EinsumSpec, FusionSet, OpKind, TensorAccess, TensorId, TensorInfo, TensorKind};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,283 @@
+//! Core workload data model: tensors, Einsums, fusion sets.
+
+use crate::poly::{AffineMap, IBox, Interval, Region};
+
+/// Index of a tensor within its [`FusionSet`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub usize);
+
+/// Role of a tensor within a fusion set (paper §I / §III-D). Retention
+/// choices for [`TensorKind::Intermediate`] tensors are retain-*recompute*
+/// choices (no off-chip backing); all others are retain-*refetch*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// The input fmap of the first layer — streamed from off-chip.
+    InputFmap,
+    /// Filters / weights of any layer — streamed from off-chip.
+    Weight,
+    /// Produced by layer `i`, consumed by layer `i+1`; lives on-chip only.
+    Intermediate,
+    /// Output fmap of the last layer — drained to off-chip.
+    OutputFmap,
+}
+
+/// A tensor in a fusion set.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    /// Extent of each coordinate dimension.
+    pub shape: Vec<i64>,
+    pub kind: TensorKind,
+}
+
+impl TensorInfo {
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of elements.
+    pub fn size(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    /// The whole tensor as a box.
+    pub fn full_box(&self) -> IBox {
+        IBox::new(self.shape.iter().map(|&s| Interval::upto(s)).collect())
+    }
+
+    pub fn full_region(&self) -> Region {
+        Region::from_box(self.full_box())
+    }
+}
+
+/// How an Einsum's iteration space touches one tensor: an affine map from the
+/// Einsum's (local) iteration dims to the tensor's coordinate dims.
+#[derive(Debug, Clone)]
+pub struct TensorAccess {
+    pub tensor: TensorId,
+    pub map: AffineMap,
+}
+
+/// What the compute units do per iteration point — used for op counting and
+/// energy (a MAC vs. a comparator vs. an exp for softmax).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Multiply-accumulate (conv / matmul).
+    Mac,
+    /// Max-reduce (pooling).
+    Max,
+    /// Elementwise op (activation, softmax, scaling).
+    Elementwise,
+}
+
+/// One layer as an extended Einsum: named ranks with a dense box domain, one
+/// output access (identity per dim, by construction in the builders), and one
+/// access per input tensor.
+#[derive(Debug, Clone)]
+pub struct EinsumSpec {
+    pub name: String,
+    /// Local iteration dim names, e.g. `["M", "P", "Q", "C", "R", "S"]`.
+    pub rank_names: Vec<String>,
+    /// Extent of each local iteration dim.
+    pub rank_sizes: Vec<i64>,
+    pub output: TensorAccess,
+    pub inputs: Vec<TensorAccess>,
+    pub op_kind: OpKind,
+}
+
+impl EinsumSpec {
+    pub fn ndim(&self) -> usize {
+        self.rank_sizes.len()
+    }
+
+    /// Full iteration domain.
+    pub fn domain(&self) -> IBox {
+        IBox::new(self.rank_sizes.iter().map(|&s| Interval::upto(s)).collect())
+    }
+
+    /// Total operation count (product of rank sizes).
+    pub fn total_ops(&self) -> i64 {
+        self.rank_sizes.iter().product()
+    }
+
+    /// Local dim index of rank `name`, if present.
+    pub fn rank_index(&self, name: &str) -> Option<usize> {
+        self.rank_names.iter().position(|n| n == name)
+    }
+
+    /// Dims NOT referenced by the output access — the reduction ranks. An op
+    /// region that produces a piece of output always extends fully along
+    /// these.
+    pub fn reduction_dims(&self) -> Vec<usize> {
+        let out_dims = self.output.map.referenced_dims();
+        (0..self.ndim()).filter(|d| !out_dims.contains(d)).collect()
+    }
+
+    /// Product of reduction-rank extents (ops per produced output element).
+    pub fn reduction_extent(&self) -> i64 {
+        self.reduction_dims()
+            .iter()
+            .map(|&d| self.rank_sizes[d])
+            .product()
+    }
+
+    /// The access for `tensor`, searching inputs then output.
+    pub fn access_for(&self, tensor: TensorId) -> Option<&TensorAccess> {
+        self.inputs
+            .iter()
+            .find(|a| a.tensor == tensor)
+            .or_else(|| (self.output.tensor == tensor).then_some(&self.output))
+    }
+}
+
+/// A chain of layers to be fused (paper §III: the user-defined *fusion set*).
+///
+/// Invariants (checked by [`FusionSet::validate`]):
+/// * Einsums form a chain: the output tensor of layer `i` is an input of
+///   layer `i+1`.
+/// * Output accesses are identity-per-dimension (bare ranks), so operation
+///   preimages of output regions are exact boxes.
+#[derive(Debug, Clone)]
+pub struct FusionSet {
+    pub name: String,
+    pub tensors: Vec<TensorInfo>,
+    pub einsums: Vec<EinsumSpec>,
+}
+
+impl FusionSet {
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id.0]
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.einsums.len()
+    }
+
+    pub fn last(&self) -> &EinsumSpec {
+        self.einsums.last().expect("empty fusion set")
+    }
+
+    /// The layer that produces `tensor`, if any.
+    pub fn producer_of(&self, tensor: TensorId) -> Option<usize> {
+        self.einsums.iter().position(|e| e.output.tensor == tensor)
+    }
+
+    /// The layers that consume `tensor`.
+    pub fn consumers_of(&self, tensor: TensorId) -> Vec<usize> {
+        self.einsums
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.inputs.iter().any(|a| a.tensor == tensor))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The intermediate tensor between layer `i` and layer `i+1`.
+    pub fn intermediate_between(&self, i: usize) -> TensorId {
+        self.einsums[i].output.tensor
+    }
+
+    /// All tensor ids of a given kind.
+    pub fn tensors_of_kind(&self, kind: TensorKind) -> Vec<TensorId> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind == kind)
+            .map(|(i, _)| TensorId(i))
+            .collect()
+    }
+
+    /// Every tensor with off-chip backing (everything but intermediates).
+    pub fn offchip_backed_tensors(&self) -> Vec<TensorId> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind != TensorKind::Intermediate)
+            .map(|(i, _)| TensorId(i))
+            .collect()
+    }
+
+    /// Total MAC-equivalent operations in the fusion set (algorithmic,
+    /// without recomputation).
+    pub fn total_ops(&self) -> i64 {
+        self.einsums.iter().map(|e| e.total_ops()).sum()
+    }
+
+    /// Algorithmic-minimum off-chip traffic in elements: every off-chip
+    /// backed tensor crosses the chip boundary exactly once (paper §VI-B).
+    pub fn algmin_offchip_elems(&self) -> i64 {
+        self.offchip_backed_tensors()
+            .iter()
+            .map(|&t| self.tensor(t).size())
+            .sum()
+    }
+
+    /// Check structural invariants; returns a description of the first
+    /// violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.einsums.is_empty() {
+            return Err("fusion set has no einsums".into());
+        }
+        for (li, e) in self.einsums.iter().enumerate() {
+            if e.rank_names.len() != e.rank_sizes.len() {
+                return Err(format!("{}: rank names/sizes length mismatch", e.name));
+            }
+            if e.rank_sizes.iter().any(|&s| s <= 0) {
+                return Err(format!("{}: non-positive rank size", e.name));
+            }
+            // Output access must be identity per dim.
+            for expr in &e.output.map.exprs {
+                if expr.as_identity().is_none() {
+                    return Err(format!("{}: output access is not identity-per-dim", e.name));
+                }
+            }
+            // Access arity must match tensor ndim; footprints must fit.
+            for acc in e.inputs.iter().chain(std::iter::once(&e.output)) {
+                let t = self.tensor(acc.tensor);
+                if acc.map.out_ndim() != t.ndim() {
+                    return Err(format!(
+                        "{}: access to {} has arity {} but tensor has {} dims",
+                        e.name,
+                        t.name,
+                        acc.map.out_ndim(),
+                        t.ndim()
+                    ));
+                }
+                let fp = acc.map.image_box(&e.domain());
+                if !t.full_box().contains_box(&fp) {
+                    return Err(format!(
+                        "{}: access footprint {} exceeds tensor {} shape {:?}",
+                        e.name, fp, t.name, t.shape
+                    ));
+                }
+            }
+            // Chain: output of layer li is an input of layer li+1.
+            if li + 1 < self.einsums.len() {
+                let next = &self.einsums[li + 1];
+                if !next.inputs.iter().any(|a| a.tensor == e.output.tensor) {
+                    return Err(format!(
+                        "{} -> {}: not a chain (intermediate not consumed)",
+                        e.name, next.name
+                    ));
+                }
+            }
+            // Intermediates classified correctly.
+            let kind = self.tensor(e.output.tensor).kind;
+            let expect = if li + 1 < self.einsums.len() {
+                TensorKind::Intermediate
+            } else {
+                TensorKind::OutputFmap
+            };
+            if kind != expect {
+                return Err(format!(
+                    "{}: output tensor {} has kind {:?}, expected {:?}",
+                    e.name,
+                    self.tensor(e.output.tensor).name,
+                    kind,
+                    expect
+                ));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,137 @@
+use super::*;
+use crate::poly::IBox;
+
+#[test]
+fn conv_conv_structure() {
+    let fs = workloads::conv_conv(14, 64);
+    assert!(fs.validate().is_ok());
+    assert_eq!(fs.num_layers(), 2);
+    assert_eq!(fs.tensors.len(), 5); // Fmap1, Filter1, Fmap2, Filter2, Fmap3
+    let inter = fs.tensors_of_kind(TensorKind::Intermediate);
+    assert_eq!(inter.len(), 1);
+    assert_eq!(fs.tensor(inter[0]).name, "Fmap2");
+    // Fmap2 shape: channels × (rows+?)... conv1 output of input (14+2)^2.
+    assert_eq!(fs.tensor(inter[0]).shape, vec![64, 14, 14]);
+    // Final output 12x12? No: conv2 consumes 14x14 -> 12x12.
+    let out = fs.tensors_of_kind(TensorKind::OutputFmap);
+    assert_eq!(fs.tensor(out[0]).shape, vec![64, 12, 12]);
+}
+
+#[test]
+fn conv_chain_shapes_follow_halo() {
+    // Input rows + 2 per 3x3 conv layer (stride 1, valid padding).
+    let fs = workloads::conv_conv_conv(16, 8);
+    assert!(fs.validate().is_ok());
+    let shapes: Vec<&[i64]> = fs.tensors.iter().map(|t| t.shape.as_slice()).collect();
+    assert_eq!(shapes[0], &[8, 20, 20]); // Fmap1
+    let out = fs.tensors_of_kind(TensorKind::OutputFmap)[0];
+    assert_eq!(fs.tensor(out).shape, vec![8, 14, 14]);
+}
+
+#[test]
+fn pdp_block_dwise_shares_channel_rank() {
+    let fs = workloads::pwise_dwise_pwise(28, 16);
+    assert!(fs.validate().is_ok());
+    assert_eq!(fs.num_layers(), 3);
+    // Dwise: input and output channel count equal (96 = 6*16).
+    let dwise = &fs.einsums[1];
+    assert_eq!(dwise.name, "Dwise2");
+    let in_t = fs.tensor(dwise.inputs[0].tensor);
+    let out_t = fs.tensor(dwise.output.tensor);
+    assert_eq!(in_t.shape[0], 96);
+    assert_eq!(out_t.shape[0], 96);
+    // Depthwise has no channel reduction: reduction ranks are R,S only.
+    assert_eq!(dwise.reduction_extent(), 9);
+}
+
+#[test]
+fn fc_fc_no_convolutional_reuse() {
+    let fs = workloads::fc_fc(512, 1024);
+    assert!(fs.validate().is_ok());
+    for e in &fs.einsums {
+        for acc in &e.inputs {
+            // Every access expression is a bare rank: no sliding windows.
+            for expr in &acc.map.exprs {
+                assert!(expr.as_identity().is_some());
+            }
+        }
+    }
+}
+
+#[test]
+fn attention_chain() {
+    let fs = workloads::self_attention(4, 12, 128, 64);
+    assert!(fs.validate().is_ok());
+    let inter = fs.tensors_of_kind(TensorKind::Intermediate);
+    assert_eq!(inter.len(), 1);
+    assert_eq!(fs.tensor(inter[0]).shape, vec![4, 12, 128, 128]); // scores
+}
+
+#[test]
+fn strided_conv_footprint() {
+    let fs = FusionSetBuilder::new("s2", &[8, 15, 15]).conv2d(16, 3, 3, 2).build();
+    let e = &fs.einsums[0];
+    // P = (15-3)/2 + 1 = 7.
+    assert_eq!(e.rank_sizes[1], 7);
+    // Input footprint of the full domain covers all 15 rows.
+    let img = e.inputs[0].map.image_box(&e.domain());
+    assert_eq!(img, IBox::from_bounds(&[(0, 8), (0, 15), (0, 15)]));
+}
+
+#[test]
+fn pooling_has_no_weights() {
+    let fs = workloads::vgg_e_stage_with_pool();
+    assert!(fs.validate().is_ok());
+    let pool = fs.einsums.iter().find(|e| e.name.starts_with("Pool")).unwrap();
+    assert_eq!(pool.inputs.len(), 1);
+    assert_eq!(pool.op_kind, OpKind::Max);
+}
+
+#[test]
+fn total_ops_conv() {
+    let fs = workloads::conv_conv(14, 4);
+    // Each conv: M*P*Q*C*R*S = 4*14*14*4*9 (layer1: P=Q=14) + 4*12*12*4*9.
+    let expected = 4 * 14 * 14 * 4 * 9 + 4 * 12 * 12 * 4 * 9;
+    assert_eq!(fs.total_ops(), expected);
+}
+
+#[test]
+fn algmin_transfers() {
+    let fs = workloads::conv_conv(14, 4);
+    // Fmap1 + Filter1 + Filter2 + Fmap3; Fmap2 is an intermediate.
+    let expected = 4 * 16 * 16 + 4 * 4 * 9 + 4 * 4 * 9 + 4 * 12 * 12;
+    assert_eq!(fs.algmin_offchip_elems(), expected);
+}
+
+#[test]
+fn producer_consumer_wiring() {
+    let fs = workloads::pwise_dwise_pwise(14, 8);
+    let inter = fs.tensors_of_kind(TensorKind::Intermediate);
+    for &t in &inter {
+        let p = fs.producer_of(t).unwrap();
+        let c = fs.consumers_of(t);
+        assert_eq!(c, vec![p + 1]);
+    }
+}
+
+#[test]
+fn batched_workloads_validate() {
+    assert!(workloads::alexnet_convs_batched(16).validate().is_ok());
+    assert!(workloads::vgg_a_convs_batched(8).validate().is_ok());
+    assert!(workloads::mnist_convs_batched(32, 2).validate().is_ok());
+    assert!(workloads::fsrcnn(64).validate().is_ok());
+    assert!(workloads::mc_cnn(64).validate().is_ok());
+    assert!(workloads::vgg_e_first_two().validate().is_ok());
+    for i in [1, 2, 3, 5] {
+        assert!(workloads::vgg1_layer(i).validate().is_ok());
+    }
+}
+
+#[test]
+fn reduction_dims_conv() {
+    let fs = workloads::conv_conv(14, 4);
+    let e = &fs.einsums[0];
+    // Output access is [M,P,Q] => reductions are C,R,S (dims 3,4,5).
+    assert_eq!(e.reduction_dims(), vec![3, 4, 5]);
+    assert_eq!(e.reduction_extent(), 4 * 3 * 3);
+}

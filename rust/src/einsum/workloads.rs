@@ -1,0 +1,208 @@
+//! Workload library: the paper's fusion sets (Table X) and the DNNs used by
+//! the validation targets (§V) and case studies (§VI).
+//!
+//! Shapes follow the publications: ResNet-18 [34] / MobileNetV2 [1] blocks
+//! for the case studies, VGG [3] / AlexNet [4] for ISAAC and PipeLayer,
+//! FSRCNN [45] / MC-CNN [44] for DepFin, and BERT-style self-attention [6]
+//! for FLAT.
+
+use super::{FusionSet, FusionSetBuilder};
+
+/// Table X row 1: `conv+conv`, modeled after ResNet blocks.
+/// `rows = P1 = Q1 = P2 = Q2`, `channels = C1 = M1 = C2 = M2`, 3×3 kernels.
+pub fn conv_conv(rows: i64, channels: i64) -> FusionSet {
+    FusionSetBuilder::new(
+        &format!("conv+conv(r{rows},c{channels})"),
+        &[channels, rows + 2, rows + 2],
+    )
+    .conv2d(channels, 3, 3, 1)
+    .conv2d(channels, 3, 3, 1)
+    .build()
+}
+
+/// Three chained 3×3 convs — used by the per-intermediate-fmap
+/// retain-recompute case study (Fig 17; two intermediate fmaps).
+pub fn conv_conv_conv(rows: i64, channels: i64) -> FusionSet {
+    FusionSetBuilder::new(
+        &format!("conv+conv+conv(r{rows},c{channels})"),
+        &[channels, rows + 4, rows + 4],
+    )
+    .conv2d(channels, 3, 3, 1)
+    .conv2d(channels, 3, 3, 1)
+    .conv2d(channels, 3, 3, 1)
+    .build()
+}
+
+/// Table X row 2: `pwise+dwise+pwise`, a MobileNetV2 inverted-residual block
+/// with expansion factor 6: `C1 = M3`, `M1 = M2 = C3 = 6·C1`, 3×3 depthwise.
+pub fn pwise_dwise_pwise(rows: i64, c1: i64) -> FusionSet {
+    FusionSetBuilder::new(
+        &format!("pwise+dwise+pwise(r{rows},c{c1})"),
+        &[c1, rows + 2, rows + 2],
+    )
+    .pointwise(6 * c1)
+    .depthwise(3, 3, 1)
+    .pointwise(c1)
+    .build()
+}
+
+/// Table X row 3: `fc+fc`, a transformer feed-forward block.
+/// `tokens = M1 = M2`, `emb = E1 = D2`, `D1 = E2 = 1024`.
+pub fn fc_fc(tokens: i64, emb: i64) -> FusionSet {
+    FusionSetBuilder::new(&format!("fc+fc(t{tokens},e{emb})"), &[tokens, 1024])
+        .fc(emb)
+        .fc(1024)
+        .build()
+}
+
+/// BERT-style fused self-attention (scores → attend), the FLAT workload:
+/// `L[b,h,m,n] = Q·Kᵀ`, `O[b,h,m,e] = softmax(L)·V`. The score fmap is the
+/// intermediate whose tiling FLAT controls via B, H, M partitioning.
+pub fn self_attention(batch: i64, heads: i64, tokens: i64, emb: i64) -> FusionSet {
+    FusionSetBuilder::new(
+        &format!("self-attention(b{batch},h{heads},t{tokens},e{emb})"),
+        &[batch, heads, tokens, emb],
+    )
+    .attention_scores(tokens)
+    .attention_values(emb)
+    .build()
+}
+
+/// Fused-layer CNN [16] validation workload: the first two 3×3 conv layers
+/// of VGG-E (224×224, 3→64→64 channels), the fusion the paper's Fig. 1
+/// pyramid demonstrates.
+pub fn vgg_e_first_two() -> FusionSet {
+    FusionSetBuilder::new("vgg-e-conv1-conv2", &[3, 226, 226])
+        .conv2d(64, 3, 3, 1)
+        .conv2d(64, 3, 3, 1)
+        .build()
+}
+
+/// Deeper VGG-E fused stage (conv1_1 .. pool1 .. conv2_1): exercises pooling
+/// inside a fusion set.
+pub fn vgg_e_stage_with_pool() -> FusionSet {
+    FusionSetBuilder::new("vgg-e-conv1-pool-conv2", &[3, 226, 226])
+        .conv2d(64, 3, 3, 1)
+        .conv2d(64, 3, 3, 1)
+        .maxpool(2, 2)
+        .conv2d(128, 3, 3, 1)
+        .build()
+}
+
+/// ISAAC [17] validation workloads: single VGG-1 (VGG-16) conv layers.
+/// `which` ∈ {1, 2, 3, 5} per Table VII. Returned as a one-layer fusion set;
+/// ISAAC pipelines *across* layers, which the validation driver builds by
+/// chaining stages.
+pub fn vgg1_layer(which: usize) -> FusionSet {
+    // VGG-16 conv shapes (in channels, spatial, out channels).
+    let (c, hw, m) = match which {
+        1 => (3, 224, 64),
+        2 => (64, 224, 64),
+        3 => (64, 112, 128),
+        4 => (128, 112, 128),
+        5 => (128, 56, 256),
+        _ => panic!("vgg1_layer: unsupported layer {which}"),
+    };
+    FusionSetBuilder::new(&format!("vgg1-conv{which}"), &[c, hw + 2, hw + 2])
+        .conv2d(m, 3, 3, 1)
+        .build()
+}
+
+/// Two consecutive VGG-16 layers for ISAAC-style column-partitioned
+/// pipelining.
+pub fn vgg1_pair(first: usize) -> FusionSet {
+    let (c, hw, m1, m2) = match first {
+        1 => (3, 224, 64, 64),
+        3 => (64, 112, 128, 128),
+        _ => panic!("vgg1_pair: unsupported start layer {first}"),
+    };
+    FusionSetBuilder::new(&format!("vgg1-conv{}-conv{}", first, first + 1), &[c, hw + 4, hw + 4])
+        .conv2d(m1, 3, 3, 1)
+        .conv2d(m2, 3, 3, 1)
+        .build()
+}
+
+/// PipeLayer [18] validation: batched conv chains. PipeLayer partitions the
+/// batch rank and pipelines across layers.
+pub fn alexnet_convs_batched(batch: i64) -> FusionSet {
+    // AlexNet conv3->conv4->conv5 (the chain with uniform 13x13 spatial size).
+    FusionSetBuilder::new(&format!("alexnet-c3c4c5(b{batch})"), &[batch, 256, 15, 15])
+        .conv2d_batched(384, 3, 3, 1)
+        .conv2d_batched(384, 3, 3, 1)
+        .conv2d_batched(256, 3, 3, 1)
+        .build()
+}
+
+/// VGG-A conv chain (batched) for the PipeLayer speedup table.
+pub fn vgg_a_convs_batched(batch: i64) -> FusionSet {
+    FusionSetBuilder::new(&format!("vgg-a-stage3(b{batch})"), &[batch, 256, 30, 30])
+        .conv2d_batched(256, 3, 3, 1)
+        .conv2d_batched(256, 3, 3, 1)
+        .conv2d_batched(256, 3, 3, 1)
+        .build()
+}
+
+/// Small MNIST-scale CNNs for the PipeLayer speedup table (MNIST-A/B in
+/// [18] are LeNet variants).
+pub fn mnist_convs_batched(batch: i64, layers: usize) -> FusionSet {
+    let mut b = FusionSetBuilder::new(&format!("mnist({layers}l,b{batch})"), &[batch, 1, 28, 28]);
+    let mut chans = 20;
+    for _ in 0..layers {
+        b.conv2d_batched(chans, 5, 5, 1);
+        chans = 50;
+    }
+    b.build()
+}
+
+/// DepFin [43] validation: FSRCNN super-resolution CNN (d=56, s=12, m=4):
+/// feature extraction 5×5, shrink 1×1, four 3×3 mapping layers, expand 1×1.
+/// DepFin fuses the full depth at high resolution.
+pub fn fsrcnn(rows: i64) -> FusionSet {
+    FusionSetBuilder::new(&format!("fsrcnn(r{rows})"), &[1, rows + 4, rows + 4])
+        .conv2d(56, 5, 5, 1)
+        .pointwise(12)
+        .conv2d(12, 3, 3, 1)
+        .pointwise(56)
+        .build()
+}
+
+/// DepFin validation: MC-CNN fast stereo-matching feature network
+/// (4 × conv3×3, 64 channels, full-resolution).
+pub fn mc_cnn(rows: i64) -> FusionSet {
+    FusionSetBuilder::new(&format!("mc-cnn(r{rows})"), &[1, rows + 6, rows + 6])
+        .conv2d(64, 3, 3, 1)
+        .conv2d(64, 3, 3, 1)
+        .conv2d(64, 3, 3, 1)
+        .build()
+}
+
+/// ResNet-18 stage shapes (Fig. 4 layers 1–5): `(width, channels)` pairs for
+/// the five stages; widths/channels vary by orders of magnitude.
+pub const RESNET18_STAGES: [(i64, i64); 5] =
+    [(112, 64), (56, 64), (28, 128), (14, 256), (7, 512)];
+
+/// A ResNet-18 basic block (two fused 3×3 convs) at stage `i` (0..5).
+pub fn resnet18_block(stage: usize) -> FusionSet {
+    let (w, c) = RESNET18_STAGES[stage];
+    conv_conv(w, c)
+}
+
+/// MobileNetV2 block shapes (Fig. 4 layers 6–11): `(width, input channels)`.
+pub const MOBILENETV2_STAGES: [(i64, i64); 6] =
+    [(112, 16), (56, 24), (28, 32), (14, 64), (14, 96), (7, 160)];
+
+/// A MobileNetV2 inverted-residual block at stage `i` (0..6).
+pub fn mobilenetv2_block(stage: usize) -> FusionSet {
+    let (w, c) = MOBILENETV2_STAGES[stage];
+    pwise_dwise_pwise(w, c)
+}
+
+/// The Fig 14 shape sweep for `conv+conv`: (rows, channels) covering the
+/// row-heavy to channel-heavy spectrum of Table X col. 3.
+pub const CONV_CONV_SHAPES: [(i64, i64); 4] = [(112, 32), (56, 64), (28, 128), (14, 256)];
+
+/// The Fig 14/15 shape sweep for `pwise+dwise+pwise` (rows, C1).
+pub const PDP_SHAPES: [(i64, i64); 3] = [(56, 16), (28, 32), (14, 64)];
+
+/// The Fig 14 shape sweep for `fc+fc` (tokens, emb).
+pub const FC_FC_SHAPES: [(i64, i64); 3] = [(2048, 256), (512, 1024), (128, 4096)];

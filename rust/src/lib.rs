@@ -1,0 +1,37 @@
+//! # LoopTree — fused-layer dataflow accelerator design-space exploration
+//!
+//! A reproduction of *"LoopTree: Exploring the Fused-layer Dataflow
+//! Accelerator Design Space"* (Gilbert, Wu, Emer, Sze — IEEE TCASAI 2024).
+//!
+//! The crate provides:
+//!
+//! * [`einsum`] — extended-Einsum workload IR: layers, tensors, fusion sets.
+//! * [`poly`] — exact rectilinear set algebra (the ISL-replacement substrate).
+//! * [`arch`] — accelerator architecture specs + accelergy-lite energy model.
+//! * [`mapping`] — the paper's mapping taxonomy (Table IV): partitioned
+//!   ranks, tile shapes, schedules, per-tensor retention, parallelism.
+//! * [`model`] — the LoopTree analytical model: latency, energy, buffer
+//!   occupancy, off-chip transfers (paper §IV).
+//! * [`sim`] — a reference tile-level simulator used as the validation
+//!   comparator (paper §V methodology).
+//! * [`mapspace`] / [`search`] — mapping enumeration, Pareto fronts, and
+//!   search algorithms (exhaustive, random, annealing, genetic).
+//! * [`coordinator`] — parallel DSE job execution.
+//! * [`runtime`] — PJRT execution of AOT-compiled fused-tile artifacts.
+//! * [`validation`] — encodings of DepFin, Fused-layer CNN, ISAAC,
+//!   PipeLayer, and FLAT (paper Tables V–VIII, Fig 13).
+//! * [`casestudies`] — drivers regenerating paper Figs 14–18.
+
+pub mod arch;
+pub mod einsum;
+pub mod mapping;
+pub mod casestudies;
+pub mod coordinator;
+pub mod mapspace;
+pub mod model;
+pub mod search;
+pub mod runtime;
+pub mod validation;
+pub mod sim;
+pub mod poly;
+pub mod util;

@@ -1,0 +1,285 @@
+//! LoopTree CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   validate   [--design <name>] [--full]   reproduce the validation tables
+//!   casestudy  <fig14|fig15|fig16|fig17|fig18> [--full]
+//!   analyze    --workload <spec> --schedule <R,R,..> --tiles <n,n,..> [...]
+//!   search     --workload <spec> [--algorithm exhaustive|random|anneal|genetic]
+//!   experiments [--full]                    regenerate everything (EXPERIMENTS.md data)
+//!   speed                                   model-vs-simulator throughput
+//!
+//! Workload specs: conv_conv:ROWSxCH | pdp:ROWSxCH | fc_fc:TOKENSxEMB |
+//! conv3:ROWSxCH | attention:B,H,T,E
+
+use looptree::arch::Arch;
+use looptree::casestudies as cs;
+use looptree::coordinator::Coordinator;
+use looptree::einsum::{workloads, FusionSet};
+use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
+use looptree::model::{evaluate, EvalOptions};
+use looptree::search;
+use looptree::sim::simulate;
+use looptree::util::table::fmt_count;
+use looptree::validation::{self, Scale};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&args);
+    std::process::exit(code);
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn run(args: &[String]) -> i32 {
+    match args.first().map(|s| s.as_str()) {
+        Some("validate") => cmd_validate(args),
+        Some("casestudy") => cmd_casestudy(args),
+        Some("analyze") => cmd_analyze(args),
+        Some("search") => cmd_search(args),
+        Some("experiments") => cmd_experiments(args),
+        Some("speed") => cmd_speed(args),
+        _ => {
+            eprintln!(
+                "looptree — fused-layer dataflow design-space exploration\n\n\
+                 usage:\n  looptree validate [--design depfin|fused-cnn|isaac|pipelayer|flat] [--full]\n  \
+                 looptree casestudy <fig14|fig15|fig16|fig17|fig18> [--full]\n  \
+                 looptree analyze --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim]\n  \
+                 looptree search --workload conv_conv:28x64 [--algorithm exhaustive|random|anneal|genetic] [--objective latency|energy|edp|capacity]\n  \
+                 looptree experiments [--full]\n  \
+                 looptree speed"
+            );
+            2
+        }
+    }
+}
+
+fn parse_workload(spec: &str) -> Result<FusionSet, String> {
+    let (kind, rest) = spec.split_once(':').ok_or("workload spec needs kind:params")?;
+    let nums: Vec<i64> = rest
+        .split(|c| c == 'x' || c == ',')
+        .map(|s| s.parse::<i64>().map_err(|e| format!("bad number {s}: {e}")))
+        .collect::<Result<_, _>>()?;
+    match (kind, nums.as_slice()) {
+        ("conv_conv", [r, c]) => Ok(workloads::conv_conv(*r, *c)),
+        ("conv3", [r, c]) => Ok(workloads::conv_conv_conv(*r, *c)),
+        ("pdp", [r, c]) => Ok(workloads::pwise_dwise_pwise(*r, *c)),
+        ("fc_fc", [t, e]) => Ok(workloads::fc_fc(*t, *e)),
+        ("attention", [b, h, t, e]) => Ok(workloads::self_attention(*b, *h, *t, *e)),
+        _ => Err(format!("unknown workload spec: {spec}")),
+    }
+}
+
+fn cmd_validate(args: &[String]) -> i32 {
+    let scale = if flag(args, "--full") { Scale::Full } else { Scale::Test };
+    let rows = match opt(args, "--design") {
+        Some("depfin") => validation::validate_depfin(scale),
+        Some("fused-cnn") => validation::validate_fused_cnn(scale),
+        Some("isaac") => validation::validate_isaac(scale),
+        Some("pipelayer") => validation::validate_pipelayer(scale),
+        Some("flat") => validation::validate_flat(scale),
+        Some(other) => {
+            eprintln!("unknown design {other}");
+            return 2;
+        }
+        None => validation::run_all(scale),
+    };
+    println!("{}", validation::summarize(&rows));
+    let worst = rows
+        .iter()
+        .map(|r| r.error_pct())
+        .fold(0.0f64, f64::max);
+    println!("worst-case error: {worst:.2}% (paper claims <= 4%)");
+    0
+}
+
+fn cmd_casestudy(args: &[String]) -> i32 {
+    let fast = !flag(args, "--full");
+    match args.get(1).map(|s| s.as_str()) {
+        Some("fig14") => println!("{}", cs::fig14::render(&cs::fig14::run(fast))),
+        Some("fig15") => println!("{}", cs::fig15::render(&cs::fig15::run(fast))),
+        Some("fig16") => println!("{}", cs::fig16::render(&cs::fig16::run(fast))),
+        Some("fig17") => println!("{}", cs::fig17::render(&cs::fig17::run(fast))),
+        Some("fig18") => println!("{}", cs::fig18::render(&cs::fig18::run(fast))),
+        _ => {
+            eprintln!("usage: looptree casestudy <fig14|fig15|fig16|fig17|fig18> [--full]");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_analyze(args: &[String]) -> i32 {
+    let Some(wl) = opt(args, "--workload") else {
+        eprintln!("--workload required");
+        return 2;
+    };
+    let fs = match parse_workload(wl) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let last = fs.last();
+    let mut partitions = Vec::new();
+    if let (Some(sched), Some(tiles)) = (opt(args, "--schedule"), opt(args, "--tiles")) {
+        let names: Vec<&str> = sched.split(',').collect();
+        let sizes: Vec<i64> = tiles.split(',').filter_map(|s| s.parse().ok()).collect();
+        if names.len() != sizes.len() {
+            eprintln!("--schedule and --tiles must have equal arity");
+            return 2;
+        }
+        for (n, t) in names.iter().zip(sizes) {
+            let Some(dim) = last.rank_index(n) else {
+                eprintln!("unknown rank {n}; last layer has {:?}", last.rank_names);
+                return 2;
+            };
+            partitions.push(Partition { dim, tile: t });
+        }
+    }
+    let par = if flag(args, "--pipeline") {
+        Parallelism::Pipeline
+    } else {
+        Parallelism::Sequential
+    };
+    let mapping = InterLayerMapping::tiled(partitions, par);
+    let glb_kib = opt(args, "--glb-kib").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let arch = Arch::generic(glb_kib);
+    match evaluate(&fs, &arch, &mapping, &EvalOptions::default()) {
+        Ok(m) => {
+            println!("workload: {}", fs.name);
+            println!("schedule: {}", mapping.schedule_string(&fs));
+            println!("{}", m.summary());
+            println!("per-tensor occupancy:");
+            for (t, occ) in fs.tensors.iter().zip(&m.per_tensor_occupancy) {
+                println!("  {:10} {:>12} elems", t.name, fmt_count(*occ));
+            }
+            if !m.capacity_ok {
+                println!("WARNING: exceeds GLB capacity ({glb_kib} KiB)");
+            }
+            if flag(args, "--sim") {
+                match simulate(&fs, &arch, &mapping) {
+                    Ok(s) => println!(
+                        "simulator: latency={} offchip={}r+{}w recompute={}",
+                        fmt_count(s.latency_cycles),
+                        fmt_count(s.offchip_reads),
+                        fmt_count(s.offchip_writes),
+                        fmt_count(s.recompute_ops)
+                    ),
+                    Err(e) => eprintln!("simulator failed: {e}"),
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("evaluation failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_search(args: &[String]) -> i32 {
+    let Some(wl) = opt(args, "--workload") else {
+        eprintln!("--workload required");
+        return 2;
+    };
+    let fs = match parse_workload(wl) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let glb_kib: i64 = opt(args, "--glb-kib").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let arch = Arch::generic(glb_kib);
+    let objective_name = opt(args, "--objective").unwrap_or("edp");
+    let objective = move |m: &looptree::model::Metrics| -> f64 {
+        let infeasible = if m.capacity_ok { 1.0 } else { 1e6 };
+        infeasible
+            * match objective_name {
+                "latency" => m.latency_cycles as f64,
+                "energy" => m.energy.total_pj(),
+                "capacity" => m.occupancy_peak as f64,
+                _ => m.latency_cycles as f64 * m.energy.total_pj(), // edp
+            }
+    };
+    let pool = Coordinator::new(0);
+    let res = match opt(args, "--algorithm").unwrap_or("exhaustive") {
+        "random" => search::random_search(&fs, &arch, 2000, 1, objective, &pool),
+        "anneal" => search::annealing(&fs, &arch, 2000, 1, objective),
+        "genetic" => search::genetic(&fs, &arch, 40, 25, 1, objective, &pool),
+        _ => {
+            let cfg = looptree::mapspace::MapSpaceConfig::default();
+            search::exhaustive(&fs, &arch, &cfg, objective, &pool)
+        }
+    };
+    match res {
+        Some(r) => {
+            println!(
+                "evaluated {} mappings; best ({objective_name}) = {:.4e}",
+                r.evaluated.len(),
+                r.best.score
+            );
+            println!("schedule: {}", r.best.mapping.schedule_string(&fs));
+            println!(
+                "tiles: {:?}",
+                r.best.mapping.partitions.iter().map(|p| p.tile).collect::<Vec<_>>()
+            );
+            println!("{}", r.best.metrics.summary());
+            0
+        }
+        None => {
+            eprintln!("search produced no feasible mapping");
+            1
+        }
+    }
+}
+
+fn cmd_experiments(args: &[String]) -> i32 {
+    let full = flag(args, "--full");
+    let scale = if full { Scale::Full } else { Scale::Test };
+    println!("=== Validation (Tables V-VIII, Fig 13) ===");
+    println!("{}", validation::summarize(&validation::run_all(scale)));
+    println!("=== Fig 14 ===\n{}", cs::fig14::render(&cs::fig14::run(!full)));
+    println!("=== Fig 15 ===\n{}", cs::fig15::render(&cs::fig15::run(!full)));
+    println!("=== Fig 16 ===\n{}", cs::fig16::render(&cs::fig16::run(!full)));
+    println!("=== Fig 17 ===\n{}", cs::fig17::render(&cs::fig17::run(!full)));
+    println!("=== Fig 18 ===\n{}", cs::fig18::render(&cs::fig18::run(!full)));
+    0
+}
+
+fn cmd_speed(_args: &[String]) -> i32 {
+    // The paper's analytical-vs-simulator speed comparison (§IV).
+    let fs = workloads::conv_conv(20, 8);
+    let p2 = fs.last().rank_index("P2").unwrap();
+    let mapping = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 4 }],
+        Parallelism::Sequential,
+    );
+    let arch = Arch::generic(1 << 20);
+    let t0 = std::time::Instant::now();
+    let reps = 50;
+    for _ in 0..reps {
+        evaluate(&fs, &arch, &mapping, &EvalOptions::default()).unwrap();
+    }
+    let model_t = t0.elapsed() / reps;
+    let t1 = std::time::Instant::now();
+    for _ in 0..5 {
+        simulate(&fs, &arch, &mapping).unwrap();
+    }
+    let sim_t = t1.elapsed() / 5;
+    println!(
+        "model: {model_t:?}/eval   simulator: {sim_t:?}/run   speedup: {:.0}x",
+        sim_t.as_secs_f64() / model_t.as_secs_f64()
+    );
+    0
+}

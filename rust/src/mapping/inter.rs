@@ -1,0 +1,161 @@
+//! Inter-layer mapping: the fused-layer dataflow choices.
+
+use crate::einsum::{FusionSet, TensorId};
+use std::collections::HashMap;
+
+/// One partitioned rank of the last layer with its tile size along that rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Partition {
+    /// Local iteration-dim index in the *last* Einsum of the fusion set.
+    pub dim: usize,
+    /// Tile length along this rank (≥ 1). The last tile may be ragged.
+    pub tile: i64,
+}
+
+/// Retention level: retain the tile formed by partitioning the first `j`
+/// schedule ranks. `j = 0` = whole tensor, `j = k` = innermost tile.
+pub type RetLevel = usize;
+
+/// Sequential or pipelined processing of tiles across layers (paper Fig 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelism {
+    Sequential,
+    Pipeline,
+}
+
+/// The inter-layer mapping (paper Table IV).
+#[derive(Debug, Clone)]
+pub struct InterLayerMapping {
+    /// Partitioned ranks in schedule order (outer → inner). The same rank may
+    /// appear more than once (hierarchical re-partitioning for multi-level
+    /// buffers, paper §III-A) as long as tile sizes are strictly nested.
+    pub partitions: Vec<Partition>,
+    /// Per-tensor retention level; tensors absent from the map use
+    /// [`InterLayerMapping::default_retention`].
+    pub retention: HashMap<TensorId, RetLevel>,
+    /// Retention level for tensors without an explicit choice.
+    pub default_retention: RetLevel,
+    pub parallelism: Parallelism,
+}
+
+impl InterLayerMapping {
+    /// An untiled mapping: one tile covering everything (degenerates to
+    /// untiled fusion — whole intermediate fmaps retained).
+    pub fn untiled(parallelism: Parallelism) -> Self {
+        InterLayerMapping {
+            partitions: vec![],
+            retention: HashMap::new(),
+            default_retention: 0,
+            parallelism,
+        }
+    }
+
+    /// Convenience: partitions in schedule order with full retention at the
+    /// innermost level for every tensor.
+    pub fn tiled(partitions: Vec<Partition>, parallelism: Parallelism) -> Self {
+        let k = partitions.len();
+        InterLayerMapping {
+            partitions,
+            retention: HashMap::new(),
+            default_retention: k,
+            parallelism,
+        }
+    }
+
+    /// Number of schedule levels (k).
+    pub fn num_levels(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn retention_for(&self, t: TensorId) -> RetLevel {
+        *self.retention.get(&t).unwrap_or(&self.default_retention)
+    }
+
+    pub fn with_retention(mut self, t: TensorId, level: RetLevel) -> Self {
+        self.retention.insert(t, level);
+        self
+    }
+
+    /// Uniform retention level for all tensors (the constrained mapspace of
+    /// the paper's Fig 16 baseline).
+    pub fn with_uniform_retention(mut self, level: RetLevel) -> Self {
+        self.retention.clear();
+        self.default_retention = level;
+        self
+    }
+
+    /// Iteration count at each schedule level: `ceil(rank size / tile)`.
+    /// For a repeated rank, the size at the deeper level is the outer tile.
+    pub fn level_counts(&self, fs: &FusionSet) -> Vec<i64> {
+        let last = fs.last();
+        let mut cur_extent: HashMap<usize, i64> = HashMap::new();
+        let mut counts = Vec::with_capacity(self.partitions.len());
+        for p in &self.partitions {
+            let extent = *cur_extent.get(&p.dim).unwrap_or(&last.rank_sizes[p.dim]);
+            counts.push((extent + p.tile - 1) / p.tile);
+            cur_extent.insert(p.dim, p.tile);
+        }
+        counts
+    }
+
+    /// Total number of innermost iterations.
+    pub fn total_iterations(&self, fs: &FusionSet) -> i64 {
+        self.level_counts(fs).iter().product()
+    }
+
+    /// Structural validity with respect to a fusion set.
+    pub fn validate(&self, fs: &FusionSet) -> Result<(), String> {
+        let last = fs.last();
+        let k = self.num_levels();
+        let mut cur_extent: HashMap<usize, i64> = HashMap::new();
+        for p in &self.partitions {
+            if p.dim >= last.ndim() {
+                return Err(format!("partition dim {} out of range", p.dim));
+            }
+            if p.tile < 1 {
+                return Err(format!("tile {} < 1 on dim {}", p.tile, p.dim));
+            }
+            let extent = *cur_extent.get(&p.dim).unwrap_or(&last.rank_sizes[p.dim]);
+            if p.tile > extent {
+                return Err(format!(
+                    "tile {} exceeds extent {} of dim {} ({})",
+                    p.tile, extent, p.dim, last.rank_names[p.dim]
+                ));
+            }
+            cur_extent.insert(p.dim, p.tile);
+        }
+        if self.default_retention > k {
+            return Err(format!(
+                "default retention {} exceeds {} levels",
+                self.default_retention, k
+            ));
+        }
+        for (&t, &lvl) in &self.retention {
+            if t.0 >= fs.tensors.len() {
+                return Err(format!("retention for unknown tensor {}", t.0));
+            }
+            if lvl > k {
+                return Err(format!(
+                    "retention level {} for {} exceeds {} levels",
+                    lvl,
+                    fs.tensor(t).name,
+                    k
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable schedule, e.g. `"P2,Q2"` (paper §VI-B notation).
+    pub fn schedule_string(&self, fs: &FusionSet) -> String {
+        let last = fs.last();
+        if self.partitions.is_empty() {
+            return "untiled".into();
+        }
+        self.partitions
+            .iter()
+            .map(|p| last.rank_names[p.dim].clone())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}

@@ -1,0 +1,80 @@
+//! Intra-layer mapping (paper §III-E).
+//!
+//! LoopTree supports intra-layer choices so that per-tile hardware action
+//! counts can be analyzed (paper §IV-B, Timeloop-style); they are not the
+//! paper's focus, and neither are they ours. We model the two choices with
+//! first-order impact on the action counts:
+//!
+//! * **spatial partitioning** — which of the layer's ranks are spread across
+//!   the PE mesh (determines utilization and multicast fan-out);
+//! * **innermost temporal reuse** — each tensor's operand is reused at the
+//!   PE across iterations of ranks absent from its projection (register-level
+//!   reuse), reducing GLB reads by that factor.
+
+use crate::einsum::EinsumSpec;
+
+/// Intra-layer mapping for one Einsum.
+#[derive(Debug, Clone)]
+pub struct IntraLayerMapping {
+    /// `(local dim, spatial factor)`: the dim is split across PEs by the
+    /// factor. Product of factors should not exceed the PE count.
+    pub spatial: Vec<(usize, i64)>,
+}
+
+impl IntraLayerMapping {
+    /// Heuristic default: spatialize the first two output-projected ranks
+    /// (e.g. output channels × output rows) up to `pes` PEs.
+    ///
+    /// This mirrors the common output-stationary allocation that the
+    /// validation targets use and gives full utilization whenever the tile
+    /// extents divide the mesh.
+    pub fn default_for(einsum: &EinsumSpec, pes: i64) -> Self {
+        let out_dims = einsum.output.map.referenced_dims();
+        let mut spatial = Vec::new();
+        let mut budget = pes;
+        for &d in out_dims.iter().take(2) {
+            if budget <= 1 {
+                break;
+            }
+            let f = einsum.rank_sizes[d].min(budget);
+            if f > 1 {
+                spatial.push((d, f));
+                budget /= f;
+            }
+        }
+        IntraLayerMapping { spatial }
+    }
+
+    /// Total spatial fan-out (PEs used when tile extents suffice).
+    pub fn fanout(&self) -> i64 {
+        self.spatial.iter().map(|&(_, f)| f).product()
+    }
+
+    /// Spatial factor assigned to `dim` (1 if not spatialized).
+    pub fn factor_for(&self, dim: usize) -> i64 {
+        self.spatial
+            .iter()
+            .find(|&&(d, _)| d == dim)
+            .map(|&(_, f)| f)
+            .unwrap_or(1)
+    }
+
+    pub fn validate(&self, einsum: &EinsumSpec, pes: i64) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for &(d, f) in &self.spatial {
+            if d >= einsum.ndim() {
+                return Err(format!("spatial dim {d} out of range"));
+            }
+            if f < 1 {
+                return Err(format!("spatial factor {f} < 1"));
+            }
+            if !seen.insert(d) {
+                return Err(format!("dim {d} spatialized twice"));
+            }
+        }
+        if self.fanout() > pes {
+            return Err(format!("fanout {} exceeds {} PEs", self.fanout(), pes));
+        }
+        Ok(())
+    }
+}

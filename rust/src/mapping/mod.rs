@@ -1,0 +1,28 @@
+//! The LoopTree mapping taxonomy (paper §III, Table IV).
+//!
+//! A mapping fixes, for one fusion set on one architecture:
+//!
+//! * **Partitioned ranks** — a subset of the *last* layer's ranks, each with
+//!   a **tile shape** (an integer tile size; the tile extends fully along
+//!   unpartitioned ranks).
+//! * **Tile processing schedule** — the order of the partitioned ranks
+//!   (outer→inner), i.e. the loop-nest permutation the tiles are walked in.
+//! * **Retain-recompute** (per intermediate fmap) and **retain-refetch**
+//!   (per other tensor) — expressed uniformly (paper §III-D) as a *retention
+//!   level* `j`: retain the tile formed by partitioning the first `j`
+//!   schedule ranks (`j = 0` retains the whole tensor). Data not retained is
+//!   recomputed (intermediates: no off-chip backing) or refetched (others).
+//! * **Parallelism** — whether layer tiles are processed sequentially or in
+//!   a pipeline (paper §III-C).
+//!
+//! Intra-layer mapping choices (paper §III-E) are carried by
+//! [`IntraLayerMapping`] and consumed by `model::intra`.
+
+mod inter;
+mod intra;
+
+pub use inter::{InterLayerMapping, Parallelism, Partition, RetLevel};
+pub use intra::IntraLayerMapping;
+
+#[cfg(test)]
+mod tests;

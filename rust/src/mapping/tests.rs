@@ -1,0 +1,112 @@
+use super::*;
+use crate::einsum::workloads;
+
+#[test]
+fn untiled_mapping_validates() {
+    let fs = workloads::conv_conv(14, 8);
+    let m = InterLayerMapping::untiled(Parallelism::Sequential);
+    assert!(m.validate(&fs).is_ok());
+    assert_eq!(m.total_iterations(&fs), 1);
+    assert_eq!(m.schedule_string(&fs), "untiled");
+}
+
+#[test]
+fn tiled_mapping_level_counts() {
+    let fs = workloads::conv_conv(14, 8);
+    // Last layer Conv2 ranks: [M2,P2,Q2,C2,R2,S2]; P2=Q2=12.
+    let p2 = fs.last().rank_index("P2").unwrap();
+    let q2 = fs.last().rank_index("Q2").unwrap();
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 4 }, Partition { dim: q2, tile: 6 }],
+        Parallelism::Sequential,
+    );
+    assert!(m.validate(&fs).is_ok());
+    assert_eq!(m.level_counts(&fs), vec![3, 2]);
+    assert_eq!(m.total_iterations(&fs), 6);
+    assert_eq!(m.schedule_string(&fs), "P2,Q2");
+}
+
+#[test]
+fn ragged_tiles_ceil() {
+    let fs = workloads::conv_conv(14, 8); // P2 = 12
+    let p2 = fs.last().rank_index("P2").unwrap();
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 5 }],
+        Parallelism::Pipeline,
+    );
+    assert_eq!(m.level_counts(&fs), vec![3]); // 5+5+2
+}
+
+#[test]
+fn repartitioned_rank_nested_counts() {
+    let fs = workloads::conv_conv(30, 8); // P2 = 28
+    let p2 = fs.last().rank_index("P2").unwrap();
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 14 }, Partition { dim: p2, tile: 7 }],
+        Parallelism::Sequential,
+    );
+    assert!(m.validate(&fs).is_ok());
+    assert_eq!(m.level_counts(&fs), vec![2, 2]); // 28/14, 14/7
+}
+
+#[test]
+fn invalid_mappings_rejected() {
+    let fs = workloads::conv_conv(14, 8);
+    let p2 = fs.last().rank_index("P2").unwrap();
+    // Tile exceeds extent.
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 100 }],
+        Parallelism::Sequential,
+    );
+    assert!(m.validate(&fs).is_err());
+    // Dim out of range.
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: 99, tile: 1 }],
+        Parallelism::Sequential,
+    );
+    assert!(m.validate(&fs).is_err());
+    // Retention deeper than levels.
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 4 }],
+        Parallelism::Sequential,
+    )
+    .with_retention(crate::einsum::TensorId(0), 5);
+    assert!(m.validate(&fs).is_err());
+}
+
+#[test]
+fn retention_defaults_and_overrides() {
+    let fs = workloads::conv_conv(14, 8);
+    let p2 = fs.last().rank_index("P2").unwrap();
+    let t0 = crate::einsum::TensorId(0);
+    let t1 = crate::einsum::TensorId(1);
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 4 }],
+        Parallelism::Sequential,
+    )
+    .with_retention(t0, 0);
+    assert_eq!(m.retention_for(t0), 0);
+    assert_eq!(m.retention_for(t1), 1); // default = k
+    let u = m.with_uniform_retention(1);
+    assert_eq!(u.retention_for(t0), 1);
+}
+
+#[test]
+fn intra_default_respects_pe_budget() {
+    let fs = workloads::conv_conv(28, 64);
+    let e = &fs.einsums[0];
+    let im = IntraLayerMapping::default_for(e, 256);
+    assert!(im.validate(e, 256).is_ok());
+    assert!(im.fanout() <= 256);
+    assert!(im.fanout() > 1);
+}
+
+#[test]
+fn intra_validation_rejects_bad() {
+    let fs = workloads::conv_conv(28, 64);
+    let e = &fs.einsums[0];
+    let im = IntraLayerMapping { spatial: vec![(0, 64), (1, 64)] };
+    assert!(im.validate(e, 256).is_err()); // 4096 > 256
+    let im = IntraLayerMapping { spatial: vec![(0, 2), (0, 2)] };
+    assert!(im.validate(e, 256).is_err()); // duplicate dim
+}

@@ -1,0 +1,215 @@
+//! Mapping enumeration under constraints.
+
+use crate::einsum::{FusionSet, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+
+/// Constraints defining a mapspace (the unconstrained default is the paper's
+/// "this work" row in Table I).
+#[derive(Debug, Clone)]
+pub struct MapSpaceConfig {
+    /// Candidate schedules: ordered lists of last-layer rank *names*
+    /// (e.g. `["P2","Q2"]`). Empty = derive all single- and double-rank
+    /// schedules from the last layer's ranks.
+    pub schedules: Vec<Vec<String>>,
+    /// Candidate tile sizes per partitioned rank. Empty = powers of two up
+    /// to the rank size (plus the size itself).
+    pub tile_sizes: Vec<i64>,
+    /// Force one retention level for every tensor (`Some` = the uniform
+    /// retention constraint of prior work, paper Fig 16).
+    pub uniform_retention: bool,
+    /// If false, per-tensor retention levels are enumerated; if true only
+    /// the levels are tied across tensors.
+    pub parallelism: Vec<Parallelism>,
+    /// Cap on enumerated mappings (guards exhaustive blowup).
+    pub max_mappings: usize,
+}
+
+impl Default for MapSpaceConfig {
+    fn default() -> Self {
+        MapSpaceConfig {
+            schedules: vec![],
+            tile_sizes: vec![],
+            uniform_retention: false,
+            parallelism: vec![Parallelism::Sequential],
+            max_mappings: 200_000,
+        }
+    }
+}
+
+/// An enumerated mapspace for one fusion set.
+pub struct MapSpace {
+    mappings: Vec<InterLayerMapping>,
+}
+
+impl MapSpace {
+    /// Enumerate the mapspace.
+    pub fn enumerate(fs: &FusionSet, cfg: &MapSpaceConfig) -> MapSpace {
+        let last = fs.last();
+        let schedules: Vec<Vec<usize>> = if cfg.schedules.is_empty() {
+            default_schedules(fs)
+        } else {
+            cfg.schedules
+                .iter()
+                .map(|names| {
+                    names
+                        .iter()
+                        .map(|n| {
+                            last.rank_index(n)
+                                .unwrap_or_else(|| panic!("unknown rank {n}"))
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+
+        let mut mappings = Vec::new();
+        'outer: for sched in &schedules {
+            // Tile choices per level.
+            let per_level: Vec<Vec<i64>> = sched
+                .iter()
+                .map(|&d| tile_choices(last.rank_sizes[d], &cfg.tile_sizes))
+                .collect();
+            // Cartesian product of tile sizes via an odometer over choices.
+            let mut stack = vec![0usize; sched.len()];
+            let mut exhausted = false;
+            while !exhausted {
+                let partitions: Vec<Partition> = sched
+                    .iter()
+                    .enumerate()
+                    .map(|(lvl, &dim)| Partition { dim, tile: per_level[lvl][stack[lvl]] })
+                    .collect();
+                for &par in &cfg.parallelism {
+                    for m in retention_variants(fs, &partitions, par, cfg.uniform_retention)
+                    {
+                        if m.validate(fs).is_ok() {
+                            mappings.push(m);
+                            if mappings.len() >= cfg.max_mappings {
+                                break 'outer;
+                            }
+                        }
+                    }
+                }
+                if sched.is_empty() {
+                    break; // untiled: a single mapping
+                }
+                // Odometer increment (innermost level fastest).
+                let mut lvl = sched.len();
+                loop {
+                    if lvl == 0 {
+                        exhausted = true;
+                        break;
+                    }
+                    lvl -= 1;
+                    stack[lvl] += 1;
+                    if stack[lvl] < per_level[lvl].len() {
+                        break;
+                    }
+                    stack[lvl] = 0;
+                }
+            }
+        }
+        MapSpace { mappings }
+    }
+
+    pub fn mappings(&self) -> &[InterLayerMapping] {
+        &self.mappings
+    }
+
+    pub fn len(&self) -> usize {
+        self.mappings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mappings.is_empty()
+    }
+}
+
+/// Default schedule candidates: every single partitioned rank plus every
+/// ordered pair of distinct ranks of the last layer (covering the paper's
+/// P / P,Q / C,P / … choices), plus the untiled mapping.
+fn default_schedules(fs: &FusionSet) -> Vec<Vec<usize>> {
+    let last = fs.last();
+    let nd = last.ndim();
+    let mut out: Vec<Vec<usize>> = vec![vec![]];
+    for d in 0..nd {
+        if last.rank_sizes[d] > 1 {
+            out.push(vec![d]);
+        }
+    }
+    for a in 0..nd {
+        for b in 0..nd {
+            if a != b && last.rank_sizes[a] > 1 && last.rank_sizes[b] > 1 {
+                out.push(vec![a, b]);
+            }
+        }
+    }
+    out
+}
+
+/// Tile-size candidates for a rank extent.
+fn tile_choices(extent: i64, requested: &[i64]) -> Vec<i64> {
+    if !requested.is_empty() {
+        let mut v: Vec<i64> = requested
+            .iter()
+            .copied()
+            .filter(|&t| t >= 1 && t <= extent)
+            .collect();
+        if v.is_empty() {
+            v.push(extent);
+        }
+        v
+    } else {
+        let mut v = vec![];
+        let mut t = 1;
+        while t < extent {
+            v.push(t);
+            t *= 2;
+        }
+        v.push(extent);
+        v
+    }
+}
+
+/// All retention-level assignments for the given partitioning.
+fn retention_variants(
+    fs: &FusionSet,
+    partitions: &[Partition],
+    par: Parallelism,
+    uniform: bool,
+) -> Vec<InterLayerMapping> {
+    let k = partitions.len();
+    let base = InterLayerMapping::tiled(partitions.to_vec(), par);
+    if k == 0 {
+        return vec![base];
+    }
+    // Tensors with meaningful retention choices: everything except the final
+    // output (whose writes are streaming).
+    let tensors: Vec<TensorId> = fs
+        .tensors
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.kind != TensorKind::OutputFmap)
+        .map(|(i, _)| TensorId(i))
+        .collect();
+
+    if uniform {
+        return (0..=k)
+            .map(|lvl| base.clone().with_uniform_retention(lvl))
+            .collect();
+    }
+    // Per-tensor cross product (bounded: tensors ≤ ~7, k ≤ 3).
+    let mut out = vec![base.clone()];
+    for &t in &tensors {
+        let mut next = Vec::with_capacity(out.len() * (k + 1));
+        for m in &out {
+            for lvl in 0..=k {
+                next.push(m.clone().with_retention(t, lvl));
+            }
+        }
+        out = next;
+        if out.len() > 500_000 {
+            break; // guarded by max_mappings upstream as well
+        }
+    }
+    out
+}

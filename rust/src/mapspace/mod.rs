@@ -1,0 +1,17 @@
+//! The mapspace (paper §IV intro): enumeration of candidate mappings under
+//! configurable constraints, plus Pareto-front utilities used throughout the
+//! case studies.
+//!
+//! The constraints mirror the restricted design spaces of prior work
+//! (paper Table I), so the case studies can compare "this work" against
+//! e.g. uniform-retention or no-recompute subspaces by constraining the same
+//! enumeration.
+
+mod enumerate;
+mod pareto;
+
+pub use enumerate::{MapSpace, MapSpaceConfig};
+pub use pareto::{pareto_front, ParetoPoint};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,64 @@
+//! Pareto-front utilities for two-objective trade-off curves (the paper's
+//! capacity-vs-recompute and capacity-vs-transfers figures).
+
+/// A point on a 2-objective minimization trade-off with a payload.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint<T> {
+    pub x: f64,
+    pub y: f64,
+    pub payload: T,
+}
+
+/// Extract the Pareto front (minimizing both `x` and `y`), sorted by `x`
+/// ascending. Dominated and duplicate points are dropped.
+pub fn pareto_front<T: Clone>(mut points: Vec<ParetoPoint<T>>) -> Vec<ParetoPoint<T>> {
+    points.sort_by(|a, b| {
+        a.x.partial_cmp(&b.x)
+            .unwrap()
+            .then(a.y.partial_cmp(&b.y).unwrap())
+    });
+    let mut front: Vec<ParetoPoint<T>> = Vec::new();
+    let mut best_y = f64::INFINITY;
+    for p in points {
+        if p.y < best_y {
+            best_y = p.y;
+            front.push(p);
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(x: f64, y: f64) -> ParetoPoint<()> {
+        ParetoPoint { x, y, payload: () }
+    }
+
+    #[test]
+    fn drops_dominated() {
+        let front = pareto_front(vec![pt(1.0, 5.0), pt(2.0, 6.0), pt(3.0, 1.0)]);
+        let coords: Vec<(f64, f64)> = front.iter().map(|p| (p.x, p.y)).collect();
+        assert_eq!(coords, vec![(1.0, 5.0), (3.0, 1.0)]);
+    }
+
+    #[test]
+    fn keeps_strictly_improving_chain() {
+        let front = pareto_front(vec![pt(1.0, 3.0), pt(2.0, 2.0), pt(3.0, 1.0)]);
+        assert_eq!(front.len(), 3);
+    }
+
+    #[test]
+    fn duplicate_x_keeps_best_y() {
+        let front = pareto_front(vec![pt(1.0, 3.0), pt(1.0, 2.0), pt(2.0, 2.5)]);
+        let coords: Vec<(f64, f64)> = front.iter().map(|p| (p.x, p.y)).collect();
+        assert_eq!(coords, vec![(1.0, 2.0)]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let front = pareto_front::<()>(vec![]);
+        assert!(front.is_empty());
+    }
+}

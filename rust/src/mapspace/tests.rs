@@ -1,0 +1,92 @@
+use super::*;
+use crate::einsum::workloads;
+use crate::mapping::Parallelism;
+
+#[test]
+fn enumeration_covers_untiled_and_tiled() {
+    let fs = workloads::conv_conv(14, 8);
+    let cfg = MapSpaceConfig {
+        schedules: vec![vec![], vec!["P2".into()], vec!["P2".into(), "Q2".into()]],
+        tile_sizes: vec![4],
+        ..Default::default()
+    };
+    let ms = MapSpace::enumerate(&fs, &cfg);
+    assert!(!ms.is_empty());
+    // Untiled present.
+    assert!(ms.mappings().iter().any(|m| m.partitions.is_empty()));
+    // Two-level schedules present with per-tensor retention variants.
+    assert!(ms.mappings().iter().any(|m| m.partitions.len() == 2));
+    // All valid.
+    for m in ms.mappings() {
+        assert!(m.validate(&fs).is_ok());
+    }
+}
+
+#[test]
+fn uniform_retention_constrains_variants() {
+    let fs = workloads::conv_conv(14, 8);
+    let cfg_u = MapSpaceConfig {
+        schedules: vec![vec!["P2".into()]],
+        tile_sizes: vec![4],
+        uniform_retention: true,
+        ..Default::default()
+    };
+    let cfg_p = MapSpaceConfig {
+        uniform_retention: false,
+        ..cfg_u.clone()
+    };
+    let u = MapSpace::enumerate(&fs, &cfg_u);
+    let p = MapSpace::enumerate(&fs, &cfg_p);
+    // Per-tensor retention yields strictly more mappings.
+    assert!(p.len() > u.len(), "per-tensor {} vs uniform {}", p.len(), u.len());
+    // Uniform: k=1 => 2 retention levels per schedule point.
+    assert_eq!(u.len(), 2);
+}
+
+#[test]
+fn default_schedules_cover_rank_pairs() {
+    let fs = workloads::fc_fc(32, 64);
+    let cfg = MapSpaceConfig {
+        tile_sizes: vec![8],
+        max_mappings: 1_000_000,
+        ..Default::default()
+    };
+    let ms = MapSpace::enumerate(&fs, &cfg);
+    // fc last layer has 3 ranks (M2, E2, D2): untiled + 3 singles + 6 pairs.
+    let schedules: std::collections::HashSet<String> = ms
+        .mappings()
+        .iter()
+        .map(|m| m.schedule_string(&fs))
+        .collect();
+    assert!(schedules.contains("untiled"));
+    assert!(schedules.contains("M2"));
+    assert!(schedules.contains("M2,E2"));
+    assert!(schedules.contains("E2,M2"));
+    assert_eq!(schedules.len(), 1 + 3 + 6);
+}
+
+#[test]
+fn max_mappings_cap_respected() {
+    let fs = workloads::conv_conv(28, 32);
+    let cfg = MapSpaceConfig {
+        max_mappings: 100,
+        ..Default::default()
+    };
+    let ms = MapSpace::enumerate(&fs, &cfg);
+    assert_eq!(ms.len(), 100);
+}
+
+#[test]
+fn parallelism_variants_enumerate() {
+    let fs = workloads::conv_conv(14, 8);
+    let cfg = MapSpaceConfig {
+        schedules: vec![vec!["P2".into()]],
+        tile_sizes: vec![4],
+        uniform_retention: true,
+        parallelism: vec![Parallelism::Sequential, Parallelism::Pipeline],
+        ..Default::default()
+    };
+    let ms = MapSpace::enumerate(&fs, &cfg);
+    assert!(ms.mappings().iter().any(|m| m.parallelism == Parallelism::Pipeline));
+    assert!(ms.mappings().iter().any(|m| m.parallelism == Parallelism::Sequential));
+}

@@ -1,0 +1,210 @@
+//! Backward tile-shape analysis (paper §IV-A, Fig 10).
+//!
+//! Given an operation window of the *last* layer, infer the operation and
+//! data tiles of every earlier layer through data dependencies: the input
+//! data needed by a consumer op region is its image under the input access;
+//! the producer ops required to create a data region are its preimage under
+//! the producer's (identity) output access, extended fully along the
+//! producer's reduction ranks.
+
+use crate::einsum::FusionSet;
+use crate::poly::{IBox, Region};
+
+/// Full (retention-free) needs of a last-layer op window: per-layer operation
+/// regions and per-tensor data regions, ignoring any prior availability.
+/// These are the paper's *tiles*: what a window touches end to end, used for
+/// retained-tile footprints.
+#[derive(Debug, Clone)]
+pub struct WindowNeeds {
+    /// Operation region per layer (read by unit tests and kept for
+    /// debuggability; the engine consumes `data`).
+    #[allow(dead_code)]
+    pub ops: Vec<Region>,
+    /// Data region per tensor (index = TensorId.0).
+    pub data: Vec<Region>,
+}
+
+/// Propagate full needs backward from a last-layer op window.
+pub fn window_needs(fs: &FusionSet, last_ops: &IBox) -> WindowNeeds {
+    let n = fs.num_layers();
+    let mut ops: Vec<Region> = vec![Region::empty(0); n];
+    let mut data: Vec<Region> =
+        fs.tensors.iter().map(|t| Region::empty(t.ndim())).collect();
+
+    ops[n - 1] = Region::from_box(last_ops.clone());
+    for t in (0..n).rev() {
+        let e = &fs.einsums[t];
+        // Output data of this layer's op region.
+        let out_region = e.output.map.image(&ops[t]);
+        data[e.output.tensor.0].union(&out_region);
+        // Input needs.
+        for acc in &e.inputs {
+            let need = acc.map.image(&ops[t]);
+            data[acc.tensor.0].union(&need);
+        }
+        // Producer ops for the intermediate this layer consumes.
+        if t > 0 {
+            let prev = &fs.einsums[t - 1];
+            let inter = prev.output.tensor;
+            let need = &data[inter.0];
+            let prev_ops = prev.output.map.preimage_identity(need, &prev.domain());
+            ops[t - 1] = prev_ops;
+        }
+    }
+    WindowNeeds { ops, data }
+}
+
+/// Per-iteration backward pass *with* availability subtraction: computes the
+/// fresh (to be fetched or recomputed) data per tensor and the actual op
+/// regions per layer, updating `avail` in place.
+///
+/// `avail[x]` must already reflect retention-window invalidation for this
+/// iteration (see `engine::apply_retention_windows`).
+#[derive(Debug, Clone)]
+pub struct IterResult {
+    /// Actual ops executed per layer this iteration.
+    pub ops: Vec<Region>,
+    /// Freshly fetched (off-chip-backed) or produced (intermediate / output)
+    /// volume per tensor.
+    pub fresh: Vec<i64>,
+}
+
+pub fn iter_backward(fs: &FusionSet, last_ops: &IBox, avail: &mut [Region]) -> IterResult {
+    let n = fs.num_layers();
+    let mut ops: Vec<Region> = vec![Region::empty(0); n];
+    let mut fresh: Vec<i64> = vec![0; fs.tensors.len()];
+
+    ops[n - 1] = Region::from_box(last_ops.clone());
+    for t in (0..n).rev() {
+        let e = &fs.einsums[t];
+        if ops[t].is_empty() {
+            continue;
+        }
+        // Freshly produced output data (for intermediates this is what the
+        // *consumer-driven* recursion below asked this layer to produce; for
+        // the last layer it is the mapped tile's output).
+        let out = e.output.tensor;
+        let out_region = e.output.map.image(&ops[t]);
+        let out_fresh = out_region.subtract(&avail[out.0]);
+        fresh[out.0] += out_fresh.volume();
+        avail[out.0].union(&out_fresh);
+
+        // Input needs: fresh parts must be fetched (weights / input fmap) or
+        // produced by the upstream layer (intermediates).
+        for acc in &e.inputs {
+            let x = acc.tensor;
+            let need = acc.map.image(&ops[t]);
+            let fr = need.subtract(&avail[x.0]);
+            if t > 0 && fs.einsums[t - 1].output.tensor == x {
+                // Upstream must produce exactly the fresh part. Its volume is
+                // counted (and availability updated) by the producer's own
+                // output pass when the loop reaches layer t-1 — the preimage
+                // of `fr` images back to exactly `fr` under the identity
+                // output access, so nothing is double counted.
+                let prev = &fs.einsums[t - 1];
+                ops[t - 1] = prev.output.map.preimage_identity(&fr, &prev.domain());
+            } else {
+                fresh[x.0] += fr.volume();
+                avail[x.0].union(&fr);
+            }
+        }
+    }
+    // Keep region representations tight for long walks.
+    for a in avail.iter_mut() {
+        if a.complexity() > 16 {
+            a.coalesce();
+        }
+    }
+    IterResult { ops, fresh }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::workloads;
+    use crate::poly::Interval;
+
+    #[test]
+    fn full_window_needs_cover_everything() {
+        let fs = workloads::conv_conv(14, 4);
+        let needs = window_needs(&fs, &fs.last().domain());
+        // Processing the whole last layer needs every tensor entirely.
+        for (i, t) in fs.tensors.iter().enumerate() {
+            assert!(
+                needs.data[i].set_eq(&t.full_region()),
+                "tensor {} needs {} != full",
+                t.name,
+                needs.data[i]
+            );
+        }
+        // And the full op space of both layers.
+        for (t, e) in fs.einsums.iter().enumerate() {
+            assert_eq!(needs.ops[t].volume(), e.total_ops());
+        }
+    }
+
+    #[test]
+    fn row_window_needs_have_halo() {
+        let fs = workloads::conv_conv(14, 4); // P2=12, 3x3 convs
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let mut win = fs.last().domain();
+        win.dims[p2] = Interval::new(0, 4); // first 4 output rows
+        let needs = window_needs(&fs, &win);
+        // Fmap2 rows needed: p2 + r2 -> [0, 6) (halo 2).
+        let fmap2 = crate::einsum::TensorId(2);
+        assert_eq!(fs.tensor(fmap2).name, "Fmap2");
+        let bb = needs.data[fmap2.0].bounding_box();
+        assert_eq!(bb.dims[1], Interval::new(0, 6));
+        // Fmap1 rows needed: [0, 8) (two layers of halo).
+        let bb1 = needs.data[0].bounding_box();
+        assert_eq!(bb1.dims[1], Interval::new(0, 8));
+        // Conv1 ops: produce 6 rows of Fmap2.
+        assert_eq!(
+            needs.ops[0].volume(),
+            4 * 6 * 14 * 4 * 3 * 3 // M1 * P1tile * Q1 * C1 * R1 * S1
+        );
+    }
+
+    #[test]
+    fn iter_backward_subtracts_availability() {
+        let fs = workloads::conv_conv(14, 4);
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let mut avail: Vec<Region> =
+            fs.tensors.iter().map(|t| Region::empty(t.ndim())).collect();
+
+        // Iteration 0: rows [0,4).
+        let mut w0 = fs.last().domain();
+        w0.dims[p2] = Interval::new(0, 4);
+        let r0 = iter_backward(&fs, &w0, &mut avail);
+        let fmap2 = 2usize;
+        assert_eq!(r0.fresh[fmap2], 4 * 6 * 14); // 6 rows with halo
+
+        // Iteration 1: rows [4,8) — needs Fmap2 rows [4,10); rows [4,6)
+        // retained => fresh rows [6,10) = 4 rows.
+        let mut w1 = fs.last().domain();
+        w1.dims[p2] = Interval::new(4, 8);
+        let r1 = iter_backward(&fs, &w1, &mut avail);
+        assert_eq!(r1.fresh[fmap2], 4 * 4 * 14);
+        // Conv1 ops in iteration 1 produce only the fresh rows.
+        assert_eq!(r1.ops[0].volume(), 4 * 4 * 14 * 4 * 9);
+    }
+
+    #[test]
+    fn iter_backward_recompute_when_not_retained() {
+        let fs = workloads::conv_conv(14, 4);
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let mut avail: Vec<Region> =
+            fs.tensors.iter().map(|t| Region::empty(t.ndim())).collect();
+
+        let mut w0 = fs.last().domain();
+        w0.dims[p2] = Interval::new(0, 4);
+        iter_backward(&fs, &w0, &mut avail);
+        // Drop the intermediate entirely (simulates no retention).
+        avail[2] = Region::empty(3);
+        let mut w1 = fs.last().domain();
+        w1.dims[p2] = Interval::new(4, 8);
+        let r1 = iter_backward(&fs, &w1, &mut avail);
+        // All 6 input rows of Fmap2 are fresh: [4,10) -> recompute overlap.
+        assert_eq!(r1.fresh[2], 4 * 6 * 14);
+    }
+}

@@ -1,0 +1,259 @@
+//! The model evaluation engine: walks the inter-layer schedule once,
+//! algebraically, accumulating all metrics.
+
+use super::backward::{iter_backward, window_needs, WindowNeeds};
+use super::intra::tile_counts;
+use super::latency::{memory_cycles, PipelineLatency};
+use super::metrics::{EnergyBreakdown, Metrics};
+use super::walk::{IterWalk, TileWindows};
+use crate::arch::{energy, Arch};
+use crate::einsum::{FusionSet, TensorKind};
+use crate::mapping::{InterLayerMapping, IntraLayerMapping, Parallelism};
+use crate::poly::Region;
+
+/// Evaluation options.
+#[derive(Debug, Clone, Default)]
+pub struct EvalOptions {
+    /// Per-layer intra-layer mappings; derived by
+    /// [`IntraLayerMapping::default_for`] when absent.
+    pub intra: Option<Vec<IntraLayerMapping>>,
+}
+
+/// Evaluate one mapping. Errors on structurally invalid inputs; capacity
+/// overflow is reported via [`Metrics::capacity_ok`], not an error, so
+/// searches can still rank infeasible points.
+pub fn evaluate(
+    fs: &FusionSet,
+    arch: &Arch,
+    mapping: &InterLayerMapping,
+    opts: &EvalOptions,
+) -> Result<Metrics, String> {
+    fs.validate()?;
+    arch.validate()?;
+    mapping.validate(fs)?;
+
+    let n = fs.num_layers();
+    let nt = fs.tensors.len();
+    let tw = TileWindows::new(fs, mapping);
+    let counts = tw.counts().to_vec();
+    let k = counts.len();
+
+    let intra: Vec<IntraLayerMapping> = match &opts.intra {
+        Some(v) => {
+            if v.len() != n {
+                return Err(format!("expected {n} intra mappings, got {}", v.len()));
+            }
+            for (e, im) in fs.einsums.iter().zip(v) {
+                im.validate(e, arch.noc.num_pes())?;
+            }
+            v.clone()
+        }
+        None => fs
+            .einsums
+            .iter()
+            .map(|e| IntraLayerMapping::default_for(e, arch.noc.num_pes()))
+            .collect(),
+    };
+    // Effective parallel MACs per layer (spatial fanout, capped by the array).
+    let fanout: Vec<i64> = intra
+        .iter()
+        .map(|im| im.fanout().clamp(1, arch.compute.macs))
+        .collect();
+
+    let retention: Vec<usize> = (0..nt)
+        .map(|x| mapping.retention_for(crate::einsum::TensorId(x)))
+        .collect();
+
+    // ---- walk state ----
+    let mut avail: Vec<Region> =
+        fs.tensors.iter().map(|t| Region::empty(t.ndim())).collect();
+    // Cached retained-window needs per retention level.
+    let mut window_cache: Vec<Option<(Vec<i64>, WindowNeeds)>> = vec![None; k + 1];
+
+    let mut m = Metrics {
+        per_tensor_offchip: vec![0; nt],
+        per_tensor_occupancy: vec![0; nt],
+        per_tensor_recompute: vec![0; nt],
+        ..Metrics::default()
+    };
+    let mut pipeline = PipelineLatency::new(n);
+    let mut glb_reads = 0i64;
+    let mut glb_writes = 0i64;
+    let mut noc_hop_words = 0f64;
+    let mut rf_reads = 0i64;
+    let mut rf_writes = 0i64;
+    let mut op_counts: Vec<i64> = vec![0; n];
+    // For pipeline occupancy: producer of tile i+1 overlaps consumer of i.
+    let mut prev_occ: Vec<i64> = vec![0; nt];
+    let mut tile_lat = vec![0i64; n];
+
+    for (idx, adv) in IterWalk::new(&counts) {
+        m.iterations += 1;
+        // 1) Retention-window invalidation: a tensor retained at level j
+        //    keeps only data inside its new level-j window once any level
+        //    shallower than j advances (paper §III-D sliding retention).
+        //    Output fmaps are exempt: their avail set tracks "already
+        //    written" (outputs leave the chip exactly once; partial sums
+        //    accumulate on-chip under the Buffets assumption) and their
+        //    occupancy is the per-iteration drain tile, handled below.
+        for x in 0..nt {
+            if fs.tensors[x].kind == TensorKind::OutputFmap {
+                continue;
+            }
+            let j = retention[x];
+            if j == 0 {
+                continue; // whole tensor retained; never invalidated
+            }
+            let changed = match adv {
+                None => true,
+                Some(a) => a < j,
+            };
+            if !changed {
+                continue;
+            }
+            let prefix = &idx[0..j];
+            let needs_fresh = match &window_cache[j] {
+                Some((p, _)) if p == prefix => false,
+                _ => true,
+            };
+            if needs_fresh {
+                let needs = window_needs(fs, &tw.window(prefix));
+                window_cache[j] = Some((prefix.to_vec(), needs));
+            }
+            let (_, needs) = window_cache[j].as_ref().unwrap();
+            if !avail[x].is_empty() {
+                avail[x] = avail[x].intersect(&needs.data[x]);
+            }
+        }
+
+        // 2) Backward pass with availability subtraction.
+        let win = tw.window(&idx);
+        let out_tile_vol = fs.last().output.map.image_box(&win).volume();
+        let res = iter_backward(fs, &win, &mut avail);
+
+        // 3) Accumulate metrics.
+        for t in 0..n {
+            let ops = res.ops[t].volume();
+            op_counts[t] += ops;
+            tile_lat[t] = div_ceil(ops, fanout[t]);
+            m.sequential_compute_cycles += tile_lat[t];
+            let e = &fs.einsums[t];
+            let produced = res.fresh[e.output.tensor.0];
+            let c = tile_counts(e, &intra[t], arch, &res.ops[t], produced);
+            glb_reads += c.glb_reads;
+            glb_writes += c.glb_writes;
+            noc_hop_words += c.noc_hop_words;
+            rf_reads += c.rf_reads;
+            rf_writes += c.rf_writes;
+            // Compute energy by op kind.
+            m.energy.compute_pj +=
+                ops as f64 * energy::op_energy_pj(e.op_kind, arch.compute.mac_energy_pj);
+        }
+        pipeline.push(&tile_lat);
+
+        let mut total_occ = 0i64;
+        for x in 0..nt {
+            let fresh = res.fresh[x];
+            match fs.tensors[x].kind {
+                TensorKind::InputFmap | TensorKind::Weight => {
+                    m.offchip_reads += fresh;
+                    m.per_tensor_offchip[x] += fresh;
+                    glb_writes += fresh; // DRAM -> GLB fill
+                }
+                TensorKind::OutputFmap => {
+                    m.offchip_writes += fresh;
+                    m.per_tensor_offchip[x] += fresh;
+                    glb_reads += fresh; // GLB -> DRAM drain
+                }
+                TensorKind::Intermediate => {
+                    m.per_tensor_recompute[x] += fresh;
+                }
+            }
+            // Occupancy after this iteration's updates. Output fmaps occupy
+            // only their per-iteration drain tile (the accumulator for the
+            // current window).
+            let occ = if fs.tensors[x].kind == TensorKind::OutputFmap {
+                out_tile_vol
+            } else {
+                avail[x].volume()
+            };
+            let eff_occ = if mapping.parallelism == Parallelism::Pipeline
+                && fs.tensors[x].kind == TensorKind::Intermediate
+            {
+                // Next tile's production overlaps this tile's consumption.
+                prev_occ[x] + fresh
+            } else {
+                occ
+            };
+            m.per_tensor_occupancy[x] = m.per_tensor_occupancy[x].max(eff_occ);
+            prev_occ[x] = occ;
+            total_occ += occ;
+        }
+        m.occupancy_peak = m.occupancy_peak.max(total_occ);
+    }
+
+    // Recompute per tensor: produced minus size (intermediates only).
+    for x in 0..nt {
+        if fs.tensors[x].kind == TensorKind::Intermediate {
+            m.per_tensor_recompute[x] =
+                (m.per_tensor_recompute[x] - fs.tensors[x].size()).max(0);
+        } else {
+            m.per_tensor_recompute[x] = 0;
+        }
+    }
+    m.total_ops = op_counts.iter().sum();
+    m.recompute_ops = m.total_ops - fs.total_ops();
+
+    // Pipeline occupancy may exceed the per-iteration sum; use per-tensor
+    // peaks as the capacity requirement (conservative for pipelines).
+    let per_tensor_sum: i64 = m.per_tensor_occupancy.iter().sum();
+    m.occupancy_peak = m.occupancy_peak.max(if mapping.parallelism == Parallelism::Pipeline {
+        per_tensor_sum
+    } else {
+        m.occupancy_peak
+    });
+
+    // ---- latency ----
+    m.compute_cycles = match mapping.parallelism {
+        Parallelism::Sequential => m.sequential_compute_cycles,
+        Parallelism::Pipeline => pipeline.total(),
+    };
+    let dram_words = m.offchip_reads + m.offchip_writes;
+    let glb_words = glb_reads + glb_writes;
+    let dram_cycles = memory_cycles(dram_words, arch.dram().bandwidth_words_per_cycle);
+    let glb_cycles = memory_cycles(glb_words, arch.glb().bandwidth_words_per_cycle);
+    m.memory_cycles = dram_cycles.max(glb_cycles);
+    m.latency_cycles = m.compute_cycles.max(m.memory_cycles);
+
+    // ---- energy ----
+    m.glb_reads = glb_reads;
+    m.glb_writes = glb_writes;
+    m.noc_hop_words = noc_hop_words;
+    let dram = arch.dram();
+    let glb = arch.glb();
+    m.energy = EnergyBreakdown {
+        dram_pj: m.offchip_reads as f64 * dram.read_energy_pj
+            + m.offchip_writes as f64 * dram.write_energy_pj,
+        glb_pj: glb_reads as f64 * glb.read_energy_pj
+            + glb_writes as f64 * glb.write_energy_pj,
+        rf_pj: arch
+            .levels
+            .get(2)
+            .map(|rf| rf_reads as f64 * rf.read_energy_pj + rf_writes as f64 * rf.write_energy_pj)
+            .unwrap_or(0.0),
+        compute_pj: m.energy.compute_pj,
+        noc_pj: noc_hop_words * arch.noc.hop_energy_pj,
+    };
+
+    // ---- capacity ----
+    m.capacity_ok = match arch.glb_capacity() {
+        None => true,
+        Some(cap) => m.occupancy_peak * arch.word_bytes <= cap,
+    };
+
+    Ok(m)
+}
+
+fn div_ceil(a: i64, b: i64) -> i64 {
+    (a + b - 1) / b
+}

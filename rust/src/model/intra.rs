@@ -1,0 +1,174 @@
+//! Per-tile hardware action counts (paper §IV-B, Timeloop-style).
+//!
+//! For each processed tile we count, per tensor: reads from the GLB by the
+//! PE array (after register-level temporal reuse and NoC multicast), NoC
+//! hop-words, and register-file traffic. The intra-layer loop order is
+//! abstracted to its first-order effects (paper §III-E: intra-layer choices
+//! are supported but not the focus):
+//!
+//! * **register reuse** — an operand word fetched to a PE is reused across
+//!   iterations of tile ranks absent from its tensor's projection (we take
+//!   the largest such rank extent, capped by the register file capacity);
+//! * **multicast** — a GLB read is shared by all PEs spatialized along ranks
+//!   absent from the tensor's projection, at the cost of NoC hops.
+
+use crate::arch::Arch;
+use crate::einsum::EinsumSpec;
+use crate::mapping::IntraLayerMapping;
+use crate::poly::Region;
+
+/// Action counts for processing one tile of one layer.
+#[derive(Debug, Clone, Default)]
+pub struct IntraCounts {
+    /// Words read from the GLB by the PE array (operands).
+    pub glb_reads: i64,
+    /// Words written to the GLB by the PE array (results).
+    pub glb_writes: i64,
+    /// NoC hop·words for operand distribution.
+    pub noc_hop_words: f64,
+    /// Register-file reads/writes at the PEs.
+    pub rf_reads: i64,
+    pub rf_writes: i64,
+}
+
+impl IntraCounts {
+    pub fn add(&mut self, o: &IntraCounts) {
+        self.glb_reads += o.glb_reads;
+        self.glb_writes += o.glb_writes;
+        self.noc_hop_words += o.noc_hop_words;
+        self.rf_reads += o.rf_reads;
+        self.rf_writes += o.rf_writes;
+    }
+}
+
+/// Count actions for one layer's op region in one iteration.
+///
+/// `produced` is the number of output elements this tile writes (post
+/// retention subtraction — recomputed elements are written again).
+pub fn tile_counts(
+    einsum: &EinsumSpec,
+    intra: &IntraLayerMapping,
+    arch: &Arch,
+    ops_region: &Region,
+    produced: i64,
+) -> IntraCounts {
+    tile_counts_from(
+        einsum,
+        intra,
+        arch,
+        ops_region.volume(),
+        &ops_region.bounding_box(),
+        produced,
+    )
+}
+
+/// Action-count arithmetic from an op count and the op region's bounding
+/// box. Shared by the model (symbolic regions) and the simulator (element
+/// sets): the *semantics* of the dataflow's action counts are defined once,
+/// while each caller derives `ops`/`bbox`/`produced` through its own
+/// analysis.
+pub fn tile_counts_from(
+    einsum: &EinsumSpec,
+    intra: &IntraLayerMapping,
+    arch: &Arch,
+    ops: i64,
+    bbox: &crate::poly::IBox,
+    produced: i64,
+) -> IntraCounts {
+    let mut c = IntraCounts::default();
+    if ops == 0 {
+        return c;
+    }
+    // Register capacity in words (level 2 if present).
+    let rf_words = arch
+        .levels
+        .get(2)
+        .and_then(|l| l.capacity_bytes)
+        .map(|b| (b / arch.word_bytes).max(1))
+        .unwrap_or(1);
+
+    for acc in &einsum.inputs {
+        let proj = acc.map.referenced_dims();
+        // Temporal register reuse: largest tile extent among dims absent
+        // from the projection (1 if the RF can't hold a word, i.e. absent).
+        let mut reuse = 1i64;
+        if rf_words > 1 {
+            for d in 0..einsum.ndim() {
+                if !proj.contains(&d) {
+                    reuse = reuse.max(bbox.dims[d].len());
+                }
+            }
+            reuse = reuse.min(256).max(1);
+        }
+        // Spatial multicast: PEs along spatialized dims absent from the
+        // projection receive the same word.
+        let mut multicast = 1i64;
+        for &(d, f) in &intra.spatial {
+            if !proj.contains(&d) {
+                multicast *= f;
+            }
+        }
+        let pe_words = div_ceil(ops, reuse); // words arriving at PEs
+        let reads = div_ceil(pe_words, multicast); // GLB reads after multicast
+        c.glb_reads += reads;
+        c.noc_hop_words += reads as f64 * arch.noc.multicast_hops(multicast);
+        c.rf_writes += pe_words;
+        c.rf_reads += ops; // one operand read per op per input tensor
+    }
+    // Results: partial sums accumulate in the PE register file and are
+    // written to the GLB once per produced element.
+    c.glb_writes += produced;
+    c.rf_reads += ops; // psum read
+    c.rf_writes += ops; // psum write
+    c
+}
+
+fn div_ceil(a: i64, b: i64) -> i64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::workloads;
+    use crate::mapping::IntraLayerMapping;
+
+    #[test]
+    fn weight_reuse_reduces_glb_reads() {
+        let fs = workloads::conv_conv(28, 16);
+        let arch = Arch::generic(256);
+        let e = &fs.einsums[0];
+        let intra = IntraLayerMapping::default_for(e, arch.noc.num_pes());
+        let ops = Region::from_box(e.domain());
+        let c = tile_counts(e, &intra, &arch, &ops, e.output.map.image(&ops).volume());
+        let total_ops = e.total_ops();
+        // Two input tensors but far fewer GLB reads than 2×ops.
+        assert!(c.glb_reads < 2 * total_ops, "no reuse modeled");
+        assert!(c.glb_reads > 0);
+        // Output written once per element.
+        assert_eq!(c.glb_writes, 16 * 28 * 28);
+    }
+
+    #[test]
+    fn empty_region_counts_nothing() {
+        let fs = workloads::conv_conv(28, 16);
+        let arch = Arch::generic(256);
+        let e = &fs.einsums[0];
+        let intra = IntraLayerMapping::default_for(e, arch.noc.num_pes());
+        let c = tile_counts(e, &intra, &arch, &Region::empty(e.ndim()), 0);
+        assert_eq!(c.glb_reads, 0);
+        assert_eq!(c.rf_reads, 0);
+    }
+
+    #[test]
+    fn multicast_counts_hops() {
+        let fs = workloads::conv_conv(28, 16);
+        let arch = Arch::generic(256);
+        let e = &fs.einsums[0];
+        // Spatialize M (dim 0): input fmap (projection C,P,Q) is multicast.
+        let intra = IntraLayerMapping { spatial: vec![(0, 16)] };
+        let ops = Region::from_box(e.domain());
+        let c = tile_counts(e, &intra, &arch, &ops, 16 * 28 * 28);
+        assert!(c.noc_hop_words > 0.0);
+    }
+}

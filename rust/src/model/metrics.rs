@@ -1,0 +1,106 @@
+//! Final model outputs (paper §IV-C): latency, energy, occupancy, transfers.
+
+use crate::util::table::fmt_count;
+
+/// Energy breakdown by component (pJ).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyBreakdown {
+    pub dram_pj: f64,
+    pub glb_pj: f64,
+    pub rf_pj: f64,
+    pub compute_pj: f64,
+    pub noc_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.dram_pj + self.glb_pj + self.rf_pj + self.compute_pj + self.noc_pj
+    }
+}
+
+/// Evaluation result for one (fusion set, architecture, mapping) triple.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    // -- latency (cycles) --
+    pub latency_cycles: i64,
+    pub compute_cycles: i64,
+    pub memory_cycles: i64,
+    /// Sequential-equivalent compute latency (pipeline hides the difference;
+    /// paper Fig 12's "sequential minus hidden" analysis).
+    pub sequential_compute_cycles: i64,
+
+    // -- energy --
+    pub energy: EnergyBreakdown,
+
+    // -- transfers (elements / words) --
+    pub offchip_reads: i64,
+    pub offchip_writes: i64,
+    pub glb_reads: i64,
+    pub glb_writes: i64,
+    pub noc_hop_words: f64,
+    /// Off-chip traffic per tensor (reads for inputs/weights, writes for the
+    /// output fmap; zero for intermediates unless spilled).
+    pub per_tensor_offchip: Vec<i64>,
+
+    // -- occupancy (elements) --
+    /// Peak simultaneous GLB occupancy across all tensors.
+    pub occupancy_peak: i64,
+    /// Peak occupancy per tensor (the paper's capacity breakdowns).
+    pub per_tensor_occupancy: Vec<i64>,
+    /// Whether the peak fits the architecture's GLB capacity.
+    pub capacity_ok: bool,
+
+    // -- computation --
+    /// Total executed ops (≥ algorithmic due to recomputation).
+    pub total_ops: i64,
+    /// Executed minus algorithmic ops.
+    pub recompute_ops: i64,
+    /// Recomputed elements per tensor (intermediates only).
+    pub per_tensor_recompute: Vec<i64>,
+
+    /// Number of inter-layer iterations walked.
+    pub iterations: i64,
+}
+
+impl Metrics {
+    /// Total off-chip traffic in elements.
+    pub fn offchip_total(&self) -> i64 {
+        self.offchip_reads + self.offchip_writes
+    }
+
+    /// Occupancy in bytes for a given word size.
+    pub fn occupancy_bytes(&self, word_bytes: i64) -> i64 {
+        self.occupancy_peak * word_bytes
+    }
+
+    pub fn energy_uj(&self) -> f64 {
+        self.energy.total_pj() / 1e6
+    }
+
+    /// Recompute overhead as a fraction of algorithmic ops.
+    pub fn recompute_fraction(&self) -> f64 {
+        let alg = self.total_ops - self.recompute_ops;
+        if alg == 0 {
+            0.0
+        } else {
+            self.recompute_ops as f64 / alg as f64
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "latency={}cyc (comp={}, mem={}) energy={:.2}uJ offchip={}r+{}w occ={} ops={} (+{} recomp) it={}",
+            fmt_count(self.latency_cycles),
+            fmt_count(self.compute_cycles),
+            fmt_count(self.memory_cycles),
+            self.energy_uj(),
+            fmt_count(self.offchip_reads),
+            fmt_count(self.offchip_writes),
+            fmt_count(self.occupancy_peak),
+            fmt_count(self.total_ops),
+            fmt_count(self.recompute_ops),
+            self.iterations,
+        )
+    }
+}

@@ -1,0 +1,34 @@
+//! The LoopTree analytical model (paper §IV).
+//!
+//! Given a fusion set, an architecture, and an inter-layer mapping, the model
+//! computes latency, energy, buffer occupancy, and off-chip transfers by
+//! walking the inter-layer tile schedule *algebraically*: every quantity is
+//! derived from exact rectilinear-region operations on operation and data
+//! tiles (the paper's polyhedral analysis), never by enumerating individual
+//! operations. The three analysis steps mirror the paper's Fig 9:
+//!
+//! 1. **Tile-shape analysis** ([`backward`], [`walk`]) — from the last
+//!    layer's mapped tile, infer every layer's operation tiles and every
+//!    tensor's data tiles through data dependencies, subtracting what
+//!    retention keeps available (paper Fig 10). Recomputation and refetch
+//!    fall out of the same subtraction (paper §III-D).
+//! 2. **Per-tile action counts** ([`intra`]) — reads/writes per buffer
+//!    level, MACs, NoC hops for each processed tile (Timeloop-style).
+//! 3. **Final metrics** ([`latency`], [`energy`], [`metrics`]) — sequential
+//!    or pipelined latency (hidden-latency analysis, paper Fig 12), energy
+//!    from accelergy-lite action costs, peak occupancy, off-chip traffic.
+
+mod backward;
+mod engine;
+mod intra;
+mod latency;
+mod metrics;
+mod walk;
+
+pub use engine::{evaluate, EvalOptions};
+pub use intra::{tile_counts_from, IntraCounts};
+pub use metrics::{EnergyBreakdown, Metrics};
+pub use walk::{IterWalk, TileWindows};
+
+#[cfg(test)]
+mod tests;

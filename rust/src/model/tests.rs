@@ -1,0 +1,294 @@
+use super::*;
+use crate::arch::Arch;
+use crate::einsum::{workloads, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+
+fn eval(
+    fs: &crate::einsum::FusionSet,
+    mapping: &InterLayerMapping,
+) -> Metrics {
+    let arch = Arch::generic(100_000_000); // effectively unbounded
+    evaluate(fs, &arch, mapping, &EvalOptions::default()).unwrap()
+}
+
+fn p2_mapping(fs: &crate::einsum::FusionSet, tile: i64) -> InterLayerMapping {
+    let p2 = fs.last().rank_index(&format!("P{}", fs.num_layers())).unwrap();
+    InterLayerMapping::tiled(vec![Partition { dim: p2, tile }], Parallelism::Sequential)
+}
+
+#[test]
+fn untiled_fusion_is_algmin_no_recompute() {
+    let fs = workloads::conv_conv(14, 8);
+    let m = eval(&fs, &InterLayerMapping::untiled(Parallelism::Sequential));
+    assert_eq!(m.recompute_ops, 0);
+    assert_eq!(m.total_ops, fs.total_ops());
+    assert_eq!(m.offchip_total(), fs.algmin_offchip_elems());
+    // Whole intermediate retained: occupancy at least Fmap2 size.
+    let fmap2 = &fs.tensors[2];
+    assert_eq!(fmap2.kind, TensorKind::Intermediate);
+    assert!(m.per_tensor_occupancy[2] >= fmap2.size());
+}
+
+#[test]
+fn row_tiling_retained_is_algmin_with_small_buffers() {
+    let fs = workloads::conv_conv(28, 8);
+    let m = eval(&fs, &p2_mapping(&fs, 4));
+    // Sliding retention across P2: no recompute, no refetch.
+    assert_eq!(m.recompute_ops, 0, "unexpected recompute");
+    assert_eq!(m.offchip_total(), fs.algmin_offchip_elems());
+    // But intermediate occupancy is a band, much smaller than the fmap.
+    let fmap2 = &fs.tensors[2];
+    assert!(m.per_tensor_occupancy[2] < fmap2.size() / 2);
+    // Output written exactly once.
+    let out = fs.tensors_of_kind(TensorKind::OutputFmap)[0];
+    assert_eq!(m.per_tensor_offchip[out.0], fs.tensor(out).size());
+}
+
+#[test]
+fn recompute_appears_when_retention_too_deep() {
+    // P2,Q2 tiling; retain the intermediate only at level 2 (small box):
+    // vertical halo rows are recomputed on every P2 advance (paper Fig 8).
+    let fs = workloads::conv_conv(28, 8);
+    let last = fs.last();
+    let p2 = last.rank_index("P2").unwrap();
+    let q2 = last.rank_index("Q2").unwrap();
+    let inter = TensorId(2);
+    let deep = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 4 }, Partition { dim: q2, tile: 4 }],
+        Parallelism::Sequential,
+    )
+    .with_retention(inter, 2);
+    let shallow = InterLayerMapping::tiled(
+        vec![Partition { dim: p2, tile: 4 }, Partition { dim: q2, tile: 4 }],
+        Parallelism::Sequential,
+    )
+    .with_retention(inter, 1);
+
+    let md = eval(&fs, &deep);
+    let ms = eval(&fs, &shallow);
+    assert!(md.recompute_ops > 0, "deep retention must recompute halos");
+    assert_eq!(ms.recompute_ops, 0, "band retention must not recompute");
+    // The trade-off: deep retention holds less of the intermediate.
+    assert!(md.per_tensor_occupancy[inter.0] < ms.per_tensor_occupancy[inter.0]);
+}
+
+#[test]
+fn fc_fusion_has_no_retention_recompute_choice() {
+    // Paper §VI-C: fc+fc intermediate tiles never overlap, so recompute = 0
+    // for every retention level.
+    let fs = workloads::fc_fc(64, 128);
+    let last = fs.last();
+    let m2 = last.rank_index("M2").unwrap();
+    let inter = TensorId(2);
+    for lvl in [0usize, 1] {
+        let m = InterLayerMapping::tiled(
+            vec![Partition { dim: m2, tile: 16 }],
+            Parallelism::Sequential,
+        )
+        .with_retention(inter, lvl);
+        let r = eval(&fs, &m);
+        assert_eq!(r.recompute_ops, 0, "retention level {lvl}");
+    }
+}
+
+#[test]
+fn channel_partitioning_full_input_footprint() {
+    // Partitioning C2 (= M1) alone: every tile needs the whole Fmap1 (paper
+    // Fig 3(b) / Table III "Full" reuse), so any retention level retains the
+    // entirety of Fmap1 — it is fetched once but occupies its full size.
+    let fs = workloads::conv_conv(14, 16);
+    let c2 = fs.last().rank_index("C2").unwrap();
+    let fmap1 = TensorId(0);
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: c2, tile: 4 }],
+        Parallelism::Sequential,
+    )
+    .with_retention(fmap1, 1);
+    let r = eval(&fs, &m);
+    assert_eq!(r.per_tensor_offchip[fmap1.0], fs.tensor(fmap1).size());
+    assert!(r.per_tensor_occupancy[fmap1.0] >= fs.tensor(fmap1).size());
+}
+
+#[test]
+fn outer_rank_revisit_refetches_unretained_input() {
+    // Schedule C2,P2: row bands of Fmap1 are re-needed on every C2
+    // iteration. Retained only at level 2 (the band), each C2 advance drops
+    // the previous rows → Fmap1 is refetched once per C2 tile (paper §VI-B:
+    // "if we do not want to refetch ... we must keep those tensors
+    // on-chip").
+    let fs = workloads::conv_conv(14, 16);
+    let last = fs.last();
+    let c2 = last.rank_index("C2").unwrap();
+    let p2 = last.rank_index("P2").unwrap();
+    let fmap1 = TensorId(0);
+    let tiles = 4i64;
+    let parts = vec![
+        Partition { dim: c2, tile: 16 / tiles },
+        Partition { dim: p2, tile: 4 },
+    ];
+
+    let refetch = InterLayerMapping::tiled(parts.clone(), Parallelism::Sequential)
+        .with_retention(fmap1, 2);
+    let r = eval(&fs, &refetch);
+    assert_eq!(
+        r.per_tensor_offchip[fmap1.0],
+        fs.tensor(fmap1).size() * tiles
+    );
+
+    // Retained at level 1 (the C2 tile = full Fmap1): fetched once.
+    let keep = InterLayerMapping::tiled(parts, Parallelism::Sequential)
+        .with_retention(fmap1, 1);
+    let k = eval(&fs, &keep);
+    assert_eq!(k.per_tensor_offchip[fmap1.0], fs.tensor(fmap1).size());
+    assert!(k.per_tensor_occupancy[fmap1.0] >= fs.tensor(fmap1).size());
+    // The refetching mapping uses less Fmap1 buffer space.
+    assert!(r.per_tensor_occupancy[fmap1.0] < k.per_tensor_occupancy[fmap1.0]);
+}
+
+#[test]
+fn weights_fully_reused_under_row_partitioning() {
+    // P2 partitioning: filters are needed by every tile; retained at any
+    // level they're fetched once (the window footprint is the full filter).
+    let fs = workloads::conv_conv(28, 8);
+    let m = eval(&fs, &p2_mapping(&fs, 4));
+    for (i, t) in fs.tensors.iter().enumerate() {
+        if t.kind == TensorKind::Weight {
+            assert_eq!(m.per_tensor_offchip[i], t.size(), "weight {}", t.name);
+            assert!(m.per_tensor_occupancy[i] >= t.size());
+        }
+    }
+}
+
+#[test]
+fn pipeline_latency_below_sequential() {
+    let fs = workloads::conv_conv(28, 8);
+    let p2 = fs.last().rank_index("P2").unwrap();
+    let parts = vec![Partition { dim: p2, tile: 2 }];
+    let seq = eval(
+        &fs,
+        &InterLayerMapping::tiled(parts.clone(), Parallelism::Sequential),
+    );
+    let pipe = eval(&fs, &InterLayerMapping::tiled(parts, Parallelism::Pipeline));
+    assert!(pipe.compute_cycles < seq.compute_cycles);
+    // Pipelining does not change work or transfers.
+    assert_eq!(pipe.total_ops, seq.total_ops);
+    assert_eq!(pipe.offchip_total(), seq.offchip_total());
+    // But needs more simultaneous buffering for intermediates.
+    assert!(pipe.occupancy_peak >= seq.occupancy_peak);
+}
+
+#[test]
+fn capacity_check_against_arch() {
+    let fs = workloads::conv_conv(28, 32);
+    let mapping = InterLayerMapping::untiled(Parallelism::Sequential);
+    let small = Arch::generic(1); // 1 KiB GLB
+    let r = evaluate(&fs, &small, &mapping, &EvalOptions::default()).unwrap();
+    assert!(!r.capacity_ok);
+    let big = Arch::generic(1 << 20);
+    let r = evaluate(&fs, &big, &mapping, &EvalOptions::default()).unwrap();
+    assert!(r.capacity_ok);
+}
+
+#[test]
+fn three_layer_compounding_recompute() {
+    // Paper §VI-E: recomputing a later fmap compounds recomputation in
+    // earlier layers.
+    let fs = workloads::conv_conv_conv(20, 4);
+    let last = fs.last();
+    let p3 = last.rank_index("P3").unwrap();
+    let fmap2 = TensorId(2);
+    let fmap3 = TensorId(4);
+    assert_eq!(fs.tensor(fmap2).name, "Fmap2");
+    assert_eq!(fs.tensor(fmap3).name, "Fmap3");
+    let parts = vec![Partition { dim: p3, tile: 2 }];
+
+    // Retain both: no recompute.
+    let rr = eval(
+        &fs,
+        &InterLayerMapping::tiled(parts.clone(), Parallelism::Sequential),
+    );
+    assert_eq!(rr.recompute_ops, 0);
+
+    // "Recompute X" = retain X only at the deep P3,Q3 level so its vertical
+    // halo is recomputed on every P3 advance. Compare the four per-fmap
+    // combinations (paper Fig 17's legend).
+    let q3 = last.rank_index("Q3").unwrap();
+    let parts2 = vec![
+        Partition { dim: p3, tile: 2 },
+        Partition { dim: q3, tile: 4 },
+    ];
+    let mk = |l2: usize, l3: usize| {
+        eval(
+            &fs,
+            &InterLayerMapping::tiled(parts2.clone(), Parallelism::Sequential)
+                .with_retention(fmap2, l2)
+                .with_retention(fmap3, l3),
+        )
+    };
+    let retain_both = mk(1, 1);
+    let rec_f2 = mk(2, 1);
+    let rec_f3 = mk(1, 2);
+    let rec_both = mk(2, 2);
+    assert_eq!(retain_both.recompute_ops, 0);
+    assert!(rec_f2.recompute_ops > 0 && rec_f3.recompute_ops > 0);
+    // Per-fmap choices genuinely differ (the point of Fig 17).
+    assert_ne!(rec_f2.recompute_ops, rec_f3.recompute_ops);
+    // Compounding (paper §VI-E): recomputing *both* costs more than the sum
+    // of the individual recomputations — recomputing Fmap3's halo demands
+    // Fmap2 inputs that are themselves no longer retained.
+    assert!(
+        rec_both.recompute_ops > rec_f2.recompute_ops + rec_f3.recompute_ops,
+        "no compounding: both={} f2={} f3={}",
+        rec_both.recompute_ops,
+        rec_f2.recompute_ops,
+        rec_f3.recompute_ops
+    );
+    // And capacity: recomputing trades buffer space for ops.
+    assert!(
+        rec_both.per_tensor_occupancy[fmap2.0] <= retain_both.per_tensor_occupancy[fmap2.0]
+    );
+}
+
+#[test]
+fn energy_breakdown_sums() {
+    let fs = workloads::conv_conv(14, 8);
+    let m = eval(&fs, &p2_mapping(&fs, 4));
+    let b = &m.energy;
+    assert!(b.dram_pj > 0.0 && b.glb_pj > 0.0 && b.compute_pj > 0.0);
+    assert!((b.total_pj() - (b.dram_pj + b.glb_pj + b.rf_pj + b.compute_pj + b.noc_pj)).abs() < 1e-6);
+}
+
+#[test]
+fn memory_bound_when_bandwidth_tiny() {
+    let fs = workloads::conv_conv(14, 8);
+    let mut arch = Arch::generic(1 << 20);
+    arch.levels[0].bandwidth_words_per_cycle = 0.01;
+    let mapping = p2_mapping(&fs, 4);
+    let m = evaluate(&fs, &arch, &mapping, &EvalOptions::default()).unwrap();
+    assert!(m.memory_cycles > m.compute_cycles);
+    assert_eq!(m.latency_cycles, m.memory_cycles);
+}
+
+#[test]
+fn ragged_tiles_conserve_work() {
+    let fs = workloads::conv_conv(27, 8); // P2 = 25, tile 4 -> ragged
+    let m = eval(&fs, &p2_mapping(&fs, 4));
+    assert_eq!(m.total_ops, fs.total_ops());
+    assert_eq!(m.offchip_total(), fs.algmin_offchip_elems());
+}
+
+#[test]
+fn attention_workload_evaluates() {
+    let fs = workloads::self_attention(2, 4, 64, 32);
+    let last = fs.last();
+    let mrank = last.rank_index("M2").unwrap();
+    let m = eval(
+        &fs,
+        &InterLayerMapping::tiled(
+            vec![Partition { dim: mrank, tile: 16 }],
+            Parallelism::Sequential,
+        ),
+    );
+    assert_eq!(m.recompute_ops, 0); // score tiles don't overlap along M
+    assert_eq!(m.offchip_total(), fs.algmin_offchip_elems());
+}

@@ -1,0 +1,198 @@
+//! Inter-layer tile iteration: windows and lexicographic walks.
+//!
+//! The mapping partitions ranks of the last Einsum into a k-level loop nest.
+//! [`TileWindows`] turns an iteration index (or index prefix) into the
+//! operation-space *window* of the last layer — the box of last-layer
+//! operations processed inside that (partial) iteration. [`IterWalk`]
+//! enumerates full indices in schedule order, reporting the advancing level
+//! (the deepest loop that incremented), which drives retention updates.
+
+use crate::einsum::FusionSet;
+use crate::mapping::InterLayerMapping;
+use crate::poly::{IBox, Interval};
+
+/// Computes last-layer operation windows for iteration prefixes.
+#[derive(Debug, Clone)]
+pub struct TileWindows {
+    /// Full iteration domain of the last Einsum.
+    full: IBox,
+    /// `(dim, tile)` per schedule level.
+    parts: Vec<(usize, i64)>,
+    /// Iterations per level.
+    counts: Vec<i64>,
+}
+
+impl TileWindows {
+    pub fn new(fs: &FusionSet, mapping: &InterLayerMapping) -> Self {
+        let full = fs.last().domain();
+        let parts: Vec<(usize, i64)> =
+            mapping.partitions.iter().map(|p| (p.dim, p.tile)).collect();
+        let counts = mapping.level_counts(fs);
+        TileWindows { full, parts, counts }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn counts(&self) -> &[i64] {
+        &self.counts
+    }
+
+    pub fn total_iterations(&self) -> i64 {
+        self.counts.iter().product()
+    }
+
+    /// The last-layer op window after fixing the first `prefix.len()` levels
+    /// at the given indices. Deeper levels stay at their full (parent-window)
+    /// extent. A zero-length prefix yields the full domain.
+    ///
+    /// A repeated rank narrows its own parent window (hierarchical
+    /// re-partitioning); the last tile at each level is clipped (ragged
+    /// tiles, paper §III-E "imperfect factorization").
+    pub fn window(&self, prefix: &[i64]) -> IBox {
+        debug_assert!(prefix.len() <= self.parts.len());
+        let mut win = self.full.clone();
+        for (lvl, &idx) in prefix.iter().enumerate() {
+            let (dim, tile) = self.parts[lvl];
+            let cur = win.dims[dim];
+            let lo = cur.lo + idx * tile;
+            let hi = (lo + tile).min(cur.hi);
+            debug_assert!(lo < cur.hi, "window index {idx} out of range at level {lvl}");
+            win.dims[dim] = Interval::new(lo, hi);
+        }
+        win
+    }
+}
+
+/// Lexicographic walk over the k-level iteration space.
+///
+/// Yields `(index, advancing_level)` where `advancing_level` is the deepest
+/// level whose counter incremented to reach this index (`None` for the very
+/// first iteration). All levels deeper than the advancing level have reset
+/// to zero.
+pub struct IterWalk {
+    counts: Vec<i64>,
+    idx: Vec<i64>,
+    started: bool,
+    done: bool,
+}
+
+impl IterWalk {
+    pub fn new(counts: &[i64]) -> Self {
+        IterWalk {
+            counts: counts.to_vec(),
+            idx: vec![0; counts.len()],
+            started: false,
+            done: counts.iter().any(|&c| c <= 0),
+        }
+    }
+}
+
+impl Iterator for IterWalk {
+    type Item = (Vec<i64>, Option<usize>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        if !self.started {
+            self.started = true;
+            if self.counts.is_empty() {
+                self.done = true;
+                return Some((vec![], None));
+            }
+            return Some((self.idx.clone(), None));
+        }
+        // Increment like an odometer from the innermost level.
+        let k = self.counts.len();
+        let mut lvl = k;
+        loop {
+            if lvl == 0 {
+                self.done = true;
+                return None;
+            }
+            lvl -= 1;
+            self.idx[lvl] += 1;
+            if self.idx[lvl] < self.counts[lvl] {
+                break;
+            }
+            self.idx[lvl] = 0;
+        }
+        Some((self.idx.clone(), Some(lvl)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::workloads;
+    use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+
+    #[test]
+    fn walk_order_and_advancing_levels() {
+        let w: Vec<_> = IterWalk::new(&[2, 3]).collect();
+        let idxs: Vec<Vec<i64>> = w.iter().map(|(i, _)| i.clone()).collect();
+        assert_eq!(
+            idxs,
+            vec![
+                vec![0, 0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1, 0],
+                vec![1, 1],
+                vec![1, 2]
+            ]
+        );
+        let levels: Vec<Option<usize>> = w.iter().map(|(_, l)| *l).collect();
+        assert_eq!(
+            levels,
+            vec![None, Some(1), Some(1), Some(0), Some(1), Some(1)]
+        );
+    }
+
+    #[test]
+    fn walk_empty_levels_single_iteration() {
+        let w: Vec<_> = IterWalk::new(&[]).collect();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0], (vec![], None));
+    }
+
+    #[test]
+    fn windows_tile_and_clip() {
+        let fs = workloads::conv_conv(14, 8); // P2 = Q2 = 12
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let m = InterLayerMapping::tiled(
+            vec![Partition { dim: p2, tile: 5 }],
+            Parallelism::Sequential,
+        );
+        let tw = TileWindows::new(&fs, &m);
+        assert_eq!(tw.counts(), &[3]);
+        let w0 = tw.window(&[0]);
+        let w2 = tw.window(&[2]);
+        assert_eq!(w0.dims[p2], crate::poly::Interval::new(0, 5));
+        assert_eq!(w2.dims[p2], crate::poly::Interval::new(10, 12)); // ragged
+        // Unpartitioned dims stay full.
+        assert_eq!(w0.dims[0], crate::poly::Interval::new(0, 8)); // M2
+        // Empty prefix = full domain.
+        assert_eq!(tw.window(&[]), fs.last().domain());
+    }
+
+    #[test]
+    fn repartitioned_windows_nest() {
+        let fs = workloads::conv_conv(30, 8); // P2 = 28
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let m = InterLayerMapping::tiled(
+            vec![
+                Partition { dim: p2, tile: 14 },
+                Partition { dim: p2, tile: 5 },
+            ],
+            Parallelism::Sequential,
+        );
+        let tw = TileWindows::new(&fs, &m);
+        assert_eq!(tw.counts(), &[2, 3]);
+        // Second outer window, last inner tile: [14+10, min(14+15, 28)) = [24, 28).
+        let w = tw.window(&[1, 2]);
+        assert_eq!(w.dims[p2], crate::poly::Interval::new(24, 28));
+    }
+}

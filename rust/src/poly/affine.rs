@@ -1,0 +1,211 @@
+//! Affine expressions and maps over a rank (iteration) space.
+//!
+//! An [`AffineExpr`] is `Σ coeff_i · rank_i + offset` where `rank_i` indexes a
+//! dimension of the iteration space. An [`AffineMap`] is one expression per
+//! output (tensor) dimension. Images of boxes under such maps are boxes
+//! (coefficients are per-dimension independent), which is what makes the
+//! analysis in `model/` exact and fast.
+
+use super::{IBox, Interval, Region};
+
+/// `Σ coeff·rank + offset` over the dims of an iteration space.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AffineExpr {
+    /// `(iteration-space dim index, coefficient)`; coefficients are nonzero.
+    pub terms: Vec<(usize, i64)>,
+    pub offset: i64,
+}
+
+impl AffineExpr {
+    /// The expression `dim` (a bare index, coefficient 1).
+    pub fn var(dim: usize) -> Self {
+        AffineExpr { terms: vec![(dim, 1)], offset: 0 }
+    }
+
+    /// `coeff * dim`.
+    pub fn scaled(dim: usize, coeff: i64) -> Self {
+        assert!(coeff != 0, "zero coefficient");
+        AffineExpr { terms: vec![(dim, coeff)], offset: 0 }
+    }
+
+    /// A constant expression.
+    pub fn constant(c: i64) -> Self {
+        AffineExpr { terms: vec![], offset: c }
+    }
+
+    /// `a*x + b*y` (e.g. the sliding-window index `p + r`, or strided `2p + r`).
+    pub fn sum(a: (usize, i64), b: (usize, i64)) -> Self {
+        assert!(a.0 != b.0, "duplicate dim in affine sum");
+        AffineExpr { terms: vec![a, b], offset: 0 }
+    }
+
+    pub fn with_offset(mut self, offset: i64) -> Self {
+        self.offset += offset;
+        self
+    }
+
+    /// Is this expression a bare `1·dim + 0`? Returns the dim if so.
+    pub fn as_identity(&self) -> Option<usize> {
+        if self.offset == 0 && self.terms.len() == 1 && self.terms[0].1 == 1 {
+            Some(self.terms[0].0)
+        } else {
+            None
+        }
+    }
+
+    /// Dims referenced by this expression.
+    pub fn dims(&self) -> impl Iterator<Item = usize> + '_ {
+        self.terms.iter().map(|&(d, _)| d)
+    }
+
+    /// Exact range of the expression over a box of the iteration space.
+    ///
+    /// The image of a box under a separable affine form is an interval: each
+    /// term contributes `coeff · [lo, hi)` independently. (This is the image
+    /// of the *box*, i.e. every integer in the returned interval is attained
+    /// whenever some coefficient is ±1; for strided accesses with |coeff|>1
+    /// and no unit-coefficient companion term the interval over-approximates
+    /// the attained set — the standard dense-footprint convention, which
+    /// matches how strided conv halos are counted in Timeloop.)
+    pub fn range_over(&self, domain: &IBox) -> Interval {
+        if domain.is_empty() {
+            return Interval::empty();
+        }
+        let mut lo = self.offset;
+        let mut hi = self.offset; // max attained value (inclusive)
+        for &(dim, coeff) in &self.terms {
+            let iv = domain.dims[dim];
+            debug_assert!(!iv.is_empty());
+            if coeff >= 0 {
+                lo += coeff * iv.lo;
+                hi += coeff * (iv.hi - 1);
+            } else {
+                lo += coeff * (iv.hi - 1);
+                hi += coeff * iv.lo;
+            }
+        }
+        Interval::new(lo, hi + 1)
+    }
+}
+
+impl std::fmt::Display for AffineExpr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for &(d, c) in &self.terms {
+            if !first {
+                write!(f, "+")?;
+            }
+            if c == 1 {
+                write!(f, "d{d}")?;
+            } else {
+                write!(f, "{c}·d{d}")?;
+            }
+            first = false;
+        }
+        if self.offset != 0 || first {
+            if !first {
+                write!(f, "+")?;
+            }
+            write!(f, "{}", self.offset)?;
+        }
+        Ok(())
+    }
+}
+
+/// One affine expression per output dimension: a map from an iteration space
+/// to a tensor's coordinate space.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AffineMap {
+    pub exprs: Vec<AffineExpr>,
+}
+
+impl AffineMap {
+    pub fn new(exprs: Vec<AffineExpr>) -> Self {
+        AffineMap { exprs }
+    }
+
+    /// The identity map on `dims` (dim order gives output dim order).
+    pub fn identity(dims: &[usize]) -> Self {
+        AffineMap {
+            exprs: dims.iter().map(|&d| AffineExpr::var(d)).collect(),
+        }
+    }
+
+    pub fn out_ndim(&self) -> usize {
+        self.exprs.len()
+    }
+
+    /// Image of an iteration-space box: the (box) data footprint it touches.
+    pub fn image_box(&self, domain: &IBox) -> IBox {
+        if domain.is_empty() {
+            return IBox::empty(self.out_ndim());
+        }
+        IBox::new(self.exprs.iter().map(|e| e.range_over(domain)).collect())
+    }
+
+    /// Image of a region (union of per-box images; re-disjointified).
+    pub fn image(&self, domain: &Region) -> Region {
+        let mut out = Region::empty(self.out_ndim());
+        for b in domain.boxes() {
+            out.union_box(&self.image_box(b));
+        }
+        out
+    }
+
+    /// Preimage of a data box for an *identity-per-dimension* map: the
+    /// iteration sub-box (over the dims this map mentions) whose image is the
+    /// data box. `full_domain` supplies the extent of unmentioned dims.
+    ///
+    /// Only identity output accesses need preimages in the LoopTree analysis
+    /// (the operations required to produce a piece of an output tensor), and
+    /// output tensors in our Einsums are always indexed by bare ranks — the
+    /// assertion enforces this documented restriction.
+    pub fn preimage_identity_box(&self, data: &IBox, full_domain: &IBox) -> IBox {
+        debug_assert_eq!(data.ndim(), self.out_ndim());
+        let mut out = full_domain.clone();
+        if data.is_empty() {
+            return IBox::empty(full_domain.ndim());
+        }
+        for (expr, iv) in self.exprs.iter().zip(&data.dims) {
+            let dim = expr
+                .as_identity()
+                .expect("preimage requires identity output access");
+            out.dims[dim] = out.dims[dim].intersect(iv);
+        }
+        if out.is_empty() {
+            IBox::empty(full_domain.ndim())
+        } else {
+            out
+        }
+    }
+
+    /// Preimage of a data region under an identity-per-dim map.
+    pub fn preimage_identity(&self, data: &Region, full_domain: &IBox) -> Region {
+        let mut out = Region::empty(full_domain.ndim());
+        for b in data.boxes() {
+            out.union_box(&self.preimage_identity_box(b, full_domain));
+        }
+        out
+    }
+
+    /// Dims of the iteration space mentioned by this map.
+    pub fn referenced_dims(&self) -> Vec<usize> {
+        let mut dims: Vec<usize> = self.exprs.iter().flat_map(|e| e.dims()).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims
+    }
+}
+
+impl std::fmt::Display for AffineMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, e) in self.exprs.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{e}")?;
+        }
+        write!(f, "]")
+    }
+}

@@ -1,0 +1,161 @@
+//! Axis-aligned integer boxes (products of intervals).
+
+use super::Interval;
+
+/// An axis-aligned box: the Cartesian product of one interval per dimension.
+/// The box is empty iff any dimension's interval is empty.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct IBox {
+    pub dims: Vec<Interval>,
+}
+
+impl IBox {
+    pub fn new(dims: Vec<Interval>) -> Self {
+        IBox { dims }
+    }
+
+    /// A box from `(lo, hi)` pairs.
+    pub fn from_bounds(bounds: &[(i64, i64)]) -> Self {
+        IBox {
+            dims: bounds.iter().map(|&(lo, hi)| Interval::new(lo, hi)).collect(),
+        }
+    }
+
+    /// The canonical empty box of dimension `ndim`.
+    pub fn empty(ndim: usize) -> Self {
+        IBox {
+            dims: vec![Interval::empty(); ndim],
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dims.iter().any(|d| d.is_empty())
+    }
+
+    /// Number of integer points in the box.
+    pub fn volume(&self) -> i64 {
+        if self.is_empty() {
+            return 0;
+        }
+        self.dims.iter().map(|d| d.len()).product()
+    }
+
+    /// Pointwise intersection. Empty if disjoint in any dimension.
+    pub fn intersect(&self, other: &IBox) -> IBox {
+        debug_assert_eq!(self.ndim(), other.ndim());
+        let dims: Vec<Interval> = self
+            .dims
+            .iter()
+            .zip(&other.dims)
+            .map(|(a, b)| a.intersect(b))
+            .collect();
+        if dims.iter().any(|d| d.is_empty()) {
+            IBox::empty(self.ndim())
+        } else {
+            IBox { dims }
+        }
+    }
+
+    pub fn overlaps(&self, other: &IBox) -> bool {
+        !self.intersect(other).is_empty()
+    }
+
+    /// `other ⊆ self`.
+    pub fn contains_box(&self, other: &IBox) -> bool {
+        if other.is_empty() {
+            return true;
+        }
+        self.dims
+            .iter()
+            .zip(&other.dims)
+            .all(|(a, b)| a.contains_interval(b))
+    }
+
+    /// Smallest box containing both.
+    pub fn hull(&self, other: &IBox) -> IBox {
+        if self.is_empty() {
+            return other.clone();
+        }
+        if other.is_empty() {
+            return self.clone();
+        }
+        IBox {
+            dims: self
+                .dims
+                .iter()
+                .zip(&other.dims)
+                .map(|(a, b)| a.hull(b))
+                .collect(),
+        }
+    }
+
+    /// Set difference `self − other` as a list of disjoint boxes.
+    ///
+    /// Standard slab decomposition: walk the dimensions; at each dimension,
+    /// peel off the parts of `self` that lie below/above `other`'s extent in
+    /// that dimension (each peel is a disjoint box), then narrow `self` to the
+    /// overlapping slab and continue. Produces at most `2 * ndim` boxes.
+    pub fn subtract(&self, other: &IBox) -> Vec<IBox> {
+        if self.is_empty() {
+            return vec![];
+        }
+        let inter = self.intersect(other);
+        if inter.is_empty() {
+            return vec![self.clone()];
+        }
+        if other.contains_box(self) {
+            return vec![];
+        }
+        let mut out = Vec::new();
+        let mut rest = self.clone();
+        for d in 0..self.ndim() {
+            let s = rest.dims[d];
+            let o = inter.dims[d];
+            // Part of `rest` below `other` in dim d.
+            if s.lo < o.lo {
+                let mut b = rest.clone();
+                b.dims[d] = Interval::new(s.lo, o.lo);
+                out.push(b);
+            }
+            // Part of `rest` above `other` in dim d.
+            if o.hi < s.hi {
+                let mut b = rest.clone();
+                b.dims[d] = Interval::new(o.hi, s.hi);
+                out.push(b);
+            }
+            // Narrow to the overlapping slab and continue.
+            rest.dims[d] = Interval::new(s.lo.max(o.lo), s.hi.min(o.hi));
+        }
+        out
+    }
+
+    /// Translate by a per-dimension offset.
+    pub fn shift(&self, offsets: &[i64]) -> IBox {
+        debug_assert_eq!(self.ndim(), offsets.len());
+        IBox {
+            dims: self
+                .dims
+                .iter()
+                .zip(offsets)
+                .map(|(d, &o)| d.shift(o))
+                .collect(),
+        }
+    }
+}
+
+impl std::fmt::Display for IBox {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, "×")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, ")")
+    }
+}

@@ -1,0 +1,80 @@
+//! Half-open integer intervals `[lo, hi)`.
+
+/// A half-open integer interval `[lo, hi)`. Empty iff `hi <= lo`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    /// `[lo, hi)`.
+    pub fn new(lo: i64, hi: i64) -> Self {
+        Interval { lo, hi }
+    }
+
+    /// The canonical empty interval `[0, 0)`.
+    pub fn empty() -> Self {
+        Interval { lo: 0, hi: 0 }
+    }
+
+    /// `[0, n)`.
+    pub fn upto(n: i64) -> Self {
+        Interval { lo: 0, hi: n }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi <= self.lo
+    }
+
+    /// Number of integers in the interval (0 if empty).
+    pub fn len(&self) -> i64 {
+        (self.hi - self.lo).max(0)
+    }
+
+    pub fn contains(&self, x: i64) -> bool {
+        self.lo <= x && x < self.hi
+    }
+
+    /// `other` is a subset of `self` (empty sets are subsets of everything).
+    pub fn contains_interval(&self, other: &Interval) -> bool {
+        other.is_empty() || (self.lo <= other.lo && other.hi <= self.hi)
+    }
+
+    /// Set intersection; result may be empty.
+    pub fn intersect(&self, other: &Interval) -> Interval {
+        let i = Interval::new(self.lo.max(other.lo), self.hi.min(other.hi));
+        if i.is_empty() {
+            Interval::empty()
+        } else {
+            i
+        }
+    }
+
+    /// Smallest interval containing both (union hull).
+    pub fn hull(&self, other: &Interval) -> Interval {
+        if self.is_empty() {
+            return *other;
+        }
+        if other.is_empty() {
+            return *self;
+        }
+        Interval::new(self.lo.min(other.lo), self.hi.max(other.hi))
+    }
+
+    /// Translate by `d`.
+    pub fn shift(&self, d: i64) -> Interval {
+        Interval::new(self.lo + d, self.hi + d)
+    }
+
+    /// Do the two intervals intersect?
+    pub fn overlaps(&self, other: &Interval) -> bool {
+        !self.intersect(other).is_empty()
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{},{})", self.lo, self.hi)
+    }
+}

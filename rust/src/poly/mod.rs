@@ -1,0 +1,24 @@
+//! Polyhedral-lite: exact set algebra on rectilinear integer regions.
+//!
+//! LoopTree's analysis is built on set/relation operations over operation and
+//! data tiles (the paper uses ISL [39]). Every Einsum in the paper has
+//! per-dimension affine accesses (`p`, `p + r`, `2p + r`) over dense box
+//! iteration domains, so all tiles, overlaps, and fresh regions are finite
+//! unions of axis-aligned integer boxes. This module implements exact algebra
+//! on that domain: intervals, boxes, disjoint unions of boxes ([`Region`]),
+//! and affine maps with image/preimage over boxes.
+//!
+//! All intervals are half-open `[lo, hi)`.
+
+mod interval;
+mod ibox;
+mod region;
+mod affine;
+
+pub use affine::{AffineExpr, AffineMap};
+pub use ibox::IBox;
+pub use interval::Interval;
+pub use region::Region;
+
+#[cfg(test)]
+mod tests;

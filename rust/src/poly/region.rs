@@ -1,0 +1,207 @@
+//! Rectilinear regions: finite disjoint unions of boxes.
+
+use super::{IBox, Interval};
+
+/// A rectilinear region: a finite union of pairwise-disjoint boxes.
+///
+/// The disjointness invariant is maintained by every constructor and
+/// operation, so `volume` is a simple sum. Box count stays small in practice
+/// (fresh regions after halo subtraction are unions of a few slabs), but
+/// [`Region::coalesce`] merges adjacent boxes to keep representations tight.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    ndim: usize,
+    boxes: Vec<IBox>,
+}
+
+impl Region {
+    pub fn empty(ndim: usize) -> Self {
+        Region { ndim, boxes: vec![] }
+    }
+
+    pub fn from_box(b: IBox) -> Self {
+        let ndim = b.ndim();
+        if b.is_empty() {
+            Region::empty(ndim)
+        } else {
+            Region { ndim, boxes: vec![b] }
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.ndim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.boxes.is_empty()
+    }
+
+    pub fn boxes(&self) -> &[IBox] {
+        &self.boxes
+    }
+
+    pub fn volume(&self) -> i64 {
+        self.boxes.iter().map(|b| b.volume()).sum()
+    }
+
+    /// Number of boxes in the representation.
+    pub fn complexity(&self) -> usize {
+        self.boxes.len()
+    }
+
+    /// Add a box, preserving disjointness (the parts of `b` already covered
+    /// are not duplicated).
+    pub fn union_box(&mut self, b: &IBox) {
+        if b.is_empty() {
+            return;
+        }
+        debug_assert_eq!(b.ndim(), self.ndim);
+        let mut pieces = vec![b.clone()];
+        for existing in &self.boxes {
+            if pieces.is_empty() {
+                return;
+            }
+            let mut next = Vec::with_capacity(pieces.len());
+            for p in pieces {
+                if p.overlaps(existing) {
+                    next.extend(p.subtract(existing));
+                } else {
+                    next.push(p);
+                }
+            }
+            pieces = next;
+        }
+        self.boxes.extend(pieces);
+    }
+
+    pub fn union(&mut self, other: &Region) {
+        for b in &other.boxes {
+            self.union_box(b);
+        }
+    }
+
+    pub fn union_of(a: &Region, b: &Region) -> Region {
+        let mut r = a.clone();
+        r.union(b);
+        r
+    }
+
+    pub fn intersect_box(&self, b: &IBox) -> Region {
+        let boxes: Vec<IBox> = self
+            .boxes
+            .iter()
+            .map(|x| x.intersect(b))
+            .filter(|x| !x.is_empty())
+            .collect();
+        Region { ndim: self.ndim, boxes }
+    }
+
+    pub fn intersect(&self, other: &Region) -> Region {
+        let mut out = Region::empty(self.ndim);
+        // Pieces of disjoint unions intersected pairwise are still disjoint.
+        for b in &other.boxes {
+            let part = self.intersect_box(b);
+            out.boxes.extend(part.boxes);
+        }
+        out
+    }
+
+    pub fn subtract_box(&self, b: &IBox) -> Region {
+        if b.is_empty() {
+            return self.clone();
+        }
+        let mut boxes = Vec::with_capacity(self.boxes.len());
+        for x in &self.boxes {
+            if x.overlaps(b) {
+                boxes.extend(x.subtract(b));
+            } else {
+                boxes.push(x.clone());
+            }
+        }
+        Region { ndim: self.ndim, boxes }
+    }
+
+    pub fn subtract(&self, other: &Region) -> Region {
+        let mut r = self.clone();
+        for b in &other.boxes {
+            r = r.subtract_box(b);
+        }
+        r
+    }
+
+    /// `other ⊆ self`.
+    pub fn contains_region(&self, other: &Region) -> bool {
+        other.subtract(self).is_empty()
+    }
+
+    /// Set equality (representation-independent).
+    pub fn set_eq(&self, other: &Region) -> bool {
+        self.subtract(other).is_empty() && other.subtract(self).is_empty()
+    }
+
+    /// Smallest box containing the region (empty box if region is empty).
+    pub fn bounding_box(&self) -> IBox {
+        let mut it = self.boxes.iter();
+        match it.next() {
+            None => IBox::empty(self.ndim),
+            Some(first) => it.fold(first.clone(), |acc, b| acc.hull(b)),
+        }
+    }
+
+    /// Merge pairs of adjacent boxes that differ in exactly one dimension and
+    /// abut there. Keeps representation size down for long-running unions.
+    pub fn coalesce(&mut self) {
+        let mut changed = true;
+        while changed {
+            changed = false;
+            'outer: for i in 0..self.boxes.len() {
+                for j in (i + 1)..self.boxes.len() {
+                    if let Some(merged) = try_merge(&self.boxes[i], &self.boxes[j]) {
+                        self.boxes[i] = merged;
+                        self.boxes.swap_remove(j);
+                        changed = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Merge two boxes if they are identical in all dimensions but one, where
+/// they abut or overlap.
+fn try_merge(a: &IBox, b: &IBox) -> Option<IBox> {
+    let mut diff_dim = None;
+    for d in 0..a.ndim() {
+        if a.dims[d] != b.dims[d] {
+            if diff_dim.is_some() {
+                return None;
+            }
+            diff_dim = Some(d);
+        }
+    }
+    let d = diff_dim?; // identical boxes can't both be present (disjointness)
+    let (x, y) = (a.dims[d], b.dims[d]);
+    if x.hi >= y.lo && y.hi >= x.lo {
+        let mut merged = a.clone();
+        merged.dims[d] = Interval::new(x.lo.min(y.lo), x.hi.max(y.hi));
+        Some(merged)
+    } else {
+        None
+    }
+}
+
+impl std::fmt::Display for Region {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.boxes.is_empty() {
+            return write!(f, "∅");
+        }
+        for (i, b) in self.boxes.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ∪ ")?;
+            }
+            write!(f, "{b}")?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,203 @@
+use super::*;
+
+fn bx(bounds: &[(i64, i64)]) -> IBox {
+    IBox::from_bounds(bounds)
+}
+
+#[test]
+fn interval_basics() {
+    let a = Interval::new(2, 7);
+    assert_eq!(a.len(), 5);
+    assert!(!a.is_empty());
+    assert!(a.contains(2));
+    assert!(!a.contains(7));
+    assert!(Interval::new(3, 3).is_empty());
+    assert_eq!(Interval::new(5, 2).len(), 0);
+}
+
+#[test]
+fn interval_intersect_hull() {
+    let a = Interval::new(0, 10);
+    let b = Interval::new(5, 15);
+    assert_eq!(a.intersect(&b), Interval::new(5, 10));
+    assert_eq!(a.hull(&b), Interval::new(0, 15));
+    let c = Interval::new(20, 30);
+    assert!(a.intersect(&c).is_empty());
+    assert!(a.overlaps(&b));
+    assert!(!a.overlaps(&c));
+}
+
+#[test]
+fn interval_empty_hull_identity() {
+    let a = Interval::new(1, 4);
+    assert_eq!(a.hull(&Interval::empty()), a);
+    assert_eq!(Interval::empty().hull(&a), a);
+}
+
+#[test]
+fn box_volume_empty() {
+    assert_eq!(bx(&[(0, 4), (0, 3)]).volume(), 12);
+    assert_eq!(bx(&[(0, 4), (3, 3)]).volume(), 0);
+    assert!(bx(&[(0, 4), (3, 3)]).is_empty());
+}
+
+#[test]
+fn box_intersect_contains() {
+    let a = bx(&[(0, 10), (0, 10)]);
+    let b = bx(&[(5, 15), (2, 8)]);
+    let i = a.intersect(&b);
+    assert_eq!(i, bx(&[(5, 10), (2, 8)]));
+    assert!(a.contains_box(&bx(&[(1, 2), (1, 2)])));
+    assert!(!a.contains_box(&b));
+    assert!(a.contains_box(&IBox::empty(2)));
+}
+
+#[test]
+fn box_subtract_disjoint_exact() {
+    // Subtract a centered box: 4 slabs in 2D, volumes must add up.
+    let a = bx(&[(0, 10), (0, 10)]);
+    let b = bx(&[(3, 7), (3, 7)]);
+    let parts = a.subtract(&b);
+    let total: i64 = parts.iter().map(|p| p.volume()).sum();
+    assert_eq!(total, 100 - 16);
+    // Pairwise disjoint.
+    for i in 0..parts.len() {
+        for j in (i + 1)..parts.len() {
+            assert!(!parts[i].overlaps(&parts[j]), "{} vs {}", parts[i], parts[j]);
+        }
+    }
+    // None overlap b.
+    for p in &parts {
+        assert!(!p.overlaps(&b));
+    }
+}
+
+#[test]
+fn box_subtract_edge_cases() {
+    let a = bx(&[(0, 10)]);
+    assert_eq!(a.subtract(&bx(&[(0, 10)])), vec![]);
+    assert_eq!(a.subtract(&bx(&[(20, 30)])), vec![a.clone()]);
+    let parts = a.subtract(&bx(&[(0, 4)]));
+    assert_eq!(parts, vec![bx(&[(4, 10)])]);
+}
+
+#[test]
+fn region_union_disjointness_and_volume() {
+    let mut r = Region::empty(2);
+    r.union_box(&bx(&[(0, 4), (0, 4)]));
+    r.union_box(&bx(&[(2, 6), (2, 6)])); // overlaps the first
+    assert_eq!(r.volume(), 16 + 16 - 4);
+    // Adding a covered box changes nothing.
+    r.union_box(&bx(&[(1, 3), (1, 3)]));
+    assert_eq!(r.volume(), 28);
+}
+
+#[test]
+fn region_subtract_intersect() {
+    let mut r = Region::from_box(bx(&[(0, 10), (0, 10)]));
+    r = r.subtract_box(&bx(&[(0, 10), (4, 6)])); // cut a horizontal band
+    assert_eq!(r.volume(), 80);
+    let i = r.intersect_box(&bx(&[(0, 10), (0, 5)]));
+    assert_eq!(i.volume(), 40);
+    let j = r.intersect(&Region::from_box(bx(&[(0, 5), (0, 10)])));
+    assert_eq!(j.volume(), 40);
+}
+
+#[test]
+fn region_set_eq_and_contains() {
+    // Same set built two different ways.
+    let mut a = Region::empty(1);
+    a.union_box(&bx(&[(0, 5)]));
+    a.union_box(&bx(&[(5, 10)]));
+    let b = Region::from_box(bx(&[(0, 10)]));
+    assert!(a.set_eq(&b));
+    assert!(b.contains_region(&a));
+    let c = Region::from_box(bx(&[(0, 11)]));
+    assert!(!a.set_eq(&c));
+    assert!(c.contains_region(&a));
+    assert!(!a.contains_region(&c));
+}
+
+#[test]
+fn region_coalesce_merges_abutting() {
+    let mut a = Region::empty(2);
+    for i in 0..8 {
+        a.union_box(&bx(&[(i, i + 1), (0, 4)]));
+    }
+    assert_eq!(a.volume(), 32);
+    a.coalesce();
+    assert_eq!(a.complexity(), 1);
+    assert_eq!(a.volume(), 32);
+}
+
+#[test]
+fn region_bounding_box() {
+    let mut a = Region::empty(2);
+    a.union_box(&bx(&[(0, 2), (0, 2)]));
+    a.union_box(&bx(&[(8, 10), (5, 6)]));
+    assert_eq!(a.bounding_box(), bx(&[(0, 10), (0, 6)]));
+}
+
+#[test]
+fn affine_range_sliding_window() {
+    // input index p + r with p in [0,4), r in [0,3): touches [0, 6).
+    let e = AffineExpr::sum((0, 1), (1, 1));
+    let dom = bx(&[(0, 4), (0, 3)]);
+    assert_eq!(e.range_over(&dom), Interval::new(0, 6));
+}
+
+#[test]
+fn affine_range_strided() {
+    // 2p + r with p in [0,4), r in [0,3): [0, 9).
+    let e = AffineExpr::sum((0, 2), (1, 1));
+    let dom = bx(&[(0, 4), (0, 3)]);
+    assert_eq!(e.range_over(&dom), Interval::new(0, 9));
+}
+
+#[test]
+fn affine_range_negative_coeff() {
+    let e = AffineExpr::scaled(0, -1).with_offset(10);
+    let dom = bx(&[(2, 5)]);
+    // -p + 10 for p in {2,3,4} -> {6,7,8} -> [6,9)
+    assert_eq!(e.range_over(&dom), Interval::new(6, 9));
+}
+
+#[test]
+fn affine_map_image_conv_footprint() {
+    // 1D conv input access: [c, p+r] over ranks (m, p, c, r).
+    let map = AffineMap::new(vec![AffineExpr::var(2), AffineExpr::sum((1, 1), (3, 1))]);
+    let ops = bx(&[(0, 4), (0, 6), (0, 3), (0, 3)]); // m,p,c,r
+    let img = map.image_box(&ops);
+    assert_eq!(img, bx(&[(0, 3), (0, 8)])); // C=3 channels, H = 6+3-1 = 8
+}
+
+#[test]
+fn affine_map_preimage_identity() {
+    // Output access [m, p] over ranks (m, p, c, r): ops to produce rows [2,4).
+    let map = AffineMap::identity(&[0, 1]);
+    let full = bx(&[(0, 4), (0, 6), (0, 3), (0, 3)]);
+    let data = bx(&[(0, 4), (2, 4)]);
+    let ops = map.preimage_identity_box(&data, &full);
+    assert_eq!(ops, bx(&[(0, 4), (2, 4), (0, 3), (0, 3)]));
+}
+
+#[test]
+fn image_of_region_unions() {
+    let map = AffineMap::new(vec![AffineExpr::sum((0, 1), (1, 1))]);
+    let mut dom = Region::empty(2);
+    dom.union_box(&bx(&[(0, 2), (0, 3)]));
+    dom.union_box(&bx(&[(10, 12), (0, 3)]));
+    let img = map.image(&dom);
+    assert_eq!(img.volume(), 4 + 4); // [0,4) and [10,14)
+}
+
+#[test]
+fn subtract_overlapping_windows_matches_halo() {
+    // Consecutive conv input windows with halo 2: tile 4, window = 6 rows.
+    // Window(i) = [4i, 4i+6). Fresh part of window 1 = [6, 10) -> 4 rows.
+    let w0 = bx(&[(0, 6)]);
+    let w1 = bx(&[(4, 10)]);
+    let fresh = Region::from_box(w1.clone()).subtract_box(&w0);
+    assert_eq!(fresh.volume(), 4);
+    assert_eq!(w1.intersect(&w0).volume(), 2);
+}

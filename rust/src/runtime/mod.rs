@@ -1,0 +1,162 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the rust request path (python never runs at request time).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. One
+//! compiled executable per model/stage variant (see python/compile/aot.py
+//! for the artifact list and DESIGN.md for the interchange-format rationale).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Byte/FLOP accounting for one executable, used by the e2e example to
+/// cross-check the LoopTree model's transfer predictions against what the
+/// executed schedule actually moved.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub invocations: u64,
+    pub input_elems: u64,
+    pub output_elems: u64,
+}
+
+/// A compiled artifact plus its manifest metadata.
+pub struct Executable {
+    pub name: String,
+    pub input_shapes: Vec<Vec<i64>>,
+    exe: xla::PjRtLoadedExecutable,
+    pub stats: ExecStats,
+}
+
+impl Executable {
+    /// Execute on f32 inputs (shape-checked against the manifest). Returns
+    /// the flattened f32 output.
+    pub fn run_f32(&mut self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let want: i64 = self.input_shapes[i].iter().product();
+            if *shape != self.input_shapes[i].as_slice() || data.len() as i64 != want {
+                return Err(anyhow!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    self.name,
+                    shape,
+                    self.input_shapes[i]
+                ));
+            }
+            let lit = xla::Literal::vec1(data).reshape(shape)?;
+            literals.push(lit);
+            self.stats.input_elems += data.len() as u64;
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        self.stats.invocations += 1;
+        self.stats.output_elems += values.len() as u64;
+        Ok(values)
+    }
+}
+
+/// The artifact runtime: a PJRT CPU client plus the compiled executables
+/// named in `artifacts/manifest.json`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    cache: HashMap<String, usize>,
+    executables: Vec<Executable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (compiles lazily per executable).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+            executables: Vec::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Config section of the manifest (tile sizes, shapes).
+    pub fn config_i64(&self, key: &str) -> Result<i64> {
+        self.manifest
+            .get("config")
+            .and_then(|c| c.get(key))
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow!("manifest config key {key} missing"))
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&mut self, name: &str) -> Result<&mut Executable> {
+        if let Some(&i) = self.cache.get(name) {
+            return Ok(&mut self.executables[i]);
+        }
+        let meta = self
+            .manifest
+            .get("artifacts")
+            .and_then(|a| a.get(name))
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        let file = meta
+            .get("file")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("artifact {name}: no file"))?;
+        let input_shapes: Vec<Vec<i64>> = meta
+            .get("inputs")
+            .and_then(|i| i.as_arr())
+            .ok_or_else(|| anyhow!("artifact {name}: no inputs"))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .map(|dims| dims.iter().filter_map(|d| d.as_i64()).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.push(Executable {
+            name: name.to_string(),
+            input_shapes,
+            exe,
+            stats: ExecStats::default(),
+        });
+        let idx = self.executables.len() - 1;
+        self.cache.insert(name.to_string(), idx);
+        Ok(&mut self.executables[idx])
+    }
+
+    /// Aggregate stats across all loaded executables.
+    pub fn total_stats(&self) -> ExecStats {
+        let mut s = ExecStats::default();
+        for e in &self.executables {
+            s.invocations += e.stats.invocations;
+            s.input_elems += e.stats.input_elems;
+            s.output_elems += e.stats.output_elems;
+        }
+        s
+    }
+}

@@ -1,0 +1,182 @@
+//! Mapspace search algorithms (paper §VII-C: prior search strategies can be
+//! adapted to the LoopTree mapspace using LoopTree as the model).
+//!
+//! Four searches over the same objective interface:
+//! * [`exhaustive`] — enumerate + evaluate everything (parallel).
+//! * [`random_search`] — uniform sampling, for very large spaces.
+//! * [`annealing`] — simulated annealing with mapping mutations.
+//! * [`genetic`] — GAMMA-style [49] population search.
+//!
+//! Objectives are `Fn(&Metrics) -> f64` (minimize); infeasible mappings
+//! (capacity overflow) can be filtered or penalized by the objective.
+
+mod mutate;
+
+use crate::arch::Arch;
+use crate::coordinator::Coordinator;
+use crate::einsum::FusionSet;
+use crate::mapping::InterLayerMapping;
+use crate::mapspace::{MapSpace, MapSpaceConfig};
+use crate::model::{evaluate, EvalOptions, Metrics};
+use crate::util::prng::Prng;
+
+pub use mutate::{mutate, random_mapping};
+
+/// A scored mapping.
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub mapping: InterLayerMapping,
+    pub metrics: Metrics,
+    pub score: f64,
+}
+
+/// Result of a search: the best point plus everything evaluated (for Pareto
+/// extraction).
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: Scored,
+    pub evaluated: Vec<Scored>,
+}
+
+fn score_all(
+    fs: &FusionSet,
+    arch: &Arch,
+    mappings: &[InterLayerMapping],
+    objective: &(dyn Fn(&Metrics) -> f64 + Sync),
+    pool: &Coordinator,
+) -> Vec<Scored> {
+    let opts = EvalOptions::default();
+    pool.evaluate_all(fs, arch, mappings, &opts)
+        .into_iter()
+        .zip(mappings)
+        .filter_map(|(r, m)| {
+            r.ok().map(|metrics| {
+                let score = objective(&metrics);
+                Scored { mapping: m.clone(), metrics, score }
+            })
+        })
+        .collect()
+}
+
+fn best_of(evaluated: Vec<Scored>) -> Option<SearchResult> {
+    let best = evaluated
+        .iter()
+        .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())?
+        .clone();
+    Some(SearchResult { best, evaluated })
+}
+
+/// Exhaustive search over an enumerated mapspace.
+pub fn exhaustive(
+    fs: &FusionSet,
+    arch: &Arch,
+    cfg: &MapSpaceConfig,
+    objective: impl Fn(&Metrics) -> f64 + Sync,
+    pool: &Coordinator,
+) -> Option<SearchResult> {
+    let ms = MapSpace::enumerate(fs, cfg);
+    best_of(score_all(fs, arch, ms.mappings(), &objective, pool))
+}
+
+/// Uniform random sampling of `samples` mappings.
+pub fn random_search(
+    fs: &FusionSet,
+    arch: &Arch,
+    samples: usize,
+    seed: u64,
+    objective: impl Fn(&Metrics) -> f64 + Sync,
+    pool: &Coordinator,
+) -> Option<SearchResult> {
+    let mut rng = Prng::new(seed);
+    let mappings: Vec<InterLayerMapping> =
+        (0..samples).map(|_| random_mapping(fs, &mut rng)).collect();
+    best_of(score_all(fs, arch, &mappings, &objective, pool))
+}
+
+/// Simulated annealing (SET [29] uses the same strategy for inter-layer
+/// scheduling). Serial by nature; `iters` model evaluations.
+pub fn annealing(
+    fs: &FusionSet,
+    arch: &Arch,
+    iters: usize,
+    seed: u64,
+    objective: impl Fn(&Metrics) -> f64,
+) -> Option<SearchResult> {
+    let mut rng = Prng::new(seed);
+    let opts = EvalOptions::default();
+    let mut cur = random_mapping(fs, &mut rng);
+    let mut cur_metrics = evaluate(fs, arch, &cur, &opts).ok()?;
+    let mut cur_score = objective(&cur_metrics);
+    let mut best = Scored { mapping: cur.clone(), metrics: cur_metrics.clone(), score: cur_score };
+    let mut evaluated = vec![best.clone()];
+
+    let t0 = (cur_score.abs() + 1.0) * 0.3;
+    for i in 0..iters {
+        let temp = t0 * (1.0 - i as f64 / iters as f64).max(1e-3);
+        let cand = mutate(fs, &cur, &mut rng);
+        let Ok(metrics) = evaluate(fs, arch, &cand, &opts) else {
+            continue;
+        };
+        let score = objective(&metrics);
+        evaluated.push(Scored { mapping: cand.clone(), metrics: metrics.clone(), score });
+        let accept = score <= cur_score
+            || rng.chance(((cur_score - score) / temp).exp().clamp(0.0, 1.0));
+        if accept {
+            cur = cand;
+            cur_metrics = metrics;
+            cur_score = score;
+            if cur_score < best.score {
+                best = Scored {
+                    mapping: cur.clone(),
+                    metrics: cur_metrics.clone(),
+                    score: cur_score,
+                };
+            }
+        }
+    }
+    Some(SearchResult { best, evaluated })
+}
+
+/// Genetic search: tournament selection + mutation (no crossover across
+/// schedules — tile sizes and retention levels recombine).
+pub fn genetic(
+    fs: &FusionSet,
+    arch: &Arch,
+    population: usize,
+    generations: usize,
+    seed: u64,
+    objective: impl Fn(&Metrics) -> f64 + Sync,
+    pool: &Coordinator,
+) -> Option<SearchResult> {
+    let mut rng = Prng::new(seed);
+    let mut pop: Vec<InterLayerMapping> =
+        (0..population).map(|_| random_mapping(fs, &mut rng)).collect();
+    let mut all: Vec<Scored> = Vec::new();
+
+    for _gen in 0..generations {
+        let scored = score_all(fs, arch, &pop, &objective, pool);
+        if scored.is_empty() {
+            return None;
+        }
+        all.extend(scored.iter().cloned());
+        // Tournament selection + mutation into the next generation.
+        let mut next = Vec::with_capacity(population);
+        // Elitism: keep the best.
+        let elite = scored
+            .iter()
+            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .unwrap();
+        next.push(elite.mapping.clone());
+        while next.len() < population {
+            let a = rng.choose(&scored);
+            let b = rng.choose(&scored);
+            let parent = if a.score <= b.score { a } else { b };
+            next.push(mutate(fs, &parent.mapping, &mut rng));
+        }
+        pop = next;
+    }
+    best_of(all)
+}
+
+#[cfg(test)]
+mod tests;

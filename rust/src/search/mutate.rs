@@ -1,0 +1,114 @@
+//! Random mapping generation and mutation operators for the stochastic
+//! searches.
+
+use crate::einsum::{FusionSet, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::util::prng::Prng;
+
+/// Sample a uniformly random (valid) mapping: up to 3 partitioned ranks with
+/// power-of-two-ish tiles, random retention, random parallelism.
+pub fn random_mapping(fs: &FusionSet, rng: &mut Prng) -> InterLayerMapping {
+    let last = fs.last();
+    let nparts = rng.index(4);
+    let mut dims: Vec<usize> = (0..last.ndim())
+        .filter(|&d| last.rank_sizes[d] > 1)
+        .collect();
+    rng.shuffle(&mut dims);
+    let mut partitions = Vec::new();
+    for &dim in dims.iter().take(nparts) {
+        let extent = last.rank_sizes[dim];
+        let mut tile = 1i64 << rng.index(8);
+        tile = tile.min(extent);
+        partitions.push(Partition { dim, tile });
+    }
+    let parallelism = if rng.chance(0.5) {
+        Parallelism::Sequential
+    } else {
+        Parallelism::Pipeline
+    };
+    let k = partitions.len();
+    let mut m = InterLayerMapping::tiled(partitions, parallelism);
+    for (x, t) in fs.tensors.iter().enumerate() {
+        if t.kind != TensorKind::OutputFmap && rng.chance(0.7) {
+            m = m.with_retention(TensorId(x), rng.index(k + 1));
+        }
+    }
+    m
+}
+
+/// Mutate one aspect of a mapping: tile size, retention level, schedule
+/// order, partition set, or parallelism. Always returns a valid mapping.
+pub fn mutate(fs: &FusionSet, m: &InterLayerMapping, rng: &mut Prng) -> InterLayerMapping {
+    let last = fs.last();
+    for _attempt in 0..8 {
+        let mut out = m.clone();
+        match rng.index(5) {
+            // Scale a tile size up/down.
+            0 if !out.partitions.is_empty() => {
+                let i = rng.index(out.partitions.len());
+                let p = &mut out.partitions[i];
+                let extent = last.rank_sizes[p.dim];
+                p.tile = if rng.chance(0.5) {
+                    (p.tile * 2).min(extent)
+                } else {
+                    (p.tile / 2).max(1)
+                };
+            }
+            // Change one tensor's retention level.
+            1 => {
+                let x = rng.index(fs.tensors.len());
+                let k = out.partitions.len();
+                out.retention.insert(TensorId(x), rng.index(k + 1));
+            }
+            // Swap two schedule levels.
+            2 if out.partitions.len() >= 2 => {
+                let i = rng.index(out.partitions.len());
+                let j = rng.index(out.partitions.len());
+                out.partitions.swap(i, j);
+                clamp_retention(&mut out);
+            }
+            // Add or remove a partitioned rank.
+            3 => {
+                if out.partitions.len() < 3 && rng.chance(0.6) {
+                    let candidates: Vec<usize> = (0..last.ndim())
+                        .filter(|&d| {
+                            last.rank_sizes[d] > 1
+                                && !out.partitions.iter().any(|p| p.dim == d)
+                        })
+                        .collect();
+                    if !candidates.is_empty() {
+                        let dim = *rng.choose(&candidates);
+                        let tile = (1i64 << rng.index(6)).min(last.rank_sizes[dim]);
+                        let pos = rng.index(out.partitions.len() + 1);
+                        out.partitions.insert(pos, Partition { dim, tile });
+                    }
+                } else if !out.partitions.is_empty() {
+                    let i = rng.index(out.partitions.len());
+                    out.partitions.remove(i);
+                    clamp_retention(&mut out);
+                }
+            }
+            // Flip parallelism.
+            _ => {
+                out.parallelism = match out.parallelism {
+                    Parallelism::Sequential => Parallelism::Pipeline,
+                    Parallelism::Pipeline => Parallelism::Sequential,
+                };
+            }
+        }
+        clamp_retention(&mut out);
+        if out.validate(fs).is_ok() {
+            return out;
+        }
+    }
+    m.clone()
+}
+
+/// Clamp retention levels to the (possibly shrunk) number of levels.
+fn clamp_retention(m: &mut InterLayerMapping) {
+    let k = m.partitions.len();
+    m.default_retention = m.default_retention.min(k);
+    for lvl in m.retention.values_mut() {
+        *lvl = (*lvl).min(k);
+    }
+}

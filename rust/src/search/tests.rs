@@ -1,0 +1,78 @@
+use super::*;
+use crate::einsum::workloads;
+use crate::mapspace::MapSpaceConfig;
+
+fn small_objective(m: &Metrics) -> f64 {
+    // Capacity-weighted transfers: a common case-study objective.
+    m.offchip_total() as f64 + 0.01 * m.occupancy_peak as f64
+}
+
+#[test]
+fn exhaustive_finds_global_best() {
+    let fs = workloads::conv_conv(14, 8);
+    let arch = Arch::generic(1 << 20);
+    let cfg = MapSpaceConfig {
+        schedules: vec![vec![], vec!["P2".into()], vec!["C2".into()]],
+        tile_sizes: vec![2, 4],
+        ..Default::default()
+    };
+    let pool = Coordinator::new(2);
+    let res = exhaustive(&fs, &arch, &cfg, small_objective, &pool).unwrap();
+    // Best score really is the minimum of everything evaluated.
+    let min = res
+        .evaluated
+        .iter()
+        .map(|s| s.score)
+        .fold(f64::INFINITY, f64::min);
+    assert_eq!(res.best.score, min);
+    assert!(!res.evaluated.is_empty());
+}
+
+#[test]
+fn random_search_is_deterministic_per_seed() {
+    let fs = workloads::conv_conv(14, 8);
+    let arch = Arch::generic(1 << 20);
+    let pool = Coordinator::new(2);
+    let a = random_search(&fs, &arch, 40, 42, small_objective, &pool).unwrap();
+    let b = random_search(&fs, &arch, 40, 42, small_objective, &pool).unwrap();
+    assert_eq!(a.best.score, b.best.score);
+    let c = random_search(&fs, &arch, 40, 43, small_objective, &pool).unwrap();
+    // Different seed explores different mappings (scores may tie, but the
+    // evaluated sets should differ).
+    let sa: Vec<String> = a.evaluated.iter().map(|s| s.mapping.schedule_string(&fs)).collect();
+    let sc: Vec<String> = c.evaluated.iter().map(|s| s.mapping.schedule_string(&fs)).collect();
+    assert_ne!(sa, sc);
+}
+
+#[test]
+fn annealing_improves_over_start() {
+    let fs = workloads::conv_conv(14, 8);
+    let arch = Arch::generic(1 << 20);
+    let res = annealing(&fs, &arch, 120, 9, small_objective).unwrap();
+    let first = res.evaluated.first().unwrap().score;
+    assert!(res.best.score <= first);
+    assert!(res.evaluated.len() > 10);
+}
+
+#[test]
+fn genetic_converges_reasonably() {
+    let fs = workloads::conv_conv(14, 8);
+    let arch = Arch::generic(1 << 20);
+    let pool = Coordinator::new(2);
+    let res = genetic(&fs, &arch, 12, 5, 17, small_objective, &pool).unwrap();
+    // The GA should find something at least as good as pure random with the
+    // same budget.
+    let rand = random_search(&fs, &arch, 60, 17, small_objective, &pool).unwrap();
+    assert!(res.best.score <= rand.best.score * 1.5);
+}
+
+#[test]
+fn mutation_preserves_validity() {
+    let fs = workloads::pwise_dwise_pwise(14, 8);
+    let mut rng = crate::util::prng::Prng::new(5);
+    let mut m = random_mapping(&fs, &mut rng);
+    for _ in 0..200 {
+        m = mutate(&fs, &m, &mut rng);
+        assert!(m.validate(&fs).is_ok());
+    }
+}

@@ -1,0 +1,242 @@
+//! Dense per-element bitmaps over tensor coordinate spaces.
+//!
+//! The simulator tracks buffer contents *concretely*: one bit per tensor
+//! element. This is deliberately a different representation from the model's
+//! symbolic regions — the two implementations must agree on every count,
+//! which is what the model-vs-sim validation (and the property tests)
+//! checks.
+
+use crate::poly::IBox;
+
+/// A bitset over the elements of a tensor with the given shape
+/// (row-major linearization).
+#[derive(Debug, Clone)]
+pub struct Bitmap {
+    shape: Vec<i64>,
+    strides: Vec<i64>,
+    words: Vec<u64>,
+    len: i64,
+}
+
+impl Bitmap {
+    pub fn new(shape: &[i64]) -> Self {
+        let len: i64 = shape.iter().product();
+        let mut strides = vec![1i64; shape.len()];
+        for d in (0..shape.len().saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * shape[d + 1];
+        }
+        Bitmap {
+            shape: shape.to_vec(),
+            strides,
+            words: vec![0; ((len + 63) / 64) as usize],
+            len,
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    fn offset(&self, coords: &[i64]) -> i64 {
+        debug_assert_eq!(coords.len(), self.shape.len());
+        coords
+            .iter()
+            .zip(&self.strides)
+            .map(|(&c, &s)| {
+                debug_assert!(c >= 0);
+                c * s
+            })
+            .sum()
+    }
+
+    pub fn get(&self, coords: &[i64]) -> bool {
+        let o = self.offset(coords);
+        self.words[(o / 64) as usize] >> (o % 64) & 1 == 1
+    }
+
+    pub fn set(&mut self, coords: &[i64]) {
+        let o = self.offset(coords);
+        self.words[(o / 64) as usize] |= 1 << (o % 64);
+    }
+
+    pub fn count(&self) -> i64 {
+        self.words.iter().map(|w| w.count_ones() as i64).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Set every element inside `b` (clipped to the tensor bounds).
+    pub fn set_box(&mut self, b: &IBox) {
+        self.for_each_run(b, |words, start, len| {
+            set_run(words, start, len);
+        });
+    }
+
+    /// Keep only the bits inside `b`.
+    pub fn retain_box(&mut self, b: &IBox) {
+        let mut mask = Bitmap::new(&self.shape);
+        mask.set_box(b);
+        for (w, m) in self.words.iter_mut().zip(&mask.words) {
+            *w &= m;
+        }
+    }
+
+    /// `self |= other`.
+    pub fn or(&mut self, other: &Bitmap) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= o;
+        }
+    }
+
+    /// `self &= other`.
+    pub fn and(&mut self, other: &Bitmap) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w &= o;
+        }
+    }
+
+    /// Clear one bit.
+    pub fn clear_bit(&mut self, coords: &[i64]) {
+        let o = self.offset(coords);
+        self.words[(o / 64) as usize] &= !(1 << (o % 64));
+    }
+
+    /// Count the bits of `b`'s interior that are NOT set, then set them.
+    /// Returns the number of newly set bits — the "fresh" volume.
+    pub fn absorb_box(&mut self, b: &IBox) -> i64 {
+        let mut fresh = 0i64;
+        self.for_each_run(b, |words, start, len| {
+            fresh += absorb_run(words, start, len);
+        });
+        fresh
+    }
+
+    /// Call `f(words, start_bit, run_len)` for every contiguous row run of
+    /// `b` (runs are along the innermost dimension).
+    fn for_each_run(&mut self, b: &IBox, mut f: impl FnMut(&mut [u64], i64, i64)) {
+        if b.is_empty() || self.shape.is_empty() {
+            return;
+        }
+        debug_assert_eq!(b.ndim(), self.shape.len());
+        // Clip to bounds.
+        let mut lo = Vec::with_capacity(b.ndim());
+        let mut hi = Vec::with_capacity(b.ndim());
+        for (d, iv) in b.dims.iter().enumerate() {
+            let l = iv.lo.max(0);
+            let h = iv.hi.min(self.shape[d]);
+            if h <= l {
+                return;
+            }
+            lo.push(l);
+            hi.push(h);
+        }
+        let nd = self.shape.len();
+        let run_len = hi[nd - 1] - lo[nd - 1];
+        let mut coords = lo.clone();
+        loop {
+            let start = self.offset(&coords);
+            f(&mut self.words, start, run_len);
+            // Advance all but the innermost dim.
+            let mut d = nd.saturating_sub(1);
+            loop {
+                if d == 0 {
+                    return;
+                }
+                d -= 1;
+                coords[d] += 1;
+                if coords[d] < hi[d] {
+                    break;
+                }
+                coords[d] = lo[d];
+            }
+        }
+    }
+
+    pub fn num_elems(&self) -> i64 {
+        self.len
+    }
+}
+
+fn set_run(words: &mut [u64], start: i64, len: i64) {
+    let (mut bit, end) = (start, start + len);
+    while bit < end {
+        let w = (bit / 64) as usize;
+        let b0 = bit % 64;
+        let take = (64 - b0).min(end - bit);
+        let mask = if take == 64 { !0u64 } else { ((1u64 << take) - 1) << b0 };
+        words[w] |= mask;
+        bit += take;
+    }
+}
+
+fn absorb_run(words: &mut [u64], start: i64, len: i64) -> i64 {
+    let (mut bit, end, mut fresh) = (start, start + len, 0i64);
+    while bit < end {
+        let w = (bit / 64) as usize;
+        let b0 = bit % 64;
+        let take = (64 - b0).min(end - bit);
+        let mask = if take == 64 { !0u64 } else { ((1u64 << take) - 1) << b0 };
+        fresh += (mask & !words[w]).count_ones() as i64;
+        words[w] |= mask;
+        bit += take;
+    }
+    fresh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bx(bounds: &[(i64, i64)]) -> IBox {
+        IBox::from_bounds(bounds)
+    }
+
+    #[test]
+    fn set_and_count() {
+        let mut b = Bitmap::new(&[4, 10]);
+        b.set_box(&bx(&[(1, 3), (2, 9)]));
+        assert_eq!(b.count(), 2 * 7);
+        assert!(b.get(&[1, 2]));
+        assert!(!b.get(&[0, 2]));
+        assert!(!b.get(&[1, 9]));
+    }
+
+    #[test]
+    fn absorb_counts_fresh_only() {
+        let mut b = Bitmap::new(&[8, 8]);
+        assert_eq!(b.absorb_box(&bx(&[(0, 4), (0, 4)])), 16);
+        assert_eq!(b.absorb_box(&bx(&[(2, 6), (2, 6)])), 16 - 4);
+        assert_eq!(b.count(), 28);
+    }
+
+    #[test]
+    fn retain_keeps_window_only() {
+        let mut b = Bitmap::new(&[8, 8]);
+        b.set_box(&bx(&[(0, 8), (0, 8)]));
+        b.retain_box(&bx(&[(2, 4), (0, 8)]));
+        assert_eq!(b.count(), 16);
+        assert!(b.get(&[2, 0]));
+        assert!(!b.get(&[0, 0]));
+    }
+
+    #[test]
+    fn clipping_out_of_bounds_boxes() {
+        let mut b = Bitmap::new(&[4, 4]);
+        b.set_box(&bx(&[(-2, 2), (3, 10)]));
+        assert_eq!(b.count(), 2 * 1);
+    }
+
+    #[test]
+    fn crossing_word_boundaries() {
+        let mut b = Bitmap::new(&[3, 100]);
+        b.set_box(&bx(&[(0, 3), (0, 100)]));
+        assert_eq!(b.count(), 300);
+        let mut c = Bitmap::new(&[300]);
+        assert_eq!(c.absorb_box(&bx(&[(60, 70)])), 10);
+        assert_eq!(c.absorb_box(&bx(&[(0, 300)])), 290);
+    }
+}

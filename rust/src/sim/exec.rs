@@ -1,0 +1,411 @@
+//! Element-driven execution of an inter-layer mapping.
+
+use super::bitmap::Bitmap;
+use crate::arch::{energy, Arch};
+use crate::einsum::{EinsumSpec, FusionSet, TensorKind};
+use crate::mapping::{InterLayerMapping, IntraLayerMapping, Parallelism};
+use crate::model::{IterWalk, TileWindows};
+use crate::poly::IBox;
+
+/// Simulator outputs (subset of the model's metrics, measured by execution).
+#[derive(Debug, Clone, Default)]
+pub struct SimMetrics {
+    pub latency_cycles: i64,
+    pub compute_cycles: i64,
+    pub offchip_reads: i64,
+    pub offchip_writes: i64,
+    pub occupancy_peak: i64,
+    pub per_tensor_occupancy: Vec<i64>,
+    pub per_tensor_offchip: Vec<i64>,
+    pub total_ops: i64,
+    pub recompute_ops: i64,
+    pub energy_pj: f64,
+    pub iterations: i64,
+}
+
+/// The op sub-box that produces one output element: output-projected dims
+/// pinned to the element's coordinates, reduction dims full.
+fn op_box_for_output(e: &EinsumSpec, coords: &[i64]) -> IBox {
+    let mut b = e.domain();
+    for (expr, &c) in e.output.map.exprs.iter().zip(coords) {
+        let d = expr.as_identity().expect("identity output access");
+        b.dims[d] = crate::poly::Interval::new(c, c + 1);
+    }
+    b
+}
+
+/// Execute the mapping element-by-element and measure.
+pub fn simulate(
+    fs: &FusionSet,
+    arch: &Arch,
+    mapping: &InterLayerMapping,
+) -> Result<SimMetrics, String> {
+    fs.validate()?;
+    arch.validate()?;
+    mapping.validate(fs)?;
+
+    let n = fs.num_layers();
+    let nt = fs.tensors.len();
+    let tw = TileWindows::new(fs, mapping);
+    let counts = tw.counts().to_vec();
+    let k = counts.len();
+    let retention: Vec<usize> = (0..nt)
+        .map(|x| mapping.retention_for(crate::einsum::TensorId(x)))
+        .collect();
+    let intra: Vec<IntraLayerMapping> = fs
+        .einsums
+        .iter()
+        .map(|e| IntraLayerMapping::default_for(e, arch.noc.num_pes()))
+        .collect();
+    let fanout: Vec<i64> = intra
+        .iter()
+        .map(|im| im.fanout().clamp(1, arch.compute.macs))
+        .collect();
+
+    let mut avail: Vec<Bitmap> =
+        fs.tensors.iter().map(|t| Bitmap::new(&t.shape)).collect();
+    // Scratch bitmaps for demand dedup per layer output tensor.
+    let mut window_cache: Vec<Option<(Vec<i64>, Vec<Bitmap>)>> = vec![None; k + 1];
+
+    let mut m = SimMetrics {
+        per_tensor_occupancy: vec![0; nt],
+        per_tensor_offchip: vec![0; nt],
+        ..SimMetrics::default()
+    };
+    let mut produced: Vec<i64> = vec![0; nt];
+    let mut op_total = 0i64;
+    let mut glb_reads = 0i64;
+    let mut glb_writes = 0i64;
+    let mut noc_hop_words = 0f64;
+    let mut rf_reads = 0i64;
+    let mut rf_writes = 0i64;
+    // Timing state: per-stage completion and a double-buffered DRAM channel.
+    let mut stage_finish = vec![0i64; n];
+    let mut fetch_done = 0i64;
+    let dram_bw = arch.dram().bandwidth_words_per_cycle;
+    let mut seq_cycles = 0i64;
+    let mut prev_occ = vec![0i64; nt];
+    let mut energy_pj = 0f64;
+
+    for (idx, adv) in IterWalk::new(&counts) {
+        m.iterations += 1;
+        // Retention invalidation: keep only the new window's footprint.
+        // Output fmaps are exempt: their avail set tracks "already written"
+        // (outputs are written off-chip exactly once; partial sums accumulate
+        // on-chip under the Buffets assumption), and their occupancy is the
+        // per-iteration drain tile, accounted separately below.
+        for x in 0..nt {
+            if fs.tensors[x].kind == TensorKind::OutputFmap {
+                continue;
+            }
+            let j = retention[x];
+            if j == 0 {
+                continue;
+            }
+            let changed = match adv {
+                None => true,
+                Some(a) => a < j,
+            };
+            if !changed {
+                continue;
+            }
+            let prefix = &idx[0..j];
+            let refresh = match &window_cache[j] {
+                Some((p, _)) if p == prefix => false,
+                _ => true,
+            };
+            if refresh {
+                window_cache[j] = Some((prefix.to_vec(), window_need_bitmaps(fs, &tw.window(prefix))));
+            }
+            let (_, needs) = window_cache[j].as_ref().unwrap();
+            // Keep only the new window's footprint: avail &= window needs.
+            avail[x].and(&needs[x]);
+        }
+
+        // Element-driven backward execution.
+        let win = tw.window(&idx);
+        let mut fetched_words_iter = 0i64;
+        let mut tile_lat = vec![0i64; n];
+
+        // Demand for the last layer: every output element of the tile.
+        let last = &fs.einsums[n - 1];
+        let out_box = last.output.map.image_box(&win);
+        let mut demand: Vec<Vec<i64>> = box_coords(&out_box);
+        let mut fresh_iter = vec![0i64; nt];
+
+        for t in (0..n).rev() {
+            let e = &fs.einsums[t];
+            let out = e.output.tensor.0;
+            // Last layer: ops run for every demanded output element (partial
+            // sums accumulate when a reduction rank is partitioned), but an
+            // element is *produced* (counted once) only on its first visit.
+            // Upstream layers: demand is exactly the fresh intermediate
+            // elements, all genuinely produced now.
+            let op_elems: Vec<Vec<i64>>;
+            if t == n - 1 {
+                let mut fresh = 0i64;
+                for c in &demand {
+                    if !avail[out].get(c) {
+                        avail[out].set(c);
+                        fresh += 1;
+                    }
+                }
+                produced[out] += fresh;
+                fresh_iter[out] += fresh;
+                op_elems = std::mem::take(&mut demand);
+            } else {
+                let mut fresh_elems: Vec<Vec<i64>> = Vec::new();
+                for c in demand.drain(..) {
+                    if !avail[out].get(&c) {
+                        avail[out].set(&c);
+                        fresh_elems.push(c);
+                    }
+                }
+                produced[out] += fresh_elems.len() as i64;
+                fresh_iter[out] += fresh_elems.len() as i64;
+                op_elems = fresh_elems;
+            }
+            // Per-element op volume: the op box restricted to the iteration
+            // window at the last layer, full reduction extent upstream.
+            let mut ops = 0i64;
+            let mut op_bbox: Option<IBox> = None;
+            let mut next_demand: Vec<Vec<i64>> = Vec::new();
+            let inter_input = if t > 0 {
+                Some(fs.einsums[t - 1].output.tensor)
+            } else {
+                None
+            };
+            for c in &op_elems {
+                let mut opb = op_box_for_output(e, c);
+                if t == n - 1 {
+                    opb = opb.intersect(&win);
+                }
+                ops += opb.volume();
+                op_bbox = Some(match op_bbox {
+                    None => opb.clone(),
+                    Some(bb) => bb.hull(&opb),
+                });
+                for acc in &e.inputs {
+                    let x = acc.tensor;
+                    let need = acc.map.image_box(&opb);
+                    if inter_input == Some(x) {
+                        collect_fresh(&mut avail[x.0], &need, &mut next_demand);
+                    } else {
+                        let fr = avail[x.0].absorb_box(&need);
+                        m.per_tensor_offchip[x.0] += fr;
+                        m.offchip_reads += fr;
+                        fetched_words_iter += fr;
+                    }
+                }
+            }
+            op_total += ops;
+            tile_lat[t] = div_ceil(ops, fanout[t]);
+            seq_cycles += tile_lat[t];
+            energy_pj +=
+                ops as f64 * energy::op_energy_pj(e.op_kind, arch.compute.mac_energy_pj);
+            // Intra-layer action counts (shared semantics; independently
+            // derived ops / bbox / produced).
+            if let Some(bb) = &op_bbox {
+                let produced_now = fresh_iter[out];
+                let c = crate::model::tile_counts_from(e, &intra[t], arch, ops, bb, produced_now);
+                glb_reads += c.glb_reads;
+                glb_writes += c.glb_writes;
+                noc_hop_words += c.noc_hop_words;
+                rf_reads += c.rf_reads;
+                rf_writes += c.rf_writes;
+            }
+            if t > 0 {
+                // next_demand coords were *pre-set* in avail to dedupe; unset
+                // them so the producer's fresh check counts them.
+                for c in &next_demand {
+                    unset(&mut avail[fs.einsums[t - 1].output.tensor.0], c);
+                }
+                demand = next_demand;
+            } else {
+                debug_assert!(next_demand.is_empty());
+            }
+        }
+
+        // GLB fill/drain traffic for this iteration.
+        glb_writes += fetched_words_iter;
+        let final_out = fs.einsums[n - 1].output.tensor.0;
+        glb_reads += fresh_iter[final_out];
+
+        // Timing: double-buffered DRAM channel — this iteration's fetches
+        // must complete before its compute starts (output drains are folded
+        // into the total-channel-time bound below).
+        fetch_done += if dram_bw.is_finite() && dram_bw > 0.0 {
+            (fetched_words_iter as f64 / dram_bw).ceil() as i64
+        } else {
+            0
+        };
+        let mut prev_stage = fetch_done.max(0);
+        for t in 0..n {
+            let start = prev_stage.max(stage_finish[t]);
+            let fin = start + tile_lat[t];
+            match mapping.parallelism {
+                Parallelism::Pipeline => {
+                    stage_finish[t] = fin;
+                    prev_stage = fin;
+                }
+                Parallelism::Sequential => {
+                    // All stages of one iteration run back to back.
+                    stage_finish[t] = fin;
+                    prev_stage = fin;
+                }
+            }
+        }
+        if mapping.parallelism == Parallelism::Sequential {
+            // Serialize iterations entirely.
+            let fin = *stage_finish.last().unwrap();
+            for s in stage_finish.iter_mut() {
+                *s = fin;
+            }
+        }
+
+        // Occupancy. Output fmaps occupy only their per-iteration drain tile.
+        let mut total_occ = 0i64;
+        for x in 0..nt {
+            let occ = if fs.tensors[x].kind == TensorKind::OutputFmap {
+                out_box.volume()
+            } else {
+                avail[x].count()
+            };
+            let eff = if mapping.parallelism == Parallelism::Pipeline
+                && fs.tensors[x].kind == TensorKind::Intermediate
+            {
+                prev_occ[x] + fresh_iter[x]
+            } else {
+                occ
+            };
+            m.per_tensor_occupancy[x] = m.per_tensor_occupancy[x].max(eff);
+            prev_occ[x] = occ;
+            total_occ += occ;
+        }
+        m.occupancy_peak = m.occupancy_peak.max(total_occ);
+    }
+
+    // Off-chip writes: every element of the final output drains exactly once.
+    let out_tid = fs.einsums[n - 1].output.tensor.0;
+    m.offchip_writes = fs.tensors[out_tid].size();
+    m.per_tensor_offchip[out_tid] = m.offchip_writes;
+
+    m.total_ops = op_total;
+    m.recompute_ops = op_total - fs.total_ops();
+    m.compute_cycles = match mapping.parallelism {
+        Parallelism::Sequential => seq_cycles,
+        Parallelism::Pipeline => *stage_finish.iter().max().unwrap(),
+    };
+    // DRAM channel time for all traffic (including the final drain).
+    let dram_cycles = if dram_bw.is_finite() && dram_bw > 0.0 {
+        (((m.offchip_reads + m.offchip_writes) as f64) / dram_bw).ceil() as i64
+    } else {
+        0
+    };
+    m.latency_cycles = m.compute_cycles.max(dram_cycles);
+    if mapping.parallelism == Parallelism::Pipeline {
+        m.occupancy_peak = m.occupancy_peak.max(m.per_tensor_occupancy.iter().sum());
+    }
+
+    // Energy from measured counts — same per-action costs as the model,
+    // counts derived by execution.
+    let dram = arch.dram();
+    let glb = arch.glb();
+    energy_pj += m.offchip_reads as f64 * dram.read_energy_pj
+        + m.offchip_writes as f64 * dram.write_energy_pj;
+    energy_pj +=
+        glb_reads as f64 * glb.read_energy_pj + glb_writes as f64 * glb.write_energy_pj;
+    if let Some(rf) = arch.levels.get(2) {
+        energy_pj +=
+            rf_reads as f64 * rf.read_energy_pj + rf_writes as f64 * rf.write_energy_pj;
+    }
+    energy_pj += noc_hop_words * arch.noc.hop_energy_pj;
+    m.energy_pj = energy_pj;
+    let _ = produced;
+    Ok(m)
+}
+
+fn window_need_bitmaps(fs: &FusionSet, win: &IBox) -> Vec<Bitmap> {
+    let n = fs.num_layers();
+    let mut needs: Vec<Bitmap> =
+        fs.tensors.iter().map(|t| Bitmap::new(&t.shape)).collect();
+    let last = &fs.einsums[n - 1];
+    let mut demand: Vec<Vec<i64>> = box_coords(&last.output.map.image_box(win));
+    for c in &demand {
+        needs[last.output.tensor.0].set(c);
+    }
+    for t in (0..n).rev() {
+        let e = &fs.einsums[t];
+        // `demand` is already deduplicated (marked in needs[out] by the
+        // consumer's collect_fresh, or explicitly for the last layer).
+        let fresh: Vec<Vec<i64>> = demand.drain(..).collect();
+        let inter_input = if t > 0 {
+            Some(fs.einsums[t - 1].output.tensor)
+        } else {
+            None
+        };
+        let mut next: Vec<Vec<i64>> = Vec::new();
+        for acc in &e.inputs {
+            let is_inter = inter_input == Some(acc.tensor);
+            for c in &fresh {
+                let mut opb = op_box_for_output(e, c);
+                if t == n - 1 {
+                    opb = opb.intersect(win);
+                }
+                let need = acc.map.image_box(&opb);
+                if is_inter {
+                    collect_fresh(&mut needs[acc.tensor.0], &need, &mut next);
+                } else {
+                    needs[acc.tensor.0].set_box(&need);
+                }
+            }
+        }
+        if t > 0 {
+            demand = next;
+        }
+    }
+    needs
+}
+
+/// Enumerate all coordinates inside a box.
+fn box_coords(b: &IBox) -> Vec<Vec<i64>> {
+    if b.is_empty() {
+        return vec![];
+    }
+    let mut out = Vec::with_capacity(b.volume() as usize);
+    let mut c: Vec<i64> = b.dims.iter().map(|d| d.lo).collect();
+    loop {
+        out.push(c.clone());
+        let mut d = b.ndim();
+        loop {
+            if d == 0 {
+                return out;
+            }
+            d -= 1;
+            c[d] += 1;
+            if c[d] < b.dims[d].hi {
+                break;
+            }
+            c[d] = b.dims[d].lo;
+        }
+    }
+}
+
+/// For every unset coordinate of `b` in `bm`: set it and push to `out`
+/// (dedup via the bitmap itself).
+fn collect_fresh(bm: &mut Bitmap, b: &IBox, out: &mut Vec<Vec<i64>>) {
+    for c in box_coords(b) {
+        if !bm.get(&c) {
+            bm.set(&c);
+            out.push(c);
+        }
+    }
+}
+
+fn unset(bm: &mut Bitmap, coords: &[i64]) {
+    bm.clear_bit(coords);
+}
+
+fn div_ceil(a: i64, b: i64) -> i64 {
+    (a + b - 1) / b
+}

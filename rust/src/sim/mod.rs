@@ -1,0 +1,20 @@
+//! Reference tile-level simulator — the validation comparator (paper §V).
+//!
+//! The paper validates LoopTree against prior architectures, in one case via
+//! "a simulation based on the architecture description". This module is that
+//! simulator for our validation methodology: an *executable* implementation
+//! of the same mapping semantics, built on a deliberately different
+//! substrate — dense per-element bitmaps and element-driven dependency
+//! marking instead of the model's symbolic region algebra, plus an explicit
+//! double-buffered DRAM-channel timing simulation instead of the model's
+//! closed-form `max(compute, memory)`.
+//!
+//! Counts (off-chip transfers, recompute, occupancy) must agree with the
+//! model exactly; latency agrees up to pipeline fill/drain effects — the
+//! validation tables report the error.
+
+mod bitmap;
+mod exec;
+
+pub use bitmap::Bitmap;
+pub use exec::{simulate, SimMetrics};

@@ -1,0 +1,82 @@
+//! Minimal benchmark harness (criterion is not vendored in the offline
+//! image). Benches are plain binaries (`harness = false`); this module
+//! provides warmup + timed repetitions with mean/min/max reporting.
+
+use std::time::{Duration, Instant};
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12?} /iter (min {:?}, max {:?}, n={})",
+            self.name, self.mean, self.min, self.max, self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` repetitions after `warmup` repetitions.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters.max(1),
+        min: times.iter().min().copied().unwrap_or_default(),
+        max: times.iter().max().copied().unwrap_or_default(),
+    }
+}
+
+/// Time a single (slow) run.
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, BenchResult) {
+    let t0 = Instant::now();
+    let out = f();
+    let d = t0.elapsed();
+    (
+        out,
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean: d,
+            min: d,
+            max: d,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_times() {
+        let r = bench("noop", 2, 10, || 1 + 1);
+        assert_eq!(r.iters, 10);
+        assert!(r.min <= r.mean && r.mean <= r.max.max(r.mean));
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, r) = bench_once("compute", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.iters, 1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Self-contained utility substrates (the offline image has no crates.io
+//! access beyond `xla`/`anyhow`, so these replace the usual ecosystem picks).
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod table;

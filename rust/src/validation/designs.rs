@@ -1,0 +1,386 @@
+//! The five validation designs (paper Table V), each encoded as
+//! (workload, architecture, mapping) per its publication.
+
+use super::report::ValRow;
+use super::Scale;
+use crate::arch::{presets, Arch};
+use crate::einsum::{FusionSet, FusionSetBuilder, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::model::{evaluate, EvalOptions, Metrics};
+use crate::sim::{simulate, SimMetrics};
+
+/// Evaluate model + reference simulator for one configuration.
+fn run(
+    fs: &FusionSet,
+    arch: &Arch,
+    mapping: &InterLayerMapping,
+) -> (Metrics, SimMetrics) {
+    let unbounded = arch.unbounded_glb(); // validations measure required capacity
+    let m = evaluate(fs, &unbounded, mapping, &EvalOptions::default())
+        .unwrap_or_else(|e| panic!("{}: model: {e}", fs.name));
+    let s = simulate(fs, &unbounded, mapping)
+        .unwrap_or_else(|e| panic!("{}: sim: {e}", fs.name));
+    (m, s)
+}
+
+/// Row/column (P,Q) schedule for the last layer, retain bands (level 1):
+/// the "fully retain" depth-first dataflow of DepFin and Fused-layer CNN.
+fn pq_mapping(fs: &FusionSet, p_tile: i64, q_tile: i64, par: Parallelism) -> InterLayerMapping {
+    let last = fs.last();
+    let n = fs.num_layers();
+    let p = last
+        .rank_index(&format!("P{n}"))
+        .unwrap_or_else(|| panic!("no P rank in {}", last.name));
+    let q = last.rank_index(&format!("Q{n}")).unwrap();
+    let mut m = InterLayerMapping::tiled(
+        vec![Partition { dim: p, tile: p_tile }, Partition { dim: q, tile: q_tile }],
+        par,
+    );
+    // Fully retain: intermediates at the band level (no recompute), weights
+    // and the input fmap fully on-chip (no refetch).
+    for (x, t) in fs.tensors.iter().enumerate() {
+        let lvl = match t.kind {
+            TensorKind::Intermediate => 1,
+            TensorKind::Weight => 0,
+            TensorKind::InputFmap => 1,
+            TensorKind::OutputFmap => 2,
+        };
+        m = m.with_retention(TensorId(x), lvl);
+    }
+    m
+}
+
+// ---------------------------------------------------------------- DepFin --
+
+/// DepFin [43]: depth-first (fused) CNN processor; P,Q-partitioned tiles
+/// processed sequentially, everything retained. Validated outputs: energy,
+/// capacity, off-chip transfers (paper: exact match on energy + transfers).
+pub fn validate_depfin(scale: Scale) -> Vec<ValRow> {
+    let rows = match scale {
+        Scale::Test => 10,
+        Scale::Full => 64,
+    };
+    let arch = presets::depfin();
+    let mut out = Vec::new();
+    for (wl_name, fs) in [
+        ("FSRCNN", crate::einsum::workloads::fsrcnn(rows)),
+        ("MC-CNN", crate::einsum::workloads::mc_cnn(rows)),
+    ] {
+        let mapping = pq_mapping(&fs, (rows / 8).max(1), (rows / 8).max(1), Parallelism::Sequential);
+        let (m, s) = run(&fs, &arch, &mapping);
+        out.push(ValRow {
+            design: "DepFin",
+            workload: wl_name.into(),
+            metric: "energy (uJ)",
+            looptree: m.energy_uj(),
+            reference: s.energy_pj / 1e6,
+            published: None,
+        });
+        out.push(ValRow {
+            design: "DepFin",
+            workload: wl_name.into(),
+            metric: "offchip (elems)",
+            looptree: m.offchip_total() as f64,
+            reference: (s.offchip_reads + s.offchip_writes) as f64,
+            published: None,
+        });
+        out.push(ValRow {
+            design: "DepFin",
+            workload: wl_name.into(),
+            metric: "capacity (elems)",
+            looptree: m.occupancy_peak as f64,
+            reference: s.occupancy_peak as f64,
+            published: None,
+        });
+    }
+    out
+}
+
+// ------------------------------------------------------- Fused-layer CNN --
+
+/// Fused-layer CNN [16]: the original fused accelerator; P,Q partitioning,
+/// pipelined tiles. Validated outputs: latency, per-buffer capacity (WBuf /
+/// IOBuf / TBuf), off-chip transfers (paper Table VI).
+pub fn validate_fused_cnn(scale: Scale) -> Vec<ValRow> {
+    let rows = match scale {
+        Scale::Test => 16,
+        Scale::Full => 56,
+    };
+    // First two 3×3 conv layers of VGG-E at reduced resolution (3→64→64 ch;
+    // channel structure preserved, spatial scaled for the element-level
+    // reference).
+    let ch = match scale {
+        Scale::Test => 8,
+        Scale::Full => 64,
+    };
+    let fs = FusionSetBuilder::new("vgg-e-c1c2", &[3, rows + 2, rows + 2])
+        .conv2d(ch, 3, 3, 1)
+        .conv2d(ch, 3, 3, 1)
+        .build();
+    let arch = presets::fused_cnn();
+    let mapping = pq_mapping(&fs, (rows / 8).max(1), (rows / 2).max(1), Parallelism::Pipeline);
+    let (m, s) = run(&fs, &arch, &mapping);
+
+    // Buffer split per the publication: WBuf = weights, IOBuf = input +
+    // output fmaps, TBuf = intermediate tile.
+    let cap_of = |metrics: &[i64]| -> (f64, f64, f64) {
+        let mut w = 0.0;
+        let mut io = 0.0;
+        let mut t = 0.0;
+        for (x, tn) in fs.tensors.iter().enumerate() {
+            let v = metrics[x] as f64;
+            match tn.kind {
+                TensorKind::Weight => w += v,
+                TensorKind::InputFmap | TensorKind::OutputFmap => io += v,
+                TensorKind::Intermediate => t += v,
+            }
+        }
+        (w, io, t)
+    };
+    let (mw, mio, mt) = cap_of(&m.per_tensor_occupancy);
+    let (sw, sio, st) = cap_of(&s.per_tensor_occupancy);
+
+    let wl = format!("VGG-E c1+c2 ({rows}px)");
+    vec![
+        ValRow {
+            design: "Fused-layer CNN",
+            workload: wl.clone(),
+            metric: "latency (cycles)",
+            looptree: m.latency_cycles as f64,
+            reference: s.latency_cycles as f64,
+            published: None,
+        },
+        ValRow {
+            design: "Fused-layer CNN",
+            workload: wl.clone(),
+            metric: "WBuf (elems)",
+            looptree: mw,
+            reference: sw,
+            published: None,
+        },
+        ValRow {
+            design: "Fused-layer CNN",
+            workload: wl.clone(),
+            metric: "IOBuf (elems)",
+            looptree: mio,
+            reference: sio,
+            published: None,
+        },
+        ValRow {
+            design: "Fused-layer CNN",
+            workload: wl.clone(),
+            metric: "TBuf (elems)",
+            looptree: mt,
+            reference: st,
+            published: None,
+        },
+        ValRow {
+            design: "Fused-layer CNN",
+            workload: wl,
+            metric: "offchip (elems)",
+            looptree: m.offchip_total() as f64,
+            reference: (s.offchip_reads + s.offchip_writes) as f64,
+            published: None,
+        },
+    ]
+}
+
+// ------------------------------------------------------------------ ISAAC --
+
+/// ISAAC [17]: column-partitioned (Q) pipeline between conv layers backed by
+/// eDRAM inter-stage buffers. Validated outputs: energy, buffer capacity.
+/// The published Table VII numbers scale with `rows × channels × kernel
+/// halo`; the reproduced claim is the model-vs-reference agreement and the
+/// per-layer capacity *scaling* across VGG-1 layers.
+pub fn validate_isaac(scale: Scale) -> Vec<ValRow> {
+    let mut out = Vec::new();
+    // Per-layer inter-stage buffers: ISAAC's Table (paper Table VII) sizes
+    // the eDRAM buffer feeding each conv layer — a few kernel rows of that
+    // layer's *input* fmap, which is exactly the input-fmap occupancy of a
+    // column-partitioned pipeline in our taxonomy. (layer tag, in-ch,
+    // spatial, out-ch); Test runs at reduced resolution.
+    let configs: Vec<(&str, i64, i64, i64)> = match scale {
+        Scale::Test => vec![("conv1", 3, 12, 8), ("conv2", 8, 12, 8), ("conv3", 8, 8, 16)],
+        Scale::Full => vec![
+            ("conv1", 3, 56, 64),
+            ("conv2", 64, 56, 64),
+            ("conv3", 64, 28, 128),
+            ("conv5", 128, 14, 256),
+        ],
+    };
+    let arch = presets::isaac();
+    for (tag, c, hw, m_ch) in configs {
+        let fs = FusionSetBuilder::new(&format!("vgg1-{tag}"), &[c, hw + 2, hw + 2])
+            .conv2d(m_ch, 3, 3, 1)
+            .conv2d(m_ch, 3, 3, 1)
+            .build();
+        // Column partitioning: Q of the last layer, balanced-throughput
+        // pipeline (the ISAAC assumption).
+        let q = fs.last().rank_index("Q2").unwrap();
+        let mut mapping = InterLayerMapping::tiled(
+            vec![Partition { dim: q, tile: 2 }],
+            Parallelism::Pipeline,
+        );
+        for (x, t) in fs.tensors.iter().enumerate() {
+            let lvl = match t.kind {
+                TensorKind::Weight => 0, // weights live in the crossbars
+                _ => 1,
+            };
+            mapping = mapping.with_retention(TensorId(x), lvl);
+        }
+        let (m, s) = run(&fs, &arch, &mapping);
+        out.push(ValRow {
+            design: "ISAAC",
+            workload: format!("VGG-1 {tag}"),
+            metric: "energy (uJ)",
+            looptree: m.energy_uj(),
+            reference: s.energy_pj / 1e6,
+            published: None,
+        });
+        // The layer's input buffer (column window of the input fmap).
+        out.push(ValRow {
+            design: "ISAAC",
+            workload: format!("VGG-1 {tag}"),
+            metric: "input buf (elems)",
+            looptree: m.per_tensor_occupancy[0] as f64,
+            reference: s.per_tensor_occupancy[0] as f64,
+            published: None,
+        });
+    }
+    out
+}
+
+// -------------------------------------------------------------- PipeLayer --
+
+/// PipeLayer [18]: batch-partitioned ReRAM pipeline. Validated output: the
+/// pipeline-over-sequential speedup (paper Table VIII: AlexNet 4.8×, VGG-A
+/// 7.9×..8.0×, MNIST-A 2.0×, MNIST-B 2.9×..3.0×).
+pub fn validate_pipelayer(scale: Scale) -> Vec<ValRow> {
+    let batch = match scale {
+        Scale::Test => 4,
+        Scale::Full => 32,
+    };
+    let arch = presets::pipelayer();
+    let mut out = Vec::new();
+    let cases: Vec<(&str, FusionSet, Option<f64>)> = vec![
+        (
+            "AlexNet c3-c5",
+            match scale {
+                Scale::Test => small_batched_chain(batch, 3, 8, 10),
+                Scale::Full => crate::einsum::workloads::alexnet_convs_batched(batch),
+            },
+            Some(4.8),
+        ),
+        (
+            "VGG-A stage",
+            match scale {
+                Scale::Test => small_batched_chain(batch, 3, 6, 12),
+                Scale::Full => crate::einsum::workloads::vgg_a_convs_batched(batch),
+            },
+            Some(8.0),
+        ),
+        (
+            "MNIST-A",
+            crate::einsum::workloads::mnist_convs_batched(batch, 2),
+            Some(2.0),
+        ),
+        (
+            "MNIST-B",
+            crate::einsum::workloads::mnist_convs_batched(batch, 3),
+            Some(3.0),
+        ),
+    ];
+    for (tag, fs, published) in cases {
+        let b = fs.last().rank_index(&format!("B{}", fs.num_layers())).unwrap();
+        let mk = |par| {
+            let mut m =
+                InterLayerMapping::tiled(vec![Partition { dim: b, tile: 1 }], par);
+            for (x, t) in fs.tensors.iter().enumerate() {
+                let lvl = if t.kind == TensorKind::Weight { 0 } else { 1 };
+                m = m.with_retention(TensorId(x), lvl);
+            }
+            m
+        };
+        let (m_seq, s_seq) = run(&fs, &arch, &mk(Parallelism::Sequential));
+        let (m_pipe, s_pipe) = run(&fs, &arch, &mk(Parallelism::Pipeline));
+        let lt_speedup = m_seq.compute_cycles as f64 / m_pipe.compute_cycles as f64;
+        let sim_speedup = s_seq.compute_cycles as f64 / s_pipe.compute_cycles as f64;
+        out.push(ValRow {
+            design: "PipeLayer",
+            workload: tag.into(),
+            metric: "pipeline speedup",
+            looptree: lt_speedup,
+            reference: sim_speedup,
+            published,
+        });
+    }
+    out
+}
+
+/// A small batched conv chain for test-scale PipeLayer runs.
+fn small_batched_chain(batch: i64, layers: usize, ch: i64, hw: i64) -> FusionSet {
+    let mut b = FusionSetBuilder::new(
+        &format!("chain{layers}(b{batch})"),
+        &[batch, ch, hw + 2 * layers as i64, hw + 2 * layers as i64],
+    );
+    for _ in 0..layers {
+        b.conv2d_batched(ch, 3, 3, 1);
+    }
+    b.build()
+}
+
+// ------------------------------------------------------------------- FLAT --
+
+/// FLAT [30]: fused attention with B, H, M partitioning, sequential tiles.
+/// Validated outputs: latency and off-chip transfers across tile shapes
+/// (paper Fig 13: normalized series, ≤3.4% divergence).
+pub fn validate_flat(scale: Scale) -> Vec<ValRow> {
+    let (batch, heads, tokens, emb) = match scale {
+        Scale::Test => (2, 2, 32, 8),
+        Scale::Full => (4, 8, 128, 32),
+    };
+    let arch = presets::flat();
+    let fs = crate::einsum::workloads::self_attention(batch, heads, tokens, emb);
+    let last = fs.last();
+    let b = last.rank_index("B2").unwrap();
+    let h = last.rank_index("H2").unwrap();
+    let mrank = last.rank_index("M2").unwrap();
+    let mut out = Vec::new();
+    for m_tile in [tokens / 8, tokens / 4, tokens / 2] {
+        if m_tile < 1 {
+            continue;
+        }
+        let mut mapping = InterLayerMapping::tiled(
+            vec![
+                Partition { dim: b, tile: 1 },
+                Partition { dim: h, tile: 1 },
+                Partition { dim: mrank, tile: m_tile },
+            ],
+            Parallelism::Sequential,
+        );
+        for (x, t) in fs.tensors.iter().enumerate() {
+            let lvl = if t.kind == TensorKind::Weight { 3 } else { 3 };
+            let _ = t;
+            mapping = mapping.with_retention(TensorId(x), lvl);
+        }
+        let (m, s) = run(&fs, &arch, &mapping);
+        let wl = format!("attn Mt={m_tile}");
+        out.push(ValRow {
+            design: "FLAT",
+            workload: wl.clone(),
+            metric: "latency (cycles)",
+            looptree: m.latency_cycles as f64,
+            reference: s.latency_cycles as f64,
+            published: None,
+        });
+        out.push(ValRow {
+            design: "FLAT",
+            workload: wl,
+            metric: "offchip (elems)",
+            looptree: m.offchip_total() as f64,
+            reference: (s.offchip_reads + s.offchip_writes) as f64,
+            published: None,
+        });
+    }
+    out
+}

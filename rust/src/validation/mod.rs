@@ -1,0 +1,57 @@
+//! Validation against prior architectures (paper §V, Tables V–VIII, Fig 13).
+//!
+//! Each prior accelerator is encoded as a (workload, architecture, mapping)
+//! triple per its publication's dataflow description (paper Table V):
+//!
+//! | Design          | Partitioned ranks    | Retain-recompute | Parallelism |
+//! |-----------------|----------------------|------------------|-------------|
+//! | DepFin [43]     | Row, column          | Fully retain     | sequential  |
+//! | Fused-layer [16]| Row, column          | Fully retain     | pipeline    |
+//! | ISAAC [17]      | Column               | Fully retain     | pipeline    |
+//! | PipeLayer [18]  | Batch                | Fully retain     | pipeline    |
+//! | FLAT [30]       | Batch, heads, tokens | Fully retain     | sequential  |
+//!
+//! **Reference methodology.** The publications' absolute numbers come from
+//! testbeds we cannot re-run (FPGA synthesis, ReRAM arrays, the FLAT
+//! simulator). Following the paper's own approach for Fused-layer CNN ("we
+//! create a simulation based on the architecture description"), the
+//! reference for every design is our element-level executable simulator
+//! (`sim`), and the validation claim reproduced is the *error band*: the
+//! LoopTree analytical model agrees with an executed reference within the
+//! paper's ≤4% worst case. Where the publication's relative results are
+//! derivable (PipeLayer's pipeline speedups, ISAAC's per-layer buffer
+//! scaling, DepFin's exact-match energy/transfers), the tables also print
+//! the published values for comparison. See DESIGN.md §substitutions.
+
+mod designs;
+mod report;
+
+pub use designs::{
+    validate_depfin, validate_flat, validate_fused_cnn, validate_isaac, validate_pipelayer,
+};
+pub use report::{summarize, ValRow};
+
+/// Workload scale: tests run reduced spatial sizes (the element-level
+/// reference simulator is O(elements)); benches run the full sizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Reduced spatial dims for fast CI runs.
+    Test,
+    /// Publication-sized workloads (bench / report runs).
+    Full,
+}
+
+/// Run every validation and return all rows (the paper's Table V summary is
+/// derived from these via [`summarize`]).
+pub fn run_all(scale: Scale) -> Vec<ValRow> {
+    let mut rows = Vec::new();
+    rows.extend(validate_depfin(scale));
+    rows.extend(validate_fused_cnn(scale));
+    rows.extend(validate_isaac(scale));
+    rows.extend(validate_pipelayer(scale));
+    rows.extend(validate_flat(scale));
+    rows
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,68 @@
+//! Validation row/report types.
+
+use crate::util::table::Table;
+
+/// One validated metric: LoopTree model value vs. the executed reference.
+#[derive(Debug, Clone)]
+pub struct ValRow {
+    pub design: &'static str,
+    pub workload: String,
+    pub metric: &'static str,
+    /// LoopTree analytical model.
+    pub looptree: f64,
+    /// Executed reference (element-level simulator).
+    pub reference: f64,
+    /// Published value, when the publication reports a comparable number
+    /// (informational; our substrate differs — see module docs).
+    pub published: Option<f64>,
+}
+
+impl ValRow {
+    pub fn error_pct(&self) -> f64 {
+        if self.reference == 0.0 {
+            if self.looptree == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            100.0 * (self.looptree - self.reference).abs() / self.reference.abs()
+        }
+    }
+}
+
+/// Render rows as a table plus a per-design max-error summary (the paper's
+/// Table V "Max. error" column).
+pub fn summarize(rows: &[ValRow]) -> String {
+    let mut t = Table::new(&[
+        "design", "workload", "metric", "LoopTree", "reference", "published", "err %",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.design.to_string(),
+            r.workload.clone(),
+            r.metric.to_string(),
+            format!("{:.4}", r.looptree),
+            format!("{:.4}", r.reference),
+            r.published.map(|p| format!("{p:.4}")).unwrap_or_else(|| "-".into()),
+            format!("{:.2}", r.error_pct()),
+        ]);
+    }
+    let mut out = t.render();
+    out.push('\n');
+
+    let mut designs: Vec<&str> = rows.iter().map(|r| r.design).collect();
+    designs.dedup();
+    let mut s = Table::new(&["design", "max error %"]);
+    for d in designs {
+        let max = rows
+            .iter()
+            .filter(|r| r.design == d)
+            .map(|r| r.error_pct())
+            .fold(0.0f64, f64::max);
+        s.row(&[d.to_string(), format!("{max:.2}")]);
+    }
+    out.push_str("Table V summary (model vs executed reference):\n");
+    out.push_str(&s.render());
+    out
+}

@@ -1,0 +1,211 @@
+//! PJRT runtime integration: load the AOT artifacts, execute, and verify
+//! that the rust-driven tile pipeline (L3 owning the inter-layer schedule)
+//! reproduces the monolithic reference numerics.
+//!
+//! Requires `make artifacts` (skipped with a notice when absent, so cargo
+//! test works before the python step in fresh checkouts).
+
+use looptree::runtime::Runtime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Deterministic pseudo-random inputs (xorshift; any data works — rust
+/// drives the fused pipeline and the reference with the same values).
+fn gen_inputs(ch: i64, h: i64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut seed = 0x12345678u64;
+    let mut next = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        (seed as f64 / u64::MAX as f64) as f32 - 0.5
+    };
+    let x: Vec<f32> = (0..ch * h * h).map(|_| next()).collect();
+    let w1: Vec<f32> = (0..ch * ch * 9).map(|_| next() * 0.1).collect();
+    let w2: Vec<f32> = (0..ch * ch * 9).map(|_| next() * 0.1).collect();
+    (x, w1, w2)
+}
+
+#[test]
+fn fused_artifact_matches_reference_executable() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let ch = rt.config_i64("channels").unwrap();
+    let rows = rt.config_i64("rows").unwrap();
+    let halo_t = rt.config_i64("halo_total").unwrap();
+    let h = rows + halo_t;
+    let (x, w1, w2) = gen_inputs(ch, h);
+    let xs = [ch, h, h];
+    let ws = [ch, ch, 3, 3];
+
+    let fused = rt
+        .load("conv_conv_fused")
+        .unwrap()
+        .run_f32(&[(&x, &xs), (&w1, &ws), (&w2, &ws)])
+        .unwrap();
+    let reference = rt
+        .load("conv_conv_ref")
+        .unwrap()
+        .run_f32(&[(&x, &xs), (&w1, &ws), (&w2, &ws)])
+        .unwrap();
+    assert_eq!(fused.len(), reference.len());
+    for (i, (a, b)) in fused.iter().zip(&reference).enumerate() {
+        assert!((a - b).abs() < 1e-3, "elem {i}: fused {a} vs ref {b}");
+    }
+}
+
+#[test]
+fn mlp_fused_artifact_matches_reference() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let (tokens, d1, e1, e2) = (
+        rt.config_i64("tokens").unwrap(),
+        rt.config_i64("d1").unwrap(),
+        rt.config_i64("e1").unwrap(),
+        rt.config_i64("e2").unwrap(),
+    );
+    let mut seed = 99u64;
+    let mut next = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        (seed as f64 / u64::MAX as f64) as f32 - 0.5
+    };
+    let x: Vec<f32> = (0..tokens * d1).map(|_| next()).collect();
+    let w1: Vec<f32> = (0..d1 * e1).map(|_| next() * 0.1).collect();
+    let w2: Vec<f32> = (0..e1 * e2).map(|_| next() * 0.1).collect();
+    let fused = rt
+        .load("mlp_fused")
+        .unwrap()
+        .run_f32(&[(&x, &[tokens, d1]), (&w1, &[d1, e1]), (&w2, &[e1, e2])])
+        .unwrap();
+    let reference = rt
+        .load("mlp_ref")
+        .unwrap()
+        .run_f32(&[(&x, &[tokens, d1]), (&w1, &[d1, e1]), (&w2, &[e1, e2])])
+        .unwrap();
+    for (i, (a, b)) in fused.iter().zip(&reference).enumerate() {
+        assert!((a - b).abs() < 1e-3, "elem {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn rust_driven_tile_pipeline_matches_reference() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let ch = rt.config_i64("channels").unwrap() as usize;
+    let rows = rt.config_i64("rows").unwrap() as usize;
+    let tile_p = rt.config_i64("tile_p").unwrap() as usize;
+    let halo1 = rt.config_i64("halo1").unwrap() as usize;
+    let halo_t = rt.config_i64("halo_total").unwrap() as usize;
+    let h = rows + halo_t;
+    let w2cols = h - 2; // fmap2 width
+    let (x, w1, w2) = gen_inputs(ch as i64, h as i64);
+    let xs = [ch as i64, h as i64, h as i64];
+    let ws = [ch as i64, ch as i64, 3, 3];
+
+    let reference = rt
+        .load("conv_conv_ref")
+        .unwrap()
+        .run_f32(&[(&x, &xs), (&w1, &ws), (&w2, &ws)])
+        .unwrap();
+
+    // Rust-driven retain dataflow: stage1 produces only fresh Fmap2 rows; a
+    // sliding band of tile_p + halo1 rows feeds stage2 — the L3 coordinator
+    // owns the inter-layer schedule, PJRT owns per-tile compute.
+    let slice_rows = |data: &[f32], r0: usize, nrows: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(ch * nrows * h);
+        for c in 0..ch {
+            let base = c * h * h + r0 * h;
+            out.extend_from_slice(&data[base..base + nrows * h]);
+        }
+        out
+    };
+
+    // fmap2 rows in (row -> [ch * w2cols], channel-major per row) form.
+    let mut fmap2_rows: Vec<Vec<f32>> = Vec::new();
+    let mut out_tiles: Vec<Vec<f32>> = Vec::new();
+    let mut produced = 0usize;
+
+    for i in 0..rows / tile_p {
+        let (fresh_rows, x_block, stage) = if i == 0 {
+            let fresh = tile_p + halo1;
+            (fresh, slice_rows(&x, 0, fresh + 2), "conv_stage1_first")
+        } else {
+            let fresh = tile_p;
+            (
+                fresh,
+                slice_rows(&x, produced, fresh + 2),
+                "conv_stage1_steady",
+            )
+        };
+        let in_rows = fresh_rows + 2;
+        let xbs = [ch as i64, in_rows as i64, h as i64];
+        let f2 = rt
+            .load(stage)
+            .unwrap()
+            .run_f32(&[(&x_block, &xbs), (&w1, &ws)])
+            .unwrap();
+        // f2 layout [ch, fresh_rows, w2cols] -> per-row buffers.
+        for r in 0..fresh_rows {
+            let mut rowbuf = Vec::with_capacity(ch * w2cols);
+            for c in 0..ch {
+                let base = c * fresh_rows * w2cols + r * w2cols;
+                rowbuf.extend_from_slice(&f2[base..base + w2cols]);
+            }
+            fmap2_rows.push(rowbuf);
+        }
+        produced += fresh_rows;
+
+        // Sliding band: the last tile_p + halo1 fmap2 rows.
+        let band_rows = tile_p + halo1;
+        let start = fmap2_rows.len() - band_rows;
+        let mut band = vec![0f32; ch * band_rows * w2cols];
+        for (ri, row) in fmap2_rows[start..].iter().enumerate() {
+            for c in 0..ch {
+                let src = &row[c * w2cols..(c + 1) * w2cols];
+                let dst = c * band_rows * w2cols + ri * w2cols;
+                band[dst..dst + w2cols].copy_from_slice(src);
+            }
+        }
+        let bs = [ch as i64, band_rows as i64, w2cols as i64];
+        let tile = rt
+            .load("conv_stage2")
+            .unwrap()
+            .run_f32(&[(&band, &bs), (&w2, &ws)])
+            .unwrap();
+        out_tiles.push(tile);
+    }
+    assert_eq!(produced, rows + halo1, "retain dataflow: fmap2 produced once");
+
+    // Assemble [ch, rows, out_cols] from per-tile [ch, tile_p, out_cols].
+    let out_cols = w2cols - 2;
+    let mut got = vec![0f32; ch * rows * out_cols];
+    for (ti, tile) in out_tiles.iter().enumerate() {
+        for c in 0..ch {
+            for r in 0..tile_p {
+                let src = c * tile_p * out_cols + r * out_cols;
+                let dst = c * rows * out_cols + (ti * tile_p + r) * out_cols;
+                got[dst..dst + out_cols].copy_from_slice(&tile[src..src + out_cols]);
+            }
+        }
+    }
+    assert_eq!(got.len(), reference.len());
+    for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+        assert!((a - b).abs() < 1e-3, "elem {i}: pipeline {a} vs ref {b}");
+    }
+    // The executed schedule's stats exist for model cross-checks.
+    let stats = rt.total_stats();
+    assert!(stats.invocations >= (rows / tile_p) as u64 * 2);
+}

@@ -1,0 +1,113 @@
+//! Search + coordinator integration: end-to-end DSE flows over real
+//! workloads, checking search quality and coordinator determinism.
+
+use looptree::arch::Arch;
+use looptree::coordinator::Coordinator;
+use looptree::einsum::workloads;
+use looptree::mapspace::{pareto_front, MapSpace, MapSpaceConfig, ParetoPoint};
+use looptree::model::Metrics;
+use looptree::search;
+
+fn edp(m: &Metrics) -> f64 {
+    let p = if m.capacity_ok { 1.0 } else { 1e9 };
+    p * m.latency_cycles as f64 * m.energy.total_pj()
+}
+
+#[test]
+fn exhaustive_beats_or_matches_heuristics() {
+    let fs = workloads::conv_conv(28, 32);
+    let arch = Arch::generic(128);
+    let pool = Coordinator::new(2);
+    let cfg = MapSpaceConfig {
+        schedules: vec![
+            vec!["P2".into()],
+            vec!["P2".into(), "Q2".into()],
+            vec!["C2".into()],
+        ],
+        tile_sizes: vec![4, 8],
+        ..Default::default()
+    };
+    let ex = search::exhaustive(&fs, &arch, &cfg, edp, &pool).unwrap();
+    let ann = search::annealing(&fs, &arch, 300, 3, edp).unwrap();
+    let gen_ = search::genetic(&fs, &arch, 16, 10, 3, edp, &pool).unwrap();
+    // The restricted-space exhaustive optimum is a meaningful baseline: the
+    // heuristics roam a larger space, so they may do better — but never
+    // catastrophically worse.
+    assert!(ann.best.score <= ex.best.score * 10.0);
+    assert!(gen_.best.score <= ex.best.score * 10.0);
+    // The exhaustive search over this restricted space must find the best
+    // of its own evaluations (sanity).
+    let min = ex.evaluated.iter().map(|s| s.score).fold(f64::INFINITY, f64::min);
+    assert_eq!(ex.best.score, min);
+}
+
+#[test]
+fn feasibility_under_capacity_pressure() {
+    // With a tiny GLB the search must still find *feasible* mappings, and
+    // they should be tiled (untiled fusion cannot fit).
+    let fs = workloads::conv_conv(28, 64);
+    let arch = Arch::generic(48); // 48 KiB
+    let pool = Coordinator::new(2);
+    let cfg = MapSpaceConfig::default();
+    let res = search::exhaustive(&fs, &arch, &cfg, edp, &pool).unwrap();
+    assert!(res.best.metrics.capacity_ok, "no feasible mapping found");
+    assert!(
+        !res.best.mapping.partitions.is_empty(),
+        "a tiled mapping is required at this capacity"
+    );
+}
+
+#[test]
+fn pareto_front_from_search_results() {
+    let fs = workloads::conv_conv(28, 32);
+    let arch = Arch::generic(1 << 20).unbounded_glb();
+    let pool = Coordinator::new(2);
+    let cfg = MapSpaceConfig {
+        schedules: vec![vec!["P2".into()], vec!["C2".into()]],
+        tile_sizes: vec![2, 4, 8],
+        ..Default::default()
+    };
+    let res = search::exhaustive(&fs, &arch, &cfg, |m| m.occupancy_peak as f64, &pool).unwrap();
+    let pts: Vec<ParetoPoint<()>> = res
+        .evaluated
+        .iter()
+        .map(|s| ParetoPoint {
+            x: s.metrics.occupancy_peak as f64,
+            y: s.metrics.offchip_total() as f64,
+            payload: (),
+        })
+        .collect();
+    let front = pareto_front(pts);
+    assert!(!front.is_empty());
+    // Fronts are monotone: increasing capacity never increases transfers.
+    for w in front.windows(2) {
+        assert!(w[0].x < w[1].x && w[0].y > w[1].y);
+    }
+}
+
+#[test]
+fn mapspace_counts_scale_with_constraints() {
+    let fs = workloads::pwise_dwise_pwise(28, 16);
+    let base = MapSpaceConfig {
+        schedules: vec![vec!["P3".into(), "Q3".into()]],
+        tile_sizes: vec![4],
+        ..Default::default()
+    };
+    let full = MapSpace::enumerate(&fs, &base);
+    let uniform = MapSpace::enumerate(
+        &fs,
+        &MapSpaceConfig { uniform_retention: true, ..base.clone() },
+    );
+    // Per-tensor retention: (k+1)^(#non-output tensors) per tile point vs
+    // k+1 for uniform.
+    assert!(full.len() > 10 * uniform.len());
+}
+
+#[test]
+fn coordinator_scales_workers() {
+    // Same results regardless of worker count (already covered), and no
+    // deadlocks with more workers than jobs.
+    let pool = Coordinator::new(16);
+    let out = pool.run(3, |i| i + 1);
+    assert_eq!(out, vec![1, 2, 3]);
+}

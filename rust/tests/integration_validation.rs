@@ -1,0 +1,32 @@
+//! Full validation-suite integration: run everything end to end at test
+//! scale and check the Table V claim (worst-case error within the paper's
+//! band plus small-scale pipeline-fill slack).
+
+use looptree::validation::{run_all, summarize, Scale};
+
+#[test]
+fn all_validations_within_band() {
+    let rows = run_all(Scale::Test);
+    assert!(rows.len() >= 15, "expected a full validation sweep");
+    // Count metrics (transfers, capacities, ops) are exact; latency and
+    // derived metrics stay within the paper's band + fill slack.
+    let worst = rows.iter().map(|r| r.error_pct()).fold(0.0f64, f64::max);
+    assert!(worst <= 8.0, "worst-case error {worst:.2}%");
+    // The exact-count subset really is exact.
+    for r in &rows {
+        if r.metric.contains("elems") {
+            assert_eq!(
+                r.looptree, r.reference,
+                "{} {} {} must be exact",
+                r.design, r.workload, r.metric
+            );
+        }
+    }
+    // Every design from Table V appears.
+    for d in ["DepFin", "Fused-layer CNN", "ISAAC", "PipeLayer", "FLAT"] {
+        assert!(rows.iter().any(|r| r.design == d), "{d} missing");
+    }
+    // And the summary renders a max-error line per design.
+    let text = summarize(&rows);
+    assert!(text.contains("Table V summary"));
+}

@@ -1,0 +1,163 @@
+//! Property-based cross-validation: random workloads × random mappings must
+//! satisfy the model's invariants, and the model must agree with the
+//! element-level simulator on every count. The PRNG is deterministic
+//! (seeded), so failures are reproducible.
+
+use looptree::arch::Arch;
+use looptree::einsum::{workloads, FusionSet, TensorId, TensorKind};
+use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
+use looptree::model::{evaluate, EvalOptions};
+use looptree::sim::simulate;
+use looptree::util::prng::Prng;
+
+/// Sample a random workload small enough for the element-level simulator.
+fn random_fusion_set(rng: &mut Prng) -> FusionSet {
+    match rng.index(5) {
+        0 => workloads::conv_conv(4 + rng.range_i64(0, 10), 2 + rng.range_i64(0, 4)),
+        1 => workloads::conv_conv_conv(6 + rng.range_i64(0, 8), 2 + rng.range_i64(0, 2)),
+        2 => workloads::pwise_dwise_pwise(4 + rng.range_i64(0, 8), 2 + rng.range_i64(0, 3)),
+        3 => workloads::fc_fc(8 + rng.range_i64(0, 24), 4 + rng.range_i64(0, 12)),
+        _ => workloads::self_attention(1, 2, 8 + rng.range_i64(0, 8), 4),
+    }
+}
+
+/// Sample a random mapping for the fusion set: 0–3 partitioned ranks with
+/// random tiles, random per-tensor retention levels, random parallelism.
+fn random_mapping(fs: &FusionSet, rng: &mut Prng) -> InterLayerMapping {
+    let last = fs.last();
+    let nparts = rng.index(4);
+    let mut dims: Vec<usize> = (0..last.ndim()).collect();
+    rng.shuffle(&mut dims);
+    let mut partitions = Vec::new();
+    for &dim in dims.iter().take(nparts) {
+        let extent = last.rank_sizes[dim];
+        if extent < 2 {
+            continue;
+        }
+        let tile = rng.range_i64(1, extent);
+        partitions.push(Partition { dim, tile });
+    }
+    let parallelism = if rng.chance(0.5) {
+        Parallelism::Sequential
+    } else {
+        Parallelism::Pipeline
+    };
+    let k = partitions.len();
+    let mut m = InterLayerMapping::tiled(partitions, parallelism);
+    for x in 0..fs.tensors.len() {
+        if rng.chance(0.5) {
+            m = m.with_retention(TensorId(x), rng.index(k + 1));
+        }
+    }
+    m
+}
+
+#[test]
+fn model_matches_simulator_on_random_mappings() {
+    let mut rng = Prng::new(0xC0FFEE);
+    let arch = Arch::generic(1 << 20);
+    let mut checked = 0;
+    for case in 0..60 {
+        let fs = random_fusion_set(&mut rng);
+        let mapping = random_mapping(&fs, &mut rng);
+        if mapping.total_iterations(&fs) > 4000 {
+            continue; // keep the element-level simulator fast
+        }
+        let m = evaluate(&fs, &arch, &mapping, &EvalOptions::default())
+            .unwrap_or_else(|e| panic!("case {case} ({}): model: {e}", fs.name));
+        let s = simulate(&fs, &arch, &mapping)
+            .unwrap_or_else(|e| panic!("case {case} ({}): sim: {e}", fs.name));
+        let tag = format!(
+            "case {case}: {} sched={} ret={:?} par={:?}",
+            fs.name,
+            mapping.schedule_string(&fs),
+            (0..fs.tensors.len())
+                .map(|x| mapping.retention_for(TensorId(x)))
+                .collect::<Vec<_>>(),
+            mapping.parallelism
+        );
+        assert_eq!(m.offchip_reads, s.offchip_reads, "{tag}: reads");
+        assert_eq!(m.offchip_writes, s.offchip_writes, "{tag}: writes");
+        assert_eq!(m.total_ops, s.total_ops, "{tag}: ops");
+        assert_eq!(m.recompute_ops, s.recompute_ops, "{tag}: recompute");
+        assert_eq!(
+            m.per_tensor_occupancy, s.per_tensor_occupancy,
+            "{tag}: occupancy"
+        );
+        assert_eq!(
+            m.per_tensor_offchip, s.per_tensor_offchip,
+            "{tag}: per-tensor offchip"
+        );
+        checked += 1;
+    }
+    assert!(checked >= 30, "only {checked} cases exercised");
+}
+
+#[test]
+fn model_invariants_on_random_mappings() {
+    let mut rng = Prng::new(0xBEEF);
+    let arch = Arch::generic(1 << 20);
+    for case in 0..120 {
+        let fs = random_fusion_set(&mut rng);
+        let mapping = random_mapping(&fs, &mut rng);
+        if mapping.total_iterations(&fs) > 100_000 {
+            continue;
+        }
+        let m = evaluate(&fs, &arch, &mapping, &EvalOptions::default())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let tag = format!("case {case}: {} {}", fs.name, mapping.schedule_string(&fs));
+
+        // Work is never below the algorithmic minimum.
+        assert!(m.total_ops >= fs.total_ops(), "{tag}: ops below algmin");
+        assert_eq!(m.total_ops - fs.total_ops(), m.recompute_ops, "{tag}");
+        assert!(m.recompute_ops >= 0, "{tag}: negative recompute");
+
+        // Transfers are never below the algorithmic minimum.
+        assert!(
+            m.offchip_total() >= fs.algmin_offchip_elems(),
+            "{tag}: transfers below algmin"
+        );
+        // The final output is written exactly once.
+        let out = fs.tensors_of_kind(TensorKind::OutputFmap)[0];
+        assert_eq!(m.per_tensor_offchip[out.0], fs.tensor(out).size(), "{tag}");
+
+        // Occupancy sanity: every non-intermediate tensor's peak is at most
+        // its full size...
+        for (x, t) in fs.tensors.iter().enumerate() {
+            if t.kind != TensorKind::Intermediate {
+                assert!(
+                    m.per_tensor_occupancy[x] <= t.size(),
+                    "{tag}: {} occupancy {} > size {}",
+                    t.name,
+                    m.per_tensor_occupancy[x],
+                    t.size()
+                );
+            }
+        }
+        // ...and the peak never exceeds the per-tensor sum.
+        let sum: i64 = m.per_tensor_occupancy.iter().sum();
+        assert!(m.occupancy_peak <= sum, "{tag}: peak {} > sum {sum}", m.occupancy_peak);
+
+        // Latency covers both compute and memory.
+        assert!(m.latency_cycles >= m.compute_cycles.max(m.memory_cycles), "{tag}");
+        assert!(m.energy.total_pj() > 0.0, "{tag}: zero energy");
+    }
+}
+
+#[test]
+fn untiled_mapping_is_always_algmin() {
+    let mut rng = Prng::new(7);
+    let arch = Arch::generic(1 << 20);
+    for _ in 0..20 {
+        let fs = random_fusion_set(&mut rng);
+        let m = evaluate(
+            &fs,
+            &arch,
+            &InterLayerMapping::untiled(Parallelism::Sequential),
+            &EvalOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(m.recompute_ops, 0, "{}", fs.name);
+        assert_eq!(m.offchip_total(), fs.algmin_offchip_elems(), "{}", fs.name);
+    }
+}

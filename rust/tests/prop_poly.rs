@@ -1,0 +1,185 @@
+//! Property-based tests for the rectilinear-region substrate: randomized
+//! set-algebra identities checked against a brute-force point-set oracle.
+//! Every other layer of the system (model, simulator, case studies) rests
+//! on these operations being exact.
+
+use looptree::poly::{AffineExpr, AffineMap, IBox, Interval, Region};
+use looptree::util::prng::Prng;
+use std::collections::HashSet;
+
+const DIMS: usize = 3;
+const COORD: i64 = 8; // small universe so the oracle is cheap
+
+fn random_box(rng: &mut Prng) -> IBox {
+    IBox::new(
+        (0..DIMS)
+            .map(|_| {
+                let lo = rng.range_i64(-2, COORD);
+                let hi = lo + rng.range_i64(0, 5);
+                Interval::new(lo, hi)
+            })
+            .collect(),
+    )
+}
+
+fn points(b: &IBox) -> HashSet<Vec<i64>> {
+    let mut out = HashSet::new();
+    if b.is_empty() {
+        return out;
+    }
+    let mut c: Vec<i64> = b.dims.iter().map(|d| d.lo).collect();
+    loop {
+        out.insert(c.clone());
+        let mut d = DIMS;
+        loop {
+            if d == 0 {
+                return out;
+            }
+            d -= 1;
+            c[d] += 1;
+            if c[d] < b.dims[d].hi {
+                break;
+            }
+            c[d] = b.dims[d].lo;
+        }
+    }
+}
+
+fn region_points(r: &Region) -> HashSet<Vec<i64>> {
+    let mut out = HashSet::new();
+    for b in r.boxes() {
+        out.extend(points(b));
+    }
+    out
+}
+
+#[test]
+fn region_ops_match_point_set_oracle() {
+    let mut rng = Prng::new(0x901F);
+    for case in 0..300 {
+        let nboxes = 1 + rng.index(3);
+        let mut r = Region::empty(DIMS);
+        let mut oracle: HashSet<Vec<i64>> = HashSet::new();
+        for _ in 0..nboxes {
+            let b = random_box(&mut rng);
+            r.union_box(&b);
+            oracle.extend(points(&b));
+        }
+        // Volume == point count; representation stays disjoint.
+        assert_eq!(r.volume() as usize, oracle.len(), "case {case}: union volume");
+        assert_eq!(region_points(&r), oracle, "case {case}: union points");
+
+        // Subtract a random box.
+        let s = random_box(&mut rng);
+        let sub = r.subtract_box(&s);
+        let mut oracle_sub = oracle.clone();
+        for p in points(&s) {
+            oracle_sub.remove(&p);
+        }
+        assert_eq!(region_points(&sub), oracle_sub, "case {case}: subtract");
+
+        // Intersect with a random box.
+        let i = random_box(&mut rng);
+        let inter = r.intersect_box(&i);
+        let ipts = points(&i);
+        let oracle_int: HashSet<_> = oracle.intersection(&ipts).cloned().collect();
+        assert_eq!(region_points(&inter), oracle_int, "case {case}: intersect");
+
+        // Coalesce preserves the set.
+        let mut co = r.clone();
+        co.coalesce();
+        assert_eq!(region_points(&co), oracle, "case {case}: coalesce");
+        assert!(co.complexity() <= r.complexity(), "case {case}: coalesce grew");
+    }
+}
+
+#[test]
+fn region_algebra_identities() {
+    let mut rng = Prng::new(77);
+    for case in 0..200 {
+        let mut a = Region::empty(DIMS);
+        let mut b = Region::empty(DIMS);
+        for _ in 0..(1 + rng.index(2)) {
+            a.union_box(&random_box(&mut rng));
+            b.union_box(&random_box(&mut rng));
+        }
+        // (A − B) ∪ (A ∩ B) == A
+        let mut rebuilt = a.subtract(&b);
+        rebuilt.union(&a.intersect(&b));
+        assert!(rebuilt.set_eq(&a), "case {case}: partition identity");
+        // A − B and B are disjoint.
+        assert_eq!(a.subtract(&b).intersect(&b).volume(), 0, "case {case}");
+        // Inclusion-exclusion on volumes.
+        let mut u = a.clone();
+        u.union(&b);
+        assert_eq!(
+            u.volume(),
+            a.volume() + b.volume() - a.intersect(&b).volume(),
+            "case {case}: inclusion-exclusion"
+        );
+        // Containment is antisymmetric with set_eq.
+        if a.contains_region(&b) && b.contains_region(&a) {
+            assert!(a.set_eq(&b), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn affine_image_matches_pointwise_map() {
+    let mut rng = Prng::new(1234);
+    for case in 0..200 {
+        // A random 2-term affine map with positive coefficients (the access
+        // pattern family of our Einsums: p, p+r, 2p+r).
+        let c0 = rng.range_i64(1, 3);
+        let c1 = rng.range_i64(1, 3);
+        let off = rng.range_i64(-2, 3);
+        let expr = AffineExpr::sum((0, c0), (1, c1)).with_offset(off);
+        let map = AffineMap::new(vec![expr.clone(), AffineExpr::var(2)]);
+        let b = {
+            // non-empty box only
+            let mut bb = random_box(&mut rng);
+            for d in bb.dims.iter_mut() {
+                if d.is_empty() {
+                    *d = Interval::new(d.lo, d.lo + 1);
+                }
+            }
+            bb
+        };
+        let img = map.image_box(&b);
+        // Oracle: apply the map to every point; image box must contain all
+        // attained values and its bounds must be attained.
+        let mut attained = HashSet::new();
+        for p in points(&b) {
+            let v0 = c0 * p[0] + c1 * p[1] + off;
+            attained.insert((v0, p[2]));
+            assert!(img.dims[0].contains(v0), "case {case}: {v0} not in {img}");
+            assert!(img.dims[1].contains(p[2]), "case {case}");
+        }
+        let lo = attained.iter().map(|&(v, _)| v).min().unwrap();
+        let hi = attained.iter().map(|&(v, _)| v).max().unwrap();
+        assert_eq!(img.dims[0], Interval::new(lo, hi + 1), "case {case}: tight bounds");
+    }
+}
+
+#[test]
+fn preimage_roundtrip_identity_maps() {
+    let mut rng = Prng::new(4321);
+    for _ in 0..100 {
+        let full = IBox::from_bounds(&[(0, 8), (0, 8), (0, 8)]);
+        let map = AffineMap::identity(&[0, 2]);
+        let mut data = IBox::new(vec![
+            Interval::new(rng.range_i64(0, 4), rng.range_i64(4, 9)),
+            Interval::new(rng.range_i64(0, 4), rng.range_i64(4, 9)),
+        ]);
+        // Clip to the full box's projection.
+        data = data.intersect(&IBox::from_bounds(&[(0, 8), (0, 8)]));
+        let ops = map.preimage_identity_box(&data, &full);
+        // The image of the preimage is exactly the data box.
+        let img = map.image_box(&ops);
+        assert_eq!(img, data);
+        // The preimage extends fully along the unmentioned dim.
+        if !ops.is_empty() {
+            assert_eq!(ops.dims[1], Interval::new(0, 8));
+        }
+    }
+}

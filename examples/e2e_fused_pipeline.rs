@@ -17,7 +17,7 @@
 use looptree::arch::Arch;
 use looptree::einsum::{workloads, TensorId, TensorKind};
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
-use looptree::model::{evaluate, EvalOptions};
+use looptree::model::Evaluator;
 use looptree::runtime::Runtime;
 use std::time::Instant;
 
@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
     // The workload matching the artifacts: conv+conv with P2 = rows.
     let fs = workloads::conv_conv(rows - 2, ch); // builder adds +2 per layer
     let arch = Arch::generic(64); // 64 KiB GLB
+    let ev = Evaluator::new(&fs, &arch).expect("valid specs");
     let last = fs.last();
     let p2 = last.rank_index("P2").unwrap();
     let fmap2 = TensorId(2);
@@ -71,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             Parallelism::Sequential,
         )
         .with_retention(fmap2, 1);
-        let m = evaluate(&fs, &arch, &mapping, &EvalOptions::default()).unwrap();
+        let m = ev.evaluate(&mapping).unwrap();
         let available = compiled_tiles.contains(&tile);
         println!(
             "  candidate tile {tile}: occupancy {} elems, offchip {} elems, fits={} artifact={}",
@@ -88,7 +89,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let (_, mapping) = best.expect("no feasible mapping with a compiled artifact");
-    let model_metrics = evaluate(&fs, &arch, &mapping, &EvalOptions::default()).unwrap();
+    let model_metrics = ev.evaluate(&mapping).unwrap();
     println!(
         "\nchosen mapping: schedule {}, tile {} (model: {})",
         mapping.schedule_string(&fs),

@@ -5,7 +5,7 @@
 //!
 //! Run with: `cargo run --release --example mobilenet_recompute`
 
-use looptree::casestudies::study_tiles;
+use looptree::casestudies::{study_session, study_tiles};
 use looptree::einsum::{workloads, TensorId, TensorKind};
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
 use looptree::mapspace::{pareto_front, ParetoPoint};
@@ -17,6 +17,7 @@ fn main() {
     ]);
     for (stage, &(w, c)) in workloads::MOBILENETV2_STAGES.iter().enumerate() {
         let fs = workloads::mobilenetv2_block(stage);
+        let ev = study_session(&fs);
         let last = fs.last();
         let p3 = last.rank_index("P3").unwrap();
         let q3 = last.rank_index("Q3").unwrap();
@@ -38,7 +39,7 @@ fn main() {
                         let lvl = if combo >> i & 1 == 1 { 2 } else { 1 };
                         mapping = mapping.with_retention(t, lvl);
                     }
-                    let m = looptree::casestudies::eval(&fs, &mapping);
+                    let m = looptree::casestudies::eval(&ev, &mapping);
                     let cap: i64 = m.per_tensor_occupancy.iter().sum();
                     pts.push(ParetoPoint {
                         x: m.recompute_fraction(),

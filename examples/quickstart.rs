@@ -1,12 +1,13 @@
-//! Quickstart: define a fusion set, pick a mapping, evaluate it with the
-//! LoopTree model, and compare a few retention choices.
+//! Quickstart: define a fusion set, open a validate-once `Evaluator`
+//! session, evaluate a few retention choices, and serialize the winner as
+//! JSON.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
 use looptree::arch::Arch;
 use looptree::einsum::{workloads, TensorId};
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
-use looptree::model::{evaluate, EvalOptions};
+use looptree::model::Evaluator;
 
 fn main() {
     // Two fused 3×3 conv layers, ResNet-ish shape: 28×28 spatial, 64 ch.
@@ -16,8 +17,10 @@ fn main() {
         println!("  {:8} {:?} ({:?})", t.name, t.shape, t.kind);
     }
 
-    // A 256 KiB-GLB Eyeriss-class accelerator.
+    // A 256 KiB-GLB Eyeriss-class accelerator. The session validates both
+    // specs once; every evaluate() after that is the cheap hot path.
     let arch = Arch::generic(256);
+    let ev = Evaluator::new(&fs, &arch).expect("valid specs");
 
     // Partition the last layer's output rows (P2) into tiles of 4 and
     // process tiles sequentially: the classic fused-layer dataflow.
@@ -26,18 +29,14 @@ fn main() {
         vec![Partition { dim: p2, tile: 4 }],
         Parallelism::Sequential,
     );
-    let m = evaluate(&fs, &arch, &mapping, &EvalOptions::default()).unwrap();
+    let m = ev.evaluate(&mapping).unwrap();
     println!("\nP2-tiled fused mapping: {}", m.summary());
     println!("fits in 256 KiB GLB: {}", m.capacity_ok);
 
     // Compare against untiled fusion (whole intermediate retained)...
-    let untiled = evaluate(
-        &fs,
-        &arch,
-        &InterLayerMapping::untiled(Parallelism::Sequential),
-        &EvalOptions::default(),
-    )
-    .unwrap();
+    let untiled = ev
+        .evaluate(&InterLayerMapping::untiled(Parallelism::Sequential))
+        .unwrap();
     println!("\nuntiled fusion:         {}", untiled.summary());
     println!(
         "tiling reduces required capacity {:.1}x at the same off-chip traffic",
@@ -47,24 +46,32 @@ fn main() {
     // ...and against a recompute variant (retain only the innermost tile).
     let fmap2 = TensorId(2);
     let q2 = fs.last().rank_index("Q2").unwrap();
-    let recompute = evaluate(
-        &fs,
-        &arch,
-        &InterLayerMapping::tiled(
-            vec![
-                Partition { dim: p2, tile: 4 },
-                Partition { dim: q2, tile: 7 },
-            ],
-            Parallelism::Sequential,
-        )
-        .with_retention(fmap2, 2),
-        &EvalOptions::default(),
+    let recompute_mapping = InterLayerMapping::tiled(
+        vec![
+            Partition { dim: p2, tile: 4 },
+            Partition { dim: q2, tile: 7 },
+        ],
+        Parallelism::Sequential,
     )
-    .unwrap();
+    .with_retention(fmap2, 2);
+    let recompute = ev.evaluate(&recompute_mapping).unwrap();
     println!("\nrecompute variant:      {}", recompute.summary());
     println!(
         "recomputation: +{:.1}% ops for {:.1}x less intermediate buffer",
         100.0 * recompute.recompute_fraction(),
         m.per_tensor_occupancy[2] as f64 / recompute.per_tensor_occupancy[2] as f64
     );
+
+    // Everything round-trips through the JSON spec layer — this document is
+    // a valid `looptree analyze --config` input.
+    let mut doc = looptree::spec::AnalyzeConfig {
+        workload: fs.clone(),
+        arch: arch.clone(),
+        mapping: recompute_mapping,
+    }
+    .to_json();
+    if let looptree::util::json::Json::Obj(o) = &mut doc {
+        o.insert("metrics".into(), recompute.to_json());
+    }
+    println!("\nJSON spec (analyze --config compatible):\n{}", doc.pretty());
 }

@@ -10,39 +10,39 @@ use looptree::arch::Arch;
 use looptree::coordinator::Coordinator;
 use looptree::einsum::workloads;
 use looptree::mapspace::MapSpaceConfig;
-use looptree::model::Metrics;
-use looptree::search::exhaustive;
+use looptree::model::Evaluator;
+use looptree::search::{self, Objective, SearchSpec};
 use looptree::util::table::Table;
 
 fn main() {
     let arch = Arch::generic(128); // 128 KiB GLB
     let pool = Coordinator::new(0);
-    let objective = |m: &Metrics| -> f64 {
-        let penalty = if m.capacity_ok { 1.0 } else { 1e9 };
-        penalty * m.latency_cycles as f64 * m.energy.total_pj()
-    };
 
     let mut table = Table::new(&[
         "stage", "shape", "best schedule", "tiles", "latency (cyc)", "energy (uJ)", "occupancy", "fits",
     ]);
     for (stage, &(w, c)) in workloads::RESNET18_STAGES.iter().enumerate() {
         let fs = workloads::resnet18_block(stage);
-        let cfg = MapSpaceConfig {
-            // Keep the sweep tractable: the interesting single- and
-            // double-rank schedules with a few tile sizes.
-            schedules: vec![
-                vec!["P2".into()],
-                vec!["P2".into(), "Q2".into()],
-                vec!["C2".into()],
-                vec!["C2".into(), "P2".into()],
-                vec!["M2".into()],
-            ],
-            tile_sizes: vec![2, 4, 8],
-            uniform_retention: false,
+        let spec = SearchSpec {
+            objective: Objective::FeasibleEdp,
+            mapspace: MapSpaceConfig {
+                // Keep the sweep tractable: the interesting single- and
+                // double-rank schedules with a few tile sizes.
+                schedules: vec![
+                    vec!["P2".into()],
+                    vec!["P2".into(), "Q2".into()],
+                    vec!["C2".into()],
+                    vec!["C2".into(), "P2".into()],
+                    vec!["M2".into()],
+                ],
+                tile_sizes: vec![2, 4, 8],
+                uniform_retention: false,
+                ..Default::default()
+            },
             ..Default::default()
         };
-        let res = exhaustive(&fs, &arch, &cfg, objective, &pool)
-            .expect("search found no mapping");
+        let ev = Evaluator::new(&fs, &arch).expect("valid specs");
+        let res = search::run(&ev, &spec, &pool).expect("search found no mapping");
         let b = &res.best;
         table.row(&[
             format!("conv{}_x", stage + 2),

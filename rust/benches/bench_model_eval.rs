@@ -1,21 +1,53 @@
 //! Model-evaluation throughput: the paper's §IV claim that the analytical
-//! model is orders of magnitude faster than simulation. Times model and
-//! simulator on identical configurations and reports the ratio, plus raw
-//! mapping-evaluations/second across workload sizes.
+//! model is orders of magnitude faster than simulation, plus the
+//! validate-once `Evaluator` session vs. the legacy free `evaluate()` —
+//! the session skips per-call spec validation and intra-layer default
+//! derivation, which dominates small walks.
 
 use looptree::arch::Arch;
 use looptree::einsum::workloads;
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
-use looptree::model::{evaluate, EvalOptions};
+use looptree::model::{evaluate, EvalOptions, Evaluator};
 use looptree::sim::simulate;
 use looptree::util::bench::bench;
 
 fn main() {
     let arch = Arch::generic(1 << 20);
     let opts = EvalOptions::default();
-    println!("== model evaluation throughput ==");
+
+    println!("== validate-once session vs per-call validation ==");
+    for (rows, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8)] {
+        let fs = workloads::conv_conv(rows, ch);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let mapping = InterLayerMapping::tiled(
+            vec![Partition { dim: p2, tile }],
+            Parallelism::Sequential,
+        );
+        let legacy = bench(
+            &format!("free evaluate  r{rows} c{ch} tile{tile}"),
+            3,
+            30,
+            || evaluate(&fs, &arch, &mapping, &opts).unwrap(),
+        );
+        let session = bench(
+            &format!("session        r{rows} c{ch} tile{tile}"),
+            3,
+            30,
+            || ev.evaluate(&mapping).unwrap(),
+        );
+        println!("{}", legacy.report());
+        println!("{}", session.report());
+        println!(
+            "    session speedup: {:.2}x",
+            legacy.mean.as_secs_f64() / session.mean.as_secs_f64().max(1e-12)
+        );
+    }
+
+    println!("\n== model evaluation throughput (session) ==");
     for (rows, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8), (112, 64, 14)] {
         let fs = workloads::conv_conv(rows, ch);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
         let p2 = fs.last().rank_index("P2").unwrap();
         let mapping = InterLayerMapping::tiled(
             vec![Partition { dim: p2, tile }],
@@ -25,7 +57,7 @@ fn main() {
             &format!("model conv_conv r{rows} c{ch} tile{tile}"),
             3,
             20,
-            || evaluate(&fs, &arch, &mapping, &opts).unwrap(),
+            || ev.evaluate(&mapping).unwrap(),
         );
         println!("{}", r.report());
         println!(
@@ -37,6 +69,7 @@ fn main() {
     println!("\n== two-level (P2,Q2) heavy walk ==");
     {
         let fs = workloads::conv_conv(56, 64);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
         let p2 = fs.last().rank_index("P2").unwrap();
         let q2 = fs.last().rank_index("Q2").unwrap();
         let mapping = InterLayerMapping::tiled(
@@ -47,21 +80,20 @@ fn main() {
             Parallelism::Sequential,
         );
         let r = bench("model conv_conv r56 c64 P2,Q2 (104 iters)", 2, 10, || {
-            evaluate(&fs, &arch, &mapping, &opts).unwrap()
+            ev.evaluate(&mapping).unwrap()
         });
         println!("{}", r.report());
     }
 
     println!("\n== model vs element-level simulator (same config) ==");
     let fs = workloads::conv_conv(20, 8);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
     let p2 = fs.last().rank_index("P2").unwrap();
     let mapping = InterLayerMapping::tiled(
         vec![Partition { dim: p2, tile: 4 }],
         Parallelism::Sequential,
     );
-    let m = bench("analytical model", 3, 20, || {
-        evaluate(&fs, &arch, &mapping, &opts).unwrap()
-    });
+    let m = bench("analytical model", 3, 20, || ev.evaluate(&mapping).unwrap());
     let s = bench("simulator", 1, 3, || simulate(&fs, &arch, &mapping).unwrap());
     println!("{}", m.report());
     println!("{}", s.report());
@@ -70,6 +102,3 @@ fn main() {
         s.mean.as_secs_f64() / m.mean.as_secs_f64()
     );
 }
-
-#[allow(dead_code)]
-fn two_level() {}

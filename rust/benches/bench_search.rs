@@ -1,51 +1,68 @@
 //! Search-algorithm benchmark: exhaustive vs random vs annealing vs genetic
-//! on the same objective and budget (paper §VII-C: prior search strategies
-//! adapt to the LoopTree mapspace).
+//! through the unified `search::run` entry point on one shared `Evaluator`
+//! session (paper §VII-C: prior search strategies adapt to the LoopTree
+//! mapspace).
 
 use looptree::arch::Arch;
 use looptree::coordinator::Coordinator;
 use looptree::einsum::workloads;
 use looptree::mapspace::MapSpaceConfig;
-use looptree::model::Metrics;
-use looptree::search;
+use looptree::model::Evaluator;
+use looptree::search::{self, Algorithm, Objective, SearchSpec};
 use looptree::util::bench::bench_once;
 
 fn main() {
     let fs = workloads::conv_conv(28, 64);
     let arch = Arch::generic(128);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
     let pool = Coordinator::new(0);
-    let objective = |m: &Metrics| -> f64 {
-        let p = if m.capacity_ok { 1.0 } else { 1e9 };
-        p * m.latency_cycles as f64 * m.energy.total_pj()
-    };
 
-    let cfg = MapSpaceConfig {
-        schedules: vec![
-            vec!["P2".into()],
-            vec!["P2".into(), "Q2".into()],
-            vec!["C2".into()],
-            vec!["C2".into(), "P2".into()],
-        ],
-        tile_sizes: vec![2, 4, 8],
+    let base = SearchSpec {
+        objective: Objective::FeasibleEdp,
+        seed: 7,
+        samples: 500,
+        iters: 500,
+        population: 20,
+        generations: 25,
+        mapspace: MapSpaceConfig {
+            schedules: vec![
+                vec!["P2".into()],
+                vec!["P2".into(), "Q2".into()],
+                vec!["C2".into()],
+                vec!["C2".into(), "P2".into()],
+            ],
+            tile_sizes: vec![2, 4, 8],
+            ..Default::default()
+        },
         ..Default::default()
     };
+
     let (ex, t) = bench_once("exhaustive", || {
-        search::exhaustive(&fs, &arch, &cfg, objective, &pool).unwrap()
+        let spec = SearchSpec { algorithm: Algorithm::Exhaustive, ..base.clone() };
+        search::run(&ev, &spec, &pool).unwrap()
     });
-    println!("{}  -> best {:.3e} over {} mappings", t.report(), ex.best.score, ex.evaluated.len());
+    println!(
+        "{}  -> best {:.3e} over {} mappings",
+        t.report(),
+        ex.best.score,
+        ex.evaluated.len()
+    );
 
     let (rnd, t) = bench_once("random (500 samples)", || {
-        search::random_search(&fs, &arch, 500, 7, objective, &pool).unwrap()
+        let spec = SearchSpec { algorithm: Algorithm::Random, ..base.clone() };
+        search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), rnd.best.score);
 
     let (ann, t) = bench_once("annealing (500 iters)", || {
-        search::annealing(&fs, &arch, 500, 7, objective).unwrap()
+        let spec = SearchSpec { algorithm: Algorithm::Annealing, ..base.clone() };
+        search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), ann.best.score);
 
     let (gen_, t) = bench_once("genetic (20x25)", || {
-        search::genetic(&fs, &arch, 20, 25, 7, objective, &pool).unwrap()
+        let spec = SearchSpec { algorithm: Algorithm::Genetic, ..base.clone() };
+        search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), gen_.best.score);
 

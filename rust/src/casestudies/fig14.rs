@@ -6,9 +6,10 @@
 //! retains) the *smallest* tensors; choices differ by up to 10×, and no
 //! single choice wins for every fusion-set shape.
 
-use super::{eval, study_tiles};
+use super::{eval, study_session, study_tiles};
 use crate::einsum::{workloads, FusionSet, TensorId, TensorKind};
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::model::Evaluator;
 use crate::util::table::Table;
 
 /// One bar of the figure: a schedule's minimum capacity at alg-min
@@ -49,7 +50,11 @@ fn candidate_schedules(fs: &FusionSet) -> Vec<Vec<String>> {
 
 /// Minimum capacity at alg-min transfers for one schedule (searching tile
 /// shapes and per-tensor retention; paper Table IX row B).
-pub fn min_capacity_algmin(fs: &FusionSet, schedule: &[String]) -> Option<(i64, Vec<(String, i64)>, i64)> {
+pub fn min_capacity_algmin(
+    ev: &Evaluator,
+    schedule: &[String],
+) -> Option<(i64, Vec<(String, i64)>, i64)> {
+    let fs = ev.fusion_set();
     let last = fs.last();
     let dims: Vec<usize> = schedule.iter().map(|r| last.rank_index(r).unwrap()).collect();
     let algmin = fs.algmin_offchip_elems();
@@ -88,7 +93,7 @@ pub fn min_capacity_algmin(fs: &FusionSet, schedule: &[String]) -> Option<(i64, 
                 mapping = mapping.with_retention(t, c % (k + 1));
                 c /= k + 1;
             }
-            let m = eval(fs, &mapping);
+            let m = eval(ev, &mapping);
             if m.recompute_ops != 0 || m.offchip_total() != algmin {
                 continue;
             }
@@ -155,8 +160,9 @@ pub fn run(fast: bool) -> Vec<Bar> {
     }
 
     for (shape, fs) in sets {
+        let ev = study_session(&fs);
         for sched in candidate_schedules(&fs) {
-            let res = min_capacity_algmin(&fs, &sched);
+            let res = min_capacity_algmin(&ev, &sched);
             bars.push(Bar {
                 fusion_set: fs.name.split('(').next().unwrap_or(&fs.name).to_string(),
                 shape: shape.clone(),

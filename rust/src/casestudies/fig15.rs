@@ -7,10 +7,11 @@
 //! schedule (recomputing small fmap tiles buys little when filters dominate
 //! the buffer).
 
-use super::{eval, study_tiles};
-use crate::einsum::{workloads, FusionSet, TensorId, TensorKind};
+use super::{eval, study_session, study_tiles};
+use crate::einsum::{workloads, TensorId, TensorKind};
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::{pareto_front, ParetoPoint};
+use crate::model::Evaluator;
 use crate::util::table::Table;
 
 /// One Pareto point: normalized recompute vs capacity, with breakdown.
@@ -30,7 +31,8 @@ pub struct Curve {
 
 /// Pareto front of (recompute, capacity) for one schedule, alg-min
 /// transfers enforced (paper Table IX row C).
-pub fn pareto_for_schedule(fs: &FusionSet, schedule: &[String]) -> Vec<Point> {
+pub fn pareto_for_schedule(ev: &Evaluator, schedule: &[String]) -> Vec<Point> {
+    let fs = ev.fusion_set();
     let last = fs.last();
     let dims: Vec<usize> = schedule.iter().map(|r| last.rank_index(r).unwrap()).collect();
     let algmin = fs.algmin_offchip_elems();
@@ -65,7 +67,7 @@ pub fn pareto_for_schedule(fs: &FusionSet, schedule: &[String]) -> Vec<Point> {
                 mapping = mapping.with_retention(t, c % (k + 1));
                 c /= k + 1;
             }
-            let m = eval(fs, &mapping);
+            let m = eval(ev, &mapping);
             if m.offchip_total() != algmin {
                 continue; // the study fixes transfers at the alg. minimum
             }
@@ -105,13 +107,14 @@ pub fn run(fast: bool) -> Vec<Curve> {
     let mut out = Vec::new();
     for &(r, c) in shapes {
         let fs = workloads::pwise_dwise_pwise(r, c);
+        let ev = study_session(&fs);
         for sched in [
             vec!["P3".to_string()],
             vec!["P3".to_string(), "Q3".to_string()],
             vec!["P3".to_string(), "C3".to_string(), "Q3".to_string()],
             vec!["C3".to_string(), "P3".to_string(), "Q3".to_string()],
         ] {
-            let points = pareto_for_schedule(&fs, &sched);
+            let points = pareto_for_schedule(&ev, &sched);
             out.push(Curve {
                 shape: format!("r{r},c{c}"),
                 schedule: sched.join(","),

@@ -5,10 +5,11 @@
 //! Paper takeaway 3: per-tensor retention adapts each tensor's retained
 //! tile to its own reuse pattern; uniform retention over-retains filters.
 
-use super::eval;
+use super::{eval, study_session};
 use crate::einsum::{workloads, FusionSet, TensorId, TensorKind};
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::{pareto_front, ParetoPoint};
+use crate::model::Evaluator;
 use crate::util::table::Table;
 
 #[derive(Debug, Clone)]
@@ -24,7 +25,8 @@ pub struct Result14 {
     pub uniform: Vec<Point>,
 }
 
-fn explore(fs: &FusionSet, uniform: bool) -> Vec<Point> {
+fn explore(ev: &Evaluator, uniform: bool) -> Vec<Point> {
+    let fs = ev.fusion_set();
     let last = fs.last();
     let p = last.rank_index("P2").unwrap();
     let q = last.rank_index("Q2").unwrap();
@@ -58,7 +60,7 @@ fn explore(fs: &FusionSet, uniform: bool) -> Vec<Point> {
             for lvl in 0..=k {
                 let mapping = InterLayerMapping::tiled(partitions.clone(), Parallelism::Sequential)
                     .with_uniform_retention(lvl);
-                let m = eval(fs, &mapping);
+                let m = eval(ev, &mapping);
                 if m.total_ops != algmin_ops {
                     continue; // no recomputation in this study
                 }
@@ -83,7 +85,7 @@ fn explore(fs: &FusionSet, uniform: bool) -> Vec<Point> {
                     mapping = mapping.with_retention(t, cc % (k + 1));
                     cc /= k + 1;
                 }
-                let m = eval(fs, &mapping);
+                let m = eval(ev, &mapping);
                 if m.total_ops != algmin_ops {
                     continue;
                 }
@@ -114,9 +116,10 @@ fn breakdown(fs: &FusionSet, occ: &[i64]) -> Vec<(String, i64)> {
 pub fn run(fast: bool) -> Result14 {
     let (r, c) = if fast { (28, 32) } else { (56, 64) };
     let fs = workloads::conv_conv(r, c);
+    let ev = study_session(&fs);
     Result14 {
-        per_tensor: explore(&fs, false),
-        uniform: explore(&fs, true),
+        per_tensor: explore(&ev, false),
+        uniform: explore(&ev, true),
     }
 }
 

@@ -5,7 +5,7 @@
 //! *later* fmaps compounds into earlier layers, so "recompute Fmap2 /
 //! retain Fmap3" dominates "retain Fmap2 / recompute Fmap3".
 
-use super::{eval, study_tiles};
+use super::{eval, study_session, study_tiles};
 use crate::einsum::{workloads, TensorId};
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::{pareto_front, ParetoPoint};
@@ -23,6 +23,7 @@ pub struct Curve {
 pub fn run(fast: bool) -> Vec<Curve> {
     let (r, c) = if fast { (24, 8) } else { (56, 32) };
     let fs = workloads::conv_conv_conv(r, c);
+    let ev = study_session(&fs);
     let last = fs.last();
     let p3 = last.rank_index("P3").unwrap();
     let q3 = last.rank_index("Q3").unwrap();
@@ -52,7 +53,7 @@ pub fn run(fast: bool) -> Vec<Curve> {
                 )
                 .with_retention(fmap2, l2)
                 .with_retention(fmap3, l3);
-                let m = eval(&fs, &mapping);
+                let m = eval(&ev, &mapping);
                 let cap: i64 = m.per_tensor_occupancy.iter().sum();
                 pts.push(ParetoPoint {
                     x: m.recompute_fraction(),

@@ -6,10 +6,11 @@
 //! the layer-by-layer baseline often wins (intra-layer reuse is more
 //! abundant than inter-layer reuse).
 
-use super::eval;
-use crate::einsum::{workloads, FusionSet, FusionSetBuilder, TensorId, TensorKind};
+use super::{eval, study_session};
+use crate::einsum::{workloads, FusionSetBuilder, TensorId, TensorKind};
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::{pareto_front, ParetoPoint};
+use crate::model::Evaluator;
 use crate::util::table::Table;
 
 #[derive(Debug, Clone)]
@@ -21,7 +22,8 @@ pub struct Fronts {
 }
 
 /// Tiled-fusion front: P2,Q2 schedules, per-tensor retention, no recompute.
-fn fused_front(fs: &FusionSet) -> Vec<(i64, i64)> {
+fn fused_front(ev: &Evaluator) -> Vec<(i64, i64)> {
+    let fs = ev.fusion_set();
     let last = fs.last();
     let p = last.rank_index("P2").unwrap();
     let q = last.rank_index("Q2").unwrap();
@@ -49,7 +51,7 @@ fn fused_front(fs: &FusionSet) -> Vec<(i64, i64)> {
                     mapping = mapping.with_retention(t, c % (k + 1));
                     c /= k + 1;
                 }
-                let m = eval(fs, &mapping);
+                let m = eval(ev, &mapping);
                 if m.recompute_ops != 0 {
                     continue;
                 }
@@ -63,7 +65,7 @@ fn fused_front(fs: &FusionSet) -> Vec<(i64, i64)> {
         }
     }
     // Untiled fusion also belongs to the fused mapspace's extreme.
-    let m = eval(fs, &InterLayerMapping::untiled(Parallelism::Sequential));
+    let m = eval(ev, &InterLayerMapping::untiled(Parallelism::Sequential));
     let cap: i64 = m.per_tensor_occupancy.iter().sum();
     pts.push(ParetoPoint { x: cap as f64, y: m.offchip_total() as f64, payload: (cap, m.offchip_total()) });
     pareto_front(pts).into_iter().map(|p| p.payload).collect()
@@ -81,8 +83,8 @@ fn layer_by_layer_front(rows: i64, channels: i64) -> Vec<(i64, i64)> {
     let l2 = FusionSetBuilder::new("l2", &[channels, rows, rows])
         .conv2d(channels, 3, 3, 1)
         .build();
-    let f1 = single_layer_front(&l1);
-    let f2 = single_layer_front(&l2);
+    let f1 = single_layer_front(&study_session(&l1));
+    let f2 = single_layer_front(&study_session(&l2));
     let mut pts = Vec::new();
     for &(c1, t1) in &f1 {
         for &(c2, t2) in &f2 {
@@ -96,7 +98,8 @@ fn layer_by_layer_front(rows: i64, channels: i64) -> Vec<(i64, i64)> {
     pareto_front(pts).into_iter().map(|p| p.payload).collect()
 }
 
-fn single_layer_front(fs: &FusionSet) -> Vec<(i64, i64)> {
+fn single_layer_front(ev: &Evaluator) -> Vec<(i64, i64)> {
+    let fs = ev.fusion_set();
     let last = fs.last();
     let tensors: Vec<TensorId> = fs
         .tensors
@@ -126,7 +129,7 @@ fn single_layer_front(fs: &FusionSet) -> Vec<(i64, i64)> {
                 mapping = mapping.with_retention(t, c % (k + 1));
                 c /= k + 1;
             }
-            let m = eval(fs, &mapping);
+            let m = eval(ev, &mapping);
             let cap: i64 = m.per_tensor_occupancy.iter().sum();
             pts.push(ParetoPoint {
                 x: cap as f64,
@@ -142,7 +145,7 @@ pub fn run(fast: bool) -> Fronts {
     let (rows, channels) = if fast { (28, 32) } else { (56, 64) };
     let fs = workloads::conv_conv(rows, channels);
     Fronts {
-        fused: fused_front(&fs),
+        fused: fused_front(&study_session(&fs)),
         baseline: layer_by_layer_front(rows, channels),
     }
 }

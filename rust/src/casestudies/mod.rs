@@ -18,18 +18,25 @@ pub mod fig18;
 use crate::arch::Arch;
 use crate::einsum::FusionSet;
 use crate::mapping::InterLayerMapping;
-use crate::model::{evaluate, EvalOptions, Metrics};
+use crate::model::{Evaluator, Metrics};
 
 /// The case-study architecture: generic Eyeriss-class, unbounded GLB.
 pub fn study_arch() -> Arch {
     Arch::generic(1 << 20).unbounded_glb()
 }
 
-/// Evaluate, panicking on structural errors (case-study mappings are
-/// generated, so errors are bugs).
-pub fn eval(fs: &FusionSet, mapping: &InterLayerMapping) -> Metrics {
-    evaluate(fs, &study_arch(), mapping, &EvalOptions::default())
-        .unwrap_or_else(|e| panic!("{}: {e}", fs.name))
+/// Validate-once session on the study architecture: each figure's sweep
+/// evaluates hundreds of mappings of the same fusion set, so the figures
+/// create one session per fusion set and reuse it (the hot-path API).
+pub fn study_session(fs: &FusionSet) -> Evaluator {
+    Evaluator::new(fs, &study_arch()).unwrap_or_else(|e| panic!("{}: {e}", fs.name))
+}
+
+/// Evaluate on a session, panicking on structural errors (case-study
+/// mappings are generated, so errors are bugs).
+pub fn eval(ev: &Evaluator, mapping: &InterLayerMapping) -> Metrics {
+    ev.evaluate(mapping)
+        .unwrap_or_else(|e| panic!("{}: {e}", ev.fusion_set().name))
 }
 
 /// Tile-size choices for a rank in the studies: extent/8 and extent/4

@@ -5,13 +5,14 @@
 //! queue — the offline image has no tokio, and model evaluation is pure CPU
 //! work with no I/O to overlap). The coordinator is also used by the e2e
 //! example to drive batched PJRT tile execution.
+//!
+//! Workers collect `(index, result)` pairs locally and the pool merges them
+//! by index after join — no shared lock on the result vector, so fine-grained
+//! jobs (cheap model walks) do not contend on every completion.
 
-use crate::arch::Arch;
-use crate::einsum::FusionSet;
 use crate::mapping::InterLayerMapping;
-use crate::model::{evaluate, EvalOptions, Metrics};
+use crate::model::{Evaluator, Metrics};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// A worker pool for embarrassingly parallel DSE jobs.
 #[derive(Debug, Clone)]
@@ -36,16 +37,15 @@ impl Coordinator {
         self.workers
     }
 
-    /// Evaluate every mapping; results preserve input order. Individual
-    /// failures are reported per slot, not propagated.
+    /// Evaluate every mapping on one session; results preserve input order.
+    /// Individual failures are reported per slot, not propagated.
+    /// Convenience alias for [`Evaluator::evaluate_batch`] on this pool.
     pub fn evaluate_all(
         &self,
-        fs: &FusionSet,
-        arch: &Arch,
+        ev: &Evaluator,
         mappings: &[InterLayerMapping],
-        opts: &EvalOptions,
     ) -> Vec<Result<Metrics, String>> {
-        self.run(mappings.len(), |i| evaluate(fs, arch, &mappings[i], opts))
+        ev.evaluate_batch(mappings, self)
     }
 
     /// Generic indexed fan-out: run `job(i)` for `i in 0..n` on the pool.
@@ -57,27 +57,41 @@ impl Coordinator {
         if n == 0 {
             return Vec::new();
         }
-        let mut results: Vec<Option<T>> = Vec::with_capacity(n);
-        results.resize_with(n, || None);
-        let results = Mutex::new(results);
         let next = AtomicUsize::new(0);
         let nworkers = self.workers.min(n).max(1);
 
-        std::thread::scope(|scope| {
-            for _ in 0..nworkers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let out = job(i);
-                    results.lock().unwrap()[i] = Some(out);
-                });
-            }
+        // Each worker drains the shared counter into a private vector; the
+        // pairs are merged by index once every worker has joined.
+        let locals: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..nworkers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut out: Vec<(usize, T)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            out.push((i, job(i)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("worker panicked"))
+                .collect()
         });
+
+        let mut results: Vec<Option<T>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+        for local in locals {
+            for (i, v) in local {
+                results[i] = Some(v);
+            }
+        }
         results
-            .into_inner()
-            .unwrap()
             .into_iter()
             .map(|o| o.expect("worker skipped a slot"))
             .collect()
@@ -87,6 +101,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::Arch;
     use crate::einsum::workloads;
     use crate::mapspace::{MapSpace, MapSpaceConfig};
 
@@ -101,9 +116,9 @@ mod tests {
             ..Default::default()
         };
         let ms = MapSpace::enumerate(&fs, &cfg);
-        let opts = EvalOptions::default();
-        let par = Coordinator::new(4).evaluate_all(&fs, &arch, ms.mappings(), &opts);
-        let ser = Coordinator::new(1).evaluate_all(&fs, &arch, ms.mappings(), &opts);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let par = Coordinator::new(4).evaluate_all(&ev, ms.mappings());
+        let ser = Coordinator::new(1).evaluate_all(&ev, ms.mappings());
         assert_eq!(par.len(), ser.len());
         for (p, s) in par.iter().zip(&ser) {
             let (p, s) = (p.as_ref().unwrap(), s.as_ref().unwrap());
@@ -118,6 +133,18 @@ mod tests {
         let c = Coordinator::new(3);
         let out = c.run(100, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn merge_covers_every_slot_under_contention() {
+        // Many tiny jobs over many workers: the per-worker collection path
+        // must still produce exactly one result per index.
+        let c = Coordinator::new(8);
+        let out = c.run(10_000, |i| i);
+        assert_eq!(out.len(), 10_000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
     }
 
     #[test]

@@ -3,7 +3,37 @@
 //! A reproduction of *"LoopTree: Exploring the Fused-layer Dataflow
 //! Accelerator Design Space"* (Gilbert, Wu, Emer, Sze — IEEE TCASAI 2024).
 //!
-//! The crate provides:
+//! ## Quickstart: sessions, search, and the spec layer
+//!
+//! The public API is built around three pieces:
+//!
+//! * [`model::Evaluator`] — a **validate-once session** for one
+//!   (fusion set, architecture) pair. Construction validates both specs and
+//!   precomputes per-layer intra-layer defaults; `evaluate` then walks one
+//!   [`mapping::InterLayerMapping`] with only cheap per-call checks, and
+//!   `evaluate_batch` fans a batch out over a [`coordinator::Coordinator`]
+//!   worker pool. This is the hot path every search and case study uses.
+//! * [`search::run`] — one entry point for all four search algorithms
+//!   (exhaustive, random, annealing, genetic), driven by a serializable
+//!   [`search::SearchSpec`] with a [`search::Objective`] enum instead of
+//!   ad-hoc closures.
+//! * [`spec`] — JSON `to_json`/`from_json` round-trips for every spec and
+//!   result type ([`einsum::FusionSet`], [`arch::Arch`],
+//!   [`mapping::InterLayerMapping`], [`mapspace::MapSpaceConfig`],
+//!   [`search::SearchSpec`], [`model::Metrics`]), so external tools and the
+//!   CLI (`looptree analyze|search --config file.json --json`) can drive the
+//!   crate declaratively.
+//!
+//! ```text
+//! let fs = einsum::workloads::conv_conv(28, 64);
+//! let arch = arch::Arch::generic(256);
+//! let ev = model::Evaluator::new(&fs, &arch)?;          // validate once
+//! let m = ev.evaluate(&mapping)?;                       // evaluate many
+//! let res = search::run(&ev, &search::SearchSpec::default(), &pool);
+//! let doc = res.unwrap().best.mapping.to_json();        // serialize
+//! ```
+//!
+//! ## Modules
 //!
 //! * [`einsum`] — extended-Einsum workload IR: layers, tensors, fusion sets.
 //! * [`poly`] — exact rectilinear set algebra (the ISL-replacement substrate).
@@ -11,13 +41,16 @@
 //! * [`mapping`] — the paper's mapping taxonomy (Table IV): partitioned
 //!   ranks, tile shapes, schedules, per-tensor retention, parallelism.
 //! * [`model`] — the LoopTree analytical model: latency, energy, buffer
-//!   occupancy, off-chip transfers (paper §IV).
+//!   occupancy, off-chip transfers (paper §IV), via [`model::Evaluator`]
+//!   sessions or the free one-shot [`model::evaluate`].
 //! * [`sim`] — a reference tile-level simulator used as the validation
 //!   comparator (paper §V methodology).
-//! * [`mapspace`] / [`search`] — mapping enumeration, Pareto fronts, and
-//!   search algorithms (exhaustive, random, annealing, genetic).
-//! * [`coordinator`] — parallel DSE job execution.
-//! * [`runtime`] — PJRT execution of AOT-compiled fused-tile artifacts.
+//! * [`mapspace`] / [`search`] — mapping enumeration, Pareto fronts, and the
+//!   unified [`search::run`] entry point.
+//! * [`coordinator`] — parallel DSE job execution (lock-free result merge).
+//! * [`spec`] — the serializable JSON spec/query layer.
+//! * `runtime` *(feature `pjrt`)* — PJRT execution of AOT-compiled
+//!   fused-tile artifacts.
 //! * [`validation`] — encodings of DepFin, Fused-layer CNN, ISAAC,
 //!   PipeLayer, and FLAT (paper Tables V–VIII, Fig 13).
 //! * [`casestudies`] — drivers regenerating paper Figs 14–18.
@@ -30,7 +63,9 @@ pub mod coordinator;
 pub mod mapspace;
 pub mod model;
 pub mod search;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod spec;
 pub mod validation;
 pub mod sim;
 pub mod poly;

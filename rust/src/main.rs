@@ -1,12 +1,16 @@
 //! LoopTree CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   validate   [--design <name>] [--full]   reproduce the validation tables
+//!   validate   [--design <name>] [--full] [--json]   reproduce the validation tables
 //!   casestudy  <fig14|fig15|fig16|fig17|fig18> [--full]
-//!   analyze    --workload <spec> --schedule <R,R,..> --tiles <n,n,..> [...]
-//!   search     --workload <spec> [--algorithm exhaustive|random|anneal|genetic]
+//!   analyze    --config <file.json> | --workload <spec> --schedule <R,R,..> --tiles <n,n,..> [...]
+//!   search     --config <file.json> | --workload <spec> [--algorithm ..] [--objective ..] [--seed n]
 //!   experiments [--full]                    regenerate everything (EXPERIMENTS.md data)
 //!   speed                                   model-vs-simulator throughput
+//!
+//! `analyze` and `search` accept a JSON config (see `examples/configs/`) and
+//! emit machine-readable results with `--json`; a `search --json` document is
+//! itself a valid `--config` input that reproduces the same run.
 //!
 //! Workload specs: conv_conv:ROWSxCH | pdp:ROWSxCH | fc_fc:TOKENSxEMB |
 //! conv3:ROWSxCH | attention:B,H,T,E
@@ -14,11 +18,12 @@
 use looptree::arch::Arch;
 use looptree::casestudies as cs;
 use looptree::coordinator::Coordinator;
-use looptree::einsum::{workloads, FusionSet};
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
-use looptree::model::{evaluate, EvalOptions};
-use looptree::search;
+use looptree::model::Evaluator;
+use looptree::search::{self, Algorithm, Objective, SearchSpec};
 use looptree::sim::simulate;
+use looptree::spec::{parse_workload, AnalyzeConfig, SearchConfig};
+use looptree::util::json::Json;
 use looptree::util::table::fmt_count;
 use looptree::validation::{self, Scale};
 
@@ -50,10 +55,10 @@ fn run(args: &[String]) -> i32 {
         _ => {
             eprintln!(
                 "looptree — fused-layer dataflow design-space exploration\n\n\
-                 usage:\n  looptree validate [--design depfin|fused-cnn|isaac|pipelayer|flat] [--full]\n  \
+                 usage:\n  looptree validate [--design depfin|fused-cnn|isaac|pipelayer|flat] [--full] [--json]\n  \
                  looptree casestudy <fig14|fig15|fig16|fig17|fig18> [--full]\n  \
-                 looptree analyze --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim]\n  \
-                 looptree search --workload conv_conv:28x64 [--algorithm exhaustive|random|anneal|genetic] [--objective latency|energy|edp|capacity]\n  \
+                 looptree analyze --config cfg.json [--json] | --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim]\n  \
+                 looptree search --config cfg.json [--json] | --workload conv_conv:28x64 [--algorithm exhaustive|random|annealing|genetic] [--objective latency|energy|edp|capacity|feasible-edp] [--seed n]\n  \
                  looptree experiments [--full]\n  \
                  looptree speed"
             );
@@ -62,20 +67,10 @@ fn run(args: &[String]) -> i32 {
     }
 }
 
-fn parse_workload(spec: &str) -> Result<FusionSet, String> {
-    let (kind, rest) = spec.split_once(':').ok_or("workload spec needs kind:params")?;
-    let nums: Vec<i64> = rest
-        .split(|c| c == 'x' || c == ',')
-        .map(|s| s.parse::<i64>().map_err(|e| format!("bad number {s}: {e}")))
-        .collect::<Result<_, _>>()?;
-    match (kind, nums.as_slice()) {
-        ("conv_conv", [r, c]) => Ok(workloads::conv_conv(*r, *c)),
-        ("conv3", [r, c]) => Ok(workloads::conv_conv_conv(*r, *c)),
-        ("pdp", [r, c]) => Ok(workloads::pwise_dwise_pwise(*r, *c)),
-        ("fc_fc", [t, e]) => Ok(workloads::fc_fc(*t, *e)),
-        ("attention", [b, h, t, e]) => Ok(workloads::self_attention(*b, *h, *t, *e)),
-        _ => Err(format!("unknown workload spec: {spec}")),
-    }
+fn read_config(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: {e}"))
 }
 
 fn cmd_validate(args: &[String]) -> i32 {
@@ -92,6 +87,32 @@ fn cmd_validate(args: &[String]) -> i32 {
         }
         None => validation::run_all(scale),
     };
+    if flag(args, "--json") {
+        let doc = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    // error_pct() is infinite when the reference is zero but
+                    // the model is not; JSON has no inf, so encode as null.
+                    let err = r.error_pct();
+                    let err_json = if err.is_finite() { Json::Num(err) } else { Json::Null };
+                    let mut pairs = vec![
+                        ("design".to_string(), Json::Str(r.design.to_string())),
+                        ("workload".to_string(), Json::Str(r.workload.clone())),
+                        ("metric".to_string(), Json::Str(r.metric.to_string())),
+                        ("looptree".to_string(), Json::Num(r.looptree)),
+                        ("reference".to_string(), Json::Num(r.reference)),
+                        ("error_pct".to_string(), err_json),
+                    ];
+                    if let Some(p) = r.published {
+                        pairs.push(("published".to_string(), Json::Num(p)));
+                    }
+                    Json::Obj(pairs.into_iter().collect())
+                })
+                .collect(),
+        );
+        println!("{}", doc.pretty());
+        return 0;
+    }
     println!("{}", validation::summarize(&rows));
     let worst = rows
         .iter()
@@ -117,32 +138,25 @@ fn cmd_casestudy(args: &[String]) -> i32 {
     0
 }
 
-fn cmd_analyze(args: &[String]) -> i32 {
-    let Some(wl) = opt(args, "--workload") else {
-        eprintln!("--workload required");
-        return 2;
-    };
-    let fs = match parse_workload(wl) {
-        Ok(f) => f,
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
+/// Build an analyze request from either `--config` or the legacy flags.
+fn analyze_config(args: &[String]) -> Result<AnalyzeConfig, String> {
+    if let Some(path) = opt(args, "--config") {
+        return AnalyzeConfig::from_json(&read_config(path)?);
+    }
+    let wl = opt(args, "--workload").ok_or("--workload or --config required")?;
+    let fs = parse_workload(wl)?;
     let last = fs.last();
     let mut partitions = Vec::new();
     if let (Some(sched), Some(tiles)) = (opt(args, "--schedule"), opt(args, "--tiles")) {
         let names: Vec<&str> = sched.split(',').collect();
         let sizes: Vec<i64> = tiles.split(',').filter_map(|s| s.parse().ok()).collect();
         if names.len() != sizes.len() {
-            eprintln!("--schedule and --tiles must have equal arity");
-            return 2;
+            return Err("--schedule and --tiles must have equal arity".into());
         }
         for (n, t) in names.iter().zip(sizes) {
-            let Some(dim) = last.rank_index(n) else {
-                eprintln!("unknown rank {n}; last layer has {:?}", last.rank_names);
-                return 2;
-            };
+            let dim = last.rank_index(n).ok_or_else(|| {
+                format!("unknown rank {n}; last layer has {:?}", last.rank_names)
+            })?;
             partitions.push(Partition { dim, tile: t });
         }
     }
@@ -153,21 +167,92 @@ fn cmd_analyze(args: &[String]) -> i32 {
     };
     let mapping = InterLayerMapping::tiled(partitions, par);
     let glb_kib = opt(args, "--glb-kib").and_then(|s| s.parse().ok()).unwrap_or(256);
-    let arch = Arch::generic(glb_kib);
-    match evaluate(&fs, &arch, &mapping, &EvalOptions::default()) {
+    Ok(AnalyzeConfig { workload: fs, arch: Arch::generic(glb_kib), mapping })
+}
+
+fn cmd_analyze(args: &[String]) -> i32 {
+    let cfg = match analyze_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let ev = match Evaluator::new(&cfg.workload, &cfg.arch) {
+        Ok(ev) => ev,
+        Err(e) => {
+            eprintln!("invalid spec: {e}");
+            return 2;
+        }
+    };
+    match ev.evaluate(&cfg.mapping) {
         Ok(m) => {
+            if flag(args, "--json") {
+                let mut doc = cfg.to_json();
+                if let Json::Obj(o) = &mut doc {
+                    o.insert("metrics".into(), m.to_json());
+                    if flag(args, "--sim") {
+                        match simulate(&cfg.workload, &cfg.arch, &cfg.mapping) {
+                            Ok(s) => {
+                                let sim = Json::Obj(
+                                    [
+                                        (
+                                            "latency_cycles".to_string(),
+                                            Json::Num(s.latency_cycles as f64),
+                                        ),
+                                        (
+                                            "compute_cycles".to_string(),
+                                            Json::Num(s.compute_cycles as f64),
+                                        ),
+                                        (
+                                            "offchip_reads".to_string(),
+                                            Json::Num(s.offchip_reads as f64),
+                                        ),
+                                        (
+                                            "offchip_writes".to_string(),
+                                            Json::Num(s.offchip_writes as f64),
+                                        ),
+                                        (
+                                            "occupancy_peak".to_string(),
+                                            Json::Num(s.occupancy_peak as f64),
+                                        ),
+                                        ("total_ops".to_string(), Json::Num(s.total_ops as f64)),
+                                        (
+                                            "recompute_ops".to_string(),
+                                            Json::Num(s.recompute_ops as f64),
+                                        ),
+                                        ("energy_pj".to_string(), Json::Num(s.energy_pj)),
+                                    ]
+                                    .into_iter()
+                                    .collect(),
+                                );
+                                o.insert("simulator".into(), sim);
+                            }
+                            Err(e) => {
+                                o.insert("simulator_error".into(), Json::Str(e));
+                            }
+                        }
+                    }
+                }
+                println!("{}", doc.pretty());
+                return 0;
+            }
+            let fs = &cfg.workload;
             println!("workload: {}", fs.name);
-            println!("schedule: {}", mapping.schedule_string(&fs));
+            println!("schedule: {}", cfg.mapping.schedule_string(fs));
             println!("{}", m.summary());
             println!("per-tensor occupancy:");
             for (t, occ) in fs.tensors.iter().zip(&m.per_tensor_occupancy) {
                 println!("  {:10} {:>12} elems", t.name, fmt_count(*occ));
             }
             if !m.capacity_ok {
-                println!("WARNING: exceeds GLB capacity ({glb_kib} KiB)");
+                println!(
+                    "WARNING: exceeds GLB capacity ({} bytes)",
+                    cfg.arch.glb_capacity().unwrap_or(0)
+                );
             }
             if flag(args, "--sim") {
-                match simulate(&fs, &arch, &mapping) {
+                match simulate(fs, &cfg.arch, &cfg.mapping) {
                     Ok(s) => println!(
                         "simulator: latency={} offchip={}r+{}w recompute={}",
                         fmt_count(s.latency_cycles),
@@ -187,49 +272,84 @@ fn cmd_analyze(args: &[String]) -> i32 {
     }
 }
 
+/// Build a search request from either `--config` or the legacy flags.
+fn search_config(args: &[String]) -> Result<SearchConfig, String> {
+    if let Some(path) = opt(args, "--config") {
+        return SearchConfig::from_json(&read_config(path)?);
+    }
+    let wl = opt(args, "--workload").ok_or("--workload or --config required")?;
+    let fs = parse_workload(wl)?;
+    let glb_kib: i64 = opt(args, "--glb-kib").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let mut spec = SearchSpec::default();
+    if let Some(a) = opt(args, "--algorithm") {
+        spec.algorithm = Algorithm::parse(a)?;
+    }
+    if let Some(o) = opt(args, "--objective") {
+        spec.objective = Objective::parse(o)?;
+    }
+    if let Some(s) = opt(args, "--seed") {
+        spec.seed = s.parse().map_err(|e| format!("--seed: {e}"))?;
+    }
+    Ok(SearchConfig { workload: fs, arch: Arch::generic(glb_kib), search: spec })
+}
+
 fn cmd_search(args: &[String]) -> i32 {
-    let Some(wl) = opt(args, "--workload") else {
-        eprintln!("--workload required");
-        return 2;
-    };
-    let fs = match parse_workload(wl) {
-        Ok(f) => f,
+    let cfg = match search_config(args) {
+        Ok(c) => c,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
-    let glb_kib: i64 = opt(args, "--glb-kib").and_then(|s| s.parse().ok()).unwrap_or(256);
-    let arch = Arch::generic(glb_kib);
-    let objective_name = opt(args, "--objective").unwrap_or("edp");
-    let objective = move |m: &looptree::model::Metrics| -> f64 {
-        let infeasible = if m.capacity_ok { 1.0 } else { 1e6 };
-        infeasible
-            * match objective_name {
-                "latency" => m.latency_cycles as f64,
-                "energy" => m.energy.total_pj(),
-                "capacity" => m.occupancy_peak as f64,
-                _ => m.latency_cycles as f64 * m.energy.total_pj(), // edp
-            }
-    };
-    let pool = Coordinator::new(0);
-    let res = match opt(args, "--algorithm").unwrap_or("exhaustive") {
-        "random" => search::random_search(&fs, &arch, 2000, 1, objective, &pool),
-        "anneal" => search::annealing(&fs, &arch, 2000, 1, objective),
-        "genetic" => search::genetic(&fs, &arch, 40, 25, 1, objective, &pool),
-        _ => {
-            let cfg = looptree::mapspace::MapSpaceConfig::default();
-            search::exhaustive(&fs, &arch, &cfg, objective, &pool)
+    let ev = match Evaluator::new(&cfg.workload, &cfg.arch) {
+        Ok(ev) => ev,
+        Err(e) => {
+            eprintln!("invalid spec: {e}");
+            return 2;
         }
     };
-    match res {
+    let pool = Coordinator::new(0);
+    match search::run(&ev, &cfg.search, &pool) {
         Some(r) => {
+            if flag(args, "--json") {
+                let mut doc = cfg.to_json();
+                if let Json::Obj(o) = &mut doc {
+                    let best = Json::Obj(
+                        [
+                            ("mapping".to_string(), r.best.mapping.to_json()),
+                            (
+                                "schedule".to_string(),
+                                Json::Str(r.best.mapping.schedule_string(&cfg.workload)),
+                            ),
+                            ("score".to_string(), Json::Num(r.best.score)),
+                            ("metrics".to_string(), r.best.metrics.to_json()),
+                        ]
+                        .into_iter()
+                        .collect(),
+                    );
+                    let result = Json::Obj(
+                        [
+                            ("best".to_string(), best),
+                            (
+                                "evaluated".to_string(),
+                                Json::Num(r.evaluated.len() as f64),
+                            ),
+                        ]
+                        .into_iter()
+                        .collect(),
+                    );
+                    o.insert("result".into(), result);
+                }
+                println!("{}", doc.pretty());
+                return 0;
+            }
             println!(
-                "evaluated {} mappings; best ({objective_name}) = {:.4e}",
+                "evaluated {} mappings; best ({}) = {:.4e}",
                 r.evaluated.len(),
+                cfg.search.objective.name(),
                 r.best.score
             );
-            println!("schedule: {}", r.best.mapping.schedule_string(&fs));
+            println!("schedule: {}", r.best.mapping.schedule_string(&cfg.workload));
             println!(
                 "tiles: {:?}",
                 r.best.mapping.partitions.iter().map(|p| p.tile).collect::<Vec<_>>()
@@ -259,17 +379,18 @@ fn cmd_experiments(args: &[String]) -> i32 {
 
 fn cmd_speed(_args: &[String]) -> i32 {
     // The paper's analytical-vs-simulator speed comparison (§IV).
-    let fs = workloads::conv_conv(20, 8);
+    let fs = looptree::einsum::workloads::conv_conv(20, 8);
     let p2 = fs.last().rank_index("P2").unwrap();
     let mapping = InterLayerMapping::tiled(
         vec![Partition { dim: p2, tile: 4 }],
         Parallelism::Sequential,
     );
     let arch = Arch::generic(1 << 20);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
     let t0 = std::time::Instant::now();
     let reps = 50;
     for _ in 0..reps {
-        evaluate(&fs, &arch, &mapping, &EvalOptions::default()).unwrap();
+        ev.evaluate(&mapping).unwrap();
     }
     let model_t = t0.elapsed() / reps;
     let t1 = std::time::Instant::now();

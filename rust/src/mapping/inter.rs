@@ -24,7 +24,7 @@ pub enum Parallelism {
 }
 
 /// The inter-layer mapping (paper Table IV).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct InterLayerMapping {
     /// Partitioned ranks in schedule order (outer → inner). The same rank may
     /// appear more than once (hierarchical re-partitioning for multi-level

@@ -5,7 +5,7 @@ use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 
 /// Constraints defining a mapspace (the unconstrained default is the paper's
 /// "this work" row in Table I).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MapSpaceConfig {
     /// Candidate schedules: ordered lists of last-layer rank *names*
     /// (e.g. `["P2","Q2"]`). Empty = derive all single- and double-rank

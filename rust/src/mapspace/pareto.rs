@@ -12,11 +12,7 @@ pub struct ParetoPoint<T> {
 /// Extract the Pareto front (minimizing both `x` and `y`), sorted by `x`
 /// ascending. Dominated and duplicate points are dropped.
 pub fn pareto_front<T: Clone>(mut points: Vec<ParetoPoint<T>>) -> Vec<ParetoPoint<T>> {
-    points.sort_by(|a, b| {
-        a.x.partial_cmp(&b.x)
-            .unwrap()
-            .then(a.y.partial_cmp(&b.y).unwrap())
-    });
+    points.sort_by(|a, b| a.x.total_cmp(&b.x).then(a.y.total_cmp(&b.y)));
     let mut front: Vec<ParetoPoint<T>> = Vec::new();
     let mut best_y = f64::INFINITY;
     for p in points {

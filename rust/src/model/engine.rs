@@ -22,6 +22,11 @@ pub struct EvalOptions {
 /// Evaluate one mapping. Errors on structurally invalid inputs; capacity
 /// overflow is reported via [`Metrics::capacity_ok`], not an error, so
 /// searches can still rank infeasible points.
+///
+/// This is the one-shot convenience path: it re-validates the fusion set and
+/// architecture and re-derives intra-layer defaults on every call. Hot loops
+/// evaluating many mappings of the same workload should hold a
+/// [`super::Evaluator`] session instead, which performs that work once.
 pub fn evaluate(
     fs: &FusionSet,
     arch: &Arch,
@@ -30,15 +35,19 @@ pub fn evaluate(
 ) -> Result<Metrics, String> {
     fs.validate()?;
     arch.validate()?;
-    mapping.validate(fs)?;
+    let intra = resolve_intra(fs, arch, opts.intra.as_deref())?;
+    let fanout = fanouts(&intra, arch);
+    evaluate_prevalidated(fs, arch, mapping, &intra, &fanout)
+}
 
+/// Check (or derive defaults for) the per-layer intra-layer mappings.
+pub(crate) fn resolve_intra(
+    fs: &FusionSet,
+    arch: &Arch,
+    intra: Option<&[IntraLayerMapping]>,
+) -> Result<Vec<IntraLayerMapping>, String> {
     let n = fs.num_layers();
-    let nt = fs.tensors.len();
-    let tw = TileWindows::new(fs, mapping);
-    let counts = tw.counts().to_vec();
-    let k = counts.len();
-
-    let intra: Vec<IntraLayerMapping> = match &opts.intra {
+    match intra {
         Some(v) => {
             if v.len() != n {
                 return Err(format!("expected {n} intra mappings, got {}", v.len()));
@@ -46,19 +55,41 @@ pub fn evaluate(
             for (e, im) in fs.einsums.iter().zip(v) {
                 im.validate(e, arch.noc.num_pes())?;
             }
-            v.clone()
+            Ok(v.to_vec())
         }
-        None => fs
+        None => Ok(fs
             .einsums
             .iter()
             .map(|e| IntraLayerMapping::default_for(e, arch.noc.num_pes()))
-            .collect(),
-    };
-    // Effective parallel MACs per layer (spatial fanout, capped by the array).
-    let fanout: Vec<i64> = intra
+            .collect()),
+    }
+}
+
+/// Effective parallel MACs per layer (spatial fanout, capped by the array).
+pub(crate) fn fanouts(intra: &[IntraLayerMapping], arch: &Arch) -> Vec<i64> {
+    intra
         .iter()
         .map(|im| im.fanout().clamp(1, arch.compute.macs))
-        .collect();
+        .collect()
+}
+
+/// The schedule walk itself. Assumes `fs` and `arch` are already validated
+/// and `intra`/`fanout` already resolved (the [`super::Evaluator`] session
+/// caches them); only the per-call `mapping` is validated here.
+pub(crate) fn evaluate_prevalidated(
+    fs: &FusionSet,
+    arch: &Arch,
+    mapping: &InterLayerMapping,
+    intra: &[IntraLayerMapping],
+    fanout: &[i64],
+) -> Result<Metrics, String> {
+    mapping.validate(fs)?;
+
+    let n = fs.num_layers();
+    let nt = fs.tensors.len();
+    let tw = TileWindows::new(fs, mapping);
+    let counts = tw.counts().to_vec();
+    let k = counts.len();
 
     let retention: Vec<usize> = (0..nt)
         .map(|x| mapping.retention_for(crate::einsum::TensorId(x)))

@@ -1,0 +1,155 @@
+//! Validate-once evaluation sessions.
+//!
+//! The paper's usage model (§VII) evaluates thousands of mappings per
+//! (workload, architecture) pair: every search iteration, case-study sweep,
+//! and Pareto enumeration re-walks the same fusion set under a different
+//! [`InterLayerMapping`]. An [`Evaluator`] validates the fusion set and
+//! architecture once, precomputes the per-layer intra-layer defaults and
+//! spatial fanouts, and then evaluates mappings with only the cheap per-call
+//! mapping validation on the hot path.
+
+use super::engine::{evaluate_prevalidated, fanouts, resolve_intra};
+use super::metrics::Metrics;
+use crate::arch::Arch;
+use crate::coordinator::Coordinator;
+use crate::einsum::FusionSet;
+use crate::mapping::{InterLayerMapping, IntraLayerMapping};
+
+/// A validate-once evaluation session for one (fusion set, architecture)
+/// pair. Cheap to share across threads (`&Evaluator` is `Sync`): the
+/// searches and the [`Coordinator`] fan one session out over a worker pool.
+#[derive(Debug, Clone)]
+pub struct Evaluator {
+    fs: FusionSet,
+    arch: Arch,
+    intra: Vec<IntraLayerMapping>,
+    fanout: Vec<i64>,
+}
+
+impl Evaluator {
+    /// Validate both specs once and derive the default intra-layer mapping
+    /// for every layer. Errors on structurally invalid specs.
+    pub fn new(fs: &FusionSet, arch: &Arch) -> Result<Evaluator, String> {
+        fs.validate()?;
+        arch.validate()?;
+        let intra = resolve_intra(fs, arch, None)?;
+        let fanout = fanouts(&intra, arch);
+        Ok(Evaluator { fs: fs.clone(), arch: arch.clone(), intra, fanout })
+    }
+
+    /// Like [`Evaluator::new`], but with explicit per-layer intra-layer
+    /// mappings (validated here) instead of the derived defaults.
+    pub fn with_intra(
+        fs: &FusionSet,
+        arch: &Arch,
+        intra: &[IntraLayerMapping],
+    ) -> Result<Evaluator, String> {
+        fs.validate()?;
+        arch.validate()?;
+        let intra = resolve_intra(fs, arch, Some(intra))?;
+        let fanout = fanouts(&intra, arch);
+        Ok(Evaluator { fs: fs.clone(), arch: arch.clone(), intra, fanout })
+    }
+
+    /// The session's fusion set.
+    pub fn fusion_set(&self) -> &FusionSet {
+        &self.fs
+    }
+
+    /// The session's architecture.
+    pub fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    /// The resolved per-layer intra-layer mappings.
+    pub fn intra(&self) -> &[IntraLayerMapping] {
+        &self.intra
+    }
+
+    /// Evaluate one inter-layer mapping. Identical results to the free
+    /// [`super::evaluate`], minus its per-call spec re-validation.
+    pub fn evaluate(&self, mapping: &InterLayerMapping) -> Result<Metrics, String> {
+        evaluate_prevalidated(&self.fs, &self.arch, mapping, &self.intra, &self.fanout)
+    }
+
+    /// Evaluate a batch on a worker pool; results preserve input order, and
+    /// individual failures are reported per slot.
+    pub fn evaluate_batch(
+        &self,
+        mappings: &[InterLayerMapping],
+        pool: &Coordinator,
+    ) -> Vec<Result<Metrics, String>> {
+        pool.run(mappings.len(), |i| self.evaluate(&mappings[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::workloads;
+    use crate::mapping::{Parallelism, Partition};
+    use crate::model::{evaluate, EvalOptions};
+
+    #[test]
+    fn session_matches_free_function() {
+        let fs = workloads::conv_conv(14, 8);
+        let arch = Arch::generic(256);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let p2 = fs.last().rank_index("P2").unwrap();
+        for tile in [1, 3, 4, 12] {
+            let mapping = InterLayerMapping::tiled(
+                vec![Partition { dim: p2, tile }],
+                Parallelism::Sequential,
+            );
+            let a = ev.evaluate(&mapping).unwrap();
+            let b = evaluate(&fs, &arch, &mapping, &EvalOptions::default()).unwrap();
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+            assert_eq!(a.offchip_reads, b.offchip_reads);
+            assert_eq!(a.offchip_writes, b.offchip_writes);
+            assert_eq!(a.occupancy_peak, b.occupancy_peak);
+            assert_eq!(a.total_ops, b.total_ops);
+            assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+        }
+    }
+
+    #[test]
+    fn invalid_specs_rejected_at_construction() {
+        let fs = workloads::conv_conv(14, 8);
+        let mut bad_arch = Arch::generic(256);
+        bad_arch.compute.macs = 0;
+        assert!(Evaluator::new(&fs, &bad_arch).is_err());
+    }
+
+    #[test]
+    fn invalid_mapping_rejected_per_call() {
+        let fs = workloads::conv_conv(14, 8);
+        let arch = Arch::generic(256);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let bad = InterLayerMapping::tiled(
+            vec![Partition { dim: 999, tile: 2 }],
+            Parallelism::Sequential,
+        );
+        assert!(ev.evaluate(&bad).is_err());
+    }
+
+    #[test]
+    fn batch_preserves_order_and_errors() {
+        let fs = workloads::conv_conv(14, 8);
+        let arch = Arch::generic(256);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let good = InterLayerMapping::tiled(
+            vec![Partition { dim: p2, tile: 4 }],
+            Parallelism::Sequential,
+        );
+        let bad = InterLayerMapping::tiled(
+            vec![Partition { dim: 999, tile: 2 }],
+            Parallelism::Sequential,
+        );
+        let pool = Coordinator::new(3);
+        let out = ev.evaluate_batch(&[good.clone(), bad, good], &pool);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_ok() && out[2].is_ok());
+        assert!(out[1].is_err());
+    }
+}

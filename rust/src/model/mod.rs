@@ -17,15 +17,22 @@
 //! 3. **Final metrics** ([`latency`], [`energy`], [`metrics`]) — sequential
 //!    or pipelined latency (hidden-latency analysis, paper Fig 12), energy
 //!    from accelergy-lite action costs, peak occupancy, off-chip traffic.
+//!
+//! Two entry points: the free [`evaluate`] for one-off calls, and the
+//! [`Evaluator`] session, which validates the (fusion set, architecture)
+//! pair once and then evaluates many mappings cheaply — the API every search
+//! and case-study sweep uses.
 
 mod backward;
 mod engine;
+mod evaluator;
 mod intra;
 mod latency;
 mod metrics;
 mod walk;
 
 pub use engine::{evaluate, EvalOptions};
+pub use evaluator::Evaluator;
 pub use intra::{tile_counts_from, IntraCounts};
 pub use metrics::{EnergyBreakdown, Metrics};
 pub use walk::{IterWalk, TileWindows};

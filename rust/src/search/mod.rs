@@ -1,26 +1,186 @@
-//! Mapspace search algorithms (paper §VII-C: prior search strategies can be
-//! adapted to the LoopTree mapspace using LoopTree as the model).
+//! Mapspace search (paper §VII-C: prior search strategies can be adapted to
+//! the LoopTree mapspace using LoopTree as the model).
 //!
-//! Four searches over the same objective interface:
-//! * [`exhaustive`] — enumerate + evaluate everything (parallel).
-//! * [`random_search`] — uniform sampling, for very large spaces.
-//! * [`annealing`] — simulated annealing with mapping mutations.
-//! * [`genetic`] — GAMMA-style [49] population search.
+//! One entry point, [`run`], drives four algorithms over a shared
+//! [`Evaluator`] session:
 //!
-//! Objectives are `Fn(&Metrics) -> f64` (minimize); infeasible mappings
-//! (capacity overflow) can be filtered or penalized by the objective.
+//! * [`Algorithm::Exhaustive`] — enumerate + evaluate everything (parallel).
+//! * [`Algorithm::Random`] — uniform sampling, for very large spaces.
+//! * [`Algorithm::Annealing`] — simulated annealing with mapping mutations.
+//! * [`Algorithm::Genetic`] — GAMMA-style [49] population search.
+//!
+//! What to minimize is a serializable [`Objective`] (no ad-hoc closures), so
+//! a whole search — workload, architecture, algorithm, objective, budgets —
+//! round-trips through the JSON spec layer (`spec`) and the CLI. Score
+//! comparisons use [`f64::total_cmp`], so a degenerate objective value can
+//! never panic mid-search.
 
 mod mutate;
 
-use crate::arch::Arch;
 use crate::coordinator::Coordinator;
-use crate::einsum::FusionSet;
 use crate::mapping::InterLayerMapping;
 use crate::mapspace::{MapSpace, MapSpaceConfig};
-use crate::model::{evaluate, EvalOptions, Metrics};
+use crate::model::{Evaluator, Metrics};
 use crate::util::prng::Prng;
 
 pub use mutate::{mutate, random_mapping};
+
+/// What a search minimizes, derived from [`Metrics`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Total latency in cycles.
+    Latency,
+    /// Total energy in pJ.
+    Energy,
+    /// Energy–delay product.
+    Edp,
+    /// Peak buffer occupancy in elements (capacity-focused studies).
+    Capacity,
+    /// Energy–delay product with capacity-infeasible mappings pushed to the
+    /// back of the ranking by a large multiplicative penalty — the default
+    /// for searches under a real GLB budget.
+    FeasibleEdp,
+}
+
+impl Objective {
+    /// Multiplier applied to infeasible mappings by [`Objective::FeasibleEdp`].
+    pub const INFEASIBLE_PENALTY: f64 = 1e6;
+
+    /// The scalar score (lower is better).
+    pub fn score(&self, m: &Metrics) -> f64 {
+        match self {
+            Objective::Latency => m.latency_cycles as f64,
+            Objective::Energy => m.energy.total_pj(),
+            Objective::Edp => m.latency_cycles as f64 * m.energy.total_pj(),
+            Objective::Capacity => m.occupancy_peak as f64,
+            Objective::FeasibleEdp => {
+                let penalty = if m.capacity_ok { 1.0 } else { Self::INFEASIBLE_PENALTY };
+                penalty * (m.latency_cycles as f64 * m.energy.total_pj())
+            }
+        }
+    }
+
+    /// Stable wire name (the JSON spec layer and the CLI use these).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+            Objective::Capacity => "capacity",
+            Objective::FeasibleEdp => "feasible-edp",
+        }
+    }
+
+    /// Inverse of [`Objective::name`].
+    pub fn parse(s: &str) -> Result<Objective, String> {
+        match s {
+            "latency" => Ok(Objective::Latency),
+            "energy" => Ok(Objective::Energy),
+            "edp" => Ok(Objective::Edp),
+            "capacity" => Ok(Objective::Capacity),
+            "feasible-edp" => Ok(Objective::FeasibleEdp),
+            other => Err(format!(
+                "unknown objective {other} (expected latency|energy|edp|capacity|feasible-edp)"
+            )),
+        }
+    }
+}
+
+/// The search strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Exhaustive,
+    Random,
+    Annealing,
+    Genetic,
+}
+
+impl Algorithm {
+    /// Stable wire name (the JSON spec layer and the CLI use these).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Exhaustive => "exhaustive",
+            Algorithm::Random => "random",
+            Algorithm::Annealing => "annealing",
+            Algorithm::Genetic => "genetic",
+        }
+    }
+
+    /// Inverse of [`Algorithm::name`].
+    pub fn parse(s: &str) -> Result<Algorithm, String> {
+        match s {
+            "exhaustive" => Ok(Algorithm::Exhaustive),
+            "random" => Ok(Algorithm::Random),
+            "annealing" | "anneal" => Ok(Algorithm::Annealing),
+            "genetic" => Ok(Algorithm::Genetic),
+            other => Err(format!(
+                "unknown algorithm {other} (expected exhaustive|random|annealing|genetic)"
+            )),
+        }
+    }
+}
+
+/// A complete, serializable search specification: algorithm, objective,
+/// seed, per-algorithm budgets, and the mapspace constraints (exhaustive
+/// only). Unused fields are ignored by the other algorithms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpec {
+    pub algorithm: Algorithm,
+    pub objective: Objective,
+    /// PRNG seed (random / annealing / genetic): same spec ⇒ same result.
+    /// Round-trips JSON exactly for any u64 (seeds above 2^53 are carried
+    /// as strings on the wire).
+    pub seed: u64,
+    /// Samples drawn by [`Algorithm::Random`].
+    pub samples: usize,
+    /// Model evaluations spent by [`Algorithm::Annealing`].
+    pub iters: usize,
+    /// Population size of [`Algorithm::Genetic`].
+    pub population: usize,
+    /// Generations run by [`Algorithm::Genetic`].
+    pub generations: usize,
+    /// Mapspace constraints enumerated by [`Algorithm::Exhaustive`].
+    pub mapspace: MapSpaceConfig,
+    /// Multiply the score of capacity-infeasible mappings by
+    /// [`Objective::INFEASIBLE_PENALTY`] regardless of objective (default
+    /// true), so searches under a real GLB budget rank feasible mappings
+    /// first. [`Objective::FeasibleEdp`] already penalizes; this flag extends
+    /// the same treatment to the plain objectives.
+    pub penalize_infeasible: bool,
+}
+
+impl Default for SearchSpec {
+    fn default() -> Self {
+        SearchSpec {
+            algorithm: Algorithm::Exhaustive,
+            objective: Objective::FeasibleEdp,
+            seed: 1,
+            samples: 2000,
+            iters: 2000,
+            population: 40,
+            generations: 25,
+            mapspace: MapSpaceConfig::default(),
+            penalize_infeasible: true,
+        }
+    }
+}
+
+impl SearchSpec {
+    /// The score a search ranks by: the objective's score, with the
+    /// infeasibility penalty applied when `penalize_infeasible` is set (and
+    /// the objective does not already penalize).
+    pub fn score(&self, m: &Metrics) -> f64 {
+        let base = self.objective.score(m);
+        if self.penalize_infeasible
+            && self.objective != Objective::FeasibleEdp
+            && !m.capacity_ok
+        {
+            base * Objective::INFEASIBLE_PENALTY
+        } else {
+            base
+        }
+    }
+}
 
 /// A scored mapping.
 #[derive(Debug, Clone)]
@@ -38,20 +198,31 @@ pub struct SearchResult {
     pub evaluated: Vec<Scored>,
 }
 
+/// Run a search described by `spec` on an [`Evaluator`] session. Returns
+/// `None` when nothing evaluable was found (empty mapspace or every
+/// candidate structurally invalid). Deterministic given (session, spec):
+/// PRNG-driven algorithms derive all randomness from `spec.seed`.
+pub fn run(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<SearchResult> {
+    match spec.algorithm {
+        Algorithm::Exhaustive => exhaustive(ev, spec, pool),
+        Algorithm::Random => random(ev, spec, pool),
+        Algorithm::Annealing => annealing(ev, spec),
+        Algorithm::Genetic => genetic(ev, spec, pool),
+    }
+}
+
 fn score_all(
-    fs: &FusionSet,
-    arch: &Arch,
+    ev: &Evaluator,
     mappings: &[InterLayerMapping],
-    objective: &(dyn Fn(&Metrics) -> f64 + Sync),
+    spec: &SearchSpec,
     pool: &Coordinator,
 ) -> Vec<Scored> {
-    let opts = EvalOptions::default();
-    pool.evaluate_all(fs, arch, mappings, &opts)
+    ev.evaluate_batch(mappings, pool)
         .into_iter()
         .zip(mappings)
         .filter_map(|(r, m)| {
             r.ok().map(|metrics| {
-                let score = objective(&metrics);
+                let score = spec.score(&metrics);
                 Scored { mapping: m.clone(), metrics, score }
             })
         })
@@ -61,63 +232,45 @@ fn score_all(
 fn best_of(evaluated: Vec<Scored>) -> Option<SearchResult> {
     let best = evaluated
         .iter()
-        .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())?
+        .min_by(|a, b| a.score.total_cmp(&b.score))?
         .clone();
     Some(SearchResult { best, evaluated })
 }
 
-/// Exhaustive search over an enumerated mapspace.
-pub fn exhaustive(
-    fs: &FusionSet,
-    arch: &Arch,
-    cfg: &MapSpaceConfig,
-    objective: impl Fn(&Metrics) -> f64 + Sync,
-    pool: &Coordinator,
-) -> Option<SearchResult> {
-    let ms = MapSpace::enumerate(fs, cfg);
-    best_of(score_all(fs, arch, ms.mappings(), &objective, pool))
+/// Exhaustive search over the enumerated mapspace.
+fn exhaustive(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<SearchResult> {
+    let ms = MapSpace::enumerate(ev.fusion_set(), &spec.mapspace);
+    best_of(score_all(ev, ms.mappings(), spec, pool))
 }
 
-/// Uniform random sampling of `samples` mappings.
-pub fn random_search(
-    fs: &FusionSet,
-    arch: &Arch,
-    samples: usize,
-    seed: u64,
-    objective: impl Fn(&Metrics) -> f64 + Sync,
-    pool: &Coordinator,
-) -> Option<SearchResult> {
-    let mut rng = Prng::new(seed);
-    let mappings: Vec<InterLayerMapping> =
-        (0..samples).map(|_| random_mapping(fs, &mut rng)).collect();
-    best_of(score_all(fs, arch, &mappings, &objective, pool))
+/// Uniform random sampling of `spec.samples` mappings.
+fn random(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<SearchResult> {
+    let mut rng = Prng::new(spec.seed);
+    let mappings: Vec<InterLayerMapping> = (0..spec.samples)
+        .map(|_| random_mapping(ev.fusion_set(), &mut rng))
+        .collect();
+    best_of(score_all(ev, &mappings, spec, pool))
 }
 
 /// Simulated annealing (SET [29] uses the same strategy for inter-layer
-/// scheduling). Serial by nature; `iters` model evaluations.
-pub fn annealing(
-    fs: &FusionSet,
-    arch: &Arch,
-    iters: usize,
-    seed: u64,
-    objective: impl Fn(&Metrics) -> f64,
-) -> Option<SearchResult> {
-    let mut rng = Prng::new(seed);
-    let opts = EvalOptions::default();
+/// scheduling). Serial by nature; `spec.iters` model evaluations.
+fn annealing(ev: &Evaluator, spec: &SearchSpec) -> Option<SearchResult> {
+    let fs = ev.fusion_set();
+    let mut rng = Prng::new(spec.seed);
     let mut cur = random_mapping(fs, &mut rng);
-    let mut cur_metrics = evaluate(fs, arch, &cur, &opts).ok()?;
-    let mut cur_score = objective(&cur_metrics);
+    let mut cur_metrics = ev.evaluate(&cur).ok()?;
+    let mut cur_score = spec.score(&cur_metrics);
     let mut best = Scored { mapping: cur.clone(), metrics: cur_metrics.clone(), score: cur_score };
     let mut evaluated = vec![best.clone()];
 
     let t0 = (cur_score.abs() + 1.0) * 0.3;
-    for i in 0..iters {
-        let temp = t0 * (1.0 - i as f64 / iters as f64).max(1e-3);
+    for i in 0..spec.iters {
+        let temp = t0 * (1.0 - i as f64 / spec.iters as f64).max(1e-3);
         let cand = mutate(fs, &cur, &mut rng);
-        let Ok(metrics) = evaluate(fs, arch, &cand, &opts) else {
+        let Ok(metrics) = ev.evaluate(&cand) else {
             continue;
         };
-        let score = objective(&metrics);
+        let score = spec.score(&metrics);
         evaluated.push(Scored { mapping: cand.clone(), metrics: metrics.clone(), score });
         let accept = score <= cur_score
             || rng.chance(((cur_score - score) / temp).exp().clamp(0.0, 1.0));
@@ -139,35 +292,29 @@ pub fn annealing(
 
 /// Genetic search: tournament selection + mutation (no crossover across
 /// schedules — tile sizes and retention levels recombine).
-pub fn genetic(
-    fs: &FusionSet,
-    arch: &Arch,
-    population: usize,
-    generations: usize,
-    seed: u64,
-    objective: impl Fn(&Metrics) -> f64 + Sync,
-    pool: &Coordinator,
-) -> Option<SearchResult> {
-    let mut rng = Prng::new(seed);
-    let mut pop: Vec<InterLayerMapping> =
-        (0..population).map(|_| random_mapping(fs, &mut rng)).collect();
+fn genetic(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<SearchResult> {
+    let fs = ev.fusion_set();
+    let mut rng = Prng::new(spec.seed);
+    let mut pop: Vec<InterLayerMapping> = (0..spec.population)
+        .map(|_| random_mapping(fs, &mut rng))
+        .collect();
     let mut all: Vec<Scored> = Vec::new();
 
-    for _gen in 0..generations {
-        let scored = score_all(fs, arch, &pop, &objective, pool);
+    for _gen in 0..spec.generations {
+        let scored = score_all(ev, &pop, spec, pool);
         if scored.is_empty() {
             return None;
         }
         all.extend(scored.iter().cloned());
         // Tournament selection + mutation into the next generation.
-        let mut next = Vec::with_capacity(population);
+        let mut next = Vec::with_capacity(spec.population);
         // Elitism: keep the best.
         let elite = scored
             .iter()
-            .min_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .min_by(|a, b| a.score.total_cmp(&b.score))
             .unwrap();
         next.push(elite.mapping.clone());
-        while next.len() < population {
+        while next.len() < spec.population {
             let a = rng.choose(&scored);
             let b = rng.choose(&scored);
             let parent = if a.score <= b.score { a } else { b };

@@ -1,23 +1,28 @@
 use super::*;
+use crate::arch::Arch;
 use crate::einsum::workloads;
-use crate::mapspace::MapSpaceConfig;
 
-fn small_objective(m: &Metrics) -> f64 {
-    // Capacity-weighted transfers: a common case-study objective.
-    m.offchip_total() as f64 + 0.01 * m.occupancy_peak as f64
+fn session(rows: i64, ch: i64, glb_kib: i64) -> Evaluator {
+    let fs = workloads::conv_conv(rows, ch);
+    let arch = Arch::generic(glb_kib);
+    Evaluator::new(&fs, &arch).unwrap()
 }
 
 #[test]
 fn exhaustive_finds_global_best() {
-    let fs = workloads::conv_conv(14, 8);
-    let arch = Arch::generic(1 << 20);
-    let cfg = MapSpaceConfig {
-        schedules: vec![vec![], vec!["P2".into()], vec!["C2".into()]],
-        tile_sizes: vec![2, 4],
+    let ev = session(14, 8, 1 << 20);
+    let spec = SearchSpec {
+        algorithm: Algorithm::Exhaustive,
+        objective: Objective::Capacity,
+        mapspace: MapSpaceConfig {
+            schedules: vec![vec![], vec!["P2".into()], vec!["C2".into()]],
+            tile_sizes: vec![2, 4],
+            ..Default::default()
+        },
         ..Default::default()
     };
     let pool = Coordinator::new(2);
-    let res = exhaustive(&fs, &arch, &cfg, small_objective, &pool).unwrap();
+    let res = run(&ev, &spec, &pool).unwrap();
     // Best score really is the minimum of everything evaluated.
     let min = res
         .evaluated
@@ -30,25 +35,40 @@ fn exhaustive_finds_global_best() {
 
 #[test]
 fn random_search_is_deterministic_per_seed() {
-    let fs = workloads::conv_conv(14, 8);
-    let arch = Arch::generic(1 << 20);
+    let ev = session(14, 8, 1 << 20);
     let pool = Coordinator::new(2);
-    let a = random_search(&fs, &arch, 40, 42, small_objective, &pool).unwrap();
-    let b = random_search(&fs, &arch, 40, 42, small_objective, &pool).unwrap();
+    let spec = SearchSpec {
+        algorithm: Algorithm::Random,
+        objective: Objective::Edp,
+        samples: 40,
+        seed: 42,
+        ..Default::default()
+    };
+    let a = run(&ev, &spec, &pool).unwrap();
+    let b = run(&ev, &spec, &pool).unwrap();
     assert_eq!(a.best.score, b.best.score);
-    let c = random_search(&fs, &arch, 40, 43, small_objective, &pool).unwrap();
+    assert_eq!(a.best.mapping, b.best.mapping);
+    let c = run(&ev, &SearchSpec { seed: 43, ..spec }, &pool).unwrap();
     // Different seed explores different mappings (scores may tie, but the
     // evaluated sets should differ).
-    let sa: Vec<String> = a.evaluated.iter().map(|s| s.mapping.schedule_string(&fs)).collect();
-    let sc: Vec<String> = c.evaluated.iter().map(|s| s.mapping.schedule_string(&fs)).collect();
+    let fs = ev.fusion_set();
+    let sa: Vec<String> = a.evaluated.iter().map(|s| s.mapping.schedule_string(fs)).collect();
+    let sc: Vec<String> = c.evaluated.iter().map(|s| s.mapping.schedule_string(fs)).collect();
     assert_ne!(sa, sc);
 }
 
 #[test]
 fn annealing_improves_over_start() {
-    let fs = workloads::conv_conv(14, 8);
-    let arch = Arch::generic(1 << 20);
-    let res = annealing(&fs, &arch, 120, 9, small_objective).unwrap();
+    let ev = session(14, 8, 1 << 20);
+    let pool = Coordinator::new(1);
+    let spec = SearchSpec {
+        algorithm: Algorithm::Annealing,
+        objective: Objective::Edp,
+        iters: 120,
+        seed: 9,
+        ..Default::default()
+    };
+    let res = run(&ev, &spec, &pool).unwrap();
     let first = res.evaluated.first().unwrap().score;
     assert!(res.best.score <= first);
     assert!(res.evaluated.len() > 10);
@@ -56,13 +76,27 @@ fn annealing_improves_over_start() {
 
 #[test]
 fn genetic_converges_reasonably() {
-    let fs = workloads::conv_conv(14, 8);
-    let arch = Arch::generic(1 << 20);
+    let ev = session(14, 8, 1 << 20);
     let pool = Coordinator::new(2);
-    let res = genetic(&fs, &arch, 12, 5, 17, small_objective, &pool).unwrap();
+    let gen_spec = SearchSpec {
+        algorithm: Algorithm::Genetic,
+        objective: Objective::Edp,
+        population: 12,
+        generations: 5,
+        seed: 17,
+        ..Default::default()
+    };
+    let res = run(&ev, &gen_spec, &pool).unwrap();
     // The GA should find something at least as good as pure random with the
     // same budget.
-    let rand = random_search(&fs, &arch, 60, 17, small_objective, &pool).unwrap();
+    let rand_spec = SearchSpec {
+        algorithm: Algorithm::Random,
+        objective: Objective::Edp,
+        samples: 60,
+        seed: 17,
+        ..Default::default()
+    };
+    let rand = run(&ev, &rand_spec, &pool).unwrap();
     assert!(res.best.score <= rand.best.score * 1.5);
 }
 
@@ -75,4 +109,59 @@ fn mutation_preserves_validity() {
         m = mutate(&fs, &m, &mut rng);
         assert!(m.validate(&fs).is_ok());
     }
+}
+
+#[test]
+fn objective_scores_and_penalty() {
+    let ev = session(28, 32, 1); // 1 KiB GLB: untiled mappings overflow
+    let untiled = crate::mapping::InterLayerMapping::untiled(
+        crate::mapping::Parallelism::Sequential,
+    );
+    let m = ev.evaluate(&untiled).unwrap();
+    assert!(!m.capacity_ok);
+    let edp = Objective::Edp.score(&m);
+    let feasible = Objective::FeasibleEdp.score(&m);
+    assert_eq!(feasible, edp * Objective::INFEASIBLE_PENALTY);
+    assert_eq!(Objective::Latency.score(&m), m.latency_cycles as f64);
+    assert_eq!(Objective::Energy.score(&m), m.energy.total_pj());
+    assert_eq!(Objective::Capacity.score(&m), m.occupancy_peak as f64);
+    // SearchSpec-level penalty (the old CLI semantics): plain objectives are
+    // penalized too unless explicitly disabled.
+    let penalized = SearchSpec { objective: Objective::Latency, ..Default::default() };
+    assert_eq!(
+        penalized.score(&m),
+        Objective::Latency.score(&m) * Objective::INFEASIBLE_PENALTY
+    );
+    let unpenalized = SearchSpec {
+        objective: Objective::Latency,
+        penalize_infeasible: false,
+        ..Default::default()
+    };
+    assert_eq!(unpenalized.score(&m), m.latency_cycles as f64);
+    // FeasibleEdp is not double-penalized by the spec-level flag.
+    let feas = SearchSpec { objective: Objective::FeasibleEdp, ..Default::default() };
+    assert_eq!(feas.score(&m), Objective::FeasibleEdp.score(&m));
+}
+
+#[test]
+fn objective_and_algorithm_names_round_trip() {
+    for o in [
+        Objective::Latency,
+        Objective::Energy,
+        Objective::Edp,
+        Objective::Capacity,
+        Objective::FeasibleEdp,
+    ] {
+        assert_eq!(Objective::parse(o.name()).unwrap(), o);
+    }
+    for a in [
+        Algorithm::Exhaustive,
+        Algorithm::Random,
+        Algorithm::Annealing,
+        Algorithm::Genetic,
+    ] {
+        assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+    }
+    assert!(Objective::parse("bogus").is_err());
+    assert!(Algorithm::parse("bogus").is_err());
 }

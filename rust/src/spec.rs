@@ -1,0 +1,1101 @@
+//! The serializable spec layer: JSON round-trips for every public spec and
+//! result type, built on the vendored [`crate::util::json`] substrate.
+//!
+//! This is the machine-readable surface the CLI (`--config` / `--json`) and
+//! external mappers drive (MAESTRO-style declarative specs; DNNFuser-style
+//! learned mappers consume the same documents). Every `to_json` output
+//! parses back with the matching `from_json` to an equal value, and
+//! structural validation runs on the way in — a parsed [`FusionSet`] or
+//! [`Arch`] is ready for [`crate::model::Evaluator::new`] without further
+//! checks.
+//!
+//! Numbers are carried as JSON numbers (f64): exact for every count this
+//! crate produces (|n| < 2^53).
+
+use crate::arch::{presets, Arch, BufferLevel, ComputeSpec, NocSpec};
+use crate::einsum::{
+    workloads, EinsumSpec, FusionSet, OpKind, TensorAccess, TensorId, TensorInfo, TensorKind,
+};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::mapspace::MapSpaceConfig;
+use crate::model::{EnergyBreakdown, Metrics};
+use crate::poly::{AffineExpr, AffineMap};
+use crate::search::{Algorithm, Objective, SearchSpec};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+// ------------------------------------------------------------- helpers --
+
+fn jnum_i(v: i64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn jnum_u(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+fn jstr(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn jarr(v: Vec<Json>) -> Json {
+    Json::Arr(v)
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn field<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a Json, String> {
+    j.get(key)
+        .ok_or_else(|| format!("{ctx}: missing field '{key}'"))
+}
+
+fn str_field<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a str, String> {
+    field(j, key, ctx)?
+        .as_str()
+        .ok_or_else(|| format!("{ctx}: field '{key}' must be a string"))
+}
+
+fn i64_field(j: &Json, key: &str, ctx: &str) -> Result<i64, String> {
+    field(j, key, ctx)?
+        .as_i64()
+        .ok_or_else(|| format!("{ctx}: field '{key}' must be a number"))
+}
+
+fn f64_field(j: &Json, key: &str, ctx: &str) -> Result<f64, String> {
+    field(j, key, ctx)?
+        .as_f64()
+        .ok_or_else(|| format!("{ctx}: field '{key}' must be a number"))
+}
+
+fn usize_field(j: &Json, key: &str, ctx: &str) -> Result<usize, String> {
+    let v = i64_field(j, key, ctx)?;
+    if v < 0 {
+        return Err(format!("{ctx}: field '{key}' must be non-negative"));
+    }
+    Ok(v as usize)
+}
+
+fn arr_field<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a [Json], String> {
+    field(j, key, ctx)?
+        .as_arr()
+        .ok_or_else(|| format!("{ctx}: field '{key}' must be an array"))
+}
+
+fn i64_vec(j: &Json, ctx: &str) -> Result<Vec<i64>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{ctx}: expected an array of numbers"))?
+        .iter()
+        .map(|v| v.as_i64().ok_or_else(|| format!("{ctx}: expected a number")))
+        .collect()
+}
+
+fn str_vec(j: &Json, ctx: &str) -> Result<Vec<String>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{ctx}: expected an array of strings"))?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("{ctx}: expected a string"))
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------ workloads --
+
+/// Parse a compact workload spec string, e.g. `conv_conv:28x64`,
+/// `pdp:28x16`, `fc_fc:512x256`, `conv3:24x8`, `attention:2,4,64,32`.
+/// The JSON layer accepts either this shorthand or a full [`FusionSet`]
+/// object wherever a workload is expected.
+pub fn parse_workload(spec: &str) -> Result<FusionSet, String> {
+    let (kind, rest) = spec
+        .split_once(':')
+        .ok_or("workload spec needs kind:params")?;
+    let nums: Vec<i64> = rest
+        .split(|c| c == 'x' || c == ',')
+        .map(|s| s.parse::<i64>().map_err(|e| format!("bad number {s}: {e}")))
+        .collect::<Result<_, _>>()?;
+    match (kind, nums.as_slice()) {
+        ("conv_conv", [r, c]) => Ok(workloads::conv_conv(*r, *c)),
+        ("conv3", [r, c]) => Ok(workloads::conv_conv_conv(*r, *c)),
+        ("pdp", [r, c]) => Ok(workloads::pwise_dwise_pwise(*r, *c)),
+        ("fc_fc", [t, e]) => Ok(workloads::fc_fc(*t, *e)),
+        ("attention", [b, h, t, e]) => Ok(workloads::self_attention(*b, *h, *t, *e)),
+        _ => Err(format!("unknown workload spec: {spec}")),
+    }
+}
+
+/// A workload position in a config: either the shorthand string or a full
+/// [`FusionSet`] object.
+pub fn workload_from_json(j: &Json) -> Result<FusionSet, String> {
+    match j {
+        Json::Str(s) => parse_workload(s),
+        _ => FusionSet::from_json(j),
+    }
+}
+
+/// An architecture position in a config: `"generic:<glb KiB>"`, a preset
+/// name (`depfin` | `fused-cnn` | `isaac` | `pipelayer` | `flat`), or a full
+/// [`Arch`] object.
+pub fn arch_from_json(j: &Json) -> Result<Arch, String> {
+    match j {
+        Json::Str(s) => match s.as_str() {
+            "depfin" => Ok(presets::depfin()),
+            "fused-cnn" => Ok(presets::fused_cnn()),
+            "isaac" => Ok(presets::isaac()),
+            "pipelayer" => Ok(presets::pipelayer()),
+            "flat" => Ok(presets::flat()),
+            other => {
+                if let Some(kib) = other.strip_prefix("generic:") {
+                    let kib: i64 = kib
+                        .parse()
+                        .map_err(|e| format!("arch generic:<KiB>: {e}"))?;
+                    Ok(Arch::generic(kib))
+                } else {
+                    Err(format!("unknown arch shorthand: {other}"))
+                }
+            }
+        },
+        _ => Arch::from_json(j),
+    }
+}
+
+// ----------------------------------------------------- einsum / workload --
+
+fn tensor_kind_name(k: TensorKind) -> &'static str {
+    match k {
+        TensorKind::InputFmap => "input_fmap",
+        TensorKind::Weight => "weight",
+        TensorKind::Intermediate => "intermediate",
+        TensorKind::OutputFmap => "output_fmap",
+    }
+}
+
+fn tensor_kind_parse(s: &str) -> Result<TensorKind, String> {
+    match s {
+        "input_fmap" => Ok(TensorKind::InputFmap),
+        "weight" => Ok(TensorKind::Weight),
+        "intermediate" => Ok(TensorKind::Intermediate),
+        "output_fmap" => Ok(TensorKind::OutputFmap),
+        other => Err(format!("unknown tensor kind: {other}")),
+    }
+}
+
+fn op_kind_name(k: OpKind) -> &'static str {
+    match k {
+        OpKind::Mac => "mac",
+        OpKind::Max => "max",
+        OpKind::Elementwise => "elementwise",
+    }
+}
+
+fn op_kind_parse(s: &str) -> Result<OpKind, String> {
+    match s {
+        "mac" => Ok(OpKind::Mac),
+        "max" => Ok(OpKind::Max),
+        "elementwise" => Ok(OpKind::Elementwise),
+        other => Err(format!("unknown op kind: {other}")),
+    }
+}
+
+impl AffineExpr {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            (
+                "terms",
+                jarr(self
+                    .terms
+                    .iter()
+                    .map(|&(d, c)| jarr(vec![jnum_u(d), jnum_i(c)]))
+                    .collect()),
+            ),
+            ("offset", jnum_i(self.offset)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AffineExpr, String> {
+        let ctx = "affine expr";
+        let mut terms = Vec::new();
+        for t in arr_field(j, "terms", ctx)? {
+            let pair = i64_vec(t, ctx)?;
+            if pair.len() != 2 {
+                return Err(format!("{ctx}: each term must be [dim, coeff]"));
+            }
+            if pair[0] < 0 {
+                return Err(format!("{ctx}: negative dim index"));
+            }
+            terms.push((pair[0] as usize, pair[1]));
+        }
+        let offset = match j.get("offset") {
+            Some(v) => v
+                .as_i64()
+                .ok_or_else(|| format!("{ctx}: offset must be a number"))?,
+            None => 0,
+        };
+        Ok(AffineExpr { terms, offset })
+    }
+}
+
+impl AffineMap {
+    pub fn to_json(&self) -> Json {
+        jarr(self.exprs.iter().map(|e| e.to_json()).collect())
+    }
+
+    pub fn from_json(j: &Json) -> Result<AffineMap, String> {
+        let exprs = j
+            .as_arr()
+            .ok_or("affine map: expected an array of expressions")?
+            .iter()
+            .map(AffineExpr::from_json)
+            .collect::<Result<_, _>>()?;
+        Ok(AffineMap { exprs })
+    }
+}
+
+impl TensorAccess {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("tensor", jnum_u(self.tensor.0)),
+            ("map", self.map.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TensorAccess, String> {
+        let ctx = "tensor access";
+        Ok(TensorAccess {
+            tensor: TensorId(usize_field(j, "tensor", ctx)?),
+            map: AffineMap::from_json(field(j, "map", ctx)?)?,
+        })
+    }
+}
+
+impl TensorInfo {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("name", jstr(&self.name)),
+            ("shape", jarr(self.shape.iter().map(|&s| jnum_i(s)).collect())),
+            ("kind", jstr(tensor_kind_name(self.kind))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TensorInfo, String> {
+        let ctx = "tensor";
+        Ok(TensorInfo {
+            name: str_field(j, "name", ctx)?.to_string(),
+            shape: i64_vec(field(j, "shape", ctx)?, ctx)?,
+            kind: tensor_kind_parse(str_field(j, "kind", ctx)?)?,
+        })
+    }
+}
+
+impl EinsumSpec {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("name", jstr(&self.name)),
+            (
+                "rank_names",
+                jarr(self.rank_names.iter().map(|n| jstr(n)).collect()),
+            ),
+            (
+                "rank_sizes",
+                jarr(self.rank_sizes.iter().map(|&s| jnum_i(s)).collect()),
+            ),
+            ("output", self.output.to_json()),
+            ("inputs", jarr(self.inputs.iter().map(|a| a.to_json()).collect())),
+            ("op_kind", jstr(op_kind_name(self.op_kind))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<EinsumSpec, String> {
+        let ctx = "einsum";
+        Ok(EinsumSpec {
+            name: str_field(j, "name", ctx)?.to_string(),
+            rank_names: str_vec(field(j, "rank_names", ctx)?, ctx)?,
+            rank_sizes: i64_vec(field(j, "rank_sizes", ctx)?, ctx)?,
+            output: TensorAccess::from_json(field(j, "output", ctx)?)?,
+            inputs: arr_field(j, "inputs", ctx)?
+                .iter()
+                .map(TensorAccess::from_json)
+                .collect::<Result<_, _>>()?,
+            op_kind: op_kind_parse(str_field(j, "op_kind", ctx)?)?,
+        })
+    }
+}
+
+impl FusionSet {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("name", jstr(&self.name)),
+            ("tensors", jarr(self.tensors.iter().map(|t| t.to_json()).collect())),
+            ("einsums", jarr(self.einsums.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    /// Parse and structurally validate; the returned fusion set satisfies
+    /// [`FusionSet::validate`].
+    pub fn from_json(j: &Json) -> Result<FusionSet, String> {
+        let ctx = "fusion set";
+        let fs = FusionSet {
+            name: str_field(j, "name", ctx)?.to_string(),
+            tensors: arr_field(j, "tensors", ctx)?
+                .iter()
+                .map(TensorInfo::from_json)
+                .collect::<Result<_, _>>()?,
+            einsums: arr_field(j, "einsums", ctx)?
+                .iter()
+                .map(EinsumSpec::from_json)
+                .collect::<Result<_, _>>()?,
+        };
+        for e in &fs.einsums {
+            for acc in e.inputs.iter().chain(std::iter::once(&e.output)) {
+                if acc.tensor.0 >= fs.tensors.len() {
+                    return Err(format!(
+                        "{ctx}: {} references tensor {} out of range",
+                        e.name, acc.tensor.0
+                    ));
+                }
+            }
+        }
+        fs.validate()?;
+        Ok(fs)
+    }
+}
+
+// ---------------------------------------------------------------- arch --
+
+impl BufferLevel {
+    pub fn to_json(&self) -> Json {
+        // Bandwidth may be infinite (register files); JSON has no inf, so
+        // `null` encodes it symmetrically with unbounded capacity.
+        let bw = if self.bandwidth_words_per_cycle.is_finite() {
+            Json::Num(self.bandwidth_words_per_cycle)
+        } else {
+            Json::Null
+        };
+        jobj(vec![
+            ("name", jstr(&self.name)),
+            (
+                "capacity_bytes",
+                self.capacity_bytes.map(jnum_i).unwrap_or(Json::Null),
+            ),
+            ("bandwidth_words_per_cycle", bw),
+            ("read_energy_pj", Json::Num(self.read_energy_pj)),
+            ("write_energy_pj", Json::Num(self.write_energy_pj)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BufferLevel, String> {
+        let ctx = "buffer level";
+        let capacity_bytes = match field(j, "capacity_bytes", ctx)? {
+            Json::Null => None,
+            v => Some(
+                v.as_i64()
+                    .ok_or_else(|| format!("{ctx}: capacity_bytes must be a number or null"))?,
+            ),
+        };
+        let bandwidth = match field(j, "bandwidth_words_per_cycle", ctx)? {
+            Json::Null => f64::INFINITY,
+            v => v.as_f64().ok_or_else(|| {
+                format!("{ctx}: bandwidth_words_per_cycle must be a number or null")
+            })?,
+        };
+        Ok(BufferLevel {
+            name: str_field(j, "name", ctx)?.to_string(),
+            capacity_bytes,
+            bandwidth_words_per_cycle: bandwidth,
+            read_energy_pj: f64_field(j, "read_energy_pj", ctx)?,
+            write_energy_pj: f64_field(j, "write_energy_pj", ctx)?,
+        })
+    }
+}
+
+impl Arch {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("name", jstr(&self.name)),
+            ("levels", jarr(self.levels.iter().map(|l| l.to_json()).collect())),
+            (
+                "compute",
+                jobj(vec![
+                    ("macs", jnum_i(self.compute.macs)),
+                    ("mac_energy_pj", Json::Num(self.compute.mac_energy_pj)),
+                    ("clock_ghz", Json::Num(self.compute.clock_ghz)),
+                ]),
+            ),
+            (
+                "noc",
+                jobj(vec![
+                    ("rows", jnum_i(self.noc.rows)),
+                    ("cols", jnum_i(self.noc.cols)),
+                    ("hop_energy_pj", Json::Num(self.noc.hop_energy_pj)),
+                ]),
+            ),
+            ("word_bytes", jnum_i(self.word_bytes)),
+        ])
+    }
+
+    /// Parse and structurally validate; the returned architecture satisfies
+    /// [`Arch::validate`].
+    pub fn from_json(j: &Json) -> Result<Arch, String> {
+        let ctx = "arch";
+        let compute = field(j, "compute", ctx)?;
+        let noc = field(j, "noc", ctx)?;
+        let arch = Arch {
+            name: str_field(j, "name", ctx)?.to_string(),
+            levels: arr_field(j, "levels", ctx)?
+                .iter()
+                .map(BufferLevel::from_json)
+                .collect::<Result<_, _>>()?,
+            compute: ComputeSpec {
+                macs: i64_field(compute, "macs", "arch.compute")?,
+                mac_energy_pj: f64_field(compute, "mac_energy_pj", "arch.compute")?,
+                clock_ghz: f64_field(compute, "clock_ghz", "arch.compute")?,
+            },
+            noc: NocSpec {
+                rows: i64_field(noc, "rows", "arch.noc")?,
+                cols: i64_field(noc, "cols", "arch.noc")?,
+                hop_energy_pj: f64_field(noc, "hop_energy_pj", "arch.noc")?,
+            },
+            word_bytes: i64_field(j, "word_bytes", ctx)?,
+        };
+        arch.validate()?;
+        Ok(arch)
+    }
+}
+
+// ------------------------------------------------------------- mapping --
+
+impl Parallelism {
+    pub fn to_json(&self) -> Json {
+        jstr(match self {
+            Parallelism::Sequential => "sequential",
+            Parallelism::Pipeline => "pipeline",
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Parallelism, String> {
+        match j.as_str() {
+            Some("sequential") => Ok(Parallelism::Sequential),
+            Some("pipeline") => Ok(Parallelism::Pipeline),
+            _ => Err("parallelism must be \"sequential\" or \"pipeline\"".into()),
+        }
+    }
+}
+
+impl Partition {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![("dim", jnum_u(self.dim)), ("tile", jnum_i(self.tile))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Partition, String> {
+        let ctx = "partition";
+        Ok(Partition {
+            dim: usize_field(j, "dim", ctx)?,
+            tile: i64_field(j, "tile", ctx)?,
+        })
+    }
+}
+
+impl InterLayerMapping {
+    pub fn to_json(&self) -> Json {
+        // Retention as sorted [tensor, level] pairs for deterministic output.
+        let mut retention: Vec<(usize, usize)> =
+            self.retention.iter().map(|(&t, &l)| (t.0, l)).collect();
+        retention.sort_unstable();
+        jobj(vec![
+            (
+                "partitions",
+                jarr(self.partitions.iter().map(|p| p.to_json()).collect()),
+            ),
+            (
+                "retention",
+                jarr(retention
+                    .into_iter()
+                    .map(|(t, l)| jarr(vec![jnum_u(t), jnum_u(l)]))
+                    .collect()),
+            ),
+            ("default_retention", jnum_u(self.default_retention)),
+            ("parallelism", self.parallelism.to_json()),
+        ])
+    }
+
+    /// Parse a mapping. `partitions` defaults to `[]` (untiled),
+    /// `retention` to `[]`, `default_retention` to the number of partitions
+    /// (the [`InterLayerMapping::tiled`] convention), and `parallelism` to
+    /// sequential — so the minimal valid document is `{}`.
+    pub fn from_json(j: &Json) -> Result<InterLayerMapping, String> {
+        let ctx = "mapping";
+        let partitions: Vec<Partition> = match j.get("partitions") {
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| format!("{ctx}: partitions must be an array"))?
+                .iter()
+                .map(Partition::from_json)
+                .collect::<Result<_, _>>()?,
+            None => vec![],
+        };
+        let mut retention = HashMap::new();
+        if let Some(v) = j.get("retention") {
+            for pair in v
+                .as_arr()
+                .ok_or_else(|| format!("{ctx}: retention must be an array of pairs"))?
+            {
+                let p = i64_vec(pair, ctx)?;
+                if p.len() != 2 || p[0] < 0 || p[1] < 0 {
+                    return Err(format!("{ctx}: retention entries must be [tensor, level]"));
+                }
+                retention.insert(TensorId(p[0] as usize), p[1] as usize);
+            }
+        }
+        let default_retention = match j.get("default_retention") {
+            Some(v) => {
+                let d = v
+                    .as_i64()
+                    .ok_or_else(|| format!("{ctx}: default_retention must be a number"))?;
+                if d < 0 {
+                    return Err(format!("{ctx}: default_retention must be non-negative"));
+                }
+                d as usize
+            }
+            None => partitions.len(),
+        };
+        let parallelism = match j.get("parallelism") {
+            Some(v) => Parallelism::from_json(v)?,
+            None => Parallelism::Sequential,
+        };
+        Ok(InterLayerMapping { partitions, retention, default_retention, parallelism })
+    }
+}
+
+// ------------------------------------------------------------ mapspace --
+
+impl MapSpaceConfig {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            (
+                "schedules",
+                jarr(self
+                    .schedules
+                    .iter()
+                    .map(|names| jarr(names.iter().map(|n| jstr(n)).collect()))
+                    .collect()),
+            ),
+            (
+                "tile_sizes",
+                jarr(self.tile_sizes.iter().map(|&t| jnum_i(t)).collect()),
+            ),
+            ("uniform_retention", Json::Bool(self.uniform_retention)),
+            (
+                "parallelism",
+                jarr(self.parallelism.iter().map(|p| p.to_json()).collect()),
+            ),
+            ("max_mappings", jnum_u(self.max_mappings)),
+        ])
+    }
+
+    /// Parse a mapspace config; every absent field takes its
+    /// [`MapSpaceConfig::default`] value.
+    pub fn from_json(j: &Json) -> Result<MapSpaceConfig, String> {
+        let ctx = "mapspace";
+        let d = MapSpaceConfig::default();
+        let schedules = match j.get("schedules") {
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| format!("{ctx}: schedules must be an array"))?
+                .iter()
+                .map(|names| str_vec(names, ctx))
+                .collect::<Result<_, _>>()?,
+            None => d.schedules,
+        };
+        let tile_sizes = match j.get("tile_sizes") {
+            Some(v) => i64_vec(v, ctx)?,
+            None => d.tile_sizes,
+        };
+        let uniform_retention = match j.get("uniform_retention") {
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| format!("{ctx}: uniform_retention must be a bool"))?,
+            None => d.uniform_retention,
+        };
+        let parallelism = match j.get("parallelism") {
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| format!("{ctx}: parallelism must be an array"))?
+                .iter()
+                .map(Parallelism::from_json)
+                .collect::<Result<_, _>>()?,
+            None => d.parallelism,
+        };
+        let max_mappings = match j.get("max_mappings") {
+            Some(v) => {
+                let m = v
+                    .as_i64()
+                    .ok_or_else(|| format!("{ctx}: max_mappings must be a number"))?;
+                if m < 0 {
+                    return Err(format!("{ctx}: max_mappings must be non-negative"));
+                }
+                m as usize
+            }
+            None => d.max_mappings,
+        };
+        Ok(MapSpaceConfig {
+            schedules,
+            tile_sizes,
+            uniform_retention,
+            parallelism,
+            max_mappings,
+        })
+    }
+}
+
+// -------------------------------------------------------------- search --
+
+impl Objective {
+    pub fn to_json(&self) -> Json {
+        jstr(self.name())
+    }
+
+    pub fn from_json(j: &Json) -> Result<Objective, String> {
+        Objective::parse(j.as_str().ok_or("objective must be a string")?)
+    }
+}
+
+impl Algorithm {
+    pub fn to_json(&self) -> Json {
+        jstr(self.name())
+    }
+
+    pub fn from_json(j: &Json) -> Result<Algorithm, String> {
+        Algorithm::parse(j.as_str().ok_or("algorithm must be a string")?)
+    }
+}
+
+impl SearchSpec {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("algorithm", self.algorithm.to_json()),
+            ("objective", self.objective.to_json()),
+            (
+                // Exact for any u64: numbers up to 2^53, strings beyond
+                // (f64 cannot carry larger integers losslessly).
+                "seed",
+                if self.seed <= (1 << 53) {
+                    Json::Num(self.seed as f64)
+                } else {
+                    Json::Str(self.seed.to_string())
+                },
+            ),
+            ("samples", jnum_u(self.samples)),
+            ("iters", jnum_u(self.iters)),
+            ("population", jnum_u(self.population)),
+            ("generations", jnum_u(self.generations)),
+            ("mapspace", self.mapspace.to_json()),
+            ("penalize_infeasible", Json::Bool(self.penalize_infeasible)),
+        ])
+    }
+
+    /// Parse a search spec; every absent field takes its
+    /// [`SearchSpec::default`] value, so `{}` is a valid exhaustive search.
+    pub fn from_json(j: &Json) -> Result<SearchSpec, String> {
+        let ctx = "search";
+        let d = SearchSpec::default();
+        let algorithm = match j.get("algorithm") {
+            Some(v) => Algorithm::from_json(v)?,
+            None => d.algorithm,
+        };
+        let objective = match j.get("objective") {
+            Some(v) => Objective::from_json(v)?,
+            None => d.objective,
+        };
+        let seed = match j.get("seed") {
+            // Large seeds arrive as strings (see to_json); parse exactly.
+            Some(Json::Str(s)) => s
+                .parse::<u64>()
+                .map_err(|e| format!("{ctx}: seed: {e}"))?,
+            Some(v) => {
+                // as_i64 is exact-integer-only, so fractional or >2^53 seeds
+                // (unrepresentable in a JSON number) are rejected here.
+                let s = v
+                    .as_i64()
+                    .ok_or_else(|| format!("{ctx}: seed must be an integer in [0, 2^53]"))?;
+                if s < 0 {
+                    return Err(format!("{ctx}: seed must be non-negative"));
+                }
+                s as u64
+            }
+            None => d.seed,
+        };
+        let usize_or = |key: &str, dflt: usize| -> Result<usize, String> {
+            match j.get(key) {
+                Some(v) => {
+                    let n = v
+                        .as_i64()
+                        .ok_or_else(|| format!("{ctx}: {key} must be a number"))?;
+                    if n < 0 {
+                        return Err(format!("{ctx}: {key} must be non-negative"));
+                    }
+                    Ok(n as usize)
+                }
+                None => Ok(dflt),
+            }
+        };
+        let samples = usize_or("samples", d.samples)?;
+        let iters = usize_or("iters", d.iters)?;
+        let population = usize_or("population", d.population)?;
+        let generations = usize_or("generations", d.generations)?;
+        let mapspace = match j.get("mapspace") {
+            Some(v) => MapSpaceConfig::from_json(v)?,
+            None => d.mapspace,
+        };
+        let penalize_infeasible = match j.get("penalize_infeasible") {
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| format!("{ctx}: penalize_infeasible must be a bool"))?,
+            None => d.penalize_infeasible,
+        };
+        Ok(SearchSpec {
+            algorithm,
+            objective,
+            seed,
+            samples,
+            iters,
+            population,
+            generations,
+            mapspace,
+            penalize_infeasible,
+        })
+    }
+}
+
+// ------------------------------------------------------------- metrics --
+
+impl EnergyBreakdown {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("dram_pj", Json::Num(self.dram_pj)),
+            ("glb_pj", Json::Num(self.glb_pj)),
+            ("rf_pj", Json::Num(self.rf_pj)),
+            ("compute_pj", Json::Num(self.compute_pj)),
+            ("noc_pj", Json::Num(self.noc_pj)),
+            ("total_pj", Json::Num(self.total_pj())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<EnergyBreakdown, String> {
+        let ctx = "energy";
+        Ok(EnergyBreakdown {
+            dram_pj: f64_field(j, "dram_pj", ctx)?,
+            glb_pj: f64_field(j, "glb_pj", ctx)?,
+            rf_pj: f64_field(j, "rf_pj", ctx)?,
+            compute_pj: f64_field(j, "compute_pj", ctx)?,
+            noc_pj: f64_field(j, "noc_pj", ctx)?,
+        })
+    }
+}
+
+impl Metrics {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("latency_cycles", jnum_i(self.latency_cycles)),
+            ("compute_cycles", jnum_i(self.compute_cycles)),
+            ("memory_cycles", jnum_i(self.memory_cycles)),
+            (
+                "sequential_compute_cycles",
+                jnum_i(self.sequential_compute_cycles),
+            ),
+            ("energy", self.energy.to_json()),
+            ("offchip_reads", jnum_i(self.offchip_reads)),
+            ("offchip_writes", jnum_i(self.offchip_writes)),
+            ("glb_reads", jnum_i(self.glb_reads)),
+            ("glb_writes", jnum_i(self.glb_writes)),
+            ("noc_hop_words", Json::Num(self.noc_hop_words)),
+            (
+                "per_tensor_offchip",
+                jarr(self.per_tensor_offchip.iter().map(|&v| jnum_i(v)).collect()),
+            ),
+            ("occupancy_peak", jnum_i(self.occupancy_peak)),
+            (
+                "per_tensor_occupancy",
+                jarr(self
+                    .per_tensor_occupancy
+                    .iter()
+                    .map(|&v| jnum_i(v))
+                    .collect()),
+            ),
+            ("capacity_ok", Json::Bool(self.capacity_ok)),
+            ("total_ops", jnum_i(self.total_ops)),
+            ("recompute_ops", jnum_i(self.recompute_ops)),
+            (
+                "per_tensor_recompute",
+                jarr(self
+                    .per_tensor_recompute
+                    .iter()
+                    .map(|&v| jnum_i(v))
+                    .collect()),
+            ),
+            ("iterations", jnum_i(self.iterations)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Metrics, String> {
+        let ctx = "metrics";
+        let i64_or = |key: &str| -> Result<i64, String> {
+            match j.get(key) {
+                Some(v) => v
+                    .as_i64()
+                    .ok_or_else(|| format!("{ctx}: {key} must be a number")),
+                None => Ok(0),
+            }
+        };
+        let vec_or = |key: &str| -> Result<Vec<i64>, String> {
+            match j.get(key) {
+                Some(v) => i64_vec(v, ctx),
+                None => Ok(vec![]),
+            }
+        };
+        Ok(Metrics {
+            latency_cycles: i64_or("latency_cycles")?,
+            compute_cycles: i64_or("compute_cycles")?,
+            memory_cycles: i64_or("memory_cycles")?,
+            sequential_compute_cycles: i64_or("sequential_compute_cycles")?,
+            energy: match j.get("energy") {
+                Some(v) => EnergyBreakdown::from_json(v)?,
+                None => EnergyBreakdown::default(),
+            },
+            offchip_reads: i64_or("offchip_reads")?,
+            offchip_writes: i64_or("offchip_writes")?,
+            glb_reads: i64_or("glb_reads")?,
+            glb_writes: i64_or("glb_writes")?,
+            noc_hop_words: match j.get("noc_hop_words") {
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| format!("{ctx}: noc_hop_words must be a number"))?,
+                None => 0.0,
+            },
+            per_tensor_offchip: vec_or("per_tensor_offchip")?,
+            occupancy_peak: i64_or("occupancy_peak")?,
+            per_tensor_occupancy: vec_or("per_tensor_occupancy")?,
+            capacity_ok: match j.get("capacity_ok") {
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| format!("{ctx}: capacity_ok must be a bool"))?,
+                None => true,
+            },
+            total_ops: i64_or("total_ops")?,
+            recompute_ops: i64_or("recompute_ops")?,
+            per_tensor_recompute: vec_or("per_tensor_recompute")?,
+            iterations: i64_or("iterations")?,
+        })
+    }
+}
+
+// ----------------------------------------------------------- CLI configs --
+
+/// A complete `looptree analyze` request: workload + architecture + one
+/// mapping. The `--json` output of `analyze` is itself a valid document.
+#[derive(Debug, Clone)]
+pub struct AnalyzeConfig {
+    pub workload: FusionSet,
+    pub arch: Arch,
+    pub mapping: InterLayerMapping,
+}
+
+impl AnalyzeConfig {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("workload", self.workload.to_json()),
+            ("arch", self.arch.to_json()),
+            ("mapping", self.mapping.to_json()),
+        ])
+    }
+
+    /// Parse a config document. `arch` defaults to `generic:256`; `mapping`
+    /// defaults to the untiled sequential mapping.
+    pub fn from_json(j: &Json) -> Result<AnalyzeConfig, String> {
+        let ctx = "analyze config";
+        let workload = workload_from_json(field(j, "workload", ctx)?)?;
+        let arch = match j.get("arch") {
+            Some(v) => arch_from_json(v)?,
+            None => Arch::generic(256),
+        };
+        let mapping = match j.get("mapping") {
+            Some(v) => InterLayerMapping::from_json(v)?,
+            None => InterLayerMapping::untiled(Parallelism::Sequential),
+        };
+        mapping.validate(&workload)?;
+        Ok(AnalyzeConfig { workload, arch, mapping })
+    }
+}
+
+/// A complete `looptree search` request: workload + architecture + search
+/// spec. The `--json` output of `search` embeds this config verbatim, so a
+/// result document can be re-fed as `--config` and reproduces the run.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub workload: FusionSet,
+    pub arch: Arch,
+    pub search: SearchSpec,
+}
+
+impl SearchConfig {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("workload", self.workload.to_json()),
+            ("arch", self.arch.to_json()),
+            ("search", self.search.to_json()),
+        ])
+    }
+
+    /// Parse a config document. `arch` defaults to `generic:256`; `search`
+    /// defaults to [`SearchSpec::default`]. Extra fields (e.g. a `result`
+    /// section from a previous run's `--json` output) are ignored.
+    pub fn from_json(j: &Json) -> Result<SearchConfig, String> {
+        let ctx = "search config";
+        let workload = workload_from_json(field(j, "workload", ctx)?)?;
+        let arch = match j.get("arch") {
+            Some(v) => arch_from_json(v)?,
+            None => Arch::generic(256),
+        };
+        let search = match j.get("search") {
+            Some(v) => SearchSpec::from_json(v)?,
+            None => SearchSpec::default(),
+        };
+        Ok(SearchConfig { workload, arch, search })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reser(j: &Json) -> Json {
+        Json::parse(&j.to_string()).unwrap()
+    }
+
+    #[test]
+    fn fusion_set_round_trips() {
+        for fs in [
+            workloads::conv_conv(14, 8),
+            workloads::pwise_dwise_pwise(14, 8),
+            workloads::fc_fc(32, 16),
+            workloads::self_attention(2, 2, 16, 8),
+        ] {
+            let j = fs.to_json();
+            let back = FusionSet::from_json(&reser(&j)).unwrap();
+            assert_eq!(back.to_json().to_string(), j.to_string(), "{}", fs.name);
+            assert!(back.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn arch_round_trips_including_infinite_bandwidth() {
+        for arch in [
+            Arch::generic(256),
+            Arch::generic(1 << 20).unbounded_glb(),
+            presets::depfin(),
+            presets::flat(),
+        ] {
+            let j = arch.to_json();
+            let back = Arch::from_json(&reser(&j)).unwrap();
+            assert_eq!(back.to_json().to_string(), j.to_string(), "{}", arch.name);
+            // The RF level's infinite bandwidth survives the null encoding.
+            for (a, b) in arch.levels.iter().zip(&back.levels) {
+                assert_eq!(
+                    a.bandwidth_words_per_cycle.is_finite(),
+                    b.bandwidth_words_per_cycle.is_finite()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mapping_round_trips() {
+        let fs = workloads::conv_conv(14, 8);
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let q2 = fs.last().rank_index("Q2").unwrap();
+        let m = InterLayerMapping::tiled(
+            vec![
+                Partition { dim: p2, tile: 4 },
+                Partition { dim: q2, tile: 2 },
+            ],
+            Parallelism::Pipeline,
+        )
+        .with_retention(TensorId(0), 1)
+        .with_retention(TensorId(2), 2);
+        let back = InterLayerMapping::from_json(&reser(&m.to_json())).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn minimal_mapping_document_is_untiled() {
+        let m = InterLayerMapping::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(m, InterLayerMapping::untiled(Parallelism::Sequential));
+    }
+
+    #[test]
+    fn search_spec_round_trips_and_defaults() {
+        let spec = SearchSpec {
+            algorithm: Algorithm::Genetic,
+            objective: Objective::Capacity,
+            seed: 99,
+            population: 7,
+            generations: 3,
+            mapspace: MapSpaceConfig {
+                schedules: vec![vec!["P2".into(), "Q2".into()]],
+                tile_sizes: vec![2, 4],
+                uniform_retention: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let back = SearchSpec::from_json(&reser(&spec.to_json())).unwrap();
+        assert_eq!(back, spec);
+        // `{}` parses to the default spec.
+        let d = SearchSpec::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d, SearchSpec::default());
+    }
+
+    #[test]
+    fn workload_shorthand_accepted() {
+        let fs = workload_from_json(&Json::Str("conv_conv:14x8".into())).unwrap();
+        assert_eq!(fs.name, workloads::conv_conv(14, 8).name);
+        assert!(workload_from_json(&Json::Str("bogus:1".into())).is_err());
+    }
+
+    #[test]
+    fn arch_shorthand_accepted() {
+        assert_eq!(arch_from_json(&Json::Str("generic:128".into())).unwrap().name, Arch::generic(128).name);
+        assert_eq!(arch_from_json(&Json::Str("depfin".into())).unwrap().name, presets::depfin().name);
+        assert!(arch_from_json(&Json::Str("nope".into())).is_err());
+    }
+
+    #[test]
+    fn metrics_round_trip_via_evaluation() {
+        let fs = workloads::conv_conv(14, 8);
+        let arch = Arch::generic(256);
+        let ev = crate::model::Evaluator::new(&fs, &arch).unwrap();
+        let m = ev
+            .evaluate(&InterLayerMapping::untiled(Parallelism::Sequential))
+            .unwrap();
+        let j = m.to_json();
+        let back = Metrics::from_json(&reser(&j)).unwrap();
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        assert_eq!(back.latency_cycles, m.latency_cycles);
+        assert_eq!(back.energy.total_pj().to_bits(), m.energy.total_pj().to_bits());
+    }
+
+    #[test]
+    fn invalid_documents_rejected() {
+        assert!(FusionSet::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(Arch::from_json(&Json::parse("{\"name\":\"x\"}").unwrap()).is_err());
+        // Structurally invalid fusion set: validation runs on parse.
+        let fs = workloads::conv_conv(14, 8);
+        let mut j = fs.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("einsums".into(), Json::Arr(vec![]));
+        }
+        assert!(FusionSet::from_json(&j).is_err());
+    }
+}

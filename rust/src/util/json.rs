@@ -56,8 +56,15 @@ impl Json {
         }
     }
 
+    /// The value as an exact integer: `None` for fractional numbers and for
+    /// magnitudes beyond 2^53 (where f64 stops representing integers
+    /// exactly), so integer fields can't be silently truncated or mangled.
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|f| f as i64)
+        const MAX_SAFE: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self.as_f64() {
+            Some(f) if f.fract() == 0.0 && f.abs() <= MAX_SAFE => Some(f as i64),
+            _ => None,
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -71,6 +78,63 @@ impl Json {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Multi-line rendering with two-space indentation (the CLI `--json`
+    /// output). Parses back to the same value as [`Json`]'s compact
+    /// `Display`.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in v.iter().enumerate() {
+                    for _ in 0..indent + 1 {
+                        out.push_str("  ");
+                    }
+                    x.pretty_into(out, indent + 1);
+                    if i + 1 < v.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                for _ in 0..indent {
+                    out.push_str("  ");
+                }
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    for _ in 0..indent + 1 {
+                        out.push_str("  ");
+                    }
+                    out.push_str(&format!("{}: ", Json::Str(k.clone())));
+                    v.pretty_into(out, indent + 1);
+                    if i + 1 < m.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                for _ in 0..indent {
+                    out.push_str("  ");
+                }
+                out.push('}');
+            }
+            other => out.push_str(&other.to_string()),
         }
     }
 }
@@ -328,6 +392,25 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let again = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, again);
+    }
+
+    #[test]
+    fn as_i64_rejects_fractional_and_unsafe_magnitudes() {
+        assert_eq!(Json::Num(4.0).as_i64(), Some(4));
+        assert_eq!(Json::Num(-3.0).as_i64(), Some(-3));
+        assert_eq!(Json::Num(1.6).as_i64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_i64(), None);
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_i64(), Some(1 << 53));
+        assert_eq!(Json::Num(9.1e15).as_i64(), None);
+    }
+
+    #[test]
+    fn pretty_round_trips() {
+        let src = r#"{"cfg":{"rows":32,"names":["a","b"],"ok":true,"f":1.5},"empty":[],"none":{}}"#;
+        let j = Json::parse(src).unwrap();
+        let pretty = j.pretty();
+        assert!(pretty.contains('\n'));
+        assert_eq!(Json::parse(&pretty).unwrap(), j);
     }
 
     #[test]

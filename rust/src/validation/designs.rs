@@ -6,19 +6,23 @@ use super::Scale;
 use crate::arch::{presets, Arch};
 use crate::einsum::{FusionSet, FusionSetBuilder, TensorId, TensorKind};
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
-use crate::model::{evaluate, EvalOptions, Metrics};
+use crate::model::{Evaluator, Metrics};
 use crate::sim::{simulate, SimMetrics};
 
-/// Evaluate model + reference simulator for one configuration.
-fn run(
-    fs: &FusionSet,
-    arch: &Arch,
-    mapping: &InterLayerMapping,
-) -> (Metrics, SimMetrics) {
-    let unbounded = arch.unbounded_glb(); // validations measure required capacity
-    let m = evaluate(fs, &unbounded, mapping, &EvalOptions::default())
+/// Validate-once session for one design's (workload, architecture) pair,
+/// with the GLB unbounded — validations measure *required* capacity.
+fn session(fs: &FusionSet, arch: &Arch) -> Evaluator {
+    let unbounded = arch.unbounded_glb();
+    Evaluator::new(fs, &unbounded).unwrap_or_else(|e| panic!("{}: {e}", fs.name))
+}
+
+/// Evaluate model + reference simulator for one mapping on a session.
+fn run(ev: &Evaluator, mapping: &InterLayerMapping) -> (Metrics, SimMetrics) {
+    let fs = ev.fusion_set();
+    let m = ev
+        .evaluate(mapping)
         .unwrap_or_else(|e| panic!("{}: model: {e}", fs.name));
-    let s = simulate(fs, &unbounded, mapping)
+    let s = simulate(fs, ev.arch(), mapping)
         .unwrap_or_else(|e| panic!("{}: sim: {e}", fs.name));
     (m, s)
 }
@@ -67,7 +71,7 @@ pub fn validate_depfin(scale: Scale) -> Vec<ValRow> {
         ("MC-CNN", crate::einsum::workloads::mc_cnn(rows)),
     ] {
         let mapping = pq_mapping(&fs, (rows / 8).max(1), (rows / 8).max(1), Parallelism::Sequential);
-        let (m, s) = run(&fs, &arch, &mapping);
+        let (m, s) = run(&session(&fs, &arch), &mapping);
         out.push(ValRow {
             design: "DepFin",
             workload: wl_name.into(),
@@ -119,7 +123,7 @@ pub fn validate_fused_cnn(scale: Scale) -> Vec<ValRow> {
         .build();
     let arch = presets::fused_cnn();
     let mapping = pq_mapping(&fs, (rows / 8).max(1), (rows / 2).max(1), Parallelism::Pipeline);
-    let (m, s) = run(&fs, &arch, &mapping);
+    let (m, s) = run(&session(&fs, &arch), &mapping);
 
     // Buffer split per the publication: WBuf = weights, IOBuf = input +
     // output fmaps, TBuf = intermediate tile.
@@ -214,21 +218,8 @@ pub fn validate_isaac(scale: Scale) -> Vec<ValRow> {
             .conv2d(m_ch, 3, 3, 1)
             .conv2d(m_ch, 3, 3, 1)
             .build();
-        // Column partitioning: Q of the last layer, balanced-throughput
-        // pipeline (the ISAAC assumption).
-        let q = fs.last().rank_index("Q2").unwrap();
-        let mut mapping = InterLayerMapping::tiled(
-            vec![Partition { dim: q, tile: 2 }],
-            Parallelism::Pipeline,
-        );
-        for (x, t) in fs.tensors.iter().enumerate() {
-            let lvl = match t.kind {
-                TensorKind::Weight => 0, // weights live in the crossbars
-                _ => 1,
-            };
-            mapping = mapping.with_retention(TensorId(x), lvl);
-        }
-        let (m, s) = run(&fs, &arch, &mapping);
+        let mapping = isaac_mapping(&fs);
+        let (m, s) = run(&session(&fs, &arch), &mapping);
         out.push(ValRow {
             design: "ISAAC",
             workload: format!("VGG-1 {tag}"),
@@ -248,6 +239,24 @@ pub fn validate_isaac(scale: Scale) -> Vec<ValRow> {
         });
     }
     out
+}
+
+/// Column partitioning: Q of the last layer, balanced-throughput pipeline
+/// (the ISAAC assumption); weights live in the crossbars (level 0).
+fn isaac_mapping(fs: &FusionSet) -> InterLayerMapping {
+    let q = fs.last().rank_index("Q2").unwrap();
+    let mut mapping = InterLayerMapping::tiled(
+        vec![Partition { dim: q, tile: 2 }],
+        Parallelism::Pipeline,
+    );
+    for (x, t) in fs.tensors.iter().enumerate() {
+        let lvl = match t.kind {
+            TensorKind::Weight => 0,
+            _ => 1,
+        };
+        mapping = mapping.with_retention(TensorId(x), lvl);
+    }
+    mapping
 }
 
 // -------------------------------------------------------------- PipeLayer --
@@ -291,18 +300,9 @@ pub fn validate_pipelayer(scale: Scale) -> Vec<ValRow> {
         ),
     ];
     for (tag, fs, published) in cases {
-        let b = fs.last().rank_index(&format!("B{}", fs.num_layers())).unwrap();
-        let mk = |par| {
-            let mut m =
-                InterLayerMapping::tiled(vec![Partition { dim: b, tile: 1 }], par);
-            for (x, t) in fs.tensors.iter().enumerate() {
-                let lvl = if t.kind == TensorKind::Weight { 0 } else { 1 };
-                m = m.with_retention(TensorId(x), lvl);
-            }
-            m
-        };
-        let (m_seq, s_seq) = run(&fs, &arch, &mk(Parallelism::Sequential));
-        let (m_pipe, s_pipe) = run(&fs, &arch, &mk(Parallelism::Pipeline));
+        let ev = session(&fs, &arch);
+        let (m_seq, s_seq) = run(&ev, &pipelayer_mapping(&fs, Parallelism::Sequential));
+        let (m_pipe, s_pipe) = run(&ev, &pipelayer_mapping(&fs, Parallelism::Pipeline));
         let lt_speedup = m_seq.compute_cycles as f64 / m_pipe.compute_cycles as f64;
         let sim_speedup = s_seq.compute_cycles as f64 / s_pipe.compute_cycles as f64;
         out.push(ValRow {
@@ -315,6 +315,18 @@ pub fn validate_pipelayer(scale: Scale) -> Vec<ValRow> {
         });
     }
     out
+}
+
+/// Batch partitioning (one image per tile), everything but the crossbar
+/// weights retained at the batch level — the PipeLayer dataflow.
+fn pipelayer_mapping(fs: &FusionSet, par: Parallelism) -> InterLayerMapping {
+    let b = fs.last().rank_index(&format!("B{}", fs.num_layers())).unwrap();
+    let mut m = InterLayerMapping::tiled(vec![Partition { dim: b, tile: 1 }], par);
+    for (x, t) in fs.tensors.iter().enumerate() {
+        let lvl = if t.kind == TensorKind::Weight { 0 } else { 1 };
+        m = m.with_retention(TensorId(x), lvl);
+    }
+    m
 }
 
 /// A small batched conv chain for test-scale PipeLayer runs.
@@ -331,6 +343,27 @@ fn small_batched_chain(batch: i64, layers: usize, ch: i64, hw: i64) -> FusionSet
 
 // ------------------------------------------------------------------- FLAT --
 
+/// B, H, M partitioning with every tensor retained at the innermost level —
+/// the FLAT fused-attention dataflow for one M-tile size.
+fn flat_mapping(fs: &FusionSet, m_tile: i64) -> InterLayerMapping {
+    let last = fs.last();
+    let b = last.rank_index("B2").unwrap();
+    let h = last.rank_index("H2").unwrap();
+    let mrank = last.rank_index("M2").unwrap();
+    let mut mapping = InterLayerMapping::tiled(
+        vec![
+            Partition { dim: b, tile: 1 },
+            Partition { dim: h, tile: 1 },
+            Partition { dim: mrank, tile: m_tile },
+        ],
+        Parallelism::Sequential,
+    );
+    for x in 0..fs.tensors.len() {
+        mapping = mapping.with_retention(TensorId(x), 3);
+    }
+    mapping
+}
+
 /// FLAT [30]: fused attention with B, H, M partitioning, sequential tiles.
 /// Validated outputs: latency and off-chip transfers across tile shapes
 /// (paper Fig 13: normalized series, ≤3.4% divergence).
@@ -341,29 +374,14 @@ pub fn validate_flat(scale: Scale) -> Vec<ValRow> {
     };
     let arch = presets::flat();
     let fs = crate::einsum::workloads::self_attention(batch, heads, tokens, emb);
-    let last = fs.last();
-    let b = last.rank_index("B2").unwrap();
-    let h = last.rank_index("H2").unwrap();
-    let mrank = last.rank_index("M2").unwrap();
+    let ev = session(&fs, &arch);
     let mut out = Vec::new();
     for m_tile in [tokens / 8, tokens / 4, tokens / 2] {
         if m_tile < 1 {
             continue;
         }
-        let mut mapping = InterLayerMapping::tiled(
-            vec![
-                Partition { dim: b, tile: 1 },
-                Partition { dim: h, tile: 1 },
-                Partition { dim: mrank, tile: m_tile },
-            ],
-            Parallelism::Sequential,
-        );
-        for (x, t) in fs.tensors.iter().enumerate() {
-            let lvl = if t.kind == TensorKind::Weight { 3 } else { 3 };
-            let _ = t;
-            mapping = mapping.with_retention(TensorId(x), lvl);
-        }
-        let (m, s) = run(&fs, &arch, &mapping);
+        let mapping = flat_mapping(&fs, m_tile);
+        let (m, s) = run(&ev, &mapping);
         let wl = format!("attn Mt={m_tile}");
         out.push(ValRow {
             design: "FLAT",
@@ -382,5 +400,98 @@ pub fn validate_flat(scale: Scale) -> Vec<ValRow> {
             published: None,
         });
     }
+    out
+}
+
+// ---------------------------------------------------------- design points --
+
+/// One validated (workload, architecture, mapping) triple.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub design: &'static str,
+    pub fs: FusionSet,
+    pub arch: Arch,
+    pub mapping: InterLayerMapping,
+}
+
+/// A representative (workload, architecture, mapping) triple per validation
+/// design (paper Table V), built exactly as the `validate_*` drivers build
+/// them — the surface golden tests and external tools evaluate directly.
+pub fn design_points(scale: Scale) -> Vec<DesignPoint> {
+    let mut out = Vec::new();
+
+    // DepFin: FSRCNN, sequential P,Q bands.
+    {
+        let rows = match scale {
+            Scale::Test => 10,
+            Scale::Full => 64,
+        };
+        let fs = crate::einsum::workloads::fsrcnn(rows);
+        let mapping =
+            pq_mapping(&fs, (rows / 8).max(1), (rows / 8).max(1), Parallelism::Sequential);
+        out.push(DesignPoint { design: "DepFin", fs, arch: presets::depfin(), mapping });
+    }
+
+    // Fused-layer CNN: VGG-E c1+c2, pipelined P,Q bands.
+    {
+        let (rows, ch) = match scale {
+            Scale::Test => (16, 8),
+            Scale::Full => (56, 64),
+        };
+        let fs = FusionSetBuilder::new("vgg-e-c1c2", &[3, rows + 2, rows + 2])
+            .conv2d(ch, 3, 3, 1)
+            .conv2d(ch, 3, 3, 1)
+            .build();
+        let mapping =
+            pq_mapping(&fs, (rows / 8).max(1), (rows / 2).max(1), Parallelism::Pipeline);
+        out.push(DesignPoint {
+            design: "Fused-layer CNN",
+            fs,
+            arch: presets::fused_cnn(),
+            mapping,
+        });
+    }
+
+    // ISAAC: column-partitioned pipeline.
+    {
+        let (c, hw, m_ch) = match scale {
+            Scale::Test => (3, 12, 8),
+            Scale::Full => (3, 56, 64),
+        };
+        let fs = FusionSetBuilder::new("vgg1-conv1", &[c, hw + 2, hw + 2])
+            .conv2d(m_ch, 3, 3, 1)
+            .conv2d(m_ch, 3, 3, 1)
+            .build();
+        let mapping = isaac_mapping(&fs);
+        out.push(DesignPoint { design: "ISAAC", fs, arch: presets::isaac(), mapping });
+    }
+
+    // PipeLayer: batch-partitioned pipeline.
+    {
+        let batch = match scale {
+            Scale::Test => 4,
+            Scale::Full => 32,
+        };
+        let fs = crate::einsum::workloads::mnist_convs_batched(batch, 2);
+        let mapping = pipelayer_mapping(&fs, Parallelism::Pipeline);
+        out.push(DesignPoint {
+            design: "PipeLayer",
+            fs,
+            arch: presets::pipelayer(),
+            mapping,
+        });
+    }
+
+    // FLAT: B,H,M-partitioned sequential attention.
+    {
+        let (batch, heads, tokens, emb) = match scale {
+            Scale::Test => (2, 2, 32, 8),
+            Scale::Full => (4, 8, 128, 32),
+        };
+        let fs = crate::einsum::workloads::self_attention(batch, heads, tokens, emb);
+        let mapping = flat_mapping(&fs, tokens / 4);
+        out.push(DesignPoint { design: "FLAT", fs, arch: presets::flat(), mapping });
+    }
+
     out
 }

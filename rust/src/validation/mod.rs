@@ -27,7 +27,8 @@ mod designs;
 mod report;
 
 pub use designs::{
-    validate_depfin, validate_flat, validate_fused_cnn, validate_isaac, validate_pipelayer,
+    design_points, validate_depfin, validate_flat, validate_fused_cnn, validate_isaac,
+    validate_pipelayer, DesignPoint,
 };
 pub use report::{summarize, ValRow};
 

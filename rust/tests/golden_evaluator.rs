@@ -1,0 +1,133 @@
+//! Golden equivalence: the validate-once `Evaluator` session must reproduce
+//! the legacy free `evaluate()` bit-for-bit — on all five validation designs
+//! (DepFin, Fused-layer CNN, ISAAC, PipeLayer, FLAT) and on randomized
+//! (workload, mapping) pairs. The session refactor moves *where* validation
+//! and intra-layer derivation happen; it must not move a single bit of the
+//! metrics.
+
+use looptree::einsum::{workloads, FusionSet, TensorId};
+use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
+use looptree::model::{evaluate, EvalOptions, Evaluator, Metrics};
+use looptree::util::prng::Prng;
+use looptree::validation::{design_points, Scale};
+
+/// Bitwise equality across every metric field.
+fn assert_bitwise_equal(a: &Metrics, b: &Metrics, tag: &str) {
+    assert_eq!(a.latency_cycles, b.latency_cycles, "{tag}: latency_cycles");
+    assert_eq!(a.compute_cycles, b.compute_cycles, "{tag}: compute_cycles");
+    assert_eq!(a.memory_cycles, b.memory_cycles, "{tag}: memory_cycles");
+    assert_eq!(
+        a.sequential_compute_cycles, b.sequential_compute_cycles,
+        "{tag}: sequential_compute_cycles"
+    );
+    assert_eq!(a.offchip_reads, b.offchip_reads, "{tag}: offchip_reads");
+    assert_eq!(a.offchip_writes, b.offchip_writes, "{tag}: offchip_writes");
+    assert_eq!(a.glb_reads, b.glb_reads, "{tag}: glb_reads");
+    assert_eq!(a.glb_writes, b.glb_writes, "{tag}: glb_writes");
+    assert_eq!(
+        a.noc_hop_words.to_bits(),
+        b.noc_hop_words.to_bits(),
+        "{tag}: noc_hop_words"
+    );
+    assert_eq!(a.per_tensor_offchip, b.per_tensor_offchip, "{tag}: per_tensor_offchip");
+    assert_eq!(a.occupancy_peak, b.occupancy_peak, "{tag}: occupancy_peak");
+    assert_eq!(
+        a.per_tensor_occupancy, b.per_tensor_occupancy,
+        "{tag}: per_tensor_occupancy"
+    );
+    assert_eq!(a.capacity_ok, b.capacity_ok, "{tag}: capacity_ok");
+    assert_eq!(a.total_ops, b.total_ops, "{tag}: total_ops");
+    assert_eq!(a.recompute_ops, b.recompute_ops, "{tag}: recompute_ops");
+    assert_eq!(
+        a.per_tensor_recompute, b.per_tensor_recompute,
+        "{tag}: per_tensor_recompute"
+    );
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    for (field, x, y) in [
+        ("dram_pj", a.energy.dram_pj, b.energy.dram_pj),
+        ("glb_pj", a.energy.glb_pj, b.energy.glb_pj),
+        ("rf_pj", a.energy.rf_pj, b.energy.rf_pj),
+        ("compute_pj", a.energy.compute_pj, b.energy.compute_pj),
+        ("noc_pj", a.energy.noc_pj, b.energy.noc_pj),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: energy.{field}");
+    }
+}
+
+#[test]
+fn session_matches_legacy_on_all_five_validation_designs() {
+    for point in design_points(Scale::Test) {
+        // Validations run with the GLB unbounded, as the drivers do.
+        let arch = point.arch.unbounded_glb();
+        let legacy = evaluate(&point.fs, &arch, &point.mapping, &EvalOptions::default())
+            .unwrap_or_else(|e| panic!("{}: legacy: {e}", point.design));
+        let ev = Evaluator::new(&point.fs, &arch)
+            .unwrap_or_else(|e| panic!("{}: session: {e}", point.design));
+        let session = ev
+            .evaluate(&point.mapping)
+            .unwrap_or_else(|e| panic!("{}: session eval: {e}", point.design));
+        assert_bitwise_equal(&session, &legacy, point.design);
+        // And with the design's real capacity bound, capacity_ok included.
+        let legacy_b =
+            evaluate(&point.fs, &point.arch, &point.mapping, &EvalOptions::default()).unwrap();
+        let session_b = Evaluator::new(&point.fs, &point.arch)
+            .unwrap()
+            .evaluate(&point.mapping)
+            .unwrap();
+        assert_bitwise_equal(&session_b, &legacy_b, point.design);
+    }
+}
+
+fn random_mapping(fs: &FusionSet, rng: &mut Prng) -> InterLayerMapping {
+    let last = fs.last();
+    let nparts = rng.index(4);
+    let mut dims: Vec<usize> = (0..last.ndim()).collect();
+    rng.shuffle(&mut dims);
+    let mut partitions = Vec::new();
+    for &dim in dims.iter().take(nparts) {
+        let extent = last.rank_sizes[dim];
+        if extent < 2 {
+            continue;
+        }
+        let tile = rng.range_i64(1, extent);
+        partitions.push(Partition { dim, tile });
+    }
+    let parallelism = if rng.chance(0.5) {
+        Parallelism::Sequential
+    } else {
+        Parallelism::Pipeline
+    };
+    let k = partitions.len();
+    let mut m = InterLayerMapping::tiled(partitions, parallelism);
+    for x in 0..fs.tensors.len() {
+        if rng.chance(0.5) {
+            m = m.with_retention(TensorId(x), rng.index(k + 1));
+        }
+    }
+    m
+}
+
+#[test]
+fn session_matches_legacy_on_random_mappings() {
+    let mut rng = Prng::new(0x5E55);
+    let arch = looptree::arch::Arch::generic(256);
+    for case in 0..40 {
+        let fs = match rng.index(4) {
+            0 => workloads::conv_conv(6 + rng.range_i64(0, 10), 2 + rng.range_i64(0, 6)),
+            1 => workloads::pwise_dwise_pwise(6 + rng.range_i64(0, 8), 2 + rng.range_i64(0, 3)),
+            2 => workloads::fc_fc(8 + rng.range_i64(0, 24), 4 + rng.range_i64(0, 12)),
+            _ => workloads::self_attention(1, 2, 8 + rng.range_i64(0, 8), 4),
+        };
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        for _ in 0..5 {
+            let mapping = random_mapping(&fs, &mut rng);
+            if mapping.total_iterations(&fs) > 50_000 {
+                continue;
+            }
+            let legacy = evaluate(&fs, &arch, &mapping, &EvalOptions::default())
+                .unwrap_or_else(|e| panic!("case {case} ({}): {e}", fs.name));
+            let session = ev.evaluate(&mapping).unwrap();
+            assert_bitwise_equal(&session, &legacy, &format!("case {case} ({})", fs.name));
+        }
+    }
+}

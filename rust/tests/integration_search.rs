@@ -1,35 +1,48 @@
 //! Search + coordinator integration: end-to-end DSE flows over real
-//! workloads, checking search quality and coordinator determinism.
+//! workloads through the unified `search::run` entry, checking search
+//! quality, determinism, and coordinator behavior.
 
 use looptree::arch::Arch;
 use looptree::coordinator::Coordinator;
 use looptree::einsum::workloads;
 use looptree::mapspace::{pareto_front, MapSpace, MapSpaceConfig, ParetoPoint};
-use looptree::model::Metrics;
-use looptree::search;
+use looptree::model::Evaluator;
+use looptree::search::{self, Algorithm, Objective, SearchSpec};
 
-fn edp(m: &Metrics) -> f64 {
-    let p = if m.capacity_ok { 1.0 } else { 1e9 };
-    p * m.latency_cycles as f64 * m.energy.total_pj()
+fn spec(algorithm: Algorithm) -> SearchSpec {
+    SearchSpec {
+        algorithm,
+        objective: Objective::FeasibleEdp,
+        seed: 3,
+        samples: 300,
+        iters: 300,
+        population: 16,
+        generations: 10,
+        ..Default::default()
+    }
 }
 
 #[test]
 fn exhaustive_beats_or_matches_heuristics() {
     let fs = workloads::conv_conv(28, 32);
     let arch = Arch::generic(128);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
     let pool = Coordinator::new(2);
-    let cfg = MapSpaceConfig {
-        schedules: vec![
-            vec!["P2".into()],
-            vec!["P2".into(), "Q2".into()],
-            vec!["C2".into()],
-        ],
-        tile_sizes: vec![4, 8],
-        ..Default::default()
+    let ex_spec = SearchSpec {
+        mapspace: MapSpaceConfig {
+            schedules: vec![
+                vec!["P2".into()],
+                vec!["P2".into(), "Q2".into()],
+                vec!["C2".into()],
+            ],
+            tile_sizes: vec![4, 8],
+            ..Default::default()
+        },
+        ..spec(Algorithm::Exhaustive)
     };
-    let ex = search::exhaustive(&fs, &arch, &cfg, edp, &pool).unwrap();
-    let ann = search::annealing(&fs, &arch, 300, 3, edp).unwrap();
-    let gen_ = search::genetic(&fs, &arch, 16, 10, 3, edp, &pool).unwrap();
+    let ex = search::run(&ev, &ex_spec, &pool).unwrap();
+    let ann = search::run(&ev, &spec(Algorithm::Annealing), &pool).unwrap();
+    let gen_ = search::run(&ev, &spec(Algorithm::Genetic), &pool).unwrap();
     // The restricted-space exhaustive optimum is a meaningful baseline: the
     // heuristics roam a larger space, so they may do better — but never
     // catastrophically worse.
@@ -47,9 +60,9 @@ fn feasibility_under_capacity_pressure() {
     // they should be tiled (untiled fusion cannot fit).
     let fs = workloads::conv_conv(28, 64);
     let arch = Arch::generic(48); // 48 KiB
+    let ev = Evaluator::new(&fs, &arch).unwrap();
     let pool = Coordinator::new(2);
-    let cfg = MapSpaceConfig::default();
-    let res = search::exhaustive(&fs, &arch, &cfg, edp, &pool).unwrap();
+    let res = search::run(&ev, &spec(Algorithm::Exhaustive), &pool).unwrap();
     assert!(res.best.metrics.capacity_ok, "no feasible mapping found");
     assert!(
         !res.best.mapping.partitions.is_empty(),
@@ -58,22 +71,63 @@ fn feasibility_under_capacity_pressure() {
 }
 
 #[test]
+fn search_is_deterministic_for_a_spec() {
+    // The round-trip contract: the same (workload, arch, spec) triple must
+    // reproduce the same best mapping — this is what lets a `--json` result
+    // document be re-fed as a config.
+    let fs = workloads::conv_conv(28, 32);
+    let arch = Arch::generic(128);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
+    for algorithm in [
+        Algorithm::Exhaustive,
+        Algorithm::Random,
+        Algorithm::Annealing,
+        Algorithm::Genetic,
+    ] {
+        let s = SearchSpec {
+            samples: 80,
+            iters: 80,
+            population: 8,
+            generations: 4,
+            mapspace: MapSpaceConfig {
+                schedules: vec![vec!["P2".into()], vec!["C2".into()]],
+                tile_sizes: vec![4, 8],
+                ..Default::default()
+            },
+            ..spec(algorithm)
+        };
+        let a = search::run(&ev, &s, &Coordinator::new(4)).unwrap();
+        let b = search::run(&ev, &s, &Coordinator::new(1)).unwrap();
+        assert_eq!(
+            a.best.mapping, b.best.mapping,
+            "{algorithm:?}: best mapping must not depend on worker count"
+        );
+        assert_eq!(a.best.score.to_bits(), b.best.score.to_bits(), "{algorithm:?}");
+    }
+}
+
+#[test]
 fn pareto_front_from_search_results() {
     let fs = workloads::conv_conv(28, 32);
     let arch = Arch::generic(1 << 20).unbounded_glb();
+    let ev = Evaluator::new(&fs, &arch).unwrap();
     let pool = Coordinator::new(2);
-    let cfg = MapSpaceConfig {
-        schedules: vec![vec!["P2".into()], vec!["C2".into()]],
-        tile_sizes: vec![2, 4, 8],
-        ..Default::default()
+    let s = SearchSpec {
+        objective: Objective::Capacity,
+        mapspace: MapSpaceConfig {
+            schedules: vec![vec!["P2".into()], vec!["C2".into()]],
+            tile_sizes: vec![2, 4, 8],
+            ..Default::default()
+        },
+        ..spec(Algorithm::Exhaustive)
     };
-    let res = search::exhaustive(&fs, &arch, &cfg, |m| m.occupancy_peak as f64, &pool).unwrap();
+    let res = search::run(&ev, &s, &pool).unwrap();
     let pts: Vec<ParetoPoint<()>> = res
         .evaluated
         .iter()
-        .map(|s| ParetoPoint {
-            x: s.metrics.occupancy_peak as f64,
-            y: s.metrics.offchip_total() as f64,
+        .map(|sc| ParetoPoint {
+            x: sc.metrics.occupancy_peak as f64,
+            y: sc.metrics.offchip_total() as f64,
             payload: (),
         })
         .collect();

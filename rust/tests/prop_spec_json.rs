@@ -1,0 +1,231 @@
+//! Property tests for the JSON spec layer: every spec type round-trips
+//! (`from_json(to_json(x)) == x`, or re-serializes identically where the
+//! type has no `PartialEq`) across randomized instances, including a full
+//! serialize → parse → evaluate path whose metrics must match the original.
+
+use looptree::arch::{presets, Arch};
+use looptree::einsum::{workloads, FusionSet, TensorId};
+use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
+use looptree::mapspace::MapSpaceConfig;
+use looptree::model::{Evaluator, Metrics};
+use looptree::search::{Algorithm, Objective, SearchSpec};
+use looptree::util::json::Json;
+use looptree::util::prng::Prng;
+
+/// Serialize, re-parse the *text* (exercising the parser), deserialize.
+fn text_round_trip(j: &Json) -> Json {
+    Json::parse(&j.to_string()).unwrap()
+}
+
+fn sample_fusion_sets() -> Vec<FusionSet> {
+    vec![
+        workloads::conv_conv(14, 8),
+        workloads::conv_conv_conv(12, 4),
+        workloads::pwise_dwise_pwise(14, 8),
+        workloads::fc_fc(32, 16),
+        workloads::self_attention(2, 2, 16, 8),
+        workloads::fsrcnn(10),
+        workloads::mnist_convs_batched(2, 2),
+    ]
+}
+
+#[test]
+fn fusion_sets_round_trip() {
+    for fs in sample_fusion_sets() {
+        let j = fs.to_json();
+        let back = FusionSet::from_json(&text_round_trip(&j))
+            .unwrap_or_else(|e| panic!("{}: {e}", fs.name));
+        assert_eq!(back.to_json().to_string(), j.to_string(), "{}", fs.name);
+        // Structural invariants hold on the parsed copy.
+        assert!(back.validate().is_ok());
+        assert_eq!(back.total_ops(), fs.total_ops());
+        assert_eq!(back.algmin_offchip_elems(), fs.algmin_offchip_elems());
+    }
+}
+
+#[test]
+fn archs_round_trip() {
+    for arch in [
+        Arch::generic(1),
+        Arch::generic(256),
+        Arch::generic(1 << 20).unbounded_glb(),
+        presets::depfin(),
+        presets::fused_cnn(),
+        presets::isaac(),
+        presets::pipelayer(),
+        presets::flat(),
+    ] {
+        let j = arch.to_json();
+        let back = Arch::from_json(&text_round_trip(&j))
+            .unwrap_or_else(|e| panic!("{}: {e}", arch.name));
+        assert_eq!(back.to_json().to_string(), j.to_string(), "{}", arch.name);
+        assert_eq!(back.glb_capacity(), arch.glb_capacity());
+        assert_eq!(back.word_bytes, arch.word_bytes);
+        assert_eq!(back.compute.macs, arch.compute.macs);
+    }
+}
+
+fn random_mapping(fs: &FusionSet, rng: &mut Prng) -> InterLayerMapping {
+    let last = fs.last();
+    let nparts = rng.index(4);
+    let mut dims: Vec<usize> = (0..last.ndim())
+        .filter(|&d| last.rank_sizes[d] > 1)
+        .collect();
+    rng.shuffle(&mut dims);
+    let mut partitions = Vec::new();
+    for &dim in dims.iter().take(nparts) {
+        let extent = last.rank_sizes[dim];
+        partitions.push(Partition { dim, tile: rng.range_i64(1, extent.max(2)) });
+    }
+    let parallelism = if rng.chance(0.5) {
+        Parallelism::Sequential
+    } else {
+        Parallelism::Pipeline
+    };
+    let k = partitions.len();
+    let mut m = InterLayerMapping::tiled(partitions, parallelism);
+    for x in 0..fs.tensors.len() {
+        if rng.chance(0.6) {
+            m = m.with_retention(TensorId(x), rng.index(k + 1));
+        }
+    }
+    m
+}
+
+#[test]
+fn mappings_round_trip() {
+    let mut rng = Prng::new(0x1234);
+    for fs in sample_fusion_sets() {
+        for _ in 0..20 {
+            let m = random_mapping(&fs, &mut rng);
+            let back = InterLayerMapping::from_json(&text_round_trip(&m.to_json())).unwrap();
+            assert_eq!(back, m, "{}", fs.name);
+        }
+    }
+}
+
+#[test]
+fn mapspace_configs_round_trip() {
+    let mut rng = Prng::new(0xFEED);
+    for _ in 0..30 {
+        let nsched = rng.index(4);
+        let cfg = MapSpaceConfig {
+            schedules: (0..nsched)
+                .map(|_| {
+                    (0..1 + rng.index(3))
+                        .map(|_| ["P2", "Q2", "C2", "M2"][rng.index(4)].to_string())
+                        .collect()
+                })
+                .collect(),
+            tile_sizes: (0..rng.index(5)).map(|_| rng.range_i64(1, 64)).collect(),
+            uniform_retention: rng.chance(0.5),
+            parallelism: if rng.chance(0.5) {
+                vec![Parallelism::Sequential]
+            } else {
+                vec![Parallelism::Sequential, Parallelism::Pipeline]
+            },
+            max_mappings: rng.index(1_000_000),
+        };
+        let back = MapSpaceConfig::from_json(&text_round_trip(&cfg.to_json())).unwrap();
+        assert_eq!(back, cfg);
+    }
+}
+
+#[test]
+fn search_specs_round_trip() {
+    let mut rng = Prng::new(0xABCD);
+    let algorithms = [
+        Algorithm::Exhaustive,
+        Algorithm::Random,
+        Algorithm::Annealing,
+        Algorithm::Genetic,
+    ];
+    let objectives = [
+        Objective::Latency,
+        Objective::Energy,
+        Objective::Edp,
+        Objective::Capacity,
+        Objective::FeasibleEdp,
+    ];
+    for _ in 0..40 {
+        let spec = SearchSpec {
+            algorithm: algorithms[rng.index(4)],
+            objective: objectives[rng.index(5)],
+            // Full u64 range: seeds above 2^53 take the exact string
+            // encoding on the wire.
+            seed: rng.next_u64(),
+            samples: rng.index(10_000),
+            iters: rng.index(10_000),
+            population: rng.index(200),
+            generations: rng.index(100),
+            mapspace: MapSpaceConfig::default(),
+            penalize_infeasible: rng.chance(0.5),
+        };
+        let back = SearchSpec::from_json(&text_round_trip(&spec.to_json())).unwrap();
+        assert_eq!(back, spec);
+    }
+}
+
+#[test]
+fn metrics_round_trip_from_real_evaluations() {
+    let mut rng = Prng::new(0x7777);
+    for fs in sample_fusion_sets() {
+        let arch = Arch::generic(256);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        for _ in 0..5 {
+            let mapping = random_mapping(&fs, &mut rng);
+            if mapping.total_iterations(&fs) > 20_000 {
+                continue;
+            }
+            let Ok(m) = ev.evaluate(&mapping) else { continue };
+            let j = m.to_json();
+            let back = Metrics::from_json(&text_round_trip(&j)).unwrap();
+            assert_eq!(back.to_json().to_string(), j.to_string(), "{}", fs.name);
+            assert_eq!(back.latency_cycles, m.latency_cycles);
+            assert_eq!(back.offchip_reads, m.offchip_reads);
+            assert_eq!(back.per_tensor_occupancy, m.per_tensor_occupancy);
+            assert_eq!(
+                back.energy.total_pj().to_bits(),
+                m.energy.total_pj().to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn serialized_specs_evaluate_identically() {
+    // The full wire path: serialize (workload, arch, mapping) to text,
+    // parse it back, evaluate both sides — the metrics must be identical.
+    let mut rng = Prng::new(0x9999);
+    for fs in sample_fusion_sets() {
+        let arch = Arch::generic(512);
+        let fs2 = FusionSet::from_json(&text_round_trip(&fs.to_json())).unwrap();
+        let arch2 = Arch::from_json(&text_round_trip(&arch.to_json())).unwrap();
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let ev2 = Evaluator::new(&fs2, &arch2).unwrap();
+        for _ in 0..3 {
+            let mapping = random_mapping(&fs, &mut rng);
+            if mapping.total_iterations(&fs) > 20_000 {
+                continue;
+            }
+            let mapping2 =
+                InterLayerMapping::from_json(&text_round_trip(&mapping.to_json())).unwrap();
+            match (ev.evaluate(&mapping), ev2.evaluate(&mapping2)) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.latency_cycles, b.latency_cycles, "{}", fs.name);
+                    assert_eq!(a.offchip_reads, b.offchip_reads, "{}", fs.name);
+                    assert_eq!(a.occupancy_peak, b.occupancy_peak, "{}", fs.name);
+                    assert_eq!(a.total_ops, b.total_ops, "{}", fs.name);
+                    assert_eq!(
+                        a.energy.total_pj().to_bits(),
+                        b.energy.total_pj().to_bits(),
+                        "{}",
+                        fs.name
+                    );
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b),
+                (a, b) => panic!("{}: divergent results: {a:?} vs {b:?}", fs.name),
+            }
+        }
+    }
+}

@@ -1,104 +1,181 @@
 //! Model-evaluation throughput: the paper's §IV claim that the analytical
-//! model is orders of magnitude faster than simulation, plus the
-//! validate-once `Evaluator` session vs. the legacy free `evaluate()` —
-//! the session skips per-call spec validation and intra-layer default
-//! derivation, which dominates small walks.
+//! model is orders of magnitude faster than simulation, the validate-once
+//! `Evaluator` session vs. the legacy free `evaluate()`, and — the headline
+//! of this bench since the steady-state fast path landed — fast path vs.
+//! exhaustive reference walk on long row-tiled walks, where evaluation cost
+//! no longer scales with the fmap extent.
+//!
+//! Emits `BENCH_model_eval.json` (workload, mean ns, iterations/s, and the
+//! fast-vs-reference speedups) so the perf trajectory is tracked run over
+//! run; `LOOPTREE_BENCH_SMOKE=1` clamps repetitions for CI.
 
 use looptree::arch::Arch;
 use looptree::einsum::workloads;
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
 use looptree::model::{evaluate, EvalOptions, Evaluator};
 use looptree::sim::simulate;
-use looptree::util::bench::bench;
+use looptree::util::bench::{bench, reps, write_bench_json, BenchResult};
+use looptree::util::json::Json;
 
 fn main() {
     let arch = Arch::generic(1 << 20);
     let opts = EvalOptions::default();
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let mut speedups: Vec<Json> = Vec::new();
 
-    println!("== validate-once session vs per-call validation ==");
-    for (rows, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8)] {
-        let fs = workloads::conv_conv(rows, ch);
+    println!("== fast path vs reference walk (steady-state classification) ==");
+    // (rows, ch, partition spec): the 112×112 row-tiled configurations are
+    // the acceptance gate — the reference walk is O(total tiles), the fast
+    // path O(distinct tile classes).
+    struct FastRow {
+        label: &'static str,
+        rows: i64,
+        ch: i64,
+        tiles: &'static [(&'static str, i64)],
+    }
+    let configs = [
+        FastRow { label: "conv_conv(112,64) row-tiled", rows: 112, ch: 64, tiles: &[("P2", 1)] },
+        FastRow {
+            label: "conv_conv(112,64) row+col-tiled",
+            rows: 112,
+            ch: 64,
+            tiles: &[("P2", 1), ("Q2", 1)],
+        },
+        FastRow { label: "conv_conv(56,64) row-tiled", rows: 56, ch: 64, tiles: &[("P2", 2)] },
+    ];
+    for cfg in &configs {
+        let fs = workloads::conv_conv(cfg.rows, cfg.ch);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let partitions: Vec<Partition> = cfg
+            .tiles
+            .iter()
+            .map(|&(name, tile)| Partition {
+                dim: fs.last().rank_index(name).unwrap(),
+                tile,
+            })
+            .collect();
+        let mapping = InterLayerMapping::tiled(partitions, Parallelism::Sequential);
+        let m_fast = ev.evaluate(&mapping).unwrap();
+        let m_ref = ev.evaluate_reference(&mapping).unwrap();
+        assert_eq!(m_fast.latency_cycles, m_ref.latency_cycles, "fast path drifted");
+        assert_eq!(m_fast.iterations, m_ref.iterations, "fast path drifted");
+
+        let (w, n) = reps(2, 12);
+        let fast = bench(&format!("fast      {}", cfg.label), w, n, || {
+            ev.evaluate(&mapping).unwrap()
+        });
+        let (w, n) = reps(1, 4);
+        let reference = bench(&format!("reference {}", cfg.label), w, n, || {
+            ev.evaluate_reference(&mapping).unwrap()
+        });
+        println!("{}", fast.report());
+        println!("{}", reference.report());
+        let speedup = reference.mean.as_secs_f64() / fast.mean.as_secs_f64().max(1e-12);
+        println!(
+            "    {} iterations walked; fast-path speedup: {speedup:.1}x",
+            m_ref.iterations
+        );
+        speedups.push(Json::Obj(
+            [
+                ("workload".to_string(), Json::Str(cfg.label.to_string())),
+                ("iterations".to_string(), Json::Num(m_ref.iterations as f64)),
+                (
+                    "fast_mean_ns".to_string(),
+                    Json::Num(fast.mean.as_nanos() as f64),
+                ),
+                (
+                    "reference_mean_ns".to_string(),
+                    Json::Num(reference.mean.as_nanos() as f64),
+                ),
+                ("speedup".to_string(), Json::Num(speedup)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+        rows.push(fast);
+        rows.push(reference);
+    }
+
+    println!("\n== validate-once session vs per-call validation ==");
+    for (r, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8)] {
+        let fs = workloads::conv_conv(r, ch);
         let ev = Evaluator::new(&fs, &arch).unwrap();
         let p2 = fs.last().rank_index("P2").unwrap();
         let mapping = InterLayerMapping::tiled(
             vec![Partition { dim: p2, tile }],
             Parallelism::Sequential,
         );
-        let legacy = bench(
-            &format!("free evaluate  r{rows} c{ch} tile{tile}"),
-            3,
-            30,
-            || evaluate(&fs, &arch, &mapping, &opts).unwrap(),
-        );
-        let session = bench(
-            &format!("session        r{rows} c{ch} tile{tile}"),
-            3,
-            30,
-            || ev.evaluate(&mapping).unwrap(),
-        );
+        let (w, n) = reps(3, 30);
+        let legacy = bench(&format!("free evaluate  r{r} c{ch} tile{tile}"), w, n, || {
+            evaluate(&fs, &arch, &mapping, &opts).unwrap()
+        });
+        let session = bench(&format!("session        r{r} c{ch} tile{tile}"), w, n, || {
+            ev.evaluate(&mapping).unwrap()
+        });
         println!("{}", legacy.report());
         println!("{}", session.report());
         println!(
             "    session speedup: {:.2}x",
             legacy.mean.as_secs_f64() / session.mean.as_secs_f64().max(1e-12)
         );
+        rows.push(legacy);
+        rows.push(session);
     }
 
-    println!("\n== model evaluation throughput (session) ==");
-    for (rows, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8), (112, 64, 14)] {
-        let fs = workloads::conv_conv(rows, ch);
+    println!("\n== model evaluation throughput (session, fast path) ==");
+    for (r, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8), (112, 64, 14)] {
+        let fs = workloads::conv_conv(r, ch);
         let ev = Evaluator::new(&fs, &arch).unwrap();
         let p2 = fs.last().rank_index("P2").unwrap();
         let mapping = InterLayerMapping::tiled(
             vec![Partition { dim: p2, tile }],
             Parallelism::Sequential,
         );
-        let r = bench(
-            &format!("model conv_conv r{rows} c{ch} tile{tile}"),
-            3,
-            20,
-            || ev.evaluate(&mapping).unwrap(),
-        );
-        println!("{}", r.report());
-        println!(
-            "    = {:.0} mapping evaluations/sec",
-            1.0 / r.mean.as_secs_f64()
-        );
-    }
-
-    println!("\n== two-level (P2,Q2) heavy walk ==");
-    {
-        let fs = workloads::conv_conv(56, 64);
-        let ev = Evaluator::new(&fs, &arch).unwrap();
-        let p2 = fs.last().rank_index("P2").unwrap();
-        let q2 = fs.last().rank_index("Q2").unwrap();
-        let mapping = InterLayerMapping::tiled(
-            vec![
-                Partition { dim: p2, tile: 4 },
-                Partition { dim: q2, tile: 7 },
-            ],
-            Parallelism::Sequential,
-        );
-        let r = bench("model conv_conv r56 c64 P2,Q2 (104 iters)", 2, 10, || {
+        let (w, n) = reps(3, 20);
+        let b = bench(&format!("model conv_conv r{r} c{ch} tile{tile}"), w, n, || {
             ev.evaluate(&mapping).unwrap()
         });
-        println!("{}", r.report());
+        println!("{}", b.report());
+        println!("    = {:.0} mapping evaluations/sec", b.iters_per_sec());
+        rows.push(b);
     }
 
     println!("\n== model vs element-level simulator (same config) ==");
-    let fs = workloads::conv_conv(20, 8);
-    let ev = Evaluator::new(&fs, &arch).unwrap();
-    let p2 = fs.last().rank_index("P2").unwrap();
-    let mapping = InterLayerMapping::tiled(
-        vec![Partition { dim: p2, tile: 4 }],
-        Parallelism::Sequential,
+    {
+        let fs = workloads::conv_conv(20, 8);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let mapping = InterLayerMapping::tiled(
+            vec![Partition { dim: p2, tile: 4 }],
+            Parallelism::Sequential,
+        );
+        let (w, n) = reps(3, 20);
+        let m = bench("analytical model", w, n, || ev.evaluate(&mapping).unwrap());
+        let (w, n) = reps(1, 3);
+        let s = bench("simulator", w, n, || simulate(&fs, &arch, &mapping).unwrap());
+        println!("{}", m.report());
+        println!("{}", s.report());
+        println!(
+            "speedup: {:.0}x (paper cites analytical models up to 1000x faster [36])",
+            s.mean.as_secs_f64() / m.mean.as_secs_f64()
+        );
+        rows.push(m);
+        rows.push(s);
+    }
+
+    let report = Json::Obj(
+        [
+            (
+                "rows".to_string(),
+                Json::Arr(rows.iter().map(BenchResult::to_json).collect()),
+            ),
+            ("fastpath_speedups".to_string(), Json::Arr(speedups)),
+        ]
+        .into_iter()
+        .collect(),
     );
-    let m = bench("analytical model", 3, 20, || ev.evaluate(&mapping).unwrap());
-    let s = bench("simulator", 1, 3, || simulate(&fs, &arch, &mapping).unwrap());
-    println!("{}", m.report());
-    println!("{}", s.report());
-    println!(
-        "speedup: {:.0}x (paper cites analytical models up to 1000x faster [36])",
-        s.mean.as_secs_f64() / m.mean.as_secs_f64()
-    );
+    match write_bench_json("BENCH_model_eval.json", &report) {
+        Ok(()) => println!("\nwrote BENCH_model_eval.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_model_eval.json: {e}"),
+    }
 }

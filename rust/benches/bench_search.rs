@@ -1,7 +1,11 @@
 //! Search-algorithm benchmark: exhaustive vs random vs annealing vs genetic
 //! through the unified `search::run` entry point on one shared `Evaluator`
 //! session (paper §VII-C: prior search strategies adapt to the LoopTree
-//! mapspace).
+//! mapspace). Search throughput rides on the evaluator's steady-state fast
+//! path, so it no longer scales with the fmap extent.
+//!
+//! Emits `BENCH_search.json` (workload, mean ns, mappings/s per algorithm);
+//! `LOOPTREE_BENCH_SMOKE=1` shrinks the search budgets for CI.
 
 use looptree::arch::Arch;
 use looptree::coordinator::Coordinator;
@@ -9,21 +13,23 @@ use looptree::einsum::workloads;
 use looptree::mapspace::MapSpaceConfig;
 use looptree::model::Evaluator;
 use looptree::search::{self, Algorithm, Objective, SearchSpec};
-use looptree::util::bench::bench_once;
+use looptree::util::bench::{bench_once, smoke, write_bench_json};
+use looptree::util::json::Json;
 
 fn main() {
     let fs = workloads::conv_conv(28, 64);
     let arch = Arch::generic(128);
     let ev = Evaluator::new(&fs, &arch).unwrap();
     let pool = Coordinator::new(0);
+    let budget = if smoke() { 40 } else { 500 };
 
     let base = SearchSpec {
         objective: Objective::FeasibleEdp,
         seed: 7,
-        samples: 500,
-        iters: 500,
+        samples: budget,
+        iters: budget,
         population: 20,
-        generations: 25,
+        generations: if smoke() { 2 } else { 25 },
         mapspace: MapSpaceConfig {
             schedules: vec![
                 vec!["P2".into()],
@@ -37,6 +43,28 @@ fn main() {
         ..Default::default()
     };
 
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut record = |name: &str, mean_ns: f64, evaluated: usize, best: f64| {
+        json_rows.push(Json::Obj(
+            [
+                ("workload".to_string(), Json::Str(name.to_string())),
+                ("mean_ns".to_string(), Json::Num(mean_ns)),
+                ("evaluated".to_string(), Json::Num(evaluated as f64)),
+                (
+                    "mappings_per_sec".to_string(),
+                    Json::Num(if mean_ns > 0.0 {
+                        evaluated as f64 / (mean_ns / 1e9)
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("best_score".to_string(), Json::Num(best)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+    };
+
     let (ex, t) = bench_once("exhaustive", || {
         let spec = SearchSpec { algorithm: Algorithm::Exhaustive, ..base.clone() };
         search::run(&ev, &spec, &pool).unwrap()
@@ -47,24 +75,28 @@ fn main() {
         ex.best.score,
         ex.evaluated.len()
     );
+    record("exhaustive", t.mean.as_nanos() as f64, ex.evaluated.len(), ex.best.score);
 
-    let (rnd, t) = bench_once("random (500 samples)", || {
+    let (rnd, t) = bench_once("random", || {
         let spec = SearchSpec { algorithm: Algorithm::Random, ..base.clone() };
         search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), rnd.best.score);
+    record("random", t.mean.as_nanos() as f64, rnd.evaluated.len(), rnd.best.score);
 
-    let (ann, t) = bench_once("annealing (500 iters)", || {
+    let (ann, t) = bench_once("annealing", || {
         let spec = SearchSpec { algorithm: Algorithm::Annealing, ..base.clone() };
         search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), ann.best.score);
+    record("annealing", t.mean.as_nanos() as f64, ann.evaluated.len(), ann.best.score);
 
-    let (gen_, t) = bench_once("genetic (20x25)", || {
+    let (gen_, t) = bench_once("genetic", || {
         let spec = SearchSpec { algorithm: Algorithm::Genetic, ..base.clone() };
         search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), gen_.best.score);
+    record("genetic", t.mean.as_nanos() as f64, gen_.evaluated.len(), gen_.best.score);
 
     println!(
         "\nquality vs exhaustive optimum: random {:.2}x, annealing {:.2}x, genetic {:.2}x",
@@ -72,4 +104,14 @@ fn main() {
         ann.best.score / ex.best.score,
         gen_.best.score / ex.best.score
     );
+
+    let report = Json::Obj(
+        [("rows".to_string(), Json::Arr(json_rows))]
+            .into_iter()
+            .collect(),
+    );
+    match write_bench_json("BENCH_search.json", &report) {
+        Ok(()) => println!("wrote BENCH_search.json"),
+        Err(e) => eprintln!("failed to write BENCH_search.json: {e}"),
+    }
 }

@@ -92,7 +92,7 @@ impl InterLayerMapping {
         let mut counts = Vec::with_capacity(self.partitions.len());
         for p in &self.partitions {
             let extent = *cur_extent.get(&p.dim).unwrap_or(&last.rank_sizes[p.dim]);
-            counts.push((extent + p.tile - 1) / p.tile);
+            counts.push(extent.div_ceil(p.tile));
             cur_extent.insert(p.dim, p.tile);
         }
         counts

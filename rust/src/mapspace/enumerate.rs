@@ -2,6 +2,7 @@
 
 use crate::einsum::{FusionSet, TensorId, TensorKind};
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::util::odometer::odometer_step;
 
 /// Constraints defining a mapspace (the unconstrained default is the paper's
 /// "this work" row in Table I).
@@ -62,25 +63,46 @@ impl MapSpace {
                 .collect()
         };
 
-        let mut mappings = Vec::new();
-        'outer: for sched in &schedules {
-            // Tile choices per level.
-            let per_level: Vec<Vec<i64>> = sched
-                .iter()
-                .map(|&d| tile_choices(last.rank_sizes[d], &cfg.tile_sizes))
-                .collect();
+        // Pre-size from the schedule/tile/retention counts so the push loop
+        // never reallocates (the retention cross product dominates).
+        let per_schedule_tiles: Vec<Vec<Vec<i64>>> = schedules
+            .iter()
+            .map(|sched| {
+                sched
+                    .iter()
+                    .map(|&d| tile_choices(last.rank_sizes[d], &cfg.tile_sizes))
+                    .collect()
+            })
+            .collect();
+        let estimate: usize = schedules
+            .iter()
+            .zip(&per_schedule_tiles)
+            .map(|(sched, per_level)| {
+                let tiles: usize =
+                    per_level.iter().map(Vec::len).fold(1usize, usize::saturating_mul).max(1);
+                let ret = retention_variant_count(fs, sched.len(), cfg.uniform_retention);
+                tiles
+                    .saturating_mul(cfg.parallelism.len().max(1))
+                    .saturating_mul(ret)
+            })
+            .fold(0usize, usize::saturating_add);
+        let mut mappings = Vec::with_capacity(estimate.min(cfg.max_mappings));
+
+        'outer: for (sched, per_level) in schedules.iter().zip(&per_schedule_tiles) {
             // Cartesian product of tile sizes via an odometer over choices.
-            let mut stack = vec![0usize; sched.len()];
-            let mut exhausted = false;
-            while !exhausted {
+            let mut stack = vec![0i64; sched.len()];
+            let lens: Vec<i64> = per_level.iter().map(|v| v.len() as i64).collect();
+            loop {
                 let partitions: Vec<Partition> = sched
                     .iter()
                     .enumerate()
-                    .map(|(lvl, &dim)| Partition { dim, tile: per_level[lvl][stack[lvl]] })
+                    .map(|(lvl, &dim)| Partition {
+                        dim,
+                        tile: per_level[lvl][stack[lvl] as usize],
+                    })
                     .collect();
                 for &par in &cfg.parallelism {
-                    for m in retention_variants(fs, &partitions, par, cfg.uniform_retention)
-                    {
+                    for m in retention_variants(fs, &partitions, par, cfg.uniform_retention) {
                         if m.validate(fs).is_ok() {
                             mappings.push(m);
                             if mappings.len() >= cfg.max_mappings {
@@ -89,22 +111,8 @@ impl MapSpace {
                         }
                     }
                 }
-                if sched.is_empty() {
-                    break; // untiled: a single mapping
-                }
-                // Odometer increment (innermost level fastest).
-                let mut lvl = sched.len();
-                loop {
-                    if lvl == 0 {
-                        exhausted = true;
-                        break;
-                    }
-                    lvl -= 1;
-                    stack[lvl] += 1;
-                    if stack[lvl] < per_level[lvl].len() {
-                        break;
-                    }
-                    stack[lvl] = 0;
+                if odometer_step(&mut stack, &lens).is_none() {
+                    break; // exhausted (an untiled schedule yields one step)
                 }
             }
         }
@@ -170,7 +178,45 @@ fn tile_choices(extent: i64, requested: &[i64]) -> Vec<i64> {
     }
 }
 
-/// All retention-level assignments for the given partitioning.
+/// Tensors with meaningful retention choices: everything except the final
+/// output (whose writes are streaming).
+fn retention_tensors(fs: &FusionSet) -> Vec<TensorId> {
+    fs.tensors
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.kind != TensorKind::OutputFmap)
+        .map(|(i, _)| TensorId(i))
+        .collect()
+}
+
+/// How many tensors of the per-tensor cross product are enumerated before
+/// the 500k variant guard trips (the remaining tensors keep the default
+/// retention), and the resulting variant count.
+fn retention_prefix(fs: &FusionSet, k: usize) -> (usize, usize) {
+    let tensors = retention_tensors(fs).len();
+    let mut nten = 0usize;
+    let mut count = 1usize;
+    while nten < tensors && count <= 500_000 {
+        count = count.saturating_mul(k + 1);
+        nten += 1;
+    }
+    (nten, count)
+}
+
+/// Number of mappings `retention_variants` yields for a `k`-level schedule.
+fn retention_variant_count(fs: &FusionSet, k: usize, uniform: bool) -> usize {
+    if k == 0 {
+        1
+    } else if uniform {
+        k + 1
+    } else {
+        retention_prefix(fs, k).1
+    }
+}
+
+/// All retention-level assignments for the given partitioning: an odometer
+/// over per-tensor retention-level vectors, constructing each mapping once
+/// (the legacy builder cloned whole mappings at every cross-product step).
 fn retention_variants(
     fs: &FusionSet,
     partitions: &[Partition],
@@ -182,33 +228,24 @@ fn retention_variants(
     if k == 0 {
         return vec![base];
     }
-    // Tensors with meaningful retention choices: everything except the final
-    // output (whose writes are streaming).
-    let tensors: Vec<TensorId> = fs
-        .tensors
-        .iter()
-        .enumerate()
-        .filter(|(_, t)| t.kind != TensorKind::OutputFmap)
-        .map(|(i, _)| TensorId(i))
-        .collect();
-
     if uniform {
         return (0..=k)
             .map(|lvl| base.clone().with_uniform_retention(lvl))
             .collect();
     }
-    // Per-tensor cross product (bounded: tensors ≤ ~7, k ≤ 3).
-    let mut out = vec![base.clone()];
-    for &t in &tensors {
-        let mut next = Vec::with_capacity(out.len() * (k + 1));
-        for m in &out {
-            for lvl in 0..=k {
-                next.push(m.clone().with_retention(t, lvl));
-            }
+    let tensors = retention_tensors(fs);
+    let (nten, count) = retention_prefix(fs, k);
+    let mut out = Vec::with_capacity(count);
+    let mut levels = vec![0i64; nten];
+    let radix = vec![(k + 1) as i64; nten];
+    loop {
+        let mut m = base.clone();
+        for (&t, &lvl) in tensors[..nten].iter().zip(&levels) {
+            m.retention.insert(t, lvl as usize);
         }
-        out = next;
-        if out.len() > 500_000 {
-            break; // guarded by max_mappings upstream as well
+        out.push(m);
+        if odometer_step(&mut levels, &radix).is_none() {
+            break;
         }
     }
     out

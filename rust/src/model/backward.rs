@@ -14,7 +14,7 @@ use crate::poly::{IBox, Region};
 /// regions and per-tensor data regions, ignoring any prior availability.
 /// These are the paper's *tiles*: what a window touches end to end, used for
 /// retained-tile footprints.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct WindowNeeds {
     /// Operation region per layer (read by unit tests and kept for
     /// debuggability; the engine consumes `data`).
@@ -26,32 +26,59 @@ pub struct WindowNeeds {
 
 /// Propagate full needs backward from a last-layer op window.
 pub fn window_needs(fs: &FusionSet, last_ops: &IBox) -> WindowNeeds {
-    let n = fs.num_layers();
-    let mut ops: Vec<Region> = vec![Region::empty(0); n];
-    let mut data: Vec<Region> =
-        fs.tensors.iter().map(|t| Region::empty(t.ndim())).collect();
+    let domains: Vec<IBox> = fs.einsums.iter().map(|e| e.domain()).collect();
+    let mut out = WindowNeeds::default();
+    let mut tmp = IBox::empty(0);
+    window_needs_into(fs, last_ops, &domains, &mut out, &mut tmp);
+    out
+}
 
-    ops[n - 1] = Region::from_box(last_ops.clone());
+/// [`window_needs`] into a caller-provided [`WindowNeeds`] (reuses every
+/// region's storage). `domains` caches `einsums[t].domain()` per layer;
+/// `tmp` is box scratch.
+pub(crate) fn window_needs_into(
+    fs: &FusionSet,
+    last_ops: &IBox,
+    domains: &[IBox],
+    out: &mut WindowNeeds,
+    tmp: &mut IBox,
+) {
+    let n = fs.num_layers();
+    out.ops.resize_with(n, || Region::empty(0));
+    out.data.resize_with(fs.tensors.len(), || Region::empty(0));
+    for (t, e) in fs.einsums.iter().enumerate() {
+        out.ops[t].reset(e.ndim());
+    }
+    for (x, tn) in fs.tensors.iter().enumerate() {
+        out.data[x].reset(tn.ndim());
+    }
+
+    out.ops[n - 1].assign_box(last_ops);
     for t in (0..n).rev() {
         let e = &fs.einsums[t];
         // Output data of this layer's op region.
-        let out_region = e.output.map.image(&ops[t]);
-        data[e.output.tensor.0].union(&out_region);
+        for b in out.ops[t].boxes() {
+            e.output.map.image_box_into(b, tmp);
+            out.data[e.output.tensor.0].union_box(tmp);
+        }
         // Input needs.
         for acc in &e.inputs {
-            let need = acc.map.image(&ops[t]);
-            data[acc.tensor.0].union(&need);
+            for b in out.ops[t].boxes() {
+                acc.map.image_box_into(b, tmp);
+                out.data[acc.tensor.0].union_box(tmp);
+            }
         }
         // Producer ops for the intermediate this layer consumes.
         if t > 0 {
             let prev = &fs.einsums[t - 1];
             let inter = prev.output.tensor;
-            let need = &data[inter.0];
-            let prev_ops = prev.output.map.preimage_identity(need, &prev.domain());
-            ops[t - 1] = prev_ops;
+            out.ops[t - 1].reset(prev.ndim());
+            for b in out.data[inter.0].boxes() {
+                prev.output.map.preimage_identity_box_into(b, &domains[t - 1], tmp);
+                out.ops[t - 1].union_box(tmp);
+            }
         }
     }
-    WindowNeeds { ops, data }
 }
 
 /// Per-iteration backward pass *with* availability subtraction: computes the
@@ -59,7 +86,7 @@ pub fn window_needs(fs: &FusionSet, last_ops: &IBox) -> WindowNeeds {
 /// regions per layer, updating `avail` in place.
 ///
 /// `avail[x]` must already reflect retention-window invalidation for this
-/// iteration (see `engine::apply_retention_windows`).
+/// iteration (see the engine's retention step).
 #[derive(Debug, Clone)]
 pub struct IterResult {
     /// Actual ops executed per layer this iteration.
@@ -69,32 +96,76 @@ pub struct IterResult {
     pub fresh: Vec<i64>,
 }
 
-pub fn iter_backward(fs: &FusionSet, last_ops: &IBox, avail: &mut [Region]) -> IterResult {
-    let n = fs.num_layers();
-    let mut ops: Vec<Region> = vec![Region::empty(0); n];
-    let mut fresh: Vec<i64> = vec![0; fs.tensors.len()];
+/// Reusable storage for [`iter_backward_into`]: the per-layer op regions,
+/// per-tensor fresh volumes, and the region/box temporaries of one backward
+/// pass. One instance serves every iteration of a walk, so the hot path
+/// performs no heap allocation (beyond amortized growth).
+#[derive(Debug, Clone, Default)]
+pub(crate) struct BackwardScratch {
+    /// Actual ops executed per layer this iteration.
+    pub ops: Vec<Region>,
+    /// Fresh volume per tensor this iteration.
+    pub fresh: Vec<i64>,
+    need: Region,
+    fr: Region,
+    tmpb: IBox,
+}
 
-    ops[n - 1] = Region::from_box(last_ops.clone());
+pub fn iter_backward(fs: &FusionSet, last_ops: &IBox, avail: &mut [Region]) -> IterResult {
+    let domains: Vec<IBox> = fs.einsums.iter().map(|e| e.domain()).collect();
+    let mut sc = BackwardScratch::default();
+    iter_backward_into(fs, last_ops, &domains, avail, &mut sc);
+    IterResult { ops: sc.ops, fresh: sc.fresh }
+}
+
+/// [`iter_backward`] writing into reusable scratch. `domains` caches
+/// `einsums[t].domain()` per layer.
+pub(crate) fn iter_backward_into(
+    fs: &FusionSet,
+    last_ops: &IBox,
+    domains: &[IBox],
+    avail: &mut [Region],
+    sc: &mut BackwardScratch,
+) {
+    let n = fs.num_layers();
+    sc.ops.resize_with(n, || Region::empty(0));
+    for (t, e) in fs.einsums.iter().enumerate() {
+        sc.ops[t].reset(e.ndim());
+    }
+    sc.fresh.clear();
+    sc.fresh.resize(fs.tensors.len(), 0);
+
+    sc.ops[n - 1].assign_box(last_ops);
     for t in (0..n).rev() {
         let e = &fs.einsums[t];
-        if ops[t].is_empty() {
+        if sc.ops[t].is_empty() {
             continue;
         }
         // Freshly produced output data (for intermediates this is what the
         // *consumer-driven* recursion below asked this layer to produce; for
         // the last layer it is the mapped tile's output).
         let out = e.output.tensor;
-        let out_region = e.output.map.image(&ops[t]);
-        let out_fresh = out_region.subtract(&avail[out.0]);
-        fresh[out.0] += out_fresh.volume();
-        avail[out.0].union(&out_fresh);
+        sc.need.reset(fs.tensors[out.0].ndim());
+        for b in sc.ops[t].boxes() {
+            e.output.map.image_box_into(b, &mut sc.tmpb);
+            sc.need.union_box(&sc.tmpb);
+        }
+        sc.fr.clone_from(&sc.need);
+        sc.fr.subtract_assign(&avail[out.0]);
+        sc.fresh[out.0] += sc.fr.volume();
+        avail[out.0].union(&sc.fr);
 
         // Input needs: fresh parts must be fetched (weights / input fmap) or
         // produced by the upstream layer (intermediates).
         for acc in &e.inputs {
             let x = acc.tensor;
-            let need = acc.map.image(&ops[t]);
-            let fr = need.subtract(&avail[x.0]);
+            sc.need.reset(fs.tensors[x.0].ndim());
+            for b in sc.ops[t].boxes() {
+                acc.map.image_box_into(b, &mut sc.tmpb);
+                sc.need.union_box(&sc.tmpb);
+            }
+            sc.fr.clone_from(&sc.need);
+            sc.fr.subtract_assign(&avail[x.0]);
             if t > 0 && fs.einsums[t - 1].output.tensor == x {
                 // Upstream must produce exactly the fresh part. Its volume is
                 // counted (and availability updated) by the producer's own
@@ -102,10 +173,14 @@ pub fn iter_backward(fs: &FusionSet, last_ops: &IBox, avail: &mut [Region]) -> I
                 // of `fr` images back to exactly `fr` under the identity
                 // output access, so nothing is double counted.
                 let prev = &fs.einsums[t - 1];
-                ops[t - 1] = prev.output.map.preimage_identity(&fr, &prev.domain());
+                sc.ops[t - 1].reset(prev.ndim());
+                for b in sc.fr.boxes() {
+                    prev.output.map.preimage_identity_box_into(b, &domains[t - 1], &mut sc.tmpb);
+                    sc.ops[t - 1].union_box(&sc.tmpb);
+                }
             } else {
-                fresh[x.0] += fr.volume();
-                avail[x.0].union(&fr);
+                sc.fresh[x.0] += sc.fr.volume();
+                avail[x.0].union(&sc.fr);
             }
         }
     }
@@ -115,7 +190,6 @@ pub fn iter_backward(fs: &FusionSet, last_ops: &IBox, avail: &mut [Region]) -> I
             a.coalesce();
         }
     }
-    IterResult { ops, fresh }
 }
 
 #[cfg(test)]

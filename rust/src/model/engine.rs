@@ -1,15 +1,58 @@
-//! The model evaluation engine: walks the inter-layer schedule once,
-//! algebraically, accumulating all metrics.
+//! The model evaluation engine: walks the inter-layer schedule
+//! algebraically, accumulating all metrics — with a steady-state
+//! tile-classification fast path that makes evaluation cost scale with the
+//! number of *distinct* tile shapes instead of the total tile count.
+//!
+//! # Tile classification (paper §III-E, imperfect factorization)
+//!
+//! Each schedule level classifies its iterations into at most three classes:
+//!
+//! * **first** (`i = 0`) — the cold-start tile: halos have no retained
+//!   predecessor, so its fetch/recompute volumes differ from every later
+//!   tile;
+//! * **steady** (`0 < i < count−1`) — interior tiles: exactly the
+//!   translates of one another. Retention windows, backward-pass regions,
+//!   fresh volumes, op counts, occupancies, and per-tile latencies repeat
+//!   bit-for-bit;
+//! * **last** (`i = count−1`) — the ragged tile of an imperfect
+//!   factorization (paper §III-E): the window is clipped to the rank
+//!   extent, so its shapes differ again. (When the factorization is perfect
+//!   the last tile happens to match the steady class, but it is evaluated
+//!   explicitly either way.)
+//!
+//! The walk recurses over levels. At each level the engine evaluates the
+//! first children explicitly while *certifying* steady state: two
+//! consecutive children whose exit availability states are exact translates
+//! of each other (per tensor, box-for-box). All region algebra in the
+//! backward pass is translation-equivariant — images and preimages of
+//! translated boxes are translated images (`poly::affine` never clips on
+//! *surjective* producer chains, which the session verifies once) — so once
+//! two consecutive children match, every further interior child is the
+//! translate of the last one: its metric contributions are identical
+//! integers and its exit state is one more translate. The engine then
+//! *jumps*: contributions are added `n`-fold, availability is shifted in
+//! closed form, and the pipeline recurrence is advanced by an exact
+//! max-plus [`super::latency::TransferMatrix`] power. The certification is
+//! purely observational, so any mapping that never reaches steady state
+//! (degenerate counts, monotone-growth retention-0 tensors under a moving
+//! schedule, non-surjective chains) silently degrades to the exhaustive
+//! reference walk with identical results.
+//!
+//! All quantities accumulated during the walk are integers; derived `f64`
+//! metrics (energy, NoC hop-words) are computed once at the end from the
+//! integer totals, which is what makes the fast path bit-identical to
+//! [`Evaluator::evaluate_reference`](super::Evaluator::evaluate_reference)
+//! rather than merely close.
 
-use super::backward::{iter_backward, window_needs, WindowNeeds};
-use super::intra::tile_counts;
-use super::latency::{memory_cycles, PipelineLatency};
+use super::backward::{iter_backward_into, window_needs_into, BackwardScratch, WindowNeeds};
+use super::intra::operand_slot_counts;
+use super::latency::{memory_cycles, PipelineLatency, TransferMatrix};
 use super::metrics::{EnergyBreakdown, Metrics};
-use super::walk::{IterWalk, TileWindows};
+use super::walk::TileWindows;
 use crate::arch::{energy, Arch};
 use crate::einsum::{FusionSet, TensorKind};
 use crate::mapping::{InterLayerMapping, IntraLayerMapping, Parallelism};
-use crate::poly::Region;
+use crate::poly::{IBox, Region};
 
 /// Evaluation options.
 #[derive(Debug, Clone, Default)]
@@ -17,6 +60,10 @@ pub struct EvalOptions {
     /// Per-layer intra-layer mappings; derived by
     /// [`IntraLayerMapping::default_for`] when absent.
     pub intra: Option<Vec<IntraLayerMapping>>,
+    /// Force the exhaustive reference walk (disable the steady-state
+    /// fast path). Results are bit-identical either way; this exists for
+    /// verification and benchmarking.
+    pub force_reference: bool,
 }
 
 /// Evaluate one mapping. Errors on structurally invalid inputs; capacity
@@ -36,8 +83,9 @@ pub fn evaluate(
     fs.validate()?;
     arch.validate()?;
     let intra = resolve_intra(fs, arch, opts.intra.as_deref())?;
-    let fanout = fanouts(&intra, arch);
-    evaluate_prevalidated(fs, arch, mapping, &intra, &fanout)
+    let cache = SessionCache::build(fs, arch, &intra);
+    let mut scratch = EvalScratch::default();
+    evaluate_prevalidated(fs, arch, mapping, &cache, &mut scratch, opts.force_reference)
 }
 
 /// Check (or derive defaults for) the per-layer intra-layer mappings.
@@ -73,206 +121,660 @@ pub(crate) fn fanouts(intra: &[IntraLayerMapping], arch: &Arch) -> Vec<i64> {
         .collect()
 }
 
+// ------------------------------------------------------- session constants --
+
+/// Per-input-slot action-count constants (mapping-independent — derived from
+/// the access projections, the intra-layer spatialization, and the NoC).
+#[derive(Debug, Clone)]
+struct InputConst {
+    /// Dims of the layer's iteration space absent from this input's
+    /// projection (candidates for register-level temporal reuse).
+    reuse_dims: Vec<usize>,
+    /// Spatial multicast factor (PEs sharing each GLB read).
+    multicast: i64,
+    /// NoC hop cost per multicast read (`NocSpec::multicast_hops`).
+    hops: f64,
+}
+
+/// Everything about a (fusion set, architecture, intra) triple the walk
+/// needs but that no mapping changes. The [`super::Evaluator`] builds this
+/// once per session.
+#[derive(Debug, Clone)]
+pub(crate) struct SessionCache {
+    /// Per-layer per-input-slot constants.
+    layer_inputs: Vec<Vec<InputConst>>,
+    /// Flat offset of layer `t`'s first input slot in the NoC read counters.
+    noc_slot_offset: Vec<usize>,
+    num_slots: usize,
+    /// Whether the register file can hold at least one word (else no reuse).
+    rf_gt1: bool,
+    /// Per-layer compute energy per op (pJ).
+    op_energy: Vec<f64>,
+    /// Per-layer effective parallel MACs.
+    fanout: Vec<i64>,
+    /// Cached `einsums[t].domain()` per layer.
+    domains: Vec<IBox>,
+    /// Producer chains are surjective (every producer's output image covers
+    /// its tensor), so backward preimages never clip and the steady-state
+    /// translation argument is exact. Checked once; gates the fast path.
+    surjective: bool,
+    /// Dims of the last layer referenced by its output access; partitions on
+    /// any other dim revisit output tiles (reduction-rank partitioning).
+    out_dims: Vec<usize>,
+}
+
+impl SessionCache {
+    pub(crate) fn build(fs: &FusionSet, arch: &Arch, intra: &[IntraLayerMapping]) -> SessionCache {
+        let rf_words = arch
+            .levels
+            .get(2)
+            .and_then(|l| l.capacity_bytes)
+            .map(|b| (b / arch.word_bytes).max(1))
+            .unwrap_or(1);
+        let rf_gt1 = rf_words > 1;
+
+        let mut layer_inputs = Vec::with_capacity(fs.num_layers());
+        let mut noc_slot_offset = Vec::with_capacity(fs.num_layers());
+        let mut num_slots = 0usize;
+        for (t, e) in fs.einsums.iter().enumerate() {
+            noc_slot_offset.push(num_slots);
+            let mut slots = Vec::with_capacity(e.inputs.len());
+            for acc in &e.inputs {
+                let proj = acc.map.referenced_dims();
+                let reuse_dims = (0..e.ndim()).filter(|d| !proj.contains(d)).collect();
+                let mut multicast = 1i64;
+                for &(d, f) in &intra[t].spatial {
+                    if !proj.contains(&d) {
+                        multicast *= f;
+                    }
+                }
+                slots.push(InputConst {
+                    reuse_dims,
+                    multicast,
+                    hops: arch.noc.multicast_hops(multicast),
+                });
+            }
+            num_slots += slots.len();
+            layer_inputs.push(slots);
+        }
+
+        let op_energy = fs
+            .einsums
+            .iter()
+            .map(|e| energy::op_energy_pj(e.op_kind, arch.compute.mac_energy_pj))
+            .collect();
+        let domains: Vec<IBox> = fs.einsums.iter().map(|e| e.domain()).collect();
+
+        let surjective = fs.einsums.iter().zip(&domains).all(|(e, dom)| {
+            e.output.map.image_box(dom) == fs.tensor(e.output.tensor).full_box()
+        });
+        let out_dims = fs.last().output.map.referenced_dims();
+
+        SessionCache {
+            layer_inputs,
+            noc_slot_offset,
+            num_slots,
+            rf_gt1,
+            op_energy,
+            fanout: fanouts(intra, arch),
+            domains,
+            surjective,
+            out_dims,
+        }
+    }
+}
+
+// ------------------------------------------------------------ accumulators --
+
+/// Integer metric accumulators. Everything here is *additive* across
+/// iterations, so a certified steady-state run of `n` identical children is
+/// applied as `n ×` the delta of one child. Maxima (occupancy peaks) live
+/// outside, in [`EvalScratch`]: steady-state children repeat values the
+/// representative already contributed, so jumps never change a max.
+#[derive(Debug, Clone, Default)]
+struct Accum {
+    iterations: i64,
+    seq_cycles: i64,
+    glb_reads: i64,
+    glb_writes: i64,
+    rf_reads: i64,
+    rf_writes: i64,
+    offchip_reads: i64,
+    offchip_writes: i64,
+    op_counts: Vec<i64>,
+    /// GLB reads per (layer, input slot), flattened by
+    /// `SessionCache::noc_slot_offset` — converted to NoC hop-words once at
+    /// the end (keeping the walk integer-only).
+    noc_reads: Vec<i64>,
+    per_tensor_offchip: Vec<i64>,
+    /// Accumulated fresh volume per tensor (recompute source for
+    /// intermediates).
+    fresh_acc: Vec<i64>,
+}
+
+impl Accum {
+    fn prepare(&mut self, n: usize, nt: usize, slots: usize) {
+        self.iterations = 0;
+        self.seq_cycles = 0;
+        self.glb_reads = 0;
+        self.glb_writes = 0;
+        self.rf_reads = 0;
+        self.rf_writes = 0;
+        self.offchip_reads = 0;
+        self.offchip_writes = 0;
+        reset_counts(&mut self.op_counts, n);
+        reset_counts(&mut self.noc_reads, slots);
+        reset_counts(&mut self.per_tensor_offchip, nt);
+        reset_counts(&mut self.fresh_acc, nt);
+    }
+
+    /// Snapshot into `dst`, reusing its storage.
+    fn save_into(&self, dst: &mut Accum) {
+        dst.iterations = self.iterations;
+        dst.seq_cycles = self.seq_cycles;
+        dst.glb_reads = self.glb_reads;
+        dst.glb_writes = self.glb_writes;
+        dst.rf_reads = self.rf_reads;
+        dst.rf_writes = self.rf_writes;
+        dst.offchip_reads = self.offchip_reads;
+        dst.offchip_writes = self.offchip_writes;
+        dst.op_counts.clone_from(&self.op_counts);
+        dst.noc_reads.clone_from(&self.noc_reads);
+        dst.per_tensor_offchip.clone_from(&self.per_tensor_offchip);
+        dst.fresh_acc.clone_from(&self.fresh_acc);
+    }
+
+    /// Add `mult` further copies of the delta accumulated since `snap`
+    /// (i.e. `self += (self − snap) · mult`).
+    fn add_scaled(&mut self, snap: &Accum, mult: i64) {
+        self.iterations += (self.iterations - snap.iterations) * mult;
+        self.seq_cycles += (self.seq_cycles - snap.seq_cycles) * mult;
+        self.glb_reads += (self.glb_reads - snap.glb_reads) * mult;
+        self.glb_writes += (self.glb_writes - snap.glb_writes) * mult;
+        self.rf_reads += (self.rf_reads - snap.rf_reads) * mult;
+        self.rf_writes += (self.rf_writes - snap.rf_writes) * mult;
+        self.offchip_reads += (self.offchip_reads - snap.offchip_reads) * mult;
+        self.offchip_writes += (self.offchip_writes - snap.offchip_writes) * mult;
+        scale_vec(&mut self.op_counts, &snap.op_counts, mult);
+        scale_vec(&mut self.noc_reads, &snap.noc_reads, mult);
+        scale_vec(&mut self.per_tensor_offchip, &snap.per_tensor_offchip, mult);
+        scale_vec(&mut self.fresh_acc, &snap.fresh_acc, mult);
+    }
+}
+
+fn reset_counts(v: &mut Vec<i64>, len: usize) {
+    v.clear();
+    v.resize(len, 0);
+}
+
+fn scale_vec(cur: &mut [i64], snap: &[i64], mult: i64) {
+    for (a, b) in cur.iter_mut().zip(snap) {
+        *a += (*a - b) * mult;
+    }
+}
+
+/// Retention-window cache slot: the data needs of one level-`j` prefix
+/// window, reused while the prefix is unchanged.
+#[derive(Debug, Clone, Default)]
+struct CacheSlot {
+    valid: bool,
+    prefix: Vec<i64>,
+    needs: WindowNeeds,
+}
+
+/// Reusable evaluation state. Owned (pooled) by the [`super::Evaluator`]
+/// session so that the per-iteration hot path of the walk — availability
+/// regions, backward-pass regions, window boxes, the iteration index, and
+/// all accumulators — performs no heap allocation after warm-up.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct EvalScratch {
+    avail: Vec<Region>,
+    idx: Vec<i64>,
+    tile_lat: Vec<i64>,
+    prev_occ: Vec<i64>,
+    occ_max: Vec<i64>,
+    occ_peak: i64,
+    win: IBox,
+    prefix_win: IBox,
+    out_box: IBox,
+    bbox: IBox,
+    bw: BackwardScratch,
+    cache_slots: Vec<CacheSlot>,
+    acc: Accum,
+    pipe: PipelineLatency,
+    /// Transfer matrices currently recording a candidate steady child, one
+    /// per ancestor level that is mid-certification.
+    rec_stack: Vec<TransferMatrix>,
+    /// Per level: availability snapshot at the end of the previous child.
+    exit_snap: Vec<Vec<Region>>,
+    /// Per level: accumulator snapshot at the start of the candidate child.
+    acc_snap: Vec<Accum>,
+    /// Per tensor: derived translation offsets of a certified run.
+    delta: Vec<Vec<i64>>,
+}
+
+impl EvalScratch {
+    fn prepare(&mut self, fs: &FusionSet, cache: &SessionCache, k: usize, pipeline: bool) {
+        let n = fs.num_layers();
+        let nt = fs.tensors.len();
+        self.avail.resize_with(nt, || Region::empty(0));
+        for (x, t) in fs.tensors.iter().enumerate() {
+            self.avail[x].reset(t.ndim());
+        }
+        reset_counts(&mut self.idx, k);
+        reset_counts(&mut self.tile_lat, n);
+        reset_counts(&mut self.prev_occ, nt);
+        reset_counts(&mut self.occ_max, nt);
+        self.occ_peak = 0;
+        self.cache_slots.resize_with(k + 1, CacheSlot::default);
+        for slot in &mut self.cache_slots {
+            slot.valid = false;
+        }
+        self.acc.prepare(n, nt, cache.num_slots);
+        if pipeline {
+            self.pipe.reset(n);
+        }
+        self.rec_stack.clear();
+        self.exit_snap.resize_with(k, Vec::new);
+        for snap in &mut self.exit_snap {
+            snap.resize_with(nt, || Region::empty(0));
+        }
+        self.acc_snap.resize_with(k, Accum::default);
+        self.delta.resize_with(nt, Vec::new);
+    }
+}
+
+// ------------------------------------------------------------------ walker --
+
+/// Immutable per-call context of one walk.
+struct Ctx<'a> {
+    fs: &'a FusionSet,
+    mapping: &'a InterLayerMapping,
+    cache: &'a SessionCache,
+    tw: TileWindows,
+    counts: Vec<i64>,
+    retention: Vec<usize>,
+    k: usize,
+    n: usize,
+    nt: usize,
+    pipeline: bool,
+    /// Master fast-path gate (surjective chain, not forced off).
+    fast: bool,
+    /// The final output's availability may be translate-materialized across
+    /// jumps: true iff no partition is on a reduction rank, so output tiles
+    /// never revisit and "already written" never feeds back into a metric.
+    out_exempt: bool,
+}
+
 /// The schedule walk itself. Assumes `fs` and `arch` are already validated
-/// and `intra`/`fanout` already resolved (the [`super::Evaluator`] session
+/// and the session constants already built (the [`super::Evaluator`] session
 /// caches them); only the per-call `mapping` is validated here.
 pub(crate) fn evaluate_prevalidated(
     fs: &FusionSet,
     arch: &Arch,
     mapping: &InterLayerMapping,
-    intra: &[IntraLayerMapping],
-    fanout: &[i64],
+    cache: &SessionCache,
+    scratch: &mut EvalScratch,
+    force_reference: bool,
 ) -> Result<Metrics, String> {
     mapping.validate(fs)?;
 
-    let n = fs.num_layers();
-    let nt = fs.tensors.len();
     let tw = TileWindows::new(fs, mapping);
     let counts = tw.counts().to_vec();
     let k = counts.len();
-
+    let nt = fs.tensors.len();
     let retention: Vec<usize> = (0..nt)
         .map(|x| mapping.retention_for(crate::einsum::TensorId(x)))
         .collect();
+    let pipeline = mapping.parallelism == Parallelism::Pipeline;
+    let out_exempt = mapping
+        .partitions
+        .iter()
+        .all(|p| cache.out_dims.contains(&p.dim));
 
-    // ---- walk state ----
-    let mut avail: Vec<Region> =
-        fs.tensors.iter().map(|t| Region::empty(t.ndim())).collect();
-    // Cached retained-window needs per retention level.
-    let mut window_cache: Vec<Option<(Vec<i64>, WindowNeeds)>> = vec![None; k + 1];
+    scratch.prepare(fs, cache, k, pipeline);
+    let cx = Ctx {
+        fs,
+        mapping,
+        cache,
+        tw,
+        counts,
+        retention,
+        k,
+        n: fs.num_layers(),
+        nt,
+        pipeline,
+        fast: cache.surjective && !force_reference,
+        out_exempt,
+    };
+    eval_level(&cx, scratch, 0, None);
+    Ok(finalize(&cx, arch, scratch))
+}
 
+/// Walk all children of schedule level `l` (leaf iterations when `l == k`).
+/// `entry_adv` is the advancing level of the subtree's first iteration
+/// (`None` only for the very first iteration of the whole walk).
+fn eval_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>) {
+    if l == cx.k {
+        eval_leaf(cx, sc, entry_adv);
+        return;
+    }
+    let c = cx.counts[l];
+    sc.idx[l] = 0;
+    eval_level(cx, sc, l + 1, entry_adv);
+    if !(cx.fast && c >= 4) {
+        for i in 1..c {
+            sc.idx[l] = i;
+            eval_level(cx, sc, l + 1, Some(l));
+        }
+        return;
+    }
+
+    // Steady-state certification: evaluate candidate children explicitly
+    // until two consecutive children have exit states that are exact
+    // translates (the first child is always cold; raggedness at deeper
+    // levels can delay onset by one more child). `rep ≤ c − 3` keeps at
+    // least one interior child to jump and the last child explicit.
+    let max_rep = 2.min(c - 3);
+    let mut next_child = 1i64;
+    for rep in 1..=max_rep {
+        for (x, snap) in sc.exit_snap[l].iter_mut().enumerate() {
+            snap.clone_from(&sc.avail[x]);
+        }
+        {
+            let (acc, snaps) = (&sc.acc, &mut sc.acc_snap);
+            acc.save_into(&mut snaps[l]);
+        }
+        if cx.pipeline {
+            sc.rec_stack.push(TransferMatrix::identity(cx.n));
+        }
+        sc.idx[l] = rep;
+        eval_level(cx, sc, l + 1, Some(l));
+        let rec = if cx.pipeline { sc.rec_stack.pop() } else { None };
+        next_child = rep + 1;
+        if certify(cx, sc, l) {
+            let n_skip = (c - 2) - rep;
+            {
+                let (acc, snaps) = (&mut sc.acc, &sc.acc_snap);
+                acc.add_scaled(&snaps[l], n_skip);
+            }
+            if let Some(rec) = rec {
+                let op = rec.power(n_skip);
+                sc.pipe.apply_transfer(&op);
+                for outer in sc.rec_stack.iter_mut() {
+                    outer.compose_with(&op);
+                }
+            }
+            for x in 0..cx.nt {
+                for d in sc.delta[x].iter_mut() {
+                    *d *= n_skip;
+                }
+                sc.avail[x].shift_assign(&sc.delta[x]);
+            }
+            next_child = c - 1;
+            break;
+        }
+    }
+    // Children not covered by a jump (certification failed or exhausted
+    // candidates), then the (possibly ragged) last child, always explicit.
+    for i in next_child..c {
+        sc.idx[l] = i;
+        eval_level(cx, sc, l + 1, Some(l));
+    }
+}
+
+/// Compare the current availability (exit of the candidate child) against
+/// the previous child's exit snapshot. On success, `sc.delta[x]` holds the
+/// per-tensor translation offsets of one steady step.
+fn certify(cx: &Ctx, sc: &mut EvalScratch, l: usize) -> bool {
+    for x in 0..cx.nt {
+        let nd = cx.fs.tensors[x].ndim();
+        let d = &mut sc.delta[x];
+        d.clear();
+        d.resize(nd, 0);
+        if cx.out_exempt && cx.fs.tensors[x].kind == TensorKind::OutputFmap {
+            // "Already written" grows monotonically, but with no reduction
+            // rank partitioned it never feeds back into any metric; shift it
+            // with the window so its frontier stays exact.
+            let part = &cx.mapping.partitions[l];
+            for (o, expr) in cx.fs.last().output.map.exprs.iter().enumerate() {
+                if expr.as_identity() == Some(part.dim) {
+                    d[o] = part.tile;
+                }
+            }
+            continue;
+        }
+        let prev = &sc.exit_snap[l][x];
+        let cur = &sc.avail[x];
+        if prev.complexity() != cur.complexity() {
+            return false;
+        }
+        let (pb, cb) = match (prev.boxes().first(), cur.boxes().first()) {
+            (None, None) => continue, // both empty: offset 0
+            (Some(p), Some(c)) => (p, c),
+            _ => return false,
+        };
+        for dim in 0..nd {
+            d[dim] = cb.dims[dim].lo - pb.dims[dim].lo;
+        }
+        for (p, c) in prev.boxes().iter().zip(cur.boxes()) {
+            for dim in 0..nd {
+                if c.dims[dim].lo - p.dims[dim].lo != d[dim]
+                    || c.dims[dim].hi - p.dims[dim].hi != d[dim]
+                {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// One inter-layer iteration: retention invalidation, backward pass,
+/// accumulation. Mirrors the paper's per-tile analysis (Fig 9/10).
+fn eval_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) {
+    let fs = cx.fs;
+    sc.acc.iterations += 1;
+
+    // 1) Retention-window invalidation: a tensor retained at level j keeps
+    //    only data inside its new level-j window once any level shallower
+    //    than j advances (paper §III-D sliding retention). Output fmaps are
+    //    exempt: their avail set tracks "already written" (outputs leave the
+    //    chip exactly once; partial sums accumulate on-chip under the
+    //    Buffets assumption) and their occupancy is the per-iteration drain
+    //    tile, handled below.
+    for x in 0..cx.nt {
+        if fs.tensors[x].kind == TensorKind::OutputFmap {
+            continue;
+        }
+        let j = cx.retention[x];
+        if j == 0 {
+            continue; // whole tensor retained; never invalidated
+        }
+        let changed = match adv {
+            None => true,
+            Some(a) => a < j,
+        };
+        if !changed {
+            continue;
+        }
+        let prefix = &sc.idx[0..j];
+        let slot = &mut sc.cache_slots[j];
+        if !(slot.valid && slot.prefix == prefix) {
+            cx.tw.window_into(prefix, &mut sc.prefix_win);
+            window_needs_into(
+                fs,
+                &sc.prefix_win,
+                &cx.cache.domains,
+                &mut slot.needs,
+                &mut sc.bbox,
+            );
+            slot.prefix.clear();
+            slot.prefix.extend_from_slice(prefix);
+            slot.valid = true;
+        }
+        if !sc.avail[x].is_empty() {
+            sc.avail[x].intersect_assign(&sc.cache_slots[j].needs.data[x]);
+        }
+    }
+
+    // 2) Backward pass with availability subtraction.
+    cx.tw.window_into(&sc.idx, &mut sc.win);
+    fs.last().output.map.image_box_into(&sc.win, &mut sc.out_box);
+    let out_tile_vol = sc.out_box.volume();
+    iter_backward_into(fs, &sc.win, &cx.cache.domains, &mut sc.avail, &mut sc.bw);
+
+    // 3) Accumulate metrics (integers only; see module docs).
+    for t in 0..cx.n {
+        let ops = sc.bw.ops[t].volume();
+        sc.acc.op_counts[t] += ops;
+        let lat = ops.div_ceil(cx.cache.fanout[t]);
+        sc.tile_lat[t] = lat;
+        sc.acc.seq_cycles += lat;
+        if ops == 0 {
+            continue;
+        }
+        // Per-tile action counts (paper §IV-B): register-level temporal
+        // reuse, NoC multicast, register-file traffic — the shared per-slot
+        // definition (`intra::operand_slot_counts`), so model and simulator
+        // cannot diverge.
+        sc.bw.ops[t].bounding_box_into(&mut sc.bbox);
+        let slots = &cx.cache.layer_inputs[t];
+        let base = cx.cache.noc_slot_offset[t];
+        for (s, ic) in slots.iter().enumerate() {
+            let (pe_words, reads) =
+                operand_slot_counts(cx.cache.rf_gt1, &ic.reuse_dims, ic.multicast, ops, &sc.bbox);
+            sc.acc.glb_reads += reads;
+            sc.acc.noc_reads[base + s] += reads;
+            sc.acc.rf_writes += pe_words;
+            sc.acc.rf_reads += ops;
+        }
+        // Results: partial sums accumulate in the PE register file and are
+        // written to the GLB once per produced element.
+        let produced = sc.bw.fresh[fs.einsums[t].output.tensor.0];
+        sc.acc.glb_writes += produced;
+        sc.acc.rf_reads += ops;
+        sc.acc.rf_writes += ops;
+    }
+    if cx.pipeline {
+        sc.pipe.push(&sc.tile_lat);
+        for rec in sc.rec_stack.iter_mut() {
+            rec.push_latencies(&sc.tile_lat);
+        }
+    }
+
+    let mut total_occ = 0i64;
+    for x in 0..cx.nt {
+        let fresh = sc.bw.fresh[x];
+        match fs.tensors[x].kind {
+            TensorKind::InputFmap | TensorKind::Weight => {
+                sc.acc.offchip_reads += fresh;
+                sc.acc.per_tensor_offchip[x] += fresh;
+                sc.acc.glb_writes += fresh; // DRAM -> GLB fill
+            }
+            TensorKind::OutputFmap => {
+                sc.acc.offchip_writes += fresh;
+                sc.acc.per_tensor_offchip[x] += fresh;
+                sc.acc.glb_reads += fresh; // GLB -> DRAM drain
+            }
+            TensorKind::Intermediate => {
+                sc.acc.fresh_acc[x] += fresh;
+            }
+        }
+        // Occupancy after this iteration's updates. Output fmaps occupy only
+        // their per-iteration drain tile (the accumulator for the current
+        // window).
+        let occ = if fs.tensors[x].kind == TensorKind::OutputFmap {
+            out_tile_vol
+        } else {
+            sc.avail[x].volume()
+        };
+        let eff_occ = if cx.pipeline && fs.tensors[x].kind == TensorKind::Intermediate {
+            // Next tile's production overlaps this tile's consumption.
+            sc.prev_occ[x] + fresh
+        } else {
+            occ
+        };
+        sc.occ_max[x] = sc.occ_max[x].max(eff_occ);
+        sc.prev_occ[x] = occ;
+        total_occ += occ;
+    }
+    sc.occ_peak = sc.occ_peak.max(total_occ);
+}
+
+/// Assemble [`Metrics`] from the walk's integer accumulators. Shared by the
+/// fast path and the reference walk, so derived `f64` metrics are computed
+/// by the exact same expressions in both.
+fn finalize(cx: &Ctx, arch: &Arch, sc: &EvalScratch) -> Metrics {
+    let fs = cx.fs;
+    let acc = &sc.acc;
     let mut m = Metrics {
-        per_tensor_offchip: vec![0; nt],
-        per_tensor_occupancy: vec![0; nt],
-        per_tensor_recompute: vec![0; nt],
+        per_tensor_offchip: acc.per_tensor_offchip.clone(),
+        per_tensor_occupancy: sc.occ_max.clone(),
+        per_tensor_recompute: vec![0; cx.nt],
         ..Metrics::default()
     };
-    let mut pipeline = PipelineLatency::new(n);
-    let mut glb_reads = 0i64;
-    let mut glb_writes = 0i64;
-    let mut noc_hop_words = 0f64;
-    let mut rf_reads = 0i64;
-    let mut rf_writes = 0i64;
-    let mut op_counts: Vec<i64> = vec![0; n];
-    // For pipeline occupancy: producer of tile i+1 overlaps consumer of i.
-    let mut prev_occ: Vec<i64> = vec![0; nt];
-    let mut tile_lat = vec![0i64; n];
-
-    for (idx, adv) in IterWalk::new(&counts) {
-        m.iterations += 1;
-        // 1) Retention-window invalidation: a tensor retained at level j
-        //    keeps only data inside its new level-j window once any level
-        //    shallower than j advances (paper §III-D sliding retention).
-        //    Output fmaps are exempt: their avail set tracks "already
-        //    written" (outputs leave the chip exactly once; partial sums
-        //    accumulate on-chip under the Buffets assumption) and their
-        //    occupancy is the per-iteration drain tile, handled below.
-        for x in 0..nt {
-            if fs.tensors[x].kind == TensorKind::OutputFmap {
-                continue;
-            }
-            let j = retention[x];
-            if j == 0 {
-                continue; // whole tensor retained; never invalidated
-            }
-            let changed = match adv {
-                None => true,
-                Some(a) => a < j,
-            };
-            if !changed {
-                continue;
-            }
-            let prefix = &idx[0..j];
-            let needs_fresh = match &window_cache[j] {
-                Some((p, _)) if p == prefix => false,
-                _ => true,
-            };
-            if needs_fresh {
-                let needs = window_needs(fs, &tw.window(prefix));
-                window_cache[j] = Some((prefix.to_vec(), needs));
-            }
-            let (_, needs) = window_cache[j].as_ref().unwrap();
-            if !avail[x].is_empty() {
-                avail[x] = avail[x].intersect(&needs.data[x]);
-            }
-        }
-
-        // 2) Backward pass with availability subtraction.
-        let win = tw.window(&idx);
-        let out_tile_vol = fs.last().output.map.image_box(&win).volume();
-        let res = iter_backward(fs, &win, &mut avail);
-
-        // 3) Accumulate metrics.
-        for t in 0..n {
-            let ops = res.ops[t].volume();
-            op_counts[t] += ops;
-            tile_lat[t] = div_ceil(ops, fanout[t]);
-            m.sequential_compute_cycles += tile_lat[t];
-            let e = &fs.einsums[t];
-            let produced = res.fresh[e.output.tensor.0];
-            let c = tile_counts(e, &intra[t], arch, &res.ops[t], produced);
-            glb_reads += c.glb_reads;
-            glb_writes += c.glb_writes;
-            noc_hop_words += c.noc_hop_words;
-            rf_reads += c.rf_reads;
-            rf_writes += c.rf_writes;
-            // Compute energy by op kind.
-            m.energy.compute_pj +=
-                ops as f64 * energy::op_energy_pj(e.op_kind, arch.compute.mac_energy_pj);
-        }
-        pipeline.push(&tile_lat);
-
-        let mut total_occ = 0i64;
-        for x in 0..nt {
-            let fresh = res.fresh[x];
-            match fs.tensors[x].kind {
-                TensorKind::InputFmap | TensorKind::Weight => {
-                    m.offchip_reads += fresh;
-                    m.per_tensor_offchip[x] += fresh;
-                    glb_writes += fresh; // DRAM -> GLB fill
-                }
-                TensorKind::OutputFmap => {
-                    m.offchip_writes += fresh;
-                    m.per_tensor_offchip[x] += fresh;
-                    glb_reads += fresh; // GLB -> DRAM drain
-                }
-                TensorKind::Intermediate => {
-                    m.per_tensor_recompute[x] += fresh;
-                }
-            }
-            // Occupancy after this iteration's updates. Output fmaps occupy
-            // only their per-iteration drain tile (the accumulator for the
-            // current window).
-            let occ = if fs.tensors[x].kind == TensorKind::OutputFmap {
-                out_tile_vol
-            } else {
-                avail[x].volume()
-            };
-            let eff_occ = if mapping.parallelism == Parallelism::Pipeline
-                && fs.tensors[x].kind == TensorKind::Intermediate
-            {
-                // Next tile's production overlaps this tile's consumption.
-                prev_occ[x] + fresh
-            } else {
-                occ
-            };
-            m.per_tensor_occupancy[x] = m.per_tensor_occupancy[x].max(eff_occ);
-            prev_occ[x] = occ;
-            total_occ += occ;
-        }
-        m.occupancy_peak = m.occupancy_peak.max(total_occ);
-    }
+    m.iterations = acc.iterations;
+    m.occupancy_peak = sc.occ_peak;
 
     // Recompute per tensor: produced minus size (intermediates only).
-    for x in 0..nt {
-        if fs.tensors[x].kind == TensorKind::Intermediate {
-            m.per_tensor_recompute[x] =
-                (m.per_tensor_recompute[x] - fs.tensors[x].size()).max(0);
-        } else {
-            m.per_tensor_recompute[x] = 0;
+    for (x, t) in fs.tensors.iter().enumerate() {
+        if t.kind == TensorKind::Intermediate {
+            m.per_tensor_recompute[x] = (acc.fresh_acc[x] - t.size()).max(0);
         }
     }
-    m.total_ops = op_counts.iter().sum();
+    m.total_ops = acc.op_counts.iter().sum();
     m.recompute_ops = m.total_ops - fs.total_ops();
+    m.offchip_reads = acc.offchip_reads;
+    m.offchip_writes = acc.offchip_writes;
+    m.sequential_compute_cycles = acc.seq_cycles;
 
     // Pipeline occupancy may exceed the per-iteration sum; use per-tensor
     // peaks as the capacity requirement (conservative for pipelines).
-    let per_tensor_sum: i64 = m.per_tensor_occupancy.iter().sum();
-    m.occupancy_peak = m.occupancy_peak.max(if mapping.parallelism == Parallelism::Pipeline {
-        per_tensor_sum
-    } else {
-        m.occupancy_peak
-    });
+    if cx.pipeline {
+        let per_tensor_sum: i64 = m.per_tensor_occupancy.iter().sum();
+        m.occupancy_peak = m.occupancy_peak.max(per_tensor_sum);
+    }
 
     // ---- latency ----
-    m.compute_cycles = match mapping.parallelism {
-        Parallelism::Sequential => m.sequential_compute_cycles,
-        Parallelism::Pipeline => pipeline.total(),
-    };
+    m.compute_cycles = if cx.pipeline { sc.pipe.total() } else { acc.seq_cycles };
     let dram_words = m.offchip_reads + m.offchip_writes;
-    let glb_words = glb_reads + glb_writes;
+    let glb_words = acc.glb_reads + acc.glb_writes;
     let dram_cycles = memory_cycles(dram_words, arch.dram().bandwidth_words_per_cycle);
     let glb_cycles = memory_cycles(glb_words, arch.glb().bandwidth_words_per_cycle);
     m.memory_cycles = dram_cycles.max(glb_cycles);
     m.latency_cycles = m.compute_cycles.max(m.memory_cycles);
 
-    // ---- energy ----
-    m.glb_reads = glb_reads;
-    m.glb_writes = glb_writes;
+    // ---- energy (from the integer totals) ----
+    m.glb_reads = acc.glb_reads;
+    m.glb_writes = acc.glb_writes;
+    let mut noc_hop_words = 0f64;
+    for (t, slots) in cx.cache.layer_inputs.iter().enumerate() {
+        let base = cx.cache.noc_slot_offset[t];
+        for (s, ic) in slots.iter().enumerate() {
+            noc_hop_words += acc.noc_reads[base + s] as f64 * ic.hops;
+        }
+    }
     m.noc_hop_words = noc_hop_words;
+    let mut compute_pj = 0f64;
+    for (t, &ops) in acc.op_counts.iter().enumerate() {
+        compute_pj += ops as f64 * cx.cache.op_energy[t];
+    }
     let dram = arch.dram();
     let glb = arch.glb();
     m.energy = EnergyBreakdown {
         dram_pj: m.offchip_reads as f64 * dram.read_energy_pj
             + m.offchip_writes as f64 * dram.write_energy_pj,
-        glb_pj: glb_reads as f64 * glb.read_energy_pj
-            + glb_writes as f64 * glb.write_energy_pj,
+        glb_pj: acc.glb_reads as f64 * glb.read_energy_pj
+            + acc.glb_writes as f64 * glb.write_energy_pj,
         rf_pj: arch
             .levels
             .get(2)
-            .map(|rf| rf_reads as f64 * rf.read_energy_pj + rf_writes as f64 * rf.write_energy_pj)
+            .map(|rf| {
+                acc.rf_reads as f64 * rf.read_energy_pj + acc.rf_writes as f64 * rf.write_energy_pj
+            })
             .unwrap_or(0.0),
-        compute_pj: m.energy.compute_pj,
+        compute_pj,
         noc_pj: noc_hop_words * arch.noc.hop_energy_pj,
     };
 
@@ -282,9 +784,5 @@ pub(crate) fn evaluate_prevalidated(
         Some(cap) => m.occupancy_peak * arch.word_bytes <= cap,
     };
 
-    Ok(m)
-}
-
-fn div_ceil(a: i64, b: i64) -> i64 {
-    (a + b - 1) / b
+    m
 }

@@ -4,26 +4,67 @@
 //! (workload, architecture) pair: every search iteration, case-study sweep,
 //! and Pareto enumeration re-walks the same fusion set under a different
 //! [`InterLayerMapping`]. An [`Evaluator`] validates the fusion set and
-//! architecture once, precomputes the per-layer intra-layer defaults and
-//! spatial fanouts, and then evaluates mappings with only the cheap per-call
-//! mapping validation on the hot path.
+//! architecture once, precomputes the per-layer intra-layer defaults,
+//! spatial fanouts, and action-count constants, and then evaluates mappings
+//! with only the cheap per-call mapping validation on the hot path — via
+//! the steady-state fast path by default (see the `engine` module docs), or
+//! the exhaustive reference walk through [`Evaluator::evaluate_reference`].
 
-use super::engine::{evaluate_prevalidated, fanouts, resolve_intra};
+use super::engine::{evaluate_prevalidated, resolve_intra, EvalScratch, SessionCache};
 use super::metrics::Metrics;
 use crate::arch::Arch;
 use crate::coordinator::Coordinator;
 use crate::einsum::FusionSet;
 use crate::mapping::{InterLayerMapping, IntraLayerMapping};
+use std::sync::Mutex;
+
+/// A pool of reusable [`EvalScratch`] buffers. Each `evaluate` call checks
+/// one out for the duration of its walk, so concurrent batch evaluation
+/// keeps one warm scratch per worker instead of allocating per iteration.
+#[derive(Debug, Default)]
+struct ScratchPool {
+    pool: Mutex<Vec<EvalScratch>>,
+}
+
+impl ScratchPool {
+    fn take(&self) -> EvalScratch {
+        self.pool
+            .lock()
+            .map(|mut p| p.pop().unwrap_or_default())
+            .unwrap_or_default()
+    }
+
+    fn put(&self, scratch: EvalScratch) {
+        if let Ok(mut p) = self.pool.lock() {
+            if p.len() < 64 {
+                p.push(scratch);
+            }
+        }
+    }
+}
 
 /// A validate-once evaluation session for one (fusion set, architecture)
 /// pair. Cheap to share across threads (`&Evaluator` is `Sync`): the
 /// searches and the [`Coordinator`] fan one session out over a worker pool.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Evaluator {
     fs: FusionSet,
     arch: Arch,
     intra: Vec<IntraLayerMapping>,
-    fanout: Vec<i64>,
+    cache: SessionCache,
+    scratch: ScratchPool,
+}
+
+impl Clone for Evaluator {
+    fn clone(&self) -> Self {
+        Evaluator {
+            fs: self.fs.clone(),
+            arch: self.arch.clone(),
+            intra: self.intra.clone(),
+            cache: self.cache.clone(),
+            scratch: ScratchPool::default(),
+        }
+    }
 }
 
 impl Evaluator {
@@ -33,8 +74,14 @@ impl Evaluator {
         fs.validate()?;
         arch.validate()?;
         let intra = resolve_intra(fs, arch, None)?;
-        let fanout = fanouts(&intra, arch);
-        Ok(Evaluator { fs: fs.clone(), arch: arch.clone(), intra, fanout })
+        let cache = SessionCache::build(fs, arch, &intra);
+        Ok(Evaluator {
+            fs: fs.clone(),
+            arch: arch.clone(),
+            intra,
+            cache,
+            scratch: ScratchPool::default(),
+        })
     }
 
     /// Like [`Evaluator::new`], but with explicit per-layer intra-layer
@@ -47,8 +94,14 @@ impl Evaluator {
         fs.validate()?;
         arch.validate()?;
         let intra = resolve_intra(fs, arch, Some(intra))?;
-        let fanout = fanouts(&intra, arch);
-        Ok(Evaluator { fs: fs.clone(), arch: arch.clone(), intra, fanout })
+        let cache = SessionCache::build(fs, arch, &intra);
+        Ok(Evaluator {
+            fs: fs.clone(),
+            arch: arch.clone(),
+            intra,
+            cache,
+            scratch: ScratchPool::default(),
+        })
     }
 
     /// The session's fusion set.
@@ -67,9 +120,32 @@ impl Evaluator {
     }
 
     /// Evaluate one inter-layer mapping. Identical results to the free
-    /// [`super::evaluate`], minus its per-call spec re-validation.
+    /// [`super::evaluate`], minus its per-call spec re-validation; uses the
+    /// steady-state fast path whenever the mapping qualifies, falling back
+    /// to the exhaustive walk otherwise (bit-identical either way).
     pub fn evaluate(&self, mapping: &InterLayerMapping) -> Result<Metrics, String> {
-        evaluate_prevalidated(&self.fs, &self.arch, mapping, &self.intra, &self.fanout)
+        self.run(mapping, false)
+    }
+
+    /// Evaluate with the exhaustive reference walk (the fast path disabled).
+    /// This is the verification oracle: it walks every inter-layer
+    /// iteration and must agree with [`Evaluator::evaluate`] bit-for-bit.
+    pub fn evaluate_reference(&self, mapping: &InterLayerMapping) -> Result<Metrics, String> {
+        self.run(mapping, true)
+    }
+
+    fn run(&self, mapping: &InterLayerMapping, force_reference: bool) -> Result<Metrics, String> {
+        let mut scratch = self.scratch.take();
+        let result = evaluate_prevalidated(
+            &self.fs,
+            &self.arch,
+            mapping,
+            &self.cache,
+            &mut scratch,
+            force_reference,
+        );
+        self.scratch.put(scratch);
+        result
     }
 
     /// Evaluate a batch on a worker pool; results preserve input order, and

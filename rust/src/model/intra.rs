@@ -62,6 +62,37 @@ pub fn tile_counts(
     )
 }
 
+/// Per-input-slot operand movement for one tile: `(pe_words, glb_reads)`
+/// from the op count, the ops bounding box, the slot's candidate
+/// register-reuse dims (layer dims absent from the operand's projection),
+/// and its multicast factor.
+///
+/// This is **the** definition of the dataflow's operand action counts:
+/// [`tile_counts_from`] (and through it the element-level simulator) and
+/// the model engine's steady-state fast path (which precomputes
+/// `reuse_dims`/`multicast` per session) both call it, so the two analyses
+/// cannot silently diverge.
+pub(crate) fn operand_slot_counts(
+    rf_gt1: bool,
+    reuse_dims: &[usize],
+    multicast: i64,
+    ops: i64,
+    bbox: &crate::poly::IBox,
+) -> (i64, i64) {
+    // Temporal register reuse: largest tile extent among dims absent from
+    // the projection (1 if the RF can't hold a word).
+    let mut reuse = 1i64;
+    if rf_gt1 {
+        for &d in reuse_dims {
+            reuse = reuse.max(bbox.dims[d].len());
+        }
+        reuse = reuse.clamp(1, 256);
+    }
+    let pe_words = ops.div_ceil(reuse); // words arriving at PEs
+    let reads = pe_words.div_ceil(multicast); // GLB reads after multicast
+    (pe_words, reads)
+}
+
 /// Action-count arithmetic from an op count and the op region's bounding
 /// box. Shared by the model (symbolic regions) and the simulator (element
 /// sets): the *semantics* of the dataflow's action counts are defined once,
@@ -89,17 +120,8 @@ pub fn tile_counts_from(
 
     for acc in &einsum.inputs {
         let proj = acc.map.referenced_dims();
-        // Temporal register reuse: largest tile extent among dims absent
-        // from the projection (1 if the RF can't hold a word, i.e. absent).
-        let mut reuse = 1i64;
-        if rf_words > 1 {
-            for d in 0..einsum.ndim() {
-                if !proj.contains(&d) {
-                    reuse = reuse.max(bbox.dims[d].len());
-                }
-            }
-            reuse = reuse.min(256).max(1);
-        }
+        let reuse_dims: Vec<usize> =
+            (0..einsum.ndim()).filter(|d| !proj.contains(d)).collect();
         // Spatial multicast: PEs along spatialized dims absent from the
         // projection receive the same word.
         let mut multicast = 1i64;
@@ -108,8 +130,8 @@ pub fn tile_counts_from(
                 multicast *= f;
             }
         }
-        let pe_words = div_ceil(ops, reuse); // words arriving at PEs
-        let reads = div_ceil(pe_words, multicast); // GLB reads after multicast
+        let (pe_words, reads) =
+            operand_slot_counts(rf_words > 1, &reuse_dims, multicast, ops, bbox);
         c.glb_reads += reads;
         c.noc_hop_words += reads as f64 * arch.noc.multicast_hops(multicast);
         c.rf_writes += pe_words;
@@ -121,10 +143,6 @@ pub fn tile_counts_from(
     c.rf_reads += ops; // psum read
     c.rf_writes += ops; // psum write
     c
-}
-
-fn div_ceil(a: i64, b: i64) -> i64 {
-    (a + b - 1) / b
 }
 
 #[cfg(test)]

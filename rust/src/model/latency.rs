@@ -14,7 +14,7 @@
 //! orchestration hides transfer latency behind compute, paper §IV-C1).
 
 /// Incremental pipeline latency evaluator across `stages` layers.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct PipelineLatency {
     /// finish[s]: completion cycle of the most recent tile of stage s.
     finish: Vec<i64>,
@@ -23,6 +23,12 @@ pub struct PipelineLatency {
 impl PipelineLatency {
     pub fn new(stages: usize) -> Self {
         PipelineLatency { finish: vec![0; stages] }
+    }
+
+    /// Reset to the start-of-walk state, reusing storage.
+    pub fn reset(&mut self, stages: usize) {
+        self.finish.clear();
+        self.finish.resize(stages, 0);
     }
 
     /// Feed one iteration's per-stage tile latencies (stage 0 = first layer).
@@ -36,9 +42,151 @@ impl PipelineLatency {
         }
     }
 
+    /// The per-stage completion cycles.
+    pub fn finish(&self) -> &[i64] {
+        &self.finish
+    }
+
+    /// Advance the state through a (possibly repeated) block of pushes
+    /// represented by its exact max-plus transfer matrix.
+    pub fn apply_transfer(&mut self, m: &TransferMatrix) {
+        m.apply(&mut self.finish);
+    }
+
     /// Total latency so far.
     pub fn total(&self) -> i64 {
         self.finish.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Sentinel for "no path" entries of a [`TransferMatrix`] (max-plus −∞).
+/// `i64::MIN / 4` leaves headroom so that adding a real latency to a
+/// sentinel can never overflow or become competitive with a real entry.
+const NEG: i64 = i64::MIN / 4;
+
+fn is_neg(x: i64) -> bool {
+    x < i64::MIN / 8
+}
+
+/// Exact max-plus transfer matrix of a sequence of [`PipelineLatency::push`]
+/// calls.
+///
+/// One push with per-stage latencies `l` maps the finish vector `f` to
+/// `f'[s] = max_{j ≤ s} (f[j] + Σ_{t=j..s} l[t])` — a max-plus affine map.
+/// Such maps are closed under composition (max-plus matrix product), so an
+/// arbitrary block of pushes is one matrix, and *repeating* the block
+/// `n` times is the matrix power — which is how the steady-state fast path
+/// advances a pipeline across thousands of identical tiles bit-exactly
+/// without walking them (including unbalanced pipelines, where the naive
+/// "finish deltas repeat" shortcut is wrong during transients).
+#[derive(Debug, Clone)]
+pub struct TransferMatrix {
+    n: usize,
+    /// Row-major: `a[j * n + s]` contributes `f[j] + a[j*n+s]` to `f'[s]`.
+    a: Vec<i64>,
+}
+
+impl TransferMatrix {
+    /// The identity map (empty block of pushes).
+    pub fn identity(n: usize) -> Self {
+        let mut a = vec![NEG; n * n];
+        for j in 0..n {
+            a[j * n + j] = 0;
+        }
+        TransferMatrix { n, a }
+    }
+
+    /// Right-compose with one push of per-stage latencies `l` (the push
+    /// happens *after* the block already represented by `self`).
+    pub fn push_latencies(&mut self, l: &[i64]) {
+        debug_assert_eq!(l.len(), self.n);
+        let n = self.n;
+        for j in 0..n {
+            let row = &mut self.a[j * n..(j + 1) * n];
+            // new_row[s] = max_{r ≤ s} (row[r] + Σ_{t=r..s} l[t]), computed
+            // with the same running recurrence as PipelineLatency::push.
+            let mut g = NEG;
+            for (s, &ls) in l.iter().enumerate() {
+                let base = if is_neg(g) {
+                    row[s]
+                } else if is_neg(row[s]) {
+                    g
+                } else {
+                    g.max(row[s])
+                };
+                g = if is_neg(base) { NEG } else { base + ls };
+                row[s] = g;
+            }
+        }
+    }
+
+    /// Max-plus product: the map "`self`, then `other`".
+    pub fn matmul(&self, other: &TransferMatrix) -> TransferMatrix {
+        debug_assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut a = vec![NEG; n * n];
+        for j in 0..n {
+            for r in 0..n {
+                let x = self.a[j * n + r];
+                if is_neg(x) {
+                    continue;
+                }
+                for s in 0..n {
+                    let y = other.a[r * n + s];
+                    if is_neg(y) {
+                        continue;
+                    }
+                    let v = x + y;
+                    let e = &mut a[j * n + s];
+                    if v > *e {
+                        *e = v;
+                    }
+                }
+            }
+        }
+        TransferMatrix { n, a }
+    }
+
+    /// Right-compose in place: `self = self ⊗ other`.
+    pub fn compose_with(&mut self, other: &TransferMatrix) {
+        *self = self.matmul(other);
+    }
+
+    /// `self` applied `e` times (binary exponentiation; exact).
+    pub fn power(&self, mut e: i64) -> TransferMatrix {
+        debug_assert!(e >= 0);
+        let mut result = TransferMatrix::identity(self.n);
+        let mut base = self.clone();
+        while e > 0 {
+            if e & 1 == 1 {
+                result = result.matmul(&base);
+            }
+            e >>= 1;
+            if e > 0 {
+                base = base.matmul(&base);
+            }
+        }
+        result
+    }
+
+    /// Apply to a finish vector in place.
+    pub fn apply(&self, f: &mut [i64]) {
+        debug_assert_eq!(f.len(), self.n);
+        let n = self.n;
+        let mut out = vec![NEG; n];
+        for (s, o) in out.iter_mut().enumerate() {
+            for j in 0..n {
+                let x = self.a[j * n + s];
+                if is_neg(x) {
+                    continue;
+                }
+                let v = f[j] + x;
+                if v > *o {
+                    *o = v;
+                }
+            }
+        }
+        f.copy_from_slice(&out);
     }
 }
 
@@ -102,5 +250,61 @@ mod tests {
         assert_eq!(memory_cycles(100, 8.0), 13);
         assert_eq!(memory_cycles(0, 8.0), 0);
         assert_eq!(memory_cycles(100, f64::INFINITY), 0);
+    }
+
+    /// One push as a matrix must equal one explicit push from any state.
+    #[test]
+    fn transfer_matrix_single_push() {
+        let l = [6, 4, 9];
+        let mut m = TransferMatrix::identity(3);
+        m.push_latencies(&l);
+        for start in [[0, 0, 0], [5, 2, 40], [100, 0, 3]] {
+            let mut p = PipelineLatency { finish: start.to_vec() };
+            p.push(&l);
+            let mut f = start.to_vec();
+            m.apply(&mut f);
+            assert_eq!(f, p.finish, "start {start:?}");
+        }
+    }
+
+    /// Matrix powers must reproduce explicit repetition exactly — including
+    /// unbalanced pipelines, where finish deltas stay non-uniform forever.
+    #[test]
+    fn transfer_matrix_power_matches_repetition() {
+        for l in [vec![4, 4], vec![2, 10], vec![10, 1, 1], vec![3, 0, 7, 2]] {
+            let n = l.len();
+            let mut block = TransferMatrix::identity(n);
+            block.push_latencies(&l);
+            // A non-trivial warm start (partial fill + a straggler stage).
+            let warm: Vec<i64> = (0..n as i64).map(|s| 50 + 13 * s).collect();
+            let mut p = PipelineLatency::new(n);
+            p.push(&warm);
+            for reps in [1i64, 2, 3, 7, 100] {
+                let mut explicit = p.clone();
+                for _ in 0..reps {
+                    explicit.push(&l);
+                }
+                let mut jumped = p.clone();
+                jumped.apply_transfer(&block.power(reps));
+                assert_eq!(jumped.finish, explicit.finish, "l={l:?} reps={reps}");
+            }
+        }
+    }
+
+    /// A mixed block (two different pushes) repeated via its matrix.
+    #[test]
+    fn transfer_matrix_block_power() {
+        let (a, b) = ([6, 4], [4, 4]);
+        let mut block = TransferMatrix::identity(2);
+        block.push_latencies(&a);
+        block.push_latencies(&b);
+        let mut explicit = PipelineLatency::new(2);
+        for _ in 0..13 {
+            explicit.push(&a);
+            explicit.push(&b);
+        }
+        let mut jumped = PipelineLatency::new(2);
+        jumped.apply_transfer(&block.power(13));
+        assert_eq!(jumped.finish, explicit.finish);
     }
 }

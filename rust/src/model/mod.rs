@@ -22,6 +22,14 @@
 //! [`Evaluator`] session, which validates the (fusion set, architecture)
 //! pair once and then evaluates many mappings cheaply — the API every search
 //! and case-study sweep uses.
+//!
+//! Evaluation itself runs in one of two modes with bit-identical results:
+//! the **steady-state fast path** (default), which classifies the iteration
+//! space into first/steady/ragged-last tile classes per schedule level and
+//! evaluates one representative per class (see the `engine` module docs),
+//! and the **exhaustive reference walk**
+//! ([`Evaluator::evaluate_reference`]), which visits every inter-layer
+//! iteration and serves as the verification oracle.
 
 mod backward;
 mod engine;

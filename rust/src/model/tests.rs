@@ -278,6 +278,32 @@ fn ragged_tiles_conserve_work() {
 }
 
 #[test]
+fn force_reference_is_bit_identical() {
+    // The EvalOptions escape hatch must route through the exhaustive walk
+    // and agree with the default (fast-path) evaluation exactly.
+    let fs = workloads::conv_conv(28, 8);
+    let arch = Arch::generic(1 << 16);
+    let mapping = p2_mapping(&fs, 3); // ragged: 26 = 8·3 + 2
+    let fast = evaluate(&fs, &arch, &mapping, &EvalOptions::default()).unwrap();
+    let reference = evaluate(
+        &fs,
+        &arch,
+        &mapping,
+        &EvalOptions { force_reference: true, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(fast.total_ops, reference.total_ops);
+    assert_eq!(fast.offchip_total(), reference.offchip_total());
+    assert_eq!(fast.latency_cycles, reference.latency_cycles);
+    assert_eq!(fast.occupancy_peak, reference.occupancy_peak);
+    assert_eq!(fast.iterations, reference.iterations);
+    assert_eq!(
+        fast.energy.total_pj().to_bits(),
+        reference.energy.total_pj().to_bits()
+    );
+}
+
+#[test]
 fn attention_workload_evaluates() {
     let fs = workloads::self_attention(2, 4, 64, 32);
     let last = fs.last();

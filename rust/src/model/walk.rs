@@ -10,6 +10,7 @@
 use crate::einsum::FusionSet;
 use crate::mapping::InterLayerMapping;
 use crate::poly::{IBox, Interval};
+use crate::util::odometer::odometer_step;
 
 /// Computes last-layer operation windows for iteration prefixes.
 #[derive(Debug, Clone)]
@@ -51,8 +52,16 @@ impl TileWindows {
     /// re-partitioning); the last tile at each level is clipped (ragged
     /// tiles, paper §III-E "imperfect factorization").
     pub fn window(&self, prefix: &[i64]) -> IBox {
+        let mut win = IBox::empty(self.full.ndim());
+        self.window_into(prefix, &mut win);
+        win
+    }
+
+    /// [`TileWindows::window`] into a caller-provided box (reuses storage —
+    /// the engine computes a window on every inter-layer iteration).
+    pub fn window_into(&self, prefix: &[i64], win: &mut IBox) {
         debug_assert!(prefix.len() <= self.parts.len());
-        let mut win = self.full.clone();
+        win.clone_from(&self.full);
         for (lvl, &idx) in prefix.iter().enumerate() {
             let (dim, tile) = self.parts[lvl];
             let cur = win.dims[dim];
@@ -61,7 +70,6 @@ impl TileWindows {
             debug_assert!(lo < cur.hi, "window index {idx} out of range at level {lvl}");
             win.dims[dim] = Interval::new(lo, hi);
         }
-        win
     }
 }
 
@@ -87,39 +95,33 @@ impl IterWalk {
             done: counts.iter().any(|&c| c <= 0),
         }
     }
+
+    /// Streaming advance: yields the next `(index, advancing_level)` without
+    /// cloning the index vector. The borrow ends when the caller is done
+    /// with the slice, so hot loops walk allocation-free.
+    pub fn step(&mut self) -> Option<(&[i64], Option<usize>)> {
+        if self.done {
+            return None;
+        }
+        if !self.started {
+            self.started = true;
+            return Some((&self.idx, None));
+        }
+        match odometer_step(&mut self.idx, &self.counts) {
+            Some(lvl) => Some((&self.idx, Some(lvl))),
+            None => {
+                self.done = true;
+                None
+            }
+        }
+    }
 }
 
 impl Iterator for IterWalk {
     type Item = (Vec<i64>, Option<usize>);
 
     fn next(&mut self) -> Option<Self::Item> {
-        if self.done {
-            return None;
-        }
-        if !self.started {
-            self.started = true;
-            if self.counts.is_empty() {
-                self.done = true;
-                return Some((vec![], None));
-            }
-            return Some((self.idx.clone(), None));
-        }
-        // Increment like an odometer from the innermost level.
-        let k = self.counts.len();
-        let mut lvl = k;
-        loop {
-            if lvl == 0 {
-                self.done = true;
-                return None;
-            }
-            lvl -= 1;
-            self.idx[lvl] += 1;
-            if self.idx[lvl] < self.counts[lvl] {
-                break;
-            }
-            self.idx[lvl] = 0;
-        }
-        Some((self.idx.clone(), Some(lvl)))
+        self.step().map(|(idx, adv)| (idx.to_vec(), adv))
     }
 }
 

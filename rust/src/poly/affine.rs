@@ -137,10 +137,19 @@ impl AffineMap {
 
     /// Image of an iteration-space box: the (box) data footprint it touches.
     pub fn image_box(&self, domain: &IBox) -> IBox {
+        let mut out = IBox::empty(self.out_ndim());
+        self.image_box_into(domain, &mut out);
+        out
+    }
+
+    /// [`AffineMap::image_box`] into a caller-provided box (reuses storage).
+    pub fn image_box_into(&self, domain: &IBox, out: &mut IBox) {
+        out.dims.clear();
         if domain.is_empty() {
-            return IBox::empty(self.out_ndim());
+            out.dims.resize(self.out_ndim(), Interval::empty());
+            return;
         }
-        IBox::new(self.exprs.iter().map(|e| e.range_over(domain)).collect())
+        out.dims.extend(self.exprs.iter().map(|e| e.range_over(domain)));
     }
 
     /// Image of a region (union of per-box images; re-disjointified).
@@ -161,11 +170,20 @@ impl AffineMap {
     /// output tensors in our Einsums are always indexed by bare ranks — the
     /// assertion enforces this documented restriction.
     pub fn preimage_identity_box(&self, data: &IBox, full_domain: &IBox) -> IBox {
+        let mut out = IBox::empty(full_domain.ndim());
+        self.preimage_identity_box_into(data, full_domain, &mut out);
+        out
+    }
+
+    /// [`AffineMap::preimage_identity_box`] into a caller-provided box.
+    pub fn preimage_identity_box_into(&self, data: &IBox, full_domain: &IBox, out: &mut IBox) {
         debug_assert_eq!(data.ndim(), self.out_ndim());
-        let mut out = full_domain.clone();
+        out.dims.clear();
         if data.is_empty() {
-            return IBox::empty(full_domain.ndim());
+            out.dims.resize(full_domain.ndim(), Interval::empty());
+            return;
         }
+        out.dims.extend_from_slice(&full_domain.dims);
         for (expr, iv) in self.exprs.iter().zip(&data.dims) {
             let dim = expr
                 .as_identity()
@@ -173,9 +191,8 @@ impl AffineMap {
             out.dims[dim] = out.dims[dim].intersect(iv);
         }
         if out.is_empty() {
-            IBox::empty(full_domain.ndim())
-        } else {
-            out
+            out.dims.clear();
+            out.dims.resize(full_domain.ndim(), Interval::empty());
         }
     }
 

@@ -4,9 +4,28 @@ use super::Interval;
 
 /// An axis-aligned box: the Cartesian product of one interval per dimension.
 /// The box is empty iff any dimension's interval is empty.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[derive(Debug, PartialEq, Eq, Hash)]
 pub struct IBox {
     pub dims: Vec<Interval>,
+}
+
+/// The zero-dimensional box (scratch placeholder; callers overwrite it).
+impl Default for IBox {
+    fn default() -> Self {
+        IBox { dims: Vec::new() }
+    }
+}
+
+// Manual `Clone` so `clone_from` reuses the existing `dims` allocation —
+// the model engine copies boxes on every inter-layer iteration.
+impl Clone for IBox {
+    fn clone(&self) -> Self {
+        IBox { dims: self.dims.clone() }
+    }
+
+    fn clone_from(&mut self, source: &Self) {
+        self.dims.clone_from(&source.dims);
+    }
 }
 
 impl IBox {
@@ -75,6 +94,20 @@ impl IBox {
             .all(|(a, b)| a.contains_interval(b))
     }
 
+    /// Grow `self` in place to the smallest box containing both.
+    pub fn hull_assign(&mut self, other: &IBox) {
+        if other.is_empty() {
+            return;
+        }
+        if self.is_empty() {
+            self.clone_from(other);
+            return;
+        }
+        for (a, b) in self.dims.iter_mut().zip(&other.dims) {
+            *a = a.hull(b);
+        }
+    }
+
     /// Smallest box containing both.
     pub fn hull(&self, other: &IBox) -> IBox {
         if self.is_empty() {
@@ -100,17 +133,26 @@ impl IBox {
     /// that dimension (each peel is a disjoint box), then narrow `self` to the
     /// overlapping slab and continue. Produces at most `2 * ndim` boxes.
     pub fn subtract(&self, other: &IBox) -> Vec<IBox> {
+        let mut out = Vec::new();
+        self.subtract_into(other, &mut out);
+        out
+    }
+
+    /// Set difference `self − other`, appending the disjoint pieces to `out`
+    /// (same slab decomposition as [`IBox::subtract`], allocation-free for
+    /// the caller).
+    pub fn subtract_into(&self, other: &IBox, out: &mut Vec<IBox>) {
         if self.is_empty() {
-            return vec![];
+            return;
         }
         let inter = self.intersect(other);
         if inter.is_empty() {
-            return vec![self.clone()];
+            out.push(self.clone());
+            return;
         }
         if other.contains_box(self) {
-            return vec![];
+            return;
         }
-        let mut out = Vec::new();
         let mut rest = self.clone();
         for d in 0..self.ndim() {
             let s = rest.dims[d];
@@ -130,19 +172,20 @@ impl IBox {
             // Narrow to the overlapping slab and continue.
             rest.dims[d] = Interval::new(s.lo.max(o.lo), s.hi.min(o.hi));
         }
-        out
     }
 
     /// Translate by a per-dimension offset.
     pub fn shift(&self, offsets: &[i64]) -> IBox {
+        let mut b = self.clone();
+        b.shift_assign(offsets);
+        b
+    }
+
+    /// Translate in place by a per-dimension offset.
+    pub fn shift_assign(&mut self, offsets: &[i64]) {
         debug_assert_eq!(self.ndim(), offsets.len());
-        IBox {
-            dims: self
-                .dims
-                .iter()
-                .zip(offsets)
-                .map(|(d, &o)| d.shift(o))
-                .collect(),
+        for (d, &o) in self.dims.iter_mut().zip(offsets) {
+            *d = d.shift(o);
         }
     }
 }

@@ -8,15 +8,54 @@ use super::{IBox, Interval};
 /// operation, so `volume` is a simple sum. Box count stays small in practice
 /// (fresh regions after halo subtraction are unions of a few slabs), but
 /// [`Region::coalesce`] merges adjacent boxes to keep representations tight.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub struct Region {
     ndim: usize,
     boxes: Vec<IBox>,
 }
 
+/// The empty zero-dimensional region (scratch placeholder; callers
+/// overwrite or `reset` it).
+impl Default for Region {
+    fn default() -> Self {
+        Region::empty(0)
+    }
+}
+
+// Manual `Clone` so `clone_from` reuses the box storage (and each box's
+// interval storage) — the model engine snapshots availability regions on
+// every schedule level without reallocating.
+impl Clone for Region {
+    fn clone(&self) -> Self {
+        Region { ndim: self.ndim, boxes: self.boxes.clone() }
+    }
+
+    fn clone_from(&mut self, source: &Self) {
+        self.ndim = source.ndim;
+        self.boxes.clone_from(&source.boxes);
+    }
+}
+
 impl Region {
     pub fn empty(ndim: usize) -> Self {
         Region { ndim, boxes: vec![] }
+    }
+
+    /// Empty this region in place and (re)set its dimensionality, keeping
+    /// the box storage for reuse.
+    pub fn reset(&mut self, ndim: usize) {
+        self.ndim = ndim;
+        self.boxes.clear();
+    }
+
+    /// Replace the contents with a single box (empty region if the box is
+    /// empty), keeping the storage.
+    pub fn assign_box(&mut self, b: &IBox) {
+        self.ndim = b.ndim();
+        self.boxes.clear();
+        if !b.is_empty() {
+            self.boxes.push(b.clone());
+        }
     }
 
     pub fn from_box(b: IBox) -> Self {
@@ -106,6 +145,41 @@ impl Region {
         out
     }
 
+    /// In-place `self ∩= b`.
+    pub fn intersect_box_assign(&mut self, b: &IBox) {
+        let mut i = 0;
+        while i < self.boxes.len() {
+            let x = self.boxes[i].intersect(b);
+            if x.is_empty() {
+                self.boxes.swap_remove(i);
+            } else {
+                self.boxes[i] = x;
+                i += 1;
+            }
+        }
+    }
+
+    /// In-place `self ∩= other`.
+    pub fn intersect_assign(&mut self, other: &Region) {
+        if other.boxes.is_empty() {
+            self.boxes.clear();
+            return;
+        }
+        if other.boxes.len() == 1 {
+            self.intersect_box_assign(&other.boxes[0]);
+            return;
+        }
+        let src = std::mem::take(&mut self.boxes);
+        for b in &other.boxes {
+            for x in &src {
+                let y = x.intersect(b);
+                if !y.is_empty() {
+                    self.boxes.push(y);
+                }
+            }
+        }
+    }
+
     pub fn subtract_box(&self, b: &IBox) -> Region {
         if b.is_empty() {
             return self.clone();
@@ -123,10 +197,44 @@ impl Region {
 
     pub fn subtract(&self, other: &Region) -> Region {
         let mut r = self.clone();
-        for b in &other.boxes {
-            r = r.subtract_box(b);
-        }
+        r.subtract_assign(other);
         r
+    }
+
+    /// In-place `self −= b`. Overlapping boxes are replaced by their slab
+    /// decomposition without rebuilding the box vector.
+    pub fn subtract_box_assign(&mut self, b: &IBox) {
+        if b.is_empty() || self.boxes.is_empty() {
+            return;
+        }
+        let mut i = 0;
+        while i < self.boxes.len() {
+            if self.boxes[i].overlaps(b) {
+                let x = self.boxes.swap_remove(i);
+                // Pieces never overlap `b`, so appending them is final; the
+                // box swapped into slot `i` still needs checking.
+                x.subtract_into(b, &mut self.boxes);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// In-place `self −= other`.
+    pub fn subtract_assign(&mut self, other: &Region) {
+        for b in &other.boxes {
+            if self.boxes.is_empty() {
+                return;
+            }
+            self.subtract_box_assign(b);
+        }
+    }
+
+    /// Translate in place by a per-dimension offset.
+    pub fn shift_assign(&mut self, offsets: &[i64]) {
+        for b in &mut self.boxes {
+            b.shift_assign(offsets);
+        }
     }
 
     /// `other ⊆ self`.
@@ -141,28 +249,56 @@ impl Region {
 
     /// Smallest box containing the region (empty box if region is empty).
     pub fn bounding_box(&self) -> IBox {
-        let mut it = self.boxes.iter();
-        match it.next() {
-            None => IBox::empty(self.ndim),
-            Some(first) => it.fold(first.clone(), |acc, b| acc.hull(b)),
+        let mut out = IBox::empty(self.ndim);
+        self.bounding_box_into(&mut out);
+        out
+    }
+
+    /// Write the smallest box containing the region into `out` without
+    /// allocating (when `out` already has capacity for `ndim` intervals).
+    pub fn bounding_box_into(&self, out: &mut IBox) {
+        out.dims.clear();
+        match self.boxes.first() {
+            None => out.dims.resize(self.ndim, Interval::empty()),
+            Some(first) => {
+                out.dims.extend_from_slice(&first.dims);
+                for b in &self.boxes[1..] {
+                    out.hull_assign(b);
+                }
+            }
         }
     }
 
     /// Merge pairs of adjacent boxes that differ in exactly one dimension and
     /// abut there. Keeps representation size down for long-running unions.
+    ///
+    /// Each pass fixes a pivot box and folds every mergeable partner into it,
+    /// retrying only against the freshly merged pivot (not restarting the
+    /// whole O(n²) scan per merge); passes repeat until a full pass performs
+    /// no merge, so the result is maximal exactly like the old
+    /// restart-from-scratch scan, at a fraction of the cost on long walks.
     pub fn coalesce(&mut self) {
-        let mut changed = true;
-        while changed {
-            changed = false;
-            'outer: for i in 0..self.boxes.len() {
-                for j in (i + 1)..self.boxes.len() {
+        loop {
+            let mut changed = false;
+            let mut i = 0;
+            while i < self.boxes.len() {
+                let mut j = i + 1;
+                while j < self.boxes.len() {
                     if let Some(merged) = try_merge(&self.boxes[i], &self.boxes[j]) {
                         self.boxes[i] = merged;
                         self.boxes.swap_remove(j);
                         changed = true;
-                        break 'outer;
+                        // The grown pivot may newly abut boxes already
+                        // scanned this pass: retry them against it.
+                        j = i + 1;
+                    } else {
+                        j += 1;
                     }
                 }
+                i += 1;
+            }
+            if !changed {
+                break;
             }
         }
     }

@@ -131,6 +131,66 @@ fn region_coalesce_merges_abutting() {
 }
 
 #[test]
+fn region_coalesce_many_slabs_canonical() {
+    // A long walk's worth of unit slabs in both orders, plus a second row
+    // that only becomes mergeable after the slabs fuse: the single-pass
+    // retry must reach the same canonical single box as the old
+    // restart-from-scratch scan.
+    let mut a = Region::empty(2);
+    for i in 0..32 {
+        a.union_box(&bx(&[(i, i + 1), (0, 4)]));
+    }
+    for i in (0..32).rev() {
+        a.union_box(&bx(&[(i, i + 1), (4, 8)]));
+    }
+    assert_eq!(a.volume(), 32 * 8);
+    a.coalesce();
+    assert_eq!(a.complexity(), 1, "must coalesce to one box, got {a}");
+    assert_eq!(a.bounding_box(), bx(&[(0, 32), (0, 8)]));
+    assert_eq!(a.volume(), 32 * 8);
+}
+
+#[test]
+fn region_inplace_ops_match_functional() {
+    let base = {
+        let mut r = Region::empty(2);
+        r.union_box(&bx(&[(0, 8), (0, 8)]));
+        r.union_box(&bx(&[(8, 12), (2, 6)]));
+        r
+    };
+    let cut = Region::from_box(bx(&[(3, 10), (3, 10)]));
+
+    let functional = base.subtract(&cut);
+    let mut inplace = base.clone();
+    inplace.subtract_assign(&cut);
+    assert!(functional.set_eq(&inplace));
+    assert_eq!(functional.volume(), inplace.volume());
+
+    let functional = base.intersect(&cut);
+    let mut inplace = base.clone();
+    inplace.intersect_assign(&cut);
+    assert!(functional.set_eq(&inplace));
+
+    let mut shifted = base.clone();
+    shifted.shift_assign(&[5, -2]);
+    assert_eq!(shifted.volume(), base.volume());
+    assert_eq!(shifted.bounding_box(), bx(&[(5, 17), (-2, 6)]));
+}
+
+#[test]
+fn region_bounding_box_into_reuses_storage() {
+    let mut a = Region::empty(2);
+    a.union_box(&bx(&[(0, 2), (0, 2)]));
+    a.union_box(&bx(&[(8, 10), (5, 6)]));
+    let mut out = IBox::default();
+    a.bounding_box_into(&mut out);
+    assert_eq!(out, bx(&[(0, 10), (0, 6)]));
+    Region::empty(3).bounding_box_into(&mut out);
+    assert!(out.is_empty());
+    assert_eq!(out.ndim(), 3);
+}
+
+#[test]
 fn region_bounding_box() {
     let mut a = Region::empty(2);
     a.union_box(&bx(&[(0, 2), (0, 2)]));

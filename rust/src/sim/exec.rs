@@ -87,7 +87,8 @@ pub fn simulate(
     let mut prev_occ = vec![0i64; nt];
     let mut energy_pj = 0f64;
 
-    for (idx, adv) in IterWalk::new(&counts) {
+    let mut walk = IterWalk::new(&counts);
+    while let Some((idx, adv)) = walk.step() {
         m.iterations += 1;
         // Retention invalidation: keep only the new window's footprint.
         // Output fmaps are exempt: their avail set tracks "already written"
@@ -199,7 +200,7 @@ pub fn simulate(
                 }
             }
             op_total += ops;
-            tile_lat[t] = div_ceil(ops, fanout[t]);
+            tile_lat[t] = ops.div_ceil(fanout[t]);
             seq_cycles += tile_lat[t];
             energy_pj +=
                 ops as f64 * energy::op_energy_pj(e.op_kind, arch.compute.mac_energy_pj);
@@ -404,8 +405,4 @@ fn collect_fresh(bm: &mut Bitmap, b: &IBox, out: &mut Vec<Vec<i64>>) {
 
 fn unset(bm: &mut Bitmap, coords: &[i64]) {
     bm.clear_bit(coords);
-}
-
-fn div_ceil(a: i64, b: i64) -> i64 {
-    (a + b - 1) / b
 }

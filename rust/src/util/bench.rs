@@ -1,7 +1,11 @@
 //! Minimal benchmark harness (criterion is not vendored in the offline
 //! image). Benches are plain binaries (`harness = false`); this module
-//! provides warmup + timed repetitions with mean/min/max reporting.
+//! provides warmup + timed repetitions with mean/min/max reporting, a
+//! machine-readable JSON emitter (`BENCH_*.json`, consumed by CI to track
+//! the perf trajectory), and a smoke mode (`LOOPTREE_BENCH_SMOKE=1`) that
+//! clamps repetitions for cheap CI runs.
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one timed benchmark.
@@ -21,6 +25,52 @@ impl BenchResult {
             self.name, self.mean, self.min, self.max, self.iters
         )
     }
+
+    /// Mean iterations per second (0 for a zero-duration mean).
+    pub fn iters_per_sec(&self) -> f64 {
+        let s = self.mean.as_secs_f64();
+        if s > 0.0 {
+            1.0 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// Machine-readable row: workload name, mean ns, iterations/s.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                ("workload".to_string(), Json::Str(self.name.clone())),
+                ("mean_ns".to_string(), Json::Num(self.mean.as_nanos() as f64)),
+                ("min_ns".to_string(), Json::Num(self.min.as_nanos() as f64)),
+                ("max_ns".to_string(), Json::Num(self.max.as_nanos() as f64)),
+                ("iters".to_string(), Json::Num(self.iters as f64)),
+                ("iters_per_sec".to_string(), Json::Num(self.iters_per_sec())),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+/// `LOOPTREE_BENCH_SMOKE=1` clamps benches to 1 warmup / 3 reps so CI can
+/// exercise them and upload the JSON artifact without paying full cost.
+pub fn smoke() -> bool {
+    std::env::var("LOOPTREE_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `(warmup, iters)` honoring smoke mode.
+pub fn reps(warmup: u32, iters: u32) -> (u32, u32) {
+    if smoke() {
+        (1, 3)
+    } else {
+        (warmup, iters)
+    }
+}
+
+/// Write a bench report object to `path` (pretty JSON + trailing newline).
+pub fn write_bench_json(path: &str, obj: &Json) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", obj.pretty()))
 }
 
 /// Time `f` for `iters` repetitions after `warmup` repetitions.

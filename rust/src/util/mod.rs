@@ -3,5 +3,6 @@
 
 pub mod bench;
 pub mod json;
+pub mod odometer;
 pub mod prng;
 pub mod table;

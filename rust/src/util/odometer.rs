@@ -1,0 +1,47 @@
+//! Mixed-radix odometer increment, shared by the inter-layer walk
+//! (`model::walk`), the element-level simulator's walk, and the mapspace
+//! tile-size enumeration (`mapspace::enumerate`).
+
+/// Increment `idx` one step in lexicographic order under per-level `counts`
+/// (innermost = last index, fastest). Returns the deepest level whose
+/// counter advanced, or `None` when the odometer wraps past the end (all
+/// counters reset to zero).
+pub fn odometer_step(idx: &mut [i64], counts: &[i64]) -> Option<usize> {
+    debug_assert_eq!(idx.len(), counts.len());
+    let mut lvl = idx.len();
+    while lvl > 0 {
+        lvl -= 1;
+        idx[lvl] += 1;
+        if idx[lvl] < counts[lvl] {
+            return Some(lvl);
+        }
+        idx[lvl] = 0;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walks_lexicographically() {
+        let counts = [2, 3];
+        let mut idx = vec![0i64; 2];
+        let mut seen = vec![(idx.clone(), None)];
+        while let Some(lvl) = odometer_step(&mut idx, &counts) {
+            seen.push((idx.clone(), Some(lvl)));
+        }
+        assert_eq!(idx, vec![0, 0], "wraps back to zero");
+        assert_eq!(seen.len(), 6);
+        assert_eq!(seen[1], (vec![0, 1], Some(1)));
+        assert_eq!(seen[3], (vec![1, 0], Some(0)));
+        assert_eq!(seen[5], (vec![1, 2], Some(1)));
+    }
+
+    #[test]
+    fn empty_odometer_wraps_immediately() {
+        let mut idx: Vec<i64> = vec![];
+        assert_eq!(odometer_step(&mut idx, &[]), None);
+    }
+}

@@ -29,6 +29,20 @@ fn check(fs: &FusionSet, mapping: &InterLayerMapping, tag: &str) {
         m.per_tensor_offchip, s.per_tensor_offchip,
         "{tag}: per-tensor offchip"
     );
+    // Energy: both implementations apply the same per-action costs to
+    // independently derived counts (the simulator measures by execution,
+    // the model accumulates integer totals and converts once at the end),
+    // so this anchors the model's float metrics against an implementation
+    // that does not share its accumulation code. Counts agree exactly;
+    // only f64 summation order differs, so 1% is generous.
+    let e_model = m.energy.total_pj();
+    let rel = (e_model - s.energy_pj).abs() / s.energy_pj.abs().max(1.0);
+    assert!(
+        rel < 0.01,
+        "{tag}: energy model={e_model} sim={} (rel err {rel})",
+        s.energy_pj
+    );
+
     // Latency: the simulator explicitly serializes each tile's DRAM fetches
     // before its compute (no infinite prefetch), while the model assumes
     // Buffets-style decoupled orchestration (paper §IV-C1). On tiny test

@@ -1,0 +1,176 @@
+//! Steady-state fast path vs. exhaustive reference walk.
+//!
+//! The tile-classification fast path (see `model::engine`) must be
+//! *bit-identical* to the reference walk — not approximately equal: every
+//! integer count and every derived `f64` (energy, NoC hop-words) down to
+//! the last bit, on the five validation designs and on randomized
+//! (workload, mapping) pairs covering ragged tiles, repartitioned ranks,
+//! per-tensor retention, and both parallelism modes.
+
+use looptree::einsum::{workloads, FusionSet, TensorId};
+use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
+use looptree::model::{Evaluator, Metrics};
+use looptree::util::prng::Prng;
+use looptree::validation::{design_points, Scale};
+
+/// Bitwise equality across every metric field.
+fn assert_bitwise_equal(a: &Metrics, b: &Metrics, tag: &str) {
+    assert_eq!(a.latency_cycles, b.latency_cycles, "{tag}: latency_cycles");
+    assert_eq!(a.compute_cycles, b.compute_cycles, "{tag}: compute_cycles");
+    assert_eq!(a.memory_cycles, b.memory_cycles, "{tag}: memory_cycles");
+    assert_eq!(
+        a.sequential_compute_cycles, b.sequential_compute_cycles,
+        "{tag}: sequential_compute_cycles"
+    );
+    assert_eq!(a.offchip_reads, b.offchip_reads, "{tag}: offchip_reads");
+    assert_eq!(a.offchip_writes, b.offchip_writes, "{tag}: offchip_writes");
+    assert_eq!(a.glb_reads, b.glb_reads, "{tag}: glb_reads");
+    assert_eq!(a.glb_writes, b.glb_writes, "{tag}: glb_writes");
+    assert_eq!(
+        a.noc_hop_words.to_bits(),
+        b.noc_hop_words.to_bits(),
+        "{tag}: noc_hop_words"
+    );
+    assert_eq!(a.per_tensor_offchip, b.per_tensor_offchip, "{tag}: per_tensor_offchip");
+    assert_eq!(a.occupancy_peak, b.occupancy_peak, "{tag}: occupancy_peak");
+    assert_eq!(
+        a.per_tensor_occupancy, b.per_tensor_occupancy,
+        "{tag}: per_tensor_occupancy"
+    );
+    assert_eq!(a.capacity_ok, b.capacity_ok, "{tag}: capacity_ok");
+    assert_eq!(a.total_ops, b.total_ops, "{tag}: total_ops");
+    assert_eq!(a.recompute_ops, b.recompute_ops, "{tag}: recompute_ops");
+    assert_eq!(
+        a.per_tensor_recompute, b.per_tensor_recompute,
+        "{tag}: per_tensor_recompute"
+    );
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    for (field, x, y) in [
+        ("dram_pj", a.energy.dram_pj, b.energy.dram_pj),
+        ("glb_pj", a.energy.glb_pj, b.energy.glb_pj),
+        ("rf_pj", a.energy.rf_pj, b.energy.rf_pj),
+        ("compute_pj", a.energy.compute_pj, b.energy.compute_pj),
+        ("noc_pj", a.energy.noc_pj, b.energy.noc_pj),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: energy.{field}");
+    }
+}
+
+fn check_both_paths(ev: &Evaluator, mapping: &InterLayerMapping, tag: &str) {
+    let fast = ev
+        .evaluate(mapping)
+        .unwrap_or_else(|e| panic!("{tag}: fast path: {e}"));
+    let reference = ev
+        .evaluate_reference(mapping)
+        .unwrap_or_else(|e| panic!("{tag}: reference: {e}"));
+    assert_bitwise_equal(&fast, &reference, tag);
+}
+
+/// The five validation designs (DepFin, Fused-layer CNN, ISAAC, PipeLayer,
+/// FLAT) through both paths — the acceptance gate of the fast path.
+#[test]
+fn five_validation_designs_identical_through_both_paths() {
+    for point in design_points(Scale::Test) {
+        // As the validation drivers run them (unbounded GLB) …
+        let ev = Evaluator::new(&point.fs, &point.arch.unbounded_glb())
+            .unwrap_or_else(|e| panic!("{}: {e}", point.design));
+        check_both_paths(&ev, &point.mapping, point.design);
+        // … and with the real capacity bound (capacity_ok included).
+        let ev = Evaluator::new(&point.fs, &point.arch).unwrap();
+        check_both_paths(&ev, &point.mapping, &format!("{} (bounded)", point.design));
+    }
+}
+
+/// Long row-tiled walks — the configuration the fast path exists for; the
+/// steady run must jump hundreds of iterations while staying exact, and
+/// `iterations` must still report the logical walk length.
+#[test]
+fn long_row_tiled_walks_are_exact() {
+    let arch = looptree::arch::Arch::generic(1 << 14);
+    for (rows, ch, tile) in [(56, 8, 1), (56, 8, 4), (49, 4, 3), (40, 4, 7)] {
+        let fs = workloads::conv_conv(rows, ch);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let p2 = fs.last().rank_index("P2").unwrap();
+        for par in [Parallelism::Sequential, Parallelism::Pipeline] {
+            let mapping =
+                InterLayerMapping::tiled(vec![Partition { dim: p2, tile }], par);
+            let tag = format!("conv_conv({rows},{ch}) tile {tile} {par:?}");
+            check_both_paths(&ev, &mapping, &tag);
+            let m = ev.evaluate(&mapping).unwrap();
+            assert_eq!(
+                m.iterations,
+                mapping.total_iterations(&fs),
+                "{tag}: iterations must report the logical walk length"
+            );
+        }
+    }
+}
+
+fn divisors(n: i64) -> Vec<i64> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// A randomized mapping: 0–3 partition levels with ragged tiles, optional
+/// hierarchical re-partitioning of one rank (exact outer division, as the
+/// window algebra requires), per-tensor retention, both parallelisms.
+fn random_mapping(fs: &FusionSet, rng: &mut Prng) -> InterLayerMapping {
+    let last = fs.last();
+    let mut partitions: Vec<Partition> = Vec::new();
+    let mut dims: Vec<usize> = (0..last.ndim()).collect();
+    rng.shuffle(&mut dims);
+    for &dim in dims.iter().take(rng.index(4)) {
+        let extent = last.rank_sizes[dim];
+        if extent < 2 {
+            continue;
+        }
+        let tile = rng.range_i64(1, extent); // ragged tiles common
+        partitions.push(Partition { dim, tile });
+    }
+    // Occasionally re-partition the first partitioned rank hierarchically.
+    if !partitions.is_empty() && rng.chance(0.3) {
+        let outer = partitions[0].dim;
+        let extent = last.rank_sizes[outer];
+        let divs = divisors(extent);
+        let t1 = divs[rng.index(divs.len())];
+        if t1 >= 2 {
+            partitions[0].tile = t1;
+            let t2 = 1 + rng.range_i64(0, t1);
+            partitions.push(Partition { dim: outer, tile: t2 });
+        }
+    }
+    let parallelism = if rng.chance(0.5) {
+        Parallelism::Sequential
+    } else {
+        Parallelism::Pipeline
+    };
+    let k = partitions.len();
+    let mut m = InterLayerMapping::tiled(partitions, parallelism);
+    for x in 0..fs.tensors.len() {
+        if rng.chance(0.5) {
+            m = m.with_retention(TensorId(x), rng.index(k + 1));
+        }
+    }
+    m
+}
+
+#[test]
+fn randomized_mappings_identical_through_both_paths() {
+    let mut rng = Prng::new(0xFA57_0A7);
+    let arch = looptree::arch::Arch::generic(256);
+    for case in 0..30 {
+        let fs = match rng.index(4) {
+            0 => workloads::conv_conv(8 + rng.range_i64(0, 16), 2 + rng.range_i64(0, 6)),
+            1 => workloads::pwise_dwise_pwise(6 + rng.range_i64(0, 10), 2 + rng.range_i64(0, 3)),
+            2 => workloads::fc_fc(8 + rng.range_i64(0, 24), 4 + rng.range_i64(0, 12)),
+            _ => workloads::self_attention(1, 2, 8 + rng.range_i64(0, 12), 4),
+        };
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        for sub in 0..6 {
+            let mapping = random_mapping(&fs, &mut rng);
+            if mapping.total_iterations(&fs) > 30_000 {
+                continue;
+            }
+            check_both_paths(&ev, &mapping, &format!("case {case}.{sub} ({})", fs.name));
+        }
+    }
+}

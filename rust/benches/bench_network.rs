@@ -1,0 +1,90 @@
+//! Network-level partitioning benchmark: DP over fused-segment cut sets
+//! with memoized per-segment mapspace searches, on the built-in whole-DNN
+//! chains. The headline numbers are the end-to-end partition time and the
+//! memoization leverage (distinct shapes searched vs candidate segments).
+//!
+//! Emits `BENCH_network.json`; `LOOPTREE_BENCH_SMOKE=1` shrinks the
+//! per-segment search budgets for CI.
+
+use looptree::arch::Arch;
+use looptree::coordinator::Coordinator;
+use looptree::mapspace::MapSpaceConfig;
+use looptree::network::{self, Network, NetworkSearchSpec};
+use looptree::search::SearchSpec;
+use looptree::util::bench::{bench, reps, smoke, write_bench_json};
+use looptree::util::json::Json;
+
+fn spec() -> NetworkSearchSpec {
+    NetworkSearchSpec {
+        max_segment_layers: if smoke() { 2 } else { 3 },
+        search: SearchSpec {
+            mapspace: MapSpaceConfig {
+                uniform_retention: true,
+                tile_sizes: if smoke() { vec![8] } else { vec![2, 8, 32] },
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    }
+}
+
+fn main() {
+    let arch = Arch::generic(256);
+    let pool = Coordinator::new(0);
+    let spec = spec();
+    let (warmup, iters) = reps(1, 5);
+
+    let nets: Vec<Network> = vec![
+        network::resnet18(),
+        network::mobilenet_v2(),
+        network::vgg16(),
+        network::bert_encoder(1, 12, 512, 64),
+    ];
+
+    let mut rows: Vec<Json> = Vec::new();
+    for net in &nets {
+        let result = network::search_network(net, &arch, &spec, &pool)
+            .expect("network search found no partition");
+        let t = bench(&format!("search_network({})", net.name), warmup, iters, || {
+            network::search_network(net, &arch, &spec, &pool).unwrap()
+        });
+        println!(
+            "{}  -> {} cuts, {}/{} segments searched, total {:.3e}",
+            t.report(),
+            result.cuts.len(),
+            result.distinct_searched,
+            result.candidate_segments,
+            result.total_score
+        );
+        rows.push(Json::Obj(
+            [
+                ("workload".to_string(), Json::Str(net.name.clone())),
+                ("mean_ns".to_string(), Json::Num(t.mean.as_nanos() as f64)),
+                ("layers".to_string(), Json::Num(net.num_layers() as f64)),
+                ("cuts".to_string(), Json::Num(result.cuts.len() as f64)),
+                (
+                    "candidate_segments".to_string(),
+                    Json::Num(result.candidate_segments as f64),
+                ),
+                (
+                    "distinct_searched".to_string(),
+                    Json::Num(result.distinct_searched as f64),
+                ),
+                ("total_score".to_string(), Json::Num(result.total_score)),
+                (
+                    "total_offchip_elems".to_string(),
+                    Json::Num(result.total_offchip() as f64),
+                ),
+                ("all_fit".to_string(), Json::Bool(result.all_fit())),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+    }
+
+    let report = Json::Obj([("rows".to_string(), Json::Arr(rows))].into_iter().collect());
+    match write_bench_json("BENCH_network.json", &report) {
+        Ok(()) => println!("wrote BENCH_network.json"),
+        Err(e) => eprintln!("failed to write BENCH_network.json: {e}"),
+    }
+}

@@ -47,6 +47,11 @@
 //!   comparator (paper §V methodology).
 //! * [`mapspace`] / [`search`] — mapping enumeration, Pareto fronts, and the
 //!   unified [`search::run`] entry point.
+//! * [`network`] — whole-DNN chains (ResNet-18, MobileNetV2, VGG-16, a BERT
+//!   encoder block) and the fused-segment partitioner:
+//!   [`network::search_network`] memoizes per-segment mapspace searches over
+//!   distinct segment shapes and picks the optimal cut set by dynamic
+//!   programming.
 //! * [`coordinator`] — parallel DSE job execution (lock-free result merge).
 //! * [`spec`] — the serializable JSON spec/query layer.
 //! * `runtime` *(feature `pjrt`)* — PJRT execution of AOT-compiled
@@ -62,6 +67,7 @@ pub mod casestudies;
 pub mod coordinator;
 pub mod mapspace;
 pub mod model;
+pub mod network;
 pub mod search;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

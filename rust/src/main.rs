@@ -5,6 +5,7 @@
 //!   casestudy  <fig14|fig15|fig16|fig17|fig18> [--full]
 //!   analyze    --config <file.json> | --workload <spec> --schedule <R,R,..> --tiles <n,n,..> [...]
 //!   search     --config <file.json> | --workload <spec> [--algorithm ..] [--objective ..] [--seed n]
+//!   network    --config <file.json> | --network <name> [--max-seg n] [--cuts 2,4,..]
 //!   experiments [--full]                    regenerate everything (EXPERIMENTS.md data)
 //!   speed                                   model-vs-simulator throughput
 //!
@@ -20,9 +21,10 @@ use looptree::casestudies as cs;
 use looptree::coordinator::Coordinator;
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
 use looptree::model::Evaluator;
+use looptree::network::{self, NetworkSearchResult, NetworkSearchSpec};
 use looptree::search::{self, Algorithm, Objective, SearchSpec};
 use looptree::sim::simulate;
-use looptree::spec::{parse_workload, AnalyzeConfig, SearchConfig};
+use looptree::spec::{parse_network, parse_workload, AnalyzeConfig, NetworkConfig, SearchConfig};
 use looptree::util::json::Json;
 use looptree::util::table::fmt_count;
 use looptree::validation::{self, Scale};
@@ -50,6 +52,7 @@ fn run(args: &[String]) -> i32 {
         Some("casestudy") => cmd_casestudy(args),
         Some("analyze") => cmd_analyze(args),
         Some("search") => cmd_search(args),
+        Some("network") => cmd_network(args),
         Some("experiments") => cmd_experiments(args),
         Some("speed") => cmd_speed(args),
         _ => {
@@ -58,7 +61,8 @@ fn run(args: &[String]) -> i32 {
                  usage:\n  looptree validate [--design depfin|fused-cnn|isaac|pipelayer|flat] [--full] [--json]\n  \
                  looptree casestudy <fig14|fig15|fig16|fig17|fig18> [--full]\n  \
                  looptree analyze --config cfg.json [--json] | --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim]\n  \
-                 looptree search --config cfg.json [--json] | --workload conv_conv:28x64 [--algorithm exhaustive|random|annealing|genetic] [--objective latency|energy|edp|capacity|feasible-edp] [--seed n]\n  \
+                 looptree search --config cfg.json [--json] | --workload conv_conv:28x64 [--algorithm exhaustive|random|annealing|genetic] [--objective latency|energy|edp|capacity|offchip|feasible-edp] [--seed n]\n  \
+                 looptree network --config cfg.json [--json] | --network resnet18|mobilenetv2|vgg16|bert[:B,H,T,E] [--max-seg n] [--cuts 2,4,..] [--algorithm ..] [--objective ..] [--seed n] [--glb-kib n]\n  \
                  looptree experiments [--full]\n  \
                  looptree speed"
             );
@@ -359,6 +363,165 @@ fn cmd_search(args: &[String]) -> i32 {
         }
         None => {
             eprintln!("search produced no feasible mapping");
+            1
+        }
+    }
+}
+
+/// Build a network-partitioning request from either `--config` or flags.
+fn network_config(args: &[String]) -> Result<NetworkConfig, String> {
+    let mut cfg = if let Some(path) = opt(args, "--config") {
+        NetworkConfig::from_json(&read_config(path)?)?
+    } else {
+        let name = opt(args, "--network").ok_or("--network or --config required")?;
+        NetworkConfig {
+            network: parse_network(name)?,
+            arch: Arch::generic(256),
+            segment_search: NetworkSearchSpec::default(),
+            cuts: None,
+        }
+    };
+    // Flag overrides apply on top of either source.
+    if let Some(g) = opt(args, "--glb-kib") {
+        let kib: i64 = g.parse().map_err(|e| format!("--glb-kib: {e}"))?;
+        cfg.arch = Arch::generic(kib);
+    }
+    if let Some(m) = opt(args, "--max-seg") {
+        cfg.segment_search.max_segment_layers =
+            m.parse().map_err(|e| format!("--max-seg: {e}"))?;
+    }
+    if let Some(a) = opt(args, "--algorithm") {
+        cfg.segment_search.search.algorithm = Algorithm::parse(a)?;
+    }
+    if let Some(o) = opt(args, "--objective") {
+        cfg.segment_search.search.objective = Objective::parse(o)?;
+    }
+    if let Some(s) = opt(args, "--seed") {
+        cfg.segment_search.search.seed = s.parse().map_err(|e| format!("--seed: {e}"))?;
+    }
+    if let Some(c) = opt(args, "--cuts") {
+        let cuts: Result<Vec<usize>, _> = c.split(',').map(|s| s.parse::<usize>()).collect();
+        cfg.cuts = Some(cuts.map_err(|e| format!("--cuts: {e}"))?);
+    }
+    Ok(cfg)
+}
+
+fn network_result_json(cfg: &NetworkConfig, r: &NetworkSearchResult) -> Json {
+    let segments = Json::Arr(
+        r.segments
+            .iter()
+            .map(|s| {
+                Json::Obj(
+                    [
+                        (
+                            "range".to_string(),
+                            Json::Arr(vec![
+                                Json::Num(s.lo as f64),
+                                Json::Num(s.hi as f64),
+                            ]),
+                        ),
+                        ("span".to_string(), Json::Str(s.span.clone())),
+                        ("mapping".to_string(), s.best.mapping.to_json()),
+                        ("score".to_string(), Json::Num(s.best.score)),
+                        ("metrics".to_string(), s.best.metrics.to_json()),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect(),
+    );
+    let result = Json::Obj(
+        [
+            (
+                "cuts".to_string(),
+                Json::Arr(r.cuts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            ("segments".to_string(), segments),
+            ("total_score".to_string(), Json::Num(r.total_score)),
+            ("total_latency_cycles".to_string(), Json::Num(r.total_latency() as f64)),
+            ("total_energy_pj".to_string(), Json::Num(r.total_energy_pj())),
+            ("total_offchip_elems".to_string(), Json::Num(r.total_offchip() as f64)),
+            ("all_fit".to_string(), Json::Bool(r.all_fit())),
+            (
+                "distinct_searched".to_string(),
+                Json::Num(r.distinct_searched as f64),
+            ),
+            (
+                "candidate_segments".to_string(),
+                Json::Num(r.candidate_segments as f64),
+            ),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    let mut doc = cfg.to_json();
+    if let Json::Obj(o) = &mut doc {
+        o.insert("result".into(), result);
+    }
+    doc
+}
+
+fn cmd_network(args: &[String]) -> i32 {
+    let cfg = match network_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let pool = Coordinator::new(0);
+    let run = match &cfg.cuts {
+        Some(cuts) => {
+            network::evaluate_partition(&cfg.network, &cfg.arch, &cfg.segment_search, cuts, &pool)
+        }
+        None => network::search_network(&cfg.network, &cfg.arch, &cfg.segment_search, &pool),
+    };
+    match run {
+        Ok(r) => {
+            if flag(args, "--json") {
+                println!("{}", network_result_json(&cfg, &r).pretty());
+                return 0;
+            }
+            let net = &cfg.network;
+            println!(
+                "{}: {} layers, {} candidate segments, {} distinct shapes searched",
+                net.name,
+                net.num_layers(),
+                r.candidate_segments,
+                r.distinct_searched
+            );
+            println!("cuts: {:?}", r.cuts);
+            let mut table = looptree::util::table::Table::new(&[
+                "segment", "layers", "schedule", "score", "latency", "offchip", "fits",
+            ]);
+            for s in &r.segments {
+                let fs = net
+                    .segment_fusion_set(s.lo, s.hi)
+                    .expect("chosen segment must be buildable");
+                table.row(&[
+                    format!("[{}..{})", s.lo, s.hi),
+                    s.span.clone(),
+                    s.best.mapping.schedule_string(&fs),
+                    format!("{:.3e}", s.best.score),
+                    fmt_count(s.best.metrics.latency_cycles),
+                    fmt_count(s.best.metrics.offchip_total()),
+                    s.best.metrics.capacity_ok.to_string(),
+                ]);
+            }
+            println!("{}", table.render());
+            println!(
+                "total: score {:.4e}, latency {} cyc, energy {:.1} uJ, offchip {} elems, fits: {}",
+                r.total_score,
+                fmt_count(r.total_latency()),
+                r.total_energy_pj() / 1e6,
+                fmt_count(r.total_offchip()),
+                r.all_fit()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("network search failed: {e}");
             1
         }
     }

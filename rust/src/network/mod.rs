@@ -1,0 +1,470 @@
+//! Whole-network workloads and fused-segment partitioning.
+//!
+//! LoopTree's case studies (paper §VI) evaluate one fusion set at a time,
+//! but the decision the paper motivates — *which* layers to fuse, and where
+//! to cut — is a network-level question (DNNFuser frames layer fusion as a
+//! network-level mapping problem; CMDS shows cross-layer choices interact
+//! across cuts). This module represents a whole DNN as a **chain of layer
+//! specs** ([`Network`]), materializes any contiguous run of layers as a
+//! [`FusionSet`] segment (via the existing [`FusionSetBuilder`]), and —
+//! in [`search_network`] — searches the mapspace of every candidate segment
+//! and picks the optimal cut set by dynamic programming.
+//!
+//! ## Shape conventions
+//!
+//! Each [`LayerSpec`] carries the fmap shape its layer consumes *in the
+//! original padded network* (e.g. `[64, 58, 58]` for a 3×3/pad-1 conv on a
+//! 56×56 fmap — the repo-wide halo convention of `einsum::workloads`).
+//! When a segment is cut at layer `lo`, the [`FusionSetBuilder`] starts
+//! from `layers[lo].input_shape` and propagates shapes through the
+//! remaining ops with *valid-convolution* semantics: fused interior layers
+//! see the un-padded shrunk fmap of their producer, exactly as the fused
+//! pyramid of the paper's Fig 1 (and of `workloads::conv_conv`) does. A
+//! single-block segment of [`resnet18`] therefore builds the *identical*
+//! Einsums as `workloads::resnet18_block` — the per-block and network-level
+//! views agree bit for bit.
+//!
+//! Consecutive layers must agree on every non-spatial dimension; spatial
+//! dims may be re-declared across a cut (that is where the padding halo
+//! returns). A boundary whose shapes are only reshape-compatible (equal
+//! element count, different arity — e.g. BERT's `[B,H,T,E] → [B·T, H·E]`
+//! attention→FFN boundary) is a **mandatory cut**: no fused segment can
+//! span it, and the partitioner never proposes one.
+
+mod partition;
+
+pub use partition::{
+    evaluate_partition, search_network, NetworkSearchResult, NetworkSearchSpec, SegmentChoice,
+};
+
+use crate::einsum::{FusionSet, FusionSetBuilder};
+
+/// One layer's operator, mirroring the [`FusionSetBuilder`] vocabulary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerOp {
+    /// 2D convolution (`[C,H,W] → [M,P,Q]`), valid padding.
+    Conv2d { out_channels: i64, r: i64, s: i64, stride: i64 },
+    /// 1×1 convolution (`[C,H,W] → [M,H,W]`).
+    Pointwise { out_channels: i64 },
+    /// Depthwise convolution (`[C,H,W] → [C,P,Q]`).
+    Depthwise { r: i64, s: i64, stride: i64 },
+    /// Max pooling (`[C,H,W] → [C,P,Q]`).
+    MaxPool { k: i64, stride: i64 },
+    /// Fully connected (`[M,D] → [M,E]`).
+    Fc { out_features: i64 },
+    /// Attention score matmul (`[B,H,M,E] → [B,H,M,N]`, `N = seq`).
+    AttentionScores { seq: i64 },
+    /// Attention value matmul (`[B,H,M,N] → [B,H,M,E]`, `E = emb`).
+    AttentionValues { emb: i64 },
+}
+
+impl LayerOp {
+    /// Stable wire name (the JSON spec layer uses these).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerOp::Conv2d { .. } => "conv2d",
+            LayerOp::Pointwise { .. } => "pointwise",
+            LayerOp::Depthwise { .. } => "depthwise",
+            LayerOp::MaxPool { .. } => "maxpool",
+            LayerOp::Fc { .. } => "fc",
+            LayerOp::AttentionScores { .. } => "attention_scores",
+            LayerOp::AttentionValues { .. } => "attention_values",
+        }
+    }
+
+    /// Canonical parameter string, e.g. `conv2d(64,3,3,2)` — the unit of the
+    /// segment [`Network::segment_signature`] memoization key.
+    pub fn signature(&self) -> String {
+        match self {
+            LayerOp::Conv2d { out_channels, r, s, stride } => {
+                format!("conv2d({out_channels},{r},{s},{stride})")
+            }
+            LayerOp::Pointwise { out_channels } => format!("pointwise({out_channels})"),
+            LayerOp::Depthwise { r, s, stride } => format!("depthwise({r},{s},{stride})"),
+            LayerOp::MaxPool { k, stride } => format!("maxpool({k},{stride})"),
+            LayerOp::Fc { out_features } => format!("fc({out_features})"),
+            LayerOp::AttentionScores { seq } => format!("attention_scores({seq})"),
+            LayerOp::AttentionValues { emb } => format!("attention_values({emb})"),
+        }
+    }
+
+    /// The fmap shape this op produces from `input`, with valid-convolution
+    /// semantics (mirrors the [`FusionSetBuilder`] math exactly, but returns
+    /// an error where the builder would panic — arity mismatch or an empty
+    /// output).
+    pub fn output_shape(&self, input: &[i64]) -> Result<Vec<i64>, String> {
+        // All op parameters must be positive, or the builder's fusion-set
+        // validation would panic downstream.
+        let params = match self {
+            LayerOp::Conv2d { out_channels, r, s, stride } => vec![*out_channels, *r, *s, *stride],
+            LayerOp::Pointwise { out_channels } => vec![*out_channels],
+            LayerOp::Depthwise { r, s, stride } => vec![*r, *s, *stride],
+            LayerOp::MaxPool { k, stride } => vec![*k, *stride],
+            LayerOp::Fc { out_features } => vec![*out_features],
+            LayerOp::AttentionScores { seq } => vec![*seq],
+            LayerOp::AttentionValues { emb } => vec![*emb],
+        };
+        if params.iter().any(|&p| p < 1) {
+            return Err(format!("{}: all op parameters must be >= 1", self.signature()));
+        }
+        let spatial = |h: i64, w: i64, r: i64, s: i64, stride: i64| -> Result<(i64, i64), String> {
+            let p = (h - r) / stride + 1;
+            let q = (w - s) / stride + 1;
+            if h < r || w < s || p < 1 || q < 1 {
+                return Err(format!(
+                    "{}: window {r}x{s} does not fit input {h}x{w}",
+                    self.signature()
+                ));
+            }
+            Ok((p, q))
+        };
+        match (self, input) {
+            (LayerOp::Conv2d { out_channels, r, s, stride }, [_, h, w]) => {
+                let (p, q) = spatial(*h, *w, *r, *s, *stride)?;
+                Ok(vec![*out_channels, p, q])
+            }
+            (LayerOp::Pointwise { out_channels }, [_, h, w]) => Ok(vec![*out_channels, *h, *w]),
+            (LayerOp::Depthwise { r, s, stride }, [c, h, w]) => {
+                let (p, q) = spatial(*h, *w, *r, *s, *stride)?;
+                Ok(vec![*c, p, q])
+            }
+            (LayerOp::MaxPool { k, stride }, [c, h, w]) => {
+                let (p, q) = spatial(*h, *w, *k, *k, *stride)?;
+                Ok(vec![*c, p, q])
+            }
+            (LayerOp::Fc { out_features }, [m, _]) => Ok(vec![*m, *out_features]),
+            (LayerOp::AttentionScores { seq }, [b, hd, m, _]) => Ok(vec![*b, *hd, *m, *seq]),
+            (LayerOp::AttentionValues { emb }, [b, hd, m, _]) => Ok(vec![*b, *hd, *m, *emb]),
+            _ => Err(format!(
+                "{}: input shape {:?} has the wrong arity",
+                self.signature(),
+                input
+            )),
+        }
+    }
+
+    /// Append this op to a builder (the shapes must already have been
+    /// checked with [`LayerOp::output_shape`]; the builder panics on
+    /// mismatches).
+    fn apply(&self, b: &mut FusionSetBuilder) {
+        match *self {
+            LayerOp::Conv2d { out_channels, r, s, stride } => {
+                b.conv2d(out_channels, r, s, stride);
+            }
+            LayerOp::Pointwise { out_channels } => {
+                b.pointwise(out_channels);
+            }
+            LayerOp::Depthwise { r, s, stride } => {
+                b.depthwise(r, s, stride);
+            }
+            LayerOp::MaxPool { k, stride } => {
+                b.maxpool(k, stride);
+            }
+            LayerOp::Fc { out_features } => {
+                b.fc(out_features);
+            }
+            LayerOp::AttentionScores { seq } => {
+                b.attention_scores(seq);
+            }
+            LayerOp::AttentionValues { emb } => {
+                b.attention_values(emb);
+            }
+        }
+    }
+}
+
+/// One layer of a [`Network`]: a display name, the fmap shape it consumes in
+/// the original (padded) network, and its operator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub name: String,
+    pub input_shape: Vec<i64>,
+    pub op: LayerOp,
+}
+
+/// A whole DNN as a chain of layers (the fused-segment partitioner's input).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Network {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Check structural invariants:
+    /// * every op applies to its declared input shape,
+    /// * consecutive layers agree on all non-spatial dims (spatial dims may
+    ///   be re-declared across a layer boundary — the padding halo), and
+    ///   arity changes are element-count-preserving reshapes.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err(format!("network {} has no layers", self.name));
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.input_shape.iter().any(|&d| d <= 0) {
+                return Err(format!("{}: non-positive input dim", l.name));
+            }
+            let out = l
+                .op
+                .output_shape(&l.input_shape)
+                .map_err(|e| format!("{}: {e}", l.name))?;
+            if let Some(next) = self.layers.get(i + 1) {
+                let nin = &next.input_shape;
+                if nin.len() == out.len() {
+                    // Same arity: non-spatial dims must match; the trailing
+                    // two (spatial) dims of 3D fmaps may carry a halo.
+                    let fixed = if out.len() == 3 { 1 } else { out.len() };
+                    if out[..fixed] != nin[..fixed] {
+                        return Err(format!(
+                            "{} -> {}: shape mismatch {:?} vs {:?}",
+                            l.name, next.name, out, nin
+                        ));
+                    }
+                } else {
+                    // Arity change: a reshape boundary — sizes must agree.
+                    let a: i64 = out.iter().product();
+                    let b: i64 = nin.iter().product();
+                    if a != b {
+                        return Err(format!(
+                            "{} -> {}: reshape {:?} -> {:?} changes element count",
+                            l.name, next.name, out, nin
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether layers `lo..hi` can be fused into one segment: shapes must
+    /// propagate through the builder without error. A reshape boundary
+    /// (arity change) inside the range makes it unbuildable, forcing a cut.
+    pub fn segment_buildable(&self, lo: usize, hi: usize) -> bool {
+        self.propagate(lo, hi).is_ok()
+    }
+
+    /// Shape propagation for a candidate segment, with valid-convolution
+    /// semantics starting from `layers[lo].input_shape`.
+    fn propagate(&self, lo: usize, hi: usize) -> Result<Vec<i64>, String> {
+        if lo >= hi || hi > self.layers.len() {
+            return Err(format!("segment [{lo}..{hi}) out of range"));
+        }
+        let mut shape = self.layers[lo].input_shape.clone();
+        for l in &self.layers[lo..hi] {
+            shape = l.op.output_shape(&shape)?;
+        }
+        Ok(shape)
+    }
+
+    /// Materialize layers `lo..hi` as a [`FusionSet`].
+    pub fn segment_fusion_set(&self, lo: usize, hi: usize) -> Result<FusionSet, String> {
+        self.propagate(lo, hi)
+            .map_err(|e| format!("{}[{lo}..{hi}): {e}", self.name))?;
+        let mut b = FusionSetBuilder::new(
+            &format!("{}[{lo}..{hi})", self.name),
+            &self.layers[lo].input_shape,
+        );
+        for l in &self.layers[lo..hi] {
+            l.op.apply(&mut b);
+        }
+        Ok(b.build())
+    }
+
+    /// Memoization key for the segment `lo..hi`: two segments with equal
+    /// signatures build identical Einsums (up to the fusion-set name, which
+    /// carries no model semantics), so their mapspace searches return
+    /// identical results and are run once. Repeated blocks — e.g. the
+    /// identical stage-2 basic blocks of ResNet — collapse this way.
+    pub fn segment_signature(&self, lo: usize, hi: usize) -> String {
+        let ops: Vec<String> = self.layers[lo..hi].iter().map(|l| l.op.signature()).collect();
+        format!("{:?}|{}", self.layers[lo].input_shape, ops.join("+"))
+    }
+
+    /// Human-readable span, e.g. `conv2_1a..conv2_1b`.
+    pub fn span_name(&self, lo: usize, hi: usize) -> String {
+        if hi == lo + 1 {
+            self.layers[lo].name.clone()
+        } else {
+            format!("{}..{}", self.layers[lo].name, self.layers[hi - 1].name)
+        }
+    }
+}
+
+// ------------------------------------------------------------- presets --
+
+/// Push one ResNet basic block (two 3×3/pad-1 convs) on a `w`×`w`, `c`-channel
+/// fmap. A single-block segment builds exactly `workloads::conv_conv(w, c)`.
+fn basic_block(layers: &mut Vec<LayerSpec>, stage: &str, block: usize, w: i64, c: i64) {
+    for half in ["a", "b"] {
+        layers.push(LayerSpec {
+            name: format!("{stage}_{n}{half}", n = block + 1),
+            input_shape: vec![c, w + 2, w + 2],
+            op: LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
+        });
+    }
+}
+
+/// Full ResNet-18 main path (He et al. [34]): 7×7/2 stem, 3×3/2 max pool,
+/// four stages of two basic blocks each (stage transitions downsample with a
+/// stride-2 first conv and double the channels). Residual adds and the final
+/// classifier head are not part of the fused-dataflow chain.
+pub fn resnet18() -> Network {
+    let mut layers = vec![
+        LayerSpec {
+            name: "conv1".into(),
+            input_shape: vec![3, 230, 230], // 224 + 2·3 halo, 7×7/2 -> 112
+            op: LayerOp::Conv2d { out_channels: 64, r: 7, s: 7, stride: 2 },
+        },
+        LayerSpec {
+            name: "pool1".into(),
+            input_shape: vec![64, 114, 114], // 112 + 2·1 halo, 3×3/2 -> 56
+            op: LayerOp::MaxPool { k: 3, stride: 2 },
+        },
+    ];
+    // Stage 2: two identical blocks at 56×56×64.
+    for b in 0..2 {
+        basic_block(&mut layers, "conv2", b, 56, 64);
+    }
+    // Stages 3–5: a stride-2, channel-doubling transition block, then an
+    // identity-shaped block.
+    for (stage, &(w, c)) in [(28i64, 128i64), (14, 256), (7, 512)].iter().enumerate() {
+        let stage_name = format!("conv{}", stage + 3);
+        layers.push(LayerSpec {
+            name: format!("{stage_name}_1a"),
+            input_shape: vec![c / 2, 2 * w + 2, 2 * w + 2],
+            op: LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 2 },
+        });
+        layers.push(LayerSpec {
+            name: format!("{stage_name}_1b"),
+            input_shape: vec![c, w + 2, w + 2],
+            op: LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
+        });
+        basic_block(&mut layers, &stage_name, 1, w, c);
+    }
+    Network { name: "resnet18".into(), layers }
+}
+
+/// Full MobileNetV2 main path (Sandler et al. [1]): 3×3/2 stem, seventeen
+/// inverted-residual blocks per the paper's (t, c, n, s) table, and the
+/// final 1×1 expansion conv. Each block is `pwise(t·c_in) → dwise(3×3/s) →
+/// pwise(c_out)`; the t = 1 first block has no expansion pointwise.
+pub fn mobilenet_v2() -> Network {
+    // (expansion t, output channels c, repeats n, first-block stride s) —
+    // the MobileNetV2 paper's Table 2, at 224×224 input.
+    const BLOCKS: [(i64, i64, usize, i64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut layers = vec![LayerSpec {
+        name: "conv0".into(),
+        input_shape: vec![3, 226, 226], // 224 + 2·1 halo, 3×3/2 -> 112
+        op: LayerOp::Conv2d { out_channels: 32, r: 3, s: 3, stride: 2 },
+    }];
+    let mut c_in = 32i64;
+    let mut w = 112i64; // fmap width entering the next block
+    let mut idx = 0usize;
+    for &(t, c_out, n, s) in &BLOCKS {
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            idx += 1;
+            let expanded = t * c_in;
+            if t > 1 {
+                layers.push(LayerSpec {
+                    name: format!("block{idx}_expand"),
+                    input_shape: vec![c_in, w, w],
+                    op: LayerOp::Pointwise { out_channels: expanded },
+                });
+            }
+            layers.push(LayerSpec {
+                name: format!("block{idx}_dwise"),
+                input_shape: vec![expanded, w + 2, w + 2], // 3×3/pad-1 halo
+                op: LayerOp::Depthwise { r: 3, s: 3, stride },
+            });
+            w = (w + 2 - 3) / stride + 1;
+            layers.push(LayerSpec {
+                name: format!("block{idx}_project"),
+                input_shape: vec![expanded, w, w],
+                op: LayerOp::Pointwise { out_channels: c_out },
+            });
+            c_in = c_out;
+        }
+    }
+    layers.push(LayerSpec {
+        name: "conv_last".into(),
+        input_shape: vec![c_in, w, w],
+        op: LayerOp::Pointwise { out_channels: 1280 },
+    });
+    Network { name: "mobilenetv2".into(), layers }
+}
+
+/// Full VGG-16 conv trunk (Simonyan & Zisserman [3]): thirteen 3×3/pad-1
+/// convs in five stages separated by 2×2/2 max pools. The classifier head is
+/// not part of the fused-dataflow chain.
+pub fn vgg16() -> Network {
+    const STAGES: [(i64, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut layers = Vec::new();
+    let mut c_in = 3i64;
+    let mut w = 224i64;
+    for (stage, &(c, n)) in STAGES.iter().enumerate() {
+        for rep in 0..n {
+            layers.push(LayerSpec {
+                name: format!("conv{}_{}", stage + 1, rep + 1),
+                input_shape: vec![c_in, w + 2, w + 2],
+                op: LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
+            });
+            c_in = c;
+        }
+        layers.push(LayerSpec {
+            name: format!("pool{}", stage + 1),
+            input_shape: vec![c, w, w],
+            op: LayerOp::MaxPool { k: 2, stride: 2 },
+        });
+        w /= 2;
+    }
+    Network { name: "vgg16".into(), layers }
+}
+
+/// One BERT encoder block (Devlin et al. [6]) from the existing attention
+/// and FC pieces: `QKᵀ` scores, score·V attend, then the two FFN matmuls.
+/// The attention→FFN boundary is a reshape (`[B,H,T,E] → [B·T, H·E]`), so
+/// it is a mandatory cut — the partitioner can fuse within the attention
+/// pair and within the FFN pair, but never across.
+pub fn bert_encoder(batch: i64, heads: i64, tokens: i64, emb: i64) -> Network {
+    let d_model = heads * emb;
+    Network {
+        name: format!("bert-encoder(b{batch},h{heads},t{tokens},e{emb})"),
+        layers: vec![
+            LayerSpec {
+                name: "scores".into(),
+                input_shape: vec![batch, heads, tokens, emb],
+                op: LayerOp::AttentionScores { seq: tokens },
+            },
+            LayerSpec {
+                name: "attend".into(),
+                input_shape: vec![batch, heads, tokens, tokens],
+                op: LayerOp::AttentionValues { emb },
+            },
+            LayerSpec {
+                name: "ffn1".into(),
+                input_shape: vec![batch * tokens, d_model],
+                op: LayerOp::Fc { out_features: 4 * d_model },
+            },
+            LayerSpec {
+                name: "ffn2".into(),
+                input_shape: vec![batch * tokens, 4 * d_model],
+                op: LayerOp::Fc { out_features: d_model },
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests;

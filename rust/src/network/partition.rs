@@ -1,0 +1,305 @@
+//! Fused-segment partitioning: per-segment mapspace search, memoized over
+//! distinct segment shapes, plus dynamic programming over cut points.
+//!
+//! A partition of an `n`-layer [`Network`] is a set of cut points
+//! `0 < c_1 < … < c_k < n` splitting the chain into contiguous fused
+//! segments. Each segment is materialized as a
+//! [`FusionSet`](crate::einsum::FusionSet) and searched with the ordinary
+//! [`search::run`] machinery (one [`Evaluator`] session per *distinct*
+//! segment shape — repeated blocks are searched once); the optimal cut set
+//! then minimizes the sum of per-segment scores by DP over the chain.
+//! Additive objectives (latency, energy, off-chip transfers) are exact; EDP
+//! is the standard per-segment-sum proxy for sequentially executed
+//! segments. Capacity-infeasible segments keep the
+//! [`INFEASIBLE_PENALTY`](crate::search::Objective::INFEASIBLE_PENALTY)
+//! from the inner search, so the DP prefers any feasible partition over an
+//! infeasible one — the "under a GLB budget" constraint.
+//!
+//! Distinct segments fan out over the [`Coordinator`]; each per-segment
+//! search runs serially inside its worker. Results are merged by segment
+//! index, so the outcome is bit-identical for any worker count.
+
+use crate::arch::Arch;
+use crate::coordinator::Coordinator;
+use crate::mapspace::MapSpaceConfig;
+use crate::model::Evaluator;
+use crate::search::{self, Scored, SearchSpec};
+use std::collections::{HashMap, HashSet};
+use super::Network;
+
+/// A complete, serializable network-search request: how long segments may
+/// get, and the per-segment mapspace search to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSearchSpec {
+    /// Longest fused segment considered (in layers). Bounds both the DP
+    /// fan-in and the cost of the deepest per-segment searches.
+    pub max_segment_layers: usize,
+    /// The mapspace search run on every candidate segment. Its objective is
+    /// also the DP's per-segment cost (summed across segments), and its
+    /// seed makes the whole network search deterministic. Schedules naming
+    /// ranks absent from a segment's last layer are dropped for that
+    /// segment (rank names vary with segment depth); an empty remainder
+    /// falls back to the auto-derived schedules.
+    pub search: SearchSpec,
+}
+
+impl Default for NetworkSearchSpec {
+    fn default() -> Self {
+        NetworkSearchSpec {
+            max_segment_layers: 3,
+            // Whole networks search hundreds of segments, so the default
+            // per-segment mapspace is deliberately coarse: uniform
+            // retention and a few tile sizes over the auto-derived
+            // schedules. Configs can override any of it.
+            search: SearchSpec {
+                mapspace: MapSpaceConfig {
+                    uniform_retention: true,
+                    tile_sizes: vec![2, 8, 32],
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        }
+    }
+}
+
+/// One chosen segment of the optimal partition, with its search result.
+#[derive(Debug, Clone)]
+pub struct SegmentChoice {
+    /// Layer range `[lo, hi)`.
+    pub lo: usize,
+    pub hi: usize,
+    /// Human-readable span (first..last layer names).
+    pub span: String,
+    /// Memoization key; segments with equal signatures share one search.
+    pub signature: String,
+    /// Best mapping found for this segment.
+    pub best: Scored,
+}
+
+/// Result of a network-level search: the optimal cut set and the per-segment
+/// best mappings.
+#[derive(Debug, Clone)]
+pub struct NetworkSearchResult {
+    /// Interior cut points (ascending, exclusive of 0 and n).
+    pub cuts: Vec<usize>,
+    /// The chosen segments, in chain order.
+    pub segments: Vec<SegmentChoice>,
+    /// Sum of per-segment best scores (the DP objective).
+    pub total_score: f64,
+    /// How many distinct segment shapes were actually searched.
+    pub distinct_searched: usize,
+    /// How many candidate segments the DP considered.
+    pub candidate_segments: usize,
+}
+
+impl NetworkSearchResult {
+    /// Total off-chip traffic across segments (elements).
+    pub fn total_offchip(&self) -> i64 {
+        self.segments.iter().map(|s| s.best.metrics.offchip_total()).sum()
+    }
+
+    /// Total latency across sequentially executed segments (cycles).
+    pub fn total_latency(&self) -> i64 {
+        self.segments.iter().map(|s| s.best.metrics.latency_cycles).sum()
+    }
+
+    /// Total energy across segments (pJ).
+    pub fn total_energy_pj(&self) -> f64 {
+        self.segments.iter().map(|s| s.best.metrics.energy.total_pj()).sum()
+    }
+
+    /// Whether every chosen segment fits the GLB budget.
+    pub fn all_fit(&self) -> bool {
+        self.segments.iter().all(|s| s.best.metrics.capacity_ok)
+    }
+}
+
+/// Drop schedules naming ranks the segment's last layer does not have
+/// (segment depth changes the rank-name suffix); an empty remainder falls
+/// back to the auto-derived schedules.
+fn mapspace_for_segment(base: &MapSpaceConfig, fs: &crate::einsum::FusionSet) -> MapSpaceConfig {
+    if base.schedules.is_empty() {
+        return base.clone();
+    }
+    let last = fs.last();
+    let schedules: Vec<Vec<String>> = base
+        .schedules
+        .iter()
+        .filter(|names| names.iter().all(|n| last.rank_index(n).is_some()))
+        .cloned()
+        .collect();
+    MapSpaceConfig { schedules, ..base.clone() }
+}
+
+/// Search every distinct signature among `segments` once, in parallel, and
+/// return the best `Scored` per signature. Segments whose search finds
+/// nothing (or whose specs fail validation) map to `None`.
+fn search_distinct(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    segments: &[(usize, usize)],
+    pool: &Coordinator,
+) -> Result<HashMap<String, Option<Scored>>, String> {
+    let mut order: Vec<(String, (usize, usize))> = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    for &(lo, hi) in segments {
+        let sig = net.segment_signature(lo, hi);
+        if seen.insert(sig.clone()) {
+            order.push((sig, (lo, hi)));
+        }
+    }
+    // One Evaluator session per distinct shape; the inner search is serial
+    // so the outer fan-out over distinct shapes owns all the parallelism.
+    let results: Vec<Result<Option<Scored>, String>> = pool.run(order.len(), |i| {
+        let (lo, hi) = order[i].1;
+        let fs = net.segment_fusion_set(lo, hi)?;
+        let ev = Evaluator::new(&fs, arch)?;
+        let seg_spec = SearchSpec {
+            mapspace: mapspace_for_segment(&spec.search.mapspace, &fs),
+            ..spec.search.clone()
+        };
+        let inner = Coordinator::new(1);
+        Ok(search::run(&ev, &seg_spec, &inner).map(|r| r.best))
+    });
+    let mut out = HashMap::new();
+    for ((sig, _), res) in order.into_iter().zip(results) {
+        out.insert(sig, res?);
+    }
+    Ok(out)
+}
+
+fn assemble(
+    net: &Network,
+    ranges: &[(usize, usize)],
+    costs: &HashMap<String, Option<Scored>>,
+    candidate_segments: usize,
+) -> Result<NetworkSearchResult, String> {
+    let mut segments = Vec::with_capacity(ranges.len());
+    for &(lo, hi) in ranges {
+        let sig = net.segment_signature(lo, hi);
+        let best = costs
+            .get(&sig)
+            .and_then(|o| o.clone())
+            .ok_or_else(|| format!("segment {} found no mapping", net.span_name(lo, hi)))?;
+        segments.push(SegmentChoice {
+            lo,
+            hi,
+            span: net.span_name(lo, hi),
+            signature: sig,
+            best,
+        });
+    }
+    let total_score = segments.iter().map(|s| s.best.score).sum();
+    Ok(NetworkSearchResult {
+        cuts: ranges.iter().skip(1).map(|&(lo, _)| lo).collect(),
+        segments,
+        total_score,
+        distinct_searched: costs.len(),
+        candidate_segments,
+    })
+}
+
+/// Find the optimal contiguous fused-segment partition of `net` under
+/// `spec`, minimizing the sum of per-segment best scores.
+///
+/// Deterministic given (network, architecture, spec) for any worker count.
+pub fn search_network(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    pool: &Coordinator,
+) -> Result<NetworkSearchResult, String> {
+    net.validate()?;
+    if spec.max_segment_layers == 0 {
+        return Err("max_segment_layers must be >= 1".into());
+    }
+    let n = net.num_layers();
+    // Candidate segments: every buildable [lo, hi) up to the length cap.
+    let mut candidates: Vec<(usize, usize)> = Vec::new();
+    for lo in 0..n {
+        for hi in (lo + 1)..=(lo + spec.max_segment_layers).min(n) {
+            if net.segment_buildable(lo, hi) {
+                candidates.push((lo, hi));
+            }
+        }
+    }
+    let costs = search_distinct(net, arch, spec, &candidates, pool)?;
+
+    // DP over prefix lengths: best[j] = min over candidate (lo, j) of
+    // best[lo] + cost(lo, j). Ties resolve to the smallest lo (longest
+    // final segment), making the cut set deterministic.
+    let mut best = vec![f64::INFINITY; n + 1];
+    let mut back: Vec<Option<usize>> = vec![None; n + 1];
+    best[0] = 0.0;
+    for &(lo, hi) in &candidates {
+        let Some(scored) = costs.get(&net.segment_signature(lo, hi)).and_then(|o| o.as_ref())
+        else {
+            continue; // segment search found nothing: unusable
+        };
+        let total = best[lo] + scored.score;
+        if total < best[hi] {
+            best[hi] = total;
+            back[hi] = Some(lo);
+        }
+    }
+    if best[n].is_infinite() {
+        return Err(format!(
+            "no feasible partition of {} (every covering segment's search came up empty)",
+            net.name
+        ));
+    }
+    // Reconstruct the chosen ranges.
+    let mut ranges = Vec::new();
+    let mut hi = n;
+    while hi > 0 {
+        let lo = back[hi].expect("DP backpointer chain broken");
+        ranges.push((lo, hi));
+        hi = lo;
+    }
+    ranges.reverse();
+    assemble(net, &ranges, &costs, candidates.len())
+}
+
+/// Score a *given* partition (cut points, ascending, interior) of `net`:
+/// the per-segment searches run exactly as in [`search_network`], but the
+/// cut set is fixed. Errors if a cut is out of range or a forced segment is
+/// unbuildable (e.g. the user failed to cut at a reshape boundary).
+pub fn evaluate_partition(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    cuts: &[usize],
+    pool: &Coordinator,
+) -> Result<NetworkSearchResult, String> {
+    net.validate()?;
+    let n = net.num_layers();
+    let mut bounds = Vec::with_capacity(cuts.len() + 2);
+    bounds.push(0);
+    for &c in cuts {
+        if c == 0 || c >= n {
+            return Err(format!("cut {c} out of range (0, {n})"));
+        }
+        if let Some(&prev) = bounds.last() {
+            if c <= prev {
+                return Err(format!("cuts must be strictly ascending (saw {c} after {prev})"));
+            }
+        }
+        bounds.push(c);
+    }
+    bounds.push(n);
+    let ranges: Vec<(usize, usize)> =
+        bounds.windows(2).map(|w| (w[0], w[1])).collect();
+    for &(lo, hi) in &ranges {
+        if !net.segment_buildable(lo, hi) {
+            return Err(format!(
+                "segment {} is not fusable (missing a mandatory cut?)",
+                net.span_name(lo, hi)
+            ));
+        }
+    }
+    let costs = search_distinct(net, arch, spec, &ranges, pool)?;
+    let nranges = ranges.len();
+    assemble(net, &ranges, &costs, nranges)
+}

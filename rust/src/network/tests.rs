@@ -1,0 +1,334 @@
+use super::*;
+use crate::arch::Arch;
+use crate::coordinator::Coordinator;
+use crate::einsum::workloads;
+use crate::mapspace::MapSpaceConfig;
+use crate::model::Evaluator;
+use crate::search::{self, Algorithm, SearchSpec};
+
+/// A small chain of `n` identical 3×3 convs on an 8-channel 18×18 fmap
+/// (declared with the pad-1 halo, like every conv preset).
+fn tiny_conv_chain(n: usize) -> Network {
+    Network {
+        name: format!("tiny{n}"),
+        layers: (0..n)
+            .map(|i| LayerSpec {
+                name: format!("conv{i}"),
+                input_shape: vec![8, 18, 18],
+                op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+            })
+            .collect(),
+    }
+}
+
+/// A cheap spec for the tiny chains: exhaustive over a pruned mapspace.
+fn tiny_spec(max_seg: usize) -> NetworkSearchSpec {
+    NetworkSearchSpec {
+        max_segment_layers: max_seg,
+        search: SearchSpec {
+            mapspace: MapSpaceConfig {
+                tile_sizes: vec![2, 4],
+                uniform_retention: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    }
+}
+
+#[test]
+fn presets_validate() {
+    for (net, layers) in [
+        (resnet18(), 18),
+        (mobilenet_v2(), 52),
+        (vgg16(), 18),
+        (bert_encoder(1, 2, 32, 16), 4),
+    ] {
+        assert_eq!(net.num_layers(), layers, "{}", net.name);
+        net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        // Every single layer must be materializable on its own.
+        for lo in 0..net.num_layers() {
+            net.segment_fusion_set(lo, lo + 1)
+                .unwrap_or_else(|e| panic!("{}[{lo}]: {e}", net.name));
+        }
+    }
+}
+
+#[test]
+fn resnet18_shapes_propagate_as_published() {
+    let net = resnet18();
+    assert_eq!(net.propagate(0, 1).unwrap(), vec![64, 112, 112]); // stem
+    assert_eq!(net.propagate(1, 2).unwrap(), vec![64, 56, 56]); // pool
+    assert_eq!(net.propagate(6, 7).unwrap(), vec![128, 28, 28]); // conv3 downsample
+    assert_eq!(net.propagate(10, 11).unwrap(), vec![256, 14, 14]); // conv4 downsample
+    assert_eq!(net.propagate(14, 15).unwrap(), vec![512, 7, 7]); // conv5 downsample
+}
+
+#[test]
+fn repeated_blocks_share_signatures() {
+    let net = resnet18();
+    // The two stage-2 basic blocks are identical segments...
+    assert_eq!(net.segment_signature(2, 4), net.segment_signature(4, 6));
+    // ...as are their constituent single layers.
+    assert_eq!(net.segment_signature(2, 3), net.segment_signature(5, 6));
+    // A downsampling block is not interchangeable with an identity block.
+    assert_ne!(net.segment_signature(6, 8), net.segment_signature(8, 10));
+}
+
+#[test]
+fn reshape_boundary_is_a_mandatory_cut() {
+    let net = bert_encoder(1, 2, 8, 4);
+    assert!(net.segment_buildable(0, 2)); // scores+attend fuse
+    assert!(net.segment_buildable(2, 4)); // ffn1+ffn2 fuse
+    assert!(!net.segment_buildable(1, 3)); // attention -> FFN reshape
+    assert!(!net.segment_buildable(0, 4));
+
+    let arch = Arch::generic(256);
+    let pool = Coordinator::new(2);
+    let res = search_network(&net, &arch, &tiny_spec(4), &pool).unwrap();
+    assert!(
+        res.cuts.contains(&2),
+        "partitioner must cut at the reshape boundary; got cuts {:?}",
+        res.cuts
+    );
+    // Missing the mandatory cut is a hard error when the cuts are forced.
+    assert!(evaluate_partition(&net, &arch, &tiny_spec(4), &[], &pool).is_err());
+}
+
+// The acceptance pin: DP over the ResNet-18 chain with cuts forced to the
+// existing per-block boundaries reproduces the per-block `Evaluator` search
+// results bit for bit (same best mapping, same metrics, same score bits).
+#[test]
+fn resnet_block_cuts_bit_match_per_block_search() {
+    let net = resnet18();
+    let arch = Arch::generic(128);
+    let pool = Coordinator::new(2);
+    let spec = NetworkSearchSpec {
+        max_segment_layers: 2,
+        search: SearchSpec {
+            mapspace: MapSpaceConfig {
+                schedules: vec![vec!["P2".into()], vec!["C2".into(), "P2".into()]],
+                tile_sizes: vec![4, 14],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    };
+    // Cut at every block boundary: stem | pool | 8 two-conv blocks.
+    let cuts = [1, 2, 4, 6, 8, 10, 12, 14, 16];
+    let res = evaluate_partition(&net, &arch, &spec, &cuts, &pool).unwrap();
+    assert_eq!(res.segments.len(), 10);
+    assert_eq!(res.cuts, cuts.to_vec());
+    // Identical stage-2 blocks were searched once.
+    assert!(res.distinct_searched < res.segments.len());
+
+    // The second block of each stage is exactly `workloads::resnet18_block`:
+    // (segment range, RESNET18_STAGES index).
+    for (range, stage) in [((4, 6), 1), ((8, 10), 2), ((12, 14), 3), ((16, 18), 4)] {
+        let seg = res
+            .segments
+            .iter()
+            .find(|s| (s.lo, s.hi) == range)
+            .unwrap_or_else(|| panic!("missing segment {range:?}"));
+        let block = workloads::resnet18_block(stage);
+        let seg_fs = net.segment_fusion_set(range.0, range.1).unwrap();
+        // The materialized segment builds the same Einsums...
+        assert_eq!(seg_fs.einsums.len(), block.einsums.len());
+        for (a, b) in seg_fs.einsums.iter().zip(&block.einsums) {
+            assert_eq!(a.rank_sizes, b.rank_sizes);
+            assert_eq!(a.rank_names, b.rank_names);
+        }
+        // ...and the per-block search returns the identical result.
+        let ev = Evaluator::new(&block, &arch).unwrap();
+        let direct = search::run(&ev, &spec.search, &Coordinator::new(1)).unwrap().best;
+        assert_eq!(seg.best.mapping, direct.mapping, "stage {stage} mapping");
+        assert_eq!(seg.best.score.to_bits(), direct.score.to_bits(), "stage {stage} score");
+        let (a, b) = (&seg.best.metrics, &direct.metrics);
+        assert_eq!(a.latency_cycles, b.latency_cycles);
+        assert_eq!(a.offchip_reads, b.offchip_reads);
+        assert_eq!(a.offchip_writes, b.offchip_writes);
+        assert_eq!(a.occupancy_peak, b.occupancy_peak);
+        assert_eq!(a.total_ops, b.total_ops);
+        assert_eq!(a.recompute_ops, b.recompute_ops);
+        assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+    }
+}
+
+#[test]
+fn dp_matches_bruteforce_on_small_chain() {
+    // Shrinking chain: four convs with exactly chained (halo-free) shapes,
+    // so every segment has a distinct signature.
+    let mut w = 18i64;
+    let layers = (0..4)
+        .map(|i| {
+            let l = LayerSpec {
+                name: format!("conv{i}"),
+                input_shape: vec![8, w, w],
+                op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+            };
+            w -= 2;
+            l
+        })
+        .collect();
+    let net = Network { name: "chain4".into(), layers };
+    net.validate().unwrap();
+
+    let arch = Arch::generic(16);
+    let pool = Coordinator::new(2);
+    let spec = tiny_spec(3);
+    let dp = search_network(&net, &arch, &spec, &pool).unwrap();
+
+    // Brute force every cut subset respecting the segment-length cap.
+    let mut best_total = f64::INFINITY;
+    for mask in 0u32..8 {
+        let cuts: Vec<usize> = (1..4).filter(|c| mask & (1 << (c - 1)) != 0).collect();
+        let mut bounds = vec![0];
+        bounds.extend(&cuts);
+        bounds.push(4);
+        if bounds.windows(2).any(|w| w[1] - w[0] > spec.max_segment_layers) {
+            continue;
+        }
+        let res = evaluate_partition(&net, &arch, &spec, &cuts, &pool).unwrap();
+        best_total = best_total.min(res.total_score);
+    }
+    assert_eq!(
+        dp.total_score.to_bits(),
+        best_total.to_bits(),
+        "DP total {} != brute-force optimum {best_total}",
+        dp.total_score
+    );
+    // The result's own accounting is consistent.
+    let seg_sum: f64 = dp.segments.iter().map(|s| s.best.score).sum();
+    assert_eq!(dp.total_score.to_bits(), seg_sum.to_bits());
+}
+
+#[test]
+fn network_search_deterministic_across_worker_counts() {
+    let net = tiny_conv_chain(5);
+    let arch = Arch::generic(32);
+    let spec = tiny_spec(2);
+    let a = search_network(&net, &arch, &spec, &Coordinator::new(1)).unwrap();
+    let b = search_network(&net, &arch, &spec, &Coordinator::new(4)).unwrap();
+    assert_eq!(a.cuts, b.cuts);
+    assert_eq!(a.total_score.to_bits(), b.total_score.to_bits());
+    assert_eq!(a.segments.len(), b.segments.len());
+    for (x, y) in a.segments.iter().zip(&b.segments) {
+        assert_eq!(x.best.mapping, y.best.mapping);
+        assert_eq!(x.best.score.to_bits(), y.best.score.to_bits());
+    }
+}
+
+#[test]
+fn identical_blocks_are_searched_once() {
+    let net = tiny_conv_chain(6);
+    let arch = Arch::generic(32);
+    let res = search_network(&net, &arch, &tiny_spec(2), &Coordinator::new(2)).unwrap();
+    // 6 single-layer + 5 two-layer candidates, but only two distinct shapes.
+    assert_eq!(res.candidate_segments, 11);
+    assert_eq!(res.distinct_searched, 2);
+    // Equal-signature segments carry the identical memoized search result.
+    for s in &res.segments {
+        for t in &res.segments {
+            if s.signature == t.signature {
+                assert_eq!(s.best.mapping, t.best.mapping);
+                assert_eq!(s.best.score.to_bits(), t.best.score.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn stochastic_segment_search_is_deterministic() {
+    let net = tiny_conv_chain(4);
+    let arch = Arch::generic(32);
+    let spec = NetworkSearchSpec {
+        max_segment_layers: 2,
+        search: SearchSpec {
+            algorithm: Algorithm::Annealing,
+            iters: 25,
+            seed: 11,
+            ..Default::default()
+        },
+    };
+    let a = search_network(&net, &arch, &spec, &Coordinator::new(1)).unwrap();
+    let b = search_network(&net, &arch, &spec, &Coordinator::new(3)).unwrap();
+    assert_eq!(a.cuts, b.cuts);
+    assert_eq!(a.total_score.to_bits(), b.total_score.to_bits());
+}
+
+#[test]
+fn evaluate_partition_rejects_bad_cuts() {
+    let net = tiny_conv_chain(4);
+    let arch = Arch::generic(32);
+    let pool = Coordinator::new(1);
+    let spec = tiny_spec(4);
+    assert!(evaluate_partition(&net, &arch, &spec, &[0], &pool).is_err());
+    assert!(evaluate_partition(&net, &arch, &spec, &[4], &pool).is_err());
+    assert!(evaluate_partition(&net, &arch, &spec, &[2, 2], &pool).is_err());
+    assert!(evaluate_partition(&net, &arch, &spec, &[3, 1], &pool).is_err());
+    let ok = evaluate_partition(&net, &arch, &spec, &[1, 3], &pool).unwrap();
+    assert_eq!(ok.cuts, vec![1, 3]);
+    assert_eq!(ok.segments.len(), 3);
+}
+
+#[test]
+fn invalid_networks_rejected() {
+    // Channel mismatch across a boundary.
+    let net = Network {
+        name: "bad".into(),
+        layers: vec![
+            LayerSpec {
+                name: "a".into(),
+                input_shape: vec![8, 18, 18],
+                op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+            },
+            LayerSpec {
+                name: "b".into(),
+                input_shape: vec![16, 18, 18],
+                op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+            },
+        ],
+    };
+    assert!(net.validate().is_err());
+    // Window larger than the fmap.
+    let net = Network {
+        name: "bad2".into(),
+        layers: vec![LayerSpec {
+            name: "a".into(),
+            input_shape: vec![8, 2, 2],
+            op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+        }],
+    };
+    assert!(net.validate().is_err());
+    // Empty network.
+    assert!(Network { name: "empty".into(), layers: vec![] }.validate().is_err());
+    // Non-positive op parameters must be rejected here (an error), not
+    // deep inside the builder (a panic) — e.g. from hand-written JSON.
+    let net = Network {
+        name: "bad3".into(),
+        layers: vec![LayerSpec {
+            name: "a".into(),
+            input_shape: vec![8, 18, 18],
+            op: LayerOp::Conv2d { out_channels: 0, r: 3, s: 3, stride: 1 },
+        }],
+    };
+    assert!(net.validate().is_err());
+    assert!(!net.segment_buildable(0, 1));
+    assert!(net.segment_fusion_set(0, 1).is_err());
+}
+
+#[test]
+fn totals_are_consistent_with_segments() {
+    let net = tiny_conv_chain(3);
+    let arch = Arch::generic(32);
+    let res = search_network(&net, &arch, &tiny_spec(2), &Coordinator::new(1)).unwrap();
+    let lat: i64 = res.segments.iter().map(|s| s.best.metrics.latency_cycles).sum();
+    assert_eq!(res.total_latency(), lat);
+    let off: i64 = res
+        .segments
+        .iter()
+        .map(|s| s.best.metrics.offchip_reads + s.best.metrics.offchip_writes)
+        .sum();
+    assert_eq!(res.total_offchip(), off);
+    assert!(res.total_energy_pj() > 0.0);
+}

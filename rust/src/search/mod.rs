@@ -18,6 +18,7 @@
 mod mutate;
 
 use crate::coordinator::Coordinator;
+use crate::einsum::FusionSet;
 use crate::mapping::InterLayerMapping;
 use crate::mapspace::{MapSpace, MapSpaceConfig};
 use crate::model::{Evaluator, Metrics};
@@ -36,6 +37,10 @@ pub enum Objective {
     Edp,
     /// Peak buffer occupancy in elements (capacity-focused studies).
     Capacity,
+    /// Total off-chip transfers in elements (reads + writes) — the paper's
+    /// Fig 15 metric, and the natural additive objective for network-level
+    /// partitioning (per-segment transfers sum to the network total).
+    Offchip,
     /// Energy–delay product with capacity-infeasible mappings pushed to the
     /// back of the ranking by a large multiplicative penalty — the default
     /// for searches under a real GLB budget.
@@ -53,6 +58,7 @@ impl Objective {
             Objective::Energy => m.energy.total_pj(),
             Objective::Edp => m.latency_cycles as f64 * m.energy.total_pj(),
             Objective::Capacity => m.occupancy_peak as f64,
+            Objective::Offchip => m.offchip_total() as f64,
             Objective::FeasibleEdp => {
                 let penalty = if m.capacity_ok { 1.0 } else { Self::INFEASIBLE_PENALTY };
                 penalty * (m.latency_cycles as f64 * m.energy.total_pj())
@@ -67,6 +73,7 @@ impl Objective {
             Objective::Energy => "energy",
             Objective::Edp => "edp",
             Objective::Capacity => "capacity",
+            Objective::Offchip => "offchip",
             Objective::FeasibleEdp => "feasible-edp",
         }
     }
@@ -78,9 +85,10 @@ impl Objective {
             "energy" => Ok(Objective::Energy),
             "edp" => Ok(Objective::Edp),
             "capacity" => Ok(Objective::Capacity),
+            "offchip" => Ok(Objective::Offchip),
             "feasible-edp" => Ok(Objective::FeasibleEdp),
             other => Err(format!(
-                "unknown objective {other} (expected latency|energy|edp|capacity|feasible-edp)"
+                "unknown objective {other} (expected latency|energy|edp|capacity|offchip|feasible-edp)"
             )),
         }
     }
@@ -252,18 +260,64 @@ fn random(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<Searc
     best_of(score_all(ev, &mappings, spec, pool))
 }
 
+/// How many random mappings [`annealing`] samples before concluding that no
+/// evaluable starting point exists. A single failed evaluation must not
+/// abort the whole search — one bad draw is noise, not evidence the space
+/// is empty.
+const INITIAL_CANDIDATE_ATTEMPTS: usize = 64;
+
+/// Draw random mappings until one evaluates, giving up after `attempts`
+/// draws. Factored out of [`annealing`] so the retry policy is testable
+/// against an evaluation function that fails intermittently.
+fn initial_candidate<F>(
+    fs: &FusionSet,
+    rng: &mut Prng,
+    attempts: usize,
+    mut eval: F,
+) -> Option<(InterLayerMapping, Metrics)>
+where
+    F: FnMut(&InterLayerMapping) -> Result<Metrics, String>,
+{
+    for _ in 0..attempts {
+        let cand = random_mapping(fs, rng);
+        if let Ok(metrics) = eval(&cand) {
+            return Some((cand, metrics));
+        }
+    }
+    None
+}
+
+/// Initial annealing temperature, derived from the *unpenalized* objective.
+///
+/// The acceptance test compares score differences against the temperature,
+/// and scores of capacity-infeasible mappings carry the ×1e6
+/// [`Objective::INFEASIBLE_PENALTY`]. Seeding `t0` from a penalized score
+/// would set the temperature six orders of magnitude above any real score
+/// difference, so every move — however bad — would be accepted for most of
+/// the schedule and the search degenerates to a random walk. The temperature
+/// therefore scales with the physical objective value only; the penalty
+/// still applies to the scores being compared, so infeasible moves remain
+/// strongly discouraged.
+fn initial_temperature(spec: &SearchSpec, m: &Metrics) -> f64 {
+    let raw = match spec.objective {
+        Objective::FeasibleEdp => Objective::Edp.score(m),
+        o => o.score(m),
+    };
+    (raw.abs() + 1.0) * 0.3
+}
+
 /// Simulated annealing (SET [29] uses the same strategy for inter-layer
 /// scheduling). Serial by nature; `spec.iters` model evaluations.
 fn annealing(ev: &Evaluator, spec: &SearchSpec) -> Option<SearchResult> {
     let fs = ev.fusion_set();
     let mut rng = Prng::new(spec.seed);
-    let mut cur = random_mapping(fs, &mut rng);
-    let mut cur_metrics = ev.evaluate(&cur).ok()?;
+    let (mut cur, mut cur_metrics) =
+        initial_candidate(fs, &mut rng, INITIAL_CANDIDATE_ATTEMPTS, |m| ev.evaluate(m))?;
     let mut cur_score = spec.score(&cur_metrics);
     let mut best = Scored { mapping: cur.clone(), metrics: cur_metrics.clone(), score: cur_score };
     let mut evaluated = vec![best.clone()];
 
-    let t0 = (cur_score.abs() + 1.0) * 0.3;
+    let t0 = initial_temperature(spec, &cur_metrics);
     for i in 0..spec.iters {
         let temp = t0 * (1.0 - i as f64 / spec.iters as f64).max(1e-3);
         let cand = mutate(fs, &cur, &mut rng);

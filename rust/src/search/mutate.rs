@@ -54,11 +54,19 @@ pub fn mutate(fs: &FusionSet, m: &InterLayerMapping, rng: &mut Prng) -> InterLay
                     (p.tile / 2).max(1)
                 };
             }
-            // Change one tensor's retention level.
+            // Change one tensor's retention level. Only non-output tensors
+            // carry retention choices: the final output fmap is streamed to
+            // off-chip, so `random_mapping` never assigns it retention and
+            // mutation must not re-introduce it.
             1 => {
-                let x = rng.index(fs.tensors.len());
-                let k = out.partitions.len();
-                out.retention.insert(TensorId(x), rng.index(k + 1));
+                let candidates: Vec<usize> = (0..fs.tensors.len())
+                    .filter(|&x| fs.tensors[x].kind != TensorKind::OutputFmap)
+                    .collect();
+                if !candidates.is_empty() {
+                    let x = *rng.choose(&candidates);
+                    let k = out.partitions.len();
+                    out.retention.insert(TensorId(x), rng.index(k + 1));
+                }
             }
             // Swap two schedule levels.
             2 if out.partitions.len() >= 2 => {

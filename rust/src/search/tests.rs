@@ -111,6 +111,130 @@ fn mutation_preserves_validity() {
     }
 }
 
+// Regression (pre-fix: the retention mutation sampled *any* tensor, so a
+// mutated mapping could carry retention for the output fmap, which
+// `random_mapping` deliberately never assigns): across many seeded mutation
+// chains on several workload shapes, every mapping must validate and no
+// retention entry may name an output-fmap tensor.
+#[test]
+fn mutation_never_retains_output_fmap() {
+    use crate::einsum::TensorKind;
+    for fs in [
+        workloads::conv_conv(14, 8),
+        workloads::pwise_dwise_pwise(14, 8),
+        workloads::self_attention(2, 2, 16, 8),
+    ] {
+        for seed in 0..8 {
+            let mut rng = crate::util::prng::Prng::new(seed);
+            let mut m = random_mapping(&fs, &mut rng);
+            for _ in 0..300 {
+                m = mutate(&fs, &m, &mut rng);
+                assert!(m.validate(&fs).is_ok());
+                for t in m.retention.keys() {
+                    assert_ne!(
+                        fs.tensor(*t).kind,
+                        TensorKind::OutputFmap,
+                        "{}: mutation assigned retention to output tensor {}",
+                        fs.name,
+                        fs.tensor(*t).name
+                    );
+                }
+            }
+        }
+    }
+}
+
+// Regression (pre-fix: `annealing` evaluated exactly one random starting
+// point and aborted the whole search via `.ok()?` when that single
+// evaluation failed): the initial-candidate draw must retry up to the
+// attempt budget before giving up.
+#[test]
+fn initial_candidate_retries_transient_failures() {
+    let fs = workloads::conv_conv(14, 8);
+    let mut rng = crate::util::prng::Prng::new(3);
+    // Evaluation fails for the first 5 draws, then succeeds: a bounded
+    // retry must still produce a starting point.
+    let mut calls = 0;
+    let got = initial_candidate(&fs, &mut rng, INITIAL_CANDIDATE_ATTEMPTS, |_| {
+        calls += 1;
+        if calls <= 5 {
+            Err("transient".into())
+        } else {
+            Ok(Metrics::default())
+        }
+    });
+    assert!(got.is_some(), "one failed evaluation must not abort the search");
+    assert_eq!(calls, 6);
+    // A persistently failing evaluator exhausts the budget and gives up
+    // (rather than looping forever).
+    let mut calls = 0;
+    let got = initial_candidate(&fs, &mut rng, 7, |_| {
+        calls += 1;
+        Err("permanent".to_string())
+    });
+    assert!(got.is_none());
+    assert_eq!(calls, 7);
+}
+
+// Regression (pre-fix: `t0` was derived from the *penalized* score, so a
+// capacity-infeasible starting point inflated the temperature by the ×1e6
+// penalty and the acceptance test degenerated to a random walk for most of
+// the schedule): the initial temperature must come from the unpenalized
+// objective, i.e. be identical whether or not the start is feasible.
+#[test]
+fn annealing_t0_ignores_infeasibility_penalty() {
+    let ev = session(28, 32, 1); // 1 KiB GLB: the untiled mapping overflows
+    let untiled = crate::mapping::InterLayerMapping::untiled(
+        crate::mapping::Parallelism::Sequential,
+    );
+    let m = ev.evaluate(&untiled).unwrap();
+    assert!(!m.capacity_ok);
+    let mut feasible = m.clone();
+    feasible.capacity_ok = true;
+
+    let spec = SearchSpec { algorithm: Algorithm::Annealing, ..Default::default() };
+    let t0 = initial_temperature(&spec, &m);
+    assert_eq!(t0, initial_temperature(&spec, &feasible));
+    assert_eq!(t0, (Objective::Edp.score(&m).abs() + 1.0) * 0.3);
+    // The penalized derivation would be ~1e6× larger.
+    assert!(t0 < spec.score(&m) * 0.3 / 1e5);
+
+    // Plain objectives under the spec-level penalty flag behave the same.
+    let lat = SearchSpec { objective: Objective::Latency, ..Default::default() };
+    assert_eq!(
+        initial_temperature(&lat, &m),
+        (m.latency_cycles as f64 + 1.0) * 0.3
+    );
+}
+
+// The stochastic searches must complete on a workload where most random
+// mappings blow the GLB budget (the regime that used to trip both the
+// initial-candidate abort and the temperature blowup).
+#[test]
+fn stochastic_searches_succeed_across_seeds() {
+    let ev = session(14, 8, 1); // 1 KiB GLB: nearly everything is infeasible
+    let pool = Coordinator::new(1);
+    for seed in 0..100 {
+        let ann = SearchSpec {
+            algorithm: Algorithm::Annealing,
+            iters: 30,
+            seed,
+            ..Default::default()
+        };
+        let res = run(&ev, &ann, &pool);
+        assert!(res.is_some(), "annealing seed {seed} produced no result");
+        let gen_spec = SearchSpec {
+            algorithm: Algorithm::Genetic,
+            population: 8,
+            generations: 3,
+            seed,
+            ..Default::default()
+        };
+        let res = run(&ev, &gen_spec, &pool);
+        assert!(res.is_some(), "genetic seed {seed} produced no result");
+    }
+}
+
 #[test]
 fn objective_scores_and_penalty() {
     let ev = session(28, 32, 1); // 1 KiB GLB: untiled mappings overflow
@@ -125,6 +249,10 @@ fn objective_scores_and_penalty() {
     assert_eq!(Objective::Latency.score(&m), m.latency_cycles as f64);
     assert_eq!(Objective::Energy.score(&m), m.energy.total_pj());
     assert_eq!(Objective::Capacity.score(&m), m.occupancy_peak as f64);
+    assert_eq!(
+        Objective::Offchip.score(&m),
+        (m.offchip_reads + m.offchip_writes) as f64
+    );
     // SearchSpec-level penalty (the old CLI semantics): plain objectives are
     // penalized too unless explicitly disabled.
     let penalized = SearchSpec { objective: Objective::Latency, ..Default::default() };
@@ -150,6 +278,7 @@ fn objective_and_algorithm_names_round_trip() {
         Objective::Energy,
         Objective::Edp,
         Objective::Capacity,
+        Objective::Offchip,
         Objective::FeasibleEdp,
     ] {
         assert_eq!(Objective::parse(o.name()).unwrap(), o);

@@ -19,6 +19,7 @@ use crate::einsum::{
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::MapSpaceConfig;
 use crate::model::{EnergyBreakdown, Metrics};
+use crate::network::{self, LayerOp, LayerSpec, Network, NetworkSearchSpec};
 use crate::poly::{AffineExpr, AffineMap};
 use crate::search::{Algorithm, Objective, SearchSpec};
 use crate::util::json::Json;
@@ -769,6 +770,184 @@ impl SearchSpec {
     }
 }
 
+// ------------------------------------------------------------- network --
+
+impl LayerOp {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("op", jstr(self.name()))];
+        match self {
+            LayerOp::Conv2d { out_channels, r, s, stride } => {
+                pairs.push(("out_channels", jnum_i(*out_channels)));
+                pairs.push(("r", jnum_i(*r)));
+                pairs.push(("s", jnum_i(*s)));
+                pairs.push(("stride", jnum_i(*stride)));
+            }
+            LayerOp::Pointwise { out_channels } => {
+                pairs.push(("out_channels", jnum_i(*out_channels)));
+            }
+            LayerOp::Depthwise { r, s, stride } => {
+                pairs.push(("r", jnum_i(*r)));
+                pairs.push(("s", jnum_i(*s)));
+                pairs.push(("stride", jnum_i(*stride)));
+            }
+            LayerOp::MaxPool { k, stride } => {
+                pairs.push(("k", jnum_i(*k)));
+                pairs.push(("stride", jnum_i(*stride)));
+            }
+            LayerOp::Fc { out_features } => {
+                pairs.push(("out_features", jnum_i(*out_features)));
+            }
+            LayerOp::AttentionScores { seq } => pairs.push(("seq", jnum_i(*seq))),
+            LayerOp::AttentionValues { emb } => pairs.push(("emb", jnum_i(*emb))),
+        }
+        jobj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<LayerOp, String> {
+        let ctx = "layer op";
+        match str_field(j, "op", ctx)? {
+            "conv2d" => Ok(LayerOp::Conv2d {
+                out_channels: i64_field(j, "out_channels", ctx)?,
+                r: i64_field(j, "r", ctx)?,
+                s: i64_field(j, "s", ctx)?,
+                stride: i64_field(j, "stride", ctx)?,
+            }),
+            "pointwise" => Ok(LayerOp::Pointwise {
+                out_channels: i64_field(j, "out_channels", ctx)?,
+            }),
+            "depthwise" => Ok(LayerOp::Depthwise {
+                r: i64_field(j, "r", ctx)?,
+                s: i64_field(j, "s", ctx)?,
+                stride: i64_field(j, "stride", ctx)?,
+            }),
+            "maxpool" => Ok(LayerOp::MaxPool {
+                k: i64_field(j, "k", ctx)?,
+                stride: i64_field(j, "stride", ctx)?,
+            }),
+            "fc" => Ok(LayerOp::Fc { out_features: i64_field(j, "out_features", ctx)? }),
+            "attention_scores" => Ok(LayerOp::AttentionScores { seq: i64_field(j, "seq", ctx)? }),
+            "attention_values" => Ok(LayerOp::AttentionValues { emb: i64_field(j, "emb", ctx)? }),
+            other => Err(format!("{ctx}: unknown op '{other}'")),
+        }
+    }
+}
+
+impl LayerSpec {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("name", jstr(&self.name)),
+            (
+                "input_shape",
+                jarr(self.input_shape.iter().map(|&d| jnum_i(d)).collect()),
+            ),
+            ("op", self.op.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LayerSpec, String> {
+        let ctx = "layer";
+        Ok(LayerSpec {
+            name: str_field(j, "name", ctx)?.to_string(),
+            input_shape: i64_vec(field(j, "input_shape", ctx)?, ctx)?,
+            op: LayerOp::from_json(field(j, "op", ctx)?)?,
+        })
+    }
+}
+
+impl Network {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("name", jstr(&self.name)),
+            ("layers", jarr(self.layers.iter().map(|l| l.to_json()).collect())),
+        ])
+    }
+
+    /// Parse and structurally validate; the returned network satisfies
+    /// [`Network::validate`].
+    pub fn from_json(j: &Json) -> Result<Network, String> {
+        let ctx = "network";
+        let net = Network {
+            name: str_field(j, "name", ctx)?.to_string(),
+            layers: arr_field(j, "layers", ctx)?
+                .iter()
+                .map(LayerSpec::from_json)
+                .collect::<Result<_, _>>()?,
+        };
+        net.validate()?;
+        Ok(net)
+    }
+}
+
+/// Parse a compact network spec string: `resnet18` | `mobilenetv2` |
+/// `vgg16` | `bert:B,H,T,E` (or bare `bert` for the BERT-base encoder
+/// block: 1 sequence, 12 heads, 512 tokens, 64-dim heads).
+pub fn parse_network(spec: &str) -> Result<Network, String> {
+    match spec {
+        "resnet18" => Ok(network::resnet18()),
+        "mobilenetv2" => Ok(network::mobilenet_v2()),
+        "vgg16" => Ok(network::vgg16()),
+        "bert" => Ok(network::bert_encoder(1, 12, 512, 64)),
+        other => {
+            if let Some(rest) = other.strip_prefix("bert:") {
+                let nums: Vec<i64> = rest
+                    .split(',')
+                    .map(|s| s.parse::<i64>().map_err(|e| format!("bad number {s}: {e}")))
+                    .collect::<Result<_, _>>()?;
+                match nums.as_slice() {
+                    [b, h, t, e] => Ok(network::bert_encoder(*b, *h, *t, *e)),
+                    _ => Err("bert spec needs bert:B,H,T,E".into()),
+                }
+            } else {
+                Err(format!(
+                    "unknown network spec: {other} (expected resnet18|mobilenetv2|vgg16|bert[:B,H,T,E])"
+                ))
+            }
+        }
+    }
+}
+
+/// A network position in a config: either the shorthand string or a full
+/// [`Network`] object.
+pub fn network_from_json(j: &Json) -> Result<Network, String> {
+    match j {
+        Json::Str(s) => parse_network(s),
+        _ => Network::from_json(j),
+    }
+}
+
+impl NetworkSearchSpec {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("max_segment_layers", jnum_u(self.max_segment_layers)),
+            ("search", self.search.to_json()),
+        ])
+    }
+
+    /// Parse a network-search spec; every absent field takes its
+    /// [`NetworkSearchSpec::default`] value, so `{}` is a valid spec.
+    pub fn from_json(j: &Json) -> Result<NetworkSearchSpec, String> {
+        let ctx = "segment search";
+        let d = NetworkSearchSpec::default();
+        let max_segment_layers = match j.get("max_segment_layers") {
+            Some(v) => {
+                let m = v
+                    .as_i64()
+                    .ok_or_else(|| format!("{ctx}: max_segment_layers must be a number"))?;
+                if m < 1 {
+                    return Err(format!("{ctx}: max_segment_layers must be >= 1"));
+                }
+                m as usize
+            }
+            None => d.max_segment_layers,
+        };
+        let search = match j.get("search") {
+            Some(v) => SearchSpec::from_json(v)?,
+            None => d.search,
+        };
+        Ok(NetworkSearchSpec { max_segment_layers, search })
+    }
+}
+
 // ------------------------------------------------------------- metrics --
 
 impl EnergyBreakdown {
@@ -966,6 +1145,66 @@ impl SearchConfig {
     }
 }
 
+/// A complete `looptree network` request: a whole-DNN chain + architecture
+/// + segment-search spec, optionally with a fixed cut set to score instead
+/// of running the DP. The `--json` output of `network` embeds this config
+/// verbatim, so a result document re-feeds as `--config` and reproduces the
+/// run.
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    pub network: Network,
+    pub arch: Arch,
+    pub segment_search: NetworkSearchSpec,
+    /// `Some` = score this exact partition; `None` = DP over all cut sets.
+    pub cuts: Option<Vec<usize>>,
+}
+
+impl NetworkConfig {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("network", self.network.to_json()),
+            ("arch", self.arch.to_json()),
+            ("segment_search", self.segment_search.to_json()),
+        ];
+        if let Some(cuts) = &self.cuts {
+            pairs.push(("cuts", jarr(cuts.iter().map(|&c| jnum_u(c)).collect())));
+        }
+        jobj(pairs)
+    }
+
+    /// Parse a config document. `arch` defaults to `generic:256`;
+    /// `segment_search` defaults to [`NetworkSearchSpec::default`]. Extra
+    /// fields (e.g. a `result` section from a previous run's `--json`
+    /// output) are ignored.
+    pub fn from_json(j: &Json) -> Result<NetworkConfig, String> {
+        let ctx = "network config";
+        let network = network_from_json(field(j, "network", ctx)?)?;
+        let arch = match j.get("arch") {
+            Some(v) => arch_from_json(v)?,
+            None => Arch::generic(256),
+        };
+        let segment_search = match j.get("segment_search") {
+            Some(v) => NetworkSearchSpec::from_json(v)?,
+            None => NetworkSearchSpec::default(),
+        };
+        let cuts = match j.get("cuts") {
+            Some(v) => {
+                let raw = i64_vec(v, ctx)?;
+                let mut cuts = Vec::with_capacity(raw.len());
+                for c in raw {
+                    if c < 0 {
+                        return Err(format!("{ctx}: cuts must be non-negative"));
+                    }
+                    cuts.push(c as usize);
+                }
+                Some(cuts)
+            }
+            None => None,
+        };
+        Ok(NetworkConfig { network, arch, segment_search, cuts })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1084,6 +1323,63 @@ mod tests {
         assert_eq!(back.to_json().to_string(), j.to_string());
         assert_eq!(back.latency_cycles, m.latency_cycles);
         assert_eq!(back.energy.total_pj().to_bits(), m.energy.total_pj().to_bits());
+    }
+
+    #[test]
+    fn network_round_trips() {
+        for net in [
+            network::resnet18(),
+            network::mobilenet_v2(),
+            network::vgg16(),
+            network::bert_encoder(1, 2, 16, 8),
+        ] {
+            let j = net.to_json();
+            let back = Network::from_json(&reser(&j)).unwrap();
+            assert_eq!(back, net, "{}", net.name);
+            assert!(back.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn network_shorthand_accepted() {
+        assert_eq!(parse_network("resnet18").unwrap().name, "resnet18");
+        assert_eq!(parse_network("mobilenetv2").unwrap().num_layers(), 52);
+        assert_eq!(parse_network("vgg16").unwrap().num_layers(), 18);
+        assert_eq!(
+            parse_network("bert:2,4,64,32").unwrap(),
+            network::bert_encoder(2, 4, 64, 32)
+        );
+        assert!(parse_network("bert:1,2").is_err());
+        assert!(parse_network("resnet50").is_err());
+    }
+
+    #[test]
+    fn network_config_round_trips_and_defaults() {
+        let cfg = NetworkConfig {
+            network: network::bert_encoder(1, 2, 16, 8),
+            arch: Arch::generic(64),
+            segment_search: NetworkSearchSpec {
+                max_segment_layers: 2,
+                ..Default::default()
+            },
+            cuts: Some(vec![2]),
+        };
+        let back = NetworkConfig::from_json(&reser(&cfg.to_json())).unwrap();
+        assert_eq!(back.network, cfg.network);
+        assert_eq!(back.segment_search, cfg.segment_search);
+        assert_eq!(back.cuts, cfg.cuts);
+        assert_eq!(back.arch.to_json().to_string(), cfg.arch.to_json().to_string());
+        // Minimal document: shorthand network, everything else defaulted.
+        let j = Json::parse("{\"network\": \"bert:1,2,16,8\"}").unwrap();
+        let cfg = NetworkConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.segment_search, NetworkSearchSpec::default());
+        assert!(cfg.cuts.is_none());
+        // A structurally broken network document is rejected on parse.
+        let j = Json::parse(
+            "{\"network\": {\"name\": \"x\", \"layers\": []}}",
+        )
+        .unwrap();
+        assert!(NetworkConfig::from_json(&j).is_err());
     }
 
     #[test]

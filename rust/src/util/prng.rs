@@ -37,9 +37,11 @@ impl Prng {
         result
     }
 
-    /// Uniform in `[0, n)`. `n` must be > 0.
+    /// Uniform in `[0, n)`. `n` must be > 0: a zero bound panics with a
+    /// descriptive message in every build profile (the old `debug_assert`
+    /// left release builds to die on an inscrutable divide-by-zero).
     pub fn below(&mut self, n: u64) -> u64 {
-        debug_assert!(n > 0);
+        assert!(n > 0, "Prng::below(0): sampling from an empty range");
         // Modulo bias is negligible for our n << 2^64 use cases.
         self.next_u64() % n
     }
@@ -65,8 +67,11 @@ impl Prng {
         self.f64() < p
     }
 
-    /// Pick a random element of a slice.
+    /// Pick a random element of a slice. Panics with a descriptive message
+    /// on an empty slice (rather than a bare index-out-of-bounds or, in
+    /// release builds, a divide-by-zero from the modulo).
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "Prng::choose: empty slice");
         &xs[self.index(xs.len())]
     }
 
@@ -119,6 +124,19 @@ mod tests {
         let mut s = v.clone();
         s.sort_unstable();
         assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "Prng::below(0)")]
+    fn below_zero_panics_with_message() {
+        Prng::new(1).below(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "Prng::choose: empty slice")]
+    fn choose_empty_panics_with_message() {
+        let xs: [u32; 0] = [];
+        Prng::new(1).choose(&xs);
     }
 
     #[test]

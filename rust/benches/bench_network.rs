@@ -1,17 +1,19 @@
-//! Network-level partitioning benchmark: DP over fused-segment cut sets
-//! with memoized per-segment mapspace searches, on the built-in whole-DNN
-//! chains. The headline numbers are the end-to-end partition time and the
+//! Network-level partitioning benchmark: DP over fused-segment covers
+//! (chain cut points for paths, graph cuts for branched DAGs) with
+//! memoized per-segment mapspace searches, on the built-in whole-DNN
+//! graphs. The headline numbers are the end-to-end partition time and the
 //! memoization leverage (distinct shapes searched vs candidate segments).
 //!
-//! Emits `BENCH_network.json`; `LOOPTREE_BENCH_SMOKE=1` shrinks the
-//! per-segment search budgets for CI.
+//! Emits `BENCH_network.json` (schema pinned by
+//! `util::bench::check_network_bench_schema`); `LOOPTREE_BENCH_SMOKE=1`
+//! shrinks the per-segment search budgets for CI.
 
 use looptree::arch::Arch;
 use looptree::coordinator::Coordinator;
 use looptree::mapspace::MapSpaceConfig;
 use looptree::network::{self, Network, NetworkSearchSpec};
 use looptree::search::SearchSpec;
-use looptree::util::bench::{bench, reps, smoke, write_bench_json};
+use looptree::util::bench::{bench, check_network_bench_schema, reps, smoke, write_bench_json};
 use looptree::util::json::Json;
 
 fn spec() -> NetworkSearchSpec {
@@ -34,8 +36,11 @@ fn main() {
     let spec = spec();
     let (warmup, iters) = reps(1, 5);
 
+    // resnet18 / mobilenetv2 carry their real residual edges (graph DP);
+    // resnet18_chain pins the path fast-path against the same backbone.
     let nets: Vec<Network> = vec![
         network::resnet18(),
+        network::resnet18_chain(),
         network::mobilenet_v2(),
         network::vgg16(),
         network::bert_encoder(1, 12, 512, 64),
@@ -48,41 +53,21 @@ fn main() {
         let t = bench(&format!("search_network({})", net.name), warmup, iters, || {
             network::search_network(net, &arch, &spec, &pool).unwrap()
         });
+        let branching = result.segments.iter().filter(|s| s.spans_branch(net)).count();
         println!(
-            "{}  -> {} cuts, {}/{} segments searched, total {:.3e}",
+            "{}  -> {} cuts, {}/{} segments searched, {} branch-fused, total {:.3e}",
             t.report(),
             result.cuts.len(),
             result.distinct_searched,
             result.candidate_segments,
+            branching,
             result.total_score
         );
-        rows.push(Json::Obj(
-            [
-                ("workload".to_string(), Json::Str(net.name.clone())),
-                ("mean_ns".to_string(), Json::Num(t.mean.as_nanos() as f64)),
-                ("layers".to_string(), Json::Num(net.num_layers() as f64)),
-                ("cuts".to_string(), Json::Num(result.cuts.len() as f64)),
-                (
-                    "candidate_segments".to_string(),
-                    Json::Num(result.candidate_segments as f64),
-                ),
-                (
-                    "distinct_searched".to_string(),
-                    Json::Num(result.distinct_searched as f64),
-                ),
-                ("total_score".to_string(), Json::Num(result.total_score)),
-                (
-                    "total_offchip_elems".to_string(),
-                    Json::Num(result.total_offchip() as f64),
-                ),
-                ("all_fit".to_string(), Json::Bool(result.all_fit())),
-            ]
-            .into_iter()
-            .collect(),
-        ));
+        rows.push(result.bench_row(&net.name, net.num_layers(), t.mean.as_nanos() as f64));
     }
 
     let report = Json::Obj([("rows".to_string(), Json::Arr(rows))].into_iter().collect());
+    check_network_bench_schema(&report).expect("BENCH_network.json schema drifted");
     match write_bench_json("BENCH_network.json", &report) {
         Ok(()) => println!("wrote BENCH_network.json"),
         Err(e) => eprintln!("failed to write BENCH_network.json: {e}"),

@@ -4,11 +4,21 @@
 //! and wires each new layer's input access to it, creating weight tensors as
 //! needed. Rank naming follows the paper's Table II convention with a layer
 //! suffix: `M2`, `P2`, `C2`, …
+//!
+//! Branched (DAG) fusion sets are built with three extra primitives:
+//! [`FusionSetBuilder::external`] registers an additional off-chip input
+//! fmap (e.g. a residual skip source cut off from the segment),
+//! [`FusionSetBuilder::select`] rewinds the "current fmap" to any earlier
+//! tensor (to grow a second branch from a fan-out point), and
+//! [`FusionSetBuilder::add_residual`] merges the current fmap with other
+//! tensors through an elementwise N-ary add — the residual/skip merge of
+//! ResNet and MobileNetV2. The result must still be a single-sink DAG
+//! ([`FusionSet::validate`]).
 
 use super::spec::{EinsumSpec, FusionSet, OpKind, TensorAccess, TensorId, TensorInfo, TensorKind};
 use crate::poly::{AffineExpr, AffineMap};
 
-/// Builder for a [`FusionSet`] chain.
+/// Builder for a [`FusionSet`] (chain or single-sink DAG).
 pub struct FusionSetBuilder {
     name: String,
     tensors: Vec<TensorInfo>,
@@ -41,12 +51,48 @@ impl FusionSetBuilder {
         TensorId(self.tensors.len() - 1)
     }
 
-    /// Demote the previous output fmap (if any) to an intermediate: called
-    /// when a new layer consumes it.
+    /// Demote the current fmap to an intermediate if it is produced by an
+    /// earlier einsum: called when a new layer consumes it. External inputs
+    /// (never produced in this set) keep their [`TensorKind::InputFmap`]
+    /// kind even when re-selected as the current fmap of a branch.
     fn demote_cur_to_intermediate(&mut self) {
-        if !self.einsums.is_empty() {
-            self.tensors[self.cur_fmap.0].kind = TensorKind::Intermediate;
+        self.demote_to_intermediate(self.cur_fmap);
+    }
+
+    fn demote_to_intermediate(&mut self, t: TensorId) {
+        if self.einsums.iter().any(|e| e.output.tensor == t) {
+            self.tensors[t.0].kind = TensorKind::Intermediate;
         }
+    }
+
+    /// The tensor the next layer would consume (the last layer's output, or
+    /// the tensor chosen by [`FusionSetBuilder::select`]).
+    pub fn cur(&self) -> TensorId {
+        self.cur_fmap
+    }
+
+    /// Register an additional off-chip input fmap (a tensor streamed from
+    /// DRAM that no einsum in this set produces — e.g. a residual skip
+    /// source living outside the fused segment). Returns its id for wiring
+    /// via [`FusionSetBuilder::select`] or
+    /// [`FusionSetBuilder::add_residual`].
+    pub fn external(&mut self, shape: &[i64]) -> TensorId {
+        let n = self.tensors.len();
+        self.add_tensor(format!("Input{n}"), shape.to_vec(), TensorKind::InputFmap)
+    }
+
+    /// Make `t` the current fmap, so the next layer consumes it — the
+    /// branch primitive: remember a fan-out point with
+    /// [`FusionSetBuilder::cur`], build one branch, then `select` the saved
+    /// tensor and build the other.
+    pub fn select(&mut self, t: TensorId) -> &mut Self {
+        assert!(t.0 < self.tensors.len(), "select: tensor out of range");
+        assert!(
+            self.tensors[t.0].kind != TensorKind::Weight,
+            "select: cannot continue from a weight tensor"
+        );
+        self.cur_fmap = t;
+        self
     }
 
     fn next_layer(&mut self) -> usize {
@@ -400,6 +446,62 @@ impl FusionSetBuilder {
         self
     }
 
+    /// Elementwise N-ary add merging the current fmap with `others` — the
+    /// residual/skip merge of ResNet and MobileNetV2:
+    /// `Out[…] = Cur[…] + Σ Other[…]`, [`OpKind::Elementwise`].
+    ///
+    /// Operand shapes must satisfy [`residual_merge_shape`]: larger 3D
+    /// operands are center-cropped to the common spatial interior via
+    /// constant-offset accesses (fused valid-convolution branches shrink
+    /// relative to their padded reference).
+    pub fn add_residual(&mut self, others: &[TensorId]) -> &mut Self {
+        assert!(!others.is_empty(), "add_residual needs at least one other operand");
+        let li = self.next_layer();
+        let operands: Vec<TensorId> =
+            std::iter::once(self.cur_fmap).chain(others.iter().copied()).collect();
+        for &t in &operands {
+            assert!(
+                self.tensors[t.0].kind != TensorKind::Weight,
+                "add_residual: operands must be fmaps, not weights"
+            );
+        }
+        let shapes: Vec<&[i64]> =
+            operands.iter().map(|&t| self.tensors[t.0].shape.as_slice()).collect();
+        let out_shape = residual_merge_shape(&shapes)
+            .unwrap_or_else(|e| panic!("add_residual: {e}"));
+        let nd = out_shape.len();
+        // Per-operand center-crop offsets (margins are valid by the merge
+        // check above; they split evenly by construction).
+        let mut accesses: Vec<TensorAccess> = Vec::with_capacity(operands.len());
+        for &t in &operands {
+            let s = self.tensors[t.0].shape.clone();
+            let exprs: Vec<AffineExpr> = (0..nd)
+                .map(|d| AffineExpr::var(d).with_offset((s[d] - out_shape[d]) / 2))
+                .collect();
+            accesses.push(TensorAccess { tensor: t, map: AffineMap::new(exprs) });
+            self.demote_to_intermediate(t);
+        }
+        let out =
+            self.add_tensor(format!("Fmap{}", li + 1), out_shape.clone(), TensorKind::OutputFmap);
+        let rank_names: Vec<String> = match nd {
+            2 => suffixed(&["M", "E"], li),
+            3 => suffixed(&["M", "P", "Q"], li),
+            4 => suffixed(&["B", "H", "M", "E"], li),
+            _ => (0..nd).map(|d| format!("D{d}_{li}")).collect(),
+        };
+        let all_dims: Vec<usize> = (0..nd).collect();
+        self.einsums.push(EinsumSpec {
+            name: format!("Add{li}"),
+            rank_names,
+            rank_sizes: out_shape,
+            output: TensorAccess { tensor: out, map: AffineMap::identity(&all_dims) },
+            inputs: accesses,
+            op_kind: OpKind::Elementwise,
+        });
+        self.cur_fmap = out;
+        self
+    }
+
     /// Finish and validate.
     pub fn build(&mut self) -> FusionSet {
         let fs = FusionSet {
@@ -416,4 +518,42 @@ impl FusionSetBuilder {
 
 fn suffixed(names: &[&str], li: usize) -> Vec<String> {
     names.iter().map(|n| format!("{n}{li}")).collect()
+}
+
+/// Result shape of an elementwise residual merge — the single authority for
+/// the center-crop reconciliation rule, shared by the segment planner
+/// (`network::Network::segment_plan`, which reports `Err`) and
+/// [`FusionSetBuilder::add_residual`] (which builds the accesses and treats
+/// a violation as a caller bug).
+///
+/// All operands must agree on every non-spatial dimension. For 3D `[C,H,W]`
+/// fmaps the two trailing (spatial) dims may differ: the output is the
+/// elementwise minimum, and every operand's margin must be non-negative and
+/// even so it center-crops symmetrically. Other arities require exact shape
+/// equality.
+pub fn residual_merge_shape(shapes: &[&[i64]]) -> Result<Vec<i64>, String> {
+    let first = *shapes.first().ok_or("residual merge needs at least one operand")?;
+    let nd = first.len();
+    let mut out: Vec<i64> = first.to_vec();
+    for s in &shapes[1..] {
+        if s.len() != nd {
+            return Err(format!("operand arity mismatch ({first:?} vs {s:?})"));
+        }
+        for d in 0..nd {
+            if nd == 3 && d >= 1 {
+                out[d] = out[d].min(s[d]);
+            } else if out[d] != s[d] {
+                return Err(format!("operand shapes {first:?} vs {s:?} cannot merge"));
+            }
+        }
+    }
+    for s in shapes {
+        for d in 0..nd {
+            let margin = s[d] - out[d];
+            if margin < 0 || margin % 2 != 0 {
+                return Err(format!("operand {s:?} cannot be center-cropped to {out:?}"));
+            }
+        }
+    }
+    Ok(out)
 }

@@ -2,15 +2,16 @@
 //!
 //! DNN layers are *tensor algebra operations*: each layer is an Einsum with
 //! named ranks, a dense box iteration domain, and per-tensor affine accesses
-//! (`p`, `p+r`, `2p+r`, …). A [`FusionSet`] is a chain of Einsums where each
-//! layer's output fmap is the next layer's input fmap (the *intermediate*
-//! fmaps whose retention-recomputation the mapping controls).
+//! (`p`, `p+r`, `2p+r`, …). A [`FusionSet`] is a single-sink DAG of Einsums
+//! where each layer's output fmap feeds one or more later layers (the
+//! *intermediate* fmaps whose retention-recomputation the mapping controls);
+//! a chain is the common special case ([`FusionSet::is_chain`]).
 
 mod spec;
 mod builder;
 pub mod workloads;
 
-pub use builder::FusionSetBuilder;
+pub use builder::{residual_merge_shape, FusionSetBuilder};
 pub use spec::{EinsumSpec, FusionSet, OpKind, TensorAccess, TensorId, TensorInfo, TensorKind};
 
 #[cfg(test)]

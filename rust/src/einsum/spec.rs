@@ -130,11 +130,16 @@ impl EinsumSpec {
     }
 }
 
-/// A chain of layers to be fused (paper §III: the user-defined *fusion set*).
+/// A set of layers to be fused (paper §III: the user-defined *fusion set*).
 ///
 /// Invariants (checked by [`FusionSet::validate`]):
-/// * Einsums form a chain: the output tensor of layer `i` is an input of
-///   layer `i+1`.
+/// * Einsums form a single-sink DAG in topological order: every input tensor
+///   is produced by an *earlier* einsum or is an off-chip source
+///   ([`TensorKind::InputFmap`] / [`TensorKind::Weight`]); every einsum's
+///   output except the last is consumed by at least one later einsum; the
+///   last einsum produces the unique [`TensorKind::OutputFmap`]. A chain is
+///   the special case where each output feeds exactly the next einsum
+///   ([`FusionSet::is_chain`]).
 /// * Output accesses are identity-per-dimension (bare ranks), so operation
 ///   preimages of output regions are exact boxes.
 #[derive(Debug, Clone)]
@@ -212,12 +217,27 @@ impl FusionSet {
             .sum()
     }
 
+    /// Whether the einsums form a pure chain: each layer's output is consumed
+    /// by exactly the next layer (and nothing else). The element-driven
+    /// simulator only supports chains; the analytical model handles any
+    /// valid single-sink DAG.
+    pub fn is_chain(&self) -> bool {
+        self.einsums.iter().enumerate().all(|(li, e)| {
+            let out = e.output.tensor;
+            self.einsums.iter().enumerate().all(|(ci, c)| {
+                let consumes = c.inputs.iter().any(|a| a.tensor == out);
+                consumes == (ci == li + 1)
+            })
+        })
+    }
+
     /// Check structural invariants; returns a description of the first
     /// violation.
     pub fn validate(&self) -> Result<(), String> {
         if self.einsums.is_empty() {
             return Err("fusion set has no einsums".into());
         }
+        let mut producer: Vec<Option<usize>> = vec![None; self.tensors.len()];
         for (li, e) in self.einsums.iter().enumerate() {
             if e.rank_names.len() != e.rank_sizes.len() {
                 return Err(format!("{}: rank names/sizes length mismatch", e.name));
@@ -251,32 +271,77 @@ impl FusionSet {
                     ));
                 }
             }
-            // Chain: output of layer li is an input of layer li+1.
-            if li + 1 < self.einsums.len() {
-                let next = &self.einsums[li + 1];
-                if !next.inputs.iter().any(|a| a.tensor == e.output.tensor) {
-                    return Err(format!(
-                        "{} -> {}: not a chain (intermediate not consumed)",
-                        e.name, next.name
-                    ));
+            // Topological order: inputs come from earlier einsums or from
+            // off-chip sources; nothing consumes its own output.
+            for acc in &e.inputs {
+                let t = self.tensor(acc.tensor);
+                match producer[acc.tensor.0] {
+                    Some(p) if p < li => {}
+                    Some(_) => {
+                        return Err(format!(
+                            "{}: input {} is consumed before it is produced",
+                            e.name, t.name
+                        ));
+                    }
+                    None => {
+                        if !matches!(t.kind, TensorKind::InputFmap | TensorKind::Weight) {
+                            return Err(format!(
+                                "{}: input {} has kind {:?} but no producer",
+                                e.name, t.name, t.kind
+                            ));
+                        }
+                    }
                 }
             }
-            // Intermediates classified correctly.
-            let kind = self.tensor(e.output.tensor).kind;
-            let expect = if li + 1 < self.einsums.len() {
-                TensorKind::Intermediate
-            } else {
-                TensorKind::OutputFmap
-            };
-            if kind != expect {
+            if producer[e.output.tensor.0].is_some() {
                 return Err(format!(
-                    "{}: output tensor {} has kind {:?}, expected {:?}",
+                    "{}: tensor {} has more than one producer",
                     e.name,
-                    self.tensor(e.output.tensor).name,
-                    kind,
-                    expect
+                    self.tensor(e.output.tensor).name
                 ));
             }
+            producer[e.output.tensor.0] = Some(li);
+        }
+        // Single sink: every non-final output is consumed by a later einsum
+        // (and classified Intermediate); the final einsum produces the one
+        // OutputFmap.
+        let n = self.einsums.len();
+        for (li, e) in self.einsums.iter().enumerate() {
+            let out = e.output.tensor;
+            let consumed = self.einsums[li + 1..]
+                .iter()
+                .any(|c| c.inputs.iter().any(|a| a.tensor == out));
+            let kind = self.tensor(out).kind;
+            if li + 1 == n {
+                if kind != TensorKind::OutputFmap {
+                    return Err(format!(
+                        "{}: final output tensor {} has kind {:?}, expected OutputFmap",
+                        e.name,
+                        self.tensor(out).name,
+                        kind
+                    ));
+                }
+            } else if !consumed {
+                return Err(format!(
+                    "{}: intermediate {} is never consumed (dangling branch output)",
+                    e.name,
+                    self.tensor(out).name
+                ));
+            } else if kind != TensorKind::Intermediate {
+                return Err(format!(
+                    "{}: output tensor {} has kind {:?}, expected Intermediate",
+                    e.name,
+                    self.tensor(out).name,
+                    kind
+                ));
+            }
+        }
+        let outputs = self.tensors_of_kind(TensorKind::OutputFmap);
+        if outputs.len() != 1 {
+            return Err(format!(
+                "fusion set must have exactly one output fmap, found {}",
+                outputs.len()
+            ));
         }
         Ok(())
     }

@@ -47,11 +47,12 @@
 //!   comparator (paper §V methodology).
 //! * [`mapspace`] / [`search`] — mapping enumeration, Pareto fronts, and the
 //!   unified [`search::run`] entry point.
-//! * [`network`] — whole-DNN chains (ResNet-18, MobileNetV2, VGG-16, a BERT
-//!   encoder block) and the fused-segment partitioner:
-//!   [`network::search_network`] memoizes per-segment mapspace searches over
-//!   distinct segment shapes and picks the optimal cut set by dynamic
-//!   programming.
+//! * [`network`] — whole-DNN graphs (ResNet-18 with its residual edges,
+//!   MobileNetV2 with its skip connections, VGG-16, a BERT encoder block)
+//!   and the fused-segment partitioner: [`network::search_network`]
+//!   memoizes per-segment mapspace searches over canonical segment
+//!   signatures and picks the optimal segment cover by dynamic programming
+//!   (chain cut points on paths, graph cuts on DAGs).
 //! * [`coordinator`] — parallel DSE job execution (lock-free result merge).
 //! * [`spec`] — the serializable JSON spec/query layer.
 //! * `runtime` *(feature `pjrt`)* — PJRT execution of AOT-compiled

@@ -62,7 +62,7 @@ fn run(args: &[String]) -> i32 {
                  looptree casestudy <fig14|fig15|fig16|fig17|fig18> [--full]\n  \
                  looptree analyze --config cfg.json [--json] | --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim]\n  \
                  looptree search --config cfg.json [--json] | --workload conv_conv:28x64 [--algorithm exhaustive|random|annealing|genetic] [--objective latency|energy|edp|capacity|offchip|feasible-edp] [--seed n]\n  \
-                 looptree network --config cfg.json [--json] | --network resnet18|mobilenetv2|vgg16|bert[:B,H,T,E] [--max-seg n] [--cuts 2,4,..] [--algorithm ..] [--objective ..] [--seed n] [--glb-kib n]\n  \
+                 looptree network --config cfg.json [--json] | --network resnet18|resnet18_chain|mobilenetv2|vgg16|bert[:B,H,T,E] [--max-seg n] [--cuts 2,4,..] [--algorithm ..] [--objective ..] [--seed n] [--glb-kib n]\n  \
                  looptree experiments [--full]\n  \
                  looptree speed"
             );
@@ -420,6 +420,10 @@ fn network_result_json(cfg: &NetworkConfig, r: &NetworkSearchResult) -> Json {
                                 Json::Num(s.hi as f64),
                             ]),
                         ),
+                        (
+                            "nodes".to_string(),
+                            Json::Arr(s.nodes.iter().map(|&i| Json::Num(i as f64)).collect()),
+                        ),
                         ("span".to_string(), Json::Str(s.span.clone())),
                         ("mapping".to_string(), s.best.mapping.to_json()),
                         ("score".to_string(), Json::Num(s.best.score)),
@@ -497,10 +501,10 @@ fn cmd_network(args: &[String]) -> i32 {
             ]);
             for s in &r.segments {
                 let fs = net
-                    .segment_fusion_set(s.lo, s.hi)
+                    .segment_fusion_set_nodes(&s.nodes)
                     .expect("chosen segment must be buildable");
                 table.row(&[
-                    format!("[{}..{})", s.lo, s.hi),
+                    s.range_label(),
                     s.span.clone(),
                     s.best.mapping.schedule_string(&fs),
                     format!("{:.3e}", s.best.score),

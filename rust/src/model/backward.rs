@@ -1,11 +1,18 @@
 //! Backward tile-shape analysis (paper §IV-A, Fig 10).
 //!
-//! Given an operation window of the *last* layer, infer the operation and
-//! data tiles of every earlier layer through data dependencies: the input
-//! data needed by a consumer op region is its image under the input access;
-//! the producer ops required to create a data region are its preimage under
-//! the producer's (identity) output access, extended fully along the
-//! producer's reduction ranks.
+//! Given an operation window of the *last* (sink) layer, infer the operation
+//! and data tiles of every earlier layer through data dependencies: the
+//! input data needed by a consumer op region is its image under the input
+//! access; the producer ops required to create a data region are its
+//! preimage under the producer's (identity) output access, extended fully
+//! along the producer's reduction ranks.
+//!
+//! The fusion set may be any single-sink DAG in topological order (see
+//! [`FusionSet::validate`]), not just a chain: an intermediate with several
+//! consumers (a residual fan-out) accumulates the union of their needs
+//! before its producer — processed after all consumers in the reverse
+//! topological sweep — materializes it once. On chains this reduces to the
+//! classic layer-by-layer recursion, box for box.
 
 use crate::einsum::FusionSet;
 use crate::poly::{IBox, Region};
@@ -53,29 +60,30 @@ pub(crate) fn window_needs_into(
         out.data[x].reset(tn.ndim());
     }
 
-    out.ops[n - 1].assign_box(last_ops);
+    let WindowNeeds { ops, data } = out;
     for t in (0..n).rev() {
         let e = &fs.einsums[t];
+        // Op region: the mapped window at the sink; upstream, the preimage
+        // of whatever this layer's consumers — all later in the topological
+        // order, hence already processed — asked its output tensor to cover.
+        if t == n - 1 {
+            ops[t].assign_box(last_ops);
+        } else {
+            for b in data[e.output.tensor.0].boxes() {
+                e.output.map.preimage_identity_box_into(b, &domains[t], tmp);
+                ops[t].union_box(tmp);
+            }
+        }
         // Output data of this layer's op region.
-        for b in out.ops[t].boxes() {
+        for b in ops[t].boxes() {
             e.output.map.image_box_into(b, tmp);
-            out.data[e.output.tensor.0].union_box(tmp);
+            data[e.output.tensor.0].union_box(tmp);
         }
         // Input needs.
         for acc in &e.inputs {
-            for b in out.ops[t].boxes() {
+            for b in ops[t].boxes() {
                 acc.map.image_box_into(b, tmp);
-                out.data[acc.tensor.0].union_box(tmp);
-            }
-        }
-        // Producer ops for the intermediate this layer consumes.
-        if t > 0 {
-            let prev = &fs.einsums[t - 1];
-            let inter = prev.output.tensor;
-            out.ops[t - 1].reset(prev.ndim());
-            for b in out.data[inter.0].boxes() {
-                prev.output.map.preimage_identity_box_into(b, &domains[t - 1], tmp);
-                out.ops[t - 1].union_box(tmp);
+                data[acc.tensor.0].union_box(tmp);
             }
         }
     }
@@ -106,6 +114,12 @@ pub(crate) struct BackwardScratch {
     pub ops: Vec<Region>,
     /// Fresh volume per tensor this iteration.
     pub fresh: Vec<i64>,
+    /// Per-tensor fresh regions consumers have requested but whose producer
+    /// has not been reached yet (union across sibling consumers, so shared
+    /// skip data is produced and counted once).
+    pending: Vec<Region>,
+    /// Producing layer per tensor (`usize::MAX` = off-chip source).
+    producer: Vec<usize>,
     need: Region,
     fr: Region,
     tmpb: IBox,
@@ -134,16 +148,36 @@ pub(crate) fn iter_backward_into(
     }
     sc.fresh.clear();
     sc.fresh.resize(fs.tensors.len(), 0);
+    sc.pending.resize_with(fs.tensors.len(), || Region::empty(0));
+    for (x, tn) in fs.tensors.iter().enumerate() {
+        sc.pending[x].reset(tn.ndim());
+    }
+    sc.producer.clear();
+    sc.producer.resize(fs.tensors.len(), usize::MAX);
+    for (t, e) in fs.einsums.iter().enumerate() {
+        sc.producer[e.output.tensor.0] = t;
+    }
 
     sc.ops[n - 1].assign_box(last_ops);
     for t in (0..n).rev() {
         let e = &fs.einsums[t];
+        if t < n - 1 {
+            // Ops = preimage of the fresh output this layer's consumers (all
+            // processed already) requested via `pending`. The preimage of
+            // that region images back to exactly itself under the identity
+            // output access, so the output pass below counts each produced
+            // element once even with several consumers.
+            for b in sc.pending[e.output.tensor.0].boxes() {
+                e.output.map.preimage_identity_box_into(b, &domains[t], &mut sc.tmpb);
+                sc.ops[t].union_box(&sc.tmpb);
+            }
+        }
         if sc.ops[t].is_empty() {
             continue;
         }
         // Freshly produced output data (for intermediates this is what the
-        // *consumer-driven* recursion below asked this layer to produce; for
-        // the last layer it is the mapped tile's output).
+        // consumer-driven recursion asked this layer to produce; for the
+        // last layer it is the mapped tile's output).
         let out = e.output.tensor;
         sc.need.reset(fs.tensors[out.0].ndim());
         for b in sc.ops[t].boxes() {
@@ -156,7 +190,7 @@ pub(crate) fn iter_backward_into(
         avail[out.0].union(&sc.fr);
 
         // Input needs: fresh parts must be fetched (weights / input fmap) or
-        // produced by the upstream layer (intermediates).
+        // produced by the upstream producer layer (intermediates).
         for acc in &e.inputs {
             let x = acc.tensor;
             sc.need.reset(fs.tensors[x.0].ndim());
@@ -166,18 +200,16 @@ pub(crate) fn iter_backward_into(
             }
             sc.fr.clone_from(&sc.need);
             sc.fr.subtract_assign(&avail[x.0]);
-            if t > 0 && fs.einsums[t - 1].output.tensor == x {
-                // Upstream must produce exactly the fresh part. Its volume is
-                // counted (and availability updated) by the producer's own
-                // output pass when the loop reaches layer t-1 — the preimage
-                // of `fr` images back to exactly `fr` under the identity
-                // output access, so nothing is double counted.
-                let prev = &fs.einsums[t - 1];
-                sc.ops[t - 1].reset(prev.ndim());
-                for b in sc.fr.boxes() {
-                    prev.output.map.preimage_identity_box_into(b, &domains[t - 1], &mut sc.tmpb);
-                    sc.ops[t - 1].union_box(&sc.tmpb);
+            let p = sc.producer[x.0];
+            if p != usize::MAX {
+                debug_assert!(p < t, "fusion set is not in topological order");
+                // Produced inside the set: defer to the producer's own
+                // output pass. Subtract what sibling consumers already
+                // requested this iteration so shared data is produced once.
+                if !sc.pending[x.0].is_empty() {
+                    sc.fr.subtract_assign(&sc.pending[x.0]);
                 }
+                sc.pending[x.0].union(&sc.fr);
             } else {
                 sc.fresh[x.0] += sc.fr.volume();
                 avail[x.0].union(&sc.fr);

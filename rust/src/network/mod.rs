@@ -1,45 +1,62 @@
-//! Whole-network workloads and fused-segment partitioning.
+//! Whole-network workloads and fused-segment partitioning over a graph IR.
 //!
 //! LoopTree's case studies (paper §VI) evaluate one fusion set at a time,
 //! but the decision the paper motivates — *which* layers to fuse, and where
 //! to cut — is a network-level question (DNNFuser frames layer fusion as a
 //! network-level mapping problem; CMDS shows cross-layer choices interact
-//! across cuts). This module represents a whole DNN as a **chain of layer
-//! specs** ([`Network`]), materializes any contiguous run of layers as a
-//! [`FusionSet`] segment (via the existing [`FusionSetBuilder`]), and —
-//! in [`search_network`] — searches the mapspace of every candidate segment
-//! and picks the optimal cut set by dynamic programming.
+//! across cuts). This module represents a whole DNN as a **DAG of layer
+//! nodes** ([`Network`]): each [`LayerSpec`] carries a [`LayerOp`] plus
+//! explicit input edges (`inputs`, indices of earlier nodes), so residual
+//! adds, skip connections, and fan-outs are first-class. Any *convex* node
+//! set with a single sink materializes as a [`FusionSet`] segment (via the
+//! [`FusionSetBuilder`]), and [`search_network`] searches the mapspace of
+//! every candidate segment and picks the optimal segment cover by dynamic
+//! programming — over chain cut points when the graph is a path (the exact
+//! PR 3 behavior), over graph cuts otherwise.
 //!
 //! ## Shape conventions
 //!
-//! Each [`LayerSpec`] carries the fmap shape its layer consumes *in the
+//! Each [`LayerSpec`] carries the fmap shape its (primary) input has *in the
 //! original padded network* (e.g. `[64, 58, 58]` for a 3×3/pad-1 conv on a
 //! 56×56 fmap — the repo-wide halo convention of `einsum::workloads`).
-//! When a segment is cut at layer `lo`, the [`FusionSetBuilder`] starts
-//! from `layers[lo].input_shape` and propagates shapes through the
-//! remaining ops with *valid-convolution* semantics: fused interior layers
-//! see the un-padded shrunk fmap of their producer, exactly as the fused
-//! pyramid of the paper's Fig 1 (and of `workloads::conv_conv`) does. A
-//! single-block segment of [`resnet18`] therefore builds the *identical*
-//! Einsums as `workloads::resnet18_block` — the per-block and network-level
-//! views agree bit for bit.
+//! Single-input edges tolerate spatial re-declaration (that is where the
+//! padding halo returns); the explicit [`LayerOp::Pad`] op makes the halo an
+//! exact per-edge fact instead. When a segment is materialized, the
+//! [`FusionSetBuilder`] starts from each head node's declared input shape
+//! and propagates *valid-convolution* semantics through interior edges:
+//! fused interior layers see the un-padded shrunk fmap of their producer,
+//! exactly as the fused pyramid of the paper's Fig 1 does.
 //!
-//! Consecutive layers must agree on every non-spatial dimension; spatial
-//! dims may be re-declared across a cut (that is where the padding halo
-//! returns). A boundary whose shapes are only reshape-compatible (equal
-//! element count, different arity — e.g. BERT's `[B,H,T,E] → [B·T, H·E]`
-//! attention→FFN boundary) is a **mandatory cut**: no fused segment can
-//! span it, and the partitioner never proposes one.
+//! ## Multi-input ops and mandatory cuts
+//!
+//! * [`LayerOp::Add`] (residual merge) fuses: inside a segment it becomes an
+//!   elementwise N-ary einsum; valid-convolution shrinkage between branches
+//!   is reconciled by center-cropping larger operands to the common
+//!   interior (even margins only).
+//! * [`LayerOp::Concat`] is *virtual*: concatenation of DRAM-resident
+//!   tensors is pure address arithmetic, so a concat node never joins a
+//!   segment and costs nothing — all its edges are mandatory cuts.
+//! * [`LayerOp::Pad`] fuses only at a segment head (the padded border is
+//!   fetched as data, the existing halo convention); an interior pad is a
+//!   mandatory cut.
+//! * A boundary whose shapes are only reshape-compatible (equal element
+//!   count, different arity — e.g. BERT's `[B,H,T,E] → [B·T, H·E]`
+//!   attention→FFN boundary) is a mandatory cut, as in the chain IR.
 
 mod partition;
+mod presets;
 
 pub use partition::{
-    evaluate_partition, search_network, NetworkSearchResult, NetworkSearchSpec, SegmentChoice,
+    evaluate_partition, evaluate_segments, search_network, search_network_dag,
+    NetworkSearchResult, NetworkSearchSpec, SegmentChoice,
 };
+pub use presets::{bert_encoder, mobilenet_v2, resnet18, resnet18_chain, vgg16};
 
-use crate::einsum::{FusionSet, FusionSetBuilder};
+use crate::einsum::{FusionSet, FusionSetBuilder, TensorId};
 
-/// One layer's operator, mirroring the [`FusionSetBuilder`] vocabulary.
+/// One layer's operator, mirroring the [`FusionSetBuilder`] vocabulary plus
+/// the graph-only ops ([`LayerOp::Add`], [`LayerOp::Concat`],
+/// [`LayerOp::Pad`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LayerOp {
     /// 2D convolution (`[C,H,W] → [M,P,Q]`), valid padding.
@@ -56,6 +73,15 @@ pub enum LayerOp {
     AttentionScores { seq: i64 },
     /// Attention value matmul (`[B,H,M,N] → [B,H,M,E]`, `E = emb`).
     AttentionValues { emb: i64 },
+    /// Elementwise N-ary addition (residual/skip merge); all inputs share
+    /// one shape.
+    Add,
+    /// Channel concatenation (`[C_i,H,W] → [ΣC_i,H,W]`). Virtual: modeled
+    /// as DRAM address arithmetic, never fused.
+    Concat,
+    /// Explicit zero-padding halo (`[C,H,W] → [C,H+2h,W+2w]`), resolving
+    /// the padding convention per edge instead of per chain position.
+    Pad { h: i64, w: i64 },
 }
 
 impl LayerOp {
@@ -69,11 +95,14 @@ impl LayerOp {
             LayerOp::Fc { .. } => "fc",
             LayerOp::AttentionScores { .. } => "attention_scores",
             LayerOp::AttentionValues { .. } => "attention_values",
+            LayerOp::Add => "add",
+            LayerOp::Concat => "concat",
+            LayerOp::Pad { .. } => "pad",
         }
     }
 
-    /// Canonical parameter string, e.g. `conv2d(64,3,3,2)` — the unit of the
-    /// segment [`Network::segment_signature`] memoization key.
+    /// Canonical parameter string, e.g. `conv2d(64,3,3,2)` — one token of
+    /// the canonical segment signature ([`Network::segment_signature`]).
     pub fn signature(&self) -> String {
         match self {
             LayerOp::Conv2d { out_channels, r, s, stride } => {
@@ -85,16 +114,42 @@ impl LayerOp {
             LayerOp::Fc { out_features } => format!("fc({out_features})"),
             LayerOp::AttentionScores { seq } => format!("attention_scores({seq})"),
             LayerOp::AttentionValues { emb } => format!("attention_values({emb})"),
+            LayerOp::Add => "add".into(),
+            LayerOp::Concat => "concat".into(),
+            LayerOp::Pad { h, w } => format!("pad({h},{w})"),
         }
     }
 
-    /// The fmap shape this op produces from `input`, with valid-convolution
-    /// semantics (mirrors the [`FusionSetBuilder`] math exactly, but returns
-    /// an error where the builder would panic — arity mismatch or an empty
-    /// output).
-    pub fn output_shape(&self, input: &[i64]) -> Result<Vec<i64>, String> {
-        // All op parameters must be positive, or the builder's fusion-set
-        // validation would panic downstream.
+    /// Allowed input-edge count `(min, max)`.
+    pub fn arity(&self) -> (usize, usize) {
+        match self {
+            LayerOp::Add | LayerOp::Concat => (2, usize::MAX),
+            _ => (1, 1),
+        }
+    }
+
+    /// Virtual ops never join a fused segment and cost nothing on their own
+    /// (concatenation of DRAM-resident tensors is address arithmetic).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, LayerOp::Concat)
+    }
+
+    /// The fmap shape this op produces from its input shapes (one per input
+    /// edge), with valid-convolution semantics for windowed ops — mirrors
+    /// the [`FusionSetBuilder`] math exactly, but returns an error where the
+    /// builder would panic (arity mismatch or an empty output).
+    pub fn output_shape(&self, inputs: &[&[i64]]) -> Result<Vec<i64>, String> {
+        let (min_in, max_in) = self.arity();
+        if inputs.len() < min_in || inputs.len() > max_in {
+            return Err(format!(
+                "{}: expected {} input(s), got {}",
+                self.signature(),
+                if min_in == max_in { min_in.to_string() } else { format!(">= {min_in}") },
+                inputs.len()
+            ));
+        }
+        // All op parameters must be positive (pad halos may be zero), or the
+        // builder's fusion-set validation would panic downstream.
         let params = match self {
             LayerOp::Conv2d { out_channels, r, s, stride } => vec![*out_channels, *r, *s, *stride],
             LayerOp::Pointwise { out_channels } => vec![*out_channels],
@@ -103,6 +158,13 @@ impl LayerOp {
             LayerOp::Fc { out_features } => vec![*out_features],
             LayerOp::AttentionScores { seq } => vec![*seq],
             LayerOp::AttentionValues { emb } => vec![*emb],
+            LayerOp::Add | LayerOp::Concat => vec![],
+            LayerOp::Pad { h, w } => {
+                if *h < 0 || *w < 0 {
+                    return Err(format!("{}: negative pad halo", self.signature()));
+                }
+                vec![]
+            }
         };
         if params.iter().any(|&p| p < 1) {
             return Err(format!("{}: all op parameters must be >= 1", self.signature()));
@@ -118,7 +180,8 @@ impl LayerOp {
             }
             Ok((p, q))
         };
-        match (self, input) {
+        let first = inputs[0];
+        match (self, first) {
             (LayerOp::Conv2d { out_channels, r, s, stride }, [_, h, w]) => {
                 let (p, q) = spatial(*h, *w, *r, *s, *stride)?;
                 Ok(vec![*out_channels, p, q])
@@ -135,18 +198,44 @@ impl LayerOp {
             (LayerOp::Fc { out_features }, [m, _]) => Ok(vec![*m, *out_features]),
             (LayerOp::AttentionScores { seq }, [b, hd, m, _]) => Ok(vec![*b, *hd, *m, *seq]),
             (LayerOp::AttentionValues { emb }, [b, hd, m, _]) => Ok(vec![*b, *hd, *m, *emb]),
+            (LayerOp::Add, _) => {
+                for s in &inputs[1..] {
+                    if *s != first {
+                        return Err(format!(
+                            "add: operand shapes differ ({first:?} vs {s:?})"
+                        ));
+                    }
+                }
+                Ok(first.to_vec())
+            }
+            (LayerOp::Concat, [_, _, _]) => {
+                let mut channels = first[0];
+                for s in &inputs[1..] {
+                    if s.len() != 3 || s[1..] != first[1..] {
+                        return Err(format!(
+                            "concat: operand shapes incompatible ({first:?} vs {s:?})"
+                        ));
+                    }
+                    channels += s[0];
+                }
+                let mut out = first.to_vec();
+                out[0] = channels;
+                Ok(out)
+            }
+            (LayerOp::Pad { h, w }, [c, ih, iw]) => Ok(vec![*c, ih + 2 * h, iw + 2 * w]),
             _ => Err(format!(
                 "{}: input shape {:?} has the wrong arity",
                 self.signature(),
-                input
+                first
             )),
         }
     }
 
-    /// Append this op to a builder (the shapes must already have been
-    /// checked with [`LayerOp::output_shape`]; the builder panics on
-    /// mismatches).
-    fn apply(&self, b: &mut FusionSetBuilder) {
+    /// Append this single-input compute op to a builder (shapes must already
+    /// have been checked with [`LayerOp::output_shape`]; the builder panics
+    /// on mismatches). `Add`, `Concat`, and `Pad` are wired by the segment
+    /// materializer, not here.
+    fn apply_unary(&self, b: &mut FusionSetBuilder) {
         match *self {
             LayerOp::Conv2d { out_channels, r, s, stride } => {
                 b.conv2d(out_channels, r, s, stride);
@@ -169,24 +258,59 @@ impl LayerOp {
             LayerOp::AttentionValues { emb } => {
                 b.attention_values(emb);
             }
+            LayerOp::Add | LayerOp::Concat | LayerOp::Pad { .. } => {
+                panic!("{} is not a unary builder op", self.name())
+            }
         }
     }
 }
 
-/// One layer of a [`Network`]: a display name, the fmap shape it consumes in
-/// the original (padded) network, and its operator.
+/// One node of a [`Network`] DAG: a display name, the fmap shape its
+/// *primary* (first) input has in the original padded network, its operator,
+/// and explicit input edges.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerSpec {
     pub name: String,
     pub input_shape: Vec<i64>,
     pub op: LayerOp,
+    /// Producing node indices, all smaller than this node's own index
+    /// (networks are stored in topological order). Empty = this node
+    /// consumes the network input.
+    pub inputs: Vec<usize>,
 }
 
-/// A whole DNN as a chain of layers (the fused-segment partitioner's input).
+/// A whole DNN as a DAG of layer nodes (the fused-segment partitioner's
+/// input). Nodes are stored in topological order: every edge references an
+/// earlier node.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Network {
     pub name: String,
     pub layers: Vec<LayerSpec>,
+}
+
+/// Where a segment-internal wire comes from: an off-chip external input (by
+/// slot) or the output of an earlier materialized member (by local order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Wire {
+    Ext(usize),
+    Member(usize),
+}
+
+/// A validated materialization plan for one candidate segment: the external
+/// input tensors (deduplicated by producer and shape) and, per materialized
+/// member, the resolved input wires. `segment_fusion_set` executes the plan;
+/// `segment_signature` canonicalizes it.
+#[derive(Debug, Clone)]
+pub(crate) struct SegmentPlan {
+    /// External input shapes, in first-use order. Keyed by (producer node or
+    /// network input, shape as consumed): the same producer read through two
+    /// different declared halos yields two streamed tensors.
+    externals: Vec<Vec<i64>>,
+    /// Per materialized (non-pad) member, in node order: (node index, input
+    /// wires).
+    members: Vec<(usize, Vec<Wire>)>,
+    /// The sink's propagated output shape (valid-convolution semantics).
+    out_shape: Vec<i64>,
 }
 
 impl Network {
@@ -194,275 +318,516 @@ impl Network {
         self.layers.len()
     }
 
-    /// Check structural invariants:
-    /// * every op applies to its declared input shape,
-    /// * consecutive layers agree on all non-spatial dims (spatial dims may
-    ///   be re-declared across a layer boundary — the padding halo), and
-    ///   arity changes are element-count-preserving reshapes.
-    pub fn validate(&self) -> Result<(), String> {
-        if self.layers.is_empty() {
-            return Err(format!("network {} has no layers", self.name));
-        }
-        for (i, l) in self.layers.iter().enumerate() {
-            if l.input_shape.iter().any(|&d| d <= 0) {
-                return Err(format!("{}: non-positive input dim", l.name));
+    /// Append a node consuming the previous node's output (the network input
+    /// when the network is empty). Returns the node index.
+    pub fn push(&mut self, name: &str, input_shape: &[i64], op: LayerOp) -> usize {
+        let inputs = if self.layers.is_empty() { vec![] } else { vec![self.layers.len() - 1] };
+        self.push_from(name, input_shape, op, inputs)
+    }
+
+    /// Append a node with explicit input edges. Returns the node index.
+    pub fn push_from(
+        &mut self,
+        name: &str,
+        input_shape: &[i64],
+        op: LayerOp,
+        inputs: Vec<usize>,
+    ) -> usize {
+        self.layers.push(LayerSpec {
+            name: name.into(),
+            input_shape: input_shape.to_vec(),
+            op,
+            inputs,
+        });
+        self.layers.len() - 1
+    }
+
+    /// Whether the graph is a pure path: node `i` consumes exactly node
+    /// `i-1` (and node 0 the network input). Path networks take the chain
+    /// cut-point DP in [`search_network`], reproducing the chain IR bit for
+    /// bit.
+    pub fn is_chain(&self) -> bool {
+        self.layers.iter().enumerate().all(|(i, l)| {
+            if i == 0 {
+                l.inputs.is_empty()
+            } else {
+                l.inputs.as_slice() == [i - 1]
             }
-            let out = l
-                .op
-                .output_shape(&l.input_shape)
-                .map_err(|e| format!("{}: {e}", l.name))?;
-            if let Some(next) = self.layers.get(i + 1) {
-                let nin = &next.input_shape;
-                if nin.len() == out.len() {
-                    // Same arity: non-spatial dims must match; the trailing
-                    // two (spatial) dims of 3D fmaps may carry a halo.
-                    let fixed = if out.len() == 3 { 1 } else { out.len() };
-                    if out[..fixed] != nin[..fixed] {
-                        return Err(format!(
-                            "{} -> {}: shape mismatch {:?} vs {:?}",
-                            l.name, next.name, out, nin
-                        ));
-                    }
-                } else {
-                    // Arity change: a reshape boundary — sizes must agree.
-                    let a: i64 = out.iter().product();
-                    let b: i64 = nin.iter().product();
-                    if a != b {
-                        return Err(format!(
-                            "{} -> {}: reshape {:?} -> {:?} changes element count",
-                            l.name, next.name, out, nin
-                        ));
-                    }
+        })
+    }
+
+    /// Consumers of each node (node indices listing it as an input, with
+    /// multiplicity collapsed).
+    pub(crate) fn consumer_lists(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.layers.len()];
+        for (i, l) in self.layers.iter().enumerate() {
+            for &p in &l.inputs {
+                if out[p].last() != Some(&i) {
+                    out[p].push(i);
                 }
             }
         }
-        Ok(())
+        out
     }
 
-    /// Whether layers `lo..hi` can be fused into one segment: shapes must
-    /// propagate through the builder without error. A reshape boundary
-    /// (arity change) inside the range makes it unbuildable, forcing a cut.
+    /// Reference (padded-network) output shape per node, performing every
+    /// structural check along the way. This *is* the validator:
+    /// [`Network::validate`] discards the shapes.
+    pub(crate) fn ref_output_shapes(&self) -> Result<Vec<Vec<i64>>, String> {
+        if self.layers.is_empty() {
+            return Err(format!("network {} has no layers", self.name));
+        }
+        let mut out: Vec<Vec<i64>> = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            // Error context only; built lazily so the success path (run per
+            // candidate-plan in the enumeration loop) never formats.
+            let ctx = || format!("layer {i} '{}' (op {})", l.name, l.op.name());
+            if l.input_shape.iter().any(|&d| d <= 0) {
+                return Err(format!("{}: non-positive input dim in {:?}", ctx(), l.input_shape));
+            }
+            for &p in &l.inputs {
+                if p >= i {
+                    return Err(format!(
+                        "{}: input edge {p} must reference an earlier node (topological order)",
+                        ctx()
+                    ));
+                }
+            }
+            let (min_in, max_in) = l.op.arity();
+            let n_in = if l.inputs.is_empty() { 1 } else { l.inputs.len() };
+            if n_in < min_in || n_in > max_in {
+                return Err(format!("{}: {n_in} input edge(s) out of the op's arity range", ctx()));
+            }
+            if l.inputs.is_empty() && min_in > 1 {
+                return Err(format!("{}: a multi-input op cannot consume the network input", ctx()));
+            }
+            // Per-edge shape compatibility against each producer's reference
+            // output.
+            match &l.op {
+                LayerOp::Add => {
+                    for (k, &p) in l.inputs.iter().enumerate() {
+                        if out[p] != l.input_shape {
+                            return Err(format!(
+                                "{}: operand {k} from '{}' has shape {:?}, expected {:?}",
+                                ctx(),
+                                self.layers[p].name,
+                                out[p],
+                                l.input_shape
+                            ));
+                        }
+                    }
+                }
+                LayerOp::Concat => {
+                    if out[l.inputs[0]] != l.input_shape {
+                        return Err(format!(
+                            "{}: declared input shape {:?} differs from first operand {:?}",
+                            ctx(),
+                            l.input_shape,
+                            out[l.inputs[0]]
+                        ));
+                    }
+                }
+                LayerOp::Pad { .. } => {
+                    // A pad may also pad the network input (no producer).
+                    if let Some(&p) = l.inputs.first() {
+                        if out[p] != l.input_shape {
+                            return Err(format!(
+                                "{}: pad input shape {:?} must exactly match producer '{}' \
+                                 output {:?} (pad is the explicit halo)",
+                                ctx(),
+                                l.input_shape,
+                                self.layers[p].name,
+                                out[p]
+                            ));
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(&p) = l.inputs.first() {
+                        let prod = &out[p];
+                        let nin = &l.input_shape;
+                        if nin.len() == prod.len() {
+                            // Same arity: non-spatial dims must match; the
+                            // trailing two (spatial) dims of 3D fmaps may
+                            // carry a halo.
+                            let fixed = if prod.len() == 3 { 1 } else { prod.len() };
+                            if prod[..fixed] != nin[..fixed] {
+                                return Err(format!(
+                                    "{}: shape mismatch with producer '{}' ({:?} vs {:?})",
+                                    ctx(),
+                                    self.layers[p].name,
+                                    prod,
+                                    nin
+                                ));
+                            }
+                        } else {
+                            // Arity change: a reshape boundary — sizes must
+                            // agree.
+                            let a: i64 = prod.iter().product();
+                            let b: i64 = nin.iter().product();
+                            if a != b {
+                                return Err(format!(
+                                    "{}: reshape from '{}' ({:?} -> {:?}) changes element count",
+                                    ctx(),
+                                    self.layers[p].name,
+                                    prod,
+                                    nin
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            // Output shape from the declared (unary) or producer
+            // (multi-input) shapes.
+            let shape = match &l.op {
+                LayerOp::Add | LayerOp::Concat => {
+                    let edges: Vec<&[i64]> =
+                        l.inputs.iter().map(|&p| out[p].as_slice()).collect();
+                    l.op.output_shape(&edges)
+                }
+                _ => l.op.output_shape(&[&l.input_shape]),
+            }
+            .map_err(|e| format!("{}: {e}", ctx()))?;
+            out.push(shape);
+        }
+        Ok(out)
+    }
+
+    /// Check structural invariants: topological edge order, per-op edge
+    /// arity, per-edge shape compatibility (non-spatial dims must match
+    /// across single-input edges; spatial dims may be re-declared — the
+    /// padding halo; arity changes are element-count-preserving reshapes;
+    /// `add`/`pad` edges must match exactly), and that every op applies to
+    /// its input shapes. Error messages name the offending layer index and
+    /// op.
+    pub fn validate(&self) -> Result<(), String> {
+        self.ref_output_shapes().map(|_| ())
+    }
+
+    // --------------------------------------------------------- segments --
+
+    /// Build the materialization plan for a candidate segment (sorted node
+    /// indices). Errors describe why the node set cannot fuse: a virtual
+    /// member, a non-convex set, multiple sinks, an interior output also
+    /// needed outside, an interior pad, or shape propagation failure.
+    pub(crate) fn segment_plan(&self, nodes: &[usize]) -> Result<SegmentPlan, String> {
+        let n = self.layers.len();
+        if nodes.is_empty() {
+            return Err("segment has no nodes".into());
+        }
+        if nodes.windows(2).any(|w| w[0] >= w[1]) || *nodes.last().unwrap() >= n {
+            return Err(format!("segment nodes {nodes:?} must be sorted, unique, and < {n}"));
+        }
+        let in_set = |i: usize| nodes.binary_search(&i).is_ok();
+        for &i in nodes {
+            if self.layers[i].op.is_virtual() {
+                return Err(format!(
+                    "'{}' is a {} node; it never joins a fused segment",
+                    self.layers[i].name,
+                    self.layers[i].op.name()
+                ));
+            }
+        }
+        // Convexity: no path may leave the set and re-enter. Mark
+        // descendants of the set within the index range; an external
+        // producer of a member must not be one.
+        let lo = nodes[0];
+        let hi = *nodes.last().unwrap();
+        let mut desc = vec![false; hi - lo + 1];
+        for i in lo..=hi {
+            desc[i - lo] = in_set(i)
+                || self.layers[i].inputs.iter().any(|&p| p >= lo && desc[p - lo]);
+        }
+        for &i in nodes {
+            for &p in &self.layers[i].inputs {
+                if !in_set(p) && p >= lo && desc[p - lo] {
+                    return Err(format!(
+                        "segment is not convex: excluded node '{}' is downstream of the segment \
+                         but feeds its member '{}'",
+                        self.layers[p].name, self.layers[i].name
+                    ));
+                }
+            }
+        }
+        // Single sink; interior outputs fully consumed inside. The consumer
+        // lists are per-network constants recomputed per plan — O(nodes)
+        // small-vec work, dwarfed by the per-segment mapspace searches that
+        // follow for every candidate that survives; revisit only if
+        // enumeration itself ever shows up in BENCH_network.json.
+        let consumers = self.consumer_lists();
+        let mut sink = None;
+        for &i in nodes {
+            let cons_in = consumers[i].iter().any(|&c| in_set(c));
+            let cons_out = consumers[i].iter().any(|&c| !in_set(c));
+            if !cons_in {
+                if let Some(prev) = sink.replace(i) {
+                    return Err(format!(
+                        "segment has more than one sink ('{}' and '{}')",
+                        self.layers[prev].name, self.layers[i].name
+                    ));
+                }
+            } else if cons_out {
+                return Err(format!(
+                    "output of '{}' is consumed both inside and outside the segment",
+                    self.layers[i].name
+                ));
+            }
+        }
+        let sink = sink.ok_or_else(|| "segment has no sink (cycle?)".to_string())?;
+        if matches!(self.layers[sink].op, LayerOp::Pad { .. }) {
+            return Err(format!(
+                "'{}' (pad) cannot be a segment sink; fuse it with its consumer",
+                self.layers[sink].name
+            ));
+        }
+        // Shape propagation with valid-convolution semantics, resolving
+        // wires and external inputs as we go. Reference output shapes are
+        // only needed for `add` operands cut off from the segment, and this
+        // runs once per candidate in the enumeration hot loop — compute
+        // them lazily.
+        let mut ref_out: Option<Vec<Vec<i64>>> = None;
+        type ExtKey = (Option<usize>, Vec<i64>);
+        fn ext_slot(key: ExtKey, exts: &mut Vec<ExtKey>) -> usize {
+            match exts.iter().position(|e| *e == key) {
+                Some(k) => k,
+                None => {
+                    exts.push(key);
+                    exts.len() - 1
+                }
+            }
+        }
+        let mut externals: Vec<ExtKey> = Vec::new();
+        // Per member: its wire (how a consumer reaches its output) and its
+        // propagated shape.
+        let mut wire_of: Vec<Option<(Wire, Vec<i64>)>> = vec![None; hi - lo + 1];
+        let mut members: Vec<(usize, Vec<Wire>)> = Vec::new();
+        for &i in nodes {
+            let l = &self.layers[i];
+            let ctx = || format!("layer {i} '{}' (op {})", l.name, l.op.name());
+            match &l.op {
+                LayerOp::Pad { .. } => {
+                    if l.inputs.iter().any(|&p| in_set(p)) {
+                        return Err(format!(
+                            "{}: explicit pad inside a fused segment — cut before it",
+                            ctx()
+                        ));
+                    }
+                    // Absorbed: the external input arrives pre-padded (the
+                    // zero border streams as data, the halo convention).
+                    let padded = l
+                        .op
+                        .output_shape(&[&l.input_shape])
+                        .map_err(|e| format!("{}: {e}", ctx()))?;
+                    let src = l.inputs.first().copied();
+                    let k = ext_slot((src, padded.clone()), &mut externals);
+                    wire_of[i - lo] = Some((Wire::Ext(k), padded));
+                }
+                LayerOp::Add => {
+                    let mut wires = Vec::with_capacity(l.inputs.len());
+                    let mut shapes: Vec<Vec<i64>> = Vec::with_capacity(l.inputs.len());
+                    for &p in &l.inputs {
+                        if in_set(p) {
+                            let (w, s) = wire_of[p - lo].clone().expect("member resolved");
+                            wires.push(w);
+                            shapes.push(s);
+                        } else {
+                            if ref_out.is_none() {
+                                ref_out = Some(self.ref_output_shapes()?);
+                            }
+                            let shape = ref_out.as_ref().unwrap()[p].clone();
+                            let k = ext_slot((Some(p), shape.clone()), &mut externals);
+                            wires.push(Wire::Ext(k));
+                            shapes.push(shape);
+                        }
+                    }
+                    // Center-crop reconciliation: the single authority is
+                    // `einsum::residual_merge_shape`, which the builder's
+                    // `add_residual` also consults — plan-time acceptance
+                    // and build-time wiring cannot drift apart.
+                    let operands: Vec<&[i64]> = shapes.iter().map(|s| s.as_slice()).collect();
+                    let out_shape = crate::einsum::residual_merge_shape(&operands)
+                        .map_err(|e| format!("{}: {e}", ctx()))?;
+                    wire_of[i - lo] = Some((Wire::Member(members.len()), out_shape));
+                    members.push((i, wires));
+                }
+                _ => {
+                    // Single-input compute op: internal edges see the
+                    // producer's shrunk (valid-conv) shape, head edges the
+                    // declared (halo) shape.
+                    let (wire, in_shape) = match l.inputs.first() {
+                        Some(&p) if in_set(p) => {
+                            wire_of[p - lo].clone().expect("member resolved")
+                        }
+                        src => {
+                            let key = (src.copied(), l.input_shape.clone());
+                            let k = ext_slot(key, &mut externals);
+                            (Wire::Ext(k), l.input_shape.clone())
+                        }
+                    };
+                    let out = l
+                        .op
+                        .output_shape(&[&in_shape])
+                        .map_err(|e| format!("{}: {e}", ctx()))?;
+                    wire_of[i - lo] = Some((Wire::Member(members.len()), out));
+                    members.push((i, vec![wire]));
+                }
+            }
+        }
+        if members.is_empty() {
+            return Err("segment contains only pad nodes; fuse them with a consumer".into());
+        }
+        let out_shape = wire_of[sink - lo].as_ref().expect("sink resolved").1.clone();
+        Ok(SegmentPlan {
+            externals: externals.into_iter().map(|(_, s)| s).collect(),
+            members,
+            out_shape,
+        })
+    }
+
+    /// Whether the node set can be fused into one segment.
+    pub fn segment_buildable_nodes(&self, nodes: &[usize]) -> bool {
+        self.segment_plan(nodes).is_ok()
+    }
+
+    /// Whether layers `lo..hi` (a contiguous index range) can be fused.
     pub fn segment_buildable(&self, lo: usize, hi: usize) -> bool {
-        self.propagate(lo, hi).is_ok()
+        if lo >= hi || hi > self.layers.len() {
+            return false;
+        }
+        let nodes: Vec<usize> = (lo..hi).collect();
+        self.segment_buildable_nodes(&nodes)
     }
 
-    /// Shape propagation for a candidate segment, with valid-convolution
-    /// semantics starting from `layers[lo].input_shape`.
-    fn propagate(&self, lo: usize, hi: usize) -> Result<Vec<i64>, String> {
+    /// The sink's propagated output shape of a contiguous segment
+    /// (valid-convolution semantics): what the fused pyramid actually
+    /// produces, which shrinks relative to the padded reference network.
+    pub fn propagate(&self, lo: usize, hi: usize) -> Result<Vec<i64>, String> {
         if lo >= hi || hi > self.layers.len() {
             return Err(format!("segment [{lo}..{hi}) out of range"));
         }
-        let mut shape = self.layers[lo].input_shape.clone();
-        for l in &self.layers[lo..hi] {
-            shape = l.op.output_shape(&shape)?;
-        }
-        Ok(shape)
+        let nodes: Vec<usize> = (lo..hi).collect();
+        self.segment_plan(&nodes).map(|p| p.out_shape)
     }
 
-    /// Materialize layers `lo..hi` as a [`FusionSet`].
-    pub fn segment_fusion_set(&self, lo: usize, hi: usize) -> Result<FusionSet, String> {
-        self.propagate(lo, hi)
-            .map_err(|e| format!("{}[{lo}..{hi}): {e}", self.name))?;
-        let mut b = FusionSetBuilder::new(
-            &format!("{}[{lo}..{hi})", self.name),
-            &self.layers[lo].input_shape,
-        );
-        for l in &self.layers[lo..hi] {
-            l.op.apply(&mut b);
+    /// Materialize a node set as a [`FusionSet`]: members are emitted in
+    /// topological order through the [`FusionSetBuilder`], with residual
+    /// `add` nodes merging branches and external skip sources arriving as
+    /// additional off-chip input fmaps.
+    pub fn segment_fusion_set_nodes(&self, nodes: &[usize]) -> Result<FusionSet, String> {
+        let plan = self
+            .segment_plan(nodes)
+            .map_err(|e| format!("{}{}: {e}", self.name, Self::nodes_label(nodes)))?;
+        let mut b =
+            FusionSetBuilder::new(&format!("{}{}", self.name, Self::nodes_label(nodes)), &plan.externals[0]);
+        let mut ext_ids: Vec<TensorId> = vec![TensorId(0)];
+        for shape in &plan.externals[1..] {
+            ext_ids.push(b.external(shape));
+        }
+        let mut member_out: Vec<TensorId> = Vec::with_capacity(plan.members.len());
+        for (i, wires) in &plan.members {
+            let tensor = |w: &Wire| match *w {
+                Wire::Ext(k) => ext_ids[k],
+                Wire::Member(m) => member_out[m],
+            };
+            let l = &self.layers[*i];
+            match &l.op {
+                LayerOp::Add => {
+                    let others: Vec<TensorId> = wires[1..].iter().map(tensor).collect();
+                    b.select(tensor(&wires[0]));
+                    b.add_residual(&others);
+                }
+                op => {
+                    b.select(tensor(&wires[0]));
+                    op.apply_unary(&mut b);
+                }
+            }
+            member_out.push(b.cur());
         }
         Ok(b.build())
     }
 
-    /// Memoization key for the segment `lo..hi`: two segments with equal
-    /// signatures build identical Einsums (up to the fusion-set name, which
-    /// carries no model semantics), so their mapspace searches return
-    /// identical results and are run once. Repeated blocks — e.g. the
-    /// identical stage-2 basic blocks of ResNet — collapse this way.
+    /// Materialize layers `lo..hi` as a [`FusionSet`].
+    pub fn segment_fusion_set(&self, lo: usize, hi: usize) -> Result<FusionSet, String> {
+        if lo >= hi || hi > self.layers.len() {
+            return Err(format!("{}: segment [{lo}..{hi}) out of range", self.name));
+        }
+        let nodes: Vec<usize> = (lo..hi).collect();
+        self.segment_fusion_set_nodes(&nodes)
+    }
+
+    /// Memoization key for a node set: a canonical graph hash. External
+    /// input shapes are listed in first-use order and each materialized
+    /// member records its op and input wires by local index, so the
+    /// signature determines the built Einsums exactly (up to tensor names,
+    /// which carry no model semantics) — two segments with equal signatures
+    /// share one mapspace search. Repeated blocks — e.g. the identical
+    /// stage-2 residual blocks of ResNet — collapse this way.
+    pub fn segment_signature_nodes(&self, nodes: &[usize]) -> String {
+        match self.segment_plan(nodes) {
+            Ok(plan) => self.plan_signature(&plan),
+            // Unbuildable sets never reach the memo table; key by identity.
+            Err(_) => format!("unbuildable{nodes:?}"),
+        }
+    }
+
+    /// Canonical signature of a materialization plan (see
+    /// [`Network::segment_signature_nodes`]).
+    pub(crate) fn plan_signature(&self, plan: &SegmentPlan) -> String {
+        let exts: Vec<String> = plan.externals.iter().map(|s| format!("{s:?}")).collect();
+        let local = |w: &Wire| match *w {
+            Wire::Ext(k) => format!("e{k}"),
+            Wire::Member(m) => format!("n{m}"),
+        };
+        let ops: Vec<String> = plan
+            .members
+            .iter()
+            .map(|(i, wires)| {
+                let ws: Vec<String> = wires.iter().map(local).collect();
+                format!("{}<{}", self.layers[*i].op.signature(), ws.join(","))
+            })
+            .collect();
+        format!("{}|{}", exts.join(";"), ops.join("+"))
+    }
+
+    /// Memoization key for the contiguous segment `lo..hi`.
     pub fn segment_signature(&self, lo: usize, hi: usize) -> String {
-        let ops: Vec<String> = self.layers[lo..hi].iter().map(|l| l.op.signature()).collect();
-        format!("{:?}|{}", self.layers[lo].input_shape, ops.join("+"))
+        let nodes: Vec<usize> = (lo..hi).collect();
+        self.segment_signature_nodes(&nodes)
     }
 
     /// Human-readable span, e.g. `conv2_1a..conv2_1b`.
+    pub fn span_name_nodes(&self, nodes: &[usize]) -> String {
+        match nodes {
+            [] => String::new(),
+            [i] => self.layers[*i].name.clone(),
+            _ => format!(
+                "{}..{}",
+                self.layers[nodes[0]].name,
+                self.layers[*nodes.last().unwrap()].name
+            ),
+        }
+    }
+
+    /// Human-readable span of a contiguous segment.
     pub fn span_name(&self, lo: usize, hi: usize) -> String {
-        if hi == lo + 1 {
-            self.layers[lo].name.clone()
+        let nodes: Vec<usize> = (lo..hi).collect();
+        self.span_name_nodes(&nodes)
+    }
+
+    /// Compact label for a node set: `[lo..hi)` when contiguous, the node
+    /// list otherwise.
+    pub(crate) fn nodes_label(nodes: &[usize]) -> String {
+        if nodes.is_empty() {
+            return "{}".into();
+        }
+        let (lo, hi) = (nodes[0], *nodes.last().unwrap() + 1);
+        if hi - lo == nodes.len() {
+            format!("[{lo}..{hi})")
         } else {
-            format!("{}..{}", self.layers[lo].name, self.layers[hi - 1].name)
+            let list: Vec<String> = nodes.iter().map(|i| i.to_string()).collect();
+            format!("{{{}}}", list.join(","))
         }
-    }
-}
-
-// ------------------------------------------------------------- presets --
-
-/// Push one ResNet basic block (two 3×3/pad-1 convs) on a `w`×`w`, `c`-channel
-/// fmap. A single-block segment builds exactly `workloads::conv_conv(w, c)`.
-fn basic_block(layers: &mut Vec<LayerSpec>, stage: &str, block: usize, w: i64, c: i64) {
-    for half in ["a", "b"] {
-        layers.push(LayerSpec {
-            name: format!("{stage}_{n}{half}", n = block + 1),
-            input_shape: vec![c, w + 2, w + 2],
-            op: LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
-        });
-    }
-}
-
-/// Full ResNet-18 main path (He et al. [34]): 7×7/2 stem, 3×3/2 max pool,
-/// four stages of two basic blocks each (stage transitions downsample with a
-/// stride-2 first conv and double the channels). Residual adds and the final
-/// classifier head are not part of the fused-dataflow chain.
-pub fn resnet18() -> Network {
-    let mut layers = vec![
-        LayerSpec {
-            name: "conv1".into(),
-            input_shape: vec![3, 230, 230], // 224 + 2·3 halo, 7×7/2 -> 112
-            op: LayerOp::Conv2d { out_channels: 64, r: 7, s: 7, stride: 2 },
-        },
-        LayerSpec {
-            name: "pool1".into(),
-            input_shape: vec![64, 114, 114], // 112 + 2·1 halo, 3×3/2 -> 56
-            op: LayerOp::MaxPool { k: 3, stride: 2 },
-        },
-    ];
-    // Stage 2: two identical blocks at 56×56×64.
-    for b in 0..2 {
-        basic_block(&mut layers, "conv2", b, 56, 64);
-    }
-    // Stages 3–5: a stride-2, channel-doubling transition block, then an
-    // identity-shaped block.
-    for (stage, &(w, c)) in [(28i64, 128i64), (14, 256), (7, 512)].iter().enumerate() {
-        let stage_name = format!("conv{}", stage + 3);
-        layers.push(LayerSpec {
-            name: format!("{stage_name}_1a"),
-            input_shape: vec![c / 2, 2 * w + 2, 2 * w + 2],
-            op: LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 2 },
-        });
-        layers.push(LayerSpec {
-            name: format!("{stage_name}_1b"),
-            input_shape: vec![c, w + 2, w + 2],
-            op: LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
-        });
-        basic_block(&mut layers, &stage_name, 1, w, c);
-    }
-    Network { name: "resnet18".into(), layers }
-}
-
-/// Full MobileNetV2 main path (Sandler et al. [1]): 3×3/2 stem, seventeen
-/// inverted-residual blocks per the paper's (t, c, n, s) table, and the
-/// final 1×1 expansion conv. Each block is `pwise(t·c_in) → dwise(3×3/s) →
-/// pwise(c_out)`; the t = 1 first block has no expansion pointwise.
-pub fn mobilenet_v2() -> Network {
-    // (expansion t, output channels c, repeats n, first-block stride s) —
-    // the MobileNetV2 paper's Table 2, at 224×224 input.
-    const BLOCKS: [(i64, i64, usize, i64); 7] = [
-        (1, 16, 1, 1),
-        (6, 24, 2, 2),
-        (6, 32, 3, 2),
-        (6, 64, 4, 2),
-        (6, 96, 3, 1),
-        (6, 160, 3, 2),
-        (6, 320, 1, 1),
-    ];
-    let mut layers = vec![LayerSpec {
-        name: "conv0".into(),
-        input_shape: vec![3, 226, 226], // 224 + 2·1 halo, 3×3/2 -> 112
-        op: LayerOp::Conv2d { out_channels: 32, r: 3, s: 3, stride: 2 },
-    }];
-    let mut c_in = 32i64;
-    let mut w = 112i64; // fmap width entering the next block
-    let mut idx = 0usize;
-    for &(t, c_out, n, s) in &BLOCKS {
-        for rep in 0..n {
-            let stride = if rep == 0 { s } else { 1 };
-            idx += 1;
-            let expanded = t * c_in;
-            if t > 1 {
-                layers.push(LayerSpec {
-                    name: format!("block{idx}_expand"),
-                    input_shape: vec![c_in, w, w],
-                    op: LayerOp::Pointwise { out_channels: expanded },
-                });
-            }
-            layers.push(LayerSpec {
-                name: format!("block{idx}_dwise"),
-                input_shape: vec![expanded, w + 2, w + 2], // 3×3/pad-1 halo
-                op: LayerOp::Depthwise { r: 3, s: 3, stride },
-            });
-            w = (w + 2 - 3) / stride + 1;
-            layers.push(LayerSpec {
-                name: format!("block{idx}_project"),
-                input_shape: vec![expanded, w, w],
-                op: LayerOp::Pointwise { out_channels: c_out },
-            });
-            c_in = c_out;
-        }
-    }
-    layers.push(LayerSpec {
-        name: "conv_last".into(),
-        input_shape: vec![c_in, w, w],
-        op: LayerOp::Pointwise { out_channels: 1280 },
-    });
-    Network { name: "mobilenetv2".into(), layers }
-}
-
-/// Full VGG-16 conv trunk (Simonyan & Zisserman [3]): thirteen 3×3/pad-1
-/// convs in five stages separated by 2×2/2 max pools. The classifier head is
-/// not part of the fused-dataflow chain.
-pub fn vgg16() -> Network {
-    const STAGES: [(i64, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
-    let mut layers = Vec::new();
-    let mut c_in = 3i64;
-    let mut w = 224i64;
-    for (stage, &(c, n)) in STAGES.iter().enumerate() {
-        for rep in 0..n {
-            layers.push(LayerSpec {
-                name: format!("conv{}_{}", stage + 1, rep + 1),
-                input_shape: vec![c_in, w + 2, w + 2],
-                op: LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
-            });
-            c_in = c;
-        }
-        layers.push(LayerSpec {
-            name: format!("pool{}", stage + 1),
-            input_shape: vec![c, w, w],
-            op: LayerOp::MaxPool { k: 2, stride: 2 },
-        });
-        w /= 2;
-    }
-    Network { name: "vgg16".into(), layers }
-}
-
-/// One BERT encoder block (Devlin et al. [6]) from the existing attention
-/// and FC pieces: `QKᵀ` scores, score·V attend, then the two FFN matmuls.
-/// The attention→FFN boundary is a reshape (`[B,H,T,E] → [B·T, H·E]`), so
-/// it is a mandatory cut — the partitioner can fuse within the attention
-/// pair and within the FFN pair, but never across.
-pub fn bert_encoder(batch: i64, heads: i64, tokens: i64, emb: i64) -> Network {
-    let d_model = heads * emb;
-    Network {
-        name: format!("bert-encoder(b{batch},h{heads},t{tokens},e{emb})"),
-        layers: vec![
-            LayerSpec {
-                name: "scores".into(),
-                input_shape: vec![batch, heads, tokens, emb],
-                op: LayerOp::AttentionScores { seq: tokens },
-            },
-            LayerSpec {
-                name: "attend".into(),
-                input_shape: vec![batch, heads, tokens, tokens],
-                op: LayerOp::AttentionValues { emb },
-            },
-            LayerSpec {
-                name: "ffn1".into(),
-                input_shape: vec![batch * tokens, d_model],
-                op: LayerOp::Fc { out_features: 4 * d_model },
-            },
-            LayerSpec {
-                name: "ffn2".into(),
-                input_shape: vec![batch * tokens, 4 * d_model],
-                op: LayerOp::Fc { out_features: d_model },
-            },
-        ],
     }
 }
 

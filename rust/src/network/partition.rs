@@ -1,16 +1,21 @@
 //! Fused-segment partitioning: per-segment mapspace search, memoized over
-//! distinct segment shapes, plus dynamic programming over cut points.
+//! distinct segment shapes, plus dynamic programming over cuts.
 //!
-//! A partition of an `n`-layer [`Network`] is a set of cut points
-//! `0 < c_1 < … < c_k < n` splitting the chain into contiguous fused
-//! segments. Each segment is materialized as a
+//! A partition of a [`Network`] covers its (non-virtual) nodes with disjoint
+//! fusable segments — convex single-sink node sets (see
+//! [`Network::segment_plan`]). Each segment is materialized as a
 //! [`FusionSet`](crate::einsum::FusionSet) and searched with the ordinary
 //! [`search::run`] machinery (one [`Evaluator`] session per *distinct*
-//! segment shape — repeated blocks are searched once); the optimal cut set
-//! then minimizes the sum of per-segment scores by DP over the chain.
-//! Additive objectives (latency, energy, off-chip transfers) are exact; EDP
-//! is the standard per-segment-sum proxy for sequentially executed
-//! segments. Capacity-infeasible segments keep the
+//! segment signature — repeated blocks are searched once); the optimal
+//! cover then minimizes the sum of per-segment scores by dynamic
+//! programming. Path-shaped networks take the chain DP over cut points —
+//! the exact pre-graph-IR behavior, bit for bit; general DAGs take a DP
+//! over the ideal lattice of the graph (frontier-based over the
+//! topological order), where a state is the set of already-covered nodes
+//! and a transition applies one candidate segment whose external producers
+//! are all covered. Additive objectives (latency, energy, off-chip
+//! transfers) are exact; EDP is the standard per-segment-sum proxy for
+//! sequentially executed segments. Capacity-infeasible segments keep the
 //! [`INFEASIBLE_PENALTY`](crate::search::Objective::INFEASIBLE_PENALTY)
 //! from the inner search, so the DP prefers any feasible partition over an
 //! infeasible one — the "under a GLB budget" constraint.
@@ -19,25 +24,26 @@
 //! search runs serially inside its worker. Results are merged by segment
 //! index, so the outcome is bit-identical for any worker count.
 
+use super::Network;
 use crate::arch::Arch;
 use crate::coordinator::Coordinator;
 use crate::mapspace::MapSpaceConfig;
 use crate::model::Evaluator;
 use crate::search::{self, Scored, SearchSpec};
-use std::collections::{HashMap, HashSet};
-use super::Network;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap, HashSet};
 
-/// A complete, serializable network-search request: how long segments may
+/// A complete, serializable network-search request: how large segments may
 /// get, and the per-segment mapspace search to run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetworkSearchSpec {
-    /// Longest fused segment considered (in layers). Bounds both the DP
+    /// Largest fused segment considered (in nodes). Bounds both the DP
     /// fan-in and the cost of the deepest per-segment searches.
     pub max_segment_layers: usize,
     /// The mapspace search run on every candidate segment. Its objective is
     /// also the DP's per-segment cost (summed across segments), and its
     /// seed makes the whole network search deterministic. Schedules naming
-    /// ranks absent from a segment's last layer are dropped for that
+    /// ranks absent from a segment's sink layer are dropped for that
     /// segment (rank names vary with segment depth); an empty remainder
     /// falls back to the auto-derived schedules.
     pub search: SearchSpec,
@@ -66,8 +72,11 @@ impl Default for NetworkSearchSpec {
 /// One chosen segment of the optimal partition, with its search result.
 #[derive(Debug, Clone)]
 pub struct SegmentChoice {
-    /// Layer range `[lo, hi)`.
+    /// Sorted member node indices.
+    pub nodes: Vec<usize>,
+    /// Smallest member index (segment start for contiguous segments).
     pub lo: usize,
+    /// Largest member index + 1 (segment end for contiguous segments).
     pub hi: usize,
     /// Human-readable span (first..last layer names).
     pub span: String,
@@ -77,17 +86,44 @@ pub struct SegmentChoice {
     pub best: Scored,
 }
 
-/// Result of a network-level search: the optimal cut set and the per-segment
-/// best mappings.
+impl SegmentChoice {
+    /// Whether the member indices form the contiguous range `[lo, hi)`.
+    pub fn is_contiguous(&self) -> bool {
+        self.hi - self.lo == self.nodes.len()
+    }
+
+    /// Compact label: `[lo..hi)` when contiguous, the node list otherwise.
+    pub fn range_label(&self) -> String {
+        Network::nodes_label(&self.nodes)
+    }
+
+    /// Whether this segment fuses across a branch point: it contains a
+    /// multi-input (residual `add`) node together with at least one of the
+    /// layers feeding it — the merge actually happens on-chip. A segment
+    /// whose head is an add with all operands external does not count.
+    pub fn spans_branch(&self, net: &Network) -> bool {
+        self.nodes.iter().any(|&i| {
+            net.layers[i].inputs.len() > 1
+                && net.layers[i]
+                    .inputs
+                    .iter()
+                    .any(|p| self.nodes.binary_search(p).is_ok())
+        })
+    }
+}
+
+/// Result of a network-level search: the optimal segment cover and the
+/// per-segment best mappings.
 #[derive(Debug, Clone)]
 pub struct NetworkSearchResult {
-    /// Interior cut points (ascending, exclusive of 0 and n).
+    /// Interior segment boundaries: the start index of every segment but
+    /// the first (for path networks, exactly the chain cut points).
     pub cuts: Vec<usize>,
-    /// The chosen segments, in chain order.
+    /// The chosen segments, ordered by their largest node index.
     pub segments: Vec<SegmentChoice>,
     /// Sum of per-segment best scores (the DP objective).
     pub total_score: f64,
-    /// How many distinct segment shapes were actually searched.
+    /// How many distinct segment signatures were actually searched.
     pub distinct_searched: usize,
     /// How many candidate segments the DP considered.
     pub candidate_segments: usize,
@@ -113,9 +149,48 @@ impl NetworkSearchResult {
     pub fn all_fit(&self) -> bool {
         self.segments.iter().all(|s| s.best.metrics.capacity_ok)
     }
+
+    /// One row of `BENCH_network.json`. The bench binary and the schema
+    /// test both build rows through this method, so the CI artifact cannot
+    /// silently drift from `util::bench::check_network_bench_schema`.
+    pub fn bench_row(&self, workload: &str, layers: usize, mean_ns: f64) -> Json {
+        Json::Obj(
+            [
+                ("workload".to_string(), Json::Str(workload.to_string())),
+                ("mean_ns".to_string(), Json::Num(mean_ns)),
+                ("layers".to_string(), Json::Num(layers as f64)),
+                ("cuts".to_string(), Json::Num(self.cuts.len() as f64)),
+                (
+                    "candidate_segments".to_string(),
+                    Json::Num(self.candidate_segments as f64),
+                ),
+                (
+                    "distinct_searched".to_string(),
+                    Json::Num(self.distinct_searched as f64),
+                ),
+                ("total_score".to_string(), Json::Num(self.total_score)),
+                (
+                    "total_offchip_elems".to_string(),
+                    Json::Num(self.total_offchip() as f64),
+                ),
+                ("all_fit".to_string(), Json::Bool(self.all_fit())),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
 }
 
-/// Drop schedules naming ranks the segment's last layer does not have
+/// A candidate segment with its precomputed signature — computed once per
+/// candidate, so neither the memo table nor the DP inner loop rebuilds
+/// signature or span strings.
+#[derive(Debug, Clone)]
+pub(crate) struct Candidate {
+    pub(crate) nodes: Vec<usize>,
+    pub(crate) signature: String,
+}
+
+/// Drop schedules naming ranks the segment's sink layer does not have
 /// (segment depth changes the rank-name suffix); an empty remainder falls
 /// back to the auto-derived schedules.
 fn mapspace_for_segment(base: &MapSpaceConfig, fs: &crate::einsum::FusionSet) -> MapSpaceConfig {
@@ -132,29 +207,27 @@ fn mapspace_for_segment(base: &MapSpaceConfig, fs: &crate::einsum::FusionSet) ->
     MapSpaceConfig { schedules, ..base.clone() }
 }
 
-/// Search every distinct signature among `segments` once, in parallel, and
-/// return the best `Scored` per signature. Segments whose search finds
+/// Search every distinct signature among `candidates` once, in parallel,
+/// and return the best `Scored` per signature. Segments whose search finds
 /// nothing (or whose specs fail validation) map to `None`.
 fn search_distinct(
     net: &Network,
     arch: &Arch,
     spec: &NetworkSearchSpec,
-    segments: &[(usize, usize)],
+    candidates: &[Candidate],
     pool: &Coordinator,
 ) -> Result<HashMap<String, Option<Scored>>, String> {
-    let mut order: Vec<(String, (usize, usize))> = Vec::new();
-    let mut seen: HashSet<String> = HashSet::new();
-    for &(lo, hi) in segments {
-        let sig = net.segment_signature(lo, hi);
-        if seen.insert(sig.clone()) {
-            order.push((sig, (lo, hi)));
+    let mut order: Vec<(&str, &[usize])> = Vec::new();
+    let mut seen: HashSet<&str> = HashSet::new();
+    for c in candidates {
+        if seen.insert(c.signature.as_str()) {
+            order.push((c.signature.as_str(), c.nodes.as_slice()));
         }
     }
     // One Evaluator session per distinct shape; the inner search is serial
     // so the outer fan-out over distinct shapes owns all the parallelism.
     let results: Vec<Result<Option<Scored>, String>> = pool.run(order.len(), |i| {
-        let (lo, hi) = order[i].1;
-        let fs = net.segment_fusion_set(lo, hi)?;
+        let fs = net.segment_fusion_set_nodes(order[i].1)?;
         let ev = Evaluator::new(&fs, arch)?;
         let seg_spec = SearchSpec {
             mapspace: mapspace_for_segment(&spec.search.mapspace, &fs),
@@ -165,35 +238,39 @@ fn search_distinct(
     });
     let mut out = HashMap::new();
     for ((sig, _), res) in order.into_iter().zip(results) {
-        out.insert(sig, res?);
+        out.insert(sig.to_string(), res?);
     }
     Ok(out)
 }
 
 fn assemble(
     net: &Network,
-    ranges: &[(usize, usize)],
+    mut chosen: Vec<Candidate>,
     costs: &HashMap<String, Option<Scored>>,
     candidate_segments: usize,
 ) -> Result<NetworkSearchResult, String> {
-    let mut segments = Vec::with_capacity(ranges.len());
-    for &(lo, hi) in ranges {
-        let sig = net.segment_signature(lo, hi);
+    // Present segments in topological order of their sinks.
+    chosen.sort_by_key(|c| *c.nodes.last().unwrap());
+    let mut segments = Vec::with_capacity(chosen.len());
+    for c in chosen {
         let best = costs
-            .get(&sig)
+            .get(&c.signature)
             .and_then(|o| o.clone())
-            .ok_or_else(|| format!("segment {} found no mapping", net.span_name(lo, hi)))?;
+            .ok_or_else(|| {
+                format!("segment {} found no mapping", net.span_name_nodes(&c.nodes))
+            })?;
         segments.push(SegmentChoice {
-            lo,
-            hi,
-            span: net.span_name(lo, hi),
-            signature: sig,
+            lo: c.nodes[0],
+            hi: *c.nodes.last().unwrap() + 1,
+            span: net.span_name_nodes(&c.nodes),
+            signature: c.signature,
             best,
+            nodes: c.nodes,
         });
     }
     let total_score = segments.iter().map(|s| s.best.score).sum();
     Ok(NetworkSearchResult {
-        cuts: ranges.iter().skip(1).map(|&(lo, _)| lo).collect(),
+        cuts: segments.iter().skip(1).map(|s| s.lo).collect(),
         segments,
         total_score,
         distinct_searched: costs.len(),
@@ -201,8 +278,288 @@ fn assemble(
     })
 }
 
-/// Find the optimal contiguous fused-segment partition of `net` under
-/// `spec`, minimizing the sum of per-segment best scores.
+// ------------------------------------------------------ chain (path) DP --
+
+/// Candidate segments of a path network: every buildable contiguous range
+/// `[lo, hi)` up to the length cap, in `(lo asc, hi asc)` order — the cut
+/// enumeration and DP of the chain IR, preserved exactly.
+pub(crate) fn chain_candidates(net: &Network, max_seg: usize) -> Vec<Candidate> {
+    let n = net.num_layers();
+    let mut candidates = Vec::new();
+    for lo in 0..n {
+        for hi in (lo + 1)..=(lo + max_seg).min(n) {
+            let nodes: Vec<usize> = (lo..hi).collect();
+            if let Ok(plan) = net.segment_plan(&nodes) {
+                candidates.push(Candidate { signature: net.plan_signature(&plan), nodes });
+            }
+        }
+    }
+    candidates
+}
+
+fn chain_dp(
+    net: &Network,
+    candidates: &[Candidate],
+    costs: &HashMap<String, Option<Scored>>,
+) -> Result<Vec<Candidate>, String> {
+    let n = net.num_layers();
+    // DP over prefix lengths: best[j] = min over candidate (lo, j) of
+    // best[lo] + cost(lo, j). Ties resolve to the smallest lo (longest
+    // final segment), making the cut set deterministic.
+    let mut best = vec![f64::INFINITY; n + 1];
+    let mut back: Vec<Option<usize>> = vec![None; n + 1];
+    best[0] = 0.0;
+    for (ci, c) in candidates.iter().enumerate() {
+        let Some(scored) = costs.get(&c.signature).and_then(|o| o.as_ref()) else {
+            continue; // segment search found nothing: unusable
+        };
+        let (lo, hi) = (c.nodes[0], *c.nodes.last().unwrap() + 1);
+        let total = best[lo] + scored.score;
+        if total < best[hi] {
+            best[hi] = total;
+            back[hi] = Some(ci);
+        }
+    }
+    if best[n].is_infinite() {
+        return Err(format!(
+            "no feasible partition of {} (every covering segment's search came up empty)",
+            net.name
+        ));
+    }
+    // Reconstruct the chosen ranges.
+    let mut chosen = Vec::new();
+    let mut hi = n;
+    while hi > 0 {
+        let ci = back[hi].expect("DP backpointer chain broken");
+        chosen.push(candidates[ci].clone());
+        hi = candidates[ci].nodes[0];
+    }
+    Ok(chosen)
+}
+
+// ------------------------------------------------------- graph-cut DP --
+
+/// Bit positions of the non-virtual (coverable) nodes. Virtual nodes
+/// (concat) are pure DRAM address arithmetic: they belong to no segment and
+/// cost nothing.
+fn real_positions(net: &Network) -> Result<Vec<Option<usize>>, String> {
+    let mut pos = vec![None; net.num_layers()];
+    let mut next = 0usize;
+    for (i, l) in net.layers.iter().enumerate() {
+        if !l.op.is_virtual() {
+            pos[i] = Some(next);
+            next += 1;
+        }
+    }
+    if next > 128 {
+        return Err(format!(
+            "graph DP supports up to 128 coverable nodes, network has {next}"
+        ));
+    }
+    Ok(pos)
+}
+
+/// The non-virtual ancestors a node exposes when used as a segment input:
+/// itself when non-virtual, else the closure of its producers (virtual
+/// nodes pass through).
+fn nonvirtual_closure(net: &Network, pos: &[Option<usize>]) -> Vec<u128> {
+    let mut closure = vec![0u128; net.num_layers()];
+    for (i, l) in net.layers.iter().enumerate() {
+        closure[i] = match pos[i] {
+            Some(b) => 1u128 << b,
+            None => l.inputs.iter().map(|&p| closure[p]).fold(0, |a, c| a | c),
+        };
+    }
+    closure
+}
+
+/// Candidate segments of a general DAG: for every non-virtual sink,
+/// subsets of its non-virtual ancestors within `max_seg - 1` hops, filtered
+/// to fusable plans. Every fusable segment arises exactly once (at its
+/// unique sink).
+pub(crate) fn dag_candidates(net: &Network, max_seg: usize) -> Result<Vec<Candidate>, String> {
+    let n = net.num_layers();
+    let mut candidates = Vec::new();
+    for sink in 0..n {
+        if net.layers[sink].op.is_virtual() {
+            continue;
+        }
+        // Backward BFS from the sink, collecting non-virtual ancestors
+        // within max_seg - 1 hops. Virtual nodes are walls: a member path
+        // to the sink can only run through members, which are non-virtual.
+        let mut pool: Vec<usize> = Vec::new();
+        let mut frontier = vec![sink];
+        let mut seen: HashSet<usize> = frontier.iter().copied().collect();
+        for _ in 1..max_seg {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                for &p in &net.layers[v].inputs {
+                    if seen.insert(p) && !net.layers[p].op.is_virtual() {
+                        pool.push(p);
+                        next.push(p);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        pool.sort_unstable();
+        // Subsets of the pool of size < max_seg, plus the sink.
+        let mut subsets_checked = 0usize;
+        let mut stack_nodes: Vec<usize> = Vec::new();
+        enumerate_subsets(
+            &pool,
+            0,
+            max_seg - 1,
+            &mut stack_nodes,
+            &mut |subset: &[usize]| -> Result<(), String> {
+                subsets_checked += 1;
+                if subsets_checked > 200_000 {
+                    return Err(format!(
+                        "candidate segment explosion around '{}'; reduce max_segment_layers",
+                        net.layers[sink].name
+                    ));
+                }
+                let mut nodes: Vec<usize> = subset.to_vec();
+                nodes.push(sink);
+                nodes.sort_unstable();
+                if let Ok(plan) = net.segment_plan(&nodes) {
+                    candidates.push(Candidate { signature: net.plan_signature(&plan), nodes });
+                }
+                Ok(())
+            },
+        )?;
+    }
+    Ok(candidates)
+}
+
+fn enumerate_subsets(
+    pool: &[usize],
+    start: usize,
+    budget: usize,
+    stack: &mut Vec<usize>,
+    visit: &mut dyn FnMut(&[usize]) -> Result<(), String>,
+) -> Result<(), String> {
+    visit(stack)?;
+    if budget == 0 {
+        return Ok(());
+    }
+    for k in start..pool.len() {
+        stack.push(pool[k]);
+        enumerate_subsets(pool, k + 1, budget - 1, stack, visit)?;
+        stack.pop();
+    }
+    Ok(())
+}
+
+/// DP over the ideal lattice: a state is the set of covered non-virtual
+/// nodes (an ideal of the DAG); a transition applies a candidate segment
+/// whose non-virtual external producers are all covered. States are
+/// processed by ascending popcount, then ascending mask; candidates in
+/// enumeration order; strict improvement keeps the first minimum — all
+/// deterministic, and on a path graph it coincides with the chain DP's
+/// tie-breaking.
+fn dag_dp(
+    net: &Network,
+    candidates: &[Candidate],
+    costs: &HashMap<String, Option<Scored>>,
+) -> Result<Vec<Candidate>, String> {
+    let pos = real_positions(net)?;
+    let closure = nonvirtual_closure(net, &pos);
+    let nbits = pos.iter().flatten().count();
+    let full: u128 = if nbits == 128 { u128::MAX } else { (1u128 << nbits) - 1 };
+
+    // Per-candidate cover mask, requirement mask, and score — resolved
+    // once here so the DP inner loop is hash- and allocation-free
+    // (candidates whose search found nothing drop out entirely; relative
+    // order of the usable ones is preserved, keeping tie-breaks stable).
+    let mut trans: Vec<(usize, u128, u128, f64)> = Vec::with_capacity(candidates.len());
+    for (ci, c) in candidates.iter().enumerate() {
+        let Some(scored) = costs.get(&c.signature).and_then(|o| o.as_ref()) else {
+            continue; // segment search found nothing: unusable
+        };
+        let mut mask = 0u128;
+        for &i in &c.nodes {
+            mask |= 1u128 << pos[i].expect("candidate members are non-virtual");
+        }
+        let mut need = 0u128;
+        for &i in &c.nodes {
+            for &p in &net.layers[i].inputs {
+                if c.nodes.binary_search(&p).is_err() {
+                    need |= closure[p];
+                }
+            }
+        }
+        trans.push((ci, mask, need & !mask, scored.score));
+    }
+
+    // States layered by popcount; BTreeMap gives ascending-mask iteration.
+    // Real DNN graphs are narrow (width ≤ 2-3), so the reachable ideal
+    // count stays near-linear in n; the cap turns a pathologically wide
+    // hand-written graph into a clean error instead of an OOM.
+    const MAX_STATES: usize = 500_000;
+    let mut num_states = 1usize;
+    let mut layers: Vec<BTreeMap<u128, (f64, usize, u128)>> =
+        vec![BTreeMap::new(); nbits + 1];
+    layers[0].insert(0, (0.0, usize::MAX, 0));
+    for k in 0..nbits {
+        let states: Vec<(u128, f64)> =
+            layers[k].iter().map(|(&m, &(s, _, _))| (m, s)).collect();
+        for (state, score) in states {
+            for &(ci, mask, need, seg_score) in &trans {
+                if mask & state != 0 || need & !state != 0 {
+                    continue;
+                }
+                let nm = state | mask;
+                let total = score + seg_score;
+                let slot = layers[nm.count_ones() as usize].entry(nm);
+                match slot {
+                    std::collections::btree_map::Entry::Vacant(v) => {
+                        num_states += 1;
+                        if num_states > MAX_STATES {
+                            return Err(format!(
+                                "graph-cut DP state explosion on {} (> {MAX_STATES} cover \
+                                 states); the graph is too wide — reduce max_segment_layers \
+                                 or cut the network",
+                                net.name
+                            ));
+                        }
+                        v.insert((total, ci, state));
+                    }
+                    std::collections::btree_map::Entry::Occupied(mut o) => {
+                        if total < o.get().0 {
+                            o.insert((total, ci, state));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let Some(&(_, mut ci, mut prev)) = layers[nbits].get(&full) else {
+        return Err(format!(
+            "no feasible partition of {} (every covering segment's search came up empty)",
+            net.name
+        ));
+    };
+    let mut chosen = Vec::new();
+    loop {
+        chosen.push(candidates[ci].clone());
+        if prev == 0 {
+            break;
+        }
+        let k = prev.count_ones() as usize;
+        let &(_, pci, pprev) = layers[k].get(&prev).expect("DP backpointer chain broken");
+        ci = pci;
+        prev = pprev;
+    }
+    Ok(chosen)
+}
+
+// ------------------------------------------------------------- entries --
+
+/// Find the optimal fused-segment partition of `net` under `spec`,
+/// minimizing the sum of per-segment best scores. Path-shaped networks run
+/// the chain cut-point DP (identical to the chain IR); general DAGs run
+/// the graph-cut DP.
 ///
 /// Deterministic given (network, architecture, spec) for any worker count.
 pub fn search_network(
@@ -215,57 +572,104 @@ pub fn search_network(
     if spec.max_segment_layers == 0 {
         return Err("max_segment_layers must be >= 1".into());
     }
+    if net.is_chain() {
+        let candidates = chain_candidates(net, spec.max_segment_layers);
+        let costs = search_distinct(net, arch, spec, &candidates, pool)?;
+        let chosen = chain_dp(net, &candidates, &costs)?;
+        assemble(net, chosen, &costs, candidates.len())
+    } else {
+        search_network_dag_impl(net, arch, spec, pool)
+    }
+}
+
+/// Force the graph-cut DP even on path-shaped networks. [`search_network`]
+/// dispatches paths to the chain DP; this entry exists so tests can pin
+/// that both DPs return bit-identical results on paths.
+pub fn search_network_dag(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    pool: &Coordinator,
+) -> Result<NetworkSearchResult, String> {
+    net.validate()?;
+    if spec.max_segment_layers == 0 {
+        return Err("max_segment_layers must be >= 1".into());
+    }
+    search_network_dag_impl(net, arch, spec, pool)
+}
+
+fn search_network_dag_impl(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    pool: &Coordinator,
+) -> Result<NetworkSearchResult, String> {
+    // Cheap structural limit first: reject oversized graphs before paying
+    // for hundreds of per-segment mapspace searches the DP cannot use.
+    real_positions(net)?;
+    let candidates = dag_candidates(net, spec.max_segment_layers)?;
+    let costs = search_distinct(net, arch, spec, &candidates, pool)?;
+    let chosen = dag_dp(net, &candidates, &costs)?;
+    assemble(net, chosen, &costs, candidates.len())
+}
+
+/// Score a *given* partition of `net` into explicit node-set segments: the
+/// per-segment searches run exactly as in [`search_network`], but the cover
+/// is fixed. Segments must be disjoint, fusable, and together cover every
+/// non-virtual node.
+pub fn evaluate_segments(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    segments: &[Vec<usize>],
+    pool: &Coordinator,
+) -> Result<NetworkSearchResult, String> {
+    net.validate()?;
     let n = net.num_layers();
-    // Candidate segments: every buildable [lo, hi) up to the length cap.
-    let mut candidates: Vec<(usize, usize)> = Vec::new();
-    for lo in 0..n {
-        for hi in (lo + 1)..=(lo + spec.max_segment_layers).min(n) {
-            if net.segment_buildable(lo, hi) {
-                candidates.push((lo, hi));
+    let mut covered = vec![false; n];
+    let mut candidates = Vec::with_capacity(segments.len());
+    for seg in segments {
+        let mut nodes = seg.clone();
+        nodes.sort_unstable();
+        nodes.dedup();
+        if nodes.len() != seg.len() {
+            return Err(format!("segment {seg:?} has duplicate nodes"));
+        }
+        for &i in &nodes {
+            if i >= n {
+                return Err(format!("segment node {i} out of range (network has {n} layers)"));
             }
+            if covered[i] {
+                return Err(format!(
+                    "node {i} ('{}') appears in more than one segment",
+                    net.layers[i].name
+                ));
+            }
+            covered[i] = true;
+        }
+        let plan = net.segment_plan(&nodes).map_err(|e| {
+            format!(
+                "segment {} is not fusable (missing a mandatory cut?): {e}",
+                net.span_name_nodes(&nodes)
+            )
+        })?;
+        candidates.push(Candidate { signature: net.plan_signature(&plan), nodes });
+    }
+    for (i, l) in net.layers.iter().enumerate() {
+        if !covered[i] && !l.op.is_virtual() {
+            return Err(format!("node {i} ('{}') is not covered by any segment", l.name));
         }
     }
     let costs = search_distinct(net, arch, spec, &candidates, pool)?;
-
-    // DP over prefix lengths: best[j] = min over candidate (lo, j) of
-    // best[lo] + cost(lo, j). Ties resolve to the smallest lo (longest
-    // final segment), making the cut set deterministic.
-    let mut best = vec![f64::INFINITY; n + 1];
-    let mut back: Vec<Option<usize>> = vec![None; n + 1];
-    best[0] = 0.0;
-    for &(lo, hi) in &candidates {
-        let Some(scored) = costs.get(&net.segment_signature(lo, hi)).and_then(|o| o.as_ref())
-        else {
-            continue; // segment search found nothing: unusable
-        };
-        let total = best[lo] + scored.score;
-        if total < best[hi] {
-            best[hi] = total;
-            back[hi] = Some(lo);
-        }
-    }
-    if best[n].is_infinite() {
-        return Err(format!(
-            "no feasible partition of {} (every covering segment's search came up empty)",
-            net.name
-        ));
-    }
-    // Reconstruct the chosen ranges.
-    let mut ranges = Vec::new();
-    let mut hi = n;
-    while hi > 0 {
-        let lo = back[hi].expect("DP backpointer chain broken");
-        ranges.push((lo, hi));
-        hi = lo;
-    }
-    ranges.reverse();
-    assemble(net, &ranges, &costs, candidates.len())
+    let nseg = candidates.len();
+    assemble(net, candidates, &costs, nseg)
 }
 
-/// Score a *given* partition (cut points, ascending, interior) of `net`:
-/// the per-segment searches run exactly as in [`search_network`], but the
-/// cut set is fixed. Errors if a cut is out of range or a forced segment is
-/// unbuildable (e.g. the user failed to cut at a reshape boundary).
+/// Score a *given* partition described by chain cut points (ascending,
+/// interior) — the contiguous ranges between cuts become the segments,
+/// with virtual nodes dropped (they belong to no segment). Errors if a cut
+/// is out of range or a forced segment is unbuildable (e.g. the user failed
+/// to cut at a reshape boundary).
 pub fn evaluate_partition(
     net: &Network,
     arch: &Arch,
@@ -289,17 +693,10 @@ pub fn evaluate_partition(
         bounds.push(c);
     }
     bounds.push(n);
-    let ranges: Vec<(usize, usize)> =
-        bounds.windows(2).map(|w| (w[0], w[1])).collect();
-    for &(lo, hi) in &ranges {
-        if !net.segment_buildable(lo, hi) {
-            return Err(format!(
-                "segment {} is not fusable (missing a mandatory cut?)",
-                net.span_name(lo, hi)
-            ));
-        }
-    }
-    let costs = search_distinct(net, arch, spec, &ranges, pool)?;
-    let nranges = ranges.len();
-    assemble(net, &ranges, &costs, nranges)
+    let segments: Vec<Vec<usize>> = bounds
+        .windows(2)
+        .map(|w| (w[0]..w[1]).filter(|&i| !net.layers[i].op.is_virtual()).collect())
+        .filter(|s: &Vec<usize>| !s.is_empty())
+        .collect();
+    evaluate_segments(net, arch, spec, &segments, pool)
 }

@@ -1,0 +1,229 @@
+//! Built-in whole-DNN graphs: ResNet-18 (with its real residual edges, and
+//! a chain-projected regression variant), MobileNetV2 (with its inverted-
+//! residual skip edges), VGG-16, and a BERT encoder block.
+
+use super::{LayerOp, Network};
+
+/// Full ResNet-18 (He et al. [34]) **with its residual edges**: 7×7/2 stem,
+/// 3×3/2 max pool, four stages of two residual blocks each. Stage
+/// transitions downsample with a stride-2 first conv and a 1×1/2 projection
+/// on the skip path; every block ends in an elementwise `add` merging the
+/// main path with the skip. 29 nodes. The classifier head is not part of
+/// the fused-dataflow graph.
+pub fn resnet18() -> Network {
+    let mut net = Network { name: "resnet18".into(), layers: vec![] };
+    net.push(
+        "conv1",
+        &[3, 230, 230], // 224 + 2·3 halo, 7×7/2 -> 112
+        LayerOp::Conv2d { out_channels: 64, r: 7, s: 7, stride: 2 },
+    );
+    // 112 + 2·1 halo, 3×3/2 -> 56
+    let mut prev = net.push("pool1", &[64, 114, 114], LayerOp::MaxPool { k: 3, stride: 2 });
+    // Stage 2: two identity residual blocks at 56×56×64.
+    for b in 1..=2 {
+        let conv = LayerOp::Conv2d { out_channels: 64, r: 3, s: 3, stride: 1 };
+        net.push_from(&format!("conv2_{b}a"), &[64, 58, 58], conv.clone(), vec![prev]);
+        let main = net.push(&format!("conv2_{b}b"), &[64, 58, 58], conv);
+        prev = net.push_from(&format!("add2_{b}"), &[64, 56, 56], LayerOp::Add, vec![main, prev]);
+    }
+    // Stages 3–5: a downsampling block (stride-2 main path, 1×1/2 projected
+    // skip), then an identity block.
+    for (si, &(w, c)) in [(28i64, 128i64), (14, 256), (7, 512)].iter().enumerate() {
+        let stage = si + 3;
+        let half = c / 2;
+        let conv1 = LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 };
+        net.push_from(
+            &format!("conv{stage}_1a"),
+            &[half, 2 * w + 2, 2 * w + 2],
+            LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 2 },
+            vec![prev],
+        );
+        let main = net.push(&format!("conv{stage}_1b"), &[c, w + 2, w + 2], conv1.clone());
+        let proj = net.push_from(
+            &format!("conv{stage}_proj"),
+            &[half, 2 * w, 2 * w],
+            LayerOp::Conv2d { out_channels: c, r: 1, s: 1, stride: 2 },
+            vec![prev],
+        );
+        prev = net.push_from(
+            &format!("add{stage}_1"),
+            &[c, w, w],
+            LayerOp::Add,
+            vec![main, proj],
+        );
+        net.push_from(&format!("conv{stage}_2a"), &[c, w + 2, w + 2], conv1.clone(), vec![prev]);
+        let main = net.push(&format!("conv{stage}_2b"), &[c, w + 2, w + 2], conv1);
+        prev = net.push_from(&format!("add{stage}_2"), &[c, w, w], LayerOp::Add, vec![main, prev]);
+    }
+    net
+}
+
+/// The PR 3 chain projection of ResNet-18: the 18-layer main path with the
+/// residual adds and skip projections dropped. Kept as a regression anchor —
+/// path-shaped graphs must reproduce the chain partitioner bit for bit.
+pub fn resnet18_chain() -> Network {
+    let mut net = Network { name: "resnet18_chain".into(), layers: vec![] };
+    net.push(
+        "conv1",
+        &[3, 230, 230], // 224 + 2·3 halo, 7×7/2 -> 112
+        LayerOp::Conv2d { out_channels: 64, r: 7, s: 7, stride: 2 },
+    );
+    net.push("pool1", &[64, 114, 114], LayerOp::MaxPool { k: 3, stride: 2 });
+    // Stage 2: two identical blocks at 56×56×64.
+    for b in 1..=2 {
+        for half in ["a", "b"] {
+            net.push(
+                &format!("conv2_{b}{half}"),
+                &[64, 58, 58],
+                LayerOp::Conv2d { out_channels: 64, r: 3, s: 3, stride: 1 },
+            );
+        }
+    }
+    // Stages 3–5: a stride-2, channel-doubling transition block, then an
+    // identity-shaped block.
+    for (si, &(w, c)) in [(28i64, 128i64), (14, 256), (7, 512)].iter().enumerate() {
+        let stage = si + 3;
+        net.push(
+            &format!("conv{stage}_1a"),
+            &[c / 2, 2 * w + 2, 2 * w + 2],
+            LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 2 },
+        );
+        net.push(
+            &format!("conv{stage}_1b"),
+            &[c, w + 2, w + 2],
+            LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
+        );
+        for half in ["a", "b"] {
+            net.push(
+                &format!("conv{stage}_2{half}"),
+                &[c, w + 2, w + 2],
+                LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
+            );
+        }
+    }
+    net
+}
+
+/// Full MobileNetV2 (Sandler et al. [1]) **with its skip edges**: 3×3/2
+/// stem, seventeen inverted-residual blocks per the paper's (t, c, n, s)
+/// table, and the final 1×1 expansion conv. Each block is
+/// `pwise(t·c_in) → dwise(3×3/s) → pwise(c_out)`; the t = 1 first block has
+/// no expansion pointwise, and every stride-1, shape-preserving repeat ends
+/// in a residual `add` with the block input. 62 nodes.
+pub fn mobilenet_v2() -> Network {
+    // (expansion t, output channels c, repeats n, first-block stride s) —
+    // the MobileNetV2 paper's Table 2, at 224×224 input.
+    const BLOCKS: [(i64, i64, usize, i64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut net = Network { name: "mobilenetv2".into(), layers: vec![] };
+    // 224 + 2·1 halo, 3×3/2 -> 112
+    let mut prev = net.push(
+        "conv0",
+        &[3, 226, 226],
+        LayerOp::Conv2d { out_channels: 32, r: 3, s: 3, stride: 2 },
+    );
+    let mut c_in = 32i64;
+    let mut w = 112i64; // fmap width entering the next block
+    let mut idx = 0usize;
+    for &(t, c_out, n, s) in &BLOCKS {
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            idx += 1;
+            let block_in = prev;
+            let expanded = t * c_in;
+            if t > 1 {
+                prev = net.push_from(
+                    &format!("block{idx}_expand"),
+                    &[c_in, w, w],
+                    LayerOp::Pointwise { out_channels: expanded },
+                    vec![prev],
+                );
+            }
+            prev = net.push_from(
+                &format!("block{idx}_dwise"),
+                &[expanded, w + 2, w + 2], // 3×3/pad-1 halo
+                LayerOp::Depthwise { r: 3, s: 3, stride },
+                vec![prev],
+            );
+            w = (w + 2 - 3) / stride + 1;
+            prev = net.push_from(
+                &format!("block{idx}_project"),
+                &[expanded, w, w],
+                LayerOp::Pointwise { out_channels: c_out },
+                vec![prev],
+            );
+            if stride == 1 && c_in == c_out {
+                prev = net.push_from(
+                    &format!("block{idx}_add"),
+                    &[c_out, w, w],
+                    LayerOp::Add,
+                    vec![prev, block_in],
+                );
+            }
+            c_in = c_out;
+        }
+    }
+    net.push_from(
+        "conv_last",
+        &[c_in, w, w],
+        LayerOp::Pointwise { out_channels: 1280 },
+        vec![prev],
+    );
+    net
+}
+
+/// Full VGG-16 conv trunk (Simonyan & Zisserman [3]): thirteen 3×3/pad-1
+/// convs in five stages separated by 2×2/2 max pools — a pure chain. The
+/// classifier head is not part of the fused-dataflow graph.
+pub fn vgg16() -> Network {
+    const STAGES: [(i64, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut net = Network { name: "vgg16".into(), layers: vec![] };
+    let mut c_in = 3i64;
+    let mut w = 224i64;
+    for (stage, &(c, n)) in STAGES.iter().enumerate() {
+        for rep in 0..n {
+            net.push(
+                &format!("conv{}_{}", stage + 1, rep + 1),
+                &[c_in, w + 2, w + 2],
+                LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 },
+            );
+            c_in = c;
+        }
+        net.push(&format!("pool{}", stage + 1), &[c, w, w], LayerOp::MaxPool { k: 2, stride: 2 });
+        w /= 2;
+    }
+    net
+}
+
+/// One BERT encoder block (Devlin et al. [6]) from the existing attention
+/// and FC pieces: `QKᵀ` scores, score·V attend, then the two FFN matmuls.
+/// The attention→FFN boundary is a reshape (`[B,H,T,E] → [B·T, H·E]`), so
+/// it is a mandatory cut — the partitioner can fuse within the attention
+/// pair and within the FFN pair, but never across.
+pub fn bert_encoder(batch: i64, heads: i64, tokens: i64, emb: i64) -> Network {
+    let d_model = heads * emb;
+    let mut net = Network {
+        name: format!("bert-encoder(b{batch},h{heads},t{tokens},e{emb})"),
+        layers: vec![],
+    };
+    net.push(
+        "scores",
+        &[batch, heads, tokens, emb],
+        LayerOp::AttentionScores { seq: tokens },
+    );
+    net.push(
+        "attend",
+        &[batch, heads, tokens, tokens],
+        LayerOp::AttentionValues { emb },
+    );
+    net.push("ffn1", &[batch * tokens, d_model], LayerOp::Fc { out_features: 4 * d_model });
+    net.push("ffn2", &[batch * tokens, 4 * d_model], LayerOp::Fc { out_features: d_model });
+    net
+}

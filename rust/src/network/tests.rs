@@ -1,27 +1,42 @@
+use super::partition::{chain_candidates, dag_candidates};
 use super::*;
 use crate::arch::Arch;
 use crate::coordinator::Coordinator;
-use crate::einsum::workloads;
+use crate::einsum::{workloads, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::MapSpaceConfig;
 use crate::model::Evaluator;
-use crate::search::{self, Algorithm, SearchSpec};
+use crate::search::{self, Algorithm, Objective, SearchSpec};
+use crate::util::bench::check_network_bench_schema;
+use crate::util::json::Json;
+use std::collections::HashMap;
 
 /// A small chain of `n` identical 3×3 convs on an 8-channel 18×18 fmap
 /// (declared with the pad-1 halo, like every conv preset).
 fn tiny_conv_chain(n: usize) -> Network {
-    Network {
-        name: format!("tiny{n}"),
-        layers: (0..n)
-            .map(|i| LayerSpec {
-                name: format!("conv{i}"),
-                input_shape: vec![8, 18, 18],
-                op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
-            })
-            .collect(),
+    let mut net = Network { name: format!("tiny{n}"), layers: vec![] };
+    for i in 0..n {
+        net.push(
+            &format!("conv{i}"),
+            &[8, 18, 18],
+            LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+        );
     }
+    net
 }
 
-/// A cheap spec for the tiny chains: exhaustive over a pruned mapspace.
+/// A small residual graph: conv0 -> conv_a -> conv_b -> add(conv_b, conv0).
+fn tiny_residual() -> Network {
+    let conv = || LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 };
+    let mut net = Network { name: "tinyres".into(), layers: vec![] };
+    let c0 = net.push("conv0", &[8, 18, 18], conv());
+    net.push("conv_a", &[8, 18, 18], conv());
+    let cb = net.push("conv_b", &[8, 18, 18], conv());
+    net.push_from("add", &[8, 16, 16], LayerOp::Add, vec![cb, c0]);
+    net
+}
+
+/// A cheap spec for the tiny graphs: exhaustive over a pruned mapspace.
 fn tiny_spec(max_seg: usize) -> NetworkSearchSpec {
     NetworkSearchSpec {
         max_segment_layers: max_seg,
@@ -39,40 +54,78 @@ fn tiny_spec(max_seg: usize) -> NetworkSearchSpec {
 #[test]
 fn presets_validate() {
     for (net, layers) in [
-        (resnet18(), 18),
-        (mobilenet_v2(), 52),
+        (resnet18(), 29),
+        (resnet18_chain(), 18),
+        (mobilenet_v2(), 62),
         (vgg16(), 18),
         (bert_encoder(1, 2, 32, 16), 4),
     ] {
         assert_eq!(net.num_layers(), layers, "{}", net.name);
         net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
-        // Every single layer must be materializable on its own.
+        // Every single (non-virtual) node must be materializable on its own.
         for lo in 0..net.num_layers() {
-            net.segment_fusion_set(lo, lo + 1)
+            if net.layers[lo].op.is_virtual() {
+                continue;
+            }
+            net.segment_fusion_set_nodes(&[lo])
                 .unwrap_or_else(|e| panic!("{}[{lo}]: {e}", net.name));
         }
     }
 }
 
 #[test]
+fn preset_chain_flags() {
+    assert!(!resnet18().is_chain());
+    assert!(!mobilenet_v2().is_chain());
+    assert!(resnet18_chain().is_chain());
+    assert!(vgg16().is_chain());
+    assert!(bert_encoder(1, 2, 32, 16).is_chain());
+}
+
+#[test]
 fn resnet18_shapes_propagate_as_published() {
-    let net = resnet18();
+    let net = resnet18_chain();
     assert_eq!(net.propagate(0, 1).unwrap(), vec![64, 112, 112]); // stem
     assert_eq!(net.propagate(1, 2).unwrap(), vec![64, 56, 56]); // pool
     assert_eq!(net.propagate(6, 7).unwrap(), vec![128, 28, 28]); // conv3 downsample
     assert_eq!(net.propagate(10, 11).unwrap(), vec![256, 14, 14]); // conv4 downsample
     assert_eq!(net.propagate(14, 15).unwrap(), vec![512, 7, 7]); // conv5 downsample
+
+    // The residual DAG reproduces the same published shapes, including the
+    // projection shortcuts and the adds.
+    let dag = resnet18();
+    let shapes = dag.ref_output_shapes().unwrap();
+    let by_name = |n: &str| {
+        let i = dag.layers.iter().position(|l| l.name == n).unwrap_or_else(|| panic!("{n}"));
+        shapes[i].clone()
+    };
+    assert_eq!(by_name("pool1"), vec![64, 56, 56]);
+    assert_eq!(by_name("add2_2"), vec![64, 56, 56]);
+    assert_eq!(by_name("conv3_proj"), vec![128, 28, 28]);
+    assert_eq!(by_name("add3_1"), vec![128, 28, 28]);
+    assert_eq!(by_name("add5_2"), vec![512, 7, 7]);
 }
 
 #[test]
 fn repeated_blocks_share_signatures() {
     let net = resnet18();
-    // The two stage-2 basic blocks are identical segments...
-    assert_eq!(net.segment_signature(2, 4), net.segment_signature(4, 6));
-    // ...as are their constituent single layers.
-    assert_eq!(net.segment_signature(2, 3), net.segment_signature(5, 6));
+    let conv2_1a = 2; // conv2_1a, conv2_1b, add2_1 | conv2_2a, conv2_2b, add2_2
+    let block1 = [conv2_1a, conv2_1a + 1, conv2_1a + 2];
+    let block2 = [conv2_1a + 3, conv2_1a + 4, conv2_1a + 5];
+    // The two stage-2 residual blocks are identical branch-spanning
+    // segments (different producers, same canonical graph hash) ...
+    assert_eq!(
+        net.segment_signature_nodes(&block1),
+        net.segment_signature_nodes(&block2)
+    );
+    // ... as are their constituent single layers.
+    assert_eq!(net.segment_signature_nodes(&[2]), net.segment_signature_nodes(&[5]));
     // A downsampling block is not interchangeable with an identity block.
-    assert_ne!(net.segment_signature(6, 8), net.segment_signature(8, 10));
+    assert_ne!(net.segment_signature_nodes(&[8, 9]), net.segment_signature_nodes(&[12, 13]));
+    // The chain projection still memoizes contiguous ranges.
+    let chain = resnet18_chain();
+    assert_eq!(chain.segment_signature(2, 4), chain.segment_signature(4, 6));
+    assert_ne!(chain.segment_signature(6, 8), chain.segment_signature(8, 10));
 }
 
 #[test]
@@ -100,7 +153,7 @@ fn reshape_boundary_is_a_mandatory_cut() {
 // results bit for bit (same best mapping, same metrics, same score bits).
 #[test]
 fn resnet_block_cuts_bit_match_per_block_search() {
-    let net = resnet18();
+    let net = resnet18_chain();
     let arch = Arch::generic(128);
     let pool = Coordinator::new(2);
     let spec = NetworkSearchSpec {
@@ -154,23 +207,129 @@ fn resnet_block_cuts_bit_match_per_block_search() {
     }
 }
 
+// The path-pin: on pure chains the graph-cut DP must reproduce the chain
+// cut-point DP (the preserved pre-graph-IR code path) bit for bit.
+#[test]
+fn graph_dp_matches_chain_dp_on_paths() {
+    let arch = Arch::generic(256);
+    let pool = Coordinator::new(2);
+    let spec = NetworkSearchSpec {
+        max_segment_layers: 2,
+        search: SearchSpec {
+            mapspace: MapSpaceConfig {
+                uniform_retention: true,
+                tile_sizes: vec![32],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    };
+    for net in [vgg16(), resnet18_chain()] {
+        assert!(net.is_chain());
+        let chain = search_network(&net, &arch, &spec, &pool).unwrap();
+        let dag = search_network_dag(&net, &arch, &spec, &pool).unwrap();
+        assert_eq!(chain.cuts, dag.cuts, "{}", net.name);
+        assert_eq!(chain.total_score.to_bits(), dag.total_score.to_bits(), "{}", net.name);
+        assert_eq!(chain.candidate_segments, dag.candidate_segments, "{}", net.name);
+        assert_eq!(chain.distinct_searched, dag.distinct_searched, "{}", net.name);
+        assert_eq!(chain.segments.len(), dag.segments.len());
+        for (a, b) in chain.segments.iter().zip(&dag.segments) {
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.signature, b.signature);
+            assert_eq!(a.best.mapping, b.best.mapping);
+            assert_eq!(a.best.score.to_bits(), b.best.score.to_bits());
+            assert_eq!(a.best.metrics.latency_cycles, b.best.metrics.latency_cycles);
+            assert_eq!(
+                a.best.metrics.energy.total_pj().to_bits(),
+                b.best.metrics.energy.total_pj().to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn residual_segments_materialize_and_evaluate() {
+    let net = resnet18();
+    // conv2_1b + add2_1: a branch-spanning segment. The main path arrives
+    // as the halo'd external input; the skip (pool1's output) arrives as a
+    // second off-chip input fmap.
+    let fs = net.segment_fusion_set_nodes(&[3, 4]).unwrap();
+    assert_eq!(fs.einsums.len(), 2);
+    assert_eq!(fs.einsums[1].inputs.len(), 2);
+    let input_fmaps = fs.tensors_of_kind(TensorKind::InputFmap);
+    assert_eq!(input_fmaps.len(), 2);
+    assert_eq!(fs.tensor(input_fmaps[0]).shape, vec![64, 58, 58]);
+    assert_eq!(fs.tensor(input_fmaps[1]).shape, vec![64, 56, 56]);
+    fs.validate().unwrap();
+
+    // The whole stage-2 block {conv2_1a, conv2_1b, add2_1}: two convs of
+    // valid-conv shrinkage against an un-shrunk skip — the skip is
+    // center-cropped to the 54×54 interior.
+    let fs3 = net.segment_fusion_set_nodes(&[2, 3, 4]).unwrap();
+    let out = fs3.tensors_of_kind(TensorKind::OutputFmap);
+    assert_eq!(fs3.tensor(out[0]).shape, vec![64, 54, 54]);
+
+    // Segments reaching *around* a branch without its add are rejected (the
+    // intermediate would be needed both inside and outside); pulling the
+    // branch point itself in is fine and creates a true internal fan-out:
+    // pool1's output feeds both conv2_1a and (center-cropped) the add.
+    assert!(!net.segment_buildable_nodes(&[1, 2])); // pool1 also feeds add2_1
+    let fs4 = net.segment_fusion_set_nodes(&[1, 2, 3, 4]).unwrap();
+    assert!(!fs4.is_chain()); // multi-consumer intermediate
+    let out = fs4.tensors_of_kind(TensorKind::OutputFmap);
+    assert_eq!(fs4.tensor(out[0]).shape, vec![64, 52, 52]);
+
+    // The analytical model evaluates residual segments — including the
+    // internal fan-out — and the fast path and reference walk agree bit
+    // for bit.
+    let arch = Arch::generic(256);
+    for fs in [&fs, &fs3, &fs4] {
+        let ev = Evaluator::new(fs, &arch).unwrap();
+        let last = fs.last();
+        let p = last.rank_index(&format!("P{}", fs.einsums.len())).unwrap();
+        for tile in [4, 7] {
+            let m = InterLayerMapping::tiled(
+                vec![Partition { dim: p, tile }],
+                Parallelism::Sequential,
+            );
+            let fast = ev.evaluate(&m).unwrap();
+            let refr = ev.evaluate_reference(&m).unwrap();
+            assert_eq!(fast.offchip_reads, refr.offchip_reads);
+            assert_eq!(fast.offchip_writes, refr.offchip_writes);
+            assert_eq!(fast.latency_cycles, refr.latency_cycles);
+            assert_eq!(fast.total_ops, refr.total_ops);
+            assert_eq!(fast.occupancy_peak, refr.occupancy_peak);
+            assert_eq!(
+                fast.energy.total_pj().to_bits(),
+                refr.energy.total_pj().to_bits()
+            );
+        }
+        // Untiled: no recompute, algorithmic op count.
+        let untiled = ev.evaluate(&InterLayerMapping::untiled(Parallelism::Sequential)).unwrap();
+        assert_eq!(untiled.recompute_ops, 0);
+        assert_eq!(untiled.total_ops, fs.total_ops());
+    }
+
+    // The element-driven simulator stays restricted to chain dataflow; a
+    // fused set with an internal fan-out is rejected with a clear error.
+    let m = InterLayerMapping::untiled(Parallelism::Sequential);
+    assert!(crate::sim::simulate(&fs4, &arch, &m).is_err());
+}
+
 #[test]
 fn dp_matches_bruteforce_on_small_chain() {
     // Shrinking chain: four convs with exactly chained (halo-free) shapes,
     // so every segment has a distinct signature.
+    let mut net = Network { name: "chain4".into(), layers: vec![] };
     let mut w = 18i64;
-    let layers = (0..4)
-        .map(|i| {
-            let l = LayerSpec {
-                name: format!("conv{i}"),
-                input_shape: vec![8, w, w],
-                op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
-            };
-            w -= 2;
-            l
-        })
-        .collect();
-    let net = Network { name: "chain4".into(), layers };
+    for i in 0..4 {
+        net.push(
+            &format!("conv{i}"),
+            &[8, w, w],
+            LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+        );
+        w -= 2;
+    }
     net.validate().unwrap();
 
     let arch = Arch::generic(16);
@@ -202,6 +361,268 @@ fn dp_matches_bruteforce_on_small_chain() {
     assert_eq!(dp.total_score.to_bits(), seg_sum.to_bits());
 }
 
+/// Enumerate all partitions of `0..n` into non-empty subsets (Bell
+/// enumeration via restricted growth strings).
+fn set_partitions(n: usize) -> Vec<Vec<Vec<usize>>> {
+    let mut out = Vec::new();
+    let mut assign = vec![0usize; n];
+    fn rec(i: usize, groups: usize, assign: &mut Vec<usize>, out: &mut Vec<Vec<Vec<usize>>>) {
+        let n = assign.len();
+        if i == n {
+            let mut part = vec![Vec::new(); groups];
+            for (x, &g) in assign.iter().enumerate() {
+                part[g].push(x);
+            }
+            out.push(part);
+            return;
+        }
+        for g in 0..=groups {
+            assign[i] = g;
+            rec(i + 1, groups.max(g + 1), assign, out);
+        }
+    }
+    rec(0, 0, &mut assign, &mut out);
+    out
+}
+
+// The branched acceptance pin: the graph DP equals brute force over every
+// fusable partition of a residual graph, and the optimum fuses across the
+// branch point (the residual add sits inside a multi-node segment).
+#[test]
+fn dp_matches_bruteforce_on_branched_graph() {
+    let net = tiny_residual();
+    net.validate().unwrap();
+    assert!(!net.is_chain());
+
+    let arch = Arch::generic(64);
+    let pool = Coordinator::new(2);
+    let mut spec = tiny_spec(3);
+    spec.search.objective = Objective::Offchip;
+
+    let dp = search_network(&net, &arch, &spec, &pool).unwrap();
+
+    let mut best_total = f64::INFINITY;
+    let mut feasible = 0;
+    for part in set_partitions(4) {
+        if part.iter().any(|s| s.len() > spec.max_segment_layers) {
+            continue;
+        }
+        if part.iter().any(|s| !net.segment_buildable_nodes(s)) {
+            continue;
+        }
+        let res = evaluate_segments(&net, &arch, &spec, &part, &pool).unwrap();
+        feasible += 1;
+        best_total = best_total.min(res.total_score);
+    }
+    assert!(feasible > 2, "brute force found too few fusable partitions");
+    assert_eq!(
+        dp.total_score.to_bits(),
+        best_total.to_bits(),
+        "graph DP total {} != brute-force optimum {best_total}",
+        dp.total_score
+    );
+    // Fusing into the add saves the main-path round trip, so the optimal
+    // cover spans the branch point.
+    assert!(
+        dp.segments.iter().any(|s| s.spans_branch(&net)),
+        "expected a branch-spanning segment; got {:?}",
+        dp.segments.iter().map(|s| s.nodes.clone()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn resnet18_dag_search_fuses_across_a_branch() {
+    // The real acceptance demo at network scale, kept cheap: restrict the
+    // per-segment mapspace and search the residual DAG under the off-chip
+    // objective. At least one chosen segment must contain a residual add
+    // together with a feeding conv.
+    let net = resnet18();
+    let arch = Arch::generic(256);
+    let pool = Coordinator::new(4);
+    let spec = NetworkSearchSpec {
+        max_segment_layers: 2,
+        search: SearchSpec {
+            objective: Objective::Offchip,
+            mapspace: MapSpaceConfig {
+                uniform_retention: true,
+                tile_sizes: vec![8],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    };
+    let res = search_network(&net, &arch, &spec, &pool).unwrap();
+    // Every non-virtual node covered exactly once.
+    let mut covered = vec![false; net.num_layers()];
+    for s in &res.segments {
+        for &i in &s.nodes {
+            assert!(!covered[i], "node {i} covered twice");
+            covered[i] = true;
+        }
+    }
+    assert!(covered.iter().all(|&c| c));
+    assert!(
+        res.segments.iter().any(|s| s.spans_branch(&net)),
+        "expected at least one branch-spanning segment in {:?}",
+        res.segments.iter().map(|s| s.range_label()).collect::<Vec<_>>()
+    );
+    // Memoization still collapses the repeated residual blocks.
+    assert!(res.distinct_searched < res.candidate_segments);
+}
+
+#[test]
+fn pad_fuses_at_segment_head_only() {
+    let conv = || LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 };
+    let mut net = Network { name: "padded".into(), layers: vec![] };
+    net.push("conv0", &[8, 18, 18], conv()); // -> [8,16,16]
+    net.push("pad1", &[8, 16, 16], LayerOp::Pad { h: 1, w: 1 }); // -> [8,18,18]
+    net.push("conv1", &[8, 18, 18], conv()); // -> [8,16,16]
+    net.validate().unwrap();
+
+    // Pad at the head of a segment: absorbed into the (pre-padded) external
+    // input, exactly the declared-halo convention.
+    assert!(net.segment_buildable_nodes(&[1, 2]));
+    let fs = net.segment_fusion_set_nodes(&[1, 2]).unwrap();
+    assert_eq!(fs.einsums.len(), 1); // the pad contributes no einsum
+    assert_eq!(fs.tensor(fs.einsums[0].inputs[0].tensor).shape, vec![8, 18, 18]);
+    // Same signature as a plain halo-declared conv segment — both stream
+    // the same padded tensor.
+    let plain = tiny_conv_chain(2);
+    assert_eq!(
+        net.segment_signature_nodes(&[1, 2]),
+        plain.segment_signature_nodes(&[1])
+    );
+
+    // Interior pad: mandatory cut. Pad alone: nothing to materialize.
+    assert!(!net.segment_buildable_nodes(&[0, 1, 2]));
+    assert!(!net.segment_buildable_nodes(&[1]));
+    assert!(!net.segment_buildable_nodes(&[0, 1]));
+
+    // The partitioner covers the pad by fusing it with its consumer.
+    let arch = Arch::generic(64);
+    let pool = Coordinator::new(1);
+    let res = search_network(&net, &arch, &tiny_spec(2), &pool).unwrap();
+    assert!(res.segments.iter().any(|s| s.nodes.contains(&1) && s.nodes.contains(&2)));
+
+    // A pad may also pad the network input itself (node 0, no producer):
+    // validation must not choke on the missing edge, and the pad still
+    // fuses only into its consumer.
+    let mut headpad = Network { name: "headpad".into(), layers: vec![] };
+    headpad.push("pad0", &[8, 16, 16], LayerOp::Pad { h: 1, w: 1 });
+    headpad.push("conv0", &[8, 18, 18], conv());
+    headpad.validate().unwrap();
+    assert!(!headpad.segment_buildable_nodes(&[0]));
+    assert!(headpad.segment_buildable_nodes(&[0, 1]));
+    let fs = headpad.segment_fusion_set_nodes(&[0, 1]).unwrap();
+    assert_eq!(fs.tensor(fs.einsums[0].inputs[0].tensor).shape, vec![8, 18, 18]);
+}
+
+#[test]
+fn concat_is_virtual_and_never_fused() {
+    let conv = |c| LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 };
+    let mut net = Network { name: "cat".into(), layers: vec![] };
+    let c0 = net.push("conv0", &[4, 18, 18], conv(4)); // -> [4,16,16]
+    let a = net.push_from("conv_a", &[4, 18, 18], conv(4), vec![c0]);
+    let b = net.push_from("conv_b", &[4, 18, 18], conv(4), vec![c0]);
+    let cat = net.push_from("cat", &[4, 16, 16], LayerOp::Concat, vec![a, b]);
+    net.push_from("conv_c", &[8, 18, 18], conv(8), vec![cat]);
+    net.validate().unwrap();
+    assert_eq!(net.ref_output_shapes().unwrap()[cat], vec![8, 16, 16]);
+
+    // No segment may contain the concat.
+    assert!(!net.segment_buildable_nodes(&[cat]));
+    assert!(!net.segment_buildable_nodes(&[a, b, cat]));
+    // conv_a and conv_b cannot co-fuse either (two sinks), but each fuses
+    // with conv0... no — conv0 feeds both, so closure forbids it. Singles
+    // remain.
+    assert!(!net.segment_buildable_nodes(&[a, b]));
+    assert!(!net.segment_buildable_nodes(&[c0, a]));
+
+    let arch = Arch::generic(64);
+    let pool = Coordinator::new(2);
+    let res = search_network(&net, &arch, &tiny_spec(3), &pool).unwrap();
+    assert!(res.segments.iter().all(|s| !s.nodes.contains(&cat)));
+    // All four compute nodes covered (the concat costs nothing).
+    let covered: usize = res.segments.iter().map(|s| s.nodes.len()).sum();
+    assert_eq!(covered, 4);
+}
+
+#[test]
+fn signatures_are_collision_free_across_presets() {
+    // Satellite property: equal signature ⟺ identical materialized Einsums
+    // (pairwise distinct-shape ⇒ distinct-signature), across every
+    // buildable candidate segment of all four presets.
+    let canon = |fs: &crate::einsum::FusionSet| -> String {
+        let mut s = String::new();
+        for t in &fs.tensors {
+            s.push_str(&format!("{:?}:{:?};", t.kind, t.shape));
+        }
+        for e in &fs.einsums {
+            s.push_str(&format!(
+                "{:?}{:?}{:?}->{}{:?}|",
+                e.rank_names, e.rank_sizes, e.op_kind, e.output.tensor.0, e.output.map
+            ));
+            for a in &e.inputs {
+                s.push_str(&format!("<{}{:?}", a.tensor.0, a.map));
+            }
+        }
+        s
+    };
+    let mut by_sig: HashMap<String, String> = HashMap::new();
+    let mut checked = 0usize;
+    for net in [resnet18(), mobilenet_v2(), vgg16(), bert_encoder(1, 2, 32, 16)] {
+        let candidates = if net.is_chain() {
+            chain_candidates(&net, 3)
+        } else {
+            dag_candidates(&net, 3).unwrap()
+        };
+        assert!(!candidates.is_empty(), "{}", net.name);
+        for c in candidates {
+            let fs = net.segment_fusion_set_nodes(&c.nodes).unwrap();
+            let shape = canon(&fs);
+            checked += 1;
+            match by_sig.get(&c.signature) {
+                None => {
+                    by_sig.insert(c.signature.clone(), shape);
+                }
+                Some(prev) => assert_eq!(
+                    *prev, shape,
+                    "{}: signature {} collides across distinct shapes",
+                    net.name, c.signature
+                ),
+            }
+        }
+    }
+    assert!(checked > 100, "expected a meaningful candidate population, got {checked}");
+}
+
+#[test]
+fn bench_smoke_json_schema_is_pinned() {
+    // The bench binary builds rows through `NetworkSearchResult::bench_row`
+    // and asserts `check_network_bench_schema` before writing — this test
+    // pins both sides so the CI artifact cannot silently drift.
+    let net = tiny_conv_chain(3);
+    let arch = Arch::generic(32);
+    let res = search_network(&net, &arch, &tiny_spec(2), &Coordinator::new(1)).unwrap();
+    let row = res.bench_row(&net.name, net.num_layers(), 123.0);
+    let doc = Json::Obj([("rows".to_string(), Json::Arr(vec![row.clone()]))].into_iter().collect());
+    check_network_bench_schema(&doc).unwrap();
+    // A row losing a key (schema drift) must fail the check.
+    if let Json::Obj(m) = &row {
+        let mut broken = m.clone();
+        broken.remove("total_offchip_elems");
+        let doc = Json::Obj(
+            [("rows".to_string(), Json::Arr(vec![Json::Obj(broken)]))].into_iter().collect(),
+        );
+        assert!(check_network_bench_schema(&doc).is_err());
+    } else {
+        panic!("bench_row must be an object");
+    }
+    // And so must an empty or missing rows array.
+    assert!(check_network_bench_schema(&Json::parse("{}").unwrap()).is_err());
+    assert!(check_network_bench_schema(&Json::parse("{\"rows\":[]}").unwrap()).is_err());
+}
+
 #[test]
 fn network_search_deterministic_across_worker_counts() {
     let net = tiny_conv_chain(5);
@@ -216,6 +637,14 @@ fn network_search_deterministic_across_worker_counts() {
         assert_eq!(x.best.mapping, y.best.mapping);
         assert_eq!(x.best.score.to_bits(), y.best.score.to_bits());
     }
+    // Branched graphs too.
+    let net = tiny_residual();
+    let a = search_network(&net, &arch, &spec, &Coordinator::new(1)).unwrap();
+    let b = search_network(&net, &arch, &spec, &Coordinator::new(4)).unwrap();
+    assert_eq!(a.total_score.to_bits(), b.total_score.to_bits());
+    let an: Vec<_> = a.segments.iter().map(|s| s.nodes.clone()).collect();
+    let bn: Vec<_> = b.segments.iter().map(|s| s.nodes.clone()).collect();
+    assert_eq!(an, bn);
 }
 
 #[test]
@@ -269,52 +698,57 @@ fn evaluate_partition_rejects_bad_cuts() {
     let ok = evaluate_partition(&net, &arch, &spec, &[1, 3], &pool).unwrap();
     assert_eq!(ok.cuts, vec![1, 3]);
     assert_eq!(ok.segments.len(), 3);
+    // Explicit node-set covers reject overlaps, gaps, and junk.
+    assert!(evaluate_segments(&net, &arch, &spec, &[vec![0, 1], vec![1, 2, 3]], &pool).is_err());
+    assert!(evaluate_segments(&net, &arch, &spec, &[vec![0, 1]], &pool).is_err());
+    assert!(evaluate_segments(&net, &arch, &spec, &[vec![0, 1], vec![2, 9]], &pool).is_err());
+    let ok = evaluate_segments(&net, &arch, &spec, &[vec![0, 1], vec![2, 3]], &pool).unwrap();
+    assert_eq!(ok.segments.len(), 2);
 }
 
 #[test]
-fn invalid_networks_rejected() {
-    // Channel mismatch across a boundary.
-    let net = Network {
-        name: "bad".into(),
-        layers: vec![
-            LayerSpec {
-                name: "a".into(),
-                input_shape: vec![8, 18, 18],
-                op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
-            },
-            LayerSpec {
-                name: "b".into(),
-                input_shape: vec![16, 18, 18],
-                op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
-            },
-        ],
-    };
-    assert!(net.validate().is_err());
+fn invalid_networks_rejected_with_located_errors() {
+    // Channel mismatch across a boundary: the error names layer 1 and its op.
+    let mut net = Network { name: "bad".into(), layers: vec![] };
+    net.push("a", &[8, 18, 18], LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 });
+    net.push("b", &[16, 18, 18], LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 });
+    let err = net.validate().unwrap_err();
+    assert!(err.contains("layer 1"), "{err}");
+    assert!(err.contains("'b'"), "{err}");
+    assert!(err.contains("conv2d"), "{err}");
+
     // Window larger than the fmap.
-    let net = Network {
-        name: "bad2".into(),
-        layers: vec![LayerSpec {
-            name: "a".into(),
-            input_shape: vec![8, 2, 2],
-            op: LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
-        }],
-    };
-    assert!(net.validate().is_err());
+    let mut net = Network { name: "bad2".into(), layers: vec![] };
+    net.push("a", &[8, 2, 2], LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 });
+    let err = net.validate().unwrap_err();
+    assert!(err.contains("layer 0"), "{err}");
+
     // Empty network.
     assert!(Network { name: "empty".into(), layers: vec![] }.validate().is_err());
+
     // Non-positive op parameters must be rejected here (an error), not
     // deep inside the builder (a panic) — e.g. from hand-written JSON.
-    let net = Network {
-        name: "bad3".into(),
-        layers: vec![LayerSpec {
-            name: "a".into(),
-            input_shape: vec![8, 18, 18],
-            op: LayerOp::Conv2d { out_channels: 0, r: 3, s: 3, stride: 1 },
-        }],
-    };
+    let mut net = Network { name: "bad3".into(), layers: vec![] };
+    net.push("a", &[8, 18, 18], LayerOp::Conv2d { out_channels: 0, r: 3, s: 3, stride: 1 });
     assert!(net.validate().is_err());
     assert!(!net.segment_buildable(0, 1));
     assert!(net.segment_fusion_set(0, 1).is_err());
+
+    // Forward edges (non-topological order) are rejected.
+    let mut net = Network { name: "bad4".into(), layers: vec![] };
+    net.push("a", &[8, 18, 18], LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 });
+    net.layers[0].inputs = vec![0];
+    let err = net.validate().unwrap_err();
+    assert!(err.contains("earlier node"), "{err}");
+
+    // An add with mismatched operand shapes names the bad operand.
+    let conv = |c| LayerOp::Conv2d { out_channels: c, r: 3, s: 3, stride: 1 };
+    let mut net = Network { name: "bad5".into(), layers: vec![] };
+    let c0 = net.push("a", &[8, 18, 18], conv(8));
+    let c1 = net.push("b", &[8, 18, 18], conv(16));
+    net.push_from("sum", &[8, 16, 16], LayerOp::Add, vec![c1, c0]);
+    let err = net.validate().unwrap_err();
+    assert!(err.contains("layer 2") && err.contains("add"), "{err}");
 }
 
 #[test]

@@ -43,6 +43,15 @@ pub fn simulate(
     fs.validate()?;
     arch.validate()?;
     mapping.validate(fs)?;
+    // The element-driven walk threads demand through the `t-1 -> t` chain
+    // link below; branched (DAG) fusion sets are the analytical model's
+    // territory.
+    if !fs.is_chain() {
+        return Err(format!(
+            "simulator supports chain fusion sets only; `{}` has branching dataflow",
+            fs.name
+        ));
+    }
 
     let n = fs.num_layers();
     let nt = fs.tensors.len();

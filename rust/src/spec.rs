@@ -799,6 +799,11 @@ impl LayerOp {
             }
             LayerOp::AttentionScores { seq } => pairs.push(("seq", jnum_i(*seq))),
             LayerOp::AttentionValues { emb } => pairs.push(("emb", jnum_i(*emb))),
+            LayerOp::Add | LayerOp::Concat => {}
+            LayerOp::Pad { h, w } => {
+                pairs.push(("h", jnum_i(*h)));
+                pairs.push(("w", jnum_i(*w)));
+            }
         }
         jobj(pairs)
     }
@@ -827,6 +832,9 @@ impl LayerOp {
             "fc" => Ok(LayerOp::Fc { out_features: i64_field(j, "out_features", ctx)? }),
             "attention_scores" => Ok(LayerOp::AttentionScores { seq: i64_field(j, "seq", ctx)? }),
             "attention_values" => Ok(LayerOp::AttentionValues { emb: i64_field(j, "emb", ctx)? }),
+            "add" => Ok(LayerOp::Add),
+            "concat" => Ok(LayerOp::Concat),
+            "pad" => Ok(LayerOp::Pad { h: i64_field(j, "h", ctx)?, w: i64_field(j, "w", ctx)? }),
             other => Err(format!("{ctx}: unknown op '{other}'")),
         }
     }
@@ -841,15 +849,39 @@ impl LayerSpec {
                 jarr(self.input_shape.iter().map(|&d| jnum_i(d)).collect()),
             ),
             ("op", self.op.to_json()),
+            (
+                "inputs",
+                jarr(self.inputs.iter().map(|&p| jnum_u(p)).collect()),
+            ),
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<LayerSpec, String> {
+    /// Parse one node. The `inputs` edge list is optional: when absent, the
+    /// node chains from the previous node (`[index - 1]`, or the network
+    /// input for node 0) — which is also how the legacy chain schema
+    /// (`layers` without edges) is interpreted.
+    pub fn from_json(j: &Json, index: usize) -> Result<LayerSpec, String> {
         let ctx = "layer";
+        let inputs = match j.get("inputs") {
+            Some(v) => {
+                let raw = i64_vec(v, ctx)?;
+                let mut inputs = Vec::with_capacity(raw.len());
+                for p in raw {
+                    if p < 0 {
+                        return Err(format!("{ctx}: negative input edge {p}"));
+                    }
+                    inputs.push(p as usize);
+                }
+                inputs
+            }
+            None if index == 0 => vec![],
+            None => vec![index - 1],
+        };
         Ok(LayerSpec {
             name: str_field(j, "name", ctx)?.to_string(),
             input_shape: i64_vec(field(j, "input_shape", ctx)?, ctx)?,
             op: LayerOp::from_json(field(j, "op", ctx)?)?,
+            inputs,
         })
     }
 }
@@ -858,19 +890,29 @@ impl Network {
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("name", jstr(&self.name)),
-            ("layers", jarr(self.layers.iter().map(|l| l.to_json()).collect())),
+            ("nodes", jarr(self.layers.iter().map(|l| l.to_json()).collect())),
         ])
     }
 
     /// Parse and structurally validate; the returned network satisfies
-    /// [`Network::validate`].
+    /// [`Network::validate`]. Accepts the DAG schema (`nodes`, each with an
+    /// explicit `inputs` edge list) and, for back-compat, the chain schema
+    /// (`layers` without edges — every layer consumes its predecessor).
     pub fn from_json(j: &Json) -> Result<Network, String> {
         let ctx = "network";
+        let nodes = match j.get("nodes") {
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| format!("{ctx}: field 'nodes' must be an array"))?,
+            None => arr_field(j, "layers", ctx)
+                .map_err(|_| format!("{ctx}: missing field 'nodes' (or legacy 'layers')"))?,
+        };
         let net = Network {
             name: str_field(j, "name", ctx)?.to_string(),
-            layers: arr_field(j, "layers", ctx)?
+            layers: nodes
                 .iter()
-                .map(LayerSpec::from_json)
+                .enumerate()
+                .map(|(i, v)| LayerSpec::from_json(v, i))
                 .collect::<Result<_, _>>()?,
         };
         net.validate()?;
@@ -878,12 +920,14 @@ impl Network {
     }
 }
 
-/// Parse a compact network spec string: `resnet18` | `mobilenetv2` |
-/// `vgg16` | `bert:B,H,T,E` (or bare `bert` for the BERT-base encoder
-/// block: 1 sequence, 12 heads, 512 tokens, 64-dim heads).
+/// Parse a compact network spec string: `resnet18` (residual DAG) |
+/// `resnet18_chain` (its chain projection) | `mobilenetv2` | `vgg16` |
+/// `bert:B,H,T,E` (or bare `bert` for the BERT-base encoder block: 1
+/// sequence, 12 heads, 512 tokens, 64-dim heads).
 pub fn parse_network(spec: &str) -> Result<Network, String> {
     match spec {
         "resnet18" => Ok(network::resnet18()),
+        "resnet18_chain" => Ok(network::resnet18_chain()),
         "mobilenetv2" => Ok(network::mobilenet_v2()),
         "vgg16" => Ok(network::vgg16()),
         "bert" => Ok(network::bert_encoder(1, 12, 512, 64)),
@@ -899,7 +943,7 @@ pub fn parse_network(spec: &str) -> Result<Network, String> {
                 }
             } else {
                 Err(format!(
-                    "unknown network spec: {other} (expected resnet18|mobilenetv2|vgg16|bert[:B,H,T,E])"
+                    "unknown network spec: {other} (expected resnet18|resnet18_chain|mobilenetv2|vgg16|bert[:B,H,T,E])"
                 ))
             }
         }
@@ -1145,7 +1189,7 @@ impl SearchConfig {
     }
 }
 
-/// A complete `looptree network` request: a whole-DNN chain + architecture
+/// A complete `looptree network` request: a whole-DNN graph + architecture
 /// + segment-search spec, optionally with a fixed cut set to score instead
 /// of running the DP. The `--json` output of `network` embeds this config
 /// verbatim, so a result document re-feeds as `--config` and reproduces the
@@ -1329,6 +1373,7 @@ mod tests {
     fn network_round_trips() {
         for net in [
             network::resnet18(),
+            network::resnet18_chain(),
             network::mobilenet_v2(),
             network::vgg16(),
             network::bert_encoder(1, 2, 16, 8),
@@ -1343,7 +1388,9 @@ mod tests {
     #[test]
     fn network_shorthand_accepted() {
         assert_eq!(parse_network("resnet18").unwrap().name, "resnet18");
-        assert_eq!(parse_network("mobilenetv2").unwrap().num_layers(), 52);
+        assert_eq!(parse_network("resnet18").unwrap().num_layers(), 29);
+        assert_eq!(parse_network("resnet18_chain").unwrap().num_layers(), 18);
+        assert_eq!(parse_network("mobilenetv2").unwrap().num_layers(), 62);
         assert_eq!(parse_network("vgg16").unwrap().num_layers(), 18);
         assert_eq!(
             parse_network("bert:2,4,64,32").unwrap(),
@@ -1351,6 +1398,50 @@ mod tests {
         );
         assert!(parse_network("bert:1,2").is_err());
         assert!(parse_network("resnet50").is_err());
+    }
+
+    #[test]
+    fn legacy_chain_network_schema_parses() {
+        // PR 3 chain documents: "layers" without edge lists — every layer
+        // implicitly consumes its predecessor.
+        let doc = "{\"name\":\"tiny\",\"layers\":[\
+            {\"name\":\"a\",\"input_shape\":[8,18,18],\
+             \"op\":{\"op\":\"conv2d\",\"out_channels\":8,\"r\":3,\"s\":3,\"stride\":1}},\
+            {\"name\":\"b\",\"input_shape\":[8,16,16],\
+             \"op\":{\"op\":\"conv2d\",\"out_channels\":8,\"r\":3,\"s\":3,\"stride\":1}}]}";
+        let net = Network::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert!(net.is_chain());
+        assert_eq!(net.layers[0].inputs, Vec::<usize>::new());
+        assert_eq!(net.layers[1].inputs, vec![0]);
+        // Round trip re-emits the DAG schema ("nodes" with explicit edges).
+        let j = net.to_json();
+        assert!(j.get("nodes").is_some());
+        let back = Network::from_json(&reser(&j)).unwrap();
+        assert_eq!(back, net);
+    }
+
+    #[test]
+    fn dag_ops_round_trip() {
+        // A residual block with an explicit pad: conv -> pad -> conv -> add.
+        let mut net = Network { name: "res".into(), layers: vec![] };
+        let a = net.push(
+            "conv_a",
+            &[8, 18, 18],
+            crate::network::LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+        );
+        net.push("pad", &[8, 16, 16], crate::network::LayerOp::Pad { h: 1, w: 1 });
+        let b = net.push(
+            "conv_b",
+            &[8, 18, 18],
+            crate::network::LayerOp::Conv2d { out_channels: 8, r: 3, s: 3, stride: 1 },
+        );
+        net.push_from("add", &[8, 16, 16], crate::network::LayerOp::Add, vec![b, a]);
+        net.validate().unwrap();
+        let back = Network::from_json(&reser(&net.to_json())).unwrap();
+        assert_eq!(back, net);
+        // Concat parses too.
+        let j = Json::parse("{\"op\":\"concat\"}").unwrap();
+        assert_eq!(LayerOp::from_json(&j).unwrap(), crate::network::LayerOp::Concat);
     }
 
     #[test]

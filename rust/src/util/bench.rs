@@ -73,6 +73,48 @@ pub fn write_bench_json(path: &str, obj: &Json) -> std::io::Result<()> {
     std::fs::write(path, format!("{}\n", obj.pretty()))
 }
 
+/// The per-row keys of `BENCH_network.json` and their expected JSON type
+/// (`true` = number, `false` = other). CI uploads that artifact; the bench
+/// binary asserts this schema before writing and the test suite pins it, so
+/// consumers downstream never see silent drift.
+pub const NETWORK_BENCH_NUM_KEYS: [&str; 7] = [
+    "mean_ns",
+    "layers",
+    "cuts",
+    "candidate_segments",
+    "distinct_searched",
+    "total_score",
+    "total_offchip_elems",
+];
+
+/// Validate a `BENCH_network.json` document: a `rows` array whose entries
+/// carry a string `workload`, a bool `all_fit`, and every numeric key of
+/// [`NETWORK_BENCH_NUM_KEYS`].
+pub fn check_network_bench_schema(doc: &Json) -> Result<(), String> {
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or("BENCH_network.json: missing 'rows' array")?;
+    if rows.is_empty() {
+        return Err("BENCH_network.json: 'rows' is empty".into());
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let ctx = |k: &str| format!("BENCH_network.json row {i}: bad or missing '{k}'");
+        if row.get("workload").and_then(Json::as_str).is_none() {
+            return Err(ctx("workload"));
+        }
+        if row.get("all_fit").and_then(Json::as_bool).is_none() {
+            return Err(ctx("all_fit"));
+        }
+        for k in NETWORK_BENCH_NUM_KEYS {
+            if row.get(k).and_then(Json::as_f64).is_none() {
+                return Err(ctx(k));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Time `f` for `iters` repetitions after `warmup` repetitions.
 pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
     for _ in 0..warmup {

@@ -13,10 +13,13 @@
 //! identical stage-2 residual blocks) are searched once and memoized.
 //!
 //! Run with: `cargo run --release --example network_partition`
+//! (optionally `-- --objective offchip` to optimize and compare under a
+//! different objective; default `feasible-edp`).
 
 use looptree::arch::Arch;
 use looptree::coordinator::Coordinator;
 use looptree::network::{self, Network, NetworkSearchResult, NetworkSearchSpec};
+use looptree::search::Objective;
 use looptree::util::table::{fmt_count, Table};
 
 fn report(net: &Network, r: &NetworkSearchResult) {
@@ -50,7 +53,18 @@ fn report(net: &Network, r: &NetworkSearchResult) {
 fn main() {
     let arch = Arch::generic(256); // 256 KiB GLB
     let pool = Coordinator::new(0);
-    let spec = NetworkSearchSpec::default();
+    // `--objective <name>` switches what both the partitioner and the
+    // unfused baseline optimize, so the comparison below is always
+    // like-for-like under the spec's own objective (e.g. `--objective
+    // offchip` compares off-chip-optimal fused vs off-chip-optimal
+    // unfused), instead of re-scoring with a hardcoded metric.
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut spec = NetworkSearchSpec::default();
+    if let Some(i) = args.iter().position(|a| a == "--objective") {
+        let name = args.get(i + 1).expect("--objective needs a value");
+        spec.search.objective = Objective::parse(name).unwrap_or_else(|e| panic!("{e}"));
+    }
+    let objective = spec.search.objective;
 
     for net in [network::resnet18(), network::bert_encoder(1, 12, 512, 64)] {
         let best = network::search_network(&net, &arch, &spec, &pool)
@@ -58,7 +72,7 @@ fn main() {
         report(&net, &best);
 
         // Unfused baseline: every (non-virtual) node its own segment, same
-        // per-segment search.
+        // per-segment search, same objective.
         let singles: Vec<Vec<usize>> = (0..net.num_layers())
             .filter(|&i| !net.layers[i].op.is_virtual())
             .map(|i| vec![i])
@@ -66,11 +80,15 @@ fn main() {
         let unfused = network::evaluate_segments(&net, &arch, &spec, &singles, &pool)
             .expect("unfused baseline failed");
         println!(
-            "{}: fused-optimal offchip {} vs unfused {} ({:.2}x), latency {} vs {}\n",
+            "{}: fused-optimal {} {:.4e} vs unfused {:.4e} ({:.2}x); \
+             offchip {} vs {}, latency {} vs {}\n",
             net.name,
+            objective.name(),
+            best.total_score,
+            unfused.total_score,
+            unfused.total_score / best.total_score,
             fmt_count(best.total_offchip()),
             fmt_count(unfused.total_offchip()),
-            unfused.total_offchip() as f64 / best.total_offchip() as f64,
             fmt_count(best.total_latency()),
             fmt_count(unfused.total_latency()),
         );

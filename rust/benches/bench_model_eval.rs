@@ -14,7 +14,9 @@ use looptree::einsum::workloads;
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
 use looptree::model::{evaluate, EvalOptions, Evaluator};
 use looptree::sim::simulate;
-use looptree::util::bench::{bench, reps, write_bench_json, BenchResult};
+use looptree::util::bench::{
+    bench, check_model_eval_bench_schema, reps, write_bench_json, BenchResult,
+};
 use looptree::util::json::Json;
 
 fn main() {
@@ -174,6 +176,7 @@ fn main() {
         .into_iter()
         .collect(),
     );
+    check_model_eval_bench_schema(&report).expect("BENCH_model_eval.json schema drifted");
     match write_bench_json("BENCH_model_eval.json", &report) {
         Ok(()) => println!("\nwrote BENCH_model_eval.json"),
         Err(e) => eprintln!("\nfailed to write BENCH_model_eval.json: {e}"),

@@ -27,6 +27,7 @@ fn spec() -> NetworkSearchSpec {
             },
             ..Default::default()
         },
+        ..Default::default()
     }
 }
 
@@ -66,7 +67,43 @@ fn main() {
         rows.push(result.bench_row(&net.name, net.num_layers(), t.mean.as_nanos() as f64));
     }
 
-    let report = Json::Obj([("rows".to_string(), Json::Arr(rows))].into_iter().collect());
+    // Pareto-front DP (vector costs over the default latency/energy/
+    // capacity/offchip axes) on one branched and one path network. The
+    // beam cap keeps the label sets bounded; front sizes are deterministic
+    // counters the CI determinism gate diffs across runs.
+    let pareto_spec = NetworkSearchSpec {
+        max_front_per_state: if smoke() { 8 } else { 32 },
+        ..spec.clone()
+    };
+    let mut pareto_rows: Vec<Json> = Vec::new();
+    for net in [network::resnet18(), network::vgg16()] {
+        let result = network::search_network_pareto(&net, &arch, &pareto_spec, &pool)
+            .expect("network pareto search found no partition");
+        let t = bench(
+            &format!("search_network_pareto({})", net.name),
+            warmup,
+            iters,
+            || network::search_network_pareto(&net, &arch, &pareto_spec, &pool).unwrap(),
+        );
+        println!(
+            "{}  -> {} front points ({} memoized per-segment points, {}/{} segments searched)",
+            t.report(),
+            result.points.len(),
+            result.segment_front_points,
+            result.distinct_searched,
+            result.candidate_segments,
+        );
+        pareto_rows.push(result.bench_row(&net.name, net.num_layers(), t.mean.as_nanos() as f64));
+    }
+
+    let report = Json::Obj(
+        [
+            ("rows".to_string(), Json::Arr(rows)),
+            ("pareto_rows".to_string(), Json::Arr(pareto_rows)),
+        ]
+        .into_iter()
+        .collect(),
+    );
     check_network_bench_schema(&report).expect("BENCH_network.json schema drifted");
     match write_bench_json("BENCH_network.json", &report) {
         Ok(()) => println!("wrote BENCH_network.json"),

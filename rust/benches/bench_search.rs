@@ -13,7 +13,7 @@ use looptree::einsum::workloads;
 use looptree::mapspace::MapSpaceConfig;
 use looptree::model::Evaluator;
 use looptree::search::{self, Algorithm, Objective, SearchSpec};
-use looptree::util::bench::{bench_once, smoke, write_bench_json};
+use looptree::util::bench::{bench_once, check_search_bench_schema, smoke, write_bench_json};
 use looptree::util::json::Json;
 
 fn main() {
@@ -110,6 +110,7 @@ fn main() {
             .into_iter()
             .collect(),
     );
+    check_search_bench_schema(&report).expect("BENCH_search.json schema drifted");
     match write_bench_json("BENCH_search.json", &report) {
         Ok(()) => println!("wrote BENCH_search.json"),
         Err(e) => eprintln!("failed to write BENCH_search.json: {e}"),

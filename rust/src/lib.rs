@@ -52,7 +52,9 @@
 //!   and the fused-segment partitioner: [`network::search_network`]
 //!   memoizes per-segment mapspace searches over canonical segment
 //!   signatures and picks the optimal segment cover by dynamic programming
-//!   (chain cut points on paths, graph cuts on DAGs).
+//!   (chain cut points on paths, graph cuts on DAGs);
+//!   [`network::search_network_pareto`] generalizes the same DP to
+//!   dominance over vector costs and emits whole-network Pareto fronts.
 //! * [`coordinator`] — parallel DSE job execution (lock-free result merge).
 //! * [`spec`] — the serializable JSON spec/query layer.
 //! * `runtime` *(feature `pjrt`)* — PJRT execution of AOT-compiled

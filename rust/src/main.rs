@@ -6,6 +6,7 @@
 //!   analyze    --config <file.json> | --workload <spec> --schedule <R,R,..> --tiles <n,n,..> [...]
 //!   search     --config <file.json> | --workload <spec> [--algorithm ..] [--objective ..] [--seed n]
 //!   network    --config <file.json> | --network <name> [--max-seg n] [--cuts 2,4,..]
+//!              [--pareto [--objectives latency,energy,..] [--max-front n]]
 //!   experiments [--full]                    regenerate everything (EXPERIMENTS.md data)
 //!   speed                                   model-vs-simulator throughput
 //!
@@ -62,7 +63,7 @@ fn run(args: &[String]) -> i32 {
                  looptree casestudy <fig14|fig15|fig16|fig17|fig18> [--full]\n  \
                  looptree analyze --config cfg.json [--json] | --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim]\n  \
                  looptree search --config cfg.json [--json] | --workload conv_conv:28x64 [--algorithm exhaustive|random|annealing|genetic] [--objective latency|energy|edp|capacity|offchip|feasible-edp] [--seed n]\n  \
-                 looptree network --config cfg.json [--json] | --network resnet18|resnet18_chain|mobilenetv2|vgg16|bert[:B,H,T,E] [--max-seg n] [--cuts 2,4,..] [--algorithm ..] [--objective ..] [--seed n] [--glb-kib n]\n  \
+                 looptree network --config cfg.json [--json] | --network resnet18|resnet18_chain|mobilenetv2|vgg16|bert[:B,H,T,E] [--max-seg n] [--cuts 2,4,..] [--algorithm ..] [--objective ..] [--seed n] [--glb-kib n] [--pareto [--objectives latency,energy,capacity,offchip] [--max-front n]]\n  \
                  looptree experiments [--full]\n  \
                  looptree speed"
             );
@@ -379,6 +380,7 @@ fn network_config(args: &[String]) -> Result<NetworkConfig, String> {
             arch: Arch::generic(256),
             segment_search: NetworkSearchSpec::default(),
             cuts: None,
+            pareto: false,
         }
     };
     // Flag overrides apply on top of either source.
@@ -402,6 +404,25 @@ fn network_config(args: &[String]) -> Result<NetworkConfig, String> {
     if let Some(c) = opt(args, "--cuts") {
         let cuts: Result<Vec<usize>, _> = c.split(',').map(|s| s.parse::<usize>()).collect();
         cfg.cuts = Some(cuts.map_err(|e| format!("--cuts: {e}"))?);
+    }
+    if flag(args, "--pareto") {
+        cfg.pareto = true;
+    }
+    if let Some(o) = opt(args, "--objectives") {
+        cfg.segment_search.objectives = o
+            .split(',')
+            .map(Objective::parse)
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(m) = opt(args, "--max-front") {
+        cfg.segment_search.max_front_per_state =
+            m.parse().map_err(|e| format!("--max-front: {e}"))?;
+    }
+    if cfg.pareto && cfg.cuts.is_some() {
+        return Err(
+            "--pareto searches the front over cut sets; it cannot be combined with --cuts"
+                .into(),
+        );
     }
     Ok(cfg)
 }
@@ -466,6 +487,68 @@ fn network_result_json(cfg: &NetworkConfig, r: &NetworkSearchResult) -> Json {
     doc
 }
 
+/// `looptree network --pareto`: the multi-objective front over cut sets.
+fn cmd_network_pareto(args: &[String], cfg: &NetworkConfig) -> i32 {
+    let pool = Coordinator::new(0);
+    let r = match network::search_network_pareto(
+        &cfg.network,
+        &cfg.arch,
+        &cfg.segment_search,
+        &pool,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("network pareto search failed: {e}");
+            return 1;
+        }
+    };
+    if flag(args, "--json") {
+        let mut doc = cfg.to_json();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("result".into(), r.to_json());
+        }
+        println!("{}", doc.pretty());
+        return 0;
+    }
+    let names: Vec<&str> = r.objectives.iter().map(|o| o.name()).collect();
+    println!(
+        "{}: {} front points over [{}]; {} candidate segments, {} distinct shapes searched \
+         ({} memoized front points){}",
+        cfg.network.name,
+        r.points.len(),
+        names.join(", "),
+        r.candidate_segments,
+        r.distinct_searched,
+        r.segment_front_points,
+        if r.max_front_per_state > 0 {
+            format!("; beam cap {}", r.max_front_per_state)
+        } else {
+            String::new()
+        }
+    );
+    let mut header: Vec<&str> = vec!["#"];
+    header.extend(names.iter().copied());
+    header.push("cuts");
+    header.push("fits");
+    let mut table = looptree::util::table::Table::new(&header);
+    for (i, p) in r.points.iter().enumerate() {
+        let mut row = vec![i.to_string()];
+        row.extend(p.costs.iter().map(|c| format!("{c:.4e}")));
+        row.push(format!("{:?}", p.cuts));
+        row.push(p.all_fit().to_string());
+        table.row(&row);
+    }
+    println!("{}", table.render());
+    for (axis, o) in r.objectives.iter().enumerate() {
+        println!(
+            "best {:>12}: {:.4e}",
+            o.name(),
+            r.min_cost(axis).unwrap_or(f64::NAN)
+        );
+    }
+    0
+}
+
 fn cmd_network(args: &[String]) -> i32 {
     let cfg = match network_config(args) {
         Ok(c) => c,
@@ -474,6 +557,9 @@ fn cmd_network(args: &[String]) -> i32 {
             return 2;
         }
     };
+    if cfg.pareto {
+        return cmd_network_pareto(args, &cfg);
+    }
     let pool = Coordinator::new(0);
     let run = match &cfg.cuts {
         Some(cuts) => {

@@ -11,7 +11,9 @@ mod enumerate;
 mod pareto;
 
 pub use enumerate::{MapSpace, MapSpaceConfig};
-pub use pareto::{pareto_front, ParetoPoint};
+pub use pareto::{
+    cap_front_k, cmp_costs, dominates, pareto_front, pareto_front_k, ParetoPoint, ParetoPointK,
+};
 
 #[cfg(test)]
 mod tests;

@@ -1,5 +1,13 @@
-//! Pareto-front utilities for two-objective trade-off curves (the paper's
-//! capacity-vs-recompute and capacity-vs-transfers figures).
+//! Pareto-front utilities: the original two-objective front for the paper's
+//! capacity-vs-recompute and capacity-vs-transfers figures, plus the
+//! k-objective generalization used by the network-level front DP
+//! (`network::search_network_pareto`).
+//!
+//! All comparisons go through [`f64::total_cmp`], so degenerate objective
+//! values (NaN, infinities) order deterministically instead of panicking or
+//! silently flipping results.
+
+use std::cmp::Ordering;
 
 /// A point on a 2-objective minimization trade-off with a payload.
 #[derive(Debug, Clone)]
@@ -24,12 +32,124 @@ pub fn pareto_front<T: Clone>(mut points: Vec<ParetoPoint<T>>) -> Vec<ParetoPoin
     front
 }
 
+/// A point on a k-objective minimization trade-off with a payload. All
+/// points of one front must share the same cost arity.
+#[derive(Debug, Clone)]
+pub struct ParetoPointK<T> {
+    /// One value per objective; lower is better on every axis.
+    pub costs: Vec<f64>,
+    pub payload: T,
+}
+
+/// Lexicographic [`f64::total_cmp`] over equal-arity cost vectors — the
+/// canonical deterministic ordering of front points.
+pub fn cmp_costs(a: &[f64], b: &[f64]) -> Ordering {
+    for (x, y) in a.iter().zip(b) {
+        match x.total_cmp(y) {
+            Ordering::Equal => continue,
+            other => return other,
+        }
+    }
+    a.len().cmp(&b.len())
+}
+
+/// Whether `a` dominates `b`: no worse on every axis, strictly better on at
+/// least one (minimization, [`f64::total_cmp`] per axis). Equal vectors do
+/// not dominate each other.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len(), "dominance needs equal cost arity");
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        match x.total_cmp(y) {
+            Ordering::Greater => return false,
+            Ordering::Less => strict = true,
+            Ordering::Equal => {}
+        }
+    }
+    strict
+}
+
+/// Extract the k-objective Pareto front, sorted lexicographically by cost
+/// vector ([`cmp_costs`]). Dominated points are dropped; duplicate cost
+/// vectors keep only the first in sorted order (the sort is stable, so ties
+/// resolve to input order) — deterministic for any input permutation of
+/// distinct points, and payload-preserving for the survivors.
+pub fn pareto_front_k<T>(mut points: Vec<ParetoPointK<T>>) -> Vec<ParetoPointK<T>> {
+    points.sort_by(|a, b| cmp_costs(&a.costs, &b.costs));
+    let mut front: Vec<ParetoPointK<T>> = Vec::new();
+    'next: for p in points {
+        // A lexicographically later point can never dominate an earlier one
+        // (it would have to be <= on every axis, hence sort before it), so
+        // accepted points are final.
+        for q in &front {
+            if cmp_costs(&q.costs, &p.costs) == Ordering::Equal || dominates(&q.costs, &p.costs)
+            {
+                continue 'next;
+            }
+        }
+        front.push(p);
+    }
+    front
+}
+
+/// Deterministically cap a (lexicographically sorted) Pareto front to at
+/// most `cap` points; `cap == 0` means unbounded. With `cap >=` the cost
+/// arity, the per-axis minimum of every objective is kept — capping thins
+/// the interior of a front but never loses a single-objective optimum
+/// (smaller caps keep the leading axes' minima only) — and the remaining
+/// slots are filled evenly across the sorted front. Relative order is
+/// preserved.
+pub fn cap_front_k<T>(front: Vec<ParetoPointK<T>>, cap: usize) -> Vec<ParetoPointK<T>> {
+    if cap == 0 || front.len() <= cap {
+        return front;
+    }
+    let arity = front[0].costs.len();
+    let mut keep = vec![false; front.len()];
+    let mut kept = 0usize;
+    for axis in 0..arity {
+        if kept == cap {
+            break;
+        }
+        let mut best = 0usize;
+        for (i, p) in front.iter().enumerate() {
+            if p.costs[axis].total_cmp(&front[best].costs[axis]) == Ordering::Less {
+                best = i;
+            }
+        }
+        if !keep[best] {
+            keep[best] = true;
+            kept += 1;
+        }
+    }
+    let rest: Vec<usize> = (0..front.len()).filter(|&i| !keep[i]).collect();
+    let want = cap - kept;
+    if want > 0 {
+        // len > cap ensures rest.len() >= want + 1, so the even spread below
+        // picks strictly increasing (distinct) indices.
+        let span = rest.len() - 1;
+        for j in 0..want {
+            let idx = if want == 1 { span / 2 } else { j * span / (want - 1) };
+            keep[rest[idx]] = true;
+        }
+    }
+    front
+        .into_iter()
+        .zip(keep)
+        .filter_map(|(p, k)| k.then_some(p))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Prng;
 
     fn pt(x: f64, y: f64) -> ParetoPoint<()> {
         ParetoPoint { x, y, payload: () }
+    }
+
+    fn ptk(costs: &[f64]) -> ParetoPointK<usize> {
+        ParetoPointK { costs: costs.to_vec(), payload: 0 }
     }
 
     #[test]
@@ -56,5 +176,146 @@ mod tests {
     fn empty_input() {
         let front = pareto_front::<()>(vec![]);
         assert!(front.is_empty());
+    }
+
+    // ------------------------------------------------- k-objective front --
+
+    #[test]
+    fn dominates_edge_cases() {
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0])); // tie on one axis
+        assert!(dominates(&[1.0, 2.0], &[2.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[1.0, 3.0])); // equal: no dominance
+        assert!(!dominates(&[1.0, 4.0], &[2.0, 3.0])); // incomparable
+        assert!(!dominates(&[1.0, 3.0], &[1.0, 2.0]));
+        // total_cmp ordering makes NaN comparisons well-defined (NaN sorts
+        // above +inf, so a NaN axis is "worse" than any real value).
+        assert!(dominates(&[1.0, 2.0], &[1.0, f64::NAN]));
+        assert!(!dominates(&[1.0, f64::NAN], &[1.0, 2.0]));
+    }
+
+    #[test]
+    fn front_k_dominance_and_ties() {
+        let front = pareto_front_k(vec![
+            ptk(&[2.0, 2.0, 5.0]),
+            ptk(&[1.0, 3.0, 5.0]),
+            ptk(&[2.0, 2.0, 6.0]), // dominated by the first (tie, tie, worse)
+            ptk(&[3.0, 3.0, 5.0]), // dominated by the first
+            ptk(&[5.0, 1.0, 5.0]),
+        ]);
+        let costs: Vec<&[f64]> = front.iter().map(|p| p.costs.as_slice()).collect();
+        assert_eq!(
+            costs,
+            vec![&[1.0, 3.0, 5.0][..], &[2.0, 2.0, 5.0], &[5.0, 1.0, 5.0]]
+        );
+    }
+
+    #[test]
+    fn front_k_duplicates_keep_first_payload() {
+        let front = pareto_front_k(vec![
+            ParetoPointK { costs: vec![1.0, 2.0], payload: 7usize },
+            ParetoPointK { costs: vec![1.0, 2.0], payload: 9usize },
+        ]);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].payload, 7);
+    }
+
+    #[test]
+    fn front_k_single_and_empty() {
+        assert!(pareto_front_k::<()>(vec![]).is_empty());
+        let one = pareto_front_k(vec![ptk(&[4.0, 2.0])]);
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn front_k_order_is_input_permutation_invariant() {
+        let pts = [
+            [3.0, 1.0, 2.0],
+            [1.0, 3.0, 2.0],
+            [2.0, 2.0, 2.0],
+            [4.0, 4.0, 4.0], // dominated
+            [1.0, 3.0, 9.0], // dominated (tie, tie, worse)
+        ];
+        let as_points = |order: &[usize]| -> Vec<ParetoPointK<usize>> {
+            order.iter().map(|&i| ptk(&pts[i])).collect()
+        };
+        let reference: Vec<Vec<f64>> = pareto_front_k(as_points(&[0, 1, 2, 3, 4]))
+            .into_iter()
+            .map(|p| p.costs)
+            .collect();
+        for order in [[4, 3, 2, 1, 0], [2, 0, 4, 1, 3], [1, 4, 0, 3, 2]] {
+            let got: Vec<Vec<f64>> = pareto_front_k(as_points(&order))
+                .into_iter()
+                .map(|p| p.costs)
+                .collect();
+            assert_eq!(got, reference, "order {order:?}");
+        }
+        // And the output is lexicographically sorted.
+        for w in reference.windows(2) {
+            assert_eq!(cmp_costs(&w[0], &w[1]), std::cmp::Ordering::Less);
+        }
+    }
+
+    // Property: on 2 objectives the k-front is exactly the legacy 2-front.
+    #[test]
+    fn front_k_matches_pareto_front_on_two_objectives() {
+        let mut rng = Prng::new(0xC0FFEE);
+        for case in 0..50 {
+            let n = 1 + (rng.below(40) as usize);
+            let pts2: Vec<ParetoPoint<usize>> = (0..n)
+                .map(|i| ParetoPoint {
+                    // Small integer grid to force plenty of ties/duplicates.
+                    x: rng.below(8) as f64,
+                    y: rng.below(8) as f64,
+                    payload: i,
+                })
+                .collect();
+            let ptsk: Vec<ParetoPointK<usize>> = pts2
+                .iter()
+                .map(|p| ParetoPointK { costs: vec![p.x, p.y], payload: p.payload })
+                .collect();
+            let f2: Vec<(f64, f64)> =
+                pareto_front(pts2).into_iter().map(|p| (p.x, p.y)).collect();
+            let fk: Vec<(f64, f64)> = pareto_front_k(ptsk)
+                .into_iter()
+                .map(|p| (p.costs[0], p.costs[1]))
+                .collect();
+            assert_eq!(fk, f2, "case {case}");
+        }
+    }
+
+    #[test]
+    fn cap_keeps_axis_minima_and_is_deterministic() {
+        // A 2-objective staircase front of 10 points.
+        let front: Vec<ParetoPointK<usize>> = (0..10)
+            .map(|i| ParetoPointK {
+                costs: vec![i as f64, (9 - i) as f64],
+                payload: i,
+            })
+            .collect();
+        let capped = cap_front_k(front.clone(), 4);
+        assert_eq!(capped.len(), 4);
+        // Both axis minima survive (the staircase endpoints).
+        assert!(capped.iter().any(|p| p.costs[0] == 0.0));
+        assert!(capped.iter().any(|p| p.costs[1] == 0.0));
+        // Still sorted, and stable across calls.
+        let again = cap_front_k(front.clone(), 4);
+        let a: Vec<usize> = capped.iter().map(|p| p.payload).collect();
+        let b: Vec<usize> = again.iter().map(|p| p.payload).collect();
+        assert_eq!(a, b);
+        for w in capped.windows(2) {
+            assert!(cmp_costs(&w[0].costs, &w[1].costs) == std::cmp::Ordering::Less);
+        }
+        // cap = 0 and cap >= len are no-ops.
+        assert_eq!(cap_front_k(front.clone(), 0).len(), 10);
+        assert_eq!(cap_front_k(front, 10).len(), 10);
+        // cap = 1 keeps the first axis minimum.
+        let tiny = cap_front_k(
+            (0..5)
+                .map(|i| ParetoPointK { costs: vec![i as f64, (4 - i) as f64], payload: i })
+                .collect::<Vec<_>>(),
+            1,
+        );
+        assert_eq!(tiny.len(), 1);
+        assert_eq!(tiny[0].costs[0], 0.0);
     }
 }

@@ -12,7 +12,10 @@
 //! [`FusionSetBuilder`]), and [`search_network`] searches the mapspace of
 //! every candidate segment and picks the optimal segment cover by dynamic
 //! programming — over chain cut points when the graph is a path (the exact
-//! PR 3 behavior), over graph cuts otherwise.
+//! PR 3 behavior), over graph cuts otherwise. [`search_network_pareto`]
+//! generalizes the same DP from one scalar objective to dominance over
+//! vector costs, emitting the whole-network latency/energy/capacity/
+//! off-chip Pareto front (the paper's Figs 15-18 at network scale).
 //!
 //! ## Shape conventions
 //!
@@ -43,9 +46,13 @@
 //!   count, different arity — e.g. BERT's `[B,H,T,E] → [B·T, H·E]`
 //!   attention→FFN boundary) is a mandatory cut, as in the chain IR.
 
+mod pareto;
 mod partition;
 mod presets;
 
+pub use pareto::{
+    search_network_pareto, search_network_pareto_dag, NetworkParetoPoint, NetworkParetoResult,
+};
 pub use partition::{
     evaluate_partition, evaluate_segments, search_network, search_network_dag,
     NetworkSearchResult, NetworkSearchSpec, SegmentChoice,

@@ -1,0 +1,561 @@
+//! Network-level Pareto fronts over graph cuts: the vector-cost
+//! generalization of [`search_network`](super::search_network).
+//!
+//! The scalar DP collapses whole-network DSE to one objective; every
+//! headline result in the paper, though, is a trade-off *front* (Figs
+//! 15-18). [`search_network_pareto`] emits that front for a whole DNN: each
+//! point is a complete partition (cut set + one mapping per segment) with a
+//! vector cost, one axis per [`NetworkSearchSpec::objectives`] entry, and no
+//! point on the front is dominated by any reachable partition.
+//!
+//! Structure mirrors the scalar path exactly — candidate segments are
+//! enumerated per sink, each *distinct* segment signature is searched once
+//! (fanned out over the [`Coordinator`], serial inner searches, so results
+//! are bit-identical for any worker count) — but the memo table keeps a
+//! dominance-pruned Pareto front of the evaluated mappings per segment
+//! instead of a single best, and the DP carries a bounded Pareto set of
+//! labels per state:
+//!
+//! * path networks run the chain cut-point DP over prefix states;
+//! * general DAGs run the ideal-lattice DP over cover masks, with
+//!   transitions restricted to ascending segment-sink order (every cover is
+//!   reached by exactly one application order — the one that sums costs in
+//!   canonical sink order, so floating-point association noise cannot split
+//!   one partition into spurious "distinct" points).
+//!
+//! On merge, each state's label set is dominance-pruned
+//! ([`pareto_front_k`]; ties resolved by lexicographic [`f64::total_cmp`]
+//! order, duplicates dropped) and optionally beam-capped
+//! ([`NetworkSearchSpec::max_front_per_state`], `0` = exact). The cap always
+//! keeps every per-axis minimum, and all states of a mask share the same
+//! extension set, so the standard exchange argument goes through level by
+//! level: **each single-objective scalar optimum lies on the emitted front
+//! even under capping** (given the same per-segment search; exact for
+//! exhaustive searches, where the evaluated set is the whole constrained
+//! mapspace). Axis costs reuse
+//! [`SearchSpec::score_objective`](crate::search::SearchSpec::score_objective),
+//! so the infeasibility penalty applies per axis exactly as in scalar runs.
+
+use super::partition::{
+    chain_candidates, dag_candidates, nonvirtual_closure, real_positions, search_distinct_map,
+    Candidate, NetworkSearchSpec, SegmentChoice,
+};
+use super::Network;
+use crate::arch::Arch;
+use crate::coordinator::Coordinator;
+use crate::mapspace::{cap_front_k, cmp_costs, pareto_front_k, ParetoPointK};
+use crate::search::{Objective, Scored};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// One point of a network-level Pareto front: a complete partition with its
+/// vector cost (one value per requested objective, same order).
+#[derive(Debug, Clone)]
+pub struct NetworkParetoPoint {
+    /// Per-objective cost, summed over segments in sink order (the same
+    /// association order the scalar DP's `total_score` uses).
+    pub costs: Vec<f64>,
+    /// Interior segment boundaries (the scalar result's cut convention).
+    pub cuts: Vec<usize>,
+    /// The partition's segments, ordered by their largest node index, each
+    /// with the chosen mapping for this trade-off point.
+    pub segments: Vec<SegmentChoice>,
+}
+
+impl NetworkParetoPoint {
+    /// Total latency across sequentially executed segments (cycles).
+    pub fn total_latency(&self) -> i64 {
+        self.segments.iter().map(|s| s.best.metrics.latency_cycles).sum()
+    }
+
+    /// Total energy across segments (pJ).
+    pub fn total_energy_pj(&self) -> f64 {
+        self.segments.iter().map(|s| s.best.metrics.energy.total_pj()).sum()
+    }
+
+    /// Total off-chip traffic across segments (elements).
+    pub fn total_offchip(&self) -> i64 {
+        self.segments.iter().map(|s| s.best.metrics.offchip_total()).sum()
+    }
+
+    /// Whether every chosen segment fits the GLB budget.
+    pub fn all_fit(&self) -> bool {
+        self.segments.iter().all(|s| s.best.metrics.capacity_ok)
+    }
+}
+
+/// Result of a network-level Pareto search: the front plus the same search
+/// accounting the scalar result carries.
+#[derive(Debug, Clone)]
+pub struct NetworkParetoResult {
+    /// The cost axes, in `costs` order.
+    pub objectives: Vec<Objective>,
+    /// The beam cap the DP ran with (`0` = exact front).
+    pub max_front_per_state: usize,
+    /// The front, sorted lexicographically by cost vector. Non-empty on
+    /// success.
+    pub points: Vec<NetworkParetoPoint>,
+    /// How many distinct segment signatures were actually searched.
+    pub distinct_searched: usize,
+    /// How many candidate segments the DP considered.
+    pub candidate_segments: usize,
+    /// Total pruned per-segment front points across distinct signatures
+    /// (the memo table's size, and the DP's branching driver).
+    pub segment_front_points: usize,
+}
+
+impl NetworkParetoResult {
+    /// The minimum cost reached on one axis across the front.
+    pub fn min_cost(&self, axis: usize) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.costs[axis])
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// One row of the `pareto_rows` section of `BENCH_network.json`. Like
+    /// [`super::NetworkSearchResult::bench_row`], the bench binary and the
+    /// schema test both build rows through this method, so the CI artifact
+    /// cannot silently drift from
+    /// [`crate::util::bench::check_network_bench_schema`].
+    pub fn bench_row(&self, workload: &str, layers: usize, mean_ns: f64) -> Json {
+        Json::Obj(
+            [
+                ("workload".to_string(), Json::Str(workload.to_string())),
+                ("mean_ns".to_string(), Json::Num(mean_ns)),
+                ("layers".to_string(), Json::Num(layers as f64)),
+                ("objectives".to_string(), Json::Num(self.objectives.len() as f64)),
+                ("front_points".to_string(), Json::Num(self.points.len() as f64)),
+                (
+                    "segment_front_points".to_string(),
+                    Json::Num(self.segment_front_points as f64),
+                ),
+                (
+                    "candidate_segments".to_string(),
+                    Json::Num(self.candidate_segments as f64),
+                ),
+                (
+                    "distinct_searched".to_string(),
+                    Json::Num(self.distinct_searched as f64),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+/// A pruned per-segment front point: vector cost + the scored mapping.
+type SegPoint = ParetoPointK<Scored>;
+
+/// A DP label: running vector cost + backpointer provenance. `S` is the
+/// state id type (prefix length for the chain DP, cover mask for the graph
+/// DP).
+#[derive(Debug, Clone)]
+struct Back<S> {
+    prev: S,
+    prev_label: usize,
+    /// Candidate index applied to reach this label; `usize::MAX` marks the
+    /// root label.
+    cand: usize,
+    /// Index into the candidate's per-segment front.
+    choice: usize,
+}
+
+type Label<S> = ParetoPointK<Back<S>>;
+
+fn root_label<S: Default>(arity: usize) -> Label<S> {
+    ParetoPointK {
+        costs: vec![0.0; arity],
+        payload: Back { prev: S::default(), prev_label: 0, cand: usize::MAX, choice: 0 },
+    }
+}
+
+fn add_costs(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Dominance-prune and beam-cap one state's label set.
+fn prune_labels<S>(pool: Vec<Label<S>>, cap: usize) -> Vec<Label<S>> {
+    cap_front_k(pareto_front_k(pool), cap)
+}
+
+/// Total labels the DP may materialize before erroring out — the front
+/// analogue of the scalar DP's state cap (an uncapped front on a
+/// pathologically wide graph should fail cleanly, not OOM; the fix is
+/// `max_front_per_state`).
+const MAX_LABELS: usize = 500_000;
+
+fn label_explosion(net: &Network) -> String {
+    format!(
+        "Pareto DP label explosion on {} (> {MAX_LABELS} labels); set \
+         max_front_per_state (beam cap) or reduce max_segment_layers",
+        net.name
+    )
+}
+
+/// Per-signature pruned fronts of the evaluated per-segment mappings,
+/// memoized exactly like the scalar path (one search per distinct
+/// signature, deterministic for any worker count).
+fn search_distinct_fronts(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    candidates: &[Candidate],
+    pool: &Coordinator,
+) -> Result<HashMap<String, Option<Vec<SegPoint>>>, String> {
+    let objectives = spec.objectives.clone();
+    let search = spec.search.clone();
+    let cap = spec.max_front_per_state;
+    search_distinct_map(net, arch, spec, candidates, pool, move |r| {
+        let points: Vec<SegPoint> = r
+            .evaluated
+            .into_iter()
+            .map(|s| ParetoPointK {
+                costs: objectives
+                    .iter()
+                    .map(|&o| search.score_objective(o, &s.metrics))
+                    .collect(),
+                payload: s,
+            })
+            .collect();
+        cap_front_k(pareto_front_k(points), cap)
+    })
+}
+
+// ------------------------------------------------------ chain (path) DP --
+
+/// Chain cut-point DP over prefix states, carrying a pruned label front per
+/// prefix. Returns, per surviving full-network label, the chosen
+/// `(candidate, front choice)` pairs in sink order.
+fn chain_dp_fronts(
+    net: &Network,
+    candidates: &[Candidate],
+    fronts: &HashMap<String, Option<Vec<SegPoint>>>,
+    arity: usize,
+    cap: usize,
+) -> Result<Vec<Vec<(usize, usize)>>, String> {
+    let n = net.num_layers();
+    let mut by_hi: Vec<Vec<usize>> = vec![Vec::new(); n + 1];
+    for (ci, c) in candidates.iter().enumerate() {
+        by_hi[c.nodes.last().unwrap() + 1].push(ci);
+    }
+    let mut labels: Vec<Vec<Label<usize>>> = vec![Vec::new(); n + 1];
+    labels[0].push(root_label(arity));
+    let mut total_labels = 1usize;
+    for hi in 1..=n {
+        let mut pool: Vec<Label<usize>> = Vec::new();
+        for &ci in &by_hi[hi] {
+            let Some(front) = fronts.get(&candidates[ci].signature).and_then(|o| o.as_ref())
+            else {
+                continue; // segment search found nothing: unusable
+            };
+            let lo = candidates[ci].nodes[0];
+            for (li, lab) in labels[lo].iter().enumerate() {
+                for (fi, fp) in front.iter().enumerate() {
+                    pool.push(ParetoPointK {
+                        costs: add_costs(&lab.costs, &fp.costs),
+                        payload: Back { prev: lo, prev_label: li, cand: ci, choice: fi },
+                    });
+                }
+            }
+        }
+        total_labels += pool.len();
+        if total_labels > MAX_LABELS {
+            return Err(label_explosion(net));
+        }
+        labels[hi] = prune_labels(pool, cap);
+    }
+    if labels[n].is_empty() {
+        return Err(format!(
+            "no feasible partition of {} (every covering segment's search came up empty)",
+            net.name
+        ));
+    }
+    // Reconstruct each surviving label's segment choices.
+    let mut out = Vec::with_capacity(labels[n].len());
+    for lab in &labels[n] {
+        let mut chosen = Vec::new();
+        let mut back = &lab.payload;
+        while back.cand != usize::MAX {
+            chosen.push((back.cand, back.choice));
+            back = &labels[back.prev][back.prev_label].payload;
+        }
+        chosen.reverse(); // walked sink-to-source; emit in sink order
+        out.push(chosen);
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------- graph-cut DP --
+
+/// Ideal-lattice DP over cover masks, carrying a pruned label front per
+/// state. Transitions are restricted to ascending segment-sink order: a
+/// candidate applies only when its sink (= its largest node, = its highest
+/// mask bit) exceeds the state's highest covered bit. Every cover is still
+/// reachable (an external producer consumed outside its own segment is that
+/// segment's sink, so sinks of producers precede sinks of consumers), each
+/// cover is reached exactly once, and running costs accumulate in canonical
+/// sink order.
+fn dag_dp_fronts(
+    net: &Network,
+    candidates: &[Candidate],
+    fronts: &HashMap<String, Option<Vec<SegPoint>>>,
+    arity: usize,
+    cap: usize,
+) -> Result<Vec<Vec<(usize, usize)>>, String> {
+    let pos = real_positions(net)?;
+    let closure = nonvirtual_closure(net, &pos);
+    let nbits = pos.iter().flatten().count();
+    let full: u128 = if nbits == 128 { u128::MAX } else { (1u128 << nbits) - 1 };
+
+    // Per-candidate cover mask, requirement mask, and front — resolved once
+    // (candidates whose search found nothing drop out; relative order of
+    // the usable ones is preserved, keeping tie-breaks stable).
+    let mut trans: Vec<(usize, u128, u128, &Vec<SegPoint>)> = Vec::with_capacity(candidates.len());
+    for (ci, c) in candidates.iter().enumerate() {
+        let Some(front) = fronts.get(&c.signature).and_then(|o| o.as_ref()) else {
+            continue;
+        };
+        let mut mask = 0u128;
+        for &i in &c.nodes {
+            mask |= 1u128 << pos[i].expect("candidate members are non-virtual");
+        }
+        let mut need = 0u128;
+        for &i in &c.nodes {
+            for &p in &net.layers[i].inputs {
+                if c.nodes.binary_search(&p).is_err() {
+                    need |= closure[p];
+                }
+            }
+        }
+        trans.push((ci, mask, need & !mask, front));
+    }
+
+    // States layered by popcount; BTreeMap gives ascending-mask iteration.
+    // A state's labels are complete once every lower layer has expanded, so
+    // each layer is pruned exactly once, right before its states expand —
+    // backpointer indices into the pruned vectors stay valid.
+    let mut layers: Vec<BTreeMap<u128, Vec<Label<u128>>>> = vec![BTreeMap::new(); nbits + 1];
+    layers[0].insert(0, vec![root_label(arity)]);
+    let mut total_labels = 1usize;
+    for kpop in 0..nbits {
+        let masks: Vec<u128> = layers[kpop].keys().copied().collect();
+        for m in &masks {
+            let labs = layers[kpop].remove(m).expect("state listed");
+            layers[kpop].insert(*m, prune_labels(labs, cap));
+        }
+        for state in masks {
+            let labs = layers[kpop].get(&state).expect("state pruned").clone();
+            for &(ci, mask, need, front) in &trans {
+                if mask & state != 0
+                    || need & !state != 0
+                    || mask.leading_zeros() >= state.leading_zeros()
+                {
+                    continue; // overlaps, unmet producers, or out of sink order
+                }
+                let nm = state | mask;
+                total_labels += labs.len() * front.len();
+                if total_labels > MAX_LABELS {
+                    return Err(label_explosion(net));
+                }
+                let tgt = layers[nm.count_ones() as usize].entry(nm).or_default();
+                for (li, lab) in labs.iter().enumerate() {
+                    for (fi, fp) in front.iter().enumerate() {
+                        tgt.push(ParetoPointK {
+                            costs: add_costs(&lab.costs, &fp.costs),
+                            payload: Back { prev: state, prev_label: li, cand: ci, choice: fi },
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let finals = match layers[nbits].remove(&full) {
+        Some(labs) => prune_labels(labs, cap),
+        None => Vec::new(),
+    };
+    if finals.is_empty() {
+        return Err(format!(
+            "no feasible partition of {} (every covering segment's search came up empty)",
+            net.name
+        ));
+    }
+    let mut out = Vec::with_capacity(finals.len());
+    for lab in &finals {
+        let mut chosen = Vec::new();
+        let mut back = &lab.payload;
+        while back.cand != usize::MAX {
+            chosen.push((back.cand, back.choice));
+            let prev_layer = &layers[back.prev.count_ones() as usize];
+            back = &prev_layer.get(&back.prev).expect("DP backpointer chain broken")
+                [back.prev_label]
+                .payload;
+        }
+        chosen.reverse(); // applied in ascending sink order; walk reversed it
+        out.push(chosen);
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------ assembly --
+
+/// Turn raw `(candidate, choice)` solutions into the final front:
+/// deduplicate identical partitions, recompute each cost vector canonically
+/// (per-segment costs summed in sink order), build the `SegmentChoice`
+/// lists, and dominance-prune once more on the canonical costs.
+fn assemble_front(
+    net: &Network,
+    candidates: &[Candidate],
+    fronts: &HashMap<String, Option<Vec<SegPoint>>>,
+    solutions: Vec<Vec<(usize, usize)>>,
+) -> Result<Vec<NetworkParetoPoint>, String> {
+    let mut seen: HashSet<Vec<(usize, usize)>> = HashSet::new();
+    let mut points: Vec<ParetoPointK<NetworkParetoPoint>> = Vec::new();
+    for mut solution in solutions {
+        // Sink order == ascending largest-node order of the candidates.
+        solution.sort_by_key(|&(ci, _)| *candidates[ci].nodes.last().unwrap());
+        if !seen.insert(solution.clone()) {
+            continue;
+        }
+        let mut costs = Vec::new();
+        let mut segments = Vec::with_capacity(solution.len());
+        for (ci, fi) in solution {
+            let c = &candidates[ci];
+            let fp = fronts
+                .get(&c.signature)
+                .and_then(|o| o.as_ref())
+                .and_then(|f| f.get(fi))
+                .ok_or_else(|| {
+                    format!("segment {} lost its front point", net.span_name_nodes(&c.nodes))
+                })?;
+            costs = if costs.is_empty() { fp.costs.clone() } else { add_costs(&costs, &fp.costs) };
+            segments.push(SegmentChoice {
+                lo: c.nodes[0],
+                hi: *c.nodes.last().unwrap() + 1,
+                span: net.span_name_nodes(&c.nodes),
+                signature: c.signature.clone(),
+                best: fp.payload.clone(),
+                nodes: c.nodes.clone(),
+            });
+        }
+        let cuts = segments.iter().skip(1).map(|s| s.lo).collect();
+        points.push(ParetoPointK {
+            payload: NetworkParetoPoint { costs: costs.clone(), cuts, segments },
+            costs,
+        });
+    }
+    Ok(pareto_front_k(points).into_iter().map(|p| p.payload).collect())
+}
+
+fn front_size(fronts: &HashMap<String, Option<Vec<SegPoint>>>) -> usize {
+    fronts.values().flatten().map(|f| f.len()).sum()
+}
+
+// ------------------------------------------------------------- entries --
+
+fn check_spec(spec: &NetworkSearchSpec) -> Result<(), String> {
+    if spec.max_segment_layers == 0 {
+        return Err("max_segment_layers must be >= 1".into());
+    }
+    if spec.objectives.is_empty() {
+        return Err("pareto search needs at least one objective".into());
+    }
+    if spec.max_front_per_state != 0 && spec.max_front_per_state < spec.objectives.len() {
+        // A cap below the arity could drop a trailing axis's minimum from a
+        // state — the one guarantee capping is documented to preserve.
+        return Err(format!(
+            "max_front_per_state ({}) must be 0 (unbounded) or >= the number of objectives \
+             ({})",
+            spec.max_front_per_state,
+            spec.objectives.len()
+        ));
+    }
+    Ok(())
+}
+
+/// Compute the network-level Pareto front over fused-segment partitions of
+/// `net`: every point is a complete partition + per-segment mappings, no
+/// point is dominated on [`NetworkSearchSpec::objectives`], and the front
+/// is sorted lexicographically by cost vector. Path-shaped networks run the
+/// chain cut-point DP; general DAGs run the graph-cut DP.
+///
+/// Deterministic given (network, architecture, spec) for any worker count.
+pub fn search_network_pareto(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    pool: &Coordinator,
+) -> Result<NetworkParetoResult, String> {
+    net.validate()?;
+    check_spec(spec)?;
+    if net.is_chain() {
+        let candidates = chain_candidates(net, spec.max_segment_layers);
+        let fronts = search_distinct_fronts(net, arch, spec, &candidates, pool)?;
+        let solutions = chain_dp_fronts(
+            net,
+            &candidates,
+            &fronts,
+            spec.objectives.len(),
+            spec.max_front_per_state,
+        )?;
+        finish(net, spec, &candidates, fronts, solutions)
+    } else {
+        search_network_pareto_dag_impl(net, arch, spec, pool)
+    }
+}
+
+/// Force the graph-cut front DP even on path-shaped networks.
+/// [`search_network_pareto`] dispatches paths to the chain DP; this entry
+/// exists so tests can pin that both DPs emit the same front on paths.
+pub fn search_network_pareto_dag(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    pool: &Coordinator,
+) -> Result<NetworkParetoResult, String> {
+    net.validate()?;
+    check_spec(spec)?;
+    search_network_pareto_dag_impl(net, arch, spec, pool)
+}
+
+fn search_network_pareto_dag_impl(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    pool: &Coordinator,
+) -> Result<NetworkParetoResult, String> {
+    // Cheap structural limit first, as in the scalar path.
+    real_positions(net)?;
+    let candidates = dag_candidates(net, spec.max_segment_layers)?;
+    let fronts = search_distinct_fronts(net, arch, spec, &candidates, pool)?;
+    let solutions = dag_dp_fronts(
+        net,
+        &candidates,
+        &fronts,
+        spec.objectives.len(),
+        spec.max_front_per_state,
+    )?;
+    finish(net, spec, &candidates, fronts, solutions)
+}
+
+fn finish(
+    net: &Network,
+    spec: &NetworkSearchSpec,
+    candidates: &[Candidate],
+    fronts: HashMap<String, Option<Vec<SegPoint>>>,
+    solutions: Vec<Vec<(usize, usize)>>,
+) -> Result<NetworkParetoResult, String> {
+    let points = assemble_front(net, candidates, &fronts, solutions)?;
+    debug_assert!(points
+        .windows(2)
+        .all(|w| cmp_costs(&w[0].costs, &w[1].costs) == std::cmp::Ordering::Less));
+    Ok(NetworkParetoResult {
+        objectives: spec.objectives.clone(),
+        max_front_per_state: spec.max_front_per_state,
+        points,
+        distinct_searched: fronts.len(),
+        candidate_segments: candidates.len(),
+        segment_front_points: front_size(&fronts),
+    })
+}

@@ -29,7 +29,7 @@ use crate::arch::Arch;
 use crate::coordinator::Coordinator;
 use crate::mapspace::MapSpaceConfig;
 use crate::model::Evaluator;
-use crate::search::{self, Scored, SearchSpec};
+use crate::search::{self, Objective, Scored, SearchSpec};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap, HashSet};
 
@@ -47,6 +47,16 @@ pub struct NetworkSearchSpec {
     /// segment (rank names vary with segment depth); an empty remainder
     /// falls back to the auto-derived schedules.
     pub search: SearchSpec,
+    /// The cost axes of [`search_network_pareto`](super::search_network_pareto)
+    /// (ignored by the scalar DP). Each axis is scored like a scalar run
+    /// with that objective — including `search.penalize_infeasible` — so
+    /// every single-objective scalar optimum lies on the emitted front.
+    pub objectives: Vec<Objective>,
+    /// Beam cap on every Pareto set the front DP carries (per DP state and
+    /// per memoized segment front). `0` = unbounded (exact front). Capping
+    /// keeps each per-axis minimum — single-objective optima survive — and
+    /// thins the interior of large fronts deterministically.
+    pub max_front_per_state: usize,
 }
 
 impl Default for NetworkSearchSpec {
@@ -65,6 +75,14 @@ impl Default for NetworkSearchSpec {
                 },
                 ..Default::default()
             },
+            // The paper's trade-off axes (Figs 15-18 at network scale).
+            objectives: vec![
+                Objective::Latency,
+                Objective::Energy,
+                Objective::Capacity,
+                Objective::Offchip,
+            ],
+            max_front_per_state: 0,
         }
     }
 }
@@ -217,6 +235,22 @@ fn search_distinct(
     candidates: &[Candidate],
     pool: &Coordinator,
 ) -> Result<HashMap<String, Option<Scored>>, String> {
+    search_distinct_map(net, arch, spec, candidates, pool, |r| r.best)
+}
+
+/// The shared memoized per-segment fan-out: search every distinct signature
+/// among `candidates` once, in parallel, and keep `map(result)` per
+/// signature — the best `Scored` for the scalar DP, a pruned Pareto front
+/// for the front DP. Segments whose search finds nothing (or whose specs
+/// fail validation) map to `None`.
+pub(crate) fn search_distinct_map<T: Send>(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    candidates: &[Candidate],
+    pool: &Coordinator,
+    map: impl Fn(search::SearchResult) -> T + Sync,
+) -> Result<HashMap<String, Option<T>>, String> {
     let mut order: Vec<(&str, &[usize])> = Vec::new();
     let mut seen: HashSet<&str> = HashSet::new();
     for c in candidates {
@@ -226,7 +260,7 @@ fn search_distinct(
     }
     // One Evaluator session per distinct shape; the inner search is serial
     // so the outer fan-out over distinct shapes owns all the parallelism.
-    let results: Vec<Result<Option<Scored>, String>> = pool.run(order.len(), |i| {
+    let results: Vec<Result<Option<T>, String>> = pool.run(order.len(), |i| {
         let fs = net.segment_fusion_set_nodes(order[i].1)?;
         let ev = Evaluator::new(&fs, arch)?;
         let seg_spec = SearchSpec {
@@ -234,7 +268,7 @@ fn search_distinct(
             ..spec.search.clone()
         };
         let inner = Coordinator::new(1);
-        Ok(search::run(&ev, &seg_spec, &inner).map(|r| r.best))
+        Ok(search::run(&ev, &seg_spec, &inner).map(&map))
     });
     let mut out = HashMap::new();
     for ((sig, _), res) in order.into_iter().zip(results) {
@@ -342,7 +376,7 @@ fn chain_dp(
 /// Bit positions of the non-virtual (coverable) nodes. Virtual nodes
 /// (concat) are pure DRAM address arithmetic: they belong to no segment and
 /// cost nothing.
-fn real_positions(net: &Network) -> Result<Vec<Option<usize>>, String> {
+pub(crate) fn real_positions(net: &Network) -> Result<Vec<Option<usize>>, String> {
     let mut pos = vec![None; net.num_layers()];
     let mut next = 0usize;
     for (i, l) in net.layers.iter().enumerate() {
@@ -362,7 +396,7 @@ fn real_positions(net: &Network) -> Result<Vec<Option<usize>>, String> {
 /// The non-virtual ancestors a node exposes when used as a segment input:
 /// itself when non-virtual, else the closure of its producers (virtual
 /// nodes pass through).
-fn nonvirtual_closure(net: &Network, pos: &[Option<usize>]) -> Vec<u128> {
+pub(crate) fn nonvirtual_closure(net: &Network, pos: &[Option<usize>]) -> Vec<u128> {
     let mut closure = vec![0u128; net.num_layers()];
     for (i, l) in net.layers.iter().enumerate() {
         closure[i] = match pos[i] {

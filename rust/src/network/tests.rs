@@ -4,7 +4,7 @@ use crate::arch::Arch;
 use crate::coordinator::Coordinator;
 use crate::einsum::{workloads, TensorKind};
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
-use crate::mapspace::MapSpaceConfig;
+use crate::mapspace::{pareto_front_k, MapSpaceConfig, ParetoPointK};
 use crate::model::Evaluator;
 use crate::search::{self, Algorithm, Objective, SearchSpec};
 use crate::util::bench::check_network_bench_schema;
@@ -48,6 +48,7 @@ fn tiny_spec(max_seg: usize) -> NetworkSearchSpec {
             },
             ..Default::default()
         },
+        ..Default::default()
     }
 }
 
@@ -166,6 +167,7 @@ fn resnet_block_cuts_bit_match_per_block_search() {
             },
             ..Default::default()
         },
+        ..Default::default()
     };
     // Cut at every block boundary: stem | pool | 8 two-conv blocks.
     let cuts = [1, 2, 4, 6, 8, 10, 12, 14, 16];
@@ -223,6 +225,7 @@ fn graph_dp_matches_chain_dp_on_paths() {
             },
             ..Default::default()
         },
+        ..Default::default()
     };
     for net in [vgg16(), resnet18_chain()] {
         assert!(net.is_chain());
@@ -450,6 +453,7 @@ fn resnet18_dag_search_fuses_across_a_branch() {
             },
             ..Default::default()
         },
+        ..Default::default()
     };
     let res = search_network(&net, &arch, &spec, &pool).unwrap();
     // Every non-virtual node covered exactly once.
@@ -599,28 +603,44 @@ fn signatures_are_collision_free_across_presets() {
 #[test]
 fn bench_smoke_json_schema_is_pinned() {
     // The bench binary builds rows through `NetworkSearchResult::bench_row`
-    // and asserts `check_network_bench_schema` before writing — this test
-    // pins both sides so the CI artifact cannot silently drift.
+    // / `NetworkParetoResult::bench_row` and asserts
+    // `check_network_bench_schema` before writing — this test pins both
+    // sides so the CI artifact cannot silently drift.
     let net = tiny_conv_chain(3);
     let arch = Arch::generic(32);
     let res = search_network(&net, &arch, &tiny_spec(2), &Coordinator::new(1)).unwrap();
     let row = res.bench_row(&net.name, net.num_layers(), 123.0);
-    let doc = Json::Obj([("rows".to_string(), Json::Arr(vec![row.clone()]))].into_iter().collect());
-    check_network_bench_schema(&doc).unwrap();
-    // A row losing a key (schema drift) must fail the check.
-    if let Json::Obj(m) = &row {
-        let mut broken = m.clone();
-        broken.remove("total_offchip_elems");
-        let doc = Json::Obj(
-            [("rows".to_string(), Json::Arr(vec![Json::Obj(broken)]))].into_iter().collect(),
-        );
-        assert!(check_network_bench_schema(&doc).is_err());
-    } else {
-        panic!("bench_row must be an object");
-    }
-    // And so must an empty or missing rows array.
+    let front = search_network_pareto(&net, &arch, &tiny_spec(2), &Coordinator::new(1)).unwrap();
+    let pareto_row = front.bench_row(&net.name, net.num_layers(), 123.0);
+    let doc = |rows: Vec<Json>, pareto_rows: Vec<Json>| {
+        Json::Obj(
+            [
+                ("rows".to_string(), Json::Arr(rows)),
+                ("pareto_rows".to_string(), Json::Arr(pareto_rows)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    };
+    check_network_bench_schema(&doc(vec![row.clone()], vec![pareto_row.clone()])).unwrap();
+    // A row losing a key (schema drift) must fail the check — both sections.
+    let (Json::Obj(m), Json::Obj(pm)) = (&row, &pareto_row) else {
+        panic!("bench rows must be objects");
+    };
+    let mut broken = m.clone();
+    broken.remove("total_offchip_elems");
+    let bad = doc(vec![Json::Obj(broken)], vec![pareto_row.clone()]);
+    assert!(check_network_bench_schema(&bad).is_err());
+    let mut broken = pm.clone();
+    broken.remove("front_points");
+    let bad = doc(vec![row.clone()], vec![Json::Obj(broken)]);
+    assert!(check_network_bench_schema(&bad).is_err());
+    // And so must an empty or missing section.
     assert!(check_network_bench_schema(&Json::parse("{}").unwrap()).is_err());
     assert!(check_network_bench_schema(&Json::parse("{\"rows\":[]}").unwrap()).is_err());
+    assert!(check_network_bench_schema(&doc(vec![row.clone()], vec![])).is_err());
+    let only_pareto = Json::parse("{\"pareto_rows\":[{\"workload\":\"x\"}]}").unwrap();
+    assert!(check_network_bench_schema(&only_pareto).is_err());
 }
 
 #[test]
@@ -678,6 +698,7 @@ fn stochastic_segment_search_is_deterministic() {
             seed: 11,
             ..Default::default()
         },
+        ..Default::default()
     };
     let a = search_network(&net, &arch, &spec, &Coordinator::new(1)).unwrap();
     let b = search_network(&net, &arch, &spec, &Coordinator::new(3)).unwrap();
@@ -749,6 +770,299 @@ fn invalid_networks_rejected_with_located_errors() {
     net.push_from("sum", &[8, 16, 16], LayerOp::Add, vec![c1, c0]);
     let err = net.validate().unwrap_err();
     assert!(err.contains("layer 2") && err.contains("add"), "{err}");
+}
+
+// ------------------------------------------------ network Pareto fronts --
+
+/// The acceptance pin: on both a branched graph (resnet18) and a path
+/// (vgg16), the scalar DP optimum for every objective lies on the emitted
+/// network Pareto front, bit for bit. Exact because the per-segment
+/// searches are exhaustive (the front and the scalar path rank the same
+/// evaluated sets).
+#[test]
+fn scalar_optima_lie_on_pareto_front() {
+    let arch = Arch::generic(256);
+    let pool = Coordinator::new(2);
+    for (net, tiles) in [(resnet18(), vec![8]), (vgg16(), vec![32])] {
+        let spec = NetworkSearchSpec {
+            max_segment_layers: 2,
+            search: SearchSpec {
+                mapspace: MapSpaceConfig {
+                    uniform_retention: true,
+                    tile_sizes: tiles,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            // A beam cap bounds the label sets on the full networks; axis
+            // minima survive capping (cap >= #objectives), so the
+            // scalar-optimum pin below stays exact.
+            max_front_per_state: 24,
+            ..Default::default()
+        };
+        let front = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
+        assert!(!front.points.is_empty(), "{}", net.name);
+        assert_eq!(front.objectives.len(), 4, "default axes");
+        for (axis, &objective) in front.objectives.iter().enumerate() {
+            let scalar_spec = NetworkSearchSpec {
+                search: SearchSpec { objective, ..spec.search.clone() },
+                ..spec.clone()
+            };
+            let scalar = search_network(&net, &arch, &scalar_spec, &pool).unwrap();
+            let front_min = front.min_cost(axis).unwrap();
+            // Latency/capacity/offchip scores are integer counts (exactly
+            // representable, sums exact) and chain sums share the scalar
+            // DP's association order — pinned bit for bit. The energy axis
+            // on a branched graph may differ from the scalar lattice DP by
+            // association order alone when distinct covers tie exactly, so
+            // it gets an ulp-scale bound instead.
+            if net.is_chain() || objective != Objective::Energy {
+                assert_eq!(
+                    front_min.to_bits(),
+                    scalar.total_score.to_bits(),
+                    "{}: scalar {} optimum {} not on the front (front min {})",
+                    net.name,
+                    objective.name(),
+                    scalar.total_score,
+                    front_min
+                );
+            } else {
+                let tol = 1e-12 * scalar.total_score.abs().max(1.0);
+                assert!(
+                    (front_min - scalar.total_score).abs() <= tol,
+                    "{}: scalar {} optimum {} not on the front (front min {})",
+                    net.name,
+                    objective.name(),
+                    scalar.total_score,
+                    front_min
+                );
+            }
+        }
+        // Front invariants: sorted, mutually non-dominated, accounting
+        // consistent with the chosen segments.
+        for w in front.points.windows(2) {
+            let ord = crate::mapspace::cmp_costs(&w[0].costs, &w[1].costs);
+            assert_eq!(ord, std::cmp::Ordering::Less);
+        }
+        for p in &front.points {
+            for q in &front.points {
+                if !std::ptr::eq(p, q) {
+                    assert!(!crate::mapspace::dominates(&p.costs, &q.costs));
+                }
+            }
+            let mut covered = vec![false; net.num_layers()];
+            for s in &p.segments {
+                for &i in &s.nodes {
+                    assert!(!covered[i], "node {i} covered twice");
+                    covered[i] = true;
+                }
+            }
+            for (i, l) in net.layers.iter().enumerate() {
+                assert_eq!(covered[i], !l.op.is_virtual());
+            }
+            let cuts: Vec<usize> = p.segments.iter().skip(1).map(|s| s.lo).collect();
+            assert_eq!(p.cuts, cuts);
+            // Recompute every axis from the chosen segment metrics.
+            for (axis, &objective) in front.objectives.iter().enumerate() {
+                let total: f64 = p
+                    .segments
+                    .iter()
+                    .map(|s| spec.search.score_objective(objective, &s.best.metrics))
+                    .sum();
+                assert_eq!(total.to_bits(), p.costs[axis].to_bits());
+            }
+        }
+    }
+}
+
+/// The branched acceptance pin: the front DP equals brute force over every
+/// fusable partition x every combination of per-segment Pareto choices.
+#[test]
+fn pareto_front_matches_bruteforce_on_branched_graph() {
+    let net = tiny_residual();
+    let arch = Arch::generic(64);
+    let pool = Coordinator::new(2);
+    let mut spec = tiny_spec(3);
+    spec.objectives = vec![Objective::Latency, Objective::Capacity, Objective::Offchip];
+
+    let dp = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
+
+    let add = |a: &[f64], b: &[f64]| -> Vec<f64> {
+        a.iter().zip(b).map(|(x, y)| x + y).collect()
+    };
+    let mut all: Vec<ParetoPointK<()>> = Vec::new();
+    let mut feasible = 0usize;
+    for part in set_partitions(4) {
+        if part.iter().any(|s| s.len() > spec.max_segment_layers) {
+            continue;
+        }
+        if part.iter().any(|s| !net.segment_buildable_nodes(s)) {
+            continue;
+        }
+        feasible += 1;
+        // Segments in sink order (= ascending largest node), per-segment
+        // evaluated sets pruned to fronts (combining front choices suffices:
+        // any dominated per-segment choice is replaceable axis-by-axis).
+        let mut segs = part.clone();
+        segs.sort_by_key(|s| *s.iter().max().unwrap());
+        let mut per_seg: Vec<Vec<Vec<f64>>> = Vec::new();
+        for nodes in &segs {
+            let fs = net.segment_fusion_set_nodes(nodes).unwrap();
+            let ev = Evaluator::new(&fs, &arch).unwrap();
+            let r = search::run(&ev, &spec.search, &Coordinator::new(1)).unwrap();
+            let pts: Vec<ParetoPointK<()>> = r
+                .evaluated
+                .iter()
+                .map(|sc| ParetoPointK {
+                    costs: spec
+                        .objectives
+                        .iter()
+                        .map(|&o| spec.search.score_objective(o, &sc.metrics))
+                        .collect(),
+                    payload: (),
+                })
+                .collect();
+            per_seg.push(pareto_front_k(pts).into_iter().map(|p| p.costs).collect());
+        }
+        // Cartesian sum across segments, accumulating in sink order (the
+        // DP's canonical association order).
+        let mut sums: Vec<Vec<f64>> = vec![Vec::new()];
+        for front in &per_seg {
+            let mut next = Vec::with_capacity(sums.len() * front.len());
+            for base in &sums {
+                for c in front {
+                    next.push(if base.is_empty() { c.clone() } else { add(base, c) });
+                }
+            }
+            sums = next;
+        }
+        all.extend(sums.into_iter().map(|costs| ParetoPointK { costs, payload: () }));
+        // Incremental global prune keeps the candidate pool small without
+        // weakening the check (front(A ∪ B) == front(front(A) ∪ B)).
+        all = pareto_front_k(all);
+    }
+    assert!(feasible > 2, "brute force found too few fusable partitions");
+    let brute = pareto_front_k(all);
+    assert_eq!(
+        dp.points.len(),
+        brute.len(),
+        "front sizes differ: DP {:?} vs brute {:?}",
+        dp.points.iter().map(|p| p.costs.clone()).collect::<Vec<_>>(),
+        brute.iter().map(|p| p.costs.clone()).collect::<Vec<_>>()
+    );
+    for (d, b) in dp.points.iter().zip(&brute) {
+        assert_eq!(d.costs.len(), b.costs.len());
+        for (x, y) in d.costs.iter().zip(&b.costs) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    // The interesting part of the front fuses across the branch point.
+    assert!(dp
+        .points
+        .iter()
+        .any(|p| p.segments.iter().any(|s| s.spans_branch(&net))));
+}
+
+/// On pure paths the graph-cut front DP emits the same front (cost for
+/// cost, bit for bit) as the chain cut-point front DP.
+#[test]
+fn pareto_graph_dp_matches_chain_dp_on_paths() {
+    let arch = Arch::generic(32);
+    let pool = Coordinator::new(2);
+    let mut spec = tiny_spec(2);
+    spec.objectives = vec![Objective::Latency, Objective::Energy, Objective::Offchip];
+    // Capped: identical label *cost sets* at every state make the capped
+    // selection identical too, and vgg16's uncapped 3-axis fronts would be
+    // needlessly large for a parity pin.
+    spec.max_front_per_state = 32;
+    for net in [tiny_conv_chain(5), vgg16()] {
+        assert!(net.is_chain());
+        let chain = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
+        let dag = search_network_pareto_dag(&net, &arch, &spec, &pool).unwrap();
+        assert_eq!(chain.points.len(), dag.points.len(), "{}", net.name);
+        assert_eq!(chain.candidate_segments, dag.candidate_segments, "{}", net.name);
+        assert_eq!(chain.distinct_searched, dag.distinct_searched, "{}", net.name);
+        assert_eq!(chain.segment_front_points, dag.segment_front_points, "{}", net.name);
+        for (a, b) in chain.points.iter().zip(&dag.points) {
+            for (x, y) in a.costs.iter().zip(&b.costs) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", net.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn pareto_front_deterministic_across_worker_counts() {
+    let arch = Arch::generic(32);
+    let mut spec = tiny_spec(2);
+    spec.objectives = vec![Objective::Latency, Objective::Capacity, Objective::Offchip];
+    for net in [tiny_conv_chain(5), tiny_residual()] {
+        let a = search_network_pareto(&net, &arch, &spec, &Coordinator::new(1)).unwrap();
+        let b = search_network_pareto(&net, &arch, &spec, &Coordinator::new(4)).unwrap();
+        assert_eq!(a.points.len(), b.points.len(), "{}", net.name);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            for (cx, cy) in x.costs.iter().zip(&y.costs) {
+                assert_eq!(cx.to_bits(), cy.to_bits());
+            }
+            assert_eq!(x.cuts, y.cuts);
+            let xn: Vec<_> = x.segments.iter().map(|s| s.nodes.clone()).collect();
+            let yn: Vec<_> = y.segments.iter().map(|s| s.nodes.clone()).collect();
+            assert_eq!(xn, yn);
+            for (sx, sy) in x.segments.iter().zip(&y.segments) {
+                assert_eq!(sx.best.mapping, sy.best.mapping);
+                assert_eq!(sx.best.score.to_bits(), sy.best.score.to_bits());
+            }
+        }
+    }
+}
+
+/// The beam cap bounds the front but never loses a per-axis minimum (the
+/// cap-keeps-axis-minima policy of `cap_front_k`, applied at every DP
+/// state and per-segment front).
+#[test]
+fn beam_cap_bounds_front_and_keeps_axis_minima() {
+    let net = tiny_residual();
+    let arch = Arch::generic(64);
+    let pool = Coordinator::new(2);
+    let mut spec = tiny_spec(3);
+    spec.objectives = vec![Objective::Latency, Objective::Capacity, Objective::Offchip];
+    let exact = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
+    let mut capped_spec = spec.clone();
+    capped_spec.max_front_per_state = spec.objectives.len();
+    let capped = search_network_pareto(&net, &arch, &capped_spec, &pool).unwrap();
+    assert!(capped.points.len() <= capped_spec.max_front_per_state);
+    assert!(capped.points.len() <= exact.points.len());
+    for axis in 0..spec.objectives.len() {
+        assert_eq!(
+            capped.min_cost(axis).unwrap().to_bits(),
+            exact.min_cost(axis).unwrap().to_bits(),
+            "axis {axis} minimum lost under capping"
+        );
+    }
+    // A cap below the arity is rejected up front.
+    let mut bad = spec.clone();
+    bad.max_front_per_state = 2;
+    assert!(search_network_pareto(&net, &arch, &bad, &pool).is_err());
+    // As is an empty objectives list.
+    let mut bad = spec.clone();
+    bad.objectives.clear();
+    assert!(search_network_pareto(&net, &arch, &bad, &pool).is_err());
+}
+
+/// A single-objective "front" degenerates to exactly the scalar optimum.
+#[test]
+fn single_objective_front_is_the_scalar_optimum() {
+    let net = tiny_conv_chain(4);
+    let arch = Arch::generic(32);
+    let pool = Coordinator::new(1);
+    let mut spec = tiny_spec(2);
+    spec.objectives = vec![Objective::Offchip];
+    spec.search.objective = Objective::Offchip;
+    let front = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
+    assert_eq!(front.points.len(), 1);
+    let scalar = search_network(&net, &arch, &spec, &pool).unwrap();
+    assert_eq!(front.points[0].costs[0].to_bits(), scalar.total_score.to_bits());
+    assert_eq!(front.points[0].cuts, scalar.cuts);
 }
 
 #[test]

@@ -178,11 +178,16 @@ impl SearchSpec {
     /// infeasibility penalty applied when `penalize_infeasible` is set (and
     /// the objective does not already penalize).
     pub fn score(&self, m: &Metrics) -> f64 {
-        let base = self.objective.score(m);
-        if self.penalize_infeasible
-            && self.objective != Objective::FeasibleEdp
-            && !m.capacity_ok
-        {
+        self.score_objective(self.objective, m)
+    }
+
+    /// Score `m` under an arbitrary objective with this spec's penalty
+    /// policy — the per-axis cost of the network-level Pareto front, which
+    /// must match the scalar path bit for bit when the axis objective is the
+    /// spec's own.
+    pub fn score_objective(&self, objective: Objective, m: &Metrics) -> f64 {
+        let base = objective.score(m);
+        if self.penalize_infeasible && objective != Objective::FeasibleEdp && !m.capacity_ok {
             base * Objective::INFEASIBLE_PENALTY
         } else {
             base

@@ -19,7 +19,9 @@ use crate::einsum::{
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::MapSpaceConfig;
 use crate::model::{EnergyBreakdown, Metrics};
-use crate::network::{self, LayerOp, LayerSpec, Network, NetworkSearchSpec};
+use crate::network::{
+    self, LayerOp, LayerSpec, Network, NetworkParetoResult, NetworkSearchSpec,
+};
 use crate::poly::{AffineExpr, AffineMap};
 use crate::search::{Algorithm, Objective, SearchSpec};
 use crate::util::json::Json;
@@ -964,11 +966,17 @@ impl NetworkSearchSpec {
         jobj(vec![
             ("max_segment_layers", jnum_u(self.max_segment_layers)),
             ("search", self.search.to_json()),
+            (
+                "objectives",
+                jarr(self.objectives.iter().map(|o| o.to_json()).collect()),
+            ),
+            ("max_front_per_state", jnum_u(self.max_front_per_state)),
         ])
     }
 
     /// Parse a network-search spec; every absent field takes its
-    /// [`NetworkSearchSpec::default`] value, so `{}` is a valid spec.
+    /// [`NetworkSearchSpec::default`] value, so `{}` is a valid spec (and
+    /// pre-Pareto documents parse unchanged).
     pub fn from_json(j: &Json) -> Result<NetworkSearchSpec, String> {
         let ctx = "segment search";
         let d = NetworkSearchSpec::default();
@@ -988,7 +996,31 @@ impl NetworkSearchSpec {
             Some(v) => SearchSpec::from_json(v)?,
             None => d.search,
         };
-        Ok(NetworkSearchSpec { max_segment_layers, search })
+        let objectives = match j.get("objectives") {
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| format!("{ctx}: objectives must be an array"))?;
+                if arr.is_empty() {
+                    return Err(format!("{ctx}: objectives must not be empty"));
+                }
+                arr.iter().map(Objective::from_json).collect::<Result<_, _>>()?
+            }
+            None => d.objectives,
+        };
+        let max_front_per_state = match j.get("max_front_per_state") {
+            Some(v) => {
+                let m = v
+                    .as_i64()
+                    .ok_or_else(|| format!("{ctx}: max_front_per_state must be a number"))?;
+                if m < 0 {
+                    return Err(format!("{ctx}: max_front_per_state must be non-negative"));
+                }
+                m as usize
+            }
+            None => d.max_front_per_state,
+        };
+        Ok(NetworkSearchSpec { max_segment_layers, search, objectives, max_front_per_state })
     }
 }
 
@@ -1201,6 +1233,9 @@ pub struct NetworkConfig {
     pub segment_search: NetworkSearchSpec,
     /// `Some` = score this exact partition; `None` = DP over all cut sets.
     pub cuts: Option<Vec<usize>>,
+    /// `true` = emit the multi-objective Pareto front over cut sets
+    /// ([`network::search_network_pareto`]) instead of the scalar optimum.
+    pub pareto: bool,
 }
 
 impl NetworkConfig {
@@ -1212,6 +1247,9 @@ impl NetworkConfig {
         ];
         if let Some(cuts) = &self.cuts {
             pairs.push(("cuts", jarr(cuts.iter().map(|&c| jnum_u(c)).collect())));
+        }
+        if self.pareto {
+            pairs.push(("pareto", Json::Bool(true)));
         }
         jobj(pairs)
     }
@@ -1245,7 +1283,80 @@ impl NetworkConfig {
             }
             None => None,
         };
-        Ok(NetworkConfig { network, arch, segment_search, cuts })
+        let pareto = match j.get("pareto") {
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| format!("{ctx}: pareto must be a bool"))?,
+            None => false,
+        };
+        if pareto && cuts.is_some() {
+            return Err(format!(
+                "{ctx}: 'pareto' searches the front over cut sets; it cannot be combined with \
+                 a fixed 'cuts' list"
+            ));
+        }
+        Ok(NetworkConfig { network, arch, segment_search, cuts, pareto })
+    }
+}
+
+// ------------------------------------------------- network Pareto fronts --
+
+impl NetworkParetoResult {
+    /// The result section of a `looptree network --pareto --json` document:
+    /// the objective axes, the beam cap, the search accounting, and one
+    /// entry per front point — cost vector (axis order = `objectives`),
+    /// cuts, per-segment mappings/metrics, and the standard totals. The
+    /// surrounding document embeds the originating [`NetworkConfig`], so it
+    /// re-feeds as `--config` and reproduces the same front.
+    pub fn to_json(&self) -> Json {
+        let points = Json::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    let segments = Json::Arr(
+                        p.segments
+                            .iter()
+                            .map(|s| {
+                                jobj(vec![
+                                    (
+                                        "nodes",
+                                        jarr(s.nodes.iter().map(|&i| jnum_u(i)).collect()),
+                                    ),
+                                    ("span", jstr(&s.span)),
+                                    ("mapping", s.best.mapping.to_json()),
+                                    ("score", Json::Num(s.best.score)),
+                                    ("metrics", s.best.metrics.to_json()),
+                                ])
+                            })
+                            .collect(),
+                    );
+                    jobj(vec![
+                        (
+                            "costs",
+                            jarr(p.costs.iter().map(|&c| Json::Num(c)).collect()),
+                        ),
+                        ("cuts", jarr(p.cuts.iter().map(|&c| jnum_u(c)).collect())),
+                        ("total_latency_cycles", jnum_i(p.total_latency())),
+                        ("total_energy_pj", Json::Num(p.total_energy_pj())),
+                        ("total_offchip_elems", jnum_i(p.total_offchip())),
+                        ("all_fit", Json::Bool(p.all_fit())),
+                        ("segments", segments),
+                    ])
+                })
+                .collect(),
+        );
+        jobj(vec![
+            (
+                "objectives",
+                jarr(self.objectives.iter().map(|o| o.to_json()).collect()),
+            ),
+            ("max_front_per_state", jnum_u(self.max_front_per_state)),
+            ("front_points", jnum_u(self.points.len())),
+            ("points", points),
+            ("distinct_searched", jnum_u(self.distinct_searched)),
+            ("candidate_segments", jnum_u(self.candidate_segments)),
+            ("segment_front_points", jnum_u(self.segment_front_points)),
+        ])
     }
 }
 
@@ -1451,20 +1562,45 @@ mod tests {
             arch: Arch::generic(64),
             segment_search: NetworkSearchSpec {
                 max_segment_layers: 2,
+                objectives: vec![Objective::Latency, Objective::Offchip],
+                max_front_per_state: 6,
                 ..Default::default()
             },
             cuts: Some(vec![2]),
+            pareto: false,
         };
         let back = NetworkConfig::from_json(&reser(&cfg.to_json())).unwrap();
         assert_eq!(back.network, cfg.network);
         assert_eq!(back.segment_search, cfg.segment_search);
         assert_eq!(back.cuts, cfg.cuts);
+        assert!(!back.pareto);
         assert_eq!(back.arch.to_json().to_string(), cfg.arch.to_json().to_string());
+        // The pareto flag survives the round trip (and excludes fixed cuts).
+        let pareto_cfg = NetworkConfig { cuts: None, pareto: true, ..cfg.clone() };
+        let back = NetworkConfig::from_json(&reser(&pareto_cfg.to_json())).unwrap();
+        assert!(back.pareto);
+        let clash = NetworkConfig { pareto: true, ..cfg.clone() }; // cuts still set
+        assert!(NetworkConfig::from_json(&reser(&clash.to_json())).is_err());
         // Minimal document: shorthand network, everything else defaulted.
         let j = Json::parse("{\"network\": \"bert:1,2,16,8\"}").unwrap();
         let cfg = NetworkConfig::from_json(&j).unwrap();
         assert_eq!(cfg.segment_search, NetworkSearchSpec::default());
         assert!(cfg.cuts.is_none());
+        assert!(!cfg.pareto);
+        // Pre-Pareto segment_search documents parse to the default axes.
+        let j = Json::parse(
+            "{\"network\": \"bert:1,2,16,8\", \"segment_search\": {\"max_segment_layers\": 2}}",
+        )
+        .unwrap();
+        let cfg = NetworkConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.segment_search.objectives, NetworkSearchSpec::default().objectives);
+        assert_eq!(cfg.segment_search.max_front_per_state, 0);
+        // An empty objectives list is rejected on parse.
+        let j = Json::parse(
+            "{\"network\": \"bert:1,2,16,8\", \"segment_search\": {\"objectives\": []}}",
+        )
+        .unwrap();
+        assert!(NetworkConfig::from_json(&j).is_err());
         // A structurally broken network document is rejected on parse.
         let j = Json::parse(
             "{\"network\": {\"name\": \"x\", \"layers\": []}}",

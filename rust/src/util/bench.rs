@@ -73,10 +73,46 @@ pub fn write_bench_json(path: &str, obj: &Json) -> std::io::Result<()> {
     std::fs::write(path, format!("{}\n", obj.pretty()))
 }
 
-/// The per-row keys of `BENCH_network.json` and their expected JSON type
-/// (`true` = number, `false` = other). CI uploads that artifact; the bench
-/// binary asserts this schema before writing and the test suite pins it, so
-/// consumers downstream never see silent drift.
+/// Shared section checker behind the `BENCH_*.json` schema pins: `section`
+/// must be a non-empty array whose entries carry a string `workload`, every
+/// bool key, and every numeric key.
+fn check_rows(
+    doc: &Json,
+    file: &str,
+    section: &str,
+    num_keys: &[&str],
+    bool_keys: &[&str],
+) -> Result<(), String> {
+    let rows = doc
+        .get(section)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{file}: missing '{section}' array"))?;
+    if rows.is_empty() {
+        return Err(format!("{file}: '{section}' is empty"));
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let ctx = |k: &str| format!("{file} {section}[{i}]: bad or missing '{k}'");
+        if row.get("workload").and_then(Json::as_str).is_none() {
+            return Err(ctx("workload"));
+        }
+        for k in bool_keys {
+            if row.get(k).and_then(Json::as_bool).is_none() {
+                return Err(ctx(k));
+            }
+        }
+        for k in num_keys {
+            if row.get(k).and_then(Json::as_f64).is_none() {
+                return Err(ctx(k));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The per-row numeric keys of `BENCH_network.json`'s `rows` section. CI
+/// uploads that artifact and diffs its deterministic counters across two
+/// runs; the bench binary asserts this schema before writing and the test
+/// suite pins it, so consumers downstream never see silent drift.
 pub const NETWORK_BENCH_NUM_KEYS: [&str; 7] = [
     "mean_ns",
     "layers",
@@ -87,32 +123,60 @@ pub const NETWORK_BENCH_NUM_KEYS: [&str; 7] = [
     "total_offchip_elems",
 ];
 
+/// The per-row numeric keys of `BENCH_network.json`'s `pareto_rows` section
+/// (front sizes of the network-level Pareto DP).
+pub const NETWORK_PARETO_BENCH_NUM_KEYS: [&str; 7] = [
+    "mean_ns",
+    "layers",
+    "objectives",
+    "front_points",
+    "segment_front_points",
+    "candidate_segments",
+    "distinct_searched",
+];
+
 /// Validate a `BENCH_network.json` document: a `rows` array whose entries
 /// carry a string `workload`, a bool `all_fit`, and every numeric key of
-/// [`NETWORK_BENCH_NUM_KEYS`].
+/// [`NETWORK_BENCH_NUM_KEYS`]; plus a `pareto_rows` array whose entries
+/// carry a string `workload` and every numeric key of
+/// [`NETWORK_PARETO_BENCH_NUM_KEYS`].
 pub fn check_network_bench_schema(doc: &Json) -> Result<(), String> {
-    let rows = doc
-        .get("rows")
-        .and_then(Json::as_arr)
-        .ok_or("BENCH_network.json: missing 'rows' array")?;
-    if rows.is_empty() {
-        return Err("BENCH_network.json: 'rows' is empty".into());
-    }
-    for (i, row) in rows.iter().enumerate() {
-        let ctx = |k: &str| format!("BENCH_network.json row {i}: bad or missing '{k}'");
-        if row.get("workload").and_then(Json::as_str).is_none() {
-            return Err(ctx("workload"));
-        }
-        if row.get("all_fit").and_then(Json::as_bool).is_none() {
-            return Err(ctx("all_fit"));
-        }
-        for k in NETWORK_BENCH_NUM_KEYS {
-            if row.get(k).and_then(Json::as_f64).is_none() {
-                return Err(ctx(k));
-            }
-        }
-    }
-    Ok(())
+    const FILE: &str = "BENCH_network.json";
+    check_rows(doc, FILE, "rows", &NETWORK_BENCH_NUM_KEYS, &["all_fit"])?;
+    check_rows(doc, FILE, "pareto_rows", &NETWORK_PARETO_BENCH_NUM_KEYS, &[])
+}
+
+/// The per-row numeric keys of `BENCH_search.json` (only `evaluated` and
+/// `best_score` are deterministic counters; the CI determinism gate excludes
+/// the timing-derived keys).
+pub const SEARCH_BENCH_NUM_KEYS: [&str; 4] =
+    ["mean_ns", "evaluated", "mappings_per_sec", "best_score"];
+
+/// Validate a `BENCH_search.json` document: a `rows` array whose entries
+/// carry a string `workload` and every numeric key of
+/// [`SEARCH_BENCH_NUM_KEYS`].
+pub fn check_search_bench_schema(doc: &Json) -> Result<(), String> {
+    check_rows(doc, "BENCH_search.json", "rows", &SEARCH_BENCH_NUM_KEYS, &[])
+}
+
+/// The per-row numeric keys of `BENCH_model_eval.json`'s `rows` section
+/// (each row is a [`BenchResult::to_json`] record).
+pub const MODEL_EVAL_BENCH_NUM_KEYS: [&str; 5] =
+    ["mean_ns", "min_ns", "max_ns", "iters", "iters_per_sec"];
+
+/// The per-row numeric keys of `BENCH_model_eval.json`'s
+/// `fastpath_speedups` section (`iterations` is the deterministic
+/// distinct-tile counter the CI determinism gate diffs).
+pub const MODEL_EVAL_SPEEDUP_NUM_KEYS: [&str; 4] =
+    ["iterations", "fast_mean_ns", "reference_mean_ns", "speedup"];
+
+/// Validate a `BENCH_model_eval.json` document: `rows` +
+/// `fastpath_speedups`, each non-empty with a string `workload` and the
+/// matching numeric keys.
+pub fn check_model_eval_bench_schema(doc: &Json) -> Result<(), String> {
+    const FILE: &str = "BENCH_model_eval.json";
+    check_rows(doc, FILE, "rows", &MODEL_EVAL_BENCH_NUM_KEYS, &[])?;
+    check_rows(doc, FILE, "fastpath_speedups", &MODEL_EVAL_SPEEDUP_NUM_KEYS, &[])
 }
 
 /// Time `f` for `iters` repetitions after `warmup` repetitions.
@@ -170,5 +234,46 @@ mod tests {
         let (v, r) = bench_once("compute", || 42);
         assert_eq!(v, 42);
         assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn search_bench_schema_is_pinned() {
+        // The bench binary emits rows with exactly these keys; losing any
+        // (or the rows array itself) must fail the check.
+        let row = "{\"workload\":\"exhaustive\",\"mean_ns\":1.0,\"evaluated\":40,\
+                   \"mappings_per_sec\":2.0,\"best_score\":3.0}";
+        let doc = Json::parse(&format!("{{\"rows\":[{row}]}}")).unwrap();
+        check_search_bench_schema(&doc).unwrap();
+        assert!(check_search_bench_schema(&Json::parse("{}").unwrap()).is_err());
+        assert!(check_search_bench_schema(&Json::parse("{\"rows\":[]}").unwrap()).is_err());
+        let broken = "{\"rows\":[{\"workload\":\"x\",\"mean_ns\":1.0}]}";
+        assert!(check_search_bench_schema(&Json::parse(broken).unwrap()).is_err());
+    }
+
+    #[test]
+    fn model_eval_bench_schema_is_pinned() {
+        // rows entries are BenchResult::to_json records — pin both sides.
+        let row = bench("noop", 0, 2, || 1).to_json().to_string();
+        let speedup = "{\"workload\":\"conv\",\"iterations\":12.0,\"fast_mean_ns\":1.0,\
+                       \"reference_mean_ns\":2.0,\"speedup\":2.0}";
+        let doc = Json::parse(&format!(
+            "{{\"rows\":[{row}],\"fastpath_speedups\":[{speedup}]}}"
+        ))
+        .unwrap();
+        check_model_eval_bench_schema(&doc).unwrap();
+        // Each section is required and non-empty.
+        let no_speedups = Json::parse(&format!("{{\"rows\":[{row}]}}")).unwrap();
+        assert!(check_model_eval_bench_schema(&no_speedups).is_err());
+        let doc = Json::parse(&format!(
+            "{{\"rows\":[],\"fastpath_speedups\":[{speedup}]}}"
+        ))
+        .unwrap();
+        assert!(check_model_eval_bench_schema(&doc).is_err());
+        // A speedup row losing the deterministic counter fails.
+        let doc = Json::parse(&format!(
+            "{{\"rows\":[{row}],\"fastpath_speedups\":[{{\"workload\":\"conv\"}}]}}"
+        ))
+        .unwrap();
+        assert!(check_model_eval_bench_schema(&doc).is_err());
     }
 }

@@ -4,7 +4,8 @@
 //! mapspace). Search throughput rides on the evaluator's steady-state fast
 //! path, so it no longer scales with the fmap extent.
 //!
-//! Emits `BENCH_search.json` (workload, mean ns, mappings/s per algorithm);
+//! Emits `BENCH_search.json` (workload, mean ns, mappings/s, evaluated and
+//! pruned counts per algorithm);
 //! `LOOPTREE_BENCH_SMOKE=1` shrinks the search budgets for CI.
 
 use looptree::arch::Arch;
@@ -44,12 +45,13 @@ fn main() {
     };
 
     let mut json_rows: Vec<Json> = Vec::new();
-    let mut record = |name: &str, mean_ns: f64, evaluated: usize, best: f64| {
+    let mut record = |name: &str, mean_ns: f64, evaluated: usize, pruned: usize, best: f64| {
         json_rows.push(Json::Obj(
             [
                 ("workload".to_string(), Json::Str(name.to_string())),
                 ("mean_ns".to_string(), Json::Num(mean_ns)),
                 ("evaluated".to_string(), Json::Num(evaluated as f64)),
+                ("pruned".to_string(), Json::Num(pruned as f64)),
                 (
                     "mappings_per_sec".to_string(),
                     Json::Num(if mean_ns > 0.0 {
@@ -75,28 +77,52 @@ fn main() {
         ex.best.score,
         ex.evaluated.len()
     );
-    record("exhaustive", t.mean.as_nanos() as f64, ex.evaluated.len(), ex.best.score);
+    record(
+        "exhaustive",
+        t.mean.as_nanos() as f64,
+        ex.evaluated.len(),
+        ex.pruned,
+        ex.best.score,
+    );
 
     let (rnd, t) = bench_once("random", || {
         let spec = SearchSpec { algorithm: Algorithm::Random, ..base.clone() };
         search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), rnd.best.score);
-    record("random", t.mean.as_nanos() as f64, rnd.evaluated.len(), rnd.best.score);
+    record(
+        "random",
+        t.mean.as_nanos() as f64,
+        rnd.evaluated.len(),
+        rnd.pruned,
+        rnd.best.score,
+    );
 
     let (ann, t) = bench_once("annealing", || {
         let spec = SearchSpec { algorithm: Algorithm::Annealing, ..base.clone() };
         search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), ann.best.score);
-    record("annealing", t.mean.as_nanos() as f64, ann.evaluated.len(), ann.best.score);
+    record(
+        "annealing",
+        t.mean.as_nanos() as f64,
+        ann.evaluated.len(),
+        ann.pruned,
+        ann.best.score,
+    );
 
     let (gen_, t) = bench_once("genetic", || {
         let spec = SearchSpec { algorithm: Algorithm::Genetic, ..base.clone() };
         search::run(&ev, &spec, &pool).unwrap()
     });
     println!("{}  -> best {:.3e}", t.report(), gen_.best.score);
-    record("genetic", t.mean.as_nanos() as f64, gen_.evaluated.len(), gen_.best.score);
+    record(
+        "genetic",
+        t.mean.as_nanos() as f64,
+        gen_.evaluated.len(),
+        gen_.pruned,
+        gen_.best.score,
+    );
 
     println!(
         "\nquality vs exhaustive optimum: random {:.2}x, annealing {:.2}x, genetic {:.2}x",

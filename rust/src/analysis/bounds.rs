@@ -1,0 +1,88 @@
+//! Closed-form lower bounds on evaluation metrics, derived from one
+//! backward needs sweep — no iteration walk.
+//!
+//! Soundness rests on two facts about the engine:
+//!
+//! * At the very first leaf the availability sets start empty, so nothing
+//!   is truncated and nothing has been invalidated: the engine's occupancy
+//!   there is exactly the full needs of the first leaf window. The peak
+//!   occupancy can only be larger.
+//! * Every element the walk ever *uses* is materialized at least once
+//!   (a consumer's needs outside availability are requested from the
+//!   producer, and availability only ever holds previously materialized
+//!   data), so per-layer executed operations and per-tensor off-chip
+//!   fetches are bounded below by the full-domain needs.
+//!
+//! These bounds power the search pruner: a mapping whose
+//! [`capacity_lower_bound`] already exceeds the buffer capacity is
+//! infeasible without being evaluated, and [`ObjectiveFloors`] bound the
+//! score such a mapping *would* receive, so pruning provably never changes
+//! a search result.
+
+use crate::einsum::FusionSet;
+use crate::mapping::InterLayerMapping;
+use crate::model::{window_needs, TileWindows};
+
+/// Exact occupancy of the first leaf of the walk — a lower bound on
+/// `occupancy_peak` for *any* retention assignment and parallelism, in
+/// elements. The first leaf fetches and materializes its full needs with
+/// nothing evicted yet, so no evaluation of `mapping` can peak below this.
+pub fn capacity_lower_bound(fs: &FusionSet, mapping: &InterLayerMapping) -> i64 {
+    let tw = TileWindows::new(fs, mapping);
+    let prefix = vec![0i64; tw.num_levels()];
+    let needs = window_needs(fs, &tw.window(&prefix));
+    needs.data.iter().map(|r| r.volume()).sum()
+}
+
+/// Mapping-independent floors on the evaluation metrics of a session,
+/// computed once from the full-domain backward needs. Each field is a
+/// provable lower bound on the corresponding metric of *every* mapping of
+/// the session (any tiling, retention, or parallelism).
+#[derive(Debug, Clone)]
+pub struct ObjectiveFloors {
+    /// Sequential compute-latency floor: `Σ_t ceil(ops_t / fanout_t)`.
+    pub latency_seq: i64,
+    /// Pipeline compute-latency floor: the bottleneck stage's total work,
+    /// `max_t ceil(ops_t / fanout_t)`.
+    pub latency_pipe: i64,
+    /// Compute-energy floor in pJ: `Σ_t ops_t · op_energy_t` (transfer
+    /// energy excluded — availability truncation makes per-level transfer
+    /// counts mapping-dependent in both directions).
+    pub energy_pj: f64,
+    /// Off-chip traffic floor in elements: every *used* element of an
+    /// off-chip-backed tensor crosses the boundary at least once.
+    pub offchip_elems: i64,
+}
+
+/// Compute [`ObjectiveFloors`] for a session. `fanout` and `op_energy_pj`
+/// are per-layer (compute fanout in ops/cycle and energy per op in pJ), as
+/// cached by the evaluator.
+pub fn objective_floors(
+    fs: &FusionSet,
+    fanout: &[i64],
+    op_energy_pj: &[f64],
+) -> ObjectiveFloors {
+    let needs = window_needs(fs, &fs.last().domain());
+    let ops: Vec<i64> = needs.ops.iter().map(|r| r.volume()).collect();
+    let lat: Vec<i64> = ops
+        .iter()
+        .zip(fanout)
+        .map(|(&o, &f)| o.div_ceil(f.max(1)))
+        .collect();
+    let energy_pj = ops
+        .iter()
+        .zip(op_energy_pj)
+        .map(|(&o, &e)| o as f64 * e)
+        .sum();
+    let offchip_elems = fs
+        .offchip_backed_tensors()
+        .into_iter()
+        .map(|x| needs.data[x.0].volume())
+        .sum();
+    ObjectiveFloors {
+        latency_seq: lat.iter().sum(),
+        latency_pipe: lat.iter().copied().max().unwrap_or(0),
+        energy_pj,
+        offchip_elems,
+    }
+}

@@ -1,0 +1,352 @@
+//! Config linting: structured diagnostics over the JSON documents the CLI
+//! consumes, with stable `LT0xx` codes, severities, JSON-path spans, and
+//! fix-it hints. Backs the `looptree lint` subcommand.
+//!
+//! | code  | severity | meaning                                            |
+//! |-------|----------|----------------------------------------------------|
+//! | LT001 | error    | unrecognized document shape                        |
+//! | LT002 | error    | a section fails to parse or validate               |
+//! | LT004 | error    | mapping invalid for the workload                   |
+//! | LT005 | warning  | mapping provably exceeds the GLB capacity          |
+//! | LT006 | warning  | retention entry on an output tensor (dead)         |
+//! | LT007 | warning  | degenerate partition (tile ≥ rank extent)          |
+//! | LT008 | warning  | partition on a reduction rank of the last layer    |
+//! | LT009 | warning  | zero search budget for the selected algorithm      |
+//! | LT010 | error    | unknown rank name / invalid tile size in mapspace  |
+//!
+//! Document shapes are detected by key: `network` ⇒ network config, else
+//! `search` ⇒ search config, else `workload` ⇒ analyze config. Parse
+//! errors reuse the JSON paths threaded through `spec` (e.g.
+//! `workload.einsums[1].inputs[0]`), so every diagnostic points at the
+//! offending key.
+
+use super::capacity_lower_bound;
+use crate::einsum::{FusionSet, TensorKind};
+use crate::mapping::InterLayerMapping;
+use crate::search::{Algorithm, SearchSpec};
+use crate::spec::{AnalyzeConfig, NetworkConfig, SearchConfig};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Diagnostic severity. Errors make the document unusable; warnings flag
+/// configurations that are legal but almost certainly not what was meant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Suspicious but usable; `lint` exits 1.
+    Warning,
+    /// Unusable document; `lint` exits 2.
+    Error,
+}
+
+impl Severity {
+    /// Stable wire name (`"warning"` / `"error"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One lint finding: a stable code, a severity, the JSON path of the
+/// offending key, a message, and a fix-it hint.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable `LT0xx` code (see the module table).
+    pub code: &'static str,
+    /// Whether the document is unusable or merely suspicious.
+    pub severity: Severity,
+    /// JSON path of the offending key (e.g. `mapping.partitions[1]`);
+    /// empty when the finding concerns the document as a whole.
+    pub path: String,
+    /// What is wrong.
+    pub message: String,
+    /// How to fix it.
+    pub hint: String,
+}
+
+impl Diagnostic {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("code".to_string(), Json::Str(self.code.to_string()));
+        m.insert("severity".to_string(), Json::Str(self.severity.name().to_string()));
+        m.insert("path".to_string(), Json::Str(self.path.clone()));
+        m.insert("message".to_string(), Json::Str(self.message.clone()));
+        m.insert("hint".to_string(), Json::Str(self.hint.clone()));
+        Json::Obj(m)
+    }
+
+    /// One-line human rendering: `severity LT0xx at path: message (hint)`.
+    pub fn render(&self) -> String {
+        let at = if self.path.is_empty() {
+            String::new()
+        } else {
+            format!(" at `{}`", self.path)
+        };
+        format!("{} {}{}: {} ({})", self.severity.name(), self.code, at, self.message, self.hint)
+    }
+}
+
+/// All findings for one document, in deterministic order (document order of
+/// the offending keys, errors from parsing first).
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// The findings; empty means the document is clean.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    /// Whether any finding is an [`Severity::Error`].
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// The `looptree lint` exit-code contract: 0 clean, 1 warnings only,
+    /// 2 any error.
+    pub fn exit_code(&self) -> i32 {
+        if self.has_errors() {
+            2
+        } else if self.diagnostics.is_empty() {
+            0
+        } else {
+            1
+        }
+    }
+
+    /// The `--json` rendering: `{"diagnostics": [...], "exit_code": n}`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "diagnostics".to_string(),
+            Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+        );
+        m.insert("exit_code".to_string(), Json::Num(self.exit_code() as f64));
+        Json::Obj(m)
+    }
+}
+
+fn diag(
+    code: &'static str,
+    severity: Severity,
+    path: impl Into<String>,
+    message: impl Into<String>,
+    hint: impl Into<String>,
+) -> Diagnostic {
+    Diagnostic { code, severity, path: path.into(), message: message.into(), hint: hint.into() }
+}
+
+/// Convert a threaded parse/validation error (`"json.path: message"`) into
+/// a diagnostic, recovering the path span when the prefix looks like one.
+/// Errors rooted at `mapping` are the mapping-vs-workload code `LT004`.
+fn parse_diag(err: String) -> Diagnostic {
+    let (path, message) = match err.split_once(": ") {
+        Some((p, m)) if !p.is_empty() && !p.contains(' ') => (p.to_string(), m.to_string()),
+        _ => (String::new(), err),
+    };
+    let code = if path == "mapping" || path.starts_with("mapping.") || path.starts_with("mapping[")
+    {
+        "LT004"
+    } else {
+        "LT002"
+    };
+    diag(code, Severity::Error, path, message, "fix the value at the reported path")
+}
+
+/// Lint one parsed JSON document. Never fails: unparseable sections become
+/// error diagnostics.
+pub fn lint_document(doc: &Json) -> LintReport {
+    let mut out = Vec::new();
+    if doc.get("network").is_some() {
+        lint_network(doc, &mut out);
+    } else if doc.get("search").is_some() {
+        lint_search(doc, &mut out);
+    } else if doc.get("workload").is_some() {
+        lint_analyze(doc, &mut out);
+    } else {
+        out.push(diag(
+            "LT001",
+            Severity::Error,
+            "",
+            "document has none of the `workload`, `search`, or `network` keys",
+            "add a `workload` section (analyze/search configs) or a `network` section",
+        ));
+    }
+    LintReport { diagnostics: out }
+}
+
+fn lint_analyze(doc: &Json, out: &mut Vec<Diagnostic>) {
+    let cfg = match AnalyzeConfig::from_json(doc) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            out.push(parse_diag(e));
+            return;
+        }
+    };
+    mapping_diags(&cfg.workload, &cfg.mapping, &cfg.arch, out);
+}
+
+fn lint_search(doc: &Json, out: &mut Vec<Diagnostic>) {
+    let cfg = match SearchConfig::from_json(doc) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            out.push(parse_diag(e));
+            return;
+        }
+    };
+    budget_diags(&cfg.search, "search", out);
+    mapspace_diags(&cfg.workload, &cfg.search, "search.mapspace", out);
+}
+
+fn lint_network(doc: &Json, out: &mut Vec<Diagnostic>) {
+    let cfg = match NetworkConfig::from_json(doc) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            out.push(parse_diag(e));
+            return;
+        }
+    };
+    budget_diags(&cfg.segment_search.search, "segment_search.search", out);
+}
+
+/// LT005/LT006/LT007/LT008: semantic warnings about a validated
+/// (workload, mapping, arch) triple.
+fn mapping_diags(
+    fs: &FusionSet,
+    mapping: &InterLayerMapping,
+    arch: &crate::arch::Arch,
+    out: &mut Vec<Diagnostic>,
+) {
+    let sink = fs.last();
+    let out_dims = sink.output.map.referenced_dims();
+    for (i, p) in mapping.partitions.iter().enumerate() {
+        let name = &sink.rank_names[p.dim];
+        let extent = sink.rank_sizes[p.dim];
+        if p.tile >= extent {
+            out.push(diag(
+                "LT007",
+                Severity::Warning,
+                format!("mapping.partitions[{i}]"),
+                format!(
+                    "partition on rank `{name}` is degenerate: tile {} >= extent {extent} \
+                     (a single child, so the level adds no reuse structure)",
+                    p.tile
+                ),
+                "use a tile smaller than the rank extent, or drop the partition",
+            ));
+        }
+        if !out_dims.contains(&p.dim) {
+            out.push(diag(
+                "LT008",
+                Severity::Warning,
+                format!("mapping.partitions[{i}]"),
+                format!(
+                    "partition on `{name}`, a reduction rank of the last layer: output tiles \
+                     are revisited and the steady-state fast path is disabled"
+                ),
+                "partition a rank referenced by the last layer's output access instead",
+            ));
+        }
+    }
+    let mut dead: Vec<usize> = mapping
+        .retention
+        .keys()
+        .filter(|t| fs.tensors[t.0].kind == TensorKind::OutputFmap)
+        .map(|t| t.0)
+        .collect();
+    dead.sort_unstable();
+    for x in dead {
+        out.push(diag(
+            "LT006",
+            Severity::Warning,
+            "mapping.retention",
+            format!(
+                "retention entry on output tensor `{}` is dead: output availability is \
+                 never invalidated",
+                fs.tensors[x].name
+            ),
+            "remove the entry (it has no effect on any metric)",
+        ));
+    }
+    if let Some(cap) = arch.glb_capacity() {
+        let lb = capacity_lower_bound(fs, mapping);
+        if lb.saturating_mul(arch.word_bytes) > cap {
+            out.push(diag(
+                "LT005",
+                Severity::Warning,
+                "mapping",
+                format!(
+                    "provably infeasible: the first tile alone needs {} bytes of the \
+                     {cap}-byte GLB (closed-form lower bound; no evaluation can fit)",
+                    lb.saturating_mul(arch.word_bytes)
+                ),
+                "shrink the partition tiles, or use an architecture with a larger GLB",
+            ));
+        }
+    }
+}
+
+/// LT009: a budget of zero for the selected algorithm (the search runs but
+/// cannot explore anything).
+fn budget_diags(search: &SearchSpec, base: &str, out: &mut Vec<Diagnostic>) {
+    let zero: Option<(&str, &str)> = match search.algorithm {
+        Algorithm::Exhaustive if search.mapspace.max_mappings == 0 => {
+            Some(("mapspace.max_mappings", "no mappings are enumerated"))
+        }
+        Algorithm::Random if search.samples == 0 => Some(("samples", "no samples are drawn")),
+        Algorithm::Annealing if search.iters == 0 => {
+            Some(("iters", "only the initial candidate is evaluated"))
+        }
+        Algorithm::Genetic if search.population == 0 => {
+            Some(("population", "the population is empty"))
+        }
+        Algorithm::Genetic if search.generations == 0 => {
+            Some(("generations", "no generation is ever scored"))
+        }
+        _ => None,
+    };
+    if let Some((field, effect)) = zero {
+        out.push(diag(
+            "LT009",
+            Severity::Warning,
+            format!("{base}.{field}"),
+            format!(
+                "zero budget for the `{}` algorithm: {effect}",
+                search.algorithm.name()
+            ),
+            "set a positive budget, or pick an algorithm whose budget is set",
+        ));
+    }
+}
+
+/// LT010: mapspace constraints that would panic or dead-end enumeration —
+/// unknown rank names in `schedules`, non-positive `tile_sizes`.
+fn mapspace_diags(fs: &FusionSet, search: &SearchSpec, base: &str, out: &mut Vec<Diagnostic>) {
+    let sink = fs.last();
+    for (i, sched) in search.mapspace.schedules.iter().enumerate() {
+        for (j, name) in sched.iter().enumerate() {
+            if sink.rank_index(name).is_none() {
+                out.push(diag(
+                    "LT010",
+                    Severity::Error,
+                    format!("{base}.schedules[{i}][{j}]"),
+                    format!(
+                        "unknown rank `{name}` on the last layer (valid: {})",
+                        sink.rank_names.join("|")
+                    ),
+                    "use one of the last layer's rank names",
+                ));
+            }
+        }
+    }
+    for (i, &t) in search.mapspace.tile_sizes.iter().enumerate() {
+        if t <= 0 {
+            out.push(diag(
+                "LT010",
+                Severity::Error,
+                format!("{base}.tile_sizes[{i}]"),
+                format!("tile size {t} is not positive"),
+                "tile sizes must be >= 1",
+            ));
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Static mapping analysis: closed-form affine diagnostics over the fusion
+//! DAG, derived by composing per-level access maps symbolically — in
+//! O(levels), with no iteration walk.
+//!
+//! Three consumers build on the same per-session facts
+//! ([`SessionStatics`]):
+//!
+//! * **prover** ([`prove_levels`]) — certifies the engine's steady-state
+//!   jump statically, replacing the empirical two-child certification where
+//!   the proof succeeds (the empirical walk remains the oracle in property
+//!   tests);
+//! * **pruner** ([`capacity_lower_bound`], [`ObjectiveFloors`]) — lets the
+//!   searches skip provably-infeasible mappings before evaluation without
+//!   changing any search result;
+//! * **linter** ([`lint_document`]) — the `looptree lint` subcommand:
+//!   structured diagnostics with stable `LT0xx` codes, severities,
+//!   JSON-path spans, and fix-it hints.
+
+mod bounds;
+mod lint;
+mod prove;
+mod statics;
+
+pub use bounds::{capacity_lower_bound, objective_floors, ObjectiveFloors};
+pub use lint::{lint_document, Diagnostic, LintReport, Severity};
+pub use prove::{prove_levels, LevelProof};
+pub use statics::SessionStatics;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,114 @@
+//! Static steady-state certification of an inter-layer mapping.
+//!
+//! The engine's fast path skips interior children of a schedule level once
+//! it can show that consecutive children's exit states are exact translates
+//! of each other. [`prove_levels`] derives that verdict — and the translate
+//! deltas — in closed form from [`SessionStatics`], with no iteration walk.
+//!
+//! A level `l` with partition `(d, tile)` and child count `c ≥ 4` is
+//! certified when **every** tensor of the fusion set falls in one of three
+//! classes (and the session is surjective with all partitioned ranks on the
+//! sink's output access):
+//!
+//! * **output** — the final output tensor is never invalidated and its
+//!   availability advances by one output tile per child along each
+//!   identity-mapped rank (the engine's `out_exempt` rule); its delta is
+//!   `tile` on the dim mapped from `d`, 0 elsewhere.
+//! * **class (a)** — the tensor's footprint is structurally independent of
+//!   *every* partitioned rank: its needs are the same set for every window
+//!   at every level, so it is fully materialized during the first leaf and
+//!   neither invalidation nor re-fetch ever changes it. Delta 0, any
+//!   retention level.
+//! * **class (b)** — the tensor's footprint moves along `d` with consistent
+//!   translate coefficients, and its retention level is exactly `l + 1`:
+//!   the retained prefix window *is* the level-`l` child window, so
+//!   invalidation fires exactly once per child entry and the exit state
+//!   after child `i` equals the needs of child window `i` — a rigid
+//!   translate of child `i − 1`'s by `coeff · tile`.
+//!
+//! Any tensor outside these classes makes the level unprovable (`None`) and
+//! the engine falls back to the empirical two-child certification, which
+//! remains the oracle in property tests.
+
+use super::SessionStatics;
+use crate::einsum::{FusionSet, TensorId, TensorKind};
+use crate::mapping::InterLayerMapping;
+
+/// A statically certified schedule level: per-tensor availability deltas of
+/// one steady child step (indexed `[tensor][tensor dim]`).
+#[derive(Debug, Clone)]
+pub struct LevelProof {
+    /// Exit-state translate per steady child, per tensor, per tensor dim.
+    pub deltas: Vec<Vec<i64>>,
+}
+
+/// Certify each schedule level of `mapping` statically. Entry `l` is
+/// `Some(proof)` when the engine may jump from child 1 to the last child of
+/// level `l` using `proof.deltas`; `None` sends that level to the empirical
+/// certification walk. `counts` must be `mapping.level_counts(fs)`.
+pub fn prove_levels(
+    fs: &FusionSet,
+    statics: &SessionStatics,
+    mapping: &InterLayerMapping,
+    counts: &[i64],
+) -> Vec<Option<LevelProof>> {
+    let k = mapping.partitions.len();
+    let mut proofs: Vec<Option<LevelProof>> = vec![None; k];
+    if !statics.surjective {
+        return proofs;
+    }
+    // The engine's steady-state jump advances output availability by one
+    // tile per child without re-checking it; that is only sound when every
+    // partitioned rank appears on the sink's output access.
+    if !mapping
+        .partitions
+        .iter()
+        .all(|p| statics.out_dims.contains(&p.dim))
+    {
+        return proofs;
+    }
+    let nt = fs.tensors.len();
+    let sink = fs.last();
+    'level: for l in 0..k {
+        // The engine only attempts a jump with at least 4 children (child 0,
+        // one certified steady child, the jump, and the explicit last child).
+        if counts[l] < 4 {
+            continue;
+        }
+        let part = &mapping.partitions[l];
+        let mut deltas: Vec<Vec<i64>> = Vec::with_capacity(nt);
+        for x in 0..nt {
+            let id = TensorId(x);
+            let tensor = fs.tensor(id);
+            let mut d = vec![0i64; tensor.ndim()];
+            if tensor.kind == TensorKind::OutputFmap {
+                for (o, expr) in sink.output.map.exprs.iter().enumerate() {
+                    if expr.as_identity() == Some(part.dim) {
+                        d[o] = part.tile;
+                    }
+                }
+            } else if mapping
+                .partitions
+                .iter()
+                .all(|p| statics.independent_of(id, p.dim))
+            {
+                // class (a): delta stays all-zero.
+            } else if mapping.retention_for(id) == l + 1
+                && statics.consistent_along(id, part.dim)
+            {
+                // class (b): rigid translate by coeff · tile per child.
+                for (o, v) in d.iter_mut().enumerate() {
+                    *v = statics
+                        .coeff_of(id, part.dim, o)
+                        .expect("checked consistent")
+                        * part.tile;
+                }
+            } else {
+                continue 'level;
+            }
+            deltas.push(d);
+        }
+        proofs[l] = Some(LevelProof { deltas });
+    }
+    proofs
+}

@@ -1,0 +1,162 @@
+//! Mapping-independent symbolic structure of a fusion set: how every
+//! tensor's data footprint moves when the last layer's iteration window
+//! slides along one of its ranks.
+//!
+//! The engine's steady-state fast path needs to know, per schedule level,
+//! whether two consecutive children of the inter-layer walk are exact
+//! translates of each other. The empirical certification observes this by
+//! evaluating two children and comparing exit states box for box. This
+//! module derives the same facts *statically*, by composing the per-layer
+//! affine access maps through the fusion DAG once per session:
+//!
+//! * **touch** — does tensor dim `o` structurally reference sink rank `d`
+//!   through any access chain? (Term-level, so coefficient cancellations
+//!   still count as touched.)
+//! * **coeff** — the net translate coefficient of tensor dim `o` per unit
+//!   step of sink rank `d`, when all consumer paths agree (`None` when two
+//!   paths disagree — the union of their needs does not translate rigidly).
+//!
+//! Both are exact under the separable affine maps of `poly::affine`: the
+//! image of a box translated by `δ·e_d` along dim `d` is the image box
+//! translated by `(Σ c·opshift)·δ` per output dim, with no change of shape,
+//! as long as no clipping occurs — which the session-level surjectivity
+//! check rules out for interior windows.
+
+use crate::einsum::{FusionSet, TensorId};
+
+/// Per-session static analysis of a fusion set (built once, mapping-free).
+#[derive(Debug, Clone)]
+pub struct SessionStatics {
+    /// Every producer's output image covers its tensor, so backward
+    /// preimages never clip and translate arguments are exact.
+    pub surjective: bool,
+    /// Sink ranks referenced by the last layer's output access; partitions
+    /// on any other rank revisit output tiles (reduction-rank partitioning).
+    pub out_dims: Vec<usize>,
+    /// `touch[x][d][o]`: tensor `x` dim `o` structurally references sink
+    /// rank `d` through some access chain.
+    touch: Vec<Vec<Vec<bool>>>,
+    /// `coeff[x][d][o]`: net translate coefficient of tensor `x` dim `o`
+    /// per unit step of sink rank `d`; `None` when consumer paths disagree.
+    coeff: Vec<Vec<Vec<Option<i64>>>>,
+}
+
+impl SessionStatics {
+    /// Compose the access maps of `fs` through its DAG, once per session.
+    pub fn build(fs: &FusionSet) -> SessionStatics {
+        let n = fs.num_layers();
+        let sink = fs.last();
+        let nd = sink.ndim();
+        let nt = fs.tensors.len();
+
+        let surjective = fs.einsums.iter().all(|e| {
+            e.output.map.image_box(&e.domain()) == fs.tensor(e.output.tensor).full_box()
+        });
+        let out_dims = sink.output.map.referenced_dims();
+
+        let mut touch: Vec<Vec<Vec<bool>>> = fs
+            .tensors
+            .iter()
+            .map(|t| vec![vec![false; t.ndim()]; nd])
+            .collect();
+        let mut coeff: Vec<Vec<Vec<Option<i64>>>> = fs
+            .tensors
+            .iter()
+            .map(|t| vec![vec![None; t.ndim()]; nd])
+            .collect();
+
+        // One scalar propagation per sink rank `d`, in reverse topological
+        // order: every consumer of a tensor is processed before its
+        // producer, so a producer's op movement is derived from the fully
+        // merged movement of its output tensor.
+        for d in 0..nd {
+            // Per-layer, per-local-dim movement of the op window.
+            let mut op_touch: Vec<Vec<bool>> =
+                fs.einsums.iter().map(|e| vec![false; e.ndim()]).collect();
+            let mut op_coeff: Vec<Vec<Option<i64>>> =
+                fs.einsums.iter().map(|e| vec![Some(0); e.ndim()]).collect();
+            op_touch[n - 1][d] = true;
+            op_coeff[n - 1][d] = Some(1);
+
+            // Per-tensor merged movement; `seen` guards first-consumer
+            // initialization vs cross-consumer consistency checks.
+            let mut t_touch: Vec<Vec<bool>> =
+                fs.tensors.iter().map(|t| vec![false; t.ndim()]).collect();
+            let mut t_coeff: Vec<Vec<Option<i64>>> =
+                fs.tensors.iter().map(|t| vec![Some(0); t.ndim()]).collect();
+            let mut seen = vec![false; nt];
+
+            for t in (0..n).rev() {
+                let e = &fs.einsums[t];
+                if t < n - 1 {
+                    // This layer's ops are preimages of what its consumers
+                    // (all already processed) need of its output: the op
+                    // window moves with the output data window along each
+                    // identity-mapped rank; reduction ranks never move.
+                    let x = e.output.tensor.0;
+                    debug_assert!(seen[x], "fusion set is not in topological order");
+                    for (o, expr) in e.output.map.exprs.iter().enumerate() {
+                        let dim = expr.as_identity().expect("validated output access");
+                        op_touch[t][dim] = t_touch[x][o];
+                        op_coeff[t][dim] = t_coeff[x][o];
+                    }
+                }
+                // Project this layer's op movement onto every tensor it
+                // accesses (inputs and output; the output projection is the
+                // identity round-trip of the merge above, so it can never
+                // introduce an inconsistency).
+                for acc in e.inputs.iter().chain(std::iter::once(&e.output)) {
+                    let x = acc.tensor.0;
+                    let first = !seen[x];
+                    for (o, expr) in acc.map.exprs.iter().enumerate() {
+                        let touched =
+                            expr.terms.iter().any(|&(dim, _)| op_touch[t][dim]);
+                        let c: Option<i64> = expr
+                            .terms
+                            .iter()
+                            .try_fold(0i64, |s, &(dim, cf)| {
+                                op_coeff[t][dim].map(|oc| s + cf * oc)
+                            });
+                        if first {
+                            t_touch[x][o] = touched;
+                            t_coeff[x][o] = c;
+                        } else {
+                            t_touch[x][o] |= touched;
+                            if t_coeff[x][o] != c {
+                                t_coeff[x][o] = None;
+                            }
+                        }
+                    }
+                    seen[x] = true;
+                }
+            }
+
+            for x in 0..nt {
+                touch[x][d].clone_from(&t_touch[x]);
+                coeff[x][d].clone_from(&t_coeff[x]);
+            }
+        }
+
+        SessionStatics { surjective, out_dims, touch, coeff }
+    }
+
+    /// Tensor `x`'s footprint is structurally independent of sink rank `d`:
+    /// no access chain from `x` to the sink references `d` in any term, so
+    /// its data needs are identical for every window position *and size*
+    /// along `d`.
+    pub fn independent_of(&self, x: TensorId, d: usize) -> bool {
+        self.touch[x.0][d].iter().all(|&t| !t)
+    }
+
+    /// The translate coefficient of tensor `x` dim `o` per unit step of sink
+    /// rank `d` (`None` when consumer paths disagree).
+    pub fn coeff_of(&self, x: TensorId, d: usize, o: usize) -> Option<i64> {
+        self.coeff[x.0][d][o]
+    }
+
+    /// Whether every dim of tensor `x` has a consistent translate
+    /// coefficient along sink rank `d`.
+    pub fn consistent_along(&self, x: TensorId, d: usize) -> bool {
+        self.coeff[x.0][d].iter().all(|c| c.is_some())
+    }
+}

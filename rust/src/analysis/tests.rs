@@ -1,0 +1,246 @@
+use super::*;
+use crate::arch::Arch;
+use crate::einsum::{workloads, TensorId, TensorKind};
+use crate::mapping::{InterLayerMapping, Parallelism, Partition};
+use crate::model::Evaluator;
+use crate::spec::AnalyzeConfig;
+use crate::util::json::Json;
+
+fn p2_mapping(fs: &crate::einsum::FusionSet, tile: i64) -> InterLayerMapping {
+    let p2 = fs.last().rank_index("P2").unwrap();
+    InterLayerMapping::tiled(vec![Partition { dim: p2, tile }], Parallelism::Sequential)
+}
+
+// ------------------------------------------------------------- statics --
+
+#[test]
+fn statics_conv_conv_structure() {
+    let fs = workloads::conv_conv(14, 8);
+    let st = SessionStatics::build(&fs);
+    assert!(st.surjective);
+    let sink = fs.last();
+    let p2 = sink.rank_index("P2").unwrap();
+    let c2 = sink.rank_index("C2").unwrap();
+    // Output dims of the sink are exactly [M2, P2, Q2].
+    assert!(st.out_dims.contains(&p2));
+    assert!(!st.out_dims.contains(&c2));
+
+    // Weights never reference spatial sink ranks: class (a) along P2.
+    let (input, w1, inter, w2) =
+        (TensorId(0), TensorId(1), TensorId(2), TensorId(3));
+    assert_eq!(fs.tensors[1].kind, TensorKind::Weight);
+    assert!(st.independent_of(w1, p2));
+    assert!(st.independent_of(w2, p2));
+    // But they do reference the reduction rank C2 somewhere.
+    assert!(!st.independent_of(w2, c2));
+
+    // The fmaps slide along P2 with unit coefficient on their row dim
+    // ([C,H,W] for the input, [M,P,Q] for the intermediate) and zero on
+    // the others — a rigid translate.
+    for x in [input, inter] {
+        assert!(!st.independent_of(x, p2));
+        assert!(st.consistent_along(x, p2));
+        assert_eq!(st.coeff_of(x, p2, 0), Some(0));
+        assert_eq!(st.coeff_of(x, p2, 1), Some(1));
+        assert_eq!(st.coeff_of(x, p2, 2), Some(0));
+    }
+}
+
+#[test]
+fn statics_hold_on_all_builtin_workloads() {
+    let sets = [
+        workloads::conv_conv(14, 8),
+        workloads::conv_conv_conv(12, 4),
+        workloads::pwise_dwise_pwise(14, 4),
+        workloads::fc_fc(64, 32),
+        workloads::self_attention(1, 2, 16, 8),
+    ];
+    for fs in &sets {
+        let st = SessionStatics::build(fs);
+        assert!(st.surjective, "{} should be surjective", fs.name);
+        assert!(!st.out_dims.is_empty(), "{}", fs.name);
+    }
+}
+
+// -------------------------------------------------------------- prover --
+
+#[test]
+fn prover_certifies_sliding_p2_tiling() {
+    let fs = workloads::conv_conv(28, 8);
+    let st = SessionStatics::build(&fs);
+    let m = p2_mapping(&fs, 4); // 7 children, default retention 1 = l+1
+    let counts = m.level_counts(&fs);
+    let proofs = prove_levels(&fs, &st, &m, &counts);
+    assert_eq!(proofs.len(), 1);
+    let proof = proofs[0].as_ref().expect("sliding P2 tiling is provable");
+    // Output, intermediate, and input all advance by one P-tile; weights
+    // are stationary.
+    assert_eq!(proof.deltas[0], vec![0, 4, 0]); // Fmap1 [C,H,W]
+    assert_eq!(proof.deltas[1], vec![0, 0, 0, 0]); // Filter1
+    assert_eq!(proof.deltas[2], vec![0, 4, 0]); // Fmap2 [M,P,Q]
+    assert_eq!(proof.deltas[3], vec![0, 0, 0, 0]); // Filter2
+    assert_eq!(proof.deltas[4], vec![0, 4, 0]); // Fmap3 [M,P,Q]
+}
+
+#[test]
+fn prover_refuses_unprovable_levels() {
+    let fs = workloads::conv_conv(28, 8);
+    let st = SessionStatics::build(&fs);
+    let sink = fs.last();
+    let p2 = sink.rank_index("P2").unwrap();
+    let c2 = sink.rank_index("C2").unwrap();
+
+    // Reduction-rank partition: the jump would advance output availability
+    // along a rank the output does not have. Whole mapping unprovable.
+    let m = InterLayerMapping::tiled(
+        vec![Partition { dim: c2, tile: 2 }],
+        Parallelism::Sequential,
+    );
+    let counts = m.level_counts(&fs);
+    assert!(prove_levels(&fs, &st, &m, &counts)[0].is_none());
+
+    // Too few children for a jump: provable structure, but nothing to skip.
+    let m = p2_mapping(&fs, 14); // 2 children
+    let counts = m.level_counts(&fs);
+    assert!(prove_levels(&fs, &st, &m, &counts)[0].is_none());
+
+    // Retention deeper than the partition level breaks class (b): the
+    // retained window is smaller than the child window, so exit states
+    // are not rigid translates (recompute raggedness).
+    let m = InterLayerMapping::tiled(
+        vec![
+            Partition { dim: p2, tile: 4 },
+            Partition {
+                dim: sink.rank_index("Q2").unwrap(),
+                tile: 4,
+            },
+        ],
+        Parallelism::Sequential,
+    )
+    .with_retention(TensorId(2), 2);
+    let counts = m.level_counts(&fs);
+    assert!(prove_levels(&fs, &st, &m, &counts)[0].is_none());
+}
+
+#[test]
+fn proven_fast_path_matches_reference_walk() {
+    let fs = workloads::conv_conv(28, 8);
+    let arch = Arch::generic(100_000_000);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
+    for tile in [2, 4, 7] {
+        let m = p2_mapping(&fs, tile);
+        let fast = ev.evaluate(&m).unwrap();
+        let slow = ev.evaluate_reference(&m).unwrap();
+        assert_eq!(format!("{fast:?}"), format!("{slow:?}"), "tile {tile}");
+    }
+}
+
+// -------------------------------------------------------------- bounds --
+
+#[test]
+fn capacity_lower_bound_is_sound_and_nontrivial() {
+    let fs = workloads::conv_conv(28, 8);
+    let arch = Arch::generic(100_000_000);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
+    let sink = fs.last();
+    let q2 = sink.rank_index("Q2").unwrap();
+    let mappings = [
+        InterLayerMapping::untiled(Parallelism::Sequential),
+        p2_mapping(&fs, 4),
+        p2_mapping(&fs, 4).with_retention(TensorId(2), 0),
+        InterLayerMapping::tiled(
+            vec![Partition { dim: q2, tile: 7 }],
+            Parallelism::Pipeline,
+        ),
+    ];
+    for m in &mappings {
+        let lb = ev.capacity_lower_bound(m).unwrap();
+        let metrics = ev.evaluate(m).unwrap();
+        assert!(lb > 0);
+        assert!(
+            lb <= metrics.occupancy_peak,
+            "bound {lb} exceeds peak {}",
+            metrics.occupancy_peak
+        );
+    }
+}
+
+#[test]
+fn objective_floors_are_sound() {
+    let fs = workloads::conv_conv(28, 8);
+    let arch = Arch::generic(100_000_000);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
+    let fl = ev.floors();
+    let seq = ev.evaluate(&p2_mapping(&fs, 4)).unwrap();
+    assert!(fl.latency_seq <= seq.latency_cycles);
+    assert!(fl.energy_pj <= seq.energy.total_pj());
+    assert!(fl.offchip_elems <= seq.offchip_total());
+    let sink = fs.last();
+    let q2 = sink.rank_index("Q2").unwrap();
+    let pipe = ev
+        .evaluate(&InterLayerMapping::tiled(
+            vec![Partition { dim: q2, tile: 4 }],
+            Parallelism::Pipeline,
+        ))
+        .unwrap();
+    assert!(fl.latency_pipe <= pipe.latency_cycles);
+}
+
+// -------------------------------------------------------------- linter --
+
+#[test]
+fn lint_rejects_unrecognized_document() {
+    let report = lint_document(&Json::parse("{}").unwrap());
+    assert_eq!(report.diagnostics.len(), 1);
+    assert_eq!(report.diagnostics[0].code, "LT001");
+    assert_eq!(report.exit_code(), 2);
+}
+
+#[test]
+fn lint_accepts_clean_analyze_config() {
+    let fs = workloads::conv_conv(14, 8);
+    let mapping = p2_mapping(&fs, 4);
+    let cfg = AnalyzeConfig {
+        workload: fs,
+        arch: Arch::generic(1024),
+        mapping,
+    };
+    let report = lint_document(&cfg.to_json());
+    assert!(report.diagnostics.is_empty(), "{:?}", report.diagnostics);
+    assert_eq!(report.exit_code(), 0);
+}
+
+#[test]
+fn lint_warns_on_semantic_smells() {
+    let fs = workloads::conv_conv(14, 8);
+    let sink = fs.last();
+    let p2 = sink.rank_index("P2").unwrap();
+    let c2 = sink.rank_index("C2").unwrap();
+    let out = TensorId(4);
+    let mapping = InterLayerMapping::tiled(
+        vec![
+            Partition { dim: p2, tile: 14 }, // LT007: tile >= extent
+            Partition { dim: c2, tile: 4 },  // LT008: reduction rank
+        ],
+        Parallelism::Sequential,
+    )
+    .with_retention(out, 1); // LT006: retention on the output fmap
+    let cfg = AnalyzeConfig {
+        workload: fs,
+        arch: Arch::generic(1), // LT005: first leaf alone overflows 1 KiB
+        mapping,
+    };
+    let report = lint_document(&cfg.to_json());
+    let codes: Vec<&str> = report.diagnostics.iter().map(|d| d.code).collect();
+    assert_eq!(codes, vec!["LT007", "LT008", "LT006", "LT005"]);
+    assert!(!report.has_errors());
+    assert_eq!(report.exit_code(), 1);
+}
+
+#[test]
+fn lint_reports_parse_errors_with_paths() {
+    let doc = Json::parse(r#"{"workload": "conv_conv:bogus"}"#).unwrap();
+    let report = lint_document(&doc);
+    assert_eq!(report.exit_code(), 2);
+    assert_eq!(report.diagnostics[0].code, "LT002");
+}

@@ -8,6 +8,7 @@ use super::energy;
 /// scratchpads / register files) feed the intra-layer analysis.
 #[derive(Debug, Clone)]
 pub struct BufferLevel {
+    /// Display name (e.g. `DRAM`, `GLB`).
     pub name: String,
     /// `None` = unbounded (off-chip).
     pub capacity_bytes: Option<i64>,
@@ -16,6 +17,7 @@ pub struct BufferLevel {
     pub bandwidth_words_per_cycle: f64,
     /// Energy per word read / written (pJ).
     pub read_energy_pj: f64,
+    /// Energy per word written (pJ).
     pub write_energy_pj: f64,
 }
 
@@ -72,7 +74,9 @@ pub struct ComputeSpec {
 /// mesh of PE groups fed from the global buffer.
 #[derive(Debug, Clone)]
 pub struct NocSpec {
+    /// Mesh rows.
     pub rows: i64,
+    /// Mesh columns.
     pub cols: i64,
     /// Energy per word per hop (pJ).
     pub hop_energy_pj: f64,
@@ -101,6 +105,7 @@ impl NocSpec {
         rows_spanned * row_width + rows_spanned
     }
 
+    /// Total PE count (rows x cols).
     pub fn num_pes(&self) -> i64 {
         self.rows * self.cols
     }
@@ -110,10 +115,15 @@ impl NocSpec {
 /// index 0, GLB at 1, deeper levels after), compute, NoC, word size.
 #[derive(Debug, Clone)]
 pub struct Arch {
+    /// Display name of the architecture.
     pub name: String,
+    /// Buffer levels, outermost first (DRAM at 0, GLB at 1).
     pub levels: Vec<BufferLevel>,
+    /// PE array description.
     pub compute: ComputeSpec,
+    /// On-chip network geometry.
     pub noc: NocSpec,
+    /// Bytes per data word.
     pub word_bytes: i64,
 }
 
@@ -121,10 +131,12 @@ impl Arch {
     /// Index of the on-chip global buffer level.
     pub const GLB: usize = 1;
 
+    /// The off-chip backing level (index 0).
     pub fn dram(&self) -> &BufferLevel {
         &self.levels[0]
     }
 
+    /// The on-chip global buffer level (index [`Arch::GLB`]).
     pub fn glb(&self) -> &BufferLevel {
         &self.levels[Self::GLB]
     }
@@ -134,6 +146,7 @@ impl Arch {
         self.glb().capacity_bytes
     }
 
+    /// Check structural invariants of the architecture description.
     pub fn validate(&self) -> Result<(), String> {
         if self.levels.len() < 2 {
             return Err("need at least DRAM + one on-chip level".into());

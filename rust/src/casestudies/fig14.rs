@@ -16,8 +16,11 @@ use crate::util::table::Table;
 /// transfers.
 #[derive(Debug, Clone)]
 pub struct Bar {
+    /// Fusion-set label.
     pub fusion_set: String,
+    /// Workload shape label.
     pub shape: String,
+    /// Schedule label.
     pub schedule: String,
     /// Minimum on-chip capacity (elements) achieving alg-min transfers with
     /// zero recomputation; `None` if the schedule cannot achieve it.

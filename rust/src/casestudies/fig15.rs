@@ -17,15 +17,22 @@ use crate::util::table::Table;
 /// One Pareto point: normalized recompute vs capacity, with breakdown.
 #[derive(Debug, Clone)]
 pub struct Point {
+    /// Recompute overhead fraction.
     pub recompute_frac: f64,
+    /// On-chip capacity (elements).
     pub capacity: i64,
+    /// Per-tensor occupancy breakdown.
     pub breakdown: Vec<(String, i64)>,
 }
 
 #[derive(Debug, Clone)]
+/// One schedule's Pareto curve.
 pub struct Curve {
+    /// Workload shape label.
     pub shape: String,
+    /// Schedule label.
     pub schedule: String,
+    /// The curve's Pareto points.
     pub points: Vec<Point>,
 }
 
@@ -125,6 +132,7 @@ pub fn run(fast: bool) -> Vec<Curve> {
     out
 }
 
+/// Render the curves as a text table.
 pub fn render(curves: &[Curve]) -> String {
     let mut t = Table::new(&["shape", "schedule", "recompute", "capacity", "dominant tensor"]);
     for c in curves {

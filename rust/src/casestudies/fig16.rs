@@ -13,15 +13,22 @@ use crate::model::Evaluator;
 use crate::util::table::Table;
 
 #[derive(Debug, Clone)]
+/// One (capacity, off-chip) point with a per-tensor breakdown.
 pub struct Point {
+    /// On-chip capacity (elements).
     pub capacity: i64,
+    /// Off-chip transfers (elements).
     pub offchip: i64,
+    /// Per-tensor occupancy breakdown.
     pub breakdown: Vec<(String, i64)>,
 }
 
 #[derive(Debug, Clone)]
+/// Fronts for per-tensor vs uniform retention.
 pub struct Result14 {
+    /// Front with per-tensor retention choices.
     pub per_tensor: Vec<Point>,
+    /// Front with a single uniform retention level.
     pub uniform: Vec<Point>,
 }
 
@@ -113,6 +120,7 @@ fn breakdown(fs: &FusionSet, occ: &[i64]) -> Vec<(String, i64)> {
         .collect()
 }
 
+/// Compute the figure's data (`fast` shrinks the workload for CI).
 pub fn run(fast: bool) -> Result14 {
     let (r, c) = if fast { (28, 32) } else { (56, 64) };
     let fs = workloads::conv_conv(r, c);
@@ -123,6 +131,7 @@ pub fn run(fast: bool) -> Result14 {
     }
 }
 
+/// Render the result as a text table.
 pub fn render(res: &Result14) -> String {
     let mut t = Table::new(&["mapspace", "capacity", "offchip", "Filter1+Filter2 share"]);
     for (tag, pts) in [("per-tensor", &res.per_tensor), ("uniform", &res.uniform)] {

@@ -20,6 +20,7 @@ pub struct Curve {
     pub points: Vec<(f64, i64)>,
 }
 
+/// Compute the figure's curves (`fast` shrinks the workload for CI).
 pub fn run(fast: bool) -> Vec<Curve> {
     let (r, c) = if fast { (24, 8) } else { (56, 32) };
     let fs = workloads::conv_conv_conv(r, c);
@@ -70,6 +71,7 @@ pub fn run(fast: bool) -> Vec<Curve> {
     curves
 }
 
+/// Render the curves as a text table.
 pub fn render(curves: &[Curve]) -> String {
     let mut t = Table::new(&["Fmap2/Fmap3 choice", "recompute frac", "capacity"]);
     for c in curves {

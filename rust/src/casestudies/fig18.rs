@@ -14,6 +14,7 @@ use crate::model::Evaluator;
 use crate::util::table::Table;
 
 #[derive(Debug, Clone)]
+/// The figure's two (capacity, off-chip) fronts.
 pub struct Fronts {
     /// (capacity, offchip) Pareto points for tiled fusion.
     pub fused: Vec<(i64, i64)>,
@@ -141,6 +142,7 @@ fn single_layer_front(ev: &Evaluator) -> Vec<(i64, i64)> {
     pareto_front(pts).into_iter().map(|p| p.payload).collect()
 }
 
+/// Compute the figure's data (`fast` shrinks the workload for CI).
 pub fn run(fast: bool) -> Fronts {
     let (rows, channels) = if fast { (28, 32) } else { (56, 64) };
     let fs = workloads::conv_conv(rows, channels);
@@ -150,6 +152,7 @@ pub fn run(fast: bool) -> Fronts {
     }
 }
 
+/// Render the fronts as a text table.
 pub fn render(f: &Fronts) -> String {
     let mut t = Table::new(&["dataflow", "capacity", "offchip transfers"]);
     for &(c, tr) in &f.fused {

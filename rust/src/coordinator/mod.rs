@@ -33,6 +33,7 @@ impl Coordinator {
         Coordinator { workers }
     }
 
+    /// Number of worker threads in the pool.
     pub fn workers(&self) -> usize {
         self.workers
     }

@@ -24,13 +24,16 @@ pub enum TensorKind {
 /// A tensor in a fusion set.
 #[derive(Debug, Clone)]
 pub struct TensorInfo {
+    /// Display name of the tensor.
     pub name: String,
     /// Extent of each coordinate dimension.
     pub shape: Vec<i64>,
+    /// The tensor's role in the fusion set.
     pub kind: TensorKind,
 }
 
 impl TensorInfo {
+    /// Number of coordinate dimensions.
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }
@@ -45,6 +48,7 @@ impl TensorInfo {
         IBox::new(self.shape.iter().map(|&s| Interval::upto(s)).collect())
     }
 
+    /// The whole tensor as a single-box region.
     pub fn full_region(&self) -> Region {
         Region::from_box(self.full_box())
     }
@@ -54,7 +58,9 @@ impl TensorInfo {
 /// Einsum's (local) iteration dims to the tensor's coordinate dims.
 #[derive(Debug, Clone)]
 pub struct TensorAccess {
+    /// Which tensor is accessed.
     pub tensor: TensorId,
+    /// Iteration dims to tensor coordinates.
     pub map: AffineMap,
 }
 
@@ -75,17 +81,22 @@ pub enum OpKind {
 /// access per input tensor.
 #[derive(Debug, Clone)]
 pub struct EinsumSpec {
+    /// Display name of the Einsum (layer).
     pub name: String,
     /// Local iteration dim names, e.g. `["M", "P", "Q", "C", "R", "S"]`.
     pub rank_names: Vec<String>,
     /// Extent of each local iteration dim.
     pub rank_sizes: Vec<i64>,
+    /// The produced tensor's access.
     pub output: TensorAccess,
+    /// One access per consumed tensor.
     pub inputs: Vec<TensorAccess>,
+    /// The operator kind.
     pub op_kind: OpKind,
 }
 
 impl EinsumSpec {
+    /// Number of iteration dims.
     pub fn ndim(&self) -> usize {
         self.rank_sizes.len()
     }
@@ -144,20 +155,26 @@ impl EinsumSpec {
 ///   preimages of output regions are exact boxes.
 #[derive(Debug, Clone)]
 pub struct FusionSet {
+    /// Display name of the fusion set.
     pub name: String,
+    /// All tensors, indexed by [`TensorId`].
     pub tensors: Vec<TensorInfo>,
+    /// Layers in producer-before-consumer order.
     pub einsums: Vec<EinsumSpec>,
 }
 
 impl FusionSet {
+    /// The tensor with id `id`.
     pub fn tensor(&self, id: TensorId) -> &TensorInfo {
         &self.tensors[id.0]
     }
 
+    /// Number of Einsum layers.
     pub fn num_layers(&self) -> usize {
         self.einsums.len()
     }
 
+    /// The final (sink) layer.
     pub fn last(&self) -> &EinsumSpec {
         self.einsums.last().expect("empty fusion set")
     }

@@ -36,6 +36,9 @@
 //! ## Modules
 //!
 //! * [`einsum`] — extended-Einsum workload IR: layers, tensors, fusion sets.
+//! * [`analysis`] — static mapping analysis: closed-form affine diagnostics
+//!   (symbolic footprint movement, provable steady-state certification,
+//!   capacity/objective lower bounds) and the `looptree lint` diagnostics.
 //! * [`poly`] — exact rectilinear set algebra (the ISL-replacement substrate).
 //! * [`arch`] — accelerator architecture specs + accelergy-lite energy model.
 //! * [`mapping`] — the paper's mapping taxonomy (Table IV): partitioned
@@ -63,6 +66,10 @@
 //!   PipeLayer, and FLAT (paper Tables V–VIII, Fig 13).
 //! * [`casestudies`] — drivers regenerating paper Figs 14–18.
 
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+pub mod analysis;
 pub mod arch;
 pub mod einsum;
 pub mod mapping;

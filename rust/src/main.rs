@@ -7,6 +7,7 @@
 //!   search     --config <file.json> | --workload <spec> [--algorithm ..] [--objective ..] [--seed n]
 //!   network    --config <file.json> | --network <name> [--max-seg n] [--cuts 2,4,..]
 //!              [--pareto [--objectives latency,energy,..] [--max-front n]]
+//!   lint       --config <file.json> [--json]  static diagnostics (LT0xx codes); exit 0/1/2
 //!   experiments [--full]                    regenerate everything (EXPERIMENTS.md data)
 //!   speed                                   model-vs-simulator throughput
 //!
@@ -17,6 +18,7 @@
 //! Workload specs: conv_conv:ROWSxCH | pdp:ROWSxCH | fc_fc:TOKENSxEMB |
 //! conv3:ROWSxCH | attention:B,H,T,E
 
+use looptree::analysis::lint_document;
 use looptree::arch::Arch;
 use looptree::casestudies as cs;
 use looptree::coordinator::Coordinator;
@@ -54,6 +56,7 @@ fn run(args: &[String]) -> i32 {
         Some("analyze") => cmd_analyze(args),
         Some("search") => cmd_search(args),
         Some("network") => cmd_network(args),
+        Some("lint") => cmd_lint(args),
         Some("experiments") => cmd_experiments(args),
         Some("speed") => cmd_speed(args),
         _ => {
@@ -64,6 +67,7 @@ fn run(args: &[String]) -> i32 {
                  looptree analyze --config cfg.json [--json] | --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim]\n  \
                  looptree search --config cfg.json [--json] | --workload conv_conv:28x64 [--algorithm exhaustive|random|annealing|genetic] [--objective latency|energy|edp|capacity|offchip|feasible-edp] [--seed n]\n  \
                  looptree network --config cfg.json [--json] | --network resnet18|resnet18_chain|mobilenetv2|vgg16|bert[:B,H,T,E] [--max-seg n] [--cuts 2,4,..] [--algorithm ..] [--objective ..] [--seed n] [--glb-kib n] [--pareto [--objectives latency,energy,capacity,offchip] [--max-front n]]\n  \
+                 looptree lint --config cfg.json [--json]\n  \
                  looptree experiments [--full]\n  \
                  looptree speed"
             );
@@ -339,6 +343,7 @@ fn cmd_search(args: &[String]) -> i32 {
                                 "evaluated".to_string(),
                                 Json::Num(r.evaluated.len() as f64),
                             ),
+                            ("pruned".to_string(), Json::Num(r.pruned as f64)),
                         ]
                         .into_iter()
                         .collect(),
@@ -349,8 +354,9 @@ fn cmd_search(args: &[String]) -> i32 {
                 return 0;
             }
             println!(
-                "evaluated {} mappings; best ({}) = {:.4e}",
+                "evaluated {} mappings ({} pruned); best ({}) = {:.4e}",
                 r.evaluated.len(),
+                r.pruned,
                 cfg.search.objective.name(),
                 r.best.score
             );
@@ -615,6 +621,39 @@ fn cmd_network(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// `looptree lint`: static diagnostics over a config document. Exit codes:
+/// 0 clean, 1 warnings only, 2 any error (including an unreadable or
+/// unparseable file).
+fn cmd_lint(args: &[String]) -> i32 {
+    let Some(path) = opt(args, "--config") else {
+        eprintln!("usage: looptree lint --config cfg.json [--json]");
+        return 2;
+    };
+    let doc = match read_config(path) {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let report = lint_document(&doc);
+    if flag(args, "--json") {
+        println!("{}", report.to_json().pretty());
+        return report.exit_code();
+    }
+    for d in &report.diagnostics {
+        println!("{path}: {}", d.render());
+    }
+    match report.exit_code() {
+        0 => println!("{path}: clean"),
+        code => println!(
+            "{path}: {} diagnostic(s), exit {code}",
+            report.diagnostics.len()
+        ),
+    }
+    report.exit_code()
 }
 
 fn cmd_experiments(args: &[String]) -> i32 {

@@ -35,6 +35,7 @@ pub struct InterLayerMapping {
     pub retention: HashMap<TensorId, RetLevel>,
     /// Retention level for tensors without an explicit choice.
     pub default_retention: RetLevel,
+    /// How partitioned children execute (sequential or pipelined).
     pub parallelism: Parallelism,
 }
 
@@ -67,10 +68,12 @@ impl InterLayerMapping {
         self.partitions.len()
     }
 
+    /// The retention level for tensor `t` (explicit or default).
     pub fn retention_for(&self, t: TensorId) -> RetLevel {
         *self.retention.get(&t).unwrap_or(&self.default_retention)
     }
 
+    /// Builder: set tensor `t`'s retention level.
     pub fn with_retention(mut self, t: TensorId, level: RetLevel) -> Self {
         self.retention.insert(t, level);
         self

@@ -59,6 +59,7 @@ impl IntraLayerMapping {
             .unwrap_or(1)
     }
 
+    /// Check the intra-layer mapping against an Einsum and a PE budget.
     pub fn validate(&self, einsum: &EinsumSpec, pes: i64) -> Result<(), String> {
         let mut seen = std::collections::HashSet::new();
         for &(d, f) in &self.spatial {

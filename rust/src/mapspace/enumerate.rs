@@ -119,14 +119,17 @@ impl MapSpace {
         MapSpace { mappings }
     }
 
+    /// The enumerated mappings, in deterministic order.
     pub fn mappings(&self) -> &[InterLayerMapping] {
         &self.mappings
     }
 
+    /// Number of enumerated mappings.
     pub fn len(&self) -> usize {
         self.mappings.len()
     }
 
+    /// Whether enumeration produced nothing.
     pub fn is_empty(&self) -> bool {
         self.mappings.is_empty()
     }

@@ -12,8 +12,11 @@ use std::cmp::Ordering;
 /// A point on a 2-objective minimization trade-off with a payload.
 #[derive(Debug, Clone)]
 pub struct ParetoPoint<T> {
+    /// First objective (minimized).
     pub x: f64,
+    /// Second objective (minimized).
     pub y: f64,
+    /// Carried value (e.g. the mapping).
     pub payload: T,
 }
 
@@ -38,6 +41,7 @@ pub fn pareto_front<T: Clone>(mut points: Vec<ParetoPoint<T>>) -> Vec<ParetoPoin
 pub struct ParetoPointK<T> {
     /// One value per objective; lower is better on every axis.
     pub costs: Vec<f64>,
+    /// Carried value (e.g. the mapping).
     pub payload: T,
 }
 

@@ -125,6 +125,10 @@ pub(crate) struct BackwardScratch {
     tmpb: IBox,
 }
 
+/// One backward pass from the last layer's operation box `last_ops`:
+/// computes the fresh data every tensor needs beyond what `avail` already
+/// holds, unions it into `avail`, and returns per-layer operation and
+/// fresh-element counts.
 pub fn iter_backward(fs: &FusionSet, last_ops: &IBox, avail: &mut [Region]) -> IterResult {
     let domains: Vec<IBox> = fs.einsums.iter().map(|e| e.domain()).collect();
     let mut sc = BackwardScratch::default();

@@ -49,6 +49,7 @@ use super::intra::operand_slot_counts;
 use super::latency::{memory_cycles, PipelineLatency, TransferMatrix};
 use super::metrics::{EnergyBreakdown, Metrics};
 use super::walk::TileWindows;
+use crate::analysis::{objective_floors, prove_levels, LevelProof, ObjectiveFloors, SessionStatics};
 use crate::arch::{energy, Arch};
 use crate::einsum::{FusionSet, TensorKind};
 use crate::mapping::{InterLayerMapping, IntraLayerMapping, Parallelism};
@@ -161,6 +162,11 @@ pub(crate) struct SessionCache {
     /// Dims of the last layer referenced by its output access; partitions on
     /// any other dim revisit output tiles (reduction-rank partitioning).
     out_dims: Vec<usize>,
+    /// Symbolic footprint-movement structure (powers the static steady-state
+    /// prover, which replaces the empirical certification where it succeeds).
+    pub(crate) statics: SessionStatics,
+    /// Closed-form metric floors of this session (powers search pruning).
+    pub(crate) floors: ObjectiveFloors,
 }
 
 impl SessionCache {
@@ -205,10 +211,11 @@ impl SessionCache {
             .collect();
         let domains: Vec<IBox> = fs.einsums.iter().map(|e| e.domain()).collect();
 
-        let surjective = fs.einsums.iter().zip(&domains).all(|(e, dom)| {
-            e.output.map.image_box(dom) == fs.tensor(e.output.tensor).full_box()
-        });
-        let out_dims = fs.last().output.map.referenced_dims();
+        let statics = SessionStatics::build(fs);
+        let surjective = statics.surjective;
+        let out_dims = statics.out_dims.clone();
+        let fanout = fanouts(intra, arch);
+        let floors = objective_floors(fs, &fanout, &op_energy);
 
         SessionCache {
             layer_inputs,
@@ -216,10 +223,12 @@ impl SessionCache {
             num_slots,
             rf_gt1,
             op_energy,
-            fanout: fanouts(intra, arch),
+            fanout,
             domains,
             surjective,
             out_dims,
+            statics,
+            floors,
         }
     }
 }
@@ -404,6 +413,9 @@ struct Ctx<'a> {
     /// jumps: true iff no partition is on a reduction rank, so output tiles
     /// never revisit and "already written" never feeds back into a metric.
     out_exempt: bool,
+    /// Per-level static steady-state proofs (`analysis::prove_levels`). A
+    /// `Some` level jumps without the empirical two-child certification.
+    proof: Vec<Option<LevelProof>>,
 }
 
 /// The schedule walk itself. Assumes `fs` and `arch` are already validated
@@ -433,6 +445,12 @@ pub(crate) fn evaluate_prevalidated(
         .all(|p| cache.out_dims.contains(&p.dim));
 
     scratch.prepare(fs, cache, k, pipeline);
+    let fast = cache.surjective && !force_reference;
+    let proof = if fast {
+        prove_levels(fs, &cache.statics, mapping, &counts)
+    } else {
+        vec![None; k]
+    };
     let cx = Ctx {
         fs,
         mapping,
@@ -444,8 +462,9 @@ pub(crate) fn evaluate_prevalidated(
         n: fs.num_layers(),
         nt,
         pipeline,
-        fast: cache.surjective && !force_reference,
+        fast,
         out_exempt,
+        proof,
     };
     eval_level(&cx, scratch, 0, None);
     Ok(finalize(&cx, arch, scratch))
@@ -467,6 +486,47 @@ fn eval_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>
             sc.idx[l] = i;
             eval_level(cx, sc, l + 1, Some(l));
         }
+        return;
+    }
+
+    if let Some(proof) = cx.proof[l].as_ref() {
+        // Statically certified level: the prover showed that the exit states
+        // of consecutive interior children are rigid translates with the
+        // proven per-tensor deltas, so child 1 is evaluated as the steady
+        // representative and the walk jumps straight to the ragged last
+        // child — no exit snapshot, no box-for-box comparison. The jump
+        // arithmetic is the same as the empirical path's, so results stay
+        // bit-identical to the reference walk.
+        {
+            let (acc, snaps) = (&sc.acc, &mut sc.acc_snap);
+            acc.save_into(&mut snaps[l]);
+        }
+        if cx.pipeline {
+            sc.rec_stack.push(TransferMatrix::identity(cx.n));
+        }
+        sc.idx[l] = 1;
+        eval_level(cx, sc, l + 1, Some(l));
+        let rec = if cx.pipeline { sc.rec_stack.pop() } else { None };
+        let n_skip = c - 3;
+        {
+            let (acc, snaps) = (&mut sc.acc, &sc.acc_snap);
+            acc.add_scaled(&snaps[l], n_skip);
+        }
+        if let Some(rec) = rec {
+            let op = rec.power(n_skip);
+            sc.pipe.apply_transfer(&op);
+            for outer in sc.rec_stack.iter_mut() {
+                outer.compose_with(&op);
+            }
+        }
+        for (x, d) in proof.deltas.iter().enumerate() {
+            let sd = &mut sc.delta[x];
+            sd.clear();
+            sd.extend(d.iter().map(|&v| v * n_skip));
+            sc.avail[x].shift_assign(&sc.delta[x]);
+        }
+        sc.idx[l] = c - 1;
+        eval_level(cx, sc, l + 1, Some(l));
         return;
     }
 

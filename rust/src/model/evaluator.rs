@@ -12,6 +12,7 @@
 
 use super::engine::{evaluate_prevalidated, resolve_intra, EvalScratch, SessionCache};
 use super::metrics::Metrics;
+use crate::analysis::{self, ObjectiveFloors};
 use crate::arch::Arch;
 use crate::coordinator::Coordinator;
 use crate::einsum::FusionSet;
@@ -117,6 +118,20 @@ impl Evaluator {
     /// The resolved per-layer intra-layer mappings.
     pub fn intra(&self) -> &[IntraLayerMapping] {
         &self.intra
+    }
+
+    /// Closed-form lower bound on [`Metrics::occupancy_peak`] for `mapping`,
+    /// in elements — no walk (see [`analysis::capacity_lower_bound`]).
+    /// Errors on mappings this session would reject at evaluation.
+    pub fn capacity_lower_bound(&self, mapping: &InterLayerMapping) -> Result<i64, String> {
+        mapping.validate(&self.fs)?;
+        Ok(analysis::capacity_lower_bound(&self.fs, mapping))
+    }
+
+    /// The session's mapping-independent metric floors (see
+    /// [`analysis::objective_floors`]); built once at session construction.
+    pub fn floors(&self) -> &ObjectiveFloors {
+        &self.cache.floors
     }
 
     /// Evaluate one inter-layer mapping. Identical results to the free

@@ -28,10 +28,12 @@ pub struct IntraCounts {
     pub noc_hop_words: f64,
     /// Register-file reads/writes at the PEs.
     pub rf_reads: i64,
+    /// Register-file writes at the PEs.
     pub rf_writes: i64,
 }
 
 impl IntraCounts {
+    /// Accumulate another tile's counts into this one.
     pub fn add(&mut self, o: &IntraCounts) {
         self.glb_reads += o.glb_reads;
         self.glb_writes += o.glb_writes;

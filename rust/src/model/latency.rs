@@ -21,6 +21,7 @@ pub struct PipelineLatency {
 }
 
 impl PipelineLatency {
+    /// A pipeline latency tracker over `stages` stages with nothing pushed yet.
     pub fn new(stages: usize) -> Self {
         PipelineLatency { finish: vec![0; stages] }
     }

@@ -5,14 +5,20 @@ use crate::util::table::fmt_count;
 /// Energy breakdown by component (pJ).
 #[derive(Debug, Clone, Default)]
 pub struct EnergyBreakdown {
+    /// Off-chip (DRAM) access energy.
     pub dram_pj: f64,
+    /// Global-buffer access energy.
     pub glb_pj: f64,
+    /// PE register-file access energy.
     pub rf_pj: f64,
+    /// MAC/compute energy.
     pub compute_pj: f64,
+    /// Network-on-chip transfer energy.
     pub noc_pj: f64,
 }
 
 impl EnergyBreakdown {
+    /// Sum over all components (pJ).
     pub fn total_pj(&self) -> f64 {
         self.dram_pj + self.glb_pj + self.rf_pj + self.compute_pj + self.noc_pj
     }
@@ -22,21 +28,30 @@ impl EnergyBreakdown {
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     // -- latency (cycles) --
+    /// Modeled end-to-end latency.
     pub latency_cycles: i64,
+    /// Cycles the PE array spends computing.
     pub compute_cycles: i64,
+    /// Cycles implied by off-chip bandwidth demand.
     pub memory_cycles: i64,
     /// Sequential-equivalent compute latency (pipeline hides the difference;
     /// paper Fig 12's "sequential minus hidden" analysis).
     pub sequential_compute_cycles: i64,
 
     // -- energy --
+    /// Energy by component (pJ).
     pub energy: EnergyBreakdown,
 
     // -- transfers (elements / words) --
+    /// Elements read from off-chip.
     pub offchip_reads: i64,
+    /// Elements written off-chip.
     pub offchip_writes: i64,
+    /// Words read from the global buffer.
     pub glb_reads: i64,
+    /// Words written to the global buffer.
     pub glb_writes: i64,
+    /// NoC traffic in hop-words.
     pub noc_hop_words: f64,
     /// Off-chip traffic per tensor (reads for inputs/weights, writes for the
     /// output fmap; zero for intermediates unless spilled).
@@ -73,6 +88,7 @@ impl Metrics {
         self.occupancy_peak * word_bytes
     }
 
+    /// Total energy in microjoules.
     pub fn energy_uj(&self) -> f64 {
         self.energy.total_pj() / 1e6
     }

@@ -39,6 +39,7 @@ mod latency;
 mod metrics;
 mod walk;
 
+pub use backward::{window_needs, WindowNeeds};
 pub use engine::{evaluate, EvalOptions};
 pub use evaluator::Evaluator;
 pub use intra::{tile_counts_from, IntraCounts};

@@ -24,6 +24,7 @@ pub struct TileWindows {
 }
 
 impl TileWindows {
+    /// Tile windows for `mapping`'s partition stack over the last layer of `fs`.
     pub fn new(fs: &FusionSet, mapping: &InterLayerMapping) -> Self {
         let full = fs.last().domain();
         let parts: Vec<(usize, i64)> =
@@ -32,14 +33,17 @@ impl TileWindows {
         TileWindows { full, parts, counts }
     }
 
+    /// Number of partitioned schedule levels.
     pub fn num_levels(&self) -> usize {
         self.parts.len()
     }
 
+    /// Child count per level (a ragged last child counts as one).
     pub fn counts(&self) -> &[i64] {
         &self.counts
     }
 
+    /// Product of all level counts: the total number of leaf windows.
     pub fn total_iterations(&self) -> i64 {
         self.counts.iter().product()
     }
@@ -87,6 +91,7 @@ pub struct IterWalk {
 }
 
 impl IterWalk {
+    /// An odometer over `counts`, most-significant digit first.
     pub fn new(counts: &[i64]) -> Self {
         IterWalk {
             counts: counts.to_vec(),

@@ -277,8 +277,11 @@ impl LayerOp {
 /// and explicit input edges.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerSpec {
+    /// Display name of the layer.
     pub name: String,
+    /// Fmap shape of the primary input in the padded network.
     pub input_shape: Vec<i64>,
+    /// The layer operator.
     pub op: LayerOp,
     /// Producing node indices, all smaller than this node's own index
     /// (networks are stored in topological order). Empty = this node
@@ -291,7 +294,9 @@ pub struct LayerSpec {
 /// earlier node.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Network {
+    /// Display name of the network.
     pub name: String,
+    /// Nodes in topological order.
     pub layers: Vec<LayerSpec>,
 }
 
@@ -321,6 +326,7 @@ pub(crate) struct SegmentPlan {
 }
 
 impl Network {
+    /// Number of layer nodes.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }

@@ -207,7 +207,13 @@ fn search_distinct_fronts(
     let objectives = spec.objectives.clone();
     let search = spec.search.clone();
     let cap = spec.max_front_per_state;
-    search_distinct_map(net, arch, spec, candidates, pool, move |r| {
+    // The front is extracted from the *full* evaluated set, so capacity
+    // pruning must stay off here: a skipped (provably infeasible) candidate
+    // cannot win a scalar search, but its penalized cost vector could still
+    // sit on a multi-objective front.
+    let mut spec = spec.clone();
+    spec.search.prune = false;
+    search_distinct_map(net, arch, &spec, candidates, pool, move |r| {
         let points: Vec<SegPoint> = r
             .evaluated
             .into_iter()

@@ -884,6 +884,10 @@ fn pareto_front_matches_bruteforce_on_branched_graph() {
     let pool = Coordinator::new(2);
     let mut spec = tiny_spec(3);
     spec.objectives = vec![Objective::Latency, Objective::Capacity, Objective::Offchip];
+    // The Pareto DP runs its inner searches with capacity pruning off (it
+    // ranks full evaluated sets); the brute-force reference below calls
+    // `search::run` directly, so it must match that setting.
+    spec.search.prune = false;
 
     let dp = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
 

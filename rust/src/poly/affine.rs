@@ -13,6 +13,7 @@ use super::{IBox, Interval, Region};
 pub struct AffineExpr {
     /// `(iteration-space dim index, coefficient)`; coefficients are nonzero.
     pub terms: Vec<(usize, i64)>,
+    /// Constant term.
     pub offset: i64,
 }
 
@@ -39,6 +40,7 @@ impl AffineExpr {
         AffineExpr { terms: vec![a, b], offset: 0 }
     }
 
+    /// Add a constant to the expression's offset.
     pub fn with_offset(mut self, offset: i64) -> Self {
         self.offset += offset;
         self
@@ -116,10 +118,12 @@ impl std::fmt::Display for AffineExpr {
 /// to a tensor's coordinate space.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct AffineMap {
+    /// One expression per output (tensor) dimension.
     pub exprs: Vec<AffineExpr>,
 }
 
 impl AffineMap {
+    /// A map from the given per-output-dim expressions.
     pub fn new(exprs: Vec<AffineExpr>) -> Self {
         AffineMap { exprs }
     }
@@ -131,6 +135,7 @@ impl AffineMap {
         }
     }
 
+    /// Number of output dimensions.
     pub fn out_ndim(&self) -> usize {
         self.exprs.len()
     }

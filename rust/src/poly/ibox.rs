@@ -6,6 +6,7 @@ use super::Interval;
 /// The box is empty iff any dimension's interval is empty.
 #[derive(Debug, PartialEq, Eq, Hash)]
 pub struct IBox {
+    /// One interval per dimension.
     pub dims: Vec<Interval>,
 }
 
@@ -29,6 +30,7 @@ impl Clone for IBox {
 }
 
 impl IBox {
+    /// A box from per-dimension intervals.
     pub fn new(dims: Vec<Interval>) -> Self {
         IBox { dims }
     }
@@ -47,10 +49,12 @@ impl IBox {
         }
     }
 
+    /// Dimensionality.
     pub fn ndim(&self) -> usize {
         self.dims.len()
     }
 
+    /// Whether any dimension is empty.
     pub fn is_empty(&self) -> bool {
         self.dims.iter().any(|d| d.is_empty())
     }
@@ -79,6 +83,7 @@ impl IBox {
         }
     }
 
+    /// Whether the two boxes share a point.
     pub fn overlaps(&self, other: &IBox) -> bool {
         !self.intersect(other).is_empty()
     }

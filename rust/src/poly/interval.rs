@@ -3,7 +3,9 @@
 /// A half-open integer interval `[lo, hi)`. Empty iff `hi <= lo`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Interval {
+    /// Inclusive lower bound.
     pub lo: i64,
+    /// Exclusive upper bound.
     pub hi: i64,
 }
 
@@ -23,6 +25,7 @@ impl Interval {
         Interval { lo: 0, hi: n }
     }
 
+    /// Whether the interval contains no integers.
     pub fn is_empty(&self) -> bool {
         self.hi <= self.lo
     }
@@ -32,6 +35,7 @@ impl Interval {
         (self.hi - self.lo).max(0)
     }
 
+    /// Whether `x` lies in `[lo, hi)`.
     pub fn contains(&self, x: i64) -> bool {
         self.lo <= x && x < self.hi
     }

@@ -37,6 +37,7 @@ impl Clone for Region {
 }
 
 impl Region {
+    /// The empty region in `ndim` dimensions.
     pub fn empty(ndim: usize) -> Self {
         Region { ndim, boxes: vec![] }
     }
@@ -58,6 +59,7 @@ impl Region {
         }
     }
 
+    /// A region consisting of a single box.
     pub fn from_box(b: IBox) -> Self {
         let ndim = b.ndim();
         if b.is_empty() {
@@ -67,18 +69,22 @@ impl Region {
         }
     }
 
+    /// Dimensionality of the ambient space.
     pub fn ndim(&self) -> usize {
         self.ndim
     }
 
+    /// Whether the region contains no points.
     pub fn is_empty(&self) -> bool {
         self.boxes.is_empty()
     }
 
+    /// The disjoint boxes making up the region.
     pub fn boxes(&self) -> &[IBox] {
         &self.boxes
     }
 
+    /// Total number of points.
     pub fn volume(&self) -> i64 {
         self.boxes.iter().map(|b| b.volume()).sum()
     }
@@ -113,18 +119,21 @@ impl Region {
         self.boxes.extend(pieces);
     }
 
+    /// Union `other` into `self` in place.
     pub fn union(&mut self, other: &Region) {
         for b in &other.boxes {
             self.union_box(b);
         }
     }
 
+    /// The union of two regions.
     pub fn union_of(a: &Region, b: &Region) -> Region {
         let mut r = a.clone();
         r.union(b);
         r
     }
 
+    /// The intersection with a single box.
     pub fn intersect_box(&self, b: &IBox) -> Region {
         let boxes: Vec<IBox> = self
             .boxes
@@ -135,6 +144,7 @@ impl Region {
         Region { ndim: self.ndim, boxes }
     }
 
+    /// The intersection of two regions.
     pub fn intersect(&self, other: &Region) -> Region {
         let mut out = Region::empty(self.ndim);
         // Pieces of disjoint unions intersected pairwise are still disjoint.
@@ -180,6 +190,7 @@ impl Region {
         }
     }
 
+    /// The points of `self` not in box `b`.
     pub fn subtract_box(&self, b: &IBox) -> Region {
         if b.is_empty() {
             return self.clone();
@@ -195,6 +206,7 @@ impl Region {
         Region { ndim: self.ndim, boxes }
     }
 
+    /// The points of `self` not in `other`.
     pub fn subtract(&self, other: &Region) -> Region {
         let mut r = self.clone();
         r.subtract_assign(other);

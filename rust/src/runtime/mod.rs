@@ -16,16 +16,22 @@ use std::path::{Path, PathBuf};
 /// executed schedule actually moved.
 #[derive(Debug, Clone, Default)]
 pub struct ExecStats {
+    /// Number of executions.
     pub invocations: u64,
+    /// Total input elements transferred.
     pub input_elems: u64,
+    /// Total output elements transferred.
     pub output_elems: u64,
 }
 
 /// A compiled artifact plus its manifest metadata.
 pub struct Executable {
+    /// Artifact name from the manifest.
     pub name: String,
+    /// Shapes of the executable's inputs.
     pub input_shapes: Vec<Vec<i64>>,
     exe: xla::PjRtLoadedExecutable,
+    /// Accumulated execution statistics.
     pub stats: ExecStats,
 }
 
@@ -94,6 +100,7 @@ impl Runtime {
         })
     }
 
+    /// The PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

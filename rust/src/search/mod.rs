@@ -97,9 +97,13 @@ impl Objective {
 /// The search strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
+    /// Enumerate and evaluate the whole constrained mapspace (parallel).
     Exhaustive,
+    /// Uniform random sampling, for very large spaces.
     Random,
+    /// Simulated annealing with mapping mutations (serial).
     Annealing,
+    /// GAMMA-style population search: tournament selection + mutation.
     Genetic,
 }
 
@@ -133,7 +137,9 @@ impl Algorithm {
 /// only). Unused fields are ignored by the other algorithms.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchSpec {
+    /// Which search algorithm drives the exploration.
     pub algorithm: Algorithm,
+    /// The scalar objective being minimized.
     pub objective: Objective,
     /// PRNG seed (random / annealing / genetic): same spec ⇒ same result.
     /// Round-trips JSON exactly for any u64 (seeds above 2^53 are carried
@@ -155,6 +161,12 @@ pub struct SearchSpec {
     /// first. [`Objective::FeasibleEdp`] already penalizes; this flag extends
     /// the same treatment to the plain objectives.
     pub penalize_infeasible: bool,
+    /// Skip provably capacity-infeasible candidates before evaluation
+    /// (default true). Applies to the batch algorithms (exhaustive, random)
+    /// when infeasibility is penalized and the architecture has a GLB
+    /// budget; a guard re-evaluates everything whenever skipping could
+    /// change the ranking, so results are bit-identical either way.
+    pub prune: bool,
 }
 
 impl Default for SearchSpec {
@@ -169,6 +181,7 @@ impl Default for SearchSpec {
             generations: 25,
             mapspace: MapSpaceConfig::default(),
             penalize_infeasible: true,
+            prune: true,
         }
     }
 }
@@ -198,8 +211,11 @@ impl SearchSpec {
 /// A scored mapping.
 #[derive(Debug, Clone)]
 pub struct Scored {
+    /// The mapping that was evaluated.
     pub mapping: InterLayerMapping,
+    /// Its full evaluation metrics.
     pub metrics: Metrics,
+    /// Its scalar score under the search's objective (lower is better).
     pub score: f64,
 }
 
@@ -207,8 +223,13 @@ pub struct Scored {
 /// extraction).
 #[derive(Debug, Clone)]
 pub struct SearchResult {
+    /// The minimum-score evaluated mapping.
     pub best: Scored,
+    /// Every successfully evaluated candidate, in evaluation order.
     pub evaluated: Vec<Scored>,
+    /// Candidates skipped without evaluation because the closed-form
+    /// capacity lower bound proved them infeasible (see [`SearchSpec::prune`]).
+    pub pruned: usize,
 }
 
 /// Run a search described by `spec` on an [`Evaluator`] session. Returns
@@ -242,18 +263,98 @@ fn score_all(
         .collect()
 }
 
-fn best_of(evaluated: Vec<Scored>) -> Option<SearchResult> {
+fn best_of(evaluated: Vec<Scored>, pruned: usize) -> Option<SearchResult> {
     let best = evaluated
         .iter()
         .min_by(|a, b| a.score.total_cmp(&b.score))?
         .clone();
-    Some(SearchResult { best, evaluated })
+    Some(SearchResult { best, evaluated, pruned })
+}
+
+/// A provable lower bound on the score `mapping` would receive if evaluated,
+/// given that its closed-form capacity lower bound is `cap_lb` and exceeds
+/// the GLB budget (so the infeasibility penalty applies). Soundness: every
+/// metric entering an objective is bounded below by the session floors
+/// ([`Evaluator::floors`]), and penalized scores multiply by
+/// [`Objective::INFEASIBLE_PENALTY`].
+fn pruned_score_floor(
+    ev: &Evaluator,
+    spec: &SearchSpec,
+    mapping: &InterLayerMapping,
+    cap_lb: i64,
+) -> f64 {
+    let fl = ev.floors();
+    let lat = match mapping.parallelism {
+        crate::mapping::Parallelism::Sequential => fl.latency_seq,
+        crate::mapping::Parallelism::Pipeline => fl.latency_pipe,
+    } as f64;
+    let base = match spec.objective {
+        Objective::Latency => lat,
+        Objective::Energy => fl.energy_pj,
+        Objective::Edp | Objective::FeasibleEdp => lat * fl.energy_pj,
+        Objective::Capacity => cap_lb as f64,
+        Objective::Offchip => fl.offchip_elems as f64,
+    };
+    base * Objective::INFEASIBLE_PENALTY
+}
+
+/// [`score_all`] with provable capacity pruning (see [`SearchSpec::prune`]).
+///
+/// Candidates whose closed-form capacity lower bound already exceeds the
+/// GLB budget would evaluate to a penalized score of at least
+/// [`pruned_score_floor`]; when the best surviving score is *strictly*
+/// below every pruned candidate's floor, no pruned candidate can win or
+/// tie, so skipping them cannot change `best` (including its first-minimal
+/// tie-breaking). Whenever that guard cannot be established — or nothing
+/// is prunable — everything is evaluated in the original order, making the
+/// result bit-identical to pruning disabled by construction.
+fn score_all_pruned(
+    ev: &Evaluator,
+    mappings: &[InterLayerMapping],
+    spec: &SearchSpec,
+    pool: &Coordinator,
+) -> (Vec<Scored>, usize) {
+    let prunable = spec.prune
+        && (spec.penalize_infeasible || spec.objective == Objective::FeasibleEdp);
+    let cap = match (prunable, ev.arch().glb_capacity()) {
+        (true, Some(cap)) => cap,
+        _ => return (score_all(ev, mappings, spec, pool), 0),
+    };
+    let word = ev.arch().word_bytes;
+    let mut survivors: Vec<InterLayerMapping> = Vec::with_capacity(mappings.len());
+    let mut floors: Vec<f64> = Vec::new();
+    for m in mappings {
+        match ev.capacity_lower_bound(m) {
+            // Provably infeasible: record the floor of its would-be score.
+            Ok(lb) if lb.saturating_mul(word) > cap => {
+                floors.push(pruned_score_floor(ev, spec, m, lb));
+            }
+            // Feasible-or-unknown (errors evaluate to the same error and are
+            // dropped by `score_all` either way): evaluate normally.
+            _ => survivors.push(m.clone()),
+        }
+    }
+    if floors.is_empty() {
+        return (score_all(ev, mappings, spec, pool), 0);
+    }
+    let scored = score_all(ev, &survivors, spec, pool);
+    let best = scored.iter().map(|s| s.score).min_by(f64::total_cmp);
+    let floor_min = floors.iter().copied().min_by(f64::total_cmp);
+    if let (Some(bs), Some(fm)) = (best, floor_min) {
+        if bs < fm {
+            return (scored, floors.len());
+        }
+    }
+    // Guard failed (a pruned candidate could plausibly rank first): fall
+    // back to evaluating every candidate in the original order.
+    (score_all(ev, mappings, spec, pool), 0)
 }
 
 /// Exhaustive search over the enumerated mapspace.
 fn exhaustive(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<SearchResult> {
     let ms = MapSpace::enumerate(ev.fusion_set(), &spec.mapspace);
-    best_of(score_all(ev, ms.mappings(), spec, pool))
+    let (scored, pruned) = score_all_pruned(ev, ms.mappings(), spec, pool);
+    best_of(scored, pruned)
 }
 
 /// Uniform random sampling of `spec.samples` mappings.
@@ -262,7 +363,8 @@ fn random(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<Searc
     let mappings: Vec<InterLayerMapping> = (0..spec.samples)
         .map(|_| random_mapping(ev.fusion_set(), &mut rng))
         .collect();
-    best_of(score_all(ev, &mappings, spec, pool))
+    let (scored, pruned) = score_all_pruned(ev, &mappings, spec, pool);
+    best_of(scored, pruned)
 }
 
 /// How many random mappings [`annealing`] samples before concluding that no
@@ -346,7 +448,10 @@ fn annealing(ev: &Evaluator, spec: &SearchSpec) -> Option<SearchResult> {
             }
         }
     }
-    Some(SearchResult { best, evaluated })
+    // Annealing (and genetic below) never prune: their PRNG trajectories
+    // consume state per evaluation, so skipping one would change every
+    // subsequent draw.
+    Some(SearchResult { best, evaluated, pruned: 0 })
 }
 
 /// Genetic search: tournament selection + mutation (no crossover across
@@ -381,7 +486,7 @@ fn genetic(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<Sear
         }
         pop = next;
     }
-    best_of(all)
+    best_of(all, 0)
 }
 
 #[cfg(test)]

@@ -19,6 +19,7 @@ pub struct Bitmap {
 }
 
 impl Bitmap {
+    /// An all-clear bitmap over a dense tensor of `shape`.
     pub fn new(shape: &[i64]) -> Self {
         let len: i64 = shape.iter().product();
         let mut strides = vec![1i64; shape.len()];
@@ -33,6 +34,7 @@ impl Bitmap {
         }
     }
 
+    /// The tensor shape.
     pub fn shape(&self) -> &[i64] {
         &self.shape
     }
@@ -49,20 +51,24 @@ impl Bitmap {
             .sum()
     }
 
+    /// Whether the element at `coords` is set.
     pub fn get(&self, coords: &[i64]) -> bool {
         let o = self.offset(coords);
         self.words[(o / 64) as usize] >> (o % 64) & 1 == 1
     }
 
+    /// Mark the element at `coords`.
     pub fn set(&mut self, coords: &[i64]) {
         let o = self.offset(coords);
         self.words[(o / 64) as usize] |= 1 << (o % 64);
     }
 
+    /// Number of set elements.
     pub fn count(&self) -> i64 {
         self.words.iter().map(|w| w.count_ones() as i64).sum()
     }
 
+    /// Reset all elements.
     pub fn clear(&mut self) {
         self.words.iter_mut().for_each(|w| *w = 0);
     }
@@ -156,6 +162,7 @@ impl Bitmap {
         }
     }
 
+    /// Total element count of the shape.
     pub fn num_elems(&self) -> i64 {
         self.len
     }

@@ -10,16 +10,27 @@ use crate::poly::IBox;
 /// Simulator outputs (subset of the model's metrics, measured by execution).
 #[derive(Debug, Clone, Default)]
 pub struct SimMetrics {
+    /// Measured end-to-end latency.
     pub latency_cycles: i64,
+    /// Cycles spent computing.
     pub compute_cycles: i64,
+    /// Elements read from off-chip.
     pub offchip_reads: i64,
+    /// Elements written off-chip.
     pub offchip_writes: i64,
+    /// Peak on-chip occupancy (elements).
     pub occupancy_peak: i64,
+    /// Peak occupancy per tensor (elements).
     pub per_tensor_occupancy: Vec<i64>,
+    /// Off-chip traffic per tensor (elements).
     pub per_tensor_offchip: Vec<i64>,
+    /// Operations executed, including recomputation.
     pub total_ops: i64,
+    /// Operations re-executed due to discarded intermediates.
     pub recompute_ops: i64,
+    /// Total energy (pJ).
     pub energy_pj: f64,
+    /// Leaf tile windows executed.
     pub iterations: i64,
 }
 

@@ -86,6 +86,22 @@ fn arr_field<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a [Json], String
         .ok_or_else(|| format!("{ctx}: field '{key}' must be an array"))
 }
 
+/// `parent.key` — the JSON-path context threaded through parsing so every
+/// error names the offending key (e.g. `workload.einsums[3].inputs[0]`).
+/// Lint reuses these paths as diagnostic spans.
+fn jpath(parent: &str, key: &str) -> String {
+    if parent.is_empty() {
+        key.to_string()
+    } else {
+        format!("{parent}.{key}")
+    }
+}
+
+/// `parent.key[i]` — indexed JSON-path context for array elements.
+fn jidx(parent: &str, key: &str, i: usize) -> String {
+    format!("{}[{i}]", jpath(parent, key))
+}
+
 fn i64_vec(j: &Json, ctx: &str) -> Result<Vec<i64>, String> {
     j.as_arr()
         .ok_or_else(|| format!("{ctx}: expected an array of numbers"))?
@@ -112,10 +128,17 @@ fn str_vec(j: &Json, ctx: &str) -> Result<Vec<String>, String> {
 /// `pdp:28x16`, `fc_fc:512x256`, `conv3:24x8`, `attention:2,4,64,32`.
 /// The JSON layer accepts either this shorthand or a full [`FusionSet`]
 /// object wherever a workload is expected.
+/// The workload shorthand grammar, quoted by parse errors so the CLI names
+/// the valid wire formats instead of sending the user to the README.
+pub const WORKLOAD_SHORTHANDS: &str =
+    "conv_conv:RxC | conv3:RxC | pdp:RxC | fc_fc:TxE | attention:B,H,T,E";
+
+/// Parse a compact workload shorthand string (grammar:
+/// [`WORKLOAD_SHORTHANDS`]) into a built-in [`FusionSet`].
 pub fn parse_workload(spec: &str) -> Result<FusionSet, String> {
     let (kind, rest) = spec
         .split_once(':')
-        .ok_or("workload spec needs kind:params")?;
+        .ok_or_else(|| format!("workload spec needs kind:params (one of {WORKLOAD_SHORTHANDS})"))?;
     let nums: Vec<i64> = rest
         .split(|c| c == 'x' || c == ',')
         .map(|s| s.parse::<i64>().map_err(|e| format!("bad number {s}: {e}")))
@@ -126,16 +149,23 @@ pub fn parse_workload(spec: &str) -> Result<FusionSet, String> {
         ("pdp", [r, c]) => Ok(workloads::pwise_dwise_pwise(*r, *c)),
         ("fc_fc", [t, e]) => Ok(workloads::fc_fc(*t, *e)),
         ("attention", [b, h, t, e]) => Ok(workloads::self_attention(*b, *h, *t, *e)),
-        _ => Err(format!("unknown workload spec: {spec}")),
+        _ => Err(format!(
+            "unknown workload spec: {spec} (expected {WORKLOAD_SHORTHANDS})"
+        )),
     }
 }
 
 /// A workload position in a config: either the shorthand string or a full
 /// [`FusionSet`] object.
 pub fn workload_from_json(j: &Json) -> Result<FusionSet, String> {
+    workload_from_json_at(j, "workload")
+}
+
+/// [`workload_from_json`] with an explicit JSON-path context.
+fn workload_from_json_at(j: &Json, ctx: &str) -> Result<FusionSet, String> {
     match j {
-        Json::Str(s) => parse_workload(s),
-        _ => FusionSet::from_json(j),
+        Json::Str(s) => parse_workload(s).map_err(|e| format!("{ctx}: {e}")),
+        _ => FusionSet::from_json_at(j, ctx),
     }
 }
 
@@ -143,6 +173,15 @@ pub fn workload_from_json(j: &Json) -> Result<FusionSet, String> {
 /// name (`depfin` | `fused-cnn` | `isaac` | `pipelayer` | `flat`), or a full
 /// [`Arch`] object.
 pub fn arch_from_json(j: &Json) -> Result<Arch, String> {
+    arch_from_json_at(j, "arch")
+}
+
+/// The architecture shorthand grammar, quoted by parse errors.
+pub const ARCH_SHORTHANDS: &str =
+    "depfin | fused-cnn | isaac | pipelayer | flat | generic:<GLB KiB>";
+
+/// [`arch_from_json`] with an explicit JSON-path context.
+fn arch_from_json_at(j: &Json, ctx: &str) -> Result<Arch, String> {
     match j {
         Json::Str(s) => match s.as_str() {
             "depfin" => Ok(presets::depfin()),
@@ -154,14 +193,16 @@ pub fn arch_from_json(j: &Json) -> Result<Arch, String> {
                 if let Some(kib) = other.strip_prefix("generic:") {
                     let kib: i64 = kib
                         .parse()
-                        .map_err(|e| format!("arch generic:<KiB>: {e}"))?;
+                        .map_err(|e| format!("{ctx}: generic:<KiB>: {e}"))?;
                     Ok(Arch::generic(kib))
                 } else {
-                    Err(format!("unknown arch shorthand: {other}"))
+                    Err(format!(
+                        "{ctx}: unknown arch shorthand: {other} (expected {ARCH_SHORTHANDS})"
+                    ))
                 }
             }
         },
-        _ => Arch::from_json(j),
+        _ => Arch::from_json_at(j, ctx),
     }
 }
 
@@ -204,6 +245,7 @@ fn op_kind_parse(s: &str) -> Result<OpKind, String> {
 }
 
 impl AffineExpr {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             (
@@ -218,11 +260,16 @@ impl AffineExpr {
         ])
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<AffineExpr, String> {
-        let ctx = "affine expr";
+        Self::from_json_at(j, "affine expr")
+    }
+
+    /// [`AffineExpr::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<AffineExpr, String> {
         let mut terms = Vec::new();
-        for t in arr_field(j, "terms", ctx)? {
-            let pair = i64_vec(t, ctx)?;
+        for (i, t) in arr_field(j, "terms", ctx)?.iter().enumerate() {
+            let pair = i64_vec(t, &jidx(ctx, "terms", i))?;
             if pair.len() != 2 {
                 return Err(format!("{ctx}: each term must be [dim, coeff]"));
             }
@@ -242,22 +289,31 @@ impl AffineExpr {
 }
 
 impl AffineMap {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jarr(self.exprs.iter().map(|e| e.to_json()).collect())
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<AffineMap, String> {
+        Self::from_json_at(j, "affine map")
+    }
+
+    /// [`AffineMap::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<AffineMap, String> {
         let exprs = j
             .as_arr()
-            .ok_or("affine map: expected an array of expressions")?
+            .ok_or_else(|| format!("{ctx}: expected an array of expressions"))?
             .iter()
-            .map(AffineExpr::from_json)
+            .enumerate()
+            .map(|(i, e)| AffineExpr::from_json_at(e, &format!("{ctx}[{i}]")))
             .collect::<Result<_, _>>()?;
         Ok(AffineMap { exprs })
     }
 }
 
 impl TensorAccess {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("tensor", jnum_u(self.tensor.0)),
@@ -265,16 +321,22 @@ impl TensorAccess {
         ])
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<TensorAccess, String> {
-        let ctx = "tensor access";
+        Self::from_json_at(j, "tensor access")
+    }
+
+    /// [`TensorAccess::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<TensorAccess, String> {
         Ok(TensorAccess {
             tensor: TensorId(usize_field(j, "tensor", ctx)?),
-            map: AffineMap::from_json(field(j, "map", ctx)?)?,
+            map: AffineMap::from_json_at(field(j, "map", ctx)?, &jpath(ctx, "map"))?,
         })
     }
 }
 
 impl TensorInfo {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("name", jstr(&self.name)),
@@ -283,8 +345,13 @@ impl TensorInfo {
         ])
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<TensorInfo, String> {
-        let ctx = "tensor";
+        Self::from_json_at(j, "tensor")
+    }
+
+    /// [`TensorInfo::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<TensorInfo, String> {
         Ok(TensorInfo {
             name: str_field(j, "name", ctx)?.to_string(),
             shape: i64_vec(field(j, "shape", ctx)?, ctx)?,
@@ -294,6 +361,7 @@ impl TensorInfo {
 }
 
 impl EinsumSpec {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("name", jstr(&self.name)),
@@ -311,23 +379,34 @@ impl EinsumSpec {
         ])
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<EinsumSpec, String> {
-        let ctx = "einsum";
+        Self::from_json_at(j, "einsum")
+    }
+
+    /// [`EinsumSpec::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<EinsumSpec, String> {
         Ok(EinsumSpec {
             name: str_field(j, "name", ctx)?.to_string(),
-            rank_names: str_vec(field(j, "rank_names", ctx)?, ctx)?,
-            rank_sizes: i64_vec(field(j, "rank_sizes", ctx)?, ctx)?,
-            output: TensorAccess::from_json(field(j, "output", ctx)?)?,
+            rank_names: str_vec(field(j, "rank_names", ctx)?, &jpath(ctx, "rank_names"))?,
+            rank_sizes: i64_vec(field(j, "rank_sizes", ctx)?, &jpath(ctx, "rank_sizes"))?,
+            output: TensorAccess::from_json_at(
+                field(j, "output", ctx)?,
+                &jpath(ctx, "output"),
+            )?,
             inputs: arr_field(j, "inputs", ctx)?
                 .iter()
-                .map(TensorAccess::from_json)
+                .enumerate()
+                .map(|(i, a)| TensorAccess::from_json_at(a, &jidx(ctx, "inputs", i)))
                 .collect::<Result<_, _>>()?,
-            op_kind: op_kind_parse(str_field(j, "op_kind", ctx)?)?,
+            op_kind: op_kind_parse(str_field(j, "op_kind", ctx)?)
+                .map_err(|e| format!("{ctx}: {e}"))?,
         })
     }
 }
 
 impl FusionSet {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("name", jstr(&self.name)),
@@ -339,16 +418,22 @@ impl FusionSet {
     /// Parse and structurally validate; the returned fusion set satisfies
     /// [`FusionSet::validate`].
     pub fn from_json(j: &Json) -> Result<FusionSet, String> {
-        let ctx = "fusion set";
+        Self::from_json_at(j, "fusion set")
+    }
+
+    /// [`FusionSet::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<FusionSet, String> {
         let fs = FusionSet {
             name: str_field(j, "name", ctx)?.to_string(),
             tensors: arr_field(j, "tensors", ctx)?
                 .iter()
-                .map(TensorInfo::from_json)
+                .enumerate()
+                .map(|(i, t)| TensorInfo::from_json_at(t, &jidx(ctx, "tensors", i)))
                 .collect::<Result<_, _>>()?,
             einsums: arr_field(j, "einsums", ctx)?
                 .iter()
-                .map(EinsumSpec::from_json)
+                .enumerate()
+                .map(|(i, e)| EinsumSpec::from_json_at(e, &jidx(ctx, "einsums", i)))
                 .collect::<Result<_, _>>()?,
         };
         for e in &fs.einsums {
@@ -361,7 +446,7 @@ impl FusionSet {
                 }
             }
         }
-        fs.validate()?;
+        fs.validate().map_err(|e| format!("{ctx}: {e}"))?;
         Ok(fs)
     }
 }
@@ -369,6 +454,7 @@ impl FusionSet {
 // ---------------------------------------------------------------- arch --
 
 impl BufferLevel {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         // Bandwidth may be infinite (register files); JSON has no inf, so
         // `null` encodes it symmetrically with unbounded capacity.
@@ -389,8 +475,13 @@ impl BufferLevel {
         ])
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<BufferLevel, String> {
-        let ctx = "buffer level";
+        Self::from_json_at(j, "buffer level")
+    }
+
+    /// [`BufferLevel::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<BufferLevel, String> {
         let capacity_bytes = match field(j, "capacity_bytes", ctx)? {
             Json::Null => None,
             v => Some(
@@ -415,6 +506,7 @@ impl BufferLevel {
 }
 
 impl Arch {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("name", jstr(&self.name)),
@@ -442,28 +534,35 @@ impl Arch {
     /// Parse and structurally validate; the returned architecture satisfies
     /// [`Arch::validate`].
     pub fn from_json(j: &Json) -> Result<Arch, String> {
-        let ctx = "arch";
+        Self::from_json_at(j, "arch")
+    }
+
+    /// [`Arch::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<Arch, String> {
         let compute = field(j, "compute", ctx)?;
         let noc = field(j, "noc", ctx)?;
+        let compute_ctx = jpath(ctx, "compute");
+        let noc_ctx = jpath(ctx, "noc");
         let arch = Arch {
             name: str_field(j, "name", ctx)?.to_string(),
             levels: arr_field(j, "levels", ctx)?
                 .iter()
-                .map(BufferLevel::from_json)
+                .enumerate()
+                .map(|(i, l)| BufferLevel::from_json_at(l, &jidx(ctx, "levels", i)))
                 .collect::<Result<_, _>>()?,
             compute: ComputeSpec {
-                macs: i64_field(compute, "macs", "arch.compute")?,
-                mac_energy_pj: f64_field(compute, "mac_energy_pj", "arch.compute")?,
-                clock_ghz: f64_field(compute, "clock_ghz", "arch.compute")?,
+                macs: i64_field(compute, "macs", &compute_ctx)?,
+                mac_energy_pj: f64_field(compute, "mac_energy_pj", &compute_ctx)?,
+                clock_ghz: f64_field(compute, "clock_ghz", &compute_ctx)?,
             },
             noc: NocSpec {
-                rows: i64_field(noc, "rows", "arch.noc")?,
-                cols: i64_field(noc, "cols", "arch.noc")?,
-                hop_energy_pj: f64_field(noc, "hop_energy_pj", "arch.noc")?,
+                rows: i64_field(noc, "rows", &noc_ctx)?,
+                cols: i64_field(noc, "cols", &noc_ctx)?,
+                hop_energy_pj: f64_field(noc, "hop_energy_pj", &noc_ctx)?,
             },
             word_bytes: i64_field(j, "word_bytes", ctx)?,
         };
-        arch.validate()?;
+        arch.validate().map_err(|e| format!("{ctx}: {e}"))?;
         Ok(arch)
     }
 }
@@ -471,6 +570,7 @@ impl Arch {
 // ------------------------------------------------------------- mapping --
 
 impl Parallelism {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jstr(match self {
             Parallelism::Sequential => "sequential",
@@ -478,6 +578,7 @@ impl Parallelism {
         })
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<Parallelism, String> {
         match j.as_str() {
             Some("sequential") => Ok(Parallelism::Sequential),
@@ -488,12 +589,18 @@ impl Parallelism {
 }
 
 impl Partition {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![("dim", jnum_u(self.dim)), ("tile", jnum_i(self.tile))])
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<Partition, String> {
-        let ctx = "partition";
+        Self::from_json_at(j, "partition")
+    }
+
+    /// [`Partition::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<Partition, String> {
         Ok(Partition {
             dim: usize_field(j, "dim", ctx)?,
             tile: i64_field(j, "tile", ctx)?,
@@ -502,6 +609,7 @@ impl Partition {
 }
 
 impl InterLayerMapping {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         // Retention as sorted [tensor, level] pairs for deterministic output.
         let mut retention: Vec<(usize, usize)> =
@@ -529,25 +637,33 @@ impl InterLayerMapping {
     /// (the [`InterLayerMapping::tiled`] convention), and `parallelism` to
     /// sequential — so the minimal valid document is `{}`.
     pub fn from_json(j: &Json) -> Result<InterLayerMapping, String> {
-        let ctx = "mapping";
+        Self::from_json_at(j, "mapping")
+    }
+
+    /// [`InterLayerMapping::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<InterLayerMapping, String> {
         let partitions: Vec<Partition> = match j.get("partitions") {
             Some(v) => v
                 .as_arr()
                 .ok_or_else(|| format!("{ctx}: partitions must be an array"))?
                 .iter()
-                .map(Partition::from_json)
+                .enumerate()
+                .map(|(i, p)| Partition::from_json_at(p, &jidx(ctx, "partitions", i)))
                 .collect::<Result<_, _>>()?,
             None => vec![],
         };
         let mut retention = HashMap::new();
         if let Some(v) = j.get("retention") {
-            for pair in v
+            for (i, pair) in v
                 .as_arr()
                 .ok_or_else(|| format!("{ctx}: retention must be an array of pairs"))?
+                .iter()
+                .enumerate()
             {
-                let p = i64_vec(pair, ctx)?;
+                let ictx = jidx(ctx, "retention", i);
+                let p = i64_vec(pair, &ictx)?;
                 if p.len() != 2 || p[0] < 0 || p[1] < 0 {
-                    return Err(format!("{ctx}: retention entries must be [tensor, level]"));
+                    return Err(format!("{ictx}: retention entries must be [tensor, level]"));
                 }
                 retention.insert(TensorId(p[0] as usize), p[1] as usize);
             }
@@ -575,6 +691,7 @@ impl InterLayerMapping {
 // ------------------------------------------------------------ mapspace --
 
 impl MapSpaceConfig {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             (
@@ -601,19 +718,24 @@ impl MapSpaceConfig {
     /// Parse a mapspace config; every absent field takes its
     /// [`MapSpaceConfig::default`] value.
     pub fn from_json(j: &Json) -> Result<MapSpaceConfig, String> {
-        let ctx = "mapspace";
+        Self::from_json_at(j, "mapspace")
+    }
+
+    /// [`MapSpaceConfig::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<MapSpaceConfig, String> {
         let d = MapSpaceConfig::default();
         let schedules = match j.get("schedules") {
             Some(v) => v
                 .as_arr()
                 .ok_or_else(|| format!("{ctx}: schedules must be an array"))?
                 .iter()
-                .map(|names| str_vec(names, ctx))
+                .enumerate()
+                .map(|(i, names)| str_vec(names, &jidx(ctx, "schedules", i)))
                 .collect::<Result<_, _>>()?,
             None => d.schedules,
         };
         let tile_sizes = match j.get("tile_sizes") {
-            Some(v) => i64_vec(v, ctx)?,
+            Some(v) => i64_vec(v, &jpath(ctx, "tile_sizes"))?,
             None => d.tile_sizes,
         };
         let uniform_retention = match j.get("uniform_retention") {
@@ -656,26 +778,31 @@ impl MapSpaceConfig {
 // -------------------------------------------------------------- search --
 
 impl Objective {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jstr(self.name())
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<Objective, String> {
         Objective::parse(j.as_str().ok_or("objective must be a string")?)
     }
 }
 
 impl Algorithm {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jstr(self.name())
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<Algorithm, String> {
         Algorithm::parse(j.as_str().ok_or("algorithm must be a string")?)
     }
 }
 
 impl SearchSpec {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("algorithm", self.algorithm.to_json()),
@@ -696,20 +823,25 @@ impl SearchSpec {
             ("generations", jnum_u(self.generations)),
             ("mapspace", self.mapspace.to_json()),
             ("penalize_infeasible", Json::Bool(self.penalize_infeasible)),
+            ("prune", Json::Bool(self.prune)),
         ])
     }
 
     /// Parse a search spec; every absent field takes its
     /// [`SearchSpec::default`] value, so `{}` is a valid exhaustive search.
     pub fn from_json(j: &Json) -> Result<SearchSpec, String> {
-        let ctx = "search";
+        Self::from_json_at(j, "search")
+    }
+
+    /// [`SearchSpec::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<SearchSpec, String> {
         let d = SearchSpec::default();
         let algorithm = match j.get("algorithm") {
-            Some(v) => Algorithm::from_json(v)?,
+            Some(v) => Algorithm::from_json(v).map_err(|e| format!("{ctx}.algorithm: {e}"))?,
             None => d.algorithm,
         };
         let objective = match j.get("objective") {
-            Some(v) => Objective::from_json(v)?,
+            Some(v) => Objective::from_json(v).map_err(|e| format!("{ctx}.objective: {e}"))?,
             None => d.objective,
         };
         let seed = match j.get("seed") {
@@ -749,7 +881,7 @@ impl SearchSpec {
         let population = usize_or("population", d.population)?;
         let generations = usize_or("generations", d.generations)?;
         let mapspace = match j.get("mapspace") {
-            Some(v) => MapSpaceConfig::from_json(v)?,
+            Some(v) => MapSpaceConfig::from_json_at(v, &jpath(ctx, "mapspace"))?,
             None => d.mapspace,
         };
         let penalize_infeasible = match j.get("penalize_infeasible") {
@@ -757,6 +889,12 @@ impl SearchSpec {
                 .as_bool()
                 .ok_or_else(|| format!("{ctx}: penalize_infeasible must be a bool"))?,
             None => d.penalize_infeasible,
+        };
+        let prune = match j.get("prune") {
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| format!("{ctx}: prune must be a bool"))?,
+            None => d.prune,
         };
         Ok(SearchSpec {
             algorithm,
@@ -768,6 +906,7 @@ impl SearchSpec {
             generations,
             mapspace,
             penalize_infeasible,
+            prune,
         })
     }
 }
@@ -775,6 +914,7 @@ impl SearchSpec {
 // ------------------------------------------------------------- network --
 
 impl LayerOp {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![("op", jstr(self.name()))];
         match self {
@@ -810,6 +950,7 @@ impl LayerOp {
         jobj(pairs)
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<LayerOp, String> {
         let ctx = "layer op";
         match str_field(j, "op", ctx)? {
@@ -843,6 +984,7 @@ impl LayerOp {
 }
 
 impl LayerSpec {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("name", jstr(&self.name)),
@@ -863,10 +1005,14 @@ impl LayerSpec {
     /// input for node 0) — which is also how the legacy chain schema
     /// (`layers` without edges) is interpreted.
     pub fn from_json(j: &Json, index: usize) -> Result<LayerSpec, String> {
-        let ctx = "layer";
+        Self::from_json_at(j, index, "layer")
+    }
+
+    /// [`LayerSpec::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, index: usize, ctx: &str) -> Result<LayerSpec, String> {
         let inputs = match j.get("inputs") {
             Some(v) => {
-                let raw = i64_vec(v, ctx)?;
+                let raw = i64_vec(v, &jpath(ctx, "inputs"))?;
                 let mut inputs = Vec::with_capacity(raw.len());
                 for p in raw {
                     if p < 0 {
@@ -881,14 +1027,16 @@ impl LayerSpec {
         };
         Ok(LayerSpec {
             name: str_field(j, "name", ctx)?.to_string(),
-            input_shape: i64_vec(field(j, "input_shape", ctx)?, ctx)?,
-            op: LayerOp::from_json(field(j, "op", ctx)?)?,
+            input_shape: i64_vec(field(j, "input_shape", ctx)?, &jpath(ctx, "input_shape"))?,
+            op: LayerOp::from_json(field(j, "op", ctx)?)
+                .map_err(|e| format!("{}: {e}", jpath(ctx, "op")))?,
             inputs,
         })
     }
 }
 
 impl Network {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("name", jstr(&self.name)),
@@ -901,23 +1049,32 @@ impl Network {
     /// explicit `inputs` edge list) and, for back-compat, the chain schema
     /// (`layers` without edges — every layer consumes its predecessor).
     pub fn from_json(j: &Json) -> Result<Network, String> {
-        let ctx = "network";
-        let nodes = match j.get("nodes") {
-            Some(v) => v
-                .as_arr()
-                .ok_or_else(|| format!("{ctx}: field 'nodes' must be an array"))?,
-            None => arr_field(j, "layers", ctx)
-                .map_err(|_| format!("{ctx}: missing field 'nodes' (or legacy 'layers')"))?,
+        Self::from_json_at(j, "network")
+    }
+
+    /// [`Network::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<Network, String> {
+        let (nodes, key) = match j.get("nodes") {
+            Some(v) => (
+                v.as_arr()
+                    .ok_or_else(|| format!("{ctx}: field 'nodes' must be an array"))?,
+                "nodes",
+            ),
+            None => (
+                arr_field(j, "layers", ctx)
+                    .map_err(|_| format!("{ctx}: missing field 'nodes' (or legacy 'layers')"))?,
+                "layers",
+            ),
         };
         let net = Network {
             name: str_field(j, "name", ctx)?.to_string(),
             layers: nodes
                 .iter()
                 .enumerate()
-                .map(|(i, v)| LayerSpec::from_json(v, i))
+                .map(|(i, v)| LayerSpec::from_json_at(v, i, &jidx(ctx, key, i)))
                 .collect::<Result<_, _>>()?,
         };
-        net.validate()?;
+        net.validate().map_err(|e| format!("{ctx}: {e}"))?;
         Ok(net)
     }
 }
@@ -955,13 +1112,19 @@ pub fn parse_network(spec: &str) -> Result<Network, String> {
 /// A network position in a config: either the shorthand string or a full
 /// [`Network`] object.
 pub fn network_from_json(j: &Json) -> Result<Network, String> {
+    network_from_json_at(j, "network")
+}
+
+/// [`network_from_json`] with an explicit JSON-path context.
+fn network_from_json_at(j: &Json, ctx: &str) -> Result<Network, String> {
     match j {
-        Json::Str(s) => parse_network(s),
-        _ => Network::from_json(j),
+        Json::Str(s) => parse_network(s).map_err(|e| format!("{ctx}: {e}")),
+        _ => Network::from_json_at(j, ctx),
     }
 }
 
 impl NetworkSearchSpec {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("max_segment_layers", jnum_u(self.max_segment_layers)),
@@ -978,7 +1141,11 @@ impl NetworkSearchSpec {
     /// [`NetworkSearchSpec::default`] value, so `{}` is a valid spec (and
     /// pre-Pareto documents parse unchanged).
     pub fn from_json(j: &Json) -> Result<NetworkSearchSpec, String> {
-        let ctx = "segment search";
+        Self::from_json_at(j, "segment search")
+    }
+
+    /// [`NetworkSearchSpec::from_json`] with an explicit JSON-path context.
+    fn from_json_at(j: &Json, ctx: &str) -> Result<NetworkSearchSpec, String> {
         let d = NetworkSearchSpec::default();
         let max_segment_layers = match j.get("max_segment_layers") {
             Some(v) => {
@@ -993,7 +1160,7 @@ impl NetworkSearchSpec {
             None => d.max_segment_layers,
         };
         let search = match j.get("search") {
-            Some(v) => SearchSpec::from_json(v)?,
+            Some(v) => SearchSpec::from_json_at(v, &jpath(ctx, "search"))?,
             None => d.search,
         };
         let objectives = match j.get("objectives") {
@@ -1004,7 +1171,13 @@ impl NetworkSearchSpec {
                 if arr.is_empty() {
                     return Err(format!("{ctx}: objectives must not be empty"));
                 }
-                arr.iter().map(Objective::from_json).collect::<Result<_, _>>()?
+                arr.iter()
+                    .enumerate()
+                    .map(|(i, o)| {
+                        Objective::from_json(o)
+                            .map_err(|e| format!("{}: {e}", jidx(ctx, "objectives", i)))
+                    })
+                    .collect::<Result<_, _>>()?
             }
             None => d.objectives,
         };
@@ -1027,6 +1200,7 @@ impl NetworkSearchSpec {
 // ------------------------------------------------------------- metrics --
 
 impl EnergyBreakdown {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("dram_pj", Json::Num(self.dram_pj)),
@@ -1038,6 +1212,7 @@ impl EnergyBreakdown {
         ])
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<EnergyBreakdown, String> {
         let ctx = "energy";
         Ok(EnergyBreakdown {
@@ -1051,6 +1226,7 @@ impl EnergyBreakdown {
 }
 
 impl Metrics {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("latency_cycles", jnum_i(self.latency_cycles)),
@@ -1094,6 +1270,7 @@ impl Metrics {
         ])
     }
 
+    /// Parse from the JSON wire form; errors carry the offending JSON path.
     pub fn from_json(j: &Json) -> Result<Metrics, String> {
         let ctx = "metrics";
         let i64_or = |key: &str| -> Result<i64, String> {
@@ -1152,12 +1329,16 @@ impl Metrics {
 /// mapping. The `--json` output of `analyze` is itself a valid document.
 #[derive(Debug, Clone)]
 pub struct AnalyzeConfig {
+    /// The fusion set to evaluate.
     pub workload: FusionSet,
+    /// The target architecture.
     pub arch: Arch,
+    /// The single mapping to analyze.
     pub mapping: InterLayerMapping,
 }
 
 impl AnalyzeConfig {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("workload", self.workload.to_json()),
@@ -1170,16 +1351,16 @@ impl AnalyzeConfig {
     /// defaults to the untiled sequential mapping.
     pub fn from_json(j: &Json) -> Result<AnalyzeConfig, String> {
         let ctx = "analyze config";
-        let workload = workload_from_json(field(j, "workload", ctx)?)?;
+        let workload = workload_from_json_at(field(j, "workload", ctx)?, "workload")?;
         let arch = match j.get("arch") {
-            Some(v) => arch_from_json(v)?,
+            Some(v) => arch_from_json_at(v, "arch")?,
             None => Arch::generic(256),
         };
         let mapping = match j.get("mapping") {
-            Some(v) => InterLayerMapping::from_json(v)?,
+            Some(v) => InterLayerMapping::from_json_at(v, "mapping")?,
             None => InterLayerMapping::untiled(Parallelism::Sequential),
         };
-        mapping.validate(&workload)?;
+        mapping.validate(&workload).map_err(|e| format!("mapping: {e}"))?;
         Ok(AnalyzeConfig { workload, arch, mapping })
     }
 }
@@ -1189,12 +1370,16 @@ impl AnalyzeConfig {
 /// result document can be re-fed as `--config` and reproduces the run.
 #[derive(Debug, Clone)]
 pub struct SearchConfig {
+    /// The fusion set whose map space is searched.
     pub workload: FusionSet,
+    /// The target architecture.
     pub arch: Arch,
+    /// Algorithm, objective, budgets, and mapspace constraints.
     pub search: SearchSpec,
 }
 
 impl SearchConfig {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("workload", self.workload.to_json()),
@@ -1208,13 +1393,13 @@ impl SearchConfig {
     /// section from a previous run's `--json` output) are ignored.
     pub fn from_json(j: &Json) -> Result<SearchConfig, String> {
         let ctx = "search config";
-        let workload = workload_from_json(field(j, "workload", ctx)?)?;
+        let workload = workload_from_json_at(field(j, "workload", ctx)?, "workload")?;
         let arch = match j.get("arch") {
-            Some(v) => arch_from_json(v)?,
+            Some(v) => arch_from_json_at(v, "arch")?,
             None => Arch::generic(256),
         };
         let search = match j.get("search") {
-            Some(v) => SearchSpec::from_json(v)?,
+            Some(v) => SearchSpec::from_json_at(v, "search")?,
             None => SearchSpec::default(),
         };
         Ok(SearchConfig { workload, arch, search })
@@ -1228,8 +1413,11 @@ impl SearchConfig {
 /// run.
 #[derive(Debug, Clone)]
 pub struct NetworkConfig {
+    /// The whole-DNN graph to partition into fused segments.
     pub network: Network,
+    /// The target architecture.
     pub arch: Arch,
+    /// The per-segment search spec and partitioner options.
     pub segment_search: NetworkSearchSpec,
     /// `Some` = score this exact partition; `None` = DP over all cut sets.
     pub cuts: Option<Vec<usize>>,
@@ -1239,6 +1427,7 @@ pub struct NetworkConfig {
 }
 
 impl NetworkConfig {
+    /// Serialize to the JSON wire form.
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("network", self.network.to_json()),
@@ -1260,18 +1449,18 @@ impl NetworkConfig {
     /// output) are ignored.
     pub fn from_json(j: &Json) -> Result<NetworkConfig, String> {
         let ctx = "network config";
-        let network = network_from_json(field(j, "network", ctx)?)?;
+        let network = network_from_json_at(field(j, "network", ctx)?, "network")?;
         let arch = match j.get("arch") {
-            Some(v) => arch_from_json(v)?,
+            Some(v) => arch_from_json_at(v, "arch")?,
             None => Arch::generic(256),
         };
         let segment_search = match j.get("segment_search") {
-            Some(v) => NetworkSearchSpec::from_json(v)?,
+            Some(v) => NetworkSearchSpec::from_json_at(v, "segment_search")?,
             None => NetworkSearchSpec::default(),
         };
         let cuts = match j.get("cuts") {
             Some(v) => {
-                let raw = i64_vec(v, ctx)?;
+                let raw = i64_vec(v, "cuts")?;
                 let mut cuts = Vec::with_capacity(raw.len());
                 for c in raw {
                     if c < 0 {

@@ -11,14 +11,20 @@ use std::time::{Duration, Instant};
 /// Result of one timed benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (stable row key).
     pub name: String,
+    /// Timed iterations.
     pub iters: u32,
+    /// Mean wall time per iteration.
     pub mean: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl BenchResult {
+    /// One-line human-readable report.
     pub fn report(&self) -> String {
         format!(
             "{:40} {:>12?} /iter (min {:?}, max {:?}, n={})",
@@ -146,11 +152,11 @@ pub fn check_network_bench_schema(doc: &Json) -> Result<(), String> {
     check_rows(doc, FILE, "pareto_rows", &NETWORK_PARETO_BENCH_NUM_KEYS, &[])
 }
 
-/// The per-row numeric keys of `BENCH_search.json` (only `evaluated` and
-/// `best_score` are deterministic counters; the CI determinism gate excludes
-/// the timing-derived keys).
-pub const SEARCH_BENCH_NUM_KEYS: [&str; 4] =
-    ["mean_ns", "evaluated", "mappings_per_sec", "best_score"];
+/// The per-row numeric keys of `BENCH_search.json` (`evaluated`, `pruned`,
+/// and `best_score` are deterministic counters; the CI determinism gate
+/// excludes the timing-derived keys).
+pub const SEARCH_BENCH_NUM_KEYS: [&str; 5] =
+    ["mean_ns", "evaluated", "pruned", "mappings_per_sec", "best_score"];
 
 /// Validate a `BENCH_search.json` document: a `rows` array whose entries
 /// carry a string `workload` and every numeric key of
@@ -241,13 +247,17 @@ mod tests {
         // The bench binary emits rows with exactly these keys; losing any
         // (or the rows array itself) must fail the check.
         let row = "{\"workload\":\"exhaustive\",\"mean_ns\":1.0,\"evaluated\":40,\
-                   \"mappings_per_sec\":2.0,\"best_score\":3.0}";
+                   \"pruned\":0,\"mappings_per_sec\":2.0,\"best_score\":3.0}";
         let doc = Json::parse(&format!("{{\"rows\":[{row}]}}")).unwrap();
         check_search_bench_schema(&doc).unwrap();
         assert!(check_search_bench_schema(&Json::parse("{}").unwrap()).is_err());
         assert!(check_search_bench_schema(&Json::parse("{\"rows\":[]}").unwrap()).is_err());
         let broken = "{\"rows\":[{\"workload\":\"x\",\"mean_ns\":1.0}]}";
         assert!(check_search_bench_schema(&Json::parse(broken).unwrap()).is_err());
+        // A pre-pruning row (no `pruned` key) must now be rejected.
+        let stale = "{\"rows\":[{\"workload\":\"x\",\"mean_ns\":1.0,\"evaluated\":40,\
+                     \"mappings_per_sec\":2.0,\"best_score\":3.0}]}";
+        assert!(check_search_bench_schema(&Json::parse(stale).unwrap()).is_err());
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub enum Json {
 }
 
 impl Json {
+    /// Parse a JSON document from text.
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -28,6 +29,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup; `None` on non-objects.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -35,6 +37,7 @@ impl Json {
         }
     }
 
+    /// Array element lookup; `None` on non-arrays.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -42,6 +45,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -49,6 +53,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -67,6 +72,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -74,6 +80,7 @@ impl Json {
         }
     }
 
+    /// The key-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -81,6 +88,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),

@@ -9,6 +9,7 @@ pub struct Prng {
 }
 
 impl Prng {
+    /// A PRNG seeded deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         // splitmix64 to expand the seed into the state.
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -24,6 +25,7 @@ impl Prng {
         }
     }
 
+    /// The next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

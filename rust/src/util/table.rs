@@ -8,6 +8,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -15,17 +16,20 @@ impl Table {
         }
     }
 
+    /// Append a row of owned cells.
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Append a row of borrowed cells.
     pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
         let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
         self.row(&owned)
     }
 
+    /// Whether no rows have been added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }

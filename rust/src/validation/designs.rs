@@ -408,9 +408,13 @@ pub fn validate_flat(scale: Scale) -> Vec<ValRow> {
 /// One validated (workload, architecture, mapping) triple.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
+    /// Published design name.
     pub design: &'static str,
+    /// The encoded workload.
     pub fs: FusionSet,
+    /// The encoded architecture.
     pub arch: Arch,
+    /// The encoded mapping.
     pub mapping: InterLayerMapping,
 }
 

@@ -5,8 +5,11 @@ use crate::util::table::Table;
 /// One validated metric: LoopTree model value vs. the executed reference.
 #[derive(Debug, Clone)]
 pub struct ValRow {
+    /// Published design name.
     pub design: &'static str,
+    /// Workload label.
     pub workload: String,
+    /// Metric name being compared.
     pub metric: &'static str,
     /// LoopTree analytical model.
     pub looptree: f64,
@@ -18,6 +21,7 @@ pub struct ValRow {
 }
 
 impl ValRow {
+    /// Relative model-vs-reference error in percent.
     pub fn error_pct(&self) -> f64 {
         if self.reference == 0.0 {
             if self.looptree == 0.0 {

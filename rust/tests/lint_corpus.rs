@@ -1,0 +1,108 @@
+//! Golden lint corpus: every deliberately-malformed spec under
+//! `examples/lint/` must produce exactly its expected `LT0xx` codes, and
+//! every shipped example config under `examples/configs/` must lint clean.
+
+use looptree::analysis::lint_document;
+use looptree::util::json::Json;
+
+fn lint_file(path: &str) -> looptree::analysis::LintReport {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    let doc = Json::parse(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+    lint_document(&doc)
+}
+
+#[test]
+fn malformed_corpus_is_golden() {
+    // (file, expected codes in order, expected exit code)
+    let corpus: &[(&str, &[&str], i32)] = &[
+        ("bad_shape.json", &["LT001"], 2),
+        ("bad_workload.json", &["LT002"], 2),
+        ("bad_mapping_dim.json", &["LT004"], 2),
+        ("bad_capacity.json", &["LT005"], 1),
+        ("bad_retention_output.json", &["LT006"], 1),
+        ("bad_degenerate_partition.json", &["LT007"], 1),
+        ("bad_reduction_partition.json", &["LT008"], 1),
+        ("bad_zero_budget.json", &["LT009"], 1),
+        ("bad_mapspace_rank.json", &["LT010", "LT010"], 2),
+    ];
+    for &(file, expected, exit) in corpus {
+        let path = format!("../examples/lint/{file}");
+        let report = lint_file(&path);
+        let codes: Vec<&str> = report.diagnostics.iter().map(|d| d.code).collect();
+        assert_eq!(codes, expected, "{file}: {:#?}", report.diagnostics);
+        assert_eq!(report.exit_code(), exit, "{file}");
+        for d in &report.diagnostics {
+            assert!(!d.message.is_empty(), "{file}: empty message");
+            assert!(!d.hint.is_empty(), "{file}: empty hint");
+        }
+    }
+}
+
+#[test]
+fn corpus_directory_is_fully_pinned() {
+    // Every file in examples/lint/ must appear in the golden table above —
+    // adding a corpus file without pinning its codes is an error.
+    let mut files: Vec<String> = std::fs::read_dir("../examples/lint")
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    files.sort();
+    assert_eq!(
+        files,
+        vec![
+            "bad_capacity.json",
+            "bad_degenerate_partition.json",
+            "bad_mapping_dim.json",
+            "bad_mapspace_rank.json",
+            "bad_reduction_partition.json",
+            "bad_retention_output.json",
+            "bad_shape.json",
+            "bad_workload.json",
+            "bad_zero_budget.json",
+        ]
+    );
+}
+
+#[test]
+fn shipped_example_configs_lint_clean() {
+    let mut checked = 0;
+    for entry in std::fs::read_dir("../examples/configs").unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let report = lint_file(path.to_str().unwrap());
+        assert_eq!(
+            report.exit_code(),
+            0,
+            "{}: {:#?}",
+            path.display(),
+            report.diagnostics
+        );
+        checked += 1;
+    }
+    assert!(checked >= 5, "expected the shipped example configs");
+}
+
+#[test]
+fn diagnostics_serialize_with_stable_fields() {
+    let report = lint_file("../examples/lint/bad_mapspace_rank.json");
+    let json = report.to_json();
+    assert_eq!(json.get("exit_code").and_then(Json::as_f64), Some(2.0));
+    let diags = json.get("diagnostics").and_then(Json::as_arr).unwrap();
+    assert_eq!(diags.len(), 2);
+    for d in diags {
+        for key in ["code", "severity", "path", "message", "hint"] {
+            assert!(d.get(key).is_some(), "missing {key}");
+        }
+    }
+    // Paths point into the mapspace section.
+    assert_eq!(
+        diags[0].get("path").and_then(Json::as_str),
+        Some("search.mapspace.schedules[0][1]")
+    );
+    assert_eq!(
+        diags[1].get("path").and_then(Json::as_str),
+        Some("search.mapspace.tile_sizes[2]")
+    );
+}

@@ -1,13 +1,16 @@
 //! Model-evaluation throughput: the paper's §IV claim that the analytical
 //! model is orders of magnitude faster than simulation, the validate-once
 //! `Evaluator` session vs. the legacy free `evaluate()`, and — the headline
-//! of this bench since the steady-state fast path landed — fast path vs.
-//! exhaustive reference walk on long row-tiled walks, where evaluation cost
-//! no longer scales with the fmap extent.
+//! of this bench since the symbolic tier landed — the full three-tier
+//! comparison: closed-form symbolic box walk vs. steady-state fast path vs.
+//! exhaustive reference walk on long row-tiled walks. The bench asserts all
+//! three tiers agree bit-for-bit and pins which configurations the symbolic
+//! walk must cover (`Metrics::path.symbolic`).
 //!
-//! Emits `BENCH_model_eval.json` (workload, mean ns, iterations/s, and the
-//! fast-vs-reference speedups) so the perf trajectory is tracked run over
-//! run; `LOOPTREE_BENCH_SMOKE=1` clamps repetitions for CI.
+//! Emits `BENCH_model_eval.json` (workload, mean ns, iterations/s, the
+//! fast-vs-reference speedups, and the symbolic-vs-fast speedups) so the
+//! perf trajectory is tracked run over run; `LOOPTREE_BENCH_SMOKE=1` clamps
+//! repetitions for CI.
 
 use looptree::arch::Arch;
 use looptree::einsum::workloads;
@@ -24,27 +27,54 @@ fn main() {
     let opts = EvalOptions::default();
     let mut rows: Vec<BenchResult> = Vec::new();
     let mut speedups: Vec<Json> = Vec::new();
+    let mut symbolic_speedups: Vec<Json> = Vec::new();
 
-    println!("== fast path vs reference walk (steady-state classification) ==");
+    println!("== symbolic vs fast path vs reference walk ==");
     // (rows, ch, partition spec): the 112×112 row-tiled configurations are
-    // the acceptance gate — the reference walk is O(total tiles), the fast
-    // path O(distinct tile classes).
+    // the acceptance gate — the reference walk is O(total tiles), the
+    // steady-state fast path O(distinct tile classes), and the symbolic box
+    // walk O(schedule levels). `expect_symbolic` pins which configurations
+    // the closed-form path must cover: row-only (nested or not) tilings stay
+    // in single-box form; the row+col tiling wraps the availability set into
+    // an L-shape at each column boundary, so it must fall back.
     struct FastRow {
         label: &'static str,
         rows: i64,
         ch: i64,
         tiles: &'static [(&'static str, i64)],
+        expect_symbolic: bool,
     }
     let configs = [
-        FastRow { label: "conv_conv(112,64) row-tiled", rows: 112, ch: 64, tiles: &[("P2", 1)] },
+        FastRow {
+            label: "conv_conv(112,64) row-tiled",
+            rows: 112,
+            ch: 64,
+            tiles: &[("P2", 1)],
+            expect_symbolic: true,
+        },
         FastRow {
             label: "conv_conv(112,64) row+col-tiled",
             rows: 112,
             ch: 64,
             tiles: &[("P2", 1), ("Q2", 1)],
+            expect_symbolic: false,
         },
-        FastRow { label: "conv_conv(56,64) row-tiled", rows: 56, ch: 64, tiles: &[("P2", 2)] },
+        FastRow {
+            label: "conv_conv(112,64) nested row-tiled",
+            rows: 112,
+            ch: 64,
+            tiles: &[("P2", 8), ("P2", 1)],
+            expect_symbolic: true,
+        },
+        FastRow {
+            label: "conv_conv(56,64) row-tiled",
+            rows: 56,
+            ch: 64,
+            tiles: &[("P2", 2)],
+            expect_symbolic: true,
+        },
     ];
+    let mut any_symbolic = false;
     for cfg in &configs {
         let fs = workloads::conv_conv(cfg.rows, cfg.ch);
         let ev = Evaluator::new(&fs, &arch).unwrap();
@@ -57,25 +87,42 @@ fn main() {
             })
             .collect();
         let mapping = InterLayerMapping::tiled(partitions, Parallelism::Sequential);
-        let m_fast = ev.evaluate(&mapping).unwrap();
+        let m_sym = ev.evaluate(&mapping).unwrap();
+        let m_fast = ev.evaluate_no_symbolic(&mapping).unwrap();
         let m_ref = ev.evaluate_reference(&mapping).unwrap();
+        assert_eq!(m_sym.latency_cycles, m_ref.latency_cycles, "symbolic path drifted");
+        assert_eq!(m_sym.iterations, m_ref.iterations, "symbolic path drifted");
         assert_eq!(m_fast.latency_cycles, m_ref.latency_cycles, "fast path drifted");
         assert_eq!(m_fast.iterations, m_ref.iterations, "fast path drifted");
+        if cfg.expect_symbolic {
+            assert!(
+                m_sym.path.symbolic,
+                "symbolic walk unexpectedly fell back on {}",
+                cfg.label
+            );
+        }
+        any_symbolic |= m_sym.path.symbolic;
 
         let (w, n) = reps(2, 12);
-        let fast = bench(&format!("fast      {}", cfg.label), w, n, || {
+        let symbolic = bench(&format!("symbolic  {}", cfg.label), w, n, || {
             ev.evaluate(&mapping).unwrap()
+        });
+        let fast = bench(&format!("fast      {}", cfg.label), w, n, || {
+            ev.evaluate_no_symbolic(&mapping).unwrap()
         });
         let (w, n) = reps(1, 4);
         let reference = bench(&format!("reference {}", cfg.label), w, n, || {
             ev.evaluate_reference(&mapping).unwrap()
         });
+        println!("{}", symbolic.report());
         println!("{}", fast.report());
         println!("{}", reference.report());
         let speedup = reference.mean.as_secs_f64() / fast.mean.as_secs_f64().max(1e-12);
+        let speedup_vs_fast = fast.mean.as_secs_f64() / symbolic.mean.as_secs_f64().max(1e-12);
         println!(
-            "    {} iterations walked; fast-path speedup: {speedup:.1}x",
-            m_ref.iterations
+            "    {} iterations walked; fast-vs-reference {speedup:.1}x; \
+             symbolic-vs-fast {speedup_vs_fast:.2}x (fired: {})",
+            m_ref.iterations, m_sym.path.symbolic
         );
         speedups.push(Json::Obj(
             [
@@ -94,9 +141,33 @@ fn main() {
             .into_iter()
             .collect(),
         ));
+        symbolic_speedups.push(Json::Obj(
+            [
+                ("workload".to_string(), Json::Str(cfg.label.to_string())),
+                ("iterations".to_string(), Json::Num(m_ref.iterations as f64)),
+                (
+                    "symbolic_mean_ns".to_string(),
+                    Json::Num(symbolic.mean.as_nanos() as f64),
+                ),
+                (
+                    "fast_mean_ns".to_string(),
+                    Json::Num(fast.mean.as_nanos() as f64),
+                ),
+                (
+                    "reference_mean_ns".to_string(),
+                    Json::Num(reference.mean.as_nanos() as f64),
+                ),
+                ("speedup_vs_fast".to_string(), Json::Num(speedup_vs_fast)),
+                ("symbolic_fired".to_string(), Json::Bool(m_sym.path.symbolic)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+        rows.push(symbolic);
         rows.push(fast);
         rows.push(reference);
     }
+    assert!(any_symbolic, "symbolic walk fired on no benchmark configuration");
 
     println!("\n== validate-once session vs per-call validation ==");
     for (r, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8)] {
@@ -172,6 +243,7 @@ fn main() {
                 Json::Arr(rows.iter().map(BenchResult::to_json).collect()),
             ),
             ("fastpath_speedups".to_string(), Json::Arr(speedups)),
+            ("symbolic_speedups".to_string(), Json::Arr(symbolic_speedups)),
         ]
         .into_iter()
         .collect(),

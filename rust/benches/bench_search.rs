@@ -4,8 +4,8 @@
 //! mapspace). Search throughput rides on the evaluator's steady-state fast
 //! path, so it no longer scales with the fmap extent.
 //!
-//! Emits `BENCH_search.json` (workload, mean ns, mappings/s, evaluated and
-//! pruned counts per algorithm);
+//! Emits `BENCH_search.json` (workload, mean ns, mappings/s, evaluated,
+//! pruned, and symbolic-path counts per algorithm);
 //! `LOOPTREE_BENCH_SMOKE=1` shrinks the search budgets for CI.
 
 use looptree::arch::Arch;
@@ -45,7 +45,12 @@ fn main() {
     };
 
     let mut json_rows: Vec<Json> = Vec::new();
-    let mut record = |name: &str, mean_ns: f64, evaluated: usize, pruned: usize, best: f64| {
+    let mut record = |name: &str,
+                      mean_ns: f64,
+                      evaluated: usize,
+                      pruned: usize,
+                      best: f64,
+                      symbolic_evals: usize| {
         json_rows.push(Json::Obj(
             [
                 ("workload".to_string(), Json::Str(name.to_string())),
@@ -61,6 +66,7 @@ fn main() {
                     }),
                 ),
                 ("best_score".to_string(), Json::Num(best)),
+                ("symbolic_evals".to_string(), Json::Num(symbolic_evals as f64)),
             ]
             .into_iter()
             .collect(),
@@ -83,6 +89,7 @@ fn main() {
         ex.evaluated.len(),
         ex.pruned,
         ex.best.score,
+        ex.symbolic_evals,
     );
 
     let (rnd, t) = bench_once("random", || {
@@ -96,6 +103,7 @@ fn main() {
         rnd.evaluated.len(),
         rnd.pruned,
         rnd.best.score,
+        rnd.symbolic_evals,
     );
 
     let (ann, t) = bench_once("annealing", || {
@@ -109,6 +117,7 @@ fn main() {
         ann.evaluated.len(),
         ann.pruned,
         ann.best.score,
+        ann.symbolic_evals,
     );
 
     let (gen_, t) = bench_once("genetic", || {
@@ -122,6 +131,7 @@ fn main() {
         gen_.evaluated.len(),
         gen_.pruned,
         gen_.best.score,
+        gen_.symbolic_evals,
     );
 
     println!(

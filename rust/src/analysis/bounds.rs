@@ -1,17 +1,31 @@
-//! Closed-form lower bounds on evaluation metrics, derived from one
-//! backward needs sweep — no iteration walk.
+//! Closed-form lower bounds on evaluation metrics, derived from backward
+//! needs sweeps — no iteration walk.
 //!
-//! Soundness rests on two facts about the engine:
+//! Soundness rests on three facts about the engine:
 //!
 //! * At the very first leaf the availability sets start empty, so nothing
 //!   is truncated and nothing has been invalidated: the engine's occupancy
 //!   there is exactly the full needs of the first leaf window. The peak
 //!   occupancy can only be larger.
+//! * A tensor retained at level 0 is never invalidated, so its availability
+//!   grows monotonically; on a surjective session every element any leaf
+//!   requests eventually materializes into it, so by the last leaf such a
+//!   tensor occupies its full-domain needs. (Non-surjective sessions can
+//!   request elements no producer ever makes, so this bound is gated on
+//!   surjectivity; output fmaps are excluded because their occupancy is the
+//!   per-iteration drain tile, not their availability frontier.)
 //! * Every element the walk ever *uses* is materialized at least once
 //!   (a consumer's needs outside availability are requested from the
 //!   producer, and availability only ever holds previously materialized
 //!   data), so per-layer executed operations and per-tensor off-chip
 //!   fetches are bounded below by the full-domain needs.
+//!
+//! The needs sweeps themselves go through the symbolic box calculus
+//! ([`super::symbolic::box_needs_into`]) whenever the footprints stay
+//! single-box — the same closed forms the engine's symbolic evaluation path
+//! uses, so the pruner and the evaluator share one source of truth for
+//! occupancy — and fall back to the exact [`window_needs`] region sweep
+//! otherwise. Either way the bound is exact set algebra, never an estimate.
 //!
 //! These bounds power the search pruner: a mapping whose
 //! [`capacity_lower_bound`] already exceeds the buffer capacity is
@@ -19,19 +33,72 @@
 //! score such a mapping *would* receive, so pruning provably never changes
 //! a search result.
 
-use crate::einsum::FusionSet;
+use super::symbolic::box_needs_into;
+use crate::einsum::{FusionSet, TensorId, TensorKind};
 use crate::mapping::InterLayerMapping;
 use crate::model::{window_needs, TileWindows};
+use crate::poly::IBox;
 
-/// Exact occupancy of the first leaf of the walk — a lower bound on
-/// `occupancy_peak` for *any* retention assignment and parallelism, in
-/// elements. The first leaf fetches and materializes its full needs with
-/// nothing evicted yet, so no evaluation of `mapping` can peak below this.
+/// Per-tensor volumes of the needs of one sink window: the box sweep where
+/// it applies, the region sweep otherwise (identical results either way).
+fn needs_volumes(fs: &FusionSet, win: &IBox, domains: &[IBox], vols: &mut Vec<i64>) {
+    let mut data = Vec::new();
+    let (mut t1, mut t2) = (IBox::empty(0), IBox::empty(0));
+    vols.clear();
+    if box_needs_into(fs, win, domains, &mut data, &mut t1, &mut t2) {
+        vols.extend(data.iter().map(|b| b.volume()));
+    } else {
+        vols.extend(window_needs(fs, win).data.iter().map(|r| r.volume()));
+    }
+}
+
+/// A lower bound on `occupancy_peak` for *any* parallelism, in elements:
+/// the larger of the exact first-leaf occupancy and (on surjective
+/// sessions) the last-leaf occupancy of level-0-retained tensors. No
+/// evaluation of `mapping` can peak below this.
+///
+/// Computes the surjectivity check inline; evaluator sessions that already
+/// know it should call [`capacity_lower_bound_given`].
 pub fn capacity_lower_bound(fs: &FusionSet, mapping: &InterLayerMapping) -> i64 {
+    let surjective = fs.einsums.iter().all(|e| {
+        e.output.map.image_box(&e.domain()) == fs.tensor(e.output.tensor).full_box()
+    });
+    capacity_lower_bound_given(fs, mapping, surjective)
+}
+
+/// [`capacity_lower_bound`] with the session's surjectivity verdict already
+/// known (the evaluator caches it).
+pub(crate) fn capacity_lower_bound_given(
+    fs: &FusionSet,
+    mapping: &InterLayerMapping,
+    surjective: bool,
+) -> i64 {
     let tw = TileWindows::new(fs, mapping);
+    let domains: Vec<IBox> = fs.einsums.iter().map(|e| e.domain()).collect();
+    let mut vols = Vec::new();
+
+    // First leaf: full needs of the first window, nothing evicted yet.
     let prefix = vec![0i64; tw.num_levels()];
-    let needs = window_needs(fs, &tw.window(&prefix));
-    needs.data.iter().map(|r| r.volume()).sum()
+    needs_volumes(fs, &tw.window(&prefix), &domains, &mut vols);
+    let first_leaf: i64 = vols.iter().sum();
+
+    // Last leaf: tensors retained at level 0 have accumulated their whole
+    // full-domain needs (surjective sessions only — see module docs).
+    if !surjective {
+        return first_leaf;
+    }
+    let ret0: Vec<usize> = (0..fs.tensors.len())
+        .filter(|&x| {
+            fs.tensors[x].kind != TensorKind::OutputFmap
+                && mapping.retention_for(TensorId(x)) == 0
+        })
+        .collect();
+    if ret0.is_empty() {
+        return first_leaf;
+    }
+    needs_volumes(fs, &fs.last().domain(), &domains, &mut vols);
+    let last_leaf: i64 = ret0.iter().map(|&x| vols[x]).sum();
+    first_leaf.max(last_leaf)
 }
 
 /// Mapping-independent floors on the evaluation metrics of a session,

@@ -2,13 +2,18 @@
 //! DAG, derived by composing per-level access maps symbolically — in
 //! O(levels), with no iteration walk.
 //!
-//! Three consumers build on the same per-session facts
+//! Four consumers build on the same per-session facts
 //! ([`SessionStatics`]):
 //!
-//! * **prover** ([`prove_levels`]) — certifies the engine's steady-state
-//!   jump statically, replacing the empirical two-child certification where
-//!   the proof succeeds (the empirical walk remains the oracle in property
-//!   tests);
+//! * **symbolic evaluator** (`symbolic`, consumed by `model::engine`) — the
+//!   box calculus behind the engine's closed-form evaluation path: exact
+//!   single-box set algebra for footprints, transfers, and occupancy on
+//!   surjective chains, with a typed refusal wherever a set stops being one
+//!   box so the engine can fall back without losing exactness;
+//! * **prover** ([`prove_levels`], [`prove_levels_verbose`]) — certifies
+//!   the engine's steady-state jump statically, replacing the empirical
+//!   two-child certification where the proof succeeds (the empirical walk
+//!   remains the oracle in property tests);
 //! * **pruner** ([`capacity_lower_bound`], [`ObjectiveFloors`]) — lets the
 //!   searches skip provably-infeasible mappings before evaluation without
 //!   changing any search result;
@@ -20,10 +25,14 @@ mod bounds;
 mod lint;
 mod prove;
 mod statics;
+pub(crate) mod symbolic;
 
+pub(crate) use bounds::capacity_lower_bound_given;
 pub use bounds::{capacity_lower_bound, objective_floors, ObjectiveFloors};
 pub use lint::{lint_document, Diagnostic, LintReport, Severity};
-pub use prove::{prove_levels, LevelProof};
+pub use prove::{
+    prove_gate, prove_level, prove_levels, prove_levels_verbose, LevelProof, ProveFail,
+};
 pub use statics::SessionStatics;
 
 #[cfg(test)]

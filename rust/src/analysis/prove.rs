@@ -26,9 +26,11 @@
 //!   after child `i` equals the needs of child window `i` — a rigid
 //!   translate of child `i − 1`'s by `coeff · tile`.
 //!
-//! Any tensor outside these classes makes the level unprovable (`None`) and
-//! the engine falls back to the empirical two-child certification, which
-//! remains the oracle in property tests.
+//! Any tensor outside these classes makes the level unprovable and the
+//! engine falls back to the empirical two-child certification, which
+//! remains the oracle in property tests. The refusal itself is a typed
+//! [`ProveFail`] so diagnostics (`analyze --explain`) can say *which*
+//! tensor blocked the proof without the hot path paying for a message.
 
 use super::SessionStatics;
 use crate::einsum::{FusionSet, TensorId, TensorKind};
@@ -42,6 +44,122 @@ pub struct LevelProof {
     pub deltas: Vec<Vec<i64>>,
 }
 
+/// Why a level (or the whole mapping) could not be statically certified.
+/// Constructing one allocates nothing; [`ProveFail::describe`] renders the
+/// human-readable reason on demand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProveFail {
+    /// A producer's output image does not cover its tensor, so backward
+    /// preimages clip and translate arguments are inexact. Session-wide.
+    NotSurjective,
+    /// Some partitioned rank is absent from the sink's output access
+    /// (reduction-rank partitioning): output tiles revisit, so the jump's
+    /// output-availability advance is unsound. Mapping-wide.
+    PartitionOffOutput,
+    /// Fewer than 4 children: the engine never jumps (child 0, one steady
+    /// representative, the jump, and the explicit last child don't fit).
+    TooFewChildren,
+    /// This tensor fits none of the provable classes at this level.
+    Unprovable {
+        /// The first tensor that blocked the proof.
+        tensor: TensorId,
+    },
+}
+
+impl ProveFail {
+    /// Human-readable reason, resolving tensor ids against `fs`.
+    pub fn describe(&self, fs: &FusionSet) -> String {
+        match self {
+            ProveFail::NotSurjective => {
+                "session is not surjective (producer images do not cover their tensors)".into()
+            }
+            ProveFail::PartitionOffOutput => {
+                "a partitioned rank is absent from the sink output access \
+                 (reduction-rank partitioning)"
+                    .into()
+            }
+            ProveFail::TooFewChildren => "fewer than 4 children at this level".into(),
+            ProveFail::Unprovable { tensor } => format!(
+                "tensor {} fits no provable class (moving footprint without \
+                 matching retention)",
+                fs.tensor(*tensor).name
+            ),
+        }
+    }
+}
+
+/// The mapping-wide preconditions shared by every level proof: session
+/// surjectivity and all partitioned ranks on the sink's output access.
+pub fn prove_gate(
+    statics: &SessionStatics,
+    mapping: &InterLayerMapping,
+) -> Result<(), ProveFail> {
+    if !statics.surjective {
+        return Err(ProveFail::NotSurjective);
+    }
+    // The engine's steady-state jump advances output availability by one
+    // tile per child without re-checking it; that is only sound when every
+    // partitioned rank appears on the sink's output access.
+    if !mapping
+        .partitions
+        .iter()
+        .all(|p| statics.out_dims.contains(&p.dim))
+    {
+        return Err(ProveFail::PartitionOffOutput);
+    }
+    Ok(())
+}
+
+/// Certify one schedule level, assuming [`prove_gate`] already passed.
+/// `counts` must be `mapping.level_counts(fs)`.
+pub fn prove_level(
+    fs: &FusionSet,
+    statics: &SessionStatics,
+    mapping: &InterLayerMapping,
+    counts: &[i64],
+    l: usize,
+) -> Result<LevelProof, ProveFail> {
+    // The engine only attempts a jump with at least 4 children (child 0,
+    // one certified steady child, the jump, and the explicit last child).
+    if counts[l] < 4 {
+        return Err(ProveFail::TooFewChildren);
+    }
+    let nt = fs.tensors.len();
+    let sink = fs.last();
+    let part = &mapping.partitions[l];
+    let mut deltas: Vec<Vec<i64>> = Vec::with_capacity(nt);
+    for x in 0..nt {
+        let id = TensorId(x);
+        let tensor = fs.tensor(id);
+        let mut d = vec![0i64; tensor.ndim()];
+        if tensor.kind == TensorKind::OutputFmap {
+            for (o, expr) in sink.output.map.exprs.iter().enumerate() {
+                if expr.as_identity() == Some(part.dim) {
+                    d[o] = part.tile;
+                }
+            }
+        } else if mapping
+            .partitions
+            .iter()
+            .all(|p| statics.independent_of(id, p.dim))
+        {
+            // class (a): delta stays all-zero.
+        } else if mapping.retention_for(id) == l + 1 && statics.consistent_along(id, part.dim) {
+            // class (b): rigid translate by coeff · tile per child.
+            for (o, v) in d.iter_mut().enumerate() {
+                *v = statics
+                    .coeff_of(id, part.dim, o)
+                    .expect("checked consistent")
+                    * part.tile;
+            }
+        } else {
+            return Err(ProveFail::Unprovable { tensor: id });
+        }
+        deltas.push(d);
+    }
+    Ok(LevelProof { deltas })
+}
+
 /// Certify each schedule level of `mapping` statically. Entry `l` is
 /// `Some(proof)` when the engine may jump from child 1 to the last child of
 /// level `l` using `proof.deltas`; `None` sends that level to the empirical
@@ -53,62 +171,27 @@ pub fn prove_levels(
     counts: &[i64],
 ) -> Vec<Option<LevelProof>> {
     let k = mapping.partitions.len();
-    let mut proofs: Vec<Option<LevelProof>> = vec![None; k];
-    if !statics.surjective {
-        return proofs;
+    if prove_gate(statics, mapping).is_err() {
+        return vec![None; k];
     }
-    // The engine's steady-state jump advances output availability by one
-    // tile per child without re-checking it; that is only sound when every
-    // partitioned rank appears on the sink's output access.
-    if !mapping
-        .partitions
-        .iter()
-        .all(|p| statics.out_dims.contains(&p.dim))
-    {
-        return proofs;
+    (0..k)
+        .map(|l| prove_level(fs, statics, mapping, counts, l).ok())
+        .collect()
+}
+
+/// [`prove_levels`] with the refusal reasons kept — the diagnostic twin
+/// behind `analyze --explain`. Gate failures apply to every level.
+pub fn prove_levels_verbose(
+    fs: &FusionSet,
+    statics: &SessionStatics,
+    mapping: &InterLayerMapping,
+    counts: &[i64],
+) -> Vec<Result<LevelProof, ProveFail>> {
+    let k = mapping.partitions.len();
+    if let Err(e) = prove_gate(statics, mapping) {
+        return (0..k).map(|_| Err(e.clone())).collect();
     }
-    let nt = fs.tensors.len();
-    let sink = fs.last();
-    'level: for l in 0..k {
-        // The engine only attempts a jump with at least 4 children (child 0,
-        // one certified steady child, the jump, and the explicit last child).
-        if counts[l] < 4 {
-            continue;
-        }
-        let part = &mapping.partitions[l];
-        let mut deltas: Vec<Vec<i64>> = Vec::with_capacity(nt);
-        for x in 0..nt {
-            let id = TensorId(x);
-            let tensor = fs.tensor(id);
-            let mut d = vec![0i64; tensor.ndim()];
-            if tensor.kind == TensorKind::OutputFmap {
-                for (o, expr) in sink.output.map.exprs.iter().enumerate() {
-                    if expr.as_identity() == Some(part.dim) {
-                        d[o] = part.tile;
-                    }
-                }
-            } else if mapping
-                .partitions
-                .iter()
-                .all(|p| statics.independent_of(id, p.dim))
-            {
-                // class (a): delta stays all-zero.
-            } else if mapping.retention_for(id) == l + 1
-                && statics.consistent_along(id, part.dim)
-            {
-                // class (b): rigid translate by coeff · tile per child.
-                for (o, v) in d.iter_mut().enumerate() {
-                    *v = statics
-                        .coeff_of(id, part.dim, o)
-                        .expect("checked consistent")
-                        * part.tile;
-                }
-            } else {
-                continue 'level;
-            }
-            deltas.push(d);
-        }
-        proofs[l] = Some(LevelProof { deltas });
-    }
-    proofs
+    (0..k)
+        .map(|l| prove_level(fs, statics, mapping, counts, l))
+        .collect()
 }

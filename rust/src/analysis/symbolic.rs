@@ -1,0 +1,324 @@
+//! Closed-form box calculus for the symbolic evaluation path.
+//!
+//! The engine's symbolic hot path (see `model::engine`) shadows the
+//! reference walk with *single axis-aligned boxes* in place of the general
+//! [`Region`](crate::poly::Region) unions: on surjective producer chains
+//! every per-tensor availability, needs, and fresh set the walk manipulates
+//! is provably one box, so every set operation collapses to O(dims)
+//! interval arithmetic. This module provides the box primitives — union,
+//! difference, intersection, overlap volume — each reporting whether the
+//! exact result is still a single box, plus the box-specialized backward
+//! *needs* sweep that mirrors [`window_needs`](crate::model::window_needs)
+//! on chains.
+//!
+//! Every helper is **exact or refuses**: when a result is not representable
+//! as one box the helper returns `false` and the caller abandons the
+//! symbolic walk for the general region path, so closed-form evaluation can
+//! never be approximate. Empty boxes are kept canonical (all dims
+//! `[0, 0)`), which keeps box equality and translate comparisons
+//! representation-independent.
+
+use crate::einsum::FusionSet;
+use crate::poly::{IBox, Interval};
+
+/// Reset `b` to the canonical empty box of `nd` dims (all `[0, 0)`).
+pub(crate) fn box_reset_empty(b: &mut IBox, nd: usize) {
+    b.dims.clear();
+    b.dims.resize(nd, Interval::empty());
+}
+
+/// `dst = src`, reusing `dst`'s storage.
+pub(crate) fn box_assign(dst: &mut IBox, src: &IBox) {
+    dst.dims.clear();
+    dst.dims.extend_from_slice(&src.dims);
+}
+
+/// `a ∪= b`, provided the union is exactly one box. Returns `false` (with
+/// `a` unchanged) when it is not. The union is a box iff one operand
+/// contains the other, or they differ in exactly one dim where the two
+/// intervals overlap or abut.
+pub(crate) fn box_union_assign(a: &mut IBox, b: &IBox) -> bool {
+    if b.is_empty() {
+        return true;
+    }
+    if a.is_empty() {
+        box_reset_empty(a, b.ndim());
+        a.dims.copy_from_slice(&b.dims);
+        return true;
+    }
+    debug_assert_eq!(a.ndim(), b.ndim());
+    if a.contains_box(b) {
+        return true;
+    }
+    if b.contains_box(a) {
+        a.dims.copy_from_slice(&b.dims);
+        return true;
+    }
+    let mut diff_dim = None;
+    for (d, (ia, ib)) in a.dims.iter().zip(&b.dims).enumerate() {
+        if ia != ib {
+            if diff_dim.is_some() {
+                return false;
+            }
+            diff_dim = Some(d);
+        }
+    }
+    // Neither contains the other, so exactly one dim differs; the union of
+    // the two intervals there must itself be an interval (overlap or touch).
+    let d = diff_dim.expect("containment handled above");
+    let (ia, ib) = (a.dims[d], b.dims[d]);
+    if ia.lo > ib.hi || ib.lo > ia.hi {
+        return false;
+    }
+    a.dims[d] = ia.hull(&ib);
+    true
+}
+
+/// `out = a − b`, provided the difference is exactly one box (possibly
+/// empty). Returns `false` (with `out` unspecified) when the difference
+/// needs more than one box: `a ∩ b` shrinks `a` in two or more dims, or
+/// cuts an interior band out of one dim.
+pub(crate) fn box_minus_into(a: &IBox, b: &IBox, out: &mut IBox) -> bool {
+    let nd = a.ndim();
+    if a.is_empty() {
+        box_reset_empty(out, nd);
+        return true;
+    }
+    if b.is_empty() || !a.overlaps(b) {
+        box_reset_empty(out, nd);
+        out.dims.copy_from_slice(&a.dims);
+        return true;
+    }
+    if b.contains_box(a) {
+        box_reset_empty(out, nd);
+        return true;
+    }
+    // The intersection is nonempty and proper: the difference is one box
+    // iff the intersection spans `a` fully in all but one dim, and in that
+    // dim reaches one end of `a` (a one-sided remainder).
+    let mut cut = None;
+    for (d, (ia, ib)) in a.dims.iter().zip(&b.dims).enumerate() {
+        let iv = ia.intersect(ib);
+        if iv == *ia {
+            continue;
+        }
+        if cut.is_some() {
+            return false;
+        }
+        cut = Some((d, iv));
+    }
+    let (d, iv) = cut.expect("proper intersection differs somewhere");
+    let ia = a.dims[d];
+    let rest = if iv.lo == ia.lo {
+        Interval::new(iv.hi, ia.hi)
+    } else if iv.hi == ia.hi {
+        Interval::new(ia.lo, iv.lo)
+    } else {
+        return false; // interior band: two-sided remainder
+    };
+    box_reset_empty(out, nd);
+    out.dims.copy_from_slice(&a.dims);
+    out.dims[d] = rest;
+    true
+}
+
+/// `a ∩= b`, canonicalizing an empty result. Intersections of boxes are
+/// always boxes, so this never refuses.
+pub(crate) fn box_intersect_assign(a: &mut IBox, b: &IBox) {
+    if a.is_empty() {
+        return;
+    }
+    debug_assert_eq!(a.ndim(), b.ndim());
+    for (ia, ib) in a.dims.iter_mut().zip(&b.dims) {
+        *ia = ia.intersect(ib);
+    }
+    if a.is_empty() {
+        let nd = a.ndim();
+        box_reset_empty(a, nd);
+    }
+}
+
+/// `|a ∩ b|` without materializing the intersection.
+pub(crate) fn box_overlap_volume(a: &IBox, b: &IBox) -> i64 {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    debug_assert_eq!(a.ndim(), b.ndim());
+    let mut v = 1i64;
+    for (ia, ib) in a.dims.iter().zip(&b.dims) {
+        let w = ia.hi.min(ib.hi) - ia.lo.max(ib.lo);
+        if w <= 0 {
+            return 0;
+        }
+        v *= w;
+    }
+    v
+}
+
+/// Box-specialized full-needs sweep: the per-tensor data needs of the sink
+/// window `last_ops`, ignoring availability — the closed-form counterpart
+/// of [`window_needs`](crate::model::window_needs), restricted to results
+/// represented as one box per tensor.
+///
+/// On a surjective chain every tensor has a single consumer layer and the
+/// identity output access round-trips each request exactly
+/// (`image(preimage(fr)) = fr`), so the sweep provably stays single-box;
+/// the `false` return covers every other topology (a tensor whose
+/// consumers' needs don't union to a box) and sends the caller to the
+/// region sweep. On success `data[x]` is tensor `x`'s needs box and the
+/// volumes agree with the region sweep exactly.
+pub(crate) fn box_needs_into(
+    fs: &FusionSet,
+    last_ops: &IBox,
+    domains: &[IBox],
+    data: &mut Vec<IBox>,
+    ops_tmp: &mut IBox,
+    img_tmp: &mut IBox,
+) -> bool {
+    let n = fs.num_layers();
+    data.resize_with(fs.tensors.len(), || IBox::empty(0));
+    for (x, tn) in fs.tensors.iter().enumerate() {
+        box_reset_empty(&mut data[x], tn.ndim());
+    }
+    for t in (0..n).rev() {
+        let e = &fs.einsums[t];
+        if t == n - 1 {
+            box_reset_empty(ops_tmp, last_ops.ndim());
+            ops_tmp.dims.copy_from_slice(&last_ops.dims);
+        } else {
+            // Upstream ops: preimage of what this layer's consumers (all
+            // later in topological order, already swept) need of its output.
+            e.output
+                .map
+                .preimage_identity_box_into(&data[e.output.tensor.0], &domains[t], ops_tmp);
+        }
+        if ops_tmp.is_empty() {
+            continue;
+        }
+        e.output.map.image_box_into(ops_tmp, img_tmp);
+        if !box_union_assign(&mut data[e.output.tensor.0], img_tmp) {
+            return false;
+        }
+        for acc in &e.inputs {
+            acc.map.image_box_into(ops_tmp, img_tmp);
+            if !box_union_assign(&mut data[acc.tensor.0], img_tmp) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::workloads;
+    use crate::model::window_needs;
+    use crate::poly::Region;
+
+    fn bx(bounds: &[(i64, i64)]) -> IBox {
+        IBox::from_bounds(bounds)
+    }
+
+    #[test]
+    fn union_handles_containment_abutment_and_refusal() {
+        // Containment both ways.
+        let mut a = bx(&[(0, 4), (0, 4)]);
+        assert!(box_union_assign(&mut a, &bx(&[(1, 2), (1, 2)])));
+        assert_eq!(a, bx(&[(0, 4), (0, 4)]));
+        let mut a = bx(&[(1, 2), (1, 2)]);
+        assert!(box_union_assign(&mut a, &bx(&[(0, 4), (0, 4)])));
+        assert_eq!(a, bx(&[(0, 4), (0, 4)]));
+        // Abutting along one dim.
+        let mut a = bx(&[(0, 4), (0, 4)]);
+        assert!(box_union_assign(&mut a, &bx(&[(4, 6), (0, 4)])));
+        assert_eq!(a, bx(&[(0, 6), (0, 4)]));
+        // Disjoint along one dim: refused, operand unchanged.
+        let mut a = bx(&[(0, 4), (0, 4)]);
+        assert!(!box_union_assign(&mut a, &bx(&[(5, 6), (0, 4)])));
+        assert_eq!(a, bx(&[(0, 4), (0, 4)]));
+        // Two differing dims (L-shape): refused.
+        let mut a = bx(&[(0, 4), (0, 4)]);
+        assert!(!box_union_assign(&mut a, &bx(&[(2, 6), (2, 6)])));
+        // Empty operands are canonical no-ops / assignments.
+        let mut a = IBox::empty(2);
+        assert!(box_union_assign(&mut a, &bx(&[(1, 3), (2, 5)])));
+        assert_eq!(a, bx(&[(1, 3), (2, 5)]));
+        assert!(box_union_assign(&mut a, &IBox::empty(2)));
+        assert_eq!(a, bx(&[(1, 3), (2, 5)]));
+    }
+
+    #[test]
+    fn minus_matches_region_subtraction_where_it_accepts() {
+        let cases = [
+            (bx(&[(0, 8), (0, 8)]), bx(&[(0, 8), (0, 3)])),  // one-sided
+            (bx(&[(0, 8), (0, 8)]), bx(&[(0, 8), (5, 12)])), // one-sided hi
+            (bx(&[(0, 8), (0, 8)]), bx(&[(0, 8), (0, 8)])),  // all
+            (bx(&[(0, 8), (0, 8)]), bx(&[(10, 12), (0, 8)])), // disjoint
+            (bx(&[(0, 8)]), bx(&[(2, 4)])),                  // 1-D interior: refuse
+            (bx(&[(0, 8), (0, 8)]), bx(&[(2, 4), (2, 4)])),  // corner: refuse
+        ];
+        for (a, b) in &cases {
+            let mut out = IBox::empty(0);
+            let mut reg = Region::from_box(a.clone());
+            reg.subtract_box_assign(b);
+            if box_minus_into(a, b, &mut out) {
+                assert_eq!(out.volume(), reg.volume(), "{a:?} - {b:?}");
+                assert!(reg.set_eq(&Region::from_box(out.clone())));
+            } else {
+                // Refusals must be genuine multi-box differences.
+                assert!(reg.complexity() > 1, "{a:?} - {b:?} was a box");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_volume_and_intersect_agree() {
+        let a = bx(&[(0, 8), (2, 6)]);
+        let b = bx(&[(4, 12), (0, 4)]);
+        assert_eq!(box_overlap_volume(&a, &b), 4 * 2);
+        let mut c = a.clone();
+        box_intersect_assign(&mut c, &b);
+        assert_eq!(c.volume(), 8);
+        // Empty intersection canonicalizes.
+        let mut c = a.clone();
+        box_intersect_assign(&mut c, &bx(&[(20, 30), (0, 4)]));
+        assert!(c.is_empty());
+        assert_eq!(c, IBox::empty(2));
+        assert_eq!(box_overlap_volume(&a, &bx(&[(20, 30), (0, 4)])), 0);
+    }
+
+    #[test]
+    fn box_needs_match_region_needs_on_chains() {
+        for fs in [
+            workloads::conv_conv(14, 4),
+            workloads::conv_conv_conv(12, 4),
+            workloads::pwise_dwise_pwise(12, 3),
+            workloads::fc_fc(24, 8),
+            workloads::self_attention(1, 2, 12, 4),
+        ] {
+            let domains: Vec<IBox> = fs.einsums.iter().map(|e| e.domain()).collect();
+            let mut win = fs.last().domain();
+            // A proper sub-window along the first dim keeps halos in play.
+            win.dims[0] = Interval::new(0, win.dims[0].hi.div_ceil(2).max(1));
+            let mut data = Vec::new();
+            let (mut t1, mut t2) = (IBox::empty(0), IBox::empty(0));
+            assert!(
+                box_needs_into(&fs, &win, &domains, &mut data, &mut t1, &mut t2),
+                "{}: box sweep refused a chain",
+                fs.name
+            );
+            let reg = window_needs(&fs, &win);
+            for (x, tn) in fs.tensors.iter().enumerate() {
+                assert!(
+                    reg.data[x].set_eq(&Region::from_box(data[x].clone())),
+                    "{} tensor {}: box {:?} != region {}",
+                    fs.name,
+                    tn.name,
+                    data[x],
+                    reg.data[x]
+                );
+            }
+        }
+    }
+}

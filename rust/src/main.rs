@@ -4,6 +4,7 @@
 //!   validate   [--design <name>] [--full] [--json]   reproduce the validation tables
 //!   casestudy  <fig14|fig15|fig16|fig17|fig18> [--full]
 //!   analyze    --config <file.json> | --workload <spec> --schedule <R,R,..> --tiles <n,n,..> [...]
+//!              [--explain [--json]]   per-level evaluation-path diagnostics
 //!   search     --config <file.json> | --workload <spec> [--algorithm ..] [--objective ..] [--seed n]
 //!   network    --config <file.json> | --network <name> [--max-seg n] [--cuts 2,4,..]
 //!              [--pareto [--objectives latency,energy,..] [--max-front n]]
@@ -64,7 +65,7 @@ fn run(args: &[String]) -> i32 {
                 "looptree — fused-layer dataflow design-space exploration\n\n\
                  usage:\n  looptree validate [--design depfin|fused-cnn|isaac|pipelayer|flat] [--full] [--json]\n  \
                  looptree casestudy <fig14|fig15|fig16|fig17|fig18> [--full]\n  \
-                 looptree analyze --config cfg.json [--json] | --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim]\n  \
+                 looptree analyze --config cfg.json [--json] | --workload conv_conv:28x64 --schedule P2,Q2 --tiles 4,4 [--pipeline] [--sim] [--explain]\n  \
                  looptree search --config cfg.json [--json] | --workload conv_conv:28x64 [--algorithm exhaustive|random|annealing|genetic] [--objective latency|energy|edp|capacity|offchip|feasible-edp] [--seed n]\n  \
                  looptree network --config cfg.json [--json] | --network resnet18|resnet18_chain|mobilenetv2|vgg16|bert[:B,H,T,E] [--max-seg n] [--cuts 2,4,..] [--algorithm ..] [--objective ..] [--seed n] [--glb-kib n] [--pareto [--objectives latency,energy,capacity,offchip] [--max-front n]]\n  \
                  looptree lint --config cfg.json [--json]\n  \
@@ -194,6 +195,9 @@ fn cmd_analyze(args: &[String]) -> i32 {
             return 2;
         }
     };
+    if flag(args, "--explain") {
+        return cmd_analyze_explain(args, &cfg, &ev);
+    }
     match ev.evaluate(&cfg.mapping) {
         Ok(m) => {
             if flag(args, "--json") {
@@ -281,6 +285,99 @@ fn cmd_analyze(args: &[String]) -> i32 {
     }
 }
 
+/// `looptree analyze --explain`: evaluate once and report which evaluation
+/// paths fired — symbolic or region walk, per-level prover verdicts, jump
+/// and walk counters — as a text table or, with `--json`, an `explain`
+/// object alongside the usual metrics.
+fn cmd_analyze_explain(args: &[String], cfg: &AnalyzeConfig, ev: &Evaluator) -> i32 {
+    let ex = match ev.explain(&cfg.mapping) {
+        Ok(ex) => ex,
+        Err(e) => {
+            eprintln!("evaluation failed: {e}");
+            return 1;
+        }
+    };
+    if flag(args, "--json") {
+        let levels = Json::Arr(
+            ex.levels
+                .iter()
+                .map(|l| {
+                    Json::Obj(
+                        [
+                            ("level".to_string(), Json::Num(l.level as f64)),
+                            ("dim".to_string(), Json::Str(l.dim.clone())),
+                            ("tile".to_string(), Json::Num(l.tile as f64)),
+                            ("children".to_string(), Json::Num(l.children as f64)),
+                            ("proven".to_string(), Json::Bool(l.proven)),
+                            ("reason".to_string(), Json::Str(l.reason.clone())),
+                        ]
+                        .into_iter()
+                        .collect(),
+                    )
+                })
+                .collect(),
+        );
+        let explain = Json::Obj(
+            [
+                ("symbolic".to_string(), Json::Bool(ex.symbolic)),
+                (
+                    "skip_reason".to_string(),
+                    match &ex.skip_reason {
+                        Some(r) => Json::Str(r.clone()),
+                        None => Json::Null,
+                    },
+                ),
+                ("levels".to_string(), levels),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let mut doc = cfg.to_json();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("metrics".into(), ex.metrics.to_json());
+            o.insert("explain".into(), explain);
+        }
+        println!("{}", doc.pretty());
+        return 0;
+    }
+    let fs = &cfg.workload;
+    println!("workload: {}", fs.name);
+    println!("schedule: {}", cfg.mapping.schedule_string(fs));
+    if ex.symbolic {
+        println!("path: symbolic (closed-form box walk covered the whole evaluation)");
+    } else {
+        println!(
+            "path: region walk — {}",
+            ex.skip_reason.as_deref().unwrap_or("symbolic walk skipped")
+        );
+    }
+    let p = &ex.metrics.path;
+    println!(
+        "jumps: {} proven, {} certified; {} of {} inter-layer iterations walked",
+        p.proven_jumps, p.certified_jumps, p.walked_iterations, ex.metrics.iterations
+    );
+    if ex.levels.is_empty() {
+        println!("(untiled mapping: no schedule levels)");
+    } else {
+        let mut table = looptree::util::table::Table::new(&[
+            "level", "dim", "tile", "children", "proven", "reason",
+        ]);
+        for l in &ex.levels {
+            table.row(&[
+                l.level.to_string(),
+                l.dim.clone(),
+                l.tile.to_string(),
+                l.children.to_string(),
+                l.proven.to_string(),
+                if l.reason.is_empty() { "-".into() } else { l.reason.clone() },
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    println!("{}", ex.metrics.summary());
+    0
+}
+
 /// Build a search request from either `--config` or the legacy flags.
 fn search_config(args: &[String]) -> Result<SearchConfig, String> {
     if let Some(path) = opt(args, "--config") {
@@ -344,6 +441,10 @@ fn cmd_search(args: &[String]) -> i32 {
                                 Json::Num(r.evaluated.len() as f64),
                             ),
                             ("pruned".to_string(), Json::Num(r.pruned as f64)),
+                            (
+                                "symbolic_evals".to_string(),
+                                Json::Num(r.symbolic_evals as f64),
+                            ),
                         ]
                         .into_iter()
                         .collect(),
@@ -354,9 +455,10 @@ fn cmd_search(args: &[String]) -> i32 {
                 return 0;
             }
             println!(
-                "evaluated {} mappings ({} pruned); best ({}) = {:.4e}",
+                "evaluated {} mappings ({} pruned, {} via the symbolic walk); best ({}) = {:.4e}",
                 r.evaluated.len(),
                 r.pruned,
+                r.symbolic_evals,
                 cfg.search.objective.name(),
                 r.best.score
             );

@@ -1,7 +1,8 @@
 //! The model evaluation engine: walks the inter-layer schedule
-//! algebraically, accumulating all metrics — with a steady-state
-//! tile-classification fast path that makes evaluation cost scale with the
-//! number of *distinct* tile shapes instead of the total tile count.
+//! algebraically, accumulating all metrics — through a three-tier path
+//! hierarchy that makes evaluation cost scale with the number of schedule
+//! levels (symbolic), or the number of *distinct* tile shapes (jumps),
+//! instead of the total tile count (reference walk).
 //!
 //! # Tile classification (paper §III-E, imperfect factorization)
 //!
@@ -20,35 +21,66 @@
 //!   the last tile happens to match the steady class, but it is evaluated
 //!   explicitly either way.)
 //!
-//! The walk recurses over levels. At each level the engine evaluates the
-//! first children explicitly while *certifying* steady state: two
-//! consecutive children whose exit availability states are exact translates
-//! of each other (per tensor, box-for-box). All region algebra in the
-//! backward pass is translation-equivariant — images and preimages of
-//! translated boxes are translated images (`poly::affine` never clips on
-//! *surjective* producer chains, which the session verifies once) — so once
-//! two consecutive children match, every further interior child is the
-//! translate of the last one: its metric contributions are identical
-//! integers and its exit state is one more translate. The engine then
-//! *jumps*: contributions are added `n`-fold, availability is shifted in
-//! closed form, and the pipeline recurrence is advanced by an exact
-//! max-plus [`super::latency::TransferMatrix`] power. The certification is
-//! purely observational, so any mapping that never reaches steady state
-//! (degenerate counts, monotone-growth retention-0 tensors under a moving
-//! schedule, non-surjective chains) silently degrades to the exhaustive
-//! reference walk with identical results.
+//! # The three evaluation tiers
 //!
-//! All quantities accumulated during the walk are integers; derived `f64`
-//! metrics (energy, NoC hop-words) are computed once at the end from the
-//! integer totals, which is what makes the fast path bit-identical to
+//! **Tier 1 — symbolic box walk** (`sym_level`/`sym_leaf`/`sym_backward`).
+//! On surjective chains with every partition on the sink's output ranks,
+//! every set the walk manipulates — per-tensor availability, needs, fresh
+//! data — is provably a single axis-aligned box, so the whole backward pass
+//! collapses to the closed-form interval arithmetic of
+//! [`crate::analysis::symbolic`]: per level, the first/steady/ragged-last
+//! tile footprints and per-tensor transfer/reuse/occupancy counts are
+//! derived from the composed `AffineMap`s in O(dims) per set operation,
+//! with no region algebra at all. The box calculus is *exact or refuses*:
+//! the moment any operation would leave single-box form the walk bails out
+//! and the evaluation restarts on tier 2 — so tier 1 is an accelerator,
+//! never an approximation. Combined with the steady-state jumps below, a
+//! provable mapping evaluates in O(levels) leaf visits.
+//!
+//! **Tier 2 — steady-state jumps over the region walk.** The walk recurses
+//! over levels on general [`crate::poly::Region`] unions. At each level the
+//! engine skips interior children either on a static proof
+//! ([`crate::analysis::prove_levels`]) or by *certifying* steady state
+//! empirically: two consecutive children whose exit availability states are
+//! exact translates of each other (per tensor, box-for-box). All region
+//! algebra in the backward pass is translation-equivariant — images and
+//! preimages of translated boxes are translated images (`poly::affine`
+//! never clips on *surjective* producer chains, which the session verifies
+//! once) — so once two consecutive children match, every further interior
+//! child is the translate of the last one: its metric contributions are
+//! identical integers and its exit state is one more translate. The engine
+//! then *jumps*: contributions are added `n`-fold, availability is shifted
+//! in closed form, and the pipeline recurrence is advanced by an exact
+//! max-plus [`super::latency::TransferMatrix`] power.
+//!
+//! **Tier 3 — reference walk.** Certification is purely observational, so
+//! any mapping that never reaches steady state (degenerate counts,
+//! monotone-growth retention-0 tensors under a moving schedule,
+//! non-surjective chains) silently degrades to the exhaustive box-by-box
+//! walk with identical results. [`EvalOptions::force_reference`] pins an
+//! evaluation to this tier; it remains the oracle in the property tests.
+//!
+//! Which tiers fired is reported in [`Metrics::path`]
+//! ([`super::PathCounts`]): whether the symbolic walk covered the whole
+//! evaluation, how many jumps were proven vs. empirically certified, and
+//! how many leaf iterations were actually walked.
+//!
+//! All quantities accumulated during any tier are integers, flowing through
+//! the *shared* [`accumulate_leaf`] accumulation; derived `f64` metrics
+//! (energy, NoC hop-words) are computed once at the end from the integer
+//! totals, which is what makes every tier bit-identical to
 //! [`Evaluator::evaluate_reference`](super::Evaluator::evaluate_reference)
 //! rather than merely close.
 
 use super::backward::{iter_backward_into, window_needs_into, BackwardScratch, WindowNeeds};
 use super::intra::operand_slot_counts;
 use super::latency::{memory_cycles, PipelineLatency, TransferMatrix};
-use super::metrics::{EnergyBreakdown, Metrics};
+use super::metrics::{EnergyBreakdown, Metrics, PathCounts};
 use super::walk::TileWindows;
+use crate::analysis::symbolic::{
+    box_assign, box_intersect_assign, box_minus_into, box_needs_into, box_overlap_volume,
+    box_reset_empty, box_union_assign,
+};
 use crate::analysis::{objective_floors, prove_levels, LevelProof, ObjectiveFloors, SessionStatics};
 use crate::arch::{energy, Arch};
 use crate::einsum::{FusionSet, TensorKind};
@@ -65,6 +97,10 @@ pub struct EvalOptions {
     /// fast path). Results are bit-identical either way; this exists for
     /// verification and benchmarking.
     pub force_reference: bool,
+    /// Disable the tier-1 symbolic box walk (keep the tier-2 region walk
+    /// with steady-state jumps). Results are bit-identical either way; this
+    /// exists for verification and benchmarking.
+    pub no_symbolic: bool,
 }
 
 /// Evaluate one mapping. Errors on structurally invalid inputs; capacity
@@ -86,7 +122,15 @@ pub fn evaluate(
     let intra = resolve_intra(fs, arch, opts.intra.as_deref())?;
     let cache = SessionCache::build(fs, arch, &intra);
     let mut scratch = EvalScratch::default();
-    evaluate_prevalidated(fs, arch, mapping, &cache, &mut scratch, opts.force_reference)
+    evaluate_prevalidated(
+        fs,
+        arch,
+        mapping,
+        &cache,
+        &mut scratch,
+        opts.force_reference,
+        opts.no_symbolic,
+    )
 }
 
 /// Check (or derive defaults for) the per-layer intra-layer mappings.
@@ -162,6 +206,13 @@ pub(crate) struct SessionCache {
     /// Dims of the last layer referenced by its output access; partitions on
     /// any other dim revisit output tiles (reduction-rank partitioning).
     out_dims: Vec<usize>,
+    /// Whether the einsums form a pure chain (each output consumed by
+    /// exactly the next layer). Gates the symbolic box walk: on chains the
+    /// backward needs sweep provably stays single-box per tensor.
+    chain: bool,
+    /// Producing layer per tensor (`usize::MAX` = off-chip source), for the
+    /// symbolic backward pass's consumer-to-producer routing.
+    producer: Vec<usize>,
     /// Symbolic footprint-movement structure (powers the static steady-state
     /// prover, which replaces the empirical certification where it succeeds).
     pub(crate) statics: SessionStatics,
@@ -216,6 +267,11 @@ impl SessionCache {
         let out_dims = statics.out_dims.clone();
         let fanout = fanouts(intra, arch);
         let floors = objective_floors(fs, &fanout, &op_energy);
+        let chain = fs.is_chain();
+        let mut producer = vec![usize::MAX; fs.tensors.len()];
+        for (t, e) in fs.einsums.iter().enumerate() {
+            producer[e.output.tensor.0] = t;
+        }
 
         SessionCache {
             layer_inputs,
@@ -227,6 +283,8 @@ impl SessionCache {
             domains,
             surjective,
             out_dims,
+            chain,
+            producer,
             statics,
             floors,
         }
@@ -331,6 +389,15 @@ struct CacheSlot {
     needs: WindowNeeds,
 }
 
+/// The symbolic walk's counterpart of [`CacheSlot`]: per-tensor needs
+/// *boxes* of one level-`j` prefix window.
+#[derive(Debug, Clone, Default)]
+struct SymSlot {
+    valid: bool,
+    prefix: Vec<i64>,
+    data: Vec<IBox>,
+}
+
 /// Reusable evaluation state. Owned (pooled) by the [`super::Evaluator`]
 /// session so that the per-iteration hot path of the walk — availability
 /// regions, backward-pass regions, window boxes, the iteration index, and
@@ -360,6 +427,35 @@ pub(crate) struct EvalScratch {
     acc_snap: Vec<Accum>,
     /// Per tensor: derived translation offsets of a certified run.
     delta: Vec<Vec<i64>>,
+
+    // ---- symbolic (tier-1) box-walk shadows of the region state ----
+    /// Per-tensor availability as a single box (output-fmap entries unused:
+    /// under the `out_exempt` gate distinct leaves write disjoint tiles, so
+    /// output availability never feeds back into any metric).
+    sym_avail: Vec<IBox>,
+    /// Per-tensor pending producer requests (`BackwardScratch::pending`'s
+    /// box twin).
+    sym_pend: Vec<IBox>,
+    /// Retention-window needs boxes per level prefix.
+    sym_slots: Vec<SymSlot>,
+    /// Per level: availability snapshot at the end of the previous child.
+    sym_exit: Vec<Vec<IBox>>,
+    /// Per-tensor availability volumes of the current leaf, filled by
+    /// whichever walk ran it and read by the shared [`accumulate_leaf`].
+    occ_vol: Vec<i64>,
+    /// Box temporaries of the symbolic backward pass.
+    sym_ops: IBox,
+    sym_need: IBox,
+    sym_fr: IBox,
+    sym_fr2: IBox,
+
+    // ---- per-path fire counters (reported via `Metrics::path`) ----
+    /// Steady-state jumps taken on a static proof.
+    ctr_proven: i64,
+    /// Steady-state jumps taken after empirical certification.
+    ctr_certified: i64,
+    /// Leaf iterations actually walked.
+    ctr_walked: i64,
 }
 
 impl EvalScratch {
@@ -390,6 +486,25 @@ impl EvalScratch {
         }
         self.acc_snap.resize_with(k, Accum::default);
         self.delta.resize_with(nt, Vec::new);
+
+        self.sym_avail.resize_with(nt, || IBox::empty(0));
+        self.sym_pend.resize_with(nt, || IBox::empty(0));
+        for (x, t) in fs.tensors.iter().enumerate() {
+            box_reset_empty(&mut self.sym_avail[x], t.ndim());
+            box_reset_empty(&mut self.sym_pend[x], t.ndim());
+        }
+        self.sym_slots.resize_with(k + 1, SymSlot::default);
+        for slot in &mut self.sym_slots {
+            slot.valid = false;
+        }
+        self.sym_exit.resize_with(k, Vec::new);
+        for snap in &mut self.sym_exit {
+            snap.resize_with(nt, || IBox::empty(0));
+        }
+        reset_counts(&mut self.occ_vol, nt);
+        self.ctr_proven = 0;
+        self.ctr_certified = 0;
+        self.ctr_walked = 0;
     }
 }
 
@@ -428,6 +543,7 @@ pub(crate) fn evaluate_prevalidated(
     cache: &SessionCache,
     scratch: &mut EvalScratch,
     force_reference: bool,
+    no_symbolic: bool,
 ) -> Result<Metrics, String> {
     mapping.validate(fs)?;
 
@@ -466,8 +582,27 @@ pub(crate) fn evaluate_prevalidated(
         out_exempt,
         proof,
     };
-    eval_level(&cx, scratch, 0, None);
-    Ok(finalize(&cx, arch, scratch))
+    // Tier 1: the symbolic box walk, gated on the structural facts that
+    // keep every set single-box (surjective chain, all partitions on
+    // output ranks). A runtime refusal anywhere in the box calculus aborts
+    // the whole walk; the evaluation then restarts cleanly on the region
+    // walk, so a bail costs one partial pass but never exactness.
+    let symbolic_ok = fast && !no_symbolic && cache.chain && cx.out_exempt;
+    let symbolic = symbolic_ok && sym_level(&cx, scratch, 0, None);
+    if !symbolic {
+        if symbolic_ok {
+            scratch.prepare(fs, cache, k, pipeline);
+        }
+        eval_level(&cx, scratch, 0, None);
+    }
+    let mut m = finalize(&cx, arch, scratch);
+    m.path = PathCounts {
+        symbolic,
+        proven_jumps: scratch.ctr_proven,
+        certified_jumps: scratch.ctr_certified,
+        walked_iterations: scratch.ctr_walked,
+    };
+    Ok(m)
 }
 
 /// Walk all children of schedule level `l` (leaf iterations when `l == k`).
@@ -507,6 +642,7 @@ fn eval_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>
         sc.idx[l] = 1;
         eval_level(cx, sc, l + 1, Some(l));
         let rec = if cx.pipeline { sc.rec_stack.pop() } else { None };
+        sc.ctr_proven += 1;
         let n_skip = c - 3;
         {
             let (acc, snaps) = (&mut sc.acc, &sc.acc_snap);
@@ -553,6 +689,7 @@ fn eval_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>
         let rec = if cx.pipeline { sc.rec_stack.pop() } else { None };
         next_child = rep + 1;
         if certify(cx, sc, l) {
+            sc.ctr_certified += 1;
             let n_skip = (c - 2) - rep;
             {
                 let (acc, snaps) = (&mut sc.acc, &sc.acc_snap);
@@ -634,7 +771,6 @@ fn certify(cx: &Ctx, sc: &mut EvalScratch, l: usize) -> bool {
 /// accumulation. Mirrors the paper's per-tile analysis (Fig 9/10).
 fn eval_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) {
     let fs = cx.fs;
-    sc.acc.iterations += 1;
 
     // 1) Retention-window invalidation: a tensor retained at level j keeps
     //    only data inside its new level-j window once any level shallower
@@ -684,7 +820,25 @@ fn eval_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) {
     let out_tile_vol = sc.out_box.volume();
     iter_backward_into(fs, &sc.win, &cx.cache.domains, &mut sc.avail, &mut sc.bw);
 
-    // 3) Accumulate metrics (integers only; see module docs).
+    // 3) Accumulate (shared with the symbolic walk, which fills `occ_vol`
+    //    from its availability boxes instead).
+    for x in 0..cx.nt {
+        sc.occ_vol[x] = sc.avail[x].volume();
+    }
+    accumulate_leaf(cx, sc, out_tile_vol);
+}
+
+/// Metric accumulation of one inter-layer iteration — the single writer of
+/// the integer accumulators for **both** the region walk and the symbolic
+/// box walk, so the two tiers cannot diverge in accounting. Consumes the
+/// backward results in `sc.bw` (op regions and per-tensor fresh volumes)
+/// and the per-tensor availability volumes in `sc.occ_vol` (output-fmap
+/// entries unused: outputs occupy their per-iteration drain tile,
+/// `out_tile_vol`).
+fn accumulate_leaf(cx: &Ctx, sc: &mut EvalScratch, out_tile_vol: i64) {
+    let fs = cx.fs;
+    sc.acc.iterations += 1;
+    sc.ctr_walked += 1;
     for t in 0..cx.n {
         let ops = sc.bw.ops[t].volume();
         sc.acc.op_counts[t] += ops;
@@ -747,7 +901,7 @@ fn eval_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) {
         let occ = if fs.tensors[x].kind == TensorKind::OutputFmap {
             out_tile_vol
         } else {
-            sc.avail[x].volume()
+            sc.occ_vol[x]
         };
         let eff_occ = if cx.pipeline && fs.tensors[x].kind == TensorKind::Intermediate {
             // Next tile's production overlaps this tile's consumption.
@@ -760,6 +914,326 @@ fn eval_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) {
         total_occ += occ;
     }
     sc.occ_peak = sc.occ_peak.max(total_occ);
+}
+
+// --------------------------------------------------- symbolic (tier 1) ----
+
+/// Tier-1 twin of [`eval_level`]: the same recursion, the same proven and
+/// empirically-certified jump arithmetic, with every availability set held
+/// as a single box. Returns `false` the moment any box operation refuses
+/// (set left single-box form); the caller then re-prepares the scratch and
+/// reruns the whole evaluation on the region walk, so a bail never loses
+/// exactness — only the time already spent.
+fn sym_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>) -> bool {
+    if l == cx.k {
+        return sym_leaf(cx, sc, entry_adv);
+    }
+    let c = cx.counts[l];
+    sc.idx[l] = 0;
+    if !sym_level(cx, sc, l + 1, entry_adv) {
+        return false;
+    }
+    if !(cx.fast && c >= 4) {
+        for i in 1..c {
+            sc.idx[l] = i;
+            if !sym_level(cx, sc, l + 1, Some(l)) {
+                return false;
+            }
+        }
+        return true;
+    }
+
+    if let Some(proof) = cx.proof[l].as_ref() {
+        // Statically certified level — same jump as [`eval_level`]'s.
+        {
+            let (acc, snaps) = (&sc.acc, &mut sc.acc_snap);
+            acc.save_into(&mut snaps[l]);
+        }
+        if cx.pipeline {
+            sc.rec_stack.push(TransferMatrix::identity(cx.n));
+        }
+        sc.idx[l] = 1;
+        if !sym_level(cx, sc, l + 1, Some(l)) {
+            return false;
+        }
+        let rec = if cx.pipeline { sc.rec_stack.pop() } else { None };
+        sc.ctr_proven += 1;
+        let n_skip = c - 3;
+        {
+            let (acc, snaps) = (&mut sc.acc, &sc.acc_snap);
+            acc.add_scaled(&snaps[l], n_skip);
+        }
+        if let Some(rec) = rec {
+            let op = rec.power(n_skip);
+            sc.pipe.apply_transfer(&op);
+            for outer in sc.rec_stack.iter_mut() {
+                outer.compose_with(&op);
+            }
+        }
+        for (x, d) in proof.deltas.iter().enumerate() {
+            let sd = &mut sc.delta[x];
+            sd.clear();
+            sd.extend(d.iter().map(|&v| v * n_skip));
+            if !sc.sym_avail[x].is_empty() {
+                sc.sym_avail[x].shift_assign(&sc.delta[x]);
+            }
+        }
+        sc.idx[l] = c - 1;
+        return sym_level(cx, sc, l + 1, Some(l));
+    }
+
+    // Empirical steady-state certification on the availability boxes —
+    // same protocol as [`eval_level`]'s, snapshotting boxes instead of
+    // regions.
+    let max_rep = 2.min(c - 3);
+    let mut next_child = 1i64;
+    for rep in 1..=max_rep {
+        for (x, snap) in sc.sym_exit[l].iter_mut().enumerate() {
+            box_assign(snap, &sc.sym_avail[x]);
+        }
+        {
+            let (acc, snaps) = (&sc.acc, &mut sc.acc_snap);
+            acc.save_into(&mut snaps[l]);
+        }
+        if cx.pipeline {
+            sc.rec_stack.push(TransferMatrix::identity(cx.n));
+        }
+        sc.idx[l] = rep;
+        if !sym_level(cx, sc, l + 1, Some(l)) {
+            return false;
+        }
+        let rec = if cx.pipeline { sc.rec_stack.pop() } else { None };
+        next_child = rep + 1;
+        if sym_certify(cx, sc, l) {
+            sc.ctr_certified += 1;
+            let n_skip = (c - 2) - rep;
+            {
+                let (acc, snaps) = (&mut sc.acc, &sc.acc_snap);
+                acc.add_scaled(&snaps[l], n_skip);
+            }
+            if let Some(rec) = rec {
+                let op = rec.power(n_skip);
+                sc.pipe.apply_transfer(&op);
+                for outer in sc.rec_stack.iter_mut() {
+                    outer.compose_with(&op);
+                }
+            }
+            for x in 0..cx.nt {
+                for d in sc.delta[x].iter_mut() {
+                    *d *= n_skip;
+                }
+                if !sc.sym_avail[x].is_empty() {
+                    sc.sym_avail[x].shift_assign(&sc.delta[x]);
+                }
+            }
+            next_child = c - 1;
+            break;
+        }
+    }
+    for i in next_child..c {
+        sc.idx[l] = i;
+        if !sym_level(cx, sc, l + 1, Some(l)) {
+            return false;
+        }
+    }
+    true
+}
+
+/// [`certify`] on the availability boxes: consecutive children's exit boxes
+/// must be rigid translates per tensor. Box emptiness is canonical here, so
+/// the comparison is representation-independent by construction.
+fn sym_certify(cx: &Ctx, sc: &mut EvalScratch, l: usize) -> bool {
+    for x in 0..cx.nt {
+        let nd = cx.fs.tensors[x].ndim();
+        let d = &mut sc.delta[x];
+        d.clear();
+        d.resize(nd, 0);
+        if cx.out_exempt && cx.fs.tensors[x].kind == TensorKind::OutputFmap {
+            // Same advance as [`certify`]'s: the output frontier moves one
+            // tile per child (the symbolic walk never materializes it, so
+            // the delta is recorded but shifts nothing).
+            let part = &cx.mapping.partitions[l];
+            for (o, expr) in cx.fs.last().output.map.exprs.iter().enumerate() {
+                if expr.as_identity() == Some(part.dim) {
+                    d[o] = part.tile;
+                }
+            }
+            continue;
+        }
+        let prev = &sc.sym_exit[l][x];
+        let cur = &sc.sym_avail[x];
+        match (prev.is_empty(), cur.is_empty()) {
+            (true, true) => continue, // both empty: offset 0
+            (false, false) => {}
+            _ => return false,
+        }
+        for dim in 0..nd {
+            d[dim] = cur.dims[dim].lo - prev.dims[dim].lo;
+            if cur.dims[dim].hi - prev.dims[dim].hi != d[dim] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Tier-1 twin of [`eval_leaf`]: retention invalidation and the backward
+/// pass on boxes, then the shared [`accumulate_leaf`]. Returns `false` on
+/// any box-calculus refusal.
+fn sym_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) -> bool {
+    let fs = cx.fs;
+
+    // 1) Retention-window invalidation — [`eval_leaf`] step 1 with the
+    //    needs boxes of the prefix window in place of needs regions.
+    for x in 0..cx.nt {
+        if fs.tensors[x].kind == TensorKind::OutputFmap {
+            continue;
+        }
+        let j = cx.retention[x];
+        if j == 0 {
+            continue; // whole tensor retained; never invalidated
+        }
+        let changed = match adv {
+            None => true,
+            Some(a) => a < j,
+        };
+        if !changed {
+            continue;
+        }
+        let prefix = &sc.idx[0..j];
+        if !(sc.sym_slots[j].valid && sc.sym_slots[j].prefix == prefix) {
+            cx.tw.window_into(prefix, &mut sc.prefix_win);
+            let slot = &mut sc.sym_slots[j];
+            if !box_needs_into(
+                fs,
+                &sc.prefix_win,
+                &cx.cache.domains,
+                &mut slot.data,
+                &mut sc.sym_ops,
+                &mut sc.sym_need,
+            ) {
+                return false;
+            }
+            slot.prefix.clear();
+            slot.prefix.extend_from_slice(prefix);
+            slot.valid = true;
+        }
+        if !sc.sym_avail[x].is_empty() {
+            box_intersect_assign(&mut sc.sym_avail[x], &sc.sym_slots[j].data[x]);
+        }
+    }
+
+    // 2) Backward pass with availability subtraction, on boxes.
+    cx.tw.window_into(&sc.idx, &mut sc.win);
+    fs.last().output.map.image_box_into(&sc.win, &mut sc.out_box);
+    let out_tile_vol = sc.out_box.volume();
+    if !sym_backward(cx, sc) {
+        return false;
+    }
+
+    // 3) Shared accumulation, reading availability volumes from the boxes.
+    for x in 0..cx.nt {
+        sc.occ_vol[x] = sc.sym_avail[x].volume();
+    }
+    accumulate_leaf(cx, sc, out_tile_vol);
+    true
+}
+
+/// Box-specialized mirror of [`iter_backward_into`]: the same reverse
+/// sweep, the same accounting order, with every region operation replaced
+/// by its box-calculus counterpart — writing op regions (single-box) and
+/// fresh volumes into `sc.bw` so [`accumulate_leaf`] consumes identical
+/// state from either walk. Returns `false` the moment any set would leave
+/// single-box form.
+///
+/// One deliberate divergence: the final output tensor's availability is
+/// never materialized. Under the `out_exempt` gate distinct leaves write
+/// pairwise-disjoint output tiles (no partition sits on a reduction rank,
+/// so no output tile is ever revisited), hence `need − avail = need`
+/// identically and the whole output frontier — a union of many boxes the
+/// calculus could not hold — contributes nothing to any metric.
+fn sym_backward(cx: &Ctx, sc: &mut EvalScratch) -> bool {
+    let fs = cx.fs;
+    let n = cx.n;
+    sc.bw.ops.resize_with(n, || Region::empty(0));
+    for (t, e) in fs.einsums.iter().enumerate() {
+        sc.bw.ops[t].reset(e.ndim());
+    }
+    sc.bw.fresh.clear();
+    sc.bw.fresh.resize(cx.nt, 0);
+    for (x, tn) in fs.tensors.iter().enumerate() {
+        box_reset_empty(&mut sc.sym_pend[x], tn.ndim());
+    }
+
+    for t in (0..n).rev() {
+        let e = &fs.einsums[t];
+        if t == n - 1 {
+            box_assign(&mut sc.sym_ops, &sc.win);
+        } else {
+            // Ops = preimage of the fresh output this layer's consumers
+            // (all processed already) requested via the pending boxes.
+            e.output.map.preimage_identity_box_into(
+                &sc.sym_pend[e.output.tensor.0],
+                &cx.cache.domains[t],
+                &mut sc.sym_ops,
+            );
+        }
+        if sc.sym_ops.is_empty() {
+            continue;
+        }
+        sc.bw.ops[t].assign_box(&sc.sym_ops);
+
+        // Freshly produced output data.
+        let out = e.output.tensor.0;
+        e.output.map.image_box_into(&sc.sym_ops, &mut sc.sym_need);
+        if fs.tensors[out].kind == TensorKind::OutputFmap {
+            // Disjoint tiles (see above): everything needed is fresh.
+            sc.bw.fresh[out] += sc.sym_need.volume();
+        } else {
+            if !box_minus_into(&sc.sym_need, &sc.sym_avail[out], &mut sc.sym_fr) {
+                return false;
+            }
+            sc.bw.fresh[out] += sc.sym_fr.volume();
+            if !box_union_assign(&mut sc.sym_avail[out], &sc.sym_fr) {
+                return false;
+            }
+        }
+
+        // Input needs: fresh parts are fetched (off-chip sources) or routed
+        // to the upstream producer (intermediates).
+        for acc in &e.inputs {
+            let x = acc.tensor.0;
+            acc.map.image_box_into(&sc.sym_ops, &mut sc.sym_need);
+            let p = cx.cache.producer[x];
+            if p != usize::MAX {
+                debug_assert!(p < t, "fusion set is not in topological order");
+                if !box_minus_into(&sc.sym_need, &sc.sym_avail[x], &mut sc.sym_fr) {
+                    return false;
+                }
+                if !sc.sym_pend[x].is_empty() {
+                    // Sibling consumers already requested part of this (only
+                    // reachable off-chain; the chain gate makes this dead,
+                    // but mirroring it keeps the twin faithful).
+                    if !box_minus_into(&sc.sym_fr, &sc.sym_pend[x], &mut sc.sym_fr2) {
+                        return false;
+                    }
+                    std::mem::swap(&mut sc.sym_fr, &mut sc.sym_fr2);
+                }
+                if !box_union_assign(&mut sc.sym_pend[x], &sc.sym_fr) {
+                    return false;
+                }
+            } else {
+                // Off-chip source: `|need − avail|` is exact for any two
+                // boxes, and `avail ∪ (need − avail) = avail ∪ need`.
+                sc.bw.fresh[x] +=
+                    sc.sym_need.volume() - box_overlap_volume(&sc.sym_need, &sc.sym_avail[x]);
+                if !box_union_assign(&mut sc.sym_avail[x], &sc.sym_need) {
+                    return false;
+                }
+            }
+        }
+    }
+    true
 }
 
 /// Assemble [`Metrics`] from the walk's integer accumulators. Shared by the

@@ -19,6 +19,41 @@ use crate::einsum::FusionSet;
 use crate::mapping::{InterLayerMapping, IntraLayerMapping};
 use std::sync::Mutex;
 
+/// Per-schedule-level diagnostic of [`Evaluator::explain`]: whether the
+/// static prover certified the level's steady-state jump, and why not.
+#[derive(Debug, Clone)]
+pub struct LevelExplain {
+    /// Schedule level index (0 = outermost).
+    pub level: usize,
+    /// Partitioned rank name (of the sink layer).
+    pub dim: String,
+    /// Tile size at this level.
+    pub tile: i64,
+    /// Child count of this level (`ceil(extent / tile)`).
+    pub children: i64,
+    /// Whether the static prover certified this level's jump.
+    pub proven: bool,
+    /// Refusal reason when not proven (empty when proven). Unproven levels
+    /// still jump when the empirical two-child certification succeeds.
+    pub reason: String,
+}
+
+/// The result of [`Evaluator::explain`]: which evaluation paths fired for
+/// one mapping, and why the tiers that did not fire were skipped.
+#[derive(Debug, Clone)]
+pub struct EvalExplain {
+    /// Whether the tier-1 symbolic box walk covered the whole evaluation.
+    pub symbolic: bool,
+    /// Why the symbolic walk did not fire (`None` when it did): the first
+    /// failing static gate, or the runtime box-closure refusal.
+    pub skip_reason: Option<String>,
+    /// Per-schedule-level prover verdicts.
+    pub levels: Vec<LevelExplain>,
+    /// The evaluation result (its [`Metrics::path`] holds the fire
+    /// counters).
+    pub metrics: Metrics,
+}
+
 /// A pool of reusable [`EvalScratch`] buffers. Each `evaluate` call checks
 /// one out for the duration of its walk, so concurrent batch evaluation
 /// keeps one warm scratch per worker instead of allocating per iteration.
@@ -122,10 +157,16 @@ impl Evaluator {
 
     /// Closed-form lower bound on [`Metrics::occupancy_peak`] for `mapping`,
     /// in elements — no walk (see [`analysis::capacity_lower_bound`]).
-    /// Errors on mappings this session would reject at evaluation.
+    /// Errors on mappings this session would reject at evaluation. Reuses
+    /// the session's cached surjectivity verdict instead of re-deriving it
+    /// per call.
     pub fn capacity_lower_bound(&self, mapping: &InterLayerMapping) -> Result<i64, String> {
         mapping.validate(&self.fs)?;
-        Ok(analysis::capacity_lower_bound(&self.fs, mapping))
+        Ok(analysis::capacity_lower_bound_given(
+            &self.fs,
+            mapping,
+            self.cache.statics.surjective,
+        ))
     }
 
     /// The session's mapping-independent metric floors (see
@@ -139,17 +180,31 @@ impl Evaluator {
     /// steady-state fast path whenever the mapping qualifies, falling back
     /// to the exhaustive walk otherwise (bit-identical either way).
     pub fn evaluate(&self, mapping: &InterLayerMapping) -> Result<Metrics, String> {
-        self.run(mapping, false)
+        self.run(mapping, false, false)
     }
 
-    /// Evaluate with the exhaustive reference walk (the fast path disabled).
-    /// This is the verification oracle: it walks every inter-layer
-    /// iteration and must agree with [`Evaluator::evaluate`] bit-for-bit.
+    /// Evaluate with the exhaustive reference walk (all fast paths
+    /// disabled). This is the verification oracle: it walks every
+    /// inter-layer iteration and must agree with [`Evaluator::evaluate`]
+    /// bit-for-bit (modulo the diagnostic [`Metrics::path`] counters).
     pub fn evaluate_reference(&self, mapping: &InterLayerMapping) -> Result<Metrics, String> {
-        self.run(mapping, true)
+        self.run(mapping, true, false)
     }
 
-    fn run(&self, mapping: &InterLayerMapping, force_reference: bool) -> Result<Metrics, String> {
+    /// Evaluate with the tier-1 symbolic box walk disabled but the tier-2
+    /// steady-state jumps kept — the middle rung of the hierarchy, for
+    /// verification and benchmarking. Bit-identical to the other paths
+    /// (modulo [`Metrics::path`]).
+    pub fn evaluate_no_symbolic(&self, mapping: &InterLayerMapping) -> Result<Metrics, String> {
+        self.run(mapping, false, true)
+    }
+
+    fn run(
+        &self,
+        mapping: &InterLayerMapping,
+        force_reference: bool,
+        no_symbolic: bool,
+    ) -> Result<Metrics, String> {
         let mut scratch = self.scratch.take();
         let result = evaluate_prevalidated(
             &self.fs,
@@ -158,9 +213,71 @@ impl Evaluator {
             &self.cache,
             &mut scratch,
             force_reference,
+            no_symbolic,
         );
         self.scratch.put(scratch);
         result
+    }
+
+    /// Evaluate `mapping` and report *which* evaluation paths fired and why
+    /// the others did not — the diagnostic behind `analyze --explain`.
+    pub fn explain(&self, mapping: &InterLayerMapping) -> Result<EvalExplain, String> {
+        let metrics = self.evaluate(mapping)?;
+        let counts = mapping.level_counts(&self.fs);
+        let verbose =
+            analysis::prove_levels_verbose(&self.fs, &self.cache.statics, mapping, &counts);
+        let sink = self.fs.last();
+        let levels = mapping
+            .partitions
+            .iter()
+            .zip(&verbose)
+            .enumerate()
+            .map(|(l, (p, r))| LevelExplain {
+                level: l,
+                dim: sink.rank_names[p.dim].clone(),
+                tile: p.tile,
+                children: counts[l],
+                proven: r.is_ok(),
+                reason: match r {
+                    Ok(_) => String::new(),
+                    Err(e) => e.describe(&self.fs),
+                },
+            })
+            .collect();
+        let skip_reason = if metrics.path.symbolic {
+            None
+        } else if !self.cache.statics.surjective {
+            Some(
+                "session is not surjective (producer images do not cover their tensors)"
+                    .to_string(),
+            )
+        } else if !self.fs.is_chain() {
+            Some(
+                "fusion set is not a chain (some tensor has multiple consumers)".to_string(),
+            )
+        } else if !mapping
+            .partitions
+            .iter()
+            .all(|p| self.cache.statics.out_dims.contains(&p.dim))
+        {
+            Some(
+                "a partitioned rank is absent from the sink output access \
+                 (reduction-rank partitioning)"
+                    .to_string(),
+            )
+        } else {
+            Some(
+                "box-closure refusal at runtime: an availability or fresh set \
+                 left single-box form mid-walk"
+                    .to_string(),
+            )
+        };
+        Ok(EvalExplain {
+            symbolic: metrics.path.symbolic,
+            skip_reason,
+            levels,
+            metrics,
+        })
     }
 
     /// Evaluate a batch on a worker pool; results preserve input order, and
@@ -201,6 +318,37 @@ mod tests {
             assert_eq!(a.total_ops, b.total_ops);
             assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
         }
+    }
+
+    #[test]
+    fn explain_reports_symbolic_and_all_tiers_agree() {
+        let fs = workloads::conv_conv(14, 8);
+        let arch = Arch::generic(256);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let p2 = fs.last().rank_index("P2").unwrap();
+        let mapping = InterLayerMapping::tiled(
+            vec![Partition { dim: p2, tile: 2 }],
+            Parallelism::Sequential,
+        );
+        let ex = ev.explain(&mapping).unwrap();
+        assert!(ex.symbolic, "symbolic skipped: {:?}", ex.skip_reason);
+        assert!(ex.skip_reason.is_none());
+        assert_eq!(ex.levels.len(), 1);
+        assert_eq!(ex.levels[0].dim, "P2");
+        assert_eq!(ex.levels[0].children, 7);
+
+        let mut a = ev.evaluate(&mapping).unwrap();
+        let mut b = ev.evaluate_no_symbolic(&mapping).unwrap();
+        let mut c = ev.evaluate_reference(&mapping).unwrap();
+        assert!(a.path.symbolic);
+        assert!(!b.path.symbolic && !c.path.symbolic);
+        // The reference walk never jumps; the middle tier may.
+        assert_eq!(c.path.proven_jumps + c.path.certified_jumps, 0);
+        a.path = Default::default();
+        b.path = Default::default();
+        c.path = Default::default();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(format!("{a:?}"), format!("{c:?}"));
     }
 
     #[test]

@@ -24,6 +24,23 @@ impl EnergyBreakdown {
     }
 }
 
+/// Which evaluation paths produced a [`Metrics`] — the attribution trail of
+/// the three-tier hierarchy (symbolic → proven/certified jumps → walked
+/// iterations). Purely diagnostic: two evaluations of the same mapping are
+/// bit-identical in every other field regardless of path.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PathCounts {
+    /// The whole evaluation ran on the closed-form symbolic box walk.
+    pub symbolic: bool,
+    /// Steady-state jumps taken on a static (prover-certified) proof.
+    pub proven_jumps: i64,
+    /// Steady-state jumps taken after empirical two-child certification.
+    pub certified_jumps: i64,
+    /// Inter-layer iterations actually walked (leaf visits not covered by a
+    /// jump); `iterations` minus these is the jump-skipped tile count.
+    pub walked_iterations: i64,
+}
+
 /// Evaluation result for one (fusion set, architecture, mapping) triple.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -75,6 +92,10 @@ pub struct Metrics {
 
     /// Number of inter-layer iterations walked.
     pub iterations: i64,
+
+    /// Which evaluation paths fired (diagnostic only — identical mappings
+    /// evaluate to identical metrics in every other field on every path).
+    pub path: PathCounts,
 }
 
 impl Metrics {

@@ -23,13 +23,18 @@
 //! pair once and then evaluates many mappings cheaply — the API every search
 //! and case-study sweep uses.
 //!
-//! Evaluation itself runs in one of two modes with bit-identical results:
-//! the **steady-state fast path** (default), which classifies the iteration
-//! space into first/steady/ragged-last tile classes per schedule level and
-//! evaluates one representative per class (see the `engine` module docs),
+//! Evaluation itself runs through a three-tier path hierarchy with
+//! bit-identical results (see the `engine` module docs): the **symbolic box
+//! walk** (default where it applies), which derives every tile class's
+//! footprints and transfer counts in closed form from single-box interval
+//! arithmetic; the **steady-state jump walk**, which classifies the
+//! iteration space into first/steady/ragged-last tile classes per schedule
+//! level and evaluates one representative per class over general regions;
 //! and the **exhaustive reference walk**
 //! ([`Evaluator::evaluate_reference`]), which visits every inter-layer
-//! iteration and serves as the verification oracle.
+//! iteration and serves as the verification oracle. Which tiers fired is
+//! reported in [`Metrics::path`] ([`PathCounts`]) and explained per level
+//! by [`Evaluator::explain`] ([`EvalExplain`]).
 
 mod backward;
 mod engine;
@@ -41,9 +46,9 @@ mod walk;
 
 pub use backward::{window_needs, WindowNeeds};
 pub use engine::{evaluate, EvalOptions};
-pub use evaluator::Evaluator;
+pub use evaluator::{EvalExplain, Evaluator, LevelExplain};
 pub use intra::{tile_counts_from, IntraCounts};
-pub use metrics::{EnergyBreakdown, Metrics};
+pub use metrics::{EnergyBreakdown, Metrics, PathCounts};
 pub use walk::{IterWalk, TileWindows};
 
 #[cfg(test)]

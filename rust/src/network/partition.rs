@@ -168,6 +168,16 @@ impl NetworkSearchResult {
         self.segments.iter().all(|s| s.best.metrics.capacity_ok)
     }
 
+    /// How many chosen segments' best mappings evaluated entirely on the
+    /// tier-1 symbolic box walk (see
+    /// [`Metrics::path`](crate::model::Metrics)).
+    pub fn symbolic_segments(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.best.metrics.path.symbolic)
+            .count()
+    }
+
     /// One row of `BENCH_network.json`. The bench binary and the schema
     /// test both build rows through this method, so the CI artifact cannot
     /// silently drift from `util::bench::check_network_bench_schema`.
@@ -190,6 +200,10 @@ impl NetworkSearchResult {
                 (
                     "total_offchip_elems".to_string(),
                     Json::Num(self.total_offchip() as f64),
+                ),
+                (
+                    "symbolic_segments".to_string(),
+                    Json::Num(self.symbolic_segments() as f64),
                 ),
                 ("all_fit".to_string(), Json::Bool(self.all_fit())),
             ]

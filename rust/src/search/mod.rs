@@ -230,6 +230,15 @@ pub struct SearchResult {
     /// Candidates skipped without evaluation because the closed-form
     /// capacity lower bound proved them infeasible (see [`SearchSpec::prune`]).
     pub pruned: usize,
+    /// How many evaluated candidates ran entirely on the tier-1 symbolic
+    /// box walk ([`Metrics::path`]) — a diagnostic of how often the
+    /// closed-form evaluator carries the search.
+    pub symbolic_evals: usize,
+}
+
+/// Count of evaluations that ran entirely on the symbolic box walk.
+fn count_symbolic(evaluated: &[Scored]) -> usize {
+    evaluated.iter().filter(|s| s.metrics.path.symbolic).count()
 }
 
 /// Run a search described by `spec` on an [`Evaluator`] session. Returns
@@ -268,7 +277,8 @@ fn best_of(evaluated: Vec<Scored>, pruned: usize) -> Option<SearchResult> {
         .iter()
         .min_by(|a, b| a.score.total_cmp(&b.score))?
         .clone();
-    Some(SearchResult { best, evaluated, pruned })
+    let symbolic_evals = count_symbolic(&evaluated);
+    Some(SearchResult { best, evaluated, pruned, symbolic_evals })
 }
 
 /// A provable lower bound on the score `mapping` would receive if evaluated,
@@ -451,7 +461,8 @@ fn annealing(ev: &Evaluator, spec: &SearchSpec) -> Option<SearchResult> {
     // Annealing (and genetic below) never prune: their PRNG trajectories
     // consume state per evaluation, so skipping one would change every
     // subsequent draw.
-    Some(SearchResult { best, evaluated, pruned: 0 })
+    let symbolic_evals = count_symbolic(&evaluated);
+    Some(SearchResult { best, evaluated, pruned: 0, symbolic_evals })
 }
 
 /// Genetic search: tournament selection + mutation (no crossover across

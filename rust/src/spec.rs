@@ -18,7 +18,7 @@ use crate::einsum::{
 };
 use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::MapSpaceConfig;
-use crate::model::{EnergyBreakdown, Metrics};
+use crate::model::{EnergyBreakdown, Metrics, PathCounts};
 use crate::network::{
     self, LayerOp, LayerSpec, Network, NetworkParetoResult, NetworkSearchSpec,
 };
@@ -1267,6 +1267,15 @@ impl Metrics {
                     .collect()),
             ),
             ("iterations", jnum_i(self.iterations)),
+            (
+                "path",
+                jobj(vec![
+                    ("symbolic", Json::Bool(self.path.symbolic)),
+                    ("proven_jumps", jnum_i(self.path.proven_jumps)),
+                    ("certified_jumps", jnum_i(self.path.certified_jumps)),
+                    ("walked_iterations", jnum_i(self.path.walked_iterations)),
+                ]),
+            ),
         ])
     }
 
@@ -1319,6 +1328,32 @@ impl Metrics {
             recompute_ops: i64_or("recompute_ops")?,
             per_tensor_recompute: vec_or("per_tensor_recompute")?,
             iterations: i64_or("iterations")?,
+            // Older documents predate path attribution; default to all-off.
+            path: match j.get("path") {
+                Some(p) => {
+                    let pctx = "metrics.path";
+                    let pi64 = |key: &str| -> Result<i64, String> {
+                        match p.get(key) {
+                            Some(v) => v
+                                .as_i64()
+                                .ok_or_else(|| format!("{pctx}: {key} must be a number")),
+                            None => Ok(0),
+                        }
+                    };
+                    PathCounts {
+                        symbolic: match p.get("symbolic") {
+                            Some(v) => v
+                                .as_bool()
+                                .ok_or_else(|| format!("{pctx}: symbolic must be a bool"))?,
+                            None => false,
+                        },
+                        proven_jumps: pi64("proven_jumps")?,
+                        certified_jumps: pi64("certified_jumps")?,
+                        walked_iterations: pi64("walked_iterations")?,
+                    }
+                }
+                None => PathCounts::default(),
+            },
         })
     }
 }

@@ -119,7 +119,7 @@ fn check_rows(
 /// uploads that artifact and diffs its deterministic counters across two
 /// runs; the bench binary asserts this schema before writing and the test
 /// suite pins it, so consumers downstream never see silent drift.
-pub const NETWORK_BENCH_NUM_KEYS: [&str; 7] = [
+pub const NETWORK_BENCH_NUM_KEYS: [&str; 8] = [
     "mean_ns",
     "layers",
     "cuts",
@@ -127,6 +127,7 @@ pub const NETWORK_BENCH_NUM_KEYS: [&str; 7] = [
     "distinct_searched",
     "total_score",
     "total_offchip_elems",
+    "symbolic_segments",
 ];
 
 /// The per-row numeric keys of `BENCH_network.json`'s `pareto_rows` section
@@ -155,8 +156,8 @@ pub fn check_network_bench_schema(doc: &Json) -> Result<(), String> {
 /// The per-row numeric keys of `BENCH_search.json` (`evaluated`, `pruned`,
 /// and `best_score` are deterministic counters; the CI determinism gate
 /// excludes the timing-derived keys).
-pub const SEARCH_BENCH_NUM_KEYS: [&str; 5] =
-    ["mean_ns", "evaluated", "pruned", "mappings_per_sec", "best_score"];
+pub const SEARCH_BENCH_NUM_KEYS: [&str; 6] =
+    ["mean_ns", "evaluated", "pruned", "mappings_per_sec", "best_score", "symbolic_evals"];
 
 /// Validate a `BENCH_search.json` document: a `rows` array whose entries
 /// carry a string `workload` and every numeric key of
@@ -176,13 +177,32 @@ pub const MODEL_EVAL_BENCH_NUM_KEYS: [&str; 5] =
 pub const MODEL_EVAL_SPEEDUP_NUM_KEYS: [&str; 4] =
     ["iterations", "fast_mean_ns", "reference_mean_ns", "speedup"];
 
-/// Validate a `BENCH_model_eval.json` document: `rows` +
-/// `fastpath_speedups`, each non-empty with a string `workload` and the
-/// matching numeric keys.
+/// The per-row numeric keys of `BENCH_model_eval.json`'s
+/// `symbolic_speedups` section (three-tier comparison rows; each entry also
+/// carries a bool `symbolic_fired`, the deterministic path-attribution flag
+/// the CI determinism gate diffs alongside `iterations`).
+pub const MODEL_EVAL_SYMBOLIC_NUM_KEYS: [&str; 5] = [
+    "iterations",
+    "symbolic_mean_ns",
+    "fast_mean_ns",
+    "reference_mean_ns",
+    "speedup_vs_fast",
+];
+
+/// Validate a `BENCH_model_eval.json` document: `rows`, `fastpath_speedups`,
+/// and `symbolic_speedups`, each non-empty with a string `workload` and the
+/// matching numeric/bool keys.
 pub fn check_model_eval_bench_schema(doc: &Json) -> Result<(), String> {
     const FILE: &str = "BENCH_model_eval.json";
     check_rows(doc, FILE, "rows", &MODEL_EVAL_BENCH_NUM_KEYS, &[])?;
-    check_rows(doc, FILE, "fastpath_speedups", &MODEL_EVAL_SPEEDUP_NUM_KEYS, &[])
+    check_rows(doc, FILE, "fastpath_speedups", &MODEL_EVAL_SPEEDUP_NUM_KEYS, &[])?;
+    check_rows(
+        doc,
+        FILE,
+        "symbolic_speedups",
+        &MODEL_EVAL_SYMBOLIC_NUM_KEYS,
+        &["symbolic_fired"],
+    )
 }
 
 /// Time `f` for `iters` repetitions after `warmup` repetitions.
@@ -247,16 +267,17 @@ mod tests {
         // The bench binary emits rows with exactly these keys; losing any
         // (or the rows array itself) must fail the check.
         let row = "{\"workload\":\"exhaustive\",\"mean_ns\":1.0,\"evaluated\":40,\
-                   \"pruned\":0,\"mappings_per_sec\":2.0,\"best_score\":3.0}";
+                   \"pruned\":0,\"mappings_per_sec\":2.0,\"best_score\":3.0,\
+                   \"symbolic_evals\":40}";
         let doc = Json::parse(&format!("{{\"rows\":[{row}]}}")).unwrap();
         check_search_bench_schema(&doc).unwrap();
         assert!(check_search_bench_schema(&Json::parse("{}").unwrap()).is_err());
         assert!(check_search_bench_schema(&Json::parse("{\"rows\":[]}").unwrap()).is_err());
         let broken = "{\"rows\":[{\"workload\":\"x\",\"mean_ns\":1.0}]}";
         assert!(check_search_bench_schema(&Json::parse(broken).unwrap()).is_err());
-        // A pre-pruning row (no `pruned` key) must now be rejected.
+        // A pre-symbolic row (no `symbolic_evals` key) must now be rejected.
         let stale = "{\"rows\":[{\"workload\":\"x\",\"mean_ns\":1.0,\"evaluated\":40,\
-                     \"mappings_per_sec\":2.0,\"best_score\":3.0}]}";
+                     \"pruned\":0,\"mappings_per_sec\":2.0,\"best_score\":3.0}]}";
         assert!(check_search_bench_schema(&Json::parse(stale).unwrap()).is_err());
     }
 
@@ -266,22 +287,43 @@ mod tests {
         let row = bench("noop", 0, 2, || 1).to_json().to_string();
         let speedup = "{\"workload\":\"conv\",\"iterations\":12.0,\"fast_mean_ns\":1.0,\
                        \"reference_mean_ns\":2.0,\"speedup\":2.0}";
+        let symbolic = "{\"workload\":\"conv\",\"iterations\":12.0,\"symbolic_mean_ns\":0.5,\
+                        \"fast_mean_ns\":1.0,\"reference_mean_ns\":2.0,\
+                        \"speedup_vs_fast\":2.0,\"symbolic_fired\":true}";
         let doc = Json::parse(&format!(
-            "{{\"rows\":[{row}],\"fastpath_speedups\":[{speedup}]}}"
+            "{{\"rows\":[{row}],\"fastpath_speedups\":[{speedup}],\
+               \"symbolic_speedups\":[{symbolic}]}}"
         ))
         .unwrap();
         check_model_eval_bench_schema(&doc).unwrap();
         // Each section is required and non-empty.
         let no_speedups = Json::parse(&format!("{{\"rows\":[{row}]}}")).unwrap();
         assert!(check_model_eval_bench_schema(&no_speedups).is_err());
+        let pre_symbolic = Json::parse(&format!(
+            "{{\"rows\":[{row}],\"fastpath_speedups\":[{speedup}]}}"
+        ))
+        .unwrap();
+        assert!(check_model_eval_bench_schema(&pre_symbolic).is_err());
         let doc = Json::parse(&format!(
-            "{{\"rows\":[],\"fastpath_speedups\":[{speedup}]}}"
+            "{{\"rows\":[],\"fastpath_speedups\":[{speedup}],\
+               \"symbolic_speedups\":[{symbolic}]}}"
         ))
         .unwrap();
         assert!(check_model_eval_bench_schema(&doc).is_err());
         // A speedup row losing the deterministic counter fails.
         let doc = Json::parse(&format!(
-            "{{\"rows\":[{row}],\"fastpath_speedups\":[{{\"workload\":\"conv\"}}]}}"
+            "{{\"rows\":[{row}],\"fastpath_speedups\":[{{\"workload\":\"conv\"}}],\
+               \"symbolic_speedups\":[{symbolic}]}}"
+        ))
+        .unwrap();
+        assert!(check_model_eval_bench_schema(&doc).is_err());
+        // A symbolic row missing the bool path-attribution flag fails.
+        let no_fired = "{\"workload\":\"conv\",\"iterations\":12.0,\"symbolic_mean_ns\":0.5,\
+                        \"fast_mean_ns\":1.0,\"reference_mean_ns\":2.0,\
+                        \"speedup_vs_fast\":2.0}";
+        let doc = Json::parse(&format!(
+            "{{\"rows\":[{row}],\"fastpath_speedups\":[{speedup}],\
+               \"symbolic_speedups\":[{no_fired}]}}"
         ))
         .unwrap();
         assert!(check_model_eval_bench_schema(&doc).is_err());

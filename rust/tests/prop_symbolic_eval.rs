@@ -1,0 +1,167 @@
+//! Symbolic box walk vs. the reference walk.
+//!
+//! The closed-form symbolic tier (see `model::engine` and
+//! `analysis::symbolic`) must be *bit-identical* to both the steady-state
+//! fast path and the exhaustive reference walk — every integer count and
+//! every derived `f64` down to the last bit — on the five validation
+//! designs and on randomized (workload, mapping) pairs covering ragged
+//! tiles, repartitioned ranks, per-tensor retention, and both parallelism
+//! modes. Beyond agreement, this suite pins *coverage*: the symbolic walk
+//! must actually fire (`Metrics::path.symbolic`) on every canonical
+//! workload under single output-rank partitions, so the closed-form path is
+//! known to be exercised rather than vacuously falling back.
+
+use std::collections::HashMap;
+
+use looptree::analysis::SessionStatics;
+use looptree::arch::Arch;
+use looptree::einsum::{workloads, FusionSet, TensorId};
+use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
+use looptree::model::Evaluator;
+use looptree::util::prng::Prng;
+use looptree::validation::{design_points, Scale};
+
+fn workload_pool() -> Vec<FusionSet> {
+    vec![
+        workloads::conv_conv(20, 4),
+        workloads::conv_conv_conv(16, 4),
+        workloads::pwise_dwise_pwise(12, 3),
+        workloads::fc_fc(24, 8),
+        workloads::self_attention(1, 2, 12, 4),
+    ]
+}
+
+/// All three tiers on one mapping, compared field-for-field via the full
+/// `Debug` rendering with the diagnostic path attribution neutralized.
+fn assert_tiers_equal(ev: &Evaluator, mapping: &InterLayerMapping, tag: &str) {
+    let mut sym = ev
+        .evaluate(mapping)
+        .unwrap_or_else(|e| panic!("{tag}: default path: {e}"));
+    let mut fast = ev
+        .evaluate_no_symbolic(mapping)
+        .unwrap_or_else(|e| panic!("{tag}: fast path: {e}"));
+    let mut reference = ev
+        .evaluate_reference(mapping)
+        .unwrap_or_else(|e| panic!("{tag}: reference: {e}"));
+    sym.path = Default::default();
+    fast.path = Default::default();
+    reference.path = Default::default();
+    assert_eq!(
+        format!("{sym:?}"),
+        format!("{reference:?}"),
+        "{tag}: symbolic vs reference"
+    );
+    assert_eq!(
+        format!("{fast:?}"),
+        format!("{reference:?}"),
+        "{tag}: fast vs reference"
+    );
+}
+
+/// A randomized mapping: 0–3 partition levels with ragged tiles — the same
+/// rank may be re-partitioned at a nested tile size — random per-tensor
+/// retention, both parallelisms.
+fn random_mapping(fs: &FusionSet, rng: &mut Prng) -> InterLayerMapping {
+    let last = fs.last();
+    let mut partitions: Vec<Partition> = Vec::new();
+    let mut extents: HashMap<usize, i64> = HashMap::new();
+    for _ in 0..rng.index(4) {
+        let dim = rng.index(last.ndim());
+        let extent = *extents.get(&dim).unwrap_or(&last.rank_sizes[dim]);
+        if extent < 2 {
+            continue;
+        }
+        let tile = rng.range_i64(1, extent);
+        partitions.push(Partition { dim, tile });
+        extents.insert(dim, tile);
+    }
+    let parallelism = if rng.chance(0.5) {
+        Parallelism::Sequential
+    } else {
+        Parallelism::Pipeline
+    };
+    let k = partitions.len();
+    let mut m = InterLayerMapping::tiled(partitions, parallelism);
+    for x in 0..fs.tensors.len() {
+        if rng.chance(0.5) {
+            m = m.with_retention(TensorId(x), rng.index(k + 1));
+        }
+    }
+    m
+}
+
+/// The five validation designs (DepFin, Fused-layer CNN, ISAAC, PipeLayer,
+/// FLAT) through all three tiers — the acceptance gate of the symbolic path.
+#[test]
+fn five_validation_designs_identical_through_all_tiers() {
+    for point in design_points(Scale::Test) {
+        // As the validation drivers run them (unbounded GLB) …
+        let ev = Evaluator::new(&point.fs, &point.arch.unbounded_glb())
+            .unwrap_or_else(|e| panic!("{}: {e}", point.design));
+        assert_tiers_equal(&ev, &point.mapping, point.design);
+        // … and with the real capacity bound (capacity_ok included).
+        let ev = Evaluator::new(&point.fs, &point.arch).unwrap();
+        assert_tiers_equal(&ev, &point.mapping, &format!("{} (bounded)", point.design));
+    }
+}
+
+/// Randomized mappings — ragged tiles, nested re-partitions, mixed
+/// retention, both parallelisms — through all three tiers. Whether the
+/// symbolic walk covers a mapping or bails mid-walk, the result must be
+/// bit-identical.
+#[test]
+fn randomized_mappings_identical_through_all_tiers() {
+    let mut rng = Prng::new(0x5711_B0CE);
+    let arch = Arch::generic(1 << 13);
+    for fs in &workload_pool() {
+        let ev = Evaluator::new(fs, &arch).unwrap();
+        for sub in 0..10 {
+            let m = random_mapping(fs, &mut rng);
+            if m.total_iterations(fs) > 20_000 {
+                continue;
+            }
+            assert_tiers_equal(&ev, &m, &format!("{} #{sub}", fs.name));
+        }
+    }
+}
+
+/// Coverage pin: on every canonical workload, every single output-rank
+/// partition with default retention must be evaluated by the symbolic walk
+/// end to end — `Metrics::path.symbolic` set and the walked-leaf counter
+/// live. If a refactor silently demotes these schedules to the region walk,
+/// this fails rather than letting the closed-form tier go vacuous.
+#[test]
+fn symbolic_walk_fires_on_every_canonical_workload() {
+    let arch = Arch::generic(1 << 14);
+    for fs in &workload_pool() {
+        let st = SessionStatics::build(fs);
+        let ev = Evaluator::new(fs, &arch).unwrap();
+        let last = fs.last();
+        let mut exercised = 0;
+        for dim in st.out_dims.clone() {
+            let extent = last.rank_sizes[dim];
+            if extent < 4 {
+                continue;
+            }
+            for tile in [1, 2] {
+                let m = InterLayerMapping::tiled(
+                    vec![Partition { dim, tile }],
+                    Parallelism::Sequential,
+                );
+                let tag = format!("{} dim {dim} tile {tile}", fs.name);
+                let metrics = ev.evaluate(&m).unwrap();
+                assert!(metrics.path.symbolic, "{tag}: symbolic walk fell back");
+                assert!(
+                    metrics.path.walked_iterations >= 1,
+                    "{tag}: symbolic walk visited no leaves"
+                );
+                exercised += 1;
+            }
+        }
+        assert!(
+            exercised > 0,
+            "{}: no output rank was long enough to exercise the symbolic walk",
+            fs.name
+        );
+    }
+}

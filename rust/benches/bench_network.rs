@@ -11,7 +11,7 @@
 use looptree::arch::Arch;
 use looptree::coordinator::Coordinator;
 use looptree::mapspace::MapSpaceConfig;
-use looptree::network::{self, Network, NetworkSearchSpec};
+use looptree::network::{self, LayerOp, Network, NetworkSearchSpec};
 use looptree::search::SearchSpec;
 use looptree::util::bench::{bench, check_network_bench_schema, reps, smoke, write_bench_json};
 use looptree::util::json::Json;
@@ -65,6 +65,47 @@ fn main() {
             result.total_score
         );
         rows.push(result.bench_row(&net.name, net.num_layers(), t.mean.as_nanos() as f64));
+    }
+
+    // A conv stack sized so the fused pair provably overflows a small GLB:
+    // the closed-form capacity floor prunes the 2-layer candidate before any
+    // mapspace search and the lossless guard certifies the survivor optimum,
+    // so `candidates_pruned` is a nonzero deterministic counter the CI
+    // determinism gate diffs across runs.
+    let mut prune_net = Network { name: "prune_stack".into(), layers: vec![] };
+    for i in 0..2 {
+        prune_net.push(
+            &format!("conv{i}"),
+            &[96, 22, 22],
+            LayerOp::Conv2d { out_channels: 96, r: 3, s: 3, stride: 1 },
+        );
+    }
+    let prune_arch = Arch::generic(128);
+    let prune_spec = NetworkSearchSpec { max_segment_layers: 2, ..spec.clone() };
+    {
+        let result = network::search_network(&prune_net, &prune_arch, &prune_spec, &pool)
+            .expect("prune_stack search found no partition");
+        assert!(
+            result.candidates_pruned > 0,
+            "prune_stack must exercise static candidate pruning"
+        );
+        let t = bench("search_network(prune_stack)", warmup, iters, || {
+            network::search_network(&prune_net, &prune_arch, &prune_spec, &pool).unwrap()
+        });
+        println!(
+            "{}  -> {} cuts, {}/{} segments searched, {} statically pruned, total {:.3e}",
+            t.report(),
+            result.cuts.len(),
+            result.distinct_searched,
+            result.candidate_segments,
+            result.candidates_pruned,
+            result.total_score
+        );
+        rows.push(result.bench_row(
+            &prune_net.name,
+            prune_net.num_layers(),
+            t.mean.as_nanos() as f64,
+        ));
     }
 
     // Pareto-front DP (vector costs over the default latency/energy/

@@ -13,12 +13,18 @@
 //! | LT008 | warning  | partition on a reduction rank of the last layer    |
 //! | LT009 | warning  | zero search budget for the selected algorithm      |
 //! | LT010 | error    | unknown rank name / invalid tile size in mapspace  |
+//! | LT101 | error    | network edge shape mismatch / op-shape failure     |
+//! | LT102 | warning  | dead node (not an ancestor of the network output)  |
+//! | LT103 | error    | fixed-`cuts` segment is non-convex / multi-sink    |
+//! | LT104 | error    | interior `pad`/`concat` in a fixed-`cuts` segment  |
+//! | LT105 | error    | residual margin parity violation in a segment      |
+//! | LT106 | warning  | fixed-`cuts` segment provably exceeds the GLB      |
 //!
 //! Document shapes are detected by key: `network` ⇒ network config, else
 //! `search` ⇒ search config, else `workload` ⇒ analyze config. Parse
 //! errors reuse the JSON paths threaded through `spec` (e.g.
 //! `workload.einsums[1].inputs[0]`), so every diagnostic points at the
-//! offending key.
+//! offending key. The `LT1xx` network codes live in [`super::netlint`].
 
 use super::capacity_lower_bound;
 use crate::einsum::{FusionSet, TensorKind};
@@ -125,7 +131,7 @@ impl LintReport {
     }
 }
 
-fn diag(
+pub(super) fn diag(
     code: &'static str,
     severity: Severity,
     path: impl Into<String>,
@@ -138,7 +144,7 @@ fn diag(
 /// Convert a threaded parse/validation error (`"json.path: message"`) into
 /// a diagnostic, recovering the path span when the prefix looks like one.
 /// Errors rooted at `mapping` are the mapping-vs-workload code `LT004`.
-fn parse_diag(err: String) -> Diagnostic {
+pub(super) fn parse_diag(err: String) -> Diagnostic {
     let (path, message) = match err.split_once(": ") {
         Some((p, m)) if !p.is_empty() && !p.contains(' ') => (p.to_string(), m.to_string()),
         _ => (String::new(), err),
@@ -201,11 +207,15 @@ fn lint_network(doc: &Json, out: &mut Vec<Diagnostic>) {
     let cfg = match NetworkConfig::from_json(doc) {
         Ok(cfg) => cfg,
         Err(e) => {
-            out.push(parse_diag(e));
+            out.push(super::netlint::classify_network_error(e));
             return;
         }
     };
+    super::netlint::network_diags(&cfg.network, "network", out);
     budget_diags(&cfg.segment_search.search, "segment_search.search", out);
+    if let Some(cuts) = &cfg.cuts {
+        super::netlint::cuts_diags(&cfg.network, &cfg.arch, cuts, "cuts", out);
+    }
 }
 
 /// LT005/LT006/LT007/LT008: semantic warnings about a validated

@@ -2,7 +2,7 @@
 //! DAG, derived by composing per-level access maps symbolically — in
 //! O(levels), with no iteration walk.
 //!
-//! Four consumers build on the same per-session facts
+//! Five consumers build on the same per-session facts
 //! ([`SessionStatics`]):
 //!
 //! * **symbolic evaluator** (`symbolic`, consumed by `model::engine`) — the
@@ -19,10 +19,17 @@
 //!   changing any search result;
 //! * **linter** ([`lint_document`]) — the `looptree lint` subcommand:
 //!   structured diagnostics with stable `LT0xx` codes, severities,
-//!   JSON-path spans, and fix-it hints.
+//!   JSON-path spans, and fix-it hints;
+//! * **network analyzer** (`netstatics` + `netlint`) — once-per-network
+//!   static facts over the DAG: [`segment_floors`] are the closed-form
+//!   per-candidate capacity/score bounds behind the network DPs' lossless
+//!   candidate pruning, and the `LT1xx` network diagnostics extend the
+//!   linter to `NetworkConfig` documents.
 
 mod bounds;
 mod lint;
+mod netlint;
+mod netstatics;
 mod prove;
 mod statics;
 pub(crate) mod symbolic;
@@ -30,6 +37,7 @@ pub(crate) mod symbolic;
 pub(crate) use bounds::capacity_lower_bound_given;
 pub use bounds::{capacity_lower_bound, objective_floors, ObjectiveFloors};
 pub use lint::{lint_document, Diagnostic, LintReport, Severity};
+pub use netstatics::{segment_floors, SegmentFloors};
 pub use prove::{
     prove_gate, prove_level, prove_levels, prove_levels_verbose, LevelProof, ProveFail,
 };

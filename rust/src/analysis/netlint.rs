@@ -1,0 +1,192 @@
+//! Network-config lint: the `LT1xx` diagnostics `looptree lint` emits for
+//! `NetworkConfig` documents — DAG structure problems, fixed-`cuts`
+//! segments that cannot fuse (with the mandatory-cut explanation), and
+//! segments whose closed-form capacity floor already exceeds the GLB.
+//!
+//! Works from the same once-per-network symbolic facts the DPs use: the
+//! reference shape propagation of [`Network::validate`], the segment
+//! materialization plans of `Network::segment_plan`, and the static floors
+//! of [`super::netstatics`]. See the `LT1xx` rows of the
+//! [`super::lint`] module table for the code assignments.
+
+use super::lint::{diag, parse_diag, Diagnostic, Severity};
+use super::netstatics::segment_floors;
+use crate::arch::Arch;
+use crate::network::Network;
+
+/// Convert a `NetworkConfig` parse/validation error into a diagnostic.
+/// Edge/shape validation failures — rerooted to `network.nodes[i]` paths by
+/// the spec layer and recognizable by their `layer '…' (op …)` message
+/// prefix — become `LT101`; everything else keeps the generic parse code.
+pub(super) fn classify_network_error(err: String) -> Diagnostic {
+    let d = parse_diag(err);
+    let on_node = d.path.contains(".nodes[") || d.path.contains(".layers[");
+    if on_node && d.message.starts_with("layer '") {
+        diag(
+            "LT101",
+            Severity::Error,
+            d.path,
+            d.message,
+            "fix the node's input_shape/op/inputs so every edge's shapes agree \
+             with its producers",
+        )
+    } else {
+        d
+    }
+}
+
+/// `LT102`: nodes that are not ancestors of the network output (the last
+/// node). Their results are computed and paid for but never consumed
+/// downstream — legal, and almost certainly a wiring mistake.
+pub(super) fn network_diags(net: &Network, base: &str, out: &mut Vec<Diagnostic>) {
+    let n = net.layers.len();
+    if n == 0 {
+        return;
+    }
+    let mut live = vec![false; n];
+    live[n - 1] = true;
+    let mut stack = vec![n - 1];
+    while let Some(i) = stack.pop() {
+        for &p in &net.layers[i].inputs {
+            if !live[p] {
+                live[p] = true;
+                stack.push(p);
+            }
+        }
+    }
+    for (i, l) in net.layers.iter().enumerate() {
+        if !live[i] {
+            out.push(diag(
+                "LT102",
+                Severity::Warning,
+                format!("{base}.nodes[{i}]"),
+                format!(
+                    "node '{}' is dead: not an ancestor of the network output '{}', so its \
+                     result is computed but never consumed",
+                    l.name,
+                    net.layers[n - 1].name
+                ),
+                "remove the node, or wire it (directly or transitively) into the final \
+                 node's inputs",
+            ));
+        }
+    }
+}
+
+/// Classify a `segment_plan` error: which `LT1xx` code and fix-it hint the
+/// failure maps to. Matching is on the plan's stable error phrases (pinned
+/// by the lint corpus).
+fn classify_plan_error(e: &str) -> (&'static str, &'static str) {
+    let mandatory_cut = [
+        "never joins a fused segment",
+        "explicit pad inside a fused segment",
+        "cannot be a segment sink",
+        "only pad nodes",
+    ];
+    let residual = ["cannot be center-cropped", "cannot merge", "operand arity mismatch"];
+    if mandatory_cut.iter().any(|m| e.contains(m)) {
+        (
+            "LT104",
+            "concat is virtual (pure DRAM address arithmetic) and an interior pad is a \
+             mandatory cut — place a cut on every edge of this node",
+        )
+    } else if residual.iter().any(|m| e.contains(m)) {
+        (
+            "LT105",
+            "residual branches must shrink by even margins to center-crop; insert an \
+             explicit pad on the shallower branch or cut before the add",
+        )
+    } else {
+        (
+            "LT103",
+            "move the cuts so every segment is a convex node set with a single sink",
+        )
+    }
+}
+
+/// `LT103`/`LT104`/`LT105`/`LT106`: diagnostics over the fixed segments a
+/// `cuts` list induces, mirroring `evaluate_partition`'s cut-to-segment
+/// mapping exactly (contiguous ranges between cuts, virtual nodes dropped).
+/// Invalid cut values stop the sweep — later segments depend on them.
+pub(super) fn cuts_diags(
+    net: &Network,
+    arch: &Arch,
+    cuts: &[usize],
+    base: &str,
+    out: &mut Vec<Diagnostic>,
+) {
+    let n = net.num_layers();
+    let mut bounds = vec![0usize];
+    for (j, &c) in cuts.iter().enumerate() {
+        let prev = *bounds.last().unwrap();
+        if c == 0 || c >= n {
+            out.push(diag(
+                "LT103",
+                Severity::Error,
+                format!("{base}[{j}]"),
+                format!("cut {c} out of range (0, {n})"),
+                "interior cuts must satisfy 0 < cut < the layer count",
+            ));
+            return;
+        }
+        if c <= prev {
+            out.push(diag(
+                "LT103",
+                Severity::Error,
+                format!("{base}[{j}]"),
+                format!("cuts must be strictly ascending (saw {c} after {prev})"),
+                "sort the cut list and drop duplicates",
+            ));
+            return;
+        }
+        bounds.push(c);
+    }
+    bounds.push(n);
+    for (j, w) in bounds.windows(2).enumerate() {
+        let nodes: Vec<usize> =
+            (w[0]..w[1]).filter(|&i| !net.layers[i].op.is_virtual()).collect();
+        if nodes.is_empty() {
+            continue;
+        }
+        // The segment starting at cut j-1 is attributed to that cut; the
+        // leading segment (before any cut) to the list as a whole.
+        let path = if j == 0 { base.to_string() } else { format!("{base}[{}]", j - 1) };
+        match net.segment_plan(&nodes) {
+            Err(e) => {
+                let (code, hint) = classify_plan_error(&e);
+                out.push(diag(
+                    code,
+                    Severity::Error,
+                    path,
+                    format!(
+                        "segment {} cannot fuse: {e}",
+                        net.span_name_nodes(&nodes)
+                    ),
+                    hint,
+                ));
+            }
+            Ok(_) => {
+                let Ok(fl) = segment_floors(net, arch, &nodes) else {
+                    continue;
+                };
+                if fl.provably_infeasible(arch) {
+                    let cap = arch.glb_capacity().expect("infeasible implies a capacity");
+                    out.push(diag(
+                        "LT106",
+                        Severity::Warning,
+                        path,
+                        format!(
+                            "segment {} is provably GLB-infeasible: its first tile alone \
+                             needs {} bytes of the {cap}-byte GLB (closed-form lower \
+                             bound; no mapping can fit)",
+                            net.span_name_nodes(&nodes),
+                            fl.capacity_elems.saturating_mul(arch.word_bytes)
+                        ),
+                        "move a cut to shrink the segment, or use an architecture with a \
+                         larger GLB",
+                    ));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Network-level static floors: closed-form, mapping-independent lower
+//! bounds per candidate fused segment, computed once per distinct segment
+//! shape — no mapspace search, no iteration walk.
+//!
+//! This is the network-scale analogue of [`super::bounds`]. Where the
+//! mapping-level pruner bounds one `(FusionSet, mapping)` pair, a
+//! [`SegmentFloors`] bounds *every* mapping of a candidate segment at once:
+//!
+//! * **Capacity floor** ([`SegmentFloors::capacity_elems`]): the backward
+//!   needs of a single-element sink window at the domain's lower corner.
+//!   Every mapping's first leaf window starts at that corner and contains
+//!   the unit box, needs are monotone in the window, and at the first leaf
+//!   nothing has been evicted yet — so the engine's occupancy there, and a
+//!   fortiori its peak, is at least this volume. A segment whose capacity
+//!   floor already exceeds the GLB budget is infeasible under every mapping
+//!   ([`SegmentFloors::provably_infeasible`]).
+//! * **Objective floors** ([`SegmentFloors::floors`]): the evaluator's
+//!   cached [`ObjectiveFloors`] — full-domain latency/energy/off-chip
+//!   bounds that hold for any tiling, retention, or parallelism.
+//!
+//! The network DPs ([`search_network`](crate::network::search_network),
+//! [`search_network_pareto`](crate::network::search_network_pareto)) use
+//! these to skip the mapspace search of candidates that are provably
+//! infeasible, under the same lossless discipline as the mapping-level
+//! pruner: a pruned candidate's score is bounded below by
+//! [`SegmentFloors::floor_score`] (resp. [`SegmentFloors::floor_costs`] per
+//! Pareto axis), the DP result is accepted only when it beats every pruned
+//! floor, and otherwise the search falls back to evaluating everything —
+//! so results are bit-identical with pruning on or off.
+
+use super::ObjectiveFloors;
+use crate::arch::Arch;
+use crate::model::{window_needs, Evaluator};
+use crate::network::Network;
+use crate::poly::IBox;
+use crate::search::{Objective, SearchSpec};
+
+/// Closed-form lower bounds for one candidate fused segment, valid for
+/// every mapping of that segment (see the module docs for the argument).
+#[derive(Debug, Clone)]
+pub struct SegmentFloors {
+    /// Lower bound on `occupancy_peak` (elements) of any mapping: the
+    /// backward needs of the unit sink window at the domain's lower corner.
+    pub capacity_elems: i64,
+    /// Mapping-independent metric floors of the segment's evaluator session
+    /// (latency, compute energy, off-chip traffic).
+    pub floors: ObjectiveFloors,
+}
+
+/// Compute [`SegmentFloors`] for the candidate segment `nodes` of `net`.
+/// Errors if the node set is not fusable or the session fails validation —
+/// callers pruning DP candidates should treat an error as "no floor known"
+/// and keep the candidate.
+pub fn segment_floors(
+    net: &Network,
+    arch: &Arch,
+    nodes: &[usize],
+) -> Result<SegmentFloors, String> {
+    let fs = net.segment_fusion_set_nodes(nodes)?;
+    let ev = Evaluator::new(&fs, arch)?;
+    let floors = ev.floors().clone();
+    let domain = fs.last().domain();
+    let unit = IBox::from_bounds(
+        &domain.dims.iter().map(|d| (d.lo, d.lo + 1)).collect::<Vec<_>>(),
+    );
+    let capacity_elems = window_needs(&fs, &unit).data.iter().map(|r| r.volume()).sum();
+    Ok(SegmentFloors { capacity_elems, floors })
+}
+
+impl SegmentFloors {
+    /// Whether every mapping of the segment provably exceeds the GLB
+    /// capacity of `arch`: the unit-window needs alone do not fit. `false`
+    /// when the architecture has no GLB capacity limit.
+    pub fn provably_infeasible(&self, arch: &Arch) -> bool {
+        match arch.glb_capacity() {
+            Some(cap) => self.capacity_elems.saturating_mul(arch.word_bytes) > cap,
+            None => false,
+        }
+    }
+
+    /// The floor of one objective axis *before* any infeasibility penalty:
+    /// latency uses the pipeline floor (a lower bound for either
+    /// parallelism), capacity the unit-window needs.
+    fn base(&self, objective: Objective) -> f64 {
+        let lat = self.floors.latency_pipe as f64;
+        match objective {
+            Objective::Latency => lat,
+            Objective::Energy => self.floors.energy_pj,
+            Objective::Edp | Objective::FeasibleEdp => lat * self.floors.energy_pj,
+            Objective::Capacity => self.capacity_elems as f64,
+            Objective::Offchip => self.floors.offchip_elems as f64,
+        }
+    }
+
+    /// A lower bound on the *score* any mapping of a provably-infeasible
+    /// segment would receive under `spec` — the network-level analogue of
+    /// the search pruner's score floor. Infeasible mappings are penalized by
+    /// [`Objective::INFEASIBLE_PENALTY`] (always for `FeasibleEdp`, and for
+    /// every other objective when `spec.penalize_infeasible` is set), so the
+    /// floor carries the same factor. Only meaningful for segments where
+    /// [`SegmentFloors::provably_infeasible`] holds.
+    pub fn floor_score(&self, spec: &SearchSpec) -> f64 {
+        let base = self.base(spec.objective);
+        if spec.objective == Objective::FeasibleEdp || spec.penalize_infeasible {
+            base * Objective::INFEASIBLE_PENALTY
+        } else {
+            base
+        }
+    }
+
+    /// Per-axis lower bounds on the cost vector any mapping of a
+    /// provably-infeasible segment would contribute to a Pareto front under
+    /// `spec` — [`SegmentFloors::floor_score`] applied axis-wise, matching
+    /// [`SearchSpec::score_objective`]'s per-axis penalty rule.
+    pub fn floor_costs(&self, objectives: &[Objective], spec: &SearchSpec) -> Vec<f64> {
+        objectives
+            .iter()
+            .map(|&o| {
+                let base = self.base(o);
+                if o == Objective::FeasibleEdp || spec.penalize_infeasible {
+                    base * Objective::INFEASIBLE_PENALTY
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+}

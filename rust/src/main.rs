@@ -584,6 +584,10 @@ fn network_result_json(cfg: &NetworkConfig, r: &NetworkSearchResult) -> Json {
                 "candidate_segments".to_string(),
                 Json::Num(r.candidate_segments as f64),
             ),
+            (
+                "candidates_pruned".to_string(),
+                Json::Num(r.candidates_pruned as f64),
+            ),
         ]
         .into_iter()
         .collect(),
@@ -620,12 +624,13 @@ fn cmd_network_pareto(args: &[String], cfg: &NetworkConfig) -> i32 {
     }
     let names: Vec<&str> = r.objectives.iter().map(|o| o.name()).collect();
     println!(
-        "{}: {} front points over [{}]; {} candidate segments, {} distinct shapes searched \
-         ({} memoized front points){}",
+        "{}: {} front points over [{}]; {} candidate segments ({} statically pruned), \
+         {} distinct shapes searched ({} memoized front points){}",
         cfg.network.name,
         r.points.len(),
         names.join(", "),
         r.candidate_segments,
+        r.candidates_pruned,
         r.distinct_searched,
         r.segment_front_points,
         if r.max_front_per_state > 0 {
@@ -683,10 +688,12 @@ fn cmd_network(args: &[String]) -> i32 {
             }
             let net = &cfg.network;
             println!(
-                "{}: {} layers, {} candidate segments, {} distinct shapes searched",
+                "{}: {} layers, {} candidate segments ({} statically pruned), {} distinct \
+                 shapes searched",
                 net.name,
                 net.num_layers(),
                 r.candidate_segments,
+                r.candidates_pruned,
                 r.distinct_searched
             );
             println!("cuts: {:?}", r.cuts);

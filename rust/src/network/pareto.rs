@@ -35,10 +35,21 @@
 //! mapspace). Axis costs reuse
 //! [`SearchSpec::score_objective`](crate::search::SearchSpec::score_objective),
 //! so the infeasibility penalty applies per axis exactly as in scalar runs.
+//!
+//! Like the scalar DPs, both entries run the once-per-network static
+//! analysis first: candidates whose closed-form capacity floor
+//! ([`crate::analysis::segment_floors`]) already exceeds the GLB are
+//! skipped without a mapspace search, under a lossless guard that accepts
+//! the survivor front only when it strictly dominates every pruned
+//! candidate's per-axis floor vector — otherwise the pruned shapes are
+//! searched after all and the front is re-derived over the full candidate
+//! set. Either way the emitted front is bit-identical to a run with
+//! [`SearchSpec::prune`](crate::search::SearchSpec::prune) off;
+//! [`NetworkParetoResult::candidates_pruned`] reports the skips.
 
 use super::partition::{
     chain_candidates, dag_candidates, nonvirtual_closure, real_positions, search_distinct_map,
-    Candidate, NetworkSearchSpec, SegmentChoice,
+    static_prune, Candidate, NetworkSearchSpec, SegmentChoice,
 };
 use super::Network;
 use crate::arch::Arch;
@@ -102,6 +113,12 @@ pub struct NetworkParetoResult {
     /// Total pruned per-segment front points across distinct signatures
     /// (the memo table's size, and the DP's branching driver).
     pub segment_front_points: usize,
+    /// How many candidate segments were skipped without a search because
+    /// their closed-form capacity floor already exceeds the GLB budget
+    /// (see [`crate::analysis::segment_floors`]). `0` whenever the
+    /// lossless guard forced the re-evaluate fallback; the emitted front
+    /// is bit-identical with pruning on or off either way.
+    pub candidates_pruned: usize,
 }
 
 impl NetworkParetoResult {
@@ -137,6 +154,10 @@ impl NetworkParetoResult {
                 (
                     "distinct_searched".to_string(),
                     Json::Num(self.distinct_searched as f64),
+                ),
+                (
+                    "candidates_pruned".to_string(),
+                    Json::Num(self.candidates_pruned as f64),
                 ),
             ]
             .into_iter()
@@ -497,15 +518,7 @@ pub fn search_network_pareto(
     check_spec(spec)?;
     if net.is_chain() {
         let candidates = chain_candidates(net, spec.max_segment_layers);
-        let fronts = search_distinct_fronts(net, arch, spec, &candidates, pool)?;
-        let solutions = chain_dp_fronts(
-            net,
-            &candidates,
-            &fronts,
-            spec.objectives.len(),
-            spec.max_front_per_state,
-        )?;
-        finish(net, spec, &candidates, fronts, solutions)
+        run_front_dp(net, arch, spec, candidates, pool, chain_dp_fronts)
     } else {
         search_network_pareto_dag_impl(net, arch, spec, pool)
     }
@@ -534,34 +547,102 @@ fn search_network_pareto_dag_impl(
     // Cheap structural limit first, as in the scalar path.
     real_positions(net)?;
     let candidates = dag_candidates(net, spec.max_segment_layers)?;
+    run_front_dp(net, arch, spec, candidates, pool, dag_dp_fronts)
+}
+
+/// The shared front search-and-DP driver behind [`search_network_pareto`]
+/// (chain arm) and [`search_network_pareto_dag`], with provably lossless
+/// static candidate pruning when the spec allows it.
+///
+/// Pruning discipline (the front analogue of the scalar DP's guard):
+/// candidates whose closed-form capacity floor exceeds the GLB
+/// ([`crate::analysis::segment_floors`]) are skipped and the front DP runs
+/// over the survivors. The survivor front is accepted only when, for every
+/// pruned candidate, some front point strictly beats the candidate's
+/// per-axis cost floor vector on *every* axis — then no label routed
+/// through a pruned candidate (componentwise at least that floor, and
+/// route costs only grow) can dominate any front-bound label or land on
+/// the front itself, and exact (uncapped) dominance filtering keeps a
+/// superset of labels when competitors are removed, so the emitted front
+/// is identical. The gate therefore also requires `max_front_per_state ==
+/// 0`: a beam cap breaks the superset argument. When the guard fails, the
+/// pruned shapes are searched after all and the DP reruns over the full
+/// candidate set (reporting `candidates_pruned: 0`) — per-signature
+/// searches are independent and deterministic, so the fallback, too, is
+/// bit-identical to a run with pruning disabled.
+fn run_front_dp(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    candidates: Vec<Candidate>,
+    pool: &Coordinator,
+    dp: fn(
+        &Network,
+        &[Candidate],
+        &HashMap<String, Option<Vec<SegPoint>>>,
+        usize,
+        usize,
+    ) -> Result<Vec<Vec<(usize, usize)>>, String>,
+) -> Result<NetworkParetoResult, String> {
+    let arity = spec.objectives.len();
+    let prunable = spec.search.prune
+        && spec.max_front_per_state == 0
+        && (spec.search.penalize_infeasible
+            || spec.objectives.iter().all(|&o| o == Objective::FeasibleEdp))
+        && arch.glb_capacity().is_some();
+    if prunable {
+        let (survivors, pruned, floor_vecs) = static_prune(net, arch, &candidates, |f| {
+            f.floor_costs(&spec.objectives, &spec.search)
+        });
+        if !pruned.is_empty() && !survivors.is_empty() {
+            let mut fronts = search_distinct_fronts(net, arch, spec, &survivors, pool)?;
+            let attempt = dp(net, &survivors, &fronts, arity, 0)
+                .and_then(|sols| assemble_front(net, &survivors, &fronts, sols));
+            if let Ok(points) = attempt {
+                let beaten = |fv: &Vec<f64>| {
+                    points.iter().any(|p| {
+                        p.costs
+                            .iter()
+                            .zip(fv)
+                            .all(|(c, f)| c.total_cmp(f) == std::cmp::Ordering::Less)
+                    })
+                };
+                if floor_vecs.iter().all(beaten) {
+                    return Ok(finish(spec, &fronts, candidates.len(), pruned.len(), points));
+                }
+            }
+            // Lossless-guard fallback: a pruned candidate could still reach
+            // the front. Search the pruned shapes too (their signatures are
+            // disjoint from the survivors') and rerun over everything.
+            fronts.extend(search_distinct_fronts(net, arch, spec, &pruned, pool)?);
+            let sols = dp(net, &candidates, &fronts, arity, 0)?;
+            let points = assemble_front(net, &candidates, &fronts, sols)?;
+            return Ok(finish(spec, &fronts, candidates.len(), 0, points));
+        }
+    }
     let fronts = search_distinct_fronts(net, arch, spec, &candidates, pool)?;
-    let solutions = dag_dp_fronts(
-        net,
-        &candidates,
-        &fronts,
-        spec.objectives.len(),
-        spec.max_front_per_state,
-    )?;
-    finish(net, spec, &candidates, fronts, solutions)
+    let sols = dp(net, &candidates, &fronts, arity, spec.max_front_per_state)?;
+    let points = assemble_front(net, &candidates, &fronts, sols)?;
+    Ok(finish(spec, &fronts, candidates.len(), 0, points))
 }
 
 fn finish(
-    net: &Network,
     spec: &NetworkSearchSpec,
-    candidates: &[Candidate],
-    fronts: HashMap<String, Option<Vec<SegPoint>>>,
-    solutions: Vec<Vec<(usize, usize)>>,
-) -> Result<NetworkParetoResult, String> {
-    let points = assemble_front(net, candidates, &fronts, solutions)?;
+    fronts: &HashMap<String, Option<Vec<SegPoint>>>,
+    candidate_segments: usize,
+    candidates_pruned: usize,
+    points: Vec<NetworkParetoPoint>,
+) -> NetworkParetoResult {
     debug_assert!(points
         .windows(2)
         .all(|w| cmp_costs(&w[0].costs, &w[1].costs) == std::cmp::Ordering::Less));
-    Ok(NetworkParetoResult {
+    NetworkParetoResult {
         objectives: spec.objectives.clone(),
         max_front_per_state: spec.max_front_per_state,
         points,
         distinct_searched: fronts.len(),
-        candidate_segments: candidates.len(),
-        segment_front_points: front_size(&fronts),
-    })
+        candidate_segments,
+        segment_front_points: front_size(fronts),
+        candidates_pruned,
+    }
 }

@@ -20,6 +20,14 @@
 //! from the inner search, so the DP prefers any feasible partition over an
 //! infeasible one — the "under a GLB budget" constraint.
 //!
+//! Before any search runs, candidates whose closed-form capacity floor
+//! ([`crate::analysis::segment_floors`]) already exceeds the GLB budget are
+//! statically pruned — skipped without a mapspace search — under a lossless
+//! guard (see `run_scalar_dp`): the survivor optimum must strictly beat
+//! every pruned floor, else everything is re-searched. Results are
+//! bit-identical with pruning on ([`SearchSpec::prune`]) or off;
+//! [`NetworkSearchResult::candidates_pruned`] reports the savings.
+//!
 //! Distinct segments fan out over the [`Coordinator`]; each per-segment
 //! search runs serially inside its worker. Results are merged by segment
 //! index, so the outcome is bit-identical for any worker count.
@@ -145,6 +153,13 @@ pub struct NetworkSearchResult {
     pub distinct_searched: usize,
     /// How many candidate segments the DP considered.
     pub candidate_segments: usize,
+    /// How many candidate segments were skipped without a search because
+    /// their closed-form capacity floor already exceeds the GLB budget
+    /// (see [`crate::analysis::segment_floors`]). `0` whenever the
+    /// lossless guard forced the re-evaluate fallback, so a nonzero count
+    /// certifies the pruned run — the result itself is bit-identical with
+    /// pruning on or off either way.
+    pub candidates_pruned: usize,
 }
 
 impl NetworkSearchResult {
@@ -204,6 +219,10 @@ impl NetworkSearchResult {
                 (
                     "symbolic_segments".to_string(),
                     Json::Num(self.symbolic_segments() as f64),
+                ),
+                (
+                    "candidates_pruned".to_string(),
+                    Json::Num(self.candidates_pruned as f64),
                 ),
                 ("all_fit".to_string(), Json::Bool(self.all_fit())),
             ]
@@ -296,6 +315,7 @@ fn assemble(
     mut chosen: Vec<Candidate>,
     costs: &HashMap<String, Option<Scored>>,
     candidate_segments: usize,
+    candidates_pruned: usize,
 ) -> Result<NetworkSearchResult, String> {
     // Present segments in topological order of their sinks.
     chosen.sort_by_key(|c| *c.nodes.last().unwrap());
@@ -323,7 +343,118 @@ fn assemble(
         total_score,
         distinct_searched: costs.len(),
         candidate_segments,
+        candidates_pruned,
     })
+}
+
+// ------------------------------------------- static candidate pruning --
+
+/// Partition `candidates` into search survivors and statically-pruned
+/// candidates, memoizing [`crate::analysis::segment_floors`] per signature
+/// (equal signatures build identical einsums, so they share one floor). A
+/// candidate is pruned exactly when every mapping of it is provably
+/// GLB-infeasible; `floor(f)` — the scalar score floor here, the per-axis
+/// cost floor vector in the Pareto DP — rides along for the lossless
+/// guard. Candidates whose floors cannot be computed are kept. Relative
+/// enumeration order is preserved within each part, keeping every DP
+/// tie-break stable.
+pub(crate) fn static_prune<T: Clone>(
+    net: &Network,
+    arch: &Arch,
+    candidates: &[Candidate],
+    floor: impl Fn(&crate::analysis::SegmentFloors) -> T,
+) -> (Vec<Candidate>, Vec<Candidate>, Vec<T>) {
+    let mut floor_of: HashMap<&str, Option<T>> = HashMap::new();
+    let mut survivors = Vec::new();
+    let mut pruned = Vec::new();
+    let mut floors = Vec::new();
+    for c in candidates {
+        let fl = floor_of.entry(c.signature.as_str()).or_insert_with(|| {
+            match crate::analysis::segment_floors(net, arch, &c.nodes) {
+                Ok(f) if f.provably_infeasible(arch) => Some(floor(&f)),
+                _ => None,
+            }
+        });
+        match fl {
+            Some(f) => {
+                pruned.push(c.clone());
+                floors.push(f.clone());
+            }
+            None => survivors.push(c.clone()),
+        }
+    }
+    (survivors, pruned, floors)
+}
+
+/// The shared scalar search-and-DP driver behind [`search_network`] (chain
+/// arm) and [`search_network_dag`]: search every distinct candidate shape,
+/// run `dp` over the candidates, assemble the result — with provably
+/// lossless static candidate pruning when the spec allows it.
+///
+/// Pruning discipline (the network-scale analogue of the search pruner's
+/// `score_all_pruned`): candidates whose closed-form capacity floor exceeds
+/// the GLB are skipped and the DP runs over the survivors. The survivor
+/// optimum `T` is accepted only when `T` strictly beats every pruned
+/// candidate's score floor — then any cover using a pruned candidate would
+/// total at least that floor (scores are nonnegative, so a partial sum
+/// already exceeding `T` can never come back down), the winning backpointer
+/// chain is survivor-only, and candidate enumeration order is preserved
+/// among survivors, so the first-strict-minimum tie-breaks match: the
+/// result is bit-identical to the unpruned run. When the guard fails (or no
+/// survivor cover exists), the pruned shapes are searched after all and the
+/// DP reruns over the full candidate set — per-signature searches are
+/// independent and deterministic, so the fallback, too, is bit-identical to
+/// a run with pruning disabled (it reports `candidates_pruned: 0`).
+fn run_scalar_dp(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    candidates: Vec<Candidate>,
+    pool: &Coordinator,
+    dp: fn(
+        &Network,
+        &[Candidate],
+        &HashMap<String, Option<Scored>>,
+    ) -> Result<Vec<Candidate>, String>,
+) -> Result<NetworkSearchResult, String> {
+    // Same gate as the mapping-level pruner: pruning needs the penalty (or
+    // FeasibleEdp's built-in one) for the floor to bound the score, and a
+    // GLB capacity to be infeasible against.
+    let prunable = spec.search.prune
+        && (spec.search.penalize_infeasible || spec.search.objective == Objective::FeasibleEdp)
+        && arch.glb_capacity().is_some();
+    if prunable {
+        let (survivors, pruned, floors) =
+            static_prune(net, arch, &candidates, |f| f.floor_score(&spec.search));
+        if !pruned.is_empty() && !survivors.is_empty() {
+            let mut costs = search_distinct(net, arch, spec, &survivors, pool)?;
+            let min_floor = floors.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+            if let Ok(chosen) = dp(net, &survivors, &costs) {
+                let total: f64 = chosen
+                    .iter()
+                    .map(|c| {
+                        costs
+                            .get(&c.signature)
+                            .and_then(|o| o.as_ref())
+                            .map_or(f64::INFINITY, |s| s.score)
+                    })
+                    .sum();
+                if total.total_cmp(&min_floor) == std::cmp::Ordering::Less {
+                    return assemble(net, chosen, &costs, candidates.len(), pruned.len());
+                }
+            }
+            // Lossless-guard fallback: a pruned candidate could still
+            // matter. Search the pruned shapes too (their signatures are
+            // disjoint from the survivors') and rerun over everything.
+            costs.extend(search_distinct(net, arch, spec, &pruned, pool)?);
+            let chosen = dp(net, &candidates, &costs)?;
+            return assemble(net, chosen, &costs, candidates.len(), 0);
+        }
+    }
+    let costs = search_distinct(net, arch, spec, &candidates, pool)?;
+    let chosen = dp(net, &candidates, &costs)?;
+    let n = candidates.len();
+    assemble(net, chosen, &costs, n, 0)
 }
 
 // ------------------------------------------------------ chain (path) DP --
@@ -622,9 +753,7 @@ pub fn search_network(
     }
     if net.is_chain() {
         let candidates = chain_candidates(net, spec.max_segment_layers);
-        let costs = search_distinct(net, arch, spec, &candidates, pool)?;
-        let chosen = chain_dp(net, &candidates, &costs)?;
-        assemble(net, chosen, &costs, candidates.len())
+        run_scalar_dp(net, arch, spec, candidates, pool, chain_dp)
     } else {
         search_network_dag_impl(net, arch, spec, pool)
     }
@@ -656,9 +785,7 @@ fn search_network_dag_impl(
     // for hundreds of per-segment mapspace searches the DP cannot use.
     real_positions(net)?;
     let candidates = dag_candidates(net, spec.max_segment_layers)?;
-    let costs = search_distinct(net, arch, spec, &candidates, pool)?;
-    let chosen = dag_dp(net, &candidates, &costs)?;
-    assemble(net, chosen, &costs, candidates.len())
+    run_scalar_dp(net, arch, spec, candidates, pool, dag_dp)
 }
 
 /// Score a *given* partition of `net` into explicit node-set segments: the
@@ -708,9 +835,11 @@ pub fn evaluate_segments(
             return Err(format!("node {i} ('{}') is not covered by any segment", l.name));
         }
     }
+    // A fixed partition is scored as given: no candidate is skipped, so the
+    // static pruner does not apply here.
     let costs = search_distinct(net, arch, spec, &candidates, pool)?;
     let nseg = candidates.len();
-    assemble(net, candidates, &costs, nseg)
+    assemble(net, candidates, &costs, nseg, 0)
 }
 
 /// Score a *given* partition described by chain cut points (ascending,

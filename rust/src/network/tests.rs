@@ -1084,3 +1084,202 @@ fn totals_are_consistent_with_segments() {
     assert_eq!(res.total_offchip(), off);
     assert!(res.total_energy_pj() > 0.0);
 }
+
+// -------------------------------------------- static candidate pruning --
+
+/// A 2-layer 96-channel conv stack whose fused pair provably overflows a
+/// 128 KiB GLB: producing even one sink output element needs every
+/// intermediate channel, hence all of conv0's weights — 96·96·3·3 = 82944
+/// elems = 165888 B > 131072 B — while each single layer maps comfortably.
+/// The closed-form floor prunes exactly the fused candidate.
+fn prune_stack() -> Network {
+    let conv = || LayerOp::Conv2d { out_channels: 96, r: 3, s: 3, stride: 1 };
+    let mut net = Network { name: "prune_stack".into(), layers: vec![] };
+    net.push("conv0", &[96, 22, 22], conv());
+    net.push("conv1", &[96, 20, 20], conv());
+    net
+}
+
+/// A mapspace in which the prune-stack single layers have feasible
+/// mappings, so the survivor optimum is unpenalized and the lossless guard
+/// passes with orders of magnitude to spare.
+fn prune_spec() -> NetworkSearchSpec {
+    NetworkSearchSpec {
+        max_segment_layers: 2,
+        search: SearchSpec {
+            mapspace: MapSpaceConfig {
+                uniform_retention: true,
+                tile_sizes: vec![4, 8],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn assert_scalar_results_identical(a: &NetworkSearchResult, b: &NetworkSearchResult, name: &str) {
+    assert_eq!(a.cuts, b.cuts, "{name}");
+    assert_eq!(a.total_score.to_bits(), b.total_score.to_bits(), "{name}");
+    assert_eq!(a.segments.len(), b.segments.len(), "{name}");
+    for (x, y) in a.segments.iter().zip(&b.segments) {
+        assert_eq!(x.nodes, y.nodes, "{name}");
+        assert_eq!(x.signature, y.signature, "{name}");
+        assert_eq!(x.best.mapping, y.best.mapping, "{name}");
+        assert_eq!(x.best.score.to_bits(), y.best.score.to_bits(), "{name}");
+        assert_eq!(x.best.metrics.latency_cycles, y.best.metrics.latency_cycles, "{name}");
+        assert_eq!(
+            x.best.metrics.energy.total_pj().to_bits(),
+            y.best.metrics.energy.total_pj().to_bits(),
+            "{name}"
+        );
+    }
+}
+
+fn assert_fronts_identical(a: &NetworkParetoResult, b: &NetworkParetoResult, name: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{name}");
+    for (x, y) in a.points.iter().zip(&b.points) {
+        let xc: Vec<u64> = x.costs.iter().map(|c| c.to_bits()).collect();
+        let yc: Vec<u64> = y.costs.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(xc, yc, "{name}");
+        assert_eq!(x.cuts, y.cuts, "{name}");
+        assert_eq!(x.segments.len(), y.segments.len(), "{name}");
+        for (s, t) in x.segments.iter().zip(&y.segments) {
+            assert_eq!(s.nodes, t.nodes, "{name}");
+            assert_eq!(s.best.mapping, t.best.mapping, "{name}");
+            assert_eq!(s.best.score.to_bits(), t.best.score.to_bits(), "{name}");
+        }
+    }
+}
+
+/// The acceptance pin: the static floor prunes the provably-oversized
+/// fused candidate before any mapspace search, the lossless guard
+/// certifies the survivor optimum, and the result is bit-identical to the
+/// unpruned run — with fewer distinct shapes searched.
+#[test]
+fn static_pruning_fires_and_is_bit_lossless() {
+    let net = prune_stack();
+    let arch = Arch::generic(128);
+    let pool = Coordinator::new(2);
+    let spec = prune_spec();
+    let on = search_network(&net, &arch, &spec, &pool).unwrap();
+    // 2 single-layer + 1 fused candidate; only the fused pair overflows.
+    assert_eq!(on.candidate_segments, 3);
+    assert_eq!(on.candidates_pruned, 1);
+    assert_eq!(on.distinct_searched, 2);
+    let mut off_spec = spec.clone();
+    off_spec.search.prune = false;
+    let off = search_network(&net, &arch, &off_spec, &pool).unwrap();
+    assert_eq!(off.candidates_pruned, 0);
+    assert_eq!(off.distinct_searched, 3);
+    assert_scalar_results_identical(&on, &off, "prune_stack");
+    // The same holds for the Pareto front over the same candidates.
+    let front_on = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
+    assert_eq!(front_on.candidates_pruned, 1);
+    let front_off = search_network_pareto(&net, &arch, &off_spec, &pool).unwrap();
+    assert_eq!(front_off.candidates_pruned, 0);
+    assert_fronts_identical(&front_on, &front_off, "prune_stack");
+}
+
+/// Bit-identity of the scalar DP with pruning on vs off on the real
+/// presets (branched resnet18 and mobilenet exercise the graph DP, the
+/// tiny residual the brute-force-checked path). Whether the floors prune,
+/// guard-pass, or fall back, the output may not move by a single bit.
+#[test]
+fn static_pruning_is_bit_lossless_on_presets() {
+    let pool = Coordinator::new(2);
+    let spec = NetworkSearchSpec {
+        max_segment_layers: 2,
+        search: SearchSpec {
+            mapspace: MapSpaceConfig {
+                uniform_retention: true,
+                tile_sizes: vec![32],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut off = spec.clone();
+    off.search.prune = false;
+    for (net, arch) in [
+        (resnet18(), Arch::generic(64)),
+        (mobilenet_v2(), Arch::generic(64)),
+    ] {
+        let a = search_network(&net, &arch, &spec, &pool).unwrap();
+        let b = search_network(&net, &arch, &off, &pool).unwrap();
+        assert_eq!(b.candidates_pruned, 0, "{}", net.name);
+        assert_scalar_results_identical(&a, &b, &net.name);
+    }
+    // The tiny residual graph with its own (brute-force-scaled) mapspace.
+    let net = tiny_residual();
+    let arch = Arch::generic(32);
+    let spec = tiny_spec(2);
+    let mut off = spec.clone();
+    off.search.prune = false;
+    let a = search_network(&net, &arch, &spec, &pool).unwrap();
+    let b = search_network(&net, &arch, &off, &pool).unwrap();
+    assert_scalar_results_identical(&a, &b, &net.name);
+}
+
+/// The front analogue of the preset bit-identity pin: uncapped Pareto
+/// fronts with pruning on vs off are byte-identical on a branched preset
+/// and the tiny residual graph.
+#[test]
+fn pareto_pruning_is_bit_lossless_on_presets() {
+    let pool = Coordinator::new(2);
+    let spec = NetworkSearchSpec {
+        max_segment_layers: 2,
+        search: SearchSpec {
+            mapspace: MapSpaceConfig {
+                uniform_retention: true,
+                tile_sizes: vec![32],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut off = spec.clone();
+    off.search.prune = false;
+    let net = resnet18();
+    let arch = Arch::generic(64);
+    let a = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
+    let b = search_network_pareto(&net, &arch, &off, &pool).unwrap();
+    assert_eq!(b.candidates_pruned, 0, "{}", net.name);
+    assert_fronts_identical(&a, &b, &net.name);
+    let net = tiny_residual();
+    let arch = Arch::generic(32);
+    let spec = tiny_spec(2);
+    let mut off = spec.clone();
+    off.search.prune = false;
+    let a = search_network_pareto(&net, &arch, &spec, &pool).unwrap();
+    let b = search_network_pareto(&net, &arch, &off, &pool).unwrap();
+    assert_fronts_identical(&a, &b, &net.name);
+}
+
+/// Lint soundness: a network that lints clean yields a valid fusion set
+/// for every candidate the DPs enumerate — the plan-time acceptance the
+/// linter reuses and the full builder cannot disagree.
+#[test]
+fn lint_clean_networks_have_buildable_candidates() {
+    use crate::analysis::lint_document;
+    for net in [resnet18(), mobilenet_v2(), vgg16(), bert_encoder(1, 2, 32, 16)] {
+        let doc = Json::parse(&format!("{{\"network\": {}}}", net.to_json())).unwrap();
+        let report = lint_document(&doc);
+        assert_eq!(report.exit_code(), 0, "{}: {:#?}", net.name, report.diagnostics);
+        let candidates = if net.is_chain() {
+            chain_candidates(&net, 3)
+        } else {
+            dag_candidates(&net, 3).unwrap()
+        };
+        assert!(!candidates.is_empty(), "{}", net.name);
+        for c in &candidates {
+            let fs = net
+                .segment_fusion_set_nodes(&c.nodes)
+                .unwrap_or_else(|e| panic!("{} {:?}: {e}", net.name, c.nodes));
+            fs.validate()
+                .unwrap_or_else(|e| panic!("{} {:?}: {e}", net.name, c.nodes));
+        }
+    }
+}

@@ -978,7 +978,10 @@ impl LayerOp {
             "add" => Ok(LayerOp::Add),
             "concat" => Ok(LayerOp::Concat),
             "pad" => Ok(LayerOp::Pad { h: i64_field(j, "h", ctx)?, w: i64_field(j, "w", ctx)? }),
-            other => Err(format!("{ctx}: unknown op '{other}'")),
+            other => Err(format!(
+                "{ctx}: unknown op '{other}' (expected conv2d|pointwise|depthwise|maxpool|\
+                 fc|attention_scores|attention_values|add|concat|pad)"
+            )),
         }
     }
 }
@@ -1016,7 +1019,10 @@ impl LayerSpec {
                 let mut inputs = Vec::with_capacity(raw.len());
                 for p in raw {
                     if p < 0 {
-                        return Err(format!("{ctx}: negative input edge {p}"));
+                        return Err(format!(
+                            "{}: negative input edge {p}",
+                            jpath(ctx, "inputs")
+                        ));
                     }
                     inputs.push(p as usize);
                 }
@@ -1074,9 +1080,25 @@ impl Network {
                 .map(|(i, v)| LayerSpec::from_json_at(v, i, &jidx(ctx, key, i)))
                 .collect::<Result<_, _>>()?,
         };
-        net.validate().map_err(|e| format!("{ctx}: {e}"))?;
+        net.validate().map_err(|e| reroot_validate_error(e, ctx, key))?;
         Ok(net)
     }
+}
+
+/// Reroot a [`Network::validate`] error — which names the offending node as
+/// `layer {i} '…'` — onto the JSON path of the node that failed, so lint
+/// and CLI users see `network.nodes[3]: layer '…' (op add): …` and can jump
+/// straight to the document span that needs fixing.
+fn reroot_validate_error(e: String, ctx: &str, key: &str) -> String {
+    if let Some(rest) = e.strip_prefix("layer ") {
+        let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
+        if let Ok(i) = digits.parse::<usize>() {
+            if let Some(tail) = rest[digits.len()..].strip_prefix(' ') {
+                return format!("{}: layer {tail}", jidx(ctx, key, i));
+            }
+        }
+    }
+    format!("{ctx}: {e}")
 }
 
 /// Parse a compact network spec string: `resnet18` (residual DAG) |
@@ -1580,6 +1602,7 @@ impl NetworkParetoResult {
             ("distinct_searched", jnum_u(self.distinct_searched)),
             ("candidate_segments", jnum_u(self.candidate_segments)),
             ("segment_front_points", jnum_u(self.segment_front_points)),
+            ("candidates_pruned", jnum_u(self.candidates_pruned)),
         ])
     }
 }

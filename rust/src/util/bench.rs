@@ -119,11 +119,12 @@ fn check_rows(
 /// uploads that artifact and diffs its deterministic counters across two
 /// runs; the bench binary asserts this schema before writing and the test
 /// suite pins it, so consumers downstream never see silent drift.
-pub const NETWORK_BENCH_NUM_KEYS: [&str; 8] = [
+pub const NETWORK_BENCH_NUM_KEYS: [&str; 9] = [
     "mean_ns",
     "layers",
     "cuts",
     "candidate_segments",
+    "candidates_pruned",
     "distinct_searched",
     "total_score",
     "total_offchip_elems",
@@ -132,13 +133,14 @@ pub const NETWORK_BENCH_NUM_KEYS: [&str; 8] = [
 
 /// The per-row numeric keys of `BENCH_network.json`'s `pareto_rows` section
 /// (front sizes of the network-level Pareto DP).
-pub const NETWORK_PARETO_BENCH_NUM_KEYS: [&str; 7] = [
+pub const NETWORK_PARETO_BENCH_NUM_KEYS: [&str; 8] = [
     "mean_ns",
     "layers",
     "objectives",
     "front_points",
     "segment_front_points",
     "candidate_segments",
+    "candidates_pruned",
     "distinct_searched",
 ];
 

@@ -39,6 +39,31 @@ fn malformed_corpus_is_golden() {
 }
 
 #[test]
+fn malformed_network_corpus_is_golden() {
+    // (file, expected codes in order, expected severity-derived exit code,
+    // expected path of the first diagnostic)
+    let corpus: &[(&str, &[&str], i32, &str)] = &[
+        ("bad_edge_shape.json", &["LT101"], 2, "network.nodes[4]"),
+        ("bad_dangling_node.json", &["LT102"], 1, "network.nodes[1]"),
+        ("bad_cuts_multisink.json", &["LT103"], 2, "cuts[0]"),
+        ("bad_interior_pad.json", &["LT104"], 2, "cuts"),
+        ("bad_residual_parity.json", &["LT105"], 2, "cuts"),
+        ("bad_glb_segment.json", &["LT106"], 1, "cuts"),
+    ];
+    for &(file, expected, exit, path) in corpus {
+        let report = lint_file(&format!("../examples/lint/network/{file}"));
+        let codes: Vec<&str> = report.diagnostics.iter().map(|d| d.code).collect();
+        assert_eq!(codes, expected, "{file}: {:#?}", report.diagnostics);
+        assert_eq!(report.exit_code(), exit, "{file}");
+        assert_eq!(report.diagnostics[0].path, path, "{file}");
+        for d in &report.diagnostics {
+            assert!(!d.message.is_empty(), "{file}: empty message");
+            assert!(!d.hint.is_empty(), "{file}: empty hint");
+        }
+    }
+}
+
+#[test]
 fn corpus_directory_is_fully_pinned() {
     // Every file in examples/lint/ must appear in the golden table above —
     // adding a corpus file without pinning its codes is an error.
@@ -59,6 +84,24 @@ fn corpus_directory_is_fully_pinned() {
             "bad_shape.json",
             "bad_workload.json",
             "bad_zero_budget.json",
+            "network",
+        ]
+    );
+    // Same rule for the network corpus subdirectory.
+    let mut files: Vec<String> = std::fs::read_dir("../examples/lint/network")
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    files.sort();
+    assert_eq!(
+        files,
+        vec![
+            "bad_cuts_multisink.json",
+            "bad_dangling_node.json",
+            "bad_edge_shape.json",
+            "bad_glb_segment.json",
+            "bad_interior_pad.json",
+            "bad_residual_parity.json",
         ]
     );
 }

@@ -5,7 +5,10 @@
 //! comparison: closed-form symbolic box walk vs. steady-state fast path vs.
 //! exhaustive reference walk on long row-tiled walks. The bench asserts all
 //! three tiers agree bit-for-bit and pins which configurations the symbolic
-//! walk must cover (`Metrics::path.symbolic`).
+//! walk must cover (`Metrics::path.symbolic`), which of those must take the
+//! bounded box-union (multibox) path (`peak_union_width >= 2`), and that a
+//! genuinely-refusing mapping gets its repeat symbolic attempts absorbed by
+//! the session's refusal memo.
 //!
 //! Emits `BENCH_model_eval.json` (workload, mean ns, iterations/s, the
 //! fast-vs-reference speedups, and the symbolic-vs-fast speedups) so the
@@ -13,7 +16,7 @@
 //! repetitions for CI.
 
 use looptree::arch::Arch;
-use looptree::einsum::workloads;
+use looptree::einsum::{workloads, FusionSetBuilder};
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
 use looptree::model::{evaluate, EvalOptions, Evaluator};
 use looptree::sim::simulate;
@@ -21,6 +24,54 @@ use looptree::util::bench::{
     bench, check_model_eval_bench_schema, reps, write_bench_json, BenchResult,
 };
 use looptree::util::json::Json;
+
+/// One `symbolic_speedups` row of `BENCH_model_eval.json`: the three-tier
+/// timing comparison plus the deterministic path-attribution counters the
+/// CI determinism gate diffs.
+struct SymRow {
+    label: String,
+    iterations: i64,
+    symbolic_ns: f64,
+    fast_ns: f64,
+    reference_ns: f64,
+    speedup_vs_fast: f64,
+    symbolic_fired: bool,
+    peak_union_width: i64,
+    refusal_memo_hits: i64,
+}
+
+impl SymRow {
+    fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                ("workload".to_string(), Json::Str(self.label.clone())),
+                ("iterations".to_string(), Json::Num(self.iterations as f64)),
+                ("symbolic_mean_ns".to_string(), Json::Num(self.symbolic_ns)),
+                ("fast_mean_ns".to_string(), Json::Num(self.fast_ns)),
+                ("reference_mean_ns".to_string(), Json::Num(self.reference_ns)),
+                (
+                    "speedup_vs_fast".to_string(),
+                    Json::Num(self.speedup_vs_fast),
+                ),
+                ("symbolic_fired".to_string(), Json::Bool(self.symbolic_fired)),
+                (
+                    "multibox_fired".to_string(),
+                    Json::Bool(self.peak_union_width >= 2),
+                ),
+                (
+                    "peak_union_width".to_string(),
+                    Json::Num(self.peak_union_width as f64),
+                ),
+                (
+                    "refusal_memo_hits".to_string(),
+                    Json::Num(self.refusal_memo_hits as f64),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
 
 fn main() {
     let arch = Arch::generic(1 << 20);
@@ -33,16 +84,19 @@ fn main() {
     // (rows, ch, partition spec): the 112×112 row-tiled configurations are
     // the acceptance gate — the reference walk is O(total tiles), the
     // steady-state fast path O(distinct tile classes), and the symbolic box
-    // walk O(schedule levels). `expect_symbolic` pins which configurations
-    // the closed-form path must cover: row-only (nested or not) tilings stay
-    // in single-box form; the row+col tiling wraps the availability set into
-    // an L-shape at each column boundary, so it must fall back.
+    // walk O(width² · schedule levels). `expect_symbolic` pins which
+    // configurations the closed-form path must cover; `expect_multibox`
+    // pins which of those need the bounded box-union calculus: row-only
+    // (nested or not) tilings stay in single-box form, while the row+col
+    // tiling wraps the fresh set into an L-shape at each column boundary —
+    // two boxes, within the width bound, so the walk no longer falls back.
     struct FastRow {
         label: &'static str,
         rows: i64,
         ch: i64,
         tiles: &'static [(&'static str, i64)],
         expect_symbolic: bool,
+        expect_multibox: bool,
     }
     let configs = [
         FastRow {
@@ -51,13 +105,15 @@ fn main() {
             ch: 64,
             tiles: &[("P2", 1)],
             expect_symbolic: true,
+            expect_multibox: false,
         },
         FastRow {
             label: "conv_conv(112,64) row+col-tiled",
             rows: 112,
             ch: 64,
             tiles: &[("P2", 1), ("Q2", 1)],
-            expect_symbolic: false,
+            expect_symbolic: true,
+            expect_multibox: true,
         },
         FastRow {
             label: "conv_conv(112,64) nested row-tiled",
@@ -65,6 +121,7 @@ fn main() {
             ch: 64,
             tiles: &[("P2", 8), ("P2", 1)],
             expect_symbolic: true,
+            expect_multibox: false,
         },
         FastRow {
             label: "conv_conv(56,64) row-tiled",
@@ -72,9 +129,11 @@ fn main() {
             ch: 64,
             tiles: &[("P2", 2)],
             expect_symbolic: true,
+            expect_multibox: false,
         },
     ];
     let mut any_symbolic = false;
+    let mut any_multibox = false;
     for cfg in &configs {
         let fs = workloads::conv_conv(cfg.rows, cfg.ch);
         let ev = Evaluator::new(&fs, &arch).unwrap();
@@ -101,7 +160,16 @@ fn main() {
                 cfg.label
             );
         }
+        assert_eq!(
+            m_sym.path.peak_union_width >= 2,
+            cfg.expect_multibox,
+            "multibox expectation drifted on {} (peak union width {})",
+            cfg.label,
+            m_sym.path.peak_union_width
+        );
         any_symbolic |= m_sym.path.symbolic;
+        any_multibox |= m_sym.path.peak_union_width >= 2;
+        let memo_hits = ev.refusal_memo_hits();
 
         let (w, n) = reps(2, 12);
         let symbolic = bench(&format!("symbolic  {}", cfg.label), w, n, || {
@@ -121,8 +189,8 @@ fn main() {
         let speedup_vs_fast = fast.mean.as_secs_f64() / symbolic.mean.as_secs_f64().max(1e-12);
         println!(
             "    {} iterations walked; fast-vs-reference {speedup:.1}x; \
-             symbolic-vs-fast {speedup_vs_fast:.2}x (fired: {})",
-            m_ref.iterations, m_sym.path.symbolic
+             symbolic-vs-fast {speedup_vs_fast:.2}x (fired: {}, peak union width: {})",
+            m_ref.iterations, m_sym.path.symbolic, m_sym.path.peak_union_width
         );
         speedups.push(Json::Obj(
             [
@@ -141,33 +209,97 @@ fn main() {
             .into_iter()
             .collect(),
         ));
-        symbolic_speedups.push(Json::Obj(
-            [
-                ("workload".to_string(), Json::Str(cfg.label.to_string())),
-                ("iterations".to_string(), Json::Num(m_ref.iterations as f64)),
-                (
-                    "symbolic_mean_ns".to_string(),
-                    Json::Num(symbolic.mean.as_nanos() as f64),
-                ),
-                (
-                    "fast_mean_ns".to_string(),
-                    Json::Num(fast.mean.as_nanos() as f64),
-                ),
-                (
-                    "reference_mean_ns".to_string(),
-                    Json::Num(reference.mean.as_nanos() as f64),
-                ),
-                ("speedup_vs_fast".to_string(), Json::Num(speedup_vs_fast)),
-                ("symbolic_fired".to_string(), Json::Bool(m_sym.path.symbolic)),
-            ]
-            .into_iter()
-            .collect(),
-        ));
+        symbolic_speedups.push(
+            SymRow {
+                label: cfg.label.to_string(),
+                iterations: m_ref.iterations,
+                symbolic_ns: symbolic.mean.as_nanos() as f64,
+                fast_ns: fast.mean.as_nanos() as f64,
+                reference_ns: reference.mean.as_nanos() as f64,
+                speedup_vs_fast,
+                symbolic_fired: m_sym.path.symbolic,
+                peak_union_width: m_sym.path.peak_union_width,
+                refusal_memo_hits: memo_hits,
+            }
+            .to_json(),
+        );
         rows.push(symbolic);
         rows.push(fast);
         rows.push(reference);
     }
     assert!(any_symbolic, "symbolic walk fired on no benchmark configuration");
+    assert!(any_multibox, "multibox walk fired on no benchmark configuration");
+
+    // Refusal + memoization row: two chained batched convs under a B,P,Q
+    // partition with retention 0 need a width-3 availability union at the
+    // batch-wrap leaf, so the width-2 calculus refuses once, memoizes the
+    // mapping signature, and every later evaluation of the same mapping
+    // skips the symbolic attempt outright (the timing advantage the
+    // `memoized` series measures vs the first refused-then-bailed run).
+    {
+        let fs = FusionSetBuilder::new("conv_conv_batched(3,8)", &[3, 2, 8, 8])
+            .conv2d_batched(2, 3, 3, 1)
+            .conv2d_batched(2, 3, 3, 1)
+            .build();
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let label = "conv_conv_batched(3,8) batch+row+col-tiled (refuses)";
+        let mapping = InterLayerMapping::tiled(
+            ["B2", "P2", "Q2"]
+                .iter()
+                .map(|n| Partition { dim: fs.last().rank_index(n).unwrap(), tile: 1 })
+                .collect(),
+            Parallelism::Sequential,
+        )
+        .with_uniform_retention(0);
+        let m_first = ev.evaluate(&mapping).unwrap();
+        assert!(m_first.path.sym_refused, "expected a union-width refusal on {label}");
+        let m_memo = ev.evaluate(&mapping).unwrap();
+        assert!(!m_memo.path.symbolic && !m_memo.path.sym_refused);
+        let memo_hits = ev.refusal_memo_hits();
+        assert_eq!(memo_hits, 1, "refusal memo did not absorb the repeat attempt");
+        let m_ref = ev.evaluate_reference(&mapping).unwrap();
+        assert_eq!(m_first.latency_cycles, m_ref.latency_cycles, "refused walk drifted");
+        assert_eq!(m_first.iterations, m_ref.iterations, "refused walk drifted");
+
+        let (w, n) = reps(2, 12);
+        let memoized = bench(&format!("memoized  {label}"), w, n, || {
+            ev.evaluate(&mapping).unwrap()
+        });
+        let fast = bench(&format!("fast      {label}"), w, n, || {
+            ev.evaluate_no_symbolic(&mapping).unwrap()
+        });
+        let (w, n) = reps(1, 4);
+        let reference = bench(&format!("reference {label}"), w, n, || {
+            ev.evaluate_reference(&mapping).unwrap()
+        });
+        println!("{}", memoized.report());
+        println!("{}", fast.report());
+        println!("{}", reference.report());
+        let speedup_vs_fast =
+            fast.mean.as_secs_f64() / memoized.mean.as_secs_f64().max(1e-12);
+        println!(
+            "    {} iterations walked; memoized-vs-fast {speedup_vs_fast:.2}x \
+             ({memo_hits} memo hit before benching)",
+            m_ref.iterations
+        );
+        symbolic_speedups.push(
+            SymRow {
+                label: label.to_string(),
+                iterations: m_ref.iterations,
+                symbolic_ns: memoized.mean.as_nanos() as f64,
+                fast_ns: fast.mean.as_nanos() as f64,
+                reference_ns: reference.mean.as_nanos() as f64,
+                speedup_vs_fast,
+                symbolic_fired: false,
+                peak_union_width: 0,
+                refusal_memo_hits: memo_hits,
+            }
+            .to_json(),
+        );
+        rows.push(memoized);
+        rows.push(fast);
+        rows.push(reference);
+    }
 
     println!("\n== validate-once session vs per-call validation ==");
     for (r, ch, tile) in [(14, 8, 4), (28, 32, 4), (56, 64, 8)] {

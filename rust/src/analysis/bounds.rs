@@ -20,9 +20,9 @@
 //!   data), so per-layer executed operations and per-tensor off-chip
 //!   fetches are bounded below by the full-domain needs.
 //!
-//! The needs sweeps themselves go through the symbolic box calculus
-//! ([`super::symbolic::box_needs_into`]) whenever the footprints stay
-//! single-box — the same closed forms the engine's symbolic evaluation path
+//! The needs sweeps themselves go through the symbolic union-box calculus
+//! (`super::symbolic::set_needs_into`) whenever the footprints stay
+//! within the bounded union width — the same closed forms the engine's symbolic evaluation path
 //! uses, so the pruner and the evaluator share one source of truth for
 //! occupancy — and fall back to the exact [`window_needs`] region sweep
 //! otherwise. Either way the bound is exact set algebra, never an estimate.
@@ -33,20 +33,24 @@
 //! score such a mapping *would* receive, so pruning provably never changes
 //! a search result.
 
-use super::symbolic::box_needs_into;
+use super::symbolic::{set_needs_into, BoxSet, SetScratch};
 use crate::einsum::{FusionSet, TensorId, TensorKind};
 use crate::mapping::InterLayerMapping;
 use crate::model::{window_needs, TileWindows};
 use crate::poly::IBox;
 
-/// Per-tensor volumes of the needs of one sink window: the box sweep where
-/// it applies, the region sweep otherwise (identical results either way).
+/// Per-tensor volumes of the needs of one sink window: the union-set sweep
+/// where it applies (footprints within the bounded union width — which now
+/// includes multi-consumer fan-outs whose needs union to two boxes), the
+/// region sweep otherwise (identical results either way).
 fn needs_volumes(fs: &FusionSet, win: &IBox, domains: &[IBox], vols: &mut Vec<i64>) {
     let mut data = Vec::new();
-    let (mut t1, mut t2) = (IBox::empty(0), IBox::empty(0));
+    let mut ops = BoxSet::default();
+    let mut tmp = IBox::empty(0);
+    let mut sc = SetScratch::default();
     vols.clear();
-    if box_needs_into(fs, win, domains, &mut data, &mut t1, &mut t2) {
-        vols.extend(data.iter().map(|b| b.volume()));
+    if set_needs_into(fs, win, domains, &mut data, &mut ops, &mut tmp, &mut sc) {
+        vols.extend(data.iter().map(|s| s.volume()));
     } else {
         vols.extend(window_needs(fs, win).data.iter().map(|r| r.volume()));
     }

@@ -20,11 +20,17 @@
 //!   neither invalidation nor re-fetch ever changes it. Delta 0, any
 //!   retention level.
 //! * **class (b)** — the tensor's footprint moves along `d` with consistent
-//!   translate coefficients, and its retention level is exactly `l + 1`:
-//!   the retained prefix window *is* the level-`l` child window, so
-//!   invalidation fires exactly once per child entry and the exit state
-//!   after child `i` equals the needs of child window `i` — a rigid
-//!   translate of child `i − 1`'s by `coeff · tile`.
+//!   translate coefficients, and its retention level is at least `l + 1`:
+//!   the retained prefix window sits at or inside the level-`l` child
+//!   window, so the exit state after child `i` is the needs of a retained
+//!   window whose indices agree with child `i − 1`'s exit everywhere except
+//!   the level-`l` index — a rigid translate by `coeff · tile`. (Retention
+//!   exactly `l + 1` is the special case where that window *is* the child
+//!   window; deeper retention truncates more often inside the child but
+//!   leaves the steady exit-to-exit translate unchanged, because on a
+//!   surjective chain corresponding interior leaves of consecutive steady
+//!   children see translate-identical availability by induction from the
+//!   child-entry state.)
 //!
 //! Any tensor outside these classes makes the level unprovable and the
 //! engine falls back to the empirical two-child certification, which
@@ -144,8 +150,10 @@ pub fn prove_level(
             .all(|p| statics.independent_of(id, p.dim))
         {
             // class (a): delta stays all-zero.
-        } else if mapping.retention_for(id) == l + 1 && statics.consistent_along(id, part.dim) {
-            // class (b): rigid translate by coeff · tile per child.
+        } else if mapping.retention_for(id) >= l + 1 && statics.consistent_along(id, part.dim) {
+            // class (b): rigid translate by coeff · tile per child. Any
+            // retention at or inside the child window qualifies — see the
+            // module docs for why deeper retention keeps the same delta.
             for (o, v) in d.iter_mut().enumerate() {
                 *v = statics
                     .coeff_of(id, part.dim, o)

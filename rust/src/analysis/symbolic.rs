@@ -1,25 +1,70 @@
 //! Closed-form box calculus for the symbolic evaluation path.
 //!
 //! The engine's symbolic hot path (see `model::engine`) shadows the
-//! reference walk with *single axis-aligned boxes* in place of the general
-//! [`Region`](crate::poly::Region) unions: on surjective producer chains
+//! reference walk with **bounded unions of axis-aligned boxes**
+//! ([`BoxSet`], at most [`MAX_UNION_WIDTH`] disjoint member boxes) in place
+//! of the general [`Region`](crate::poly::Region) unions: on surjective
+//! producer chains whose partitions all sit on the sink's output ranks,
 //! every per-tensor availability, needs, and fresh set the walk manipulates
-//! is provably one box, so every set operation collapses to O(dims)
-//! interval arithmetic. This module provides the box primitives — union,
-//! difference, intersection, overlap volume — each reporting whether the
-//! exact result is still a single box, plus the box-specialized backward
-//! *needs* sweep that mirrors [`window_needs`](crate::model::window_needs)
-//! on chains.
+//! stays within the width bound, so every set operation collapses to
+//! O(width² · dims) interval arithmetic. This module provides the single-box
+//! primitives — union, difference, intersection, overlap volume — and the
+//! [`BoxSet`] union calculus built on top of them, plus the set-specialized
+//! backward *needs* sweep that mirrors
+//! [`window_needs`](crate::model::window_needs) on chains.
 //!
 //! Every helper is **exact or refuses**: when a result is not representable
-//! as one box the helper returns `false` and the caller abandons the
-//! symbolic walk for the general region path, so closed-form evaluation can
-//! never be approximate. Empty boxes are kept canonical (all dims
-//! `[0, 0)`), which keeps box equality and translate comparisons
+//! within the width bound the helper returns `false` and the caller
+//! abandons the symbolic walk for the general region path, so closed-form
+//! evaluation can never be approximate. Empty boxes are kept canonical (all
+//! dims `[0, 0)`), which keeps box equality and translate comparisons
 //! representation-independent.
+//!
+//! # Why width 2 closes over row+column tilings
+//!
+//! Under a single output-rank partition (PR 7's scope) every availability
+//! set is one box. Partition *two* output ranks — a row+column (P×Q) tiling
+//! — and the walk's availability sets become **L-shaped**: a band of fully
+//! completed rows `[0, a)×[0, W)` plus the partial current row
+//! `[a, b)×[c0, c)`. That is exactly two disjoint boxes, and the walk's
+//! operations preserve the bound:
+//!
+//! * a new leaf's needs are a window box; subtracting a 2-member
+//!   availability peels at most one slab per member, and the surviving
+//!   fresh piece abuts the partial-row segment, so the union re-merges;
+//! * when a row completes, the partial-row segment abuts the band and
+//!   [`BoxSet::canonicalize`] collapses the set back to width 1;
+//! * retention truncation intersects with a needs window (per-member
+//!   intersection never grows the width);
+//! * preimages of disjoint data boxes under the identity-per-dim output
+//!   accesses are disjoint, so operation sets inherit the bound.
+//!
+//! Nested repartitions of the same two ranks and ragged last tiles shift
+//! where the merges happen but not the shape family. Tilings of *three or
+//! more* output ranks can produce genuine width-3 staircases; those refuse
+//! at the width check and demote to the region walk, exactly as every
+//! single-box refusal did before.
+//!
+//! # Canonical form
+//!
+//! A [`BoxSet`] keeps its members disjoint, pairwise unmergeable, and
+//! sorted lexicographically by per-dim bounds. Width-2 sets are additionally
+//! re-split through their bounding hull: when `hull − members` is a single
+//! *notch* box, the members are re-derived by slab-subtracting the notch
+//! from the hull in fixed dimension order. Every L-shape and every pair of
+//! parallel slabs therefore has **one** representation regardless of the
+//! operation order that built it, which keeps set equality and rigid
+//! translate comparisons (steady-state certification) representation
+//! independent. All operations are translation-equivariant, so the member
+//! decomposition of a translated set is the translated decomposition.
 
 use crate::einsum::FusionSet;
-use crate::poly::{IBox, Interval};
+use crate::poly::{AffineMap, IBox, Interval};
+
+/// Maximum number of member boxes a [`BoxSet`] may hold before its
+/// operations refuse. Width 2 is exactly what row+column output tilings
+/// need (see the module docs' closure argument).
+pub(crate) const MAX_UNION_WIDTH: usize = 2;
 
 /// Reset `b` to the canonical empty box of `nd` dims (all `[0, 0)`).
 pub(crate) fn box_reset_empty(b: &mut IBox, nd: usize) {
@@ -155,55 +200,486 @@ pub(crate) fn box_overlap_volume(a: &IBox, b: &IBox) -> i64 {
     v
 }
 
-/// Box-specialized full-needs sweep: the per-tensor data needs of the sink
-/// window `last_ops`, ignoring availability — the closed-form counterpart
-/// of [`window_needs`](crate::model::window_needs), restricted to results
-/// represented as one box per tensor.
+// --------------------------------------------------------------- BoxSet ----
+
+/// Reusable scratch buffers for [`BoxSet`] operations. Owned by the caller
+/// (the engine keeps one in its `EvalScratch`) so set operations perform at
+/// most transient piece-list allocations after warm-up.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct SetScratch {
+    /// Piece list of the current slab subtraction.
+    p1: Vec<IBox>,
+    /// Second piece list (subtracting the second member).
+    p2: Vec<IBox>,
+    /// Bounding hull of a width-2 set mid-canonicalization.
+    hull: IBox,
+    /// Intermediate of the hull-notch computation.
+    t1: IBox,
+    /// The notch box (`hull − members`) of the canonical resplit.
+    notch: IBox,
+}
+
+/// A bounded union of at most [`MAX_UNION_WIDTH`] **disjoint** axis-aligned
+/// boxes, kept in the canonical form described in the module docs: empty
+/// members dropped, mergeable pairs merged, width-2 sets re-split through
+/// their hull notch, members sorted lexicographically. Every mutating
+/// operation is *exact or refuses*: a `bool` return of `false` means the
+/// exact result needs more than [`MAX_UNION_WIDTH`] members (the value is
+/// then unspecified and the caller must abandon the symbolic walk, which
+/// re-prepares all scratch state anyway).
+///
+/// Refusals are sufficient, not necessary: a pathological piece order can
+/// refuse a set that a smarter decomposition would fit. That costs a tier
+/// demotion, never exactness — and the shapes the walk actually produces
+/// under row+column tilings (L-shapes, bands, split pairs) are covered by
+/// the canonical form.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct BoxSet {
+    /// Member storage; only `mem[..len]` is live (dead slots keep their
+    /// allocations for reuse).
+    mem: [IBox; 2],
+    len: usize,
+    ndim: usize,
+}
+
+impl PartialEq for BoxSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.ndim == other.ndim && self.members() == other.members()
+    }
+}
+
+impl Eq for BoxSet {}
+
+/// Strict lexicographic member order by per-dim `(lo, hi)`.
+fn box_lex_gt(a: &IBox, b: &IBox) -> bool {
+    for (ia, ib) in a.dims.iter().zip(&b.dims) {
+        if ia.lo != ib.lo {
+            return ia.lo > ib.lo;
+        }
+        if ia.hi != ib.hi {
+            return ia.hi > ib.hi;
+        }
+    }
+    false
+}
+
+impl BoxSet {
+    /// Reset to the empty set of `nd` dims.
+    pub(crate) fn reset_empty(&mut self, nd: usize) {
+        self.len = 0;
+        self.ndim = nd;
+    }
+
+    /// Dimensionality.
+    pub(crate) fn ndim(&self) -> usize {
+        self.ndim
+    }
+
+    /// Live member count (0 when empty).
+    pub(crate) fn width(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the set has no points.
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The live members (disjoint, canonically ordered).
+    pub(crate) fn members(&self) -> &[IBox] {
+        &self.mem[..self.len]
+    }
+
+    /// Exact point count (members are disjoint, so volumes add).
+    pub(crate) fn volume(&self) -> i64 {
+        self.members().iter().map(|b| b.volume()).sum()
+    }
+
+    /// `self = src`, reusing member storage.
+    pub(crate) fn assign(&mut self, src: &BoxSet) {
+        self.ndim = src.ndim;
+        self.len = src.len;
+        for i in 0..src.len {
+            box_assign(&mut self.mem[i], &src.mem[i]);
+        }
+    }
+
+    /// `self = {b}` (or the empty set when `b` is empty).
+    pub(crate) fn assign_box(&mut self, b: &IBox) {
+        self.ndim = b.ndim();
+        if b.is_empty() {
+            self.len = 0;
+        } else {
+            self.len = 1;
+            box_assign(&mut self.mem[0], b);
+        }
+    }
+
+    /// Append a box known to be **disjoint** from every member, merging it
+    /// into a member when the union is a single box. Returns `false` when
+    /// the set is full and no merge applies. Does not canonicalize.
+    fn push_merge(&mut self, b: &IBox) -> bool {
+        if b.is_empty() {
+            return true;
+        }
+        if self.len == 0 {
+            self.len = 1;
+            box_assign(&mut self.mem[0], b);
+            return true;
+        }
+        if box_union_assign(&mut self.mem[0], b) {
+            self.merge_pair();
+            return true;
+        }
+        if self.len == 1 {
+            self.len = 2;
+            box_assign(&mut self.mem[1], b);
+            return true;
+        }
+        if box_union_assign(&mut self.mem[1], b) {
+            self.merge_pair();
+            return true;
+        }
+        false
+    }
+
+    /// Collapse the two members into one when their union is a single box
+    /// (cascade step after a member absorbed new data).
+    fn merge_pair(&mut self) {
+        if self.len == 2 {
+            let (a, b) = self.mem.split_at_mut(1);
+            if box_union_assign(&mut a[0], &b[0]) {
+                self.len = 1;
+            }
+        }
+    }
+
+    /// Restore canonical form: drop empties, merge mergeable pairs, re-split
+    /// width-2 sets through the hull notch, sort members. See module docs.
+    fn canonicalize(&mut self, sc: &mut SetScratch) {
+        if self.len == 2 && self.mem[1].is_empty() {
+            self.len = 1;
+        }
+        if self.len == 2 && self.mem[0].is_empty() {
+            self.mem.swap(0, 1);
+            self.len = 1;
+        }
+        if self.len == 1 && self.mem[0].is_empty() {
+            self.len = 0;
+        }
+        if self.len < 2 {
+            return;
+        }
+        {
+            let (a, b) = self.mem.split_at_mut(1);
+            if box_union_assign(&mut a[0], &b[0]) {
+                self.len = 1;
+                return;
+            }
+        }
+        // Canonical resplit: when `hull − m0 − m1` is one notch box, the set
+        // is an L (or a hull-tiling pair, notch empty) and slab-subtracting
+        // the notch from the hull in fixed dimension order yields the unique
+        // canonical 2-decomposition, independent of how the set was built.
+        box_assign(&mut sc.hull, &self.mem[0]);
+        sc.hull.hull_assign(&self.mem[1]);
+        let mut found = box_minus_into(&sc.hull, &self.mem[0], &mut sc.t1)
+            && box_minus_into(&sc.t1, &self.mem[1], &mut sc.notch);
+        if !found {
+            found = box_minus_into(&sc.hull, &self.mem[1], &mut sc.t1)
+                && box_minus_into(&sc.t1, &self.mem[0], &mut sc.notch);
+        }
+        if found && !sc.notch.is_empty() {
+            sc.p1.clear();
+            sc.hull.subtract_into(&sc.notch, &mut sc.p1);
+            if sc.p1.len() == 2 {
+                box_assign(&mut self.mem[0], &sc.p1[0]);
+                box_assign(&mut self.mem[1], &sc.p1[1]);
+            }
+        }
+        if box_lex_gt(&self.mem[0], &self.mem[1]) {
+            self.mem.swap(0, 1);
+        }
+    }
+
+    /// `self ∪= b` (any box, overlap allowed). Exact; refuses when the
+    /// result needs more than [`MAX_UNION_WIDTH`] members.
+    pub(crate) fn union_box_assign(&mut self, b: &IBox, sc: &mut SetScratch) -> bool {
+        if b.is_empty() {
+            return true;
+        }
+        debug_assert_eq!(b.ndim(), self.ndim);
+        if self.len == 0 {
+            self.len = 1;
+            box_assign(&mut self.mem[0], b);
+            return true;
+        }
+        // Direct merge first (covers containment either way and single-dim
+        // extension) so a covering box replaces a member instead of being
+        // fragmented against it.
+        let mut merged = box_union_assign(&mut self.mem[0], b);
+        if !merged && self.len == 2 {
+            merged = box_union_assign(&mut self.mem[1], b);
+        }
+        if merged {
+            self.merge_pair();
+            self.canonicalize(sc);
+            return true;
+        }
+        // General path: disjointify (pieces = b − members), then absorb.
+        let two = self.len == 2;
+        sc.p1.clear();
+        b.subtract_into(&self.mem[0], &mut sc.p1);
+        if two {
+            sc.p2.clear();
+            for p in &sc.p1 {
+                p.subtract_into(&self.mem[1], &mut sc.p2);
+            }
+        }
+        let pieces = if two { &sc.p2 } else { &sc.p1 };
+        for p in pieces {
+            if !self.push_merge(p) {
+                return false;
+            }
+        }
+        self.canonicalize(sc);
+        true
+    }
+
+    /// `self ∪= other`. Exact or refuses.
+    pub(crate) fn union_set_assign(&mut self, other: &BoxSet, sc: &mut SetScratch) -> bool {
+        for i in 0..other.len {
+            if !self.union_box_assign(&other.mem[i], sc) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// `self −= b`. Exact or refuses.
+    pub(crate) fn minus_box_assign(&mut self, b: &IBox, sc: &mut SetScratch) -> bool {
+        if self.len == 0 || b.is_empty() {
+            return true;
+        }
+        sc.p1.clear();
+        for m in self.members() {
+            m.subtract_into(b, &mut sc.p1);
+        }
+        self.len = 0;
+        for i in 0..sc.p1.len() {
+            if !self.push_merge(&sc.p1[i]) {
+                return false;
+            }
+        }
+        self.canonicalize(sc);
+        true
+    }
+
+    /// `self −= other`. Exact or refuses.
+    pub(crate) fn minus_set_assign(&mut self, other: &BoxSet, sc: &mut SetScratch) -> bool {
+        for i in 0..other.len {
+            if !self.minus_box_assign(&other.mem[i], sc) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// `self ∩= b`. Never refuses: per-member intersection cannot grow the
+    /// width (it may shrink it, so the set is re-canonicalized).
+    pub(crate) fn intersect_box_assign(&mut self, b: &IBox, sc: &mut SetScratch) {
+        for i in 0..self.len {
+            box_intersect_assign(&mut self.mem[i], b);
+        }
+        self.canonicalize(sc);
+    }
+
+    /// `self ∩= other`. Exact or refuses (two width-2 sets intersect into up
+    /// to four disjoint boxes).
+    pub(crate) fn intersect_set_assign(&mut self, other: &BoxSet, sc: &mut SetScratch) -> bool {
+        if self.len == 0 {
+            return true;
+        }
+        if other.len == 0 {
+            self.len = 0;
+            return true;
+        }
+        if other.len == 1 {
+            self.intersect_box_assign(&other.mem[0], sc);
+            return true;
+        }
+        sc.p1.clear();
+        for m in self.members() {
+            for o in other.members() {
+                let piece = m.intersect(o);
+                if !piece.is_empty() {
+                    sc.p1.push(piece);
+                }
+            }
+        }
+        self.len = 0;
+        for i in 0..sc.p1.len() {
+            if !self.push_merge(&sc.p1[i]) {
+                return false;
+            }
+        }
+        self.canonicalize(sc);
+        true
+    }
+
+    /// `|self ∩ other|` without materializing the intersection. Exact
+    /// because both member lists are disjoint.
+    pub(crate) fn overlap_volume_set(&self, other: &BoxSet) -> i64 {
+        let mut v = 0i64;
+        for m in self.members() {
+            for o in other.members() {
+                v += box_overlap_volume(m, o);
+            }
+        }
+        v
+    }
+
+    /// Translate every member in place. Canonical form is preserved: the
+    /// member order and the hull-notch resplit are translation-equivariant.
+    pub(crate) fn shift_assign(&mut self, offsets: &[i64]) {
+        for i in 0..self.len {
+            self.mem[i].shift_assign(offsets);
+        }
+    }
+
+    /// Whether `self` is a rigid translate of `prev`, writing the per-dim
+    /// offsets into `d`. Canonical form makes the member correspondence
+    /// positional; two empty sets translate with offset 0.
+    pub(crate) fn translate_of(&self, prev: &BoxSet, d: &mut [i64]) -> bool {
+        if self.len != prev.len {
+            return false;
+        }
+        if self.len == 0 {
+            d.fill(0);
+            return true;
+        }
+        for (dim, v) in d.iter_mut().enumerate() {
+            *v = self.mem[0].dims[dim].lo - prev.mem[0].dims[dim].lo;
+        }
+        for i in 0..self.len {
+            let (c, p) = (&self.mem[i], &prev.mem[i]);
+            for dim in 0..self.ndim {
+                if c.dims[dim].lo - p.dims[dim].lo != d[dim]
+                    || c.dims[dim].hi - p.dims[dim].hi != d[dim]
+                {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// `out = map(self)`: the union of per-member images. Images of disjoint
+    /// boxes may overlap, so this goes through the refusing union.
+    pub(crate) fn image_into(
+        &self,
+        map: &AffineMap,
+        out: &mut BoxSet,
+        tmp: &mut IBox,
+        sc: &mut SetScratch,
+    ) -> bool {
+        out.reset_empty(map.out_ndim());
+        for m in self.members() {
+            map.image_box_into(m, tmp);
+            if !out.union_box_assign(tmp, sc) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// `out = map⁻¹(self)` for an identity-per-dim output access. Preimages
+    /// of disjoint data boxes are disjoint (each pair of disjoint data boxes
+    /// separates along some data dim, whose identity-mapped iteration dim
+    /// separates the preimages), so the width bound is inherited and this
+    /// never refuses.
+    pub(crate) fn preimage_identity_into(
+        &self,
+        map: &AffineMap,
+        full_domain: &IBox,
+        out: &mut BoxSet,
+        tmp: &mut IBox,
+        sc: &mut SetScratch,
+    ) {
+        out.reset_empty(full_domain.ndim());
+        for m in self.members() {
+            map.preimage_identity_box_into(m, full_domain, tmp);
+            let _fit = out.push_merge(tmp);
+            debug_assert!(_fit, "disjoint preimages exceed the width bound");
+        }
+        out.canonicalize(sc);
+    }
+}
+
+/// Union-set full-needs sweep: the per-tensor data needs of the sink window
+/// `last_ops`, ignoring availability — the closed-form counterpart of
+/// [`window_needs`](crate::model::window_needs), restricted to results
+/// representable within [`MAX_UNION_WIDTH`] boxes per tensor.
 ///
 /// On a surjective chain every tensor has a single consumer layer and the
 /// identity output access round-trips each request exactly
-/// (`image(preimage(fr)) = fr`), so the sweep provably stays single-box;
-/// the `false` return covers every other topology (a tensor whose
-/// consumers' needs don't union to a box) and sends the caller to the
-/// region sweep. On success `data[x]` is tensor `x`'s needs box and the
-/// volumes agree with the region sweep exactly.
-pub(crate) fn box_needs_into(
+/// (`image(preimage(fr)) = fr`), so the sweep stays single-box per tensor;
+/// the union width additionally covers bounded fan-outs (a tensor whose
+/// consumers' needs union to at most two boxes). The `false` return covers
+/// everything else and sends the caller to the region sweep. On success
+/// `data[x]` is tensor `x`'s needs set and the volumes agree with the
+/// region sweep exactly.
+pub(crate) fn set_needs_into(
     fs: &FusionSet,
     last_ops: &IBox,
     domains: &[IBox],
-    data: &mut Vec<IBox>,
-    ops_tmp: &mut IBox,
+    data: &mut Vec<BoxSet>,
+    ops_tmp: &mut BoxSet,
     img_tmp: &mut IBox,
+    sc: &mut SetScratch,
 ) -> bool {
     let n = fs.num_layers();
-    data.resize_with(fs.tensors.len(), || IBox::empty(0));
+    data.resize_with(fs.tensors.len(), BoxSet::default);
     for (x, tn) in fs.tensors.iter().enumerate() {
-        box_reset_empty(&mut data[x], tn.ndim());
+        data[x].reset_empty(tn.ndim());
     }
     for t in (0..n).rev() {
         let e = &fs.einsums[t];
         if t == n - 1 {
-            box_reset_empty(ops_tmp, last_ops.ndim());
-            ops_tmp.dims.copy_from_slice(&last_ops.dims);
+            ops_tmp.assign_box(last_ops);
         } else {
             // Upstream ops: preimage of what this layer's consumers (all
             // later in topological order, already swept) need of its output.
-            e.output
-                .map
-                .preimage_identity_box_into(&data[e.output.tensor.0], &domains[t], ops_tmp);
+            let consumed = &data[e.output.tensor.0];
+            consumed.preimage_identity_into(&e.output.map, &domains[t], ops_tmp, img_tmp, sc);
         }
         if ops_tmp.is_empty() {
             continue;
         }
-        e.output.map.image_box_into(ops_tmp, img_tmp);
-        if !box_union_assign(&mut data[e.output.tensor.0], img_tmp) {
+        if !image_union_into(ops_tmp, &e.output.map, &mut data[e.output.tensor.0], img_tmp, sc) {
             return false;
         }
         for acc in &e.inputs {
-            acc.map.image_box_into(ops_tmp, img_tmp);
-            if !box_union_assign(&mut data[acc.tensor.0], img_tmp) {
+            if !image_union_into(ops_tmp, &acc.map, &mut data[acc.tensor.0], img_tmp, sc) {
                 return false;
             }
+        }
+    }
+    true
+}
+
+/// `dst ∪= map(ops)`, member by member. Exact or refuses.
+pub(crate) fn image_union_into(
+    ops: &BoxSet,
+    map: &AffineMap,
+    dst: &mut BoxSet,
+    tmp: &mut IBox,
+    sc: &mut SetScratch,
+) -> bool {
+    for m in ops.members() {
+        map.image_box_into(m, tmp);
+        if !dst.union_box_assign(tmp, sc) {
+            return false;
         }
     }
     true
@@ -289,7 +765,7 @@ mod tests {
     }
 
     #[test]
-    fn box_needs_match_region_needs_on_chains() {
+    fn set_needs_match_region_needs_on_chains() {
         for fs in [
             workloads::conv_conv(14, 4),
             workloads::conv_conv_conv(12, 4),
@@ -302,17 +778,19 @@ mod tests {
             // A proper sub-window along the first dim keeps halos in play.
             win.dims[0] = Interval::new(0, win.dims[0].hi.div_ceil(2).max(1));
             let mut data = Vec::new();
-            let (mut t1, mut t2) = (IBox::empty(0), IBox::empty(0));
+            let mut ops = BoxSet::default();
+            let mut tmp = IBox::empty(0);
+            let mut sc = SetScratch::default();
             assert!(
-                box_needs_into(&fs, &win, &domains, &mut data, &mut t1, &mut t2),
-                "{}: box sweep refused a chain",
+                set_needs_into(&fs, &win, &domains, &mut data, &mut ops, &mut tmp, &mut sc),
+                "{}: set sweep refused a chain",
                 fs.name
             );
             let reg = window_needs(&fs, &win);
             for (x, tn) in fs.tensors.iter().enumerate() {
                 assert!(
-                    reg.data[x].set_eq(&Region::from_box(data[x].clone())),
-                    "{} tensor {}: box {:?} != region {}",
+                    reg.data[x].set_eq(&set_region(&data[x])),
+                    "{} tensor {}: set {:?} != region {}",
                     fs.name,
                     tn.name,
                     data[x],
@@ -320,5 +798,160 @@ mod tests {
                 );
             }
         }
+    }
+
+    // ---------------------------------------------------- BoxSet tests ----
+
+    /// A `Region` with the same points as `s` (the oracle representation).
+    fn set_region(s: &BoxSet) -> Region {
+        let nd = s.ndim();
+        let mut r = Region::empty(nd);
+        for m in s.members() {
+            r.union_box(m);
+        }
+        r
+    }
+
+    fn set_of(nd: usize, boxes: &[IBox], sc: &mut SetScratch) -> BoxSet {
+        let mut s = BoxSet::default();
+        s.reset_empty(nd);
+        for b in boxes {
+            assert!(s.union_box_assign(b, sc), "set_of refused {b:?}");
+        }
+        s
+    }
+
+    #[test]
+    fn boxset_invariants_and_canonical_form() {
+        let mut sc = SetScratch::default();
+        // An L-shape built in either union order canonicalizes identically.
+        let band = bx(&[(0, 3), (0, 8)]);
+        let segment = bx(&[(3, 4), (0, 5)]);
+        let a = set_of(2, &[band.clone(), segment.clone()], &mut sc);
+        let b = set_of(2, &[segment, band], &mut sc);
+        assert_eq!(a, b);
+        assert_eq!(a.width(), 2);
+        assert_eq!(a.volume(), 3 * 8 + 5);
+        // The resplit is the fixed-dim-order slab decomposition of hull −
+        // notch: dim 0 peels first.
+        assert_eq!(a.members()[0], bx(&[(0, 3), (0, 8)]));
+        assert_eq!(a.members()[1], bx(&[(3, 4), (0, 5)]));
+
+        // Abutting members collapse back to width 1 (row completion).
+        let mut l = a.clone();
+        assert!(l.union_box_assign(&bx(&[(3, 4), (5, 8)]), &mut sc));
+        assert_eq!(l.width(), 1);
+        assert_eq!(l.members()[0], bx(&[(0, 4), (0, 8)]));
+
+        // A box covering a member replaces it rather than fragmenting.
+        let mut s = set_of(2, &[bx(&[(0, 2), (0, 2)]), bx(&[(10, 12), (0, 2)])], &mut sc);
+        assert!(s.union_box_assign(&bx(&[(0, 4), (0, 4)]), &mut sc));
+        assert_eq!(s.width(), 2);
+        assert_eq!(s.volume(), 16 + 4);
+
+        // Width-3 unions refuse.
+        let mut s = set_of(1, &[bx(&[(0, 2)]), bx(&[(4, 6)])], &mut sc);
+        assert!(!s.union_box_assign(&bx(&[(8, 10)]), &mut sc));
+        // ... but a bridging box merges everything back to width 1.
+        let mut s = set_of(1, &[bx(&[(0, 2)]), bx(&[(4, 6)])], &mut sc);
+        assert!(s.union_box_assign(&bx(&[(2, 4)]), &mut sc));
+        assert_eq!(s.width(), 1);
+        assert_eq!(s.members()[0], bx(&[(0, 6)]));
+    }
+
+    #[test]
+    fn boxset_ops_match_region_oracle() {
+        let mut sc = SetScratch::default();
+        let shapes = [
+            vec![bx(&[(0, 6), (0, 6)])],
+            vec![bx(&[(0, 6), (0, 2)]), bx(&[(0, 2), (2, 6)])], // L
+            vec![bx(&[(0, 2), (0, 6)]), bx(&[(4, 6), (0, 6)])], // split pair
+        ];
+        let probes = [
+            bx(&[(1, 5), (1, 5)]),
+            bx(&[(0, 6), (0, 3)]),
+            bx(&[(2, 4), (0, 6)]),
+            bx(&[(0, 1), (0, 1)]),
+        ];
+        for members in &shapes {
+            for probe in &probes {
+                let s = set_of(2, members, &mut sc);
+                let r = set_region(&s);
+
+                // minus
+                let mut sm = s.clone();
+                let mut rm = r.clone();
+                rm.subtract_box_assign(probe);
+                if sm.minus_box_assign(probe, &mut sc) {
+                    assert!(rm.set_eq(&set_region(&sm)), "minus {members:?} − {probe:?}");
+                }
+
+                // intersect (never refuses for a box operand)
+                let mut si = s.clone();
+                si.intersect_box_assign(probe, &mut sc);
+                let ri = r.intersect_box(probe);
+                assert!(ri.set_eq(&set_region(&si)), "∩ {members:?} {probe:?}");
+                assert_eq!(si.volume(), ri.volume());
+
+                // union
+                let mut su = s.clone();
+                let mut ru = r.clone();
+                ru.union_box(probe);
+                if su.union_box_assign(probe, &mut sc) {
+                    assert!(ru.set_eq(&set_region(&su)), "∪ {members:?} {probe:?}");
+                }
+
+                // overlap volume via a singleton set
+                let mut ps = BoxSet::default();
+                ps.reset_empty(2);
+                ps.assign_box(probe);
+                assert_eq!(
+                    s.overlap_volume_set(&ps),
+                    r.intersect_box(probe).volume(),
+                    "|∩| {members:?} {probe:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn boxset_set_operands_and_translation() {
+        let mut sc = SetScratch::default();
+        let l1 = set_of(2, &[bx(&[(0, 6), (0, 2)]), bx(&[(0, 2), (2, 6)])], &mut sc);
+        let l2 = set_of(2, &[bx(&[(1, 7), (0, 6)])], &mut sc);
+
+        // set ∩ set vs oracle
+        let mut si = l1.clone();
+        assert!(si.intersect_set_assign(&l2, &mut sc));
+        let oracle = set_region(&l1).intersect(&set_region(&l2));
+        assert!(oracle.set_eq(&set_region(&si)));
+
+        // set − set vs oracle
+        let mut sm = l1.clone();
+        if sm.minus_set_assign(&l2, &mut sc) {
+            let oracle = set_region(&l1).subtract(&set_region(&l2));
+            assert!(oracle.set_eq(&set_region(&sm)));
+        }
+
+        // overlap volume between two multi-member sets
+        assert_eq!(
+            l1.overlap_volume_set(&l2),
+            set_region(&l1).intersect(&set_region(&l2)).volume()
+        );
+
+        // Translation: shifted sets certify with the exact offsets; mutated
+        // sets do not.
+        let mut shifted = l1.clone();
+        shifted.shift_assign(&[3, -1]);
+        let mut d = [0i64; 2];
+        assert!(shifted.translate_of(&l1, &mut d));
+        assert_eq!(d, [3, -1]);
+        let near = set_of(2, &[bx(&[(0, 6), (0, 2)]), bx(&[(0, 2), (2, 7)])], &mut sc);
+        assert!(!near.translate_of(&l1, &mut d));
+        let mut empty = BoxSet::default();
+        empty.reset_empty(2);
+        assert!(!empty.translate_of(&l1, &mut d));
+        assert!(empty.clone().translate_of(&empty, &mut d));
+        assert_eq!(d, [0, 0]);
     }
 }

@@ -310,6 +310,10 @@ fn cmd_analyze_explain(args: &[String], cfg: &AnalyzeConfig, ev: &Evaluator) -> 
                             ("children".to_string(), Json::Num(l.children as f64)),
                             ("proven".to_string(), Json::Bool(l.proven)),
                             ("reason".to_string(), Json::Str(l.reason.clone())),
+                            (
+                                "union_width".to_string(),
+                                Json::Num(l.union_width as f64),
+                            ),
                         ]
                         .into_iter()
                         .collect(),
@@ -326,6 +330,18 @@ fn cmd_analyze_explain(args: &[String], cfg: &AnalyzeConfig, ev: &Evaluator) -> 
                         Some(r) => Json::Str(r.clone()),
                         None => Json::Null,
                     },
+                ),
+                (
+                    "peak_union_width".to_string(),
+                    Json::Num(ex.metrics.path.peak_union_width as f64),
+                ),
+                (
+                    "multibox_proven_jumps".to_string(),
+                    Json::Num(ex.metrics.path.multibox_proven_jumps as f64),
+                ),
+                (
+                    "multibox_certified_jumps".to_string(),
+                    Json::Num(ex.metrics.path.multibox_certified_jumps as f64),
                 ),
                 ("levels".to_string(), levels),
             ]
@@ -344,7 +360,16 @@ fn cmd_analyze_explain(args: &[String], cfg: &AnalyzeConfig, ev: &Evaluator) -> 
     println!("workload: {}", fs.name);
     println!("schedule: {}", cfg.mapping.schedule_string(fs));
     if ex.symbolic {
-        println!("path: symbolic (closed-form box walk covered the whole evaluation)");
+        let tier = if ex.metrics.path.peak_union_width >= 2 {
+            "multibox union walk"
+        } else {
+            "single-box walk"
+        };
+        println!(
+            "path: symbolic (closed-form {tier} covered the whole evaluation; \
+             peak union width {})",
+            ex.metrics.path.peak_union_width
+        );
     } else {
         println!(
             "path: region walk — {}",
@@ -353,14 +378,20 @@ fn cmd_analyze_explain(args: &[String], cfg: &AnalyzeConfig, ev: &Evaluator) -> 
     }
     let p = &ex.metrics.path;
     println!(
-        "jumps: {} proven, {} certified; {} of {} inter-layer iterations walked",
-        p.proven_jumps, p.certified_jumps, p.walked_iterations, ex.metrics.iterations
+        "jumps: {} proven ({} multibox), {} certified ({} multibox); \
+         {} of {} inter-layer iterations walked",
+        p.proven_jumps,
+        p.multibox_proven_jumps,
+        p.certified_jumps,
+        p.multibox_certified_jumps,
+        p.walked_iterations,
+        ex.metrics.iterations
     );
     if ex.levels.is_empty() {
         println!("(untiled mapping: no schedule levels)");
     } else {
         let mut table = looptree::util::table::Table::new(&[
-            "level", "dim", "tile", "children", "proven", "reason",
+            "level", "dim", "tile", "children", "proven", "width", "reason",
         ]);
         for l in &ex.levels {
             table.row(&[
@@ -369,6 +400,7 @@ fn cmd_analyze_explain(args: &[String], cfg: &AnalyzeConfig, ev: &Evaluator) -> 
                 l.tile.to_string(),
                 l.children.to_string(),
                 l.proven.to_string(),
+                if l.union_width == 0 { "-".into() } else { l.union_width.to_string() },
                 if l.reason.is_empty() { "-".into() } else { l.reason.clone() },
             ]);
         }
@@ -455,10 +487,12 @@ fn cmd_search(args: &[String]) -> i32 {
                 return 0;
             }
             println!(
-                "evaluated {} mappings ({} pruned, {} via the symbolic walk); best ({}) = {:.4e}",
+                "evaluated {} mappings ({} pruned, {} via the symbolic walk, \
+                 {} refusal-memo skips); best ({}) = {:.4e}",
                 r.evaluated.len(),
                 r.pruned,
                 r.symbolic_evals,
+                r.refusal_memo_hits,
                 cfg.search.objective.name(),
                 r.best.score
             );

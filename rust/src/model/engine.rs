@@ -26,16 +26,21 @@
 //! **Tier 1 — symbolic box walk** (`sym_level`/`sym_leaf`/`sym_backward`).
 //! On surjective chains with every partition on the sink's output ranks,
 //! every set the walk manipulates — per-tensor availability, needs, fresh
-//! data — is provably a single axis-aligned box, so the whole backward pass
+//! data — stays within a *bounded union of axis-aligned boxes*
+//! ([`crate::analysis::symbolic::BoxSet`], width ≤ 2): one box under a
+//! single output-rank partition, and the L-shaped two-box sets that
+//! row+column (P×Q) output tilings produce. The whole backward pass
 //! collapses to the closed-form interval arithmetic of
 //! [`crate::analysis::symbolic`]: per level, the first/steady/ragged-last
 //! tile footprints and per-tensor transfer/reuse/occupancy counts are
-//! derived from the composed `AffineMap`s in O(dims) per set operation,
-//! with no region algebra at all. The box calculus is *exact or refuses*:
-//! the moment any operation would leave single-box form the walk bails out
-//! and the evaluation restarts on tier 2 — so tier 1 is an accelerator,
-//! never an approximation. Combined with the steady-state jumps below, a
-//! provable mapping evaluates in O(levels) leaf visits.
+//! derived from the composed `AffineMaps` in O(width² · dims) per set
+//! operation, with no region algebra at all. The union calculus is *exact
+//! or refuses*: the moment any operation would exceed the width bound the
+//! walk bails out and the evaluation restarts on tier 2 — so tier 1 is an
+//! accelerator, never an approximation. Combined with the steady-state
+//! jumps below, a provable mapping evaluates in O(levels) leaf visits.
+//! Which jumps fired at union width ≥ 2, and the peak/per-level widths, are
+//! reported through [`super::PathCounts`]'s multibox counters.
 //!
 //! **Tier 2 — steady-state jumps over the region walk.** The walk recurses
 //! over levels on general [`crate::poly::Region`] unions. At each level the
@@ -77,10 +82,7 @@ use super::intra::operand_slot_counts;
 use super::latency::{memory_cycles, PipelineLatency, TransferMatrix};
 use super::metrics::{EnergyBreakdown, Metrics, PathCounts};
 use super::walk::TileWindows;
-use crate::analysis::symbolic::{
-    box_assign, box_intersect_assign, box_minus_into, box_needs_into, box_overlap_volume,
-    box_reset_empty, box_union_assign,
-};
+use crate::analysis::symbolic::{set_needs_into, BoxSet, SetScratch};
 use crate::analysis::{objective_floors, prove_levels, LevelProof, ObjectiveFloors, SessionStatics};
 use crate::arch::{energy, Arch};
 use crate::einsum::{FusionSet, TensorKind};
@@ -390,12 +392,12 @@ struct CacheSlot {
 }
 
 /// The symbolic walk's counterpart of [`CacheSlot`]: per-tensor needs
-/// *boxes* of one level-`j` prefix window.
+/// *box sets* of one level-`j` prefix window.
 #[derive(Debug, Clone, Default)]
 struct SymSlot {
     valid: bool,
     prefix: Vec<i64>,
-    data: Vec<IBox>,
+    data: Vec<BoxSet>,
 }
 
 /// Reusable evaluation state. Owned (pooled) by the [`super::Evaluator`]
@@ -429,25 +431,28 @@ pub(crate) struct EvalScratch {
     delta: Vec<Vec<i64>>,
 
     // ---- symbolic (tier-1) box-walk shadows of the region state ----
-    /// Per-tensor availability as a single box (output-fmap entries unused:
-    /// under the `out_exempt` gate distinct leaves write disjoint tiles, so
-    /// output availability never feeds back into any metric).
-    sym_avail: Vec<IBox>,
+    /// Per-tensor availability as a bounded box union (output-fmap entries
+    /// unused: under the `out_exempt` gate distinct leaves write disjoint
+    /// tiles, so output availability never feeds back into any metric).
+    sym_avail: Vec<BoxSet>,
     /// Per-tensor pending producer requests (`BackwardScratch::pending`'s
-    /// box twin).
-    sym_pend: Vec<IBox>,
-    /// Retention-window needs boxes per level prefix.
+    /// box-set twin).
+    sym_pend: Vec<BoxSet>,
+    /// Retention-window needs sets per level prefix.
     sym_slots: Vec<SymSlot>,
     /// Per level: availability snapshot at the end of the previous child.
-    sym_exit: Vec<Vec<IBox>>,
+    sym_exit: Vec<Vec<BoxSet>>,
     /// Per-tensor availability volumes of the current leaf, filled by
     /// whichever walk ran it and read by the shared [`accumulate_leaf`].
     occ_vol: Vec<i64>,
-    /// Box temporaries of the symbolic backward pass.
-    sym_ops: IBox,
-    sym_need: IBox,
-    sym_fr: IBox,
-    sym_fr2: IBox,
+    /// Set temporaries of the symbolic backward pass.
+    sym_ops: BoxSet,
+    sym_need: BoxSet,
+    sym_fr: BoxSet,
+    /// Single-box image temporary of the set calculus.
+    sym_tmp: IBox,
+    /// Shared scratch of every [`BoxSet`] operation.
+    sym_sc: SetScratch,
 
     // ---- per-path fire counters (reported via `Metrics::path`) ----
     /// Steady-state jumps taken on a static proof.
@@ -456,6 +461,17 @@ pub(crate) struct EvalScratch {
     ctr_certified: i64,
     /// Leaf iterations actually walked.
     ctr_walked: i64,
+    /// Proven jumps taken while some availability union held ≥ 2 boxes.
+    ctr_mb_proven: i64,
+    /// Certified jumps taken while some availability union held ≥ 2 boxes.
+    ctr_mb_certified: i64,
+    /// Per schedule level: the widest availability union observed at any
+    /// child boundary of that level during the symbolic walk.
+    level_width: Vec<i64>,
+    /// Widest box union the symbolic walk ever held — availability at
+    /// boundaries plus the transient ops/needs/fresh/pending sets inside
+    /// each leaf's backward pass.
+    peak_width: i64,
 }
 
 impl EvalScratch {
@@ -487,11 +503,11 @@ impl EvalScratch {
         self.acc_snap.resize_with(k, Accum::default);
         self.delta.resize_with(nt, Vec::new);
 
-        self.sym_avail.resize_with(nt, || IBox::empty(0));
-        self.sym_pend.resize_with(nt, || IBox::empty(0));
+        self.sym_avail.resize_with(nt, BoxSet::default);
+        self.sym_pend.resize_with(nt, BoxSet::default);
         for (x, t) in fs.tensors.iter().enumerate() {
-            box_reset_empty(&mut self.sym_avail[x], t.ndim());
-            box_reset_empty(&mut self.sym_pend[x], t.ndim());
+            self.sym_avail[x].reset_empty(t.ndim());
+            self.sym_pend[x].reset_empty(t.ndim());
         }
         self.sym_slots.resize_with(k + 1, SymSlot::default);
         for slot in &mut self.sym_slots {
@@ -499,12 +515,16 @@ impl EvalScratch {
         }
         self.sym_exit.resize_with(k, Vec::new);
         for snap in &mut self.sym_exit {
-            snap.resize_with(nt, || IBox::empty(0));
+            snap.resize_with(nt, BoxSet::default);
         }
         reset_counts(&mut self.occ_vol, nt);
         self.ctr_proven = 0;
         self.ctr_certified = 0;
         self.ctr_walked = 0;
+        self.ctr_mb_proven = 0;
+        self.ctr_mb_certified = 0;
+        reset_counts(&mut self.level_width, k);
+        self.peak_width = 0;
     }
 }
 
@@ -583,10 +603,11 @@ pub(crate) fn evaluate_prevalidated(
         proof,
     };
     // Tier 1: the symbolic box walk, gated on the structural facts that
-    // keep every set single-box (surjective chain, all partitions on
-    // output ranks). A runtime refusal anywhere in the box calculus aborts
-    // the whole walk; the evaluation then restarts cleanly on the region
-    // walk, so a bail costs one partial pass but never exactness.
+    // keep every set within the bounded union width (surjective chain, all
+    // partitions on output ranks). A runtime refusal anywhere in the union
+    // calculus aborts the whole walk; the evaluation then restarts cleanly
+    // on the region walk, so a bail costs one partial pass but never
+    // exactness.
     let symbolic_ok = fast && !no_symbolic && cache.chain && cx.out_exempt;
     let symbolic = symbolic_ok && sym_level(&cx, scratch, 0, None);
     if !symbolic {
@@ -601,6 +622,15 @@ pub(crate) fn evaluate_prevalidated(
         proven_jumps: scratch.ctr_proven,
         certified_jumps: scratch.ctr_certified,
         walked_iterations: scratch.ctr_walked,
+        multibox_proven_jumps: scratch.ctr_mb_proven,
+        multibox_certified_jumps: scratch.ctr_mb_certified,
+        peak_union_width: if symbolic { scratch.peak_width } else { 0 },
+        level_union_widths: if symbolic {
+            scratch.level_width.clone()
+        } else {
+            Vec::new()
+        },
+        sym_refused: symbolic_ok && !symbolic,
     };
     Ok(m)
 }
@@ -918,12 +948,33 @@ fn accumulate_leaf(cx: &Ctx, sc: &mut EvalScratch, out_tile_vol: i64) {
 
 // --------------------------------------------------- symbolic (tier 1) ----
 
+/// Widest availability union right now (output fmaps excluded: the walk
+/// never materializes them).
+fn sym_avail_width(cx: &Ctx, sc: &EvalScratch) -> i64 {
+    let mut w = 0i64;
+    for x in 0..cx.nt {
+        if cx.fs.tensors[x].kind == TensorKind::OutputFmap {
+            continue;
+        }
+        w = w.max(sc.sym_avail[x].width() as i64);
+    }
+    w
+}
+
+/// Record the current availability width against level `l`'s running max
+/// (and the walk-wide peak). Called at every child boundary of `l`.
+fn sym_record_width(cx: &Ctx, sc: &mut EvalScratch, l: usize) {
+    let w = sym_avail_width(cx, sc);
+    sc.level_width[l] = sc.level_width[l].max(w);
+    sc.peak_width = sc.peak_width.max(w);
+}
+
 /// Tier-1 twin of [`eval_level`]: the same recursion, the same proven and
 /// empirically-certified jump arithmetic, with every availability set held
-/// as a single box. Returns `false` the moment any box operation refuses
-/// (set left single-box form); the caller then re-prepares the scratch and
-/// reruns the whole evaluation on the region walk, so a bail never loses
-/// exactness — only the time already spent.
+/// as a bounded box union. Returns `false` the moment any set operation
+/// refuses (result would exceed the union width bound); the caller then
+/// re-prepares the scratch and reruns the whole evaluation on the region
+/// walk, so a bail never loses exactness — only the time already spent.
 fn sym_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>) -> bool {
     if l == cx.k {
         return sym_leaf(cx, sc, entry_adv);
@@ -933,12 +984,14 @@ fn sym_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>)
     if !sym_level(cx, sc, l + 1, entry_adv) {
         return false;
     }
+    sym_record_width(cx, sc, l);
     if !(cx.fast && c >= 4) {
         for i in 1..c {
             sc.idx[l] = i;
             if !sym_level(cx, sc, l + 1, Some(l)) {
                 return false;
             }
+            sym_record_width(cx, sc, l);
         }
         return true;
     }
@@ -956,8 +1009,12 @@ fn sym_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>)
         if !sym_level(cx, sc, l + 1, Some(l)) {
             return false;
         }
+        sym_record_width(cx, sc, l);
         let rec = if cx.pipeline { sc.rec_stack.pop() } else { None };
         sc.ctr_proven += 1;
+        if sym_avail_width(cx, sc) >= 2 {
+            sc.ctr_mb_proven += 1;
+        }
         let n_skip = c - 3;
         {
             let (acc, snaps) = (&mut sc.acc, &sc.acc_snap);
@@ -979,17 +1036,21 @@ fn sym_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>)
             }
         }
         sc.idx[l] = c - 1;
-        return sym_level(cx, sc, l + 1, Some(l));
+        if !sym_level(cx, sc, l + 1, Some(l)) {
+            return false;
+        }
+        sym_record_width(cx, sc, l);
+        return true;
     }
 
-    // Empirical steady-state certification on the availability boxes —
-    // same protocol as [`eval_level`]'s, snapshotting boxes instead of
-    // regions.
+    // Empirical steady-state certification on the availability sets —
+    // same protocol as [`eval_level`]'s, snapshotting box unions instead
+    // of regions.
     let max_rep = 2.min(c - 3);
     let mut next_child = 1i64;
     for rep in 1..=max_rep {
         for (x, snap) in sc.sym_exit[l].iter_mut().enumerate() {
-            box_assign(snap, &sc.sym_avail[x]);
+            snap.assign(&sc.sym_avail[x]);
         }
         {
             let (acc, snaps) = (&sc.acc, &mut sc.acc_snap);
@@ -1002,10 +1063,14 @@ fn sym_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>)
         if !sym_level(cx, sc, l + 1, Some(l)) {
             return false;
         }
+        sym_record_width(cx, sc, l);
         let rec = if cx.pipeline { sc.rec_stack.pop() } else { None };
         next_child = rep + 1;
         if sym_certify(cx, sc, l) {
             sc.ctr_certified += 1;
+            if sym_avail_width(cx, sc) >= 2 {
+                sc.ctr_mb_certified += 1;
+            }
             let n_skip = (c - 2) - rep;
             {
                 let (acc, snaps) = (&mut sc.acc, &sc.acc_snap);
@@ -1035,13 +1100,15 @@ fn sym_level(cx: &Ctx, sc: &mut EvalScratch, l: usize, entry_adv: Option<usize>)
         if !sym_level(cx, sc, l + 1, Some(l)) {
             return false;
         }
+        sym_record_width(cx, sc, l);
     }
     true
 }
 
-/// [`certify`] on the availability boxes: consecutive children's exit boxes
-/// must be rigid translates per tensor. Box emptiness is canonical here, so
-/// the comparison is representation-independent by construction.
+/// [`certify`] on the availability sets: consecutive children's exit sets
+/// must be rigid translates per tensor. [`BoxSet`]'s canonical form makes
+/// the member correspondence positional, so the comparison is
+/// representation-independent by construction.
 fn sym_certify(cx: &Ctx, sc: &mut EvalScratch, l: usize) -> bool {
     for x in 0..cx.nt {
         let nd = cx.fs.tensors[x].ndim();
@@ -1060,31 +1127,21 @@ fn sym_certify(cx: &Ctx, sc: &mut EvalScratch, l: usize) -> bool {
             }
             continue;
         }
-        let prev = &sc.sym_exit[l][x];
-        let cur = &sc.sym_avail[x];
-        match (prev.is_empty(), cur.is_empty()) {
-            (true, true) => continue, // both empty: offset 0
-            (false, false) => {}
-            _ => return false,
-        }
-        for dim in 0..nd {
-            d[dim] = cur.dims[dim].lo - prev.dims[dim].lo;
-            if cur.dims[dim].hi - prev.dims[dim].hi != d[dim] {
-                return false;
-            }
+        if !sc.sym_avail[x].translate_of(&sc.sym_exit[l][x], d) {
+            return false;
         }
     }
     true
 }
 
 /// Tier-1 twin of [`eval_leaf`]: retention invalidation and the backward
-/// pass on boxes, then the shared [`accumulate_leaf`]. Returns `false` on
-/// any box-calculus refusal.
+/// pass on bounded box unions, then the shared [`accumulate_leaf`].
+/// Returns `false` on any union-calculus refusal.
 fn sym_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) -> bool {
     let fs = cx.fs;
 
     // 1) Retention-window invalidation — [`eval_leaf`] step 1 with the
-    //    needs boxes of the prefix window in place of needs regions.
+    //    needs sets of the prefix window in place of needs regions.
     for x in 0..cx.nt {
         if fs.tensors[x].kind == TensorKind::OutputFmap {
             continue;
@@ -1104,13 +1161,14 @@ fn sym_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) -> bool {
         if !(sc.sym_slots[j].valid && sc.sym_slots[j].prefix == prefix) {
             cx.tw.window_into(prefix, &mut sc.prefix_win);
             let slot = &mut sc.sym_slots[j];
-            if !box_needs_into(
+            if !set_needs_into(
                 fs,
                 &sc.prefix_win,
                 &cx.cache.domains,
                 &mut slot.data,
                 &mut sc.sym_ops,
-                &mut sc.sym_need,
+                &mut sc.sym_tmp,
+                &mut sc.sym_sc,
             ) {
                 return false;
             }
@@ -1118,12 +1176,14 @@ fn sym_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) -> bool {
             slot.prefix.extend_from_slice(prefix);
             slot.valid = true;
         }
-        if !sc.sym_avail[x].is_empty() {
-            box_intersect_assign(&mut sc.sym_avail[x], &sc.sym_slots[j].data[x]);
+        if !sc.sym_avail[x].is_empty()
+            && !sc.sym_avail[x].intersect_set_assign(&sc.sym_slots[j].data[x], &mut sc.sym_sc)
+        {
+            return false;
         }
     }
 
-    // 2) Backward pass with availability subtraction, on boxes.
+    // 2) Backward pass with availability subtraction, on box unions.
     cx.tw.window_into(&sc.idx, &mut sc.win);
     fs.last().output.map.image_box_into(&sc.win, &mut sc.out_box);
     let out_tile_vol = sc.out_box.volume();
@@ -1131,7 +1191,8 @@ fn sym_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) -> bool {
         return false;
     }
 
-    // 3) Shared accumulation, reading availability volumes from the boxes.
+    // 3) Shared accumulation, reading availability volumes from the sets
+    //    (disjoint members, so volumes add exactly).
     for x in 0..cx.nt {
         sc.occ_vol[x] = sc.sym_avail[x].volume();
     }
@@ -1139,12 +1200,12 @@ fn sym_leaf(cx: &Ctx, sc: &mut EvalScratch, adv: Option<usize>) -> bool {
     true
 }
 
-/// Box-specialized mirror of [`iter_backward_into`]: the same reverse
+/// Set-specialized mirror of [`iter_backward_into`]: the same reverse
 /// sweep, the same accounting order, with every region operation replaced
-/// by its box-calculus counterpart — writing op regions (single-box) and
-/// fresh volumes into `sc.bw` so [`accumulate_leaf`] consumes identical
-/// state from either walk. Returns `false` the moment any set would leave
-/// single-box form.
+/// by its bounded-union counterpart — writing op regions (rebuilt from the
+/// disjoint set members) and fresh volumes into `sc.bw` so
+/// [`accumulate_leaf`] consumes identical state from either walk. Returns
+/// `false` the moment any set would exceed the union width bound.
 ///
 /// One deliberate divergence: the final output tensor's availability is
 /// never materialized. Under the `out_exempt` gate distinct leaves write
@@ -1162,77 +1223,102 @@ fn sym_backward(cx: &Ctx, sc: &mut EvalScratch) -> bool {
     sc.bw.fresh.clear();
     sc.bw.fresh.resize(cx.nt, 0);
     for (x, tn) in fs.tensors.iter().enumerate() {
-        box_reset_empty(&mut sc.sym_pend[x], tn.ndim());
+        sc.sym_pend[x].reset_empty(tn.ndim());
     }
+
+    // Transient union-width watermark of this leaf (ops, needs, fresh,
+    // pending, availability): full-retention mappings re-truncate their
+    // availability to one box every leaf, so the multibox calculus shows up
+    // only in these transient sets at row-wrap leaves.
+    let mut w = 0i64;
 
     for t in (0..n).rev() {
         let e = &fs.einsums[t];
         if t == n - 1 {
-            box_assign(&mut sc.sym_ops, &sc.win);
+            sc.sym_ops.assign_box(&sc.win);
         } else {
             // Ops = preimage of the fresh output this layer's consumers
-            // (all processed already) requested via the pending boxes.
-            e.output.map.preimage_identity_box_into(
-                &sc.sym_pend[e.output.tensor.0],
+            // (all processed already) requested via the pending sets.
+            // Preimages of disjoint data boxes are disjoint, so this
+            // inherits the width bound and never refuses.
+            sc.sym_pend[e.output.tensor.0].preimage_identity_into(
+                &e.output.map,
                 &cx.cache.domains[t],
                 &mut sc.sym_ops,
+                &mut sc.sym_tmp,
+                &mut sc.sym_sc,
             );
         }
         if sc.sym_ops.is_empty() {
             continue;
         }
-        sc.bw.ops[t].assign_box(&sc.sym_ops);
+        w = w.max(sc.sym_ops.width() as i64);
+        for m in sc.sym_ops.members() {
+            sc.bw.ops[t].union_box(m);
+        }
 
         // Freshly produced output data.
         let out = e.output.tensor.0;
-        e.output.map.image_box_into(&sc.sym_ops, &mut sc.sym_need);
+        if !sc.sym_ops.image_into(&e.output.map, &mut sc.sym_need, &mut sc.sym_tmp, &mut sc.sym_sc)
+        {
+            return false;
+        }
+        w = w.max(sc.sym_need.width() as i64);
         if fs.tensors[out].kind == TensorKind::OutputFmap {
             // Disjoint tiles (see above): everything needed is fresh.
             sc.bw.fresh[out] += sc.sym_need.volume();
         } else {
-            if !box_minus_into(&sc.sym_need, &sc.sym_avail[out], &mut sc.sym_fr) {
+            sc.sym_fr.assign(&sc.sym_need);
+            if !sc.sym_fr.minus_set_assign(&sc.sym_avail[out], &mut sc.sym_sc) {
                 return false;
             }
             sc.bw.fresh[out] += sc.sym_fr.volume();
-            if !box_union_assign(&mut sc.sym_avail[out], &sc.sym_fr) {
+            if !sc.sym_avail[out].union_set_assign(&sc.sym_fr, &mut sc.sym_sc) {
                 return false;
             }
+            w = w.max(sc.sym_fr.width() as i64).max(sc.sym_avail[out].width() as i64);
         }
 
         // Input needs: fresh parts are fetched (off-chip sources) or routed
         // to the upstream producer (intermediates).
         for acc in &e.inputs {
             let x = acc.tensor.0;
-            acc.map.image_box_into(&sc.sym_ops, &mut sc.sym_need);
+            if !sc.sym_ops.image_into(&acc.map, &mut sc.sym_need, &mut sc.sym_tmp, &mut sc.sym_sc) {
+                return false;
+            }
             let p = cx.cache.producer[x];
             if p != usize::MAX {
                 debug_assert!(p < t, "fusion set is not in topological order");
-                if !box_minus_into(&sc.sym_need, &sc.sym_avail[x], &mut sc.sym_fr) {
+                sc.sym_fr.assign(&sc.sym_need);
+                if !sc.sym_fr.minus_set_assign(&sc.sym_avail[x], &mut sc.sym_sc) {
                     return false;
                 }
                 if !sc.sym_pend[x].is_empty() {
                     // Sibling consumers already requested part of this (only
                     // reachable off-chain; the chain gate makes this dead,
                     // but mirroring it keeps the twin faithful).
-                    if !box_minus_into(&sc.sym_fr, &sc.sym_pend[x], &mut sc.sym_fr2) {
+                    if !sc.sym_fr.minus_set_assign(&sc.sym_pend[x], &mut sc.sym_sc) {
                         return false;
                     }
-                    std::mem::swap(&mut sc.sym_fr, &mut sc.sym_fr2);
                 }
-                if !box_union_assign(&mut sc.sym_pend[x], &sc.sym_fr) {
+                if !sc.sym_pend[x].union_set_assign(&sc.sym_fr, &mut sc.sym_sc) {
                     return false;
                 }
+                w = w.max(sc.sym_fr.width() as i64).max(sc.sym_pend[x].width() as i64);
             } else {
-                // Off-chip source: `|need − avail|` is exact for any two
-                // boxes, and `avail ∪ (need − avail) = avail ∪ need`.
+                // Off-chip source: `|need − avail|` is exact for disjoint
+                // unions, and `avail ∪ (need − avail) = avail ∪ need`.
                 sc.bw.fresh[x] +=
-                    sc.sym_need.volume() - box_overlap_volume(&sc.sym_need, &sc.sym_avail[x]);
-                if !box_union_assign(&mut sc.sym_avail[x], &sc.sym_need) {
+                    sc.sym_need.volume() - sc.sym_need.overlap_volume_set(&sc.sym_avail[x]);
+                if !sc.sym_avail[x].union_set_assign(&sc.sym_need, &mut sc.sym_sc) {
                     return false;
                 }
+                w = w.max(sc.sym_avail[x].width() as i64);
             }
+            w = w.max(sc.sym_need.width() as i64);
         }
     }
+    sc.peak_width = sc.peak_width.max(w);
     true
 }
 

@@ -15,8 +15,12 @@ use super::metrics::Metrics;
 use crate::analysis::{self, ObjectiveFloors};
 use crate::arch::Arch;
 use crate::coordinator::Coordinator;
-use crate::einsum::FusionSet;
+use crate::einsum::{FusionSet, TensorId};
 use crate::mapping::{InterLayerMapping, IntraLayerMapping};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashSet;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Per-schedule-level diagnostic of [`Evaluator::explain`]: whether the
@@ -36,6 +40,11 @@ pub struct LevelExplain {
     /// Refusal reason when not proven (empty when proven). Unproven levels
     /// still jump when the empirical two-child certification succeeds.
     pub reason: String,
+    /// Widest availability box union observed at this level's child
+    /// boundaries during the symbolic walk (0 when the symbolic tier did
+    /// not cover the evaluation; 2 marks the multibox path of row+column
+    /// tilings).
+    pub union_width: i64,
 }
 
 /// The result of [`Evaluator::explain`]: which evaluation paths fired for
@@ -89,6 +98,18 @@ pub struct Evaluator {
     intra: Vec<IntraLayerMapping>,
     cache: SessionCache,
     scratch: ScratchPool,
+    /// Signatures of mappings whose symbolic attempt refused at runtime in
+    /// this session. A refusal pays a full re-`prepare` plus the region
+    /// walk, so re-evaluations of a memoized mapping (annealing and genetic
+    /// searches revisit points constantly) skip the symbolic attempt
+    /// outright. The signature is the full canonical mapping shape —
+    /// partitions, resolved retention, parallelism — so only mappings whose
+    /// walk is identical to a known-refusing one are skipped, keeping tier
+    /// attribution (and the searches' `symbolic_evals` counters)
+    /// deterministic.
+    refused_shapes: Mutex<HashSet<u64>>,
+    /// Symbolic attempts skipped via `refused_shapes`.
+    memo_hits: AtomicUsize,
 }
 
 impl Clone for Evaluator {
@@ -99,6 +120,8 @@ impl Clone for Evaluator {
             intra: self.intra.clone(),
             cache: self.cache.clone(),
             scratch: ScratchPool::default(),
+            refused_shapes: Mutex::new(HashSet::new()),
+            memo_hits: AtomicUsize::new(0),
         }
     }
 }
@@ -117,6 +140,8 @@ impl Evaluator {
             intra,
             cache,
             scratch: ScratchPool::default(),
+            refused_shapes: Mutex::new(HashSet::new()),
+            memo_hits: AtomicUsize::new(0),
         })
     }
 
@@ -137,6 +162,8 @@ impl Evaluator {
             intra,
             cache,
             scratch: ScratchPool::default(),
+            refused_shapes: Mutex::new(HashSet::new()),
+            memo_hits: AtomicUsize::new(0),
         })
     }
 
@@ -199,12 +226,55 @@ impl Evaluator {
         self.run(mapping, false, true)
     }
 
+    /// Canonical hash of everything about `mapping` the walk depends on.
+    /// Retention is resolved per tensor (in tensor order), so mappings that
+    /// differ only in `HashMap` iteration order hash identically.
+    fn mapping_signature(&self, mapping: &InterLayerMapping) -> u64 {
+        let mut h = DefaultHasher::new();
+        for p in &mapping.partitions {
+            p.dim.hash(&mut h);
+            p.tile.hash(&mut h);
+        }
+        for x in 0..self.fs.tensors.len() {
+            mapping.retention_for(TensorId(x)).hash(&mut h);
+        }
+        (mapping.parallelism == crate::mapping::Parallelism::Pipeline).hash(&mut h);
+        h.finish()
+    }
+
+    /// Symbolic attempts skipped so far because the mapping's signature was
+    /// memoized as refusing (see `refused_shapes`). Monotone within a
+    /// session; cloned sessions restart at zero.
+    pub fn refusal_memo_hits(&self) -> i64 {
+        self.memo_hits.load(Ordering::Relaxed) as i64
+    }
+
     fn run(
         &self,
         mapping: &InterLayerMapping,
         force_reference: bool,
         no_symbolic: bool,
     ) -> Result<Metrics, String> {
+        // Refusal memo: a symbolic attempt that bailed mid-walk paid a full
+        // re-`prepare` before the region walk; the second time the same
+        // mapping shows up (search loops revisit points constantly) the
+        // attempt is skipped outright.
+        let mut no_symbolic = no_symbolic;
+        let mut sig = None;
+        if !force_reference && !no_symbolic {
+            let s = self.mapping_signature(mapping);
+            let known_refusing = self
+                .refused_shapes
+                .lock()
+                .map(|memo| memo.contains(&s))
+                .unwrap_or(false);
+            if known_refusing {
+                self.memo_hits.fetch_add(1, Ordering::Relaxed);
+                no_symbolic = true;
+            } else {
+                sig = Some(s);
+            }
+        }
         let mut scratch = self.scratch.take();
         let result = evaluate_prevalidated(
             &self.fs,
@@ -216,6 +286,13 @@ impl Evaluator {
             no_symbolic,
         );
         self.scratch.put(scratch);
+        if let (Some(s), Ok(m)) = (sig, &result) {
+            if m.path.sym_refused {
+                if let Ok(mut memo) = self.refused_shapes.lock() {
+                    memo.insert(s);
+                }
+            }
+        }
         result
     }
 
@@ -242,6 +319,12 @@ impl Evaluator {
                     Ok(_) => String::new(),
                     Err(e) => e.describe(&self.fs),
                 },
+                union_width: metrics
+                    .path
+                    .level_union_widths
+                    .get(l)
+                    .copied()
+                    .unwrap_or(0),
             })
             .collect();
         let skip_reason = if metrics.path.symbolic {
@@ -265,10 +348,16 @@ impl Evaluator {
                  (reduction-rank partitioning)"
                     .to_string(),
             )
+        } else if metrics.path.sym_refused {
+            Some(
+                "union-calculus refusal at runtime: an availability or fresh \
+                 set exceeded the bounded box-union width mid-walk"
+                    .to_string(),
+            )
         } else {
             Some(
-                "box-closure refusal at runtime: an availability or fresh set \
-                 left single-box form mid-walk"
+                "a previous evaluation of this mapping refused mid-walk \
+                 (memoized; the symbolic attempt was skipped)"
                     .to_string(),
             )
         };
@@ -344,6 +433,49 @@ mod tests {
         assert!(!b.path.symbolic && !c.path.symbolic);
         // The reference walk never jumps; the middle tier may.
         assert_eq!(c.path.proven_jumps + c.path.certified_jumps, 0);
+        a.path = Default::default();
+        b.path = Default::default();
+        c.path = Default::default();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(format!("{a:?}"), format!("{c:?}"));
+    }
+
+    #[test]
+    fn refusal_memo_skips_repeat_attempts() {
+        use crate::einsum::FusionSetBuilder;
+        // Two chained batched convs under a B,P,Q partition with retention 0:
+        // at the wrap leaf (b=1, p=1, q=0) the first layer's input fmap
+        // availability is a batch slab plus a row band plus a fresh corner —
+        // three disjoint boxes — so the width-2 union calculus refuses.
+        let fs = FusionSetBuilder::new("memo_refuse", &[3, 2, 8, 8])
+            .conv2d_batched(2, 3, 3, 1)
+            .conv2d_batched(2, 3, 3, 1)
+            .build();
+        let arch = Arch::generic(4096);
+        let ev = Evaluator::new(&fs, &arch).unwrap();
+        let last = fs.last();
+        let mapping = InterLayerMapping::tiled(
+            ["B2", "P2", "Q2"]
+                .iter()
+                .map(|n| Partition { dim: last.rank_index(n).unwrap(), tile: 1 })
+                .collect(),
+            Parallelism::Sequential,
+        )
+        .with_uniform_retention(0);
+
+        let mut a = ev.evaluate(&mapping).unwrap();
+        assert!(a.path.sym_refused, "expected a runtime refusal; path={:?}", a.path);
+        assert!(!a.path.symbolic);
+        assert_eq!(ev.refusal_memo_hits(), 0);
+
+        let mut b = ev.evaluate(&mapping).unwrap();
+        assert!(!b.path.symbolic);
+        assert!(!b.path.sym_refused, "memoized run must skip the attempt");
+        assert_eq!(ev.refusal_memo_hits(), 1);
+
+        // The memoized skip is bit-identical to the refused-then-bailed run,
+        // and both agree with the reference walk.
+        let mut c = ev.evaluate_reference(&mapping).unwrap();
         a.path = Default::default();
         b.path = Default::default();
         c.path = Default::default();

@@ -39,6 +39,25 @@ pub struct PathCounts {
     /// Inter-layer iterations actually walked (leaf visits not covered by a
     /// jump); `iterations` minus these is the jump-skipped tile count.
     pub walked_iterations: i64,
+    /// Proven jumps taken while some availability union held ≥ 2 boxes —
+    /// the closed-form multibox path of row+column output tilings.
+    pub multibox_proven_jumps: i64,
+    /// Certified jumps taken while some availability union held ≥ 2 boxes.
+    pub multibox_certified_jumps: i64,
+    /// Widest box union the symbolic walk ever held, across availability
+    /// sets and the transient ops/needs/fresh/pending sets of the backward
+    /// pass (1 on single-box walks, 2 on multibox walks, 0 when the
+    /// symbolic tier did not cover the evaluation).
+    pub peak_union_width: i64,
+    /// Per schedule level: the widest availability union observed at any
+    /// child boundary of that level (empty unless the symbolic tier covered
+    /// the evaluation).
+    pub level_union_widths: Vec<i64>,
+    /// The symbolic tier was attempted but bailed on a union-calculus
+    /// refusal mid-walk (the evaluation then reran on the region walk).
+    /// `false` when the tier was gated off structurally, skipped via the
+    /// refusal memo, or succeeded.
+    pub sym_refused: bool,
 }
 
 /// Evaluation result for one (fusion set, architecture, mapping) triple.

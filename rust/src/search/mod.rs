@@ -234,6 +234,13 @@ pub struct SearchResult {
     /// box walk ([`Metrics::path`]) — a diagnostic of how often the
     /// closed-form evaluator carries the search.
     pub symbolic_evals: usize,
+    /// Symbolic attempts the session skipped during this search because an
+    /// identical mapping had already refused mid-walk
+    /// ([`Evaluator::refusal_memo_hits`]). Diagnostic only, and *not* part
+    /// of the serialized search document: parallel batches may race the
+    /// first refusal of duplicate candidates, so the count is
+    /// run-to-run stable only for serial searches.
+    pub refusal_memo_hits: i64,
 }
 
 /// Count of evaluations that ran entirely on the symbolic box walk.
@@ -246,12 +253,17 @@ fn count_symbolic(evaluated: &[Scored]) -> usize {
 /// candidate structurally invalid). Deterministic given (session, spec):
 /// PRNG-driven algorithms derive all randomness from `spec.seed`.
 pub fn run(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<SearchResult> {
-    match spec.algorithm {
+    let memo_before = ev.refusal_memo_hits();
+    let mut result = match spec.algorithm {
         Algorithm::Exhaustive => exhaustive(ev, spec, pool),
         Algorithm::Random => random(ev, spec, pool),
         Algorithm::Annealing => annealing(ev, spec),
         Algorithm::Genetic => genetic(ev, spec, pool),
+    };
+    if let Some(r) = result.as_mut() {
+        r.refusal_memo_hits = ev.refusal_memo_hits() - memo_before;
     }
+    result
 }
 
 fn score_all(
@@ -278,7 +290,7 @@ fn best_of(evaluated: Vec<Scored>, pruned: usize) -> Option<SearchResult> {
         .min_by(|a, b| a.score.total_cmp(&b.score))?
         .clone();
     let symbolic_evals = count_symbolic(&evaluated);
-    Some(SearchResult { best, evaluated, pruned, symbolic_evals })
+    Some(SearchResult { best, evaluated, pruned, symbolic_evals, refusal_memo_hits: 0 })
 }
 
 /// A provable lower bound on the score `mapping` would receive if evaluated,
@@ -462,7 +474,7 @@ fn annealing(ev: &Evaluator, spec: &SearchSpec) -> Option<SearchResult> {
     // consume state per evaluation, so skipping one would change every
     // subsequent draw.
     let symbolic_evals = count_symbolic(&evaluated);
-    Some(SearchResult { best, evaluated, pruned: 0, symbolic_evals })
+    Some(SearchResult { best, evaluated, pruned: 0, symbolic_evals, refusal_memo_hits: 0 })
 }
 
 /// Genetic search: tournament selection + mutation (no crossover across

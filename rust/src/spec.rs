@@ -1296,6 +1296,25 @@ impl Metrics {
                     ("proven_jumps", jnum_i(self.path.proven_jumps)),
                     ("certified_jumps", jnum_i(self.path.certified_jumps)),
                     ("walked_iterations", jnum_i(self.path.walked_iterations)),
+                    (
+                        "multibox_proven_jumps",
+                        jnum_i(self.path.multibox_proven_jumps),
+                    ),
+                    (
+                        "multibox_certified_jumps",
+                        jnum_i(self.path.multibox_certified_jumps),
+                    ),
+                    ("peak_union_width", jnum_i(self.path.peak_union_width)),
+                    (
+                        "level_union_widths",
+                        jarr(self
+                            .path
+                            .level_union_widths
+                            .iter()
+                            .map(|&v| jnum_i(v))
+                            .collect()),
+                    ),
+                    ("sym_refused", Json::Bool(self.path.sym_refused)),
                 ]),
             ),
         ])
@@ -1372,6 +1391,21 @@ impl Metrics {
                         proven_jumps: pi64("proven_jumps")?,
                         certified_jumps: pi64("certified_jumps")?,
                         walked_iterations: pi64("walked_iterations")?,
+                        // Documents from before the multibox calculus lack
+                        // these; default to the single-box all-off shape.
+                        multibox_proven_jumps: pi64("multibox_proven_jumps")?,
+                        multibox_certified_jumps: pi64("multibox_certified_jumps")?,
+                        peak_union_width: pi64("peak_union_width")?,
+                        level_union_widths: match p.get("level_union_widths") {
+                            Some(v) => i64_vec(v, pctx)?,
+                            None => vec![],
+                        },
+                        sym_refused: match p.get("sym_refused") {
+                            Some(v) => v.as_bool().ok_or_else(|| {
+                                format!("{pctx}: sym_refused must be a bool")
+                            })?,
+                            None => false,
+                        },
                     }
                 }
                 None => PathCounts::default(),
@@ -1725,6 +1759,43 @@ mod tests {
         assert_eq!(back.to_json().to_string(), j.to_string());
         assert_eq!(back.latency_cycles, m.latency_cycles);
         assert_eq!(back.energy.total_pj().to_bits(), m.energy.total_pj().to_bits());
+    }
+
+    #[test]
+    fn path_counts_round_trip_and_old_documents_default() {
+        // All multibox attribution fields survive the wire form.
+        let m = Metrics {
+            path: PathCounts {
+                symbolic: true,
+                proven_jumps: 3,
+                certified_jumps: 1,
+                walked_iterations: 9,
+                multibox_proven_jumps: 2,
+                multibox_certified_jumps: 1,
+                peak_union_width: 2,
+                level_union_widths: vec![1, 2],
+                sym_refused: false,
+            },
+            ..Default::default()
+        };
+        let back = Metrics::from_json(&reser(&m.to_json())).unwrap();
+        assert_eq!(back.path, m.path);
+
+        // Documents written before the multibox calculus (path object with
+        // only the original four keys) parse with the new fields defaulted.
+        let old = Json::parse(
+            r#"{"iterations": 4, "path": {"symbolic": true, "proven_jumps": 1,
+                "certified_jumps": 0, "walked_iterations": 2}}"#,
+        )
+        .unwrap();
+        let back = Metrics::from_json(&old).unwrap();
+        assert!(back.path.symbolic);
+        assert_eq!(back.path.proven_jumps, 1);
+        assert_eq!(back.path.multibox_proven_jumps, 0);
+        assert_eq!(back.path.multibox_certified_jumps, 0);
+        assert_eq!(back.path.peak_union_width, 0);
+        assert!(back.path.level_union_widths.is_empty());
+        assert!(!back.path.sym_refused);
     }
 
     #[test]

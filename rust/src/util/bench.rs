@@ -181,15 +181,23 @@ pub const MODEL_EVAL_SPEEDUP_NUM_KEYS: [&str; 4] =
 
 /// The per-row numeric keys of `BENCH_model_eval.json`'s
 /// `symbolic_speedups` section (three-tier comparison rows; each entry also
-/// carries a bool `symbolic_fired`, the deterministic path-attribution flag
-/// the CI determinism gate diffs alongside `iterations`).
-pub const MODEL_EVAL_SYMBOLIC_NUM_KEYS: [&str; 5] = [
+/// carries the bools `symbolic_fired` and `multibox_fired`, the
+/// deterministic path-attribution flags the CI determinism gate diffs
+/// alongside `iterations`, `peak_union_width`, and `refusal_memo_hits`).
+pub const MODEL_EVAL_SYMBOLIC_NUM_KEYS: [&str; 7] = [
     "iterations",
     "symbolic_mean_ns",
     "fast_mean_ns",
     "reference_mean_ns",
     "speedup_vs_fast",
+    "peak_union_width",
+    "refusal_memo_hits",
 ];
+
+/// The per-row bool keys of `BENCH_model_eval.json`'s `symbolic_speedups`
+/// section: whether the tier-1 walk covered the row, and whether it ever
+/// held a multi-box union while doing so (`peak_union_width >= 2`).
+pub const MODEL_EVAL_SYMBOLIC_BOOL_KEYS: [&str; 2] = ["symbolic_fired", "multibox_fired"];
 
 /// Validate a `BENCH_model_eval.json` document: `rows`, `fastpath_speedups`,
 /// and `symbolic_speedups`, each non-empty with a string `workload` and the
@@ -203,7 +211,7 @@ pub fn check_model_eval_bench_schema(doc: &Json) -> Result<(), String> {
         FILE,
         "symbolic_speedups",
         &MODEL_EVAL_SYMBOLIC_NUM_KEYS,
-        &["symbolic_fired"],
+        &MODEL_EVAL_SYMBOLIC_BOOL_KEYS,
     )
 }
 
@@ -291,7 +299,9 @@ mod tests {
                        \"reference_mean_ns\":2.0,\"speedup\":2.0}";
         let symbolic = "{\"workload\":\"conv\",\"iterations\":12.0,\"symbolic_mean_ns\":0.5,\
                         \"fast_mean_ns\":1.0,\"reference_mean_ns\":2.0,\
-                        \"speedup_vs_fast\":2.0,\"symbolic_fired\":true}";
+                        \"speedup_vs_fast\":2.0,\"symbolic_fired\":true,\
+                        \"multibox_fired\":true,\"peak_union_width\":2.0,\
+                        \"refusal_memo_hits\":0.0}";
         let doc = Json::parse(&format!(
             "{{\"rows\":[{row}],\"fastpath_speedups\":[{speedup}],\
                \"symbolic_speedups\":[{symbolic}]}}"
@@ -322,10 +332,22 @@ mod tests {
         // A symbolic row missing the bool path-attribution flag fails.
         let no_fired = "{\"workload\":\"conv\",\"iterations\":12.0,\"symbolic_mean_ns\":0.5,\
                         \"fast_mean_ns\":1.0,\"reference_mean_ns\":2.0,\
-                        \"speedup_vs_fast\":2.0}";
+                        \"speedup_vs_fast\":2.0,\"multibox_fired\":false,\
+                        \"peak_union_width\":1.0,\"refusal_memo_hits\":0.0}";
         let doc = Json::parse(&format!(
             "{{\"rows\":[{row}],\"fastpath_speedups\":[{speedup}],\
                \"symbolic_speedups\":[{no_fired}]}}"
+        ))
+        .unwrap();
+        assert!(check_model_eval_bench_schema(&doc).is_err());
+        // A pre-multibox symbolic row (no `multibox_fired` /
+        // `peak_union_width` / `refusal_memo_hits`) must now be rejected.
+        let stale = "{\"workload\":\"conv\",\"iterations\":12.0,\"symbolic_mean_ns\":0.5,\
+                     \"fast_mean_ns\":1.0,\"reference_mean_ns\":2.0,\
+                     \"speedup_vs_fast\":2.0,\"symbolic_fired\":true}";
+        let doc = Json::parse(&format!(
+            "{{\"rows\":[{row}],\"fastpath_speedups\":[{speedup}],\
+               \"symbolic_speedups\":[{stale}]}}"
         ))
         .unwrap();
         assert!(check_model_eval_bench_schema(&doc).is_err());

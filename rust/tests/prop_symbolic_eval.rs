@@ -8,7 +8,13 @@
 //! tiles, repartitioned ranks, per-tensor retention, and both parallelism
 //! modes. Beyond agreement, this suite pins *coverage*: the symbolic walk
 //! must actually fire (`Metrics::path.symbolic`) on every canonical
-//! workload under single output-rank partitions, so the closed-form path is
+//! workload under single output-rank partitions — and, since the bounded
+//! box-union calculus, under row+column (two output-rank) partitions too,
+//! including ragged and nested variants. Width itself is pinned: the
+//! retention-0 row+column tilings must report `peak_union_width == 2` on
+//! the spatial workloads (multibox path genuinely live), width 1 on the
+//! disjoint-projection `fc_fc`, and a hand-built width-3 overflow must
+//! refuse bit-identically and be memoized, so the closed-form path is
 //! known to be exercised rather than vacuously falling back.
 
 use std::collections::HashMap;
@@ -90,6 +96,59 @@ fn random_mapping(fs: &FusionSet, rng: &mut Prng) -> InterLayerMapping {
     m
 }
 
+/// A randomized row+column output tiling: two partition levels drawn from
+/// distinct *output* ranks of the sink (so the symbolic gate is open),
+/// ragged tiles, an optional nested re-partition of the first rank, either
+/// parallelism, and either full (`tiled`) or whole-tensor (level 0)
+/// retention — the mapping family the bounded box-union tier was built
+/// for. Returns the mapping plus whether the symbolic walk is *required*
+/// to cover it (two-level full-retention tilings must never fall back;
+/// deeper or retention-0 variants may legitimately refuse).
+fn random_out_tiling(
+    fs: &FusionSet,
+    st: &SessionStatics,
+    rng: &mut Prng,
+) -> Option<(InterLayerMapping, bool)> {
+    let last = fs.last();
+    let dims: Vec<usize> = st
+        .out_dims
+        .iter()
+        .copied()
+        .filter(|&d| last.rank_sizes[d] >= 2)
+        .collect();
+    if dims.len() < 2 {
+        return None;
+    }
+    let a = dims[rng.index(dims.len())];
+    let b = loop {
+        let b = dims[rng.index(dims.len())];
+        if b != a {
+            break b;
+        }
+    };
+    let ta = rng.range_i64(1, last.rank_sizes[a]);
+    let tb = rng.range_i64(1, last.rank_sizes[b]);
+    let mut partitions = vec![Partition { dim: a, tile: ta }, Partition { dim: b, tile: tb }];
+    let nested = ta >= 2 && rng.chance(0.4);
+    if nested {
+        partitions.push(Partition { dim: a, tile: rng.range_i64(1, ta) });
+    }
+    let parallelism = if rng.chance(0.5) {
+        Parallelism::Sequential
+    } else {
+        Parallelism::Pipeline
+    };
+    let m = InterLayerMapping::tiled(partitions, parallelism);
+    let whole_tensor = rng.chance(0.33);
+    let must_cover = !nested && !whole_tensor;
+    let m = if whole_tensor {
+        m.with_uniform_retention(0)
+    } else {
+        m
+    };
+    Some((m, must_cover))
+}
+
 /// The five validation designs (DepFin, Fused-layer CNN, ISAAC, PipeLayer,
 /// FLAT) through all three tiers — the acceptance gate of the symbolic path.
 #[test]
@@ -164,4 +223,204 @@ fn symbolic_walk_fires_on_every_canonical_workload() {
             fs.name
         );
     }
+}
+
+/// Randomized row+column output tilings — ragged tiles, nested
+/// re-partitions, pipeline and sequential, full and whole-tensor
+/// retention — through all three tiers. Two-level full-retention tilings
+/// must additionally be *covered* by the symbolic walk (the bounded
+/// box-union calculus keeps every transient set within width 2 there);
+/// deeper or retention-0 variants may refuse, but must stay bit-identical
+/// either way.
+#[test]
+fn randomized_row_column_tilings_identical_through_all_tiers() {
+    let mut rng = Prng::new(0xB0C5_E7D1);
+    let arch = Arch::generic(1 << 13);
+    for fs in &workload_pool() {
+        let st = SessionStatics::build(fs);
+        let ev = Evaluator::new(fs, &arch).unwrap();
+        for sub in 0..12 {
+            let Some((m, must_cover)) = random_out_tiling(fs, &st, &mut rng) else {
+                break;
+            };
+            if m.total_iterations(fs) > 20_000 {
+                continue;
+            }
+            let tag = format!("{} 2-D #{sub}", fs.name);
+            assert_tiers_equal(&ev, &m, &tag);
+            if must_cover {
+                let metrics = ev.evaluate(&m).unwrap();
+                assert!(
+                    metrics.path.symbolic,
+                    "{tag}: two-level full-retention output tiling fell back \
+                     (schedule {}, tiles {:?})",
+                    m.schedule_string(fs),
+                    m.partitions.iter().map(|p| p.tile).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+}
+
+/// Coverage pin for the bounded box-union tier: on every canonical
+/// workload, *pairs* of output ranks — row+column tilings, with ragged
+/// tiles and a nested re-partition — must be covered by the symbolic walk
+/// end to end under full retention (single-box or multibox as the shapes
+/// demand). Before the union calculus these schedules all fell back to the
+/// region walk at the first wrap leaf.
+#[test]
+fn symbolic_walk_fires_on_row_plus_column_tilings() {
+    let arch = Arch::generic(1 << 14);
+    for fs in &workload_pool() {
+        let st = SessionStatics::build(fs);
+        let ev = Evaluator::new(fs, &arch).unwrap();
+        let last = fs.last();
+        let dims: Vec<usize> = st
+            .out_dims
+            .iter()
+            .copied()
+            .filter(|&d| last.rank_sizes[d] >= 4)
+            .collect();
+        let mut exercised = 0;
+        for (i, &a) in dims.iter().enumerate() {
+            for &b in &dims[i + 1..] {
+                // (1,1): unit tiles; (2,3): ragged on any extent not
+                // divisible by the tile.
+                for (ta, tb) in [(1i64, 1i64), (2, 3)] {
+                    let m = InterLayerMapping::tiled(
+                        vec![Partition { dim: a, tile: ta }, Partition { dim: b, tile: tb }],
+                        Parallelism::Sequential,
+                    );
+                    let tag = format!(
+                        "{} dims ({},{}) tiles ({ta},{tb})",
+                        fs.name, last.rank_names[a], last.rank_names[b]
+                    );
+                    assert_tiers_equal(&ev, &m, &tag);
+                    let metrics = ev.evaluate(&m).unwrap();
+                    assert!(metrics.path.symbolic, "{tag}: symbolic walk fell back");
+                    assert!(
+                        (1..=2).contains(&metrics.path.peak_union_width),
+                        "{tag}: covered walk reported peak union width {}",
+                        metrics.path.peak_union_width
+                    );
+                    exercised += 1;
+                }
+                // Nested re-partition of the first rank under the column
+                // split: [(a,4), (b,2), (a,1)].
+                if last.rank_sizes[a] >= 8 {
+                    let m = InterLayerMapping::tiled(
+                        vec![
+                            Partition { dim: a, tile: 4 },
+                            Partition { dim: b, tile: 2 },
+                            Partition { dim: a, tile: 1 },
+                        ],
+                        Parallelism::Sequential,
+                    );
+                    let tag = format!(
+                        "{} nested ({},{})",
+                        fs.name, last.rank_names[a], last.rank_names[b]
+                    );
+                    assert_tiers_equal(&ev, &m, &tag);
+                    let metrics = ev.evaluate(&m).unwrap();
+                    assert!(metrics.path.symbolic, "{tag}: symbolic walk fell back");
+                    exercised += 1;
+                }
+            }
+        }
+        assert!(
+            exercised > 0,
+            "{}: no output-rank pair was long enough to exercise the multibox walk",
+            fs.name
+        );
+    }
+}
+
+/// Width pin: under whole-tensor (level 0) retention, row+column tilings
+/// accumulate genuine two-box availability unions — a completed band plus
+/// the partial row in flight — so the walk must report the multibox path
+/// (`peak_union_width == 2`) on the spatial workloads. `fc_fc` is the
+/// documented single-box exception: its two output ranks (`M2`, `E2`)
+/// project to *disjoint* tensors (the intermediate sees only `M2`, the
+/// second filter only `E2`) and nothing has halos, so every set stays one
+/// box and the walk reports width 1.
+#[test]
+fn multibox_width_pinned_per_workload() {
+    let arch = Arch::generic(1 << 14);
+    let spatial = [
+        (workloads::conv_conv(20, 4), "P2", "Q2"),
+        (workloads::conv_conv_conv(16, 4), "P3", "Q3"),
+        (workloads::pwise_dwise_pwise(12, 3), "P3", "Q3"),
+        (workloads::self_attention(1, 2, 12, 4), "H2", "M2"),
+    ];
+    for (fs, ra, rb) in &spatial {
+        let ev = Evaluator::new(fs, &arch).unwrap();
+        let last = fs.last();
+        let m = InterLayerMapping::tiled(
+            vec![
+                Partition { dim: last.rank_index(ra).unwrap(), tile: 1 },
+                Partition { dim: last.rank_index(rb).unwrap(), tile: 1 },
+            ],
+            Parallelism::Sequential,
+        )
+        .with_uniform_retention(0);
+        let tag = format!("{} ({ra},{rb}) retention 0", fs.name);
+        assert_tiers_equal(&ev, &m, &tag);
+        let metrics = ev.evaluate(&m).unwrap();
+        assert!(metrics.path.symbolic, "{tag}: symbolic walk fell back");
+        assert_eq!(
+            metrics.path.peak_union_width, 2,
+            "{tag}: expected the multibox path"
+        );
+    }
+
+    let fs = workloads::fc_fc(24, 8);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
+    let last = fs.last();
+    let m = InterLayerMapping::tiled(
+        vec![
+            Partition { dim: last.rank_index("M2").unwrap(), tile: 1 },
+            Partition { dim: last.rank_index("E2").unwrap(), tile: 1 },
+        ],
+        Parallelism::Sequential,
+    )
+    .with_uniform_retention(0);
+    assert_tiers_equal(&ev, &m, "fc_fc (M2,E2) retention 0");
+    let metrics = ev.evaluate(&m).unwrap();
+    assert!(metrics.path.symbolic, "fc_fc (M2,E2): symbolic walk fell back");
+    assert_eq!(
+        metrics.path.peak_union_width, 1,
+        "fc_fc (M2,E2): disjoint projections must stay single-box"
+    );
+}
+
+/// The runtime refusal + memo pipeline end to end on a mapping that
+/// provably exceeds the width bound: two chained batched convs under a
+/// B,P,Q partition with whole-tensor retention need a *three*-box
+/// availability union at the batch-wrap leaf, so the symbolic walk refuses
+/// (bit-identically bailing to the region walk) and the session memoizes
+/// the mapping signature.
+#[test]
+fn width_overflow_refuses_bit_identically() {
+    use looptree::einsum::FusionSetBuilder;
+    let fs = FusionSetBuilder::new("batched-refuser", &[3, 2, 8, 8])
+        .conv2d_batched(2, 3, 3, 1)
+        .conv2d_batched(2, 3, 3, 1)
+        .build();
+    let arch = Arch::generic(1 << 14);
+    let ev = Evaluator::new(&fs, &arch).unwrap();
+    let last = fs.last();
+    let m = InterLayerMapping::tiled(
+        ["B2", "P2", "Q2"]
+            .iter()
+            .map(|n| Partition { dim: last.rank_index(n).unwrap(), tile: 1 })
+            .collect(),
+        Parallelism::Sequential,
+    )
+    .with_uniform_retention(0);
+    assert_tiers_equal(&ev, &m, "batched-refuser B,P,Q retention 0");
+    // assert_tiers_equal already ran the default path once (refusing and
+    // memoizing) — from here on the session skips the symbolic attempt.
+    let metrics = ev.evaluate(&m).unwrap();
+    assert!(!metrics.path.symbolic && !metrics.path.sym_refused);
+    assert!(ev.refusal_memo_hits() >= 1, "refusal was not memoized");
 }

@@ -1,0 +1,224 @@
+//! Serve load-test harness: boot an in-process `looptree serve` server and
+//! drive it with N concurrent synthetic clients over real TCP, measuring
+//! request latency percentiles and throughput per scenario. The headline
+//! numbers are the cold-vs-warmed latency gap (the cross-request segment
+//! cache's leverage) and the deterministic cache counters
+//! (`cache_hits`/`cache_misses`/`warm_starts`), which the CI determinism
+//! gate diffs across two runs.
+//!
+//! Emits `BENCH_serve.json` (schema pinned by
+//! `util::bench::check_serve_bench_schema`); `LOOPTREE_BENCH_SMOKE=1`
+//! shrinks request counts for CI.
+
+use looptree::arch::Arch;
+use looptree::einsum::workloads;
+use looptree::mapspace::MapSpaceConfig;
+use looptree::network::{LayerOp, Network, NetworkSearchSpec};
+use looptree::search::{Algorithm, SearchSpec};
+use looptree::serve::{bench_row, response_stats, post_json, ServeOptions, Server, ServerHandle};
+use looptree::spec::{NetworkConfig, SearchConfig, ServeStats};
+use looptree::util::bench::{check_serve_bench_schema, smoke, write_bench_json, LatencyStats};
+use looptree::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn envelope(kind: &str, config: Json, warm_start: bool) -> Json {
+    let mut pairs = vec![
+        ("kind".to_string(), Json::Str(kind.to_string())),
+        ("config".to_string(), config),
+    ];
+    if warm_start {
+        pairs.push(("warm_start".to_string(), Json::Bool(true)));
+    }
+    Json::Obj(pairs.into_iter().collect())
+}
+
+/// A small conv chain whose repeated blocks give the segment memo (and the
+/// cross-request cache) something to deduplicate, cheap enough for smoke.
+fn bench_network_config() -> Json {
+    let mut net = Network { name: "serve_stack".into(), layers: vec![] };
+    for i in 0..4 {
+        net.push(
+            &format!("conv{i}"),
+            &[16, 14, 14],
+            LayerOp::Conv2d { out_channels: 16, r: 3, s: 3, stride: 1 },
+        );
+    }
+    let cfg = NetworkConfig {
+        network: net,
+        arch: Arch::generic(256),
+        segment_search: NetworkSearchSpec {
+            max_segment_layers: 2,
+            search: SearchSpec {
+                mapspace: MapSpaceConfig {
+                    uniform_retention: true,
+                    tile_sizes: vec![8],
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        cuts: None,
+        pareto: false,
+    };
+    cfg.to_json()
+}
+
+fn bench_search_config() -> Json {
+    let cfg = SearchConfig {
+        workload: workloads::conv_conv(14, 8),
+        arch: Arch::generic(256),
+        search: SearchSpec {
+            algorithm: Algorithm::Annealing,
+            iters: if smoke() { 40 } else { 200 },
+            seed: 7,
+            mapspace: MapSpaceConfig {
+                uniform_retention: true,
+                tile_sizes: vec![2, 8],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    };
+    cfg.to_json()
+}
+
+struct ScenarioResult {
+    times: Vec<Duration>,
+    elapsed: Duration,
+    stats: ServeStats,
+    all_ok: bool,
+    responses: Vec<Json>,
+}
+
+/// Fan `requests_per_client` copies of `doc` out over `clients` concurrent
+/// TCP clients and tally latencies, envelope counters, and ok-ness.
+fn drive(handle: &ServerHandle, doc: &Json, clients: usize, requests_per_client: usize) -> ScenarioResult {
+    let addr = handle.addr();
+    let t0 = Instant::now();
+    let per_client: Vec<(Vec<Duration>, Vec<Json>)> = std::thread::scope(|scope| {
+        let jobs: Vec<_> = (0..clients)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut times = Vec::with_capacity(requests_per_client);
+                    let mut responses = Vec::with_capacity(requests_per_client);
+                    for _ in 0..requests_per_client {
+                        let r0 = Instant::now();
+                        let (status, resp) =
+                            post_json(&addr, "/", doc).expect("serve request failed");
+                        times.push(r0.elapsed());
+                        assert_eq!(status, 200, "unexpected HTTP status: {resp}");
+                        responses.push(resp);
+                    }
+                    (times, responses)
+                })
+            })
+            .collect();
+        jobs.into_iter().map(|j| j.join().expect("client thread panicked")).collect()
+    });
+    let elapsed = t0.elapsed();
+    let mut times = Vec::new();
+    let mut responses = Vec::new();
+    for (t, r) in per_client {
+        times.extend(t);
+        responses.extend(r);
+    }
+    let mut stats = ServeStats::default();
+    let mut all_ok = true;
+    for resp in &responses {
+        let s = response_stats(resp);
+        stats.cache_hits += s.cache_hits;
+        stats.cache_misses += s.cache_misses;
+        stats.warm_starts += s.warm_starts;
+        all_ok &= resp.get("ok").and_then(Json::as_bool).unwrap_or(false);
+    }
+    ScenarioResult { times, elapsed, stats, all_ok, responses }
+}
+
+fn report_row(name: &str, clients: usize, r: &ScenarioResult) -> Json {
+    let lat = LatencyStats::from_times(&r.times);
+    println!(
+        "{name:28} {:>4} reqs x{clients:>2} clients  p50 {:?}  p99 {:?}  hits {}  misses {}  warm {}",
+        r.times.len(),
+        lat.p50,
+        lat.p99,
+        r.stats.cache_hits,
+        r.stats.cache_misses,
+        r.stats.warm_starts
+    );
+    bench_row(name, clients, r.times.len(), &lat, r.elapsed, &r.stats, r.all_ok)
+}
+
+fn main() {
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default())
+        .expect("bind serve bench server");
+    let handle = server.spawn();
+    let (serial_reqs, clients, reqs_per_client) = if smoke() { (3, 4, 2) } else { (8, 8, 8) };
+
+    let net_doc = envelope("network", bench_network_config(), false);
+    let search_cold = envelope("search", bench_search_config(), false);
+    let search_warm = envelope("search", bench_search_config(), true);
+
+    let mut rows: Vec<Json> = Vec::new();
+
+    // Cold + sequential: the first request populates the cache (misses
+    // only), the rest replay it (hits only) — so the aggregate counters are
+    // exact functions of the request count and the network's distinct
+    // segment-signature count.
+    let cold = drive(&handle, &net_doc, 1, serial_reqs);
+    assert!(cold.stats.cache_misses > 0, "cold scenario must miss");
+    assert!(cold.stats.cache_hits > 0, "replays within the cold scenario must hit");
+    let first = response_stats(&cold.responses[0]);
+    assert_eq!(first.cache_hits, 0, "first-ever request cannot hit");
+    rows.push(report_row("network-cold-serial", 1, &cold));
+
+    // Fully-warmed concurrent replay: every request is a pure cache hit, so
+    // the counters stay deterministic under any client interleaving.
+    let warmed = drive(&handle, &net_doc, clients, reqs_per_client);
+    assert_eq!(warmed.stats.cache_misses, 0, "warmed scenario must not miss");
+    rows.push(report_row("network-warmed-concurrent", clients, &warmed));
+
+    // Warm-started annealing: a cold run seeds the warm pool, then every
+    // warm_start request reports warm_starts=1 and may only improve on the
+    // cold best (the seeds join the evaluated set).
+    let seed_run = drive(&handle, &search_cold, 1, 1);
+    assert!(seed_run.all_ok, "cold search must succeed");
+    let cold_best = seed_run.responses[0]
+        .get("result")
+        .and_then(|r| r.get("result"))
+        .and_then(|r| r.get("best"))
+        .and_then(|b| b.get("score"))
+        .and_then(Json::as_f64)
+        .expect("cold search response carries a best score");
+    let warm = drive(&handle, &search_warm, 1, serial_reqs);
+    assert_eq!(
+        warm.stats.warm_starts,
+        warm.responses.len() as u64,
+        "every warm_start request must report a warm start"
+    );
+    for resp in &warm.responses {
+        let warm_best = resp
+            .get("result")
+            .and_then(|r| r.get("result"))
+            .and_then(|r| r.get("best"))
+            .and_then(|b| b.get("score"))
+            .and_then(Json::as_f64)
+            .expect("warm search response carries a best score");
+        assert!(
+            warm_best <= cold_best,
+            "warm-started search regressed: {warm_best} > {cold_best}"
+        );
+    }
+    rows.push(report_row("search-warm-start", 1, &warm));
+
+    handle.stop();
+
+    let report = Json::Obj(
+        [("rows".to_string(), Json::Arr(rows))].into_iter().collect(),
+    );
+    check_serve_bench_schema(&report).expect("BENCH_serve.json schema drifted");
+    match write_bench_json("BENCH_serve.json", &report) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("failed to write BENCH_serve.json: {e}"),
+    }
+}

@@ -60,11 +60,18 @@
 //!   dominance over vector costs and emits whole-network Pareto fronts.
 //! * [`coordinator`] — parallel DSE job execution (lock-free result merge).
 //! * [`spec`] — the serializable JSON spec/query layer.
+//! * [`serve`] — `looptree serve`: a persistent DSE server over the spec
+//!   layer with a cross-request segment cache and warm-started search
+//!   (protocol in `docs/PROTOCOL.md`).
 //! * `runtime` *(feature `pjrt`)* — PJRT execution of AOT-compiled
 //!   fused-tile artifacts.
 //! * [`validation`] — encodings of DepFin, Fused-layer CNN, ISAAC,
 //!   PipeLayer, and FLAT (paper Tables V–VIII, Fig 13).
 //! * [`casestudies`] — drivers regenerating paper Figs 14–18.
+//!
+//! A prose map of how these modules fit together — the evaluator tier
+//! hierarchy, the network DP, and the serve-layer caching story — lives in
+//! `docs/ARCHITECTURE.md`.
 
 #![forbid(unsafe_code)]
 #![warn(missing_docs)]
@@ -81,6 +88,7 @@ pub mod network;
 pub mod search;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod spec;
 pub mod validation;
 pub mod sim;

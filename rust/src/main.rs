@@ -9,6 +9,9 @@
 //!   network    --config <file.json> | --network <name> [--max-seg n] [--cuts 2,4,..]
 //!              [--pareto [--objectives latency,energy,..] [--max-front n]]
 //!   lint       --config <file.json> [--json]  static diagnostics (LT0xx codes); exit 0/1/2
+//!   serve      [--port n] [--threads n] [--cache-cap n] [--quiet]
+//!              long-running HTTP server over the same JSON documents, with a
+//!              cross-request segment cache (see docs/PROTOCOL.md)
 //!   experiments [--full]                    regenerate everything (EXPERIMENTS.md data)
 //!   speed                                   model-vs-simulator throughput
 //!
@@ -25,7 +28,7 @@ use looptree::casestudies as cs;
 use looptree::coordinator::Coordinator;
 use looptree::mapping::{InterLayerMapping, Parallelism, Partition};
 use looptree::model::Evaluator;
-use looptree::network::{self, NetworkSearchResult, NetworkSearchSpec};
+use looptree::network::{self, NetworkSearchSpec};
 use looptree::search::{self, Algorithm, Objective, SearchSpec};
 use looptree::sim::simulate;
 use looptree::spec::{parse_network, parse_workload, AnalyzeConfig, NetworkConfig, SearchConfig};
@@ -58,6 +61,7 @@ fn run(args: &[String]) -> i32 {
         Some("search") => cmd_search(args),
         Some("network") => cmd_network(args),
         Some("lint") => cmd_lint(args),
+        Some("serve") => cmd_serve(args),
         Some("experiments") => cmd_experiments(args),
         Some("speed") => cmd_speed(args),
         _ => {
@@ -69,6 +73,7 @@ fn run(args: &[String]) -> i32 {
                  looptree search --config cfg.json [--json] | --workload conv_conv:28x64 [--algorithm exhaustive|random|annealing|genetic] [--objective latency|energy|edp|capacity|offchip|feasible-edp] [--seed n]\n  \
                  looptree network --config cfg.json [--json] | --network resnet18|resnet18_chain|mobilenetv2|vgg16|bert[:B,H,T,E] [--max-seg n] [--cuts 2,4,..] [--algorithm ..] [--objective ..] [--seed n] [--glb-kib n] [--pareto [--objectives latency,energy,capacity,offchip] [--max-front n]]\n  \
                  looptree lint --config cfg.json [--json]\n  \
+                 looptree serve [--port 4517] [--threads 0] [--cache-cap 1024] [--quiet]\n  \
                  looptree experiments [--full]\n  \
                  looptree speed"
             );
@@ -201,9 +206,9 @@ fn cmd_analyze(args: &[String]) -> i32 {
     match ev.evaluate(&cfg.mapping) {
         Ok(m) => {
             if flag(args, "--json") {
-                let mut doc = cfg.to_json();
+                // The shared result document, plus the CLI-only --sim extra.
+                let mut doc = cfg.result_doc(&m);
                 if let Json::Obj(o) = &mut doc {
-                    o.insert("metrics".into(), m.to_json());
                     if flag(args, "--sim") {
                         match simulate(&cfg.workload, &cfg.arch, &cfg.mapping) {
                             Ok(s) => {
@@ -450,39 +455,8 @@ fn cmd_search(args: &[String]) -> i32 {
     match search::run(&ev, &cfg.search, &pool) {
         Some(r) => {
             if flag(args, "--json") {
-                let mut doc = cfg.to_json();
-                if let Json::Obj(o) = &mut doc {
-                    let best = Json::Obj(
-                        [
-                            ("mapping".to_string(), r.best.mapping.to_json()),
-                            (
-                                "schedule".to_string(),
-                                Json::Str(r.best.mapping.schedule_string(&cfg.workload)),
-                            ),
-                            ("score".to_string(), Json::Num(r.best.score)),
-                            ("metrics".to_string(), r.best.metrics.to_json()),
-                        ]
-                        .into_iter()
-                        .collect(),
-                    );
-                    let result = Json::Obj(
-                        [
-                            ("best".to_string(), best),
-                            (
-                                "evaluated".to_string(),
-                                Json::Num(r.evaluated.len() as f64),
-                            ),
-                            ("pruned".to_string(), Json::Num(r.pruned as f64)),
-                            (
-                                "symbolic_evals".to_string(),
-                                Json::Num(r.symbolic_evals as f64),
-                            ),
-                        ]
-                        .into_iter()
-                        .collect(),
-                    );
-                    o.insert("result".into(), result);
-                }
+                let doc =
+                    cfg.result_doc(&r.best, r.evaluated.len(), r.pruned, r.symbolic_evals);
                 println!("{}", doc.pretty());
                 return 0;
             }
@@ -569,70 +543,6 @@ fn network_config(args: &[String]) -> Result<NetworkConfig, String> {
     Ok(cfg)
 }
 
-fn network_result_json(cfg: &NetworkConfig, r: &NetworkSearchResult) -> Json {
-    let segments = Json::Arr(
-        r.segments
-            .iter()
-            .map(|s| {
-                Json::Obj(
-                    [
-                        (
-                            "range".to_string(),
-                            Json::Arr(vec![
-                                Json::Num(s.lo as f64),
-                                Json::Num(s.hi as f64),
-                            ]),
-                        ),
-                        (
-                            "nodes".to_string(),
-                            Json::Arr(s.nodes.iter().map(|&i| Json::Num(i as f64)).collect()),
-                        ),
-                        ("span".to_string(), Json::Str(s.span.clone())),
-                        ("mapping".to_string(), s.best.mapping.to_json()),
-                        ("score".to_string(), Json::Num(s.best.score)),
-                        ("metrics".to_string(), s.best.metrics.to_json()),
-                    ]
-                    .into_iter()
-                    .collect(),
-                )
-            })
-            .collect(),
-    );
-    let result = Json::Obj(
-        [
-            (
-                "cuts".to_string(),
-                Json::Arr(r.cuts.iter().map(|&c| Json::Num(c as f64)).collect()),
-            ),
-            ("segments".to_string(), segments),
-            ("total_score".to_string(), Json::Num(r.total_score)),
-            ("total_latency_cycles".to_string(), Json::Num(r.total_latency() as f64)),
-            ("total_energy_pj".to_string(), Json::Num(r.total_energy_pj())),
-            ("total_offchip_elems".to_string(), Json::Num(r.total_offchip() as f64)),
-            ("all_fit".to_string(), Json::Bool(r.all_fit())),
-            (
-                "distinct_searched".to_string(),
-                Json::Num(r.distinct_searched as f64),
-            ),
-            (
-                "candidate_segments".to_string(),
-                Json::Num(r.candidate_segments as f64),
-            ),
-            (
-                "candidates_pruned".to_string(),
-                Json::Num(r.candidates_pruned as f64),
-            ),
-        ]
-        .into_iter()
-        .collect(),
-    );
-    let mut doc = cfg.to_json();
-    if let Json::Obj(o) = &mut doc {
-        o.insert("result".into(), result);
-    }
-    doc
-}
-
 /// `looptree network --pareto`: the multi-objective front over cut sets.
 fn cmd_network_pareto(args: &[String], cfg: &NetworkConfig) -> i32 {
     let pool = Coordinator::new(0);
@@ -649,11 +559,7 @@ fn cmd_network_pareto(args: &[String], cfg: &NetworkConfig) -> i32 {
         }
     };
     if flag(args, "--json") {
-        let mut doc = cfg.to_json();
-        if let Json::Obj(o) = &mut doc {
-            o.insert("result".into(), r.to_json());
-        }
-        println!("{}", doc.pretty());
+        println!("{}", cfg.result_doc_pareto(&r).pretty());
         return 0;
     }
     let names: Vec<&str> = r.objectives.iter().map(|o| o.name()).collect();
@@ -717,7 +623,7 @@ fn cmd_network(args: &[String]) -> i32 {
     match run {
         Ok(r) => {
             if flag(args, "--json") {
-                println!("{}", network_result_json(&cfg, &r).pretty());
+                println!("{}", cfg.result_doc(&r).pretty());
                 return 0;
             }
             let net = &cfg.network;
@@ -797,6 +703,55 @@ fn cmd_lint(args: &[String]) -> i32 {
         ),
     }
     report.exit_code()
+}
+
+/// `looptree serve`: a long-running HTTP/1.1 server over the same JSON
+/// documents the CLI accepts, with a cross-request segment cache (see
+/// `docs/PROTOCOL.md`). Responses embed the exact one-shot `--json`
+/// documents; per-request `[serve]` log lines report the cache counters.
+fn cmd_serve(args: &[String]) -> i32 {
+    let port: u16 = match opt(args, "--port").map(|s| s.parse()).unwrap_or(Ok(4517)) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("--port: {e}");
+            return 2;
+        }
+    };
+    let threads: usize = match opt(args, "--threads").map(|s| s.parse()).unwrap_or(Ok(0)) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("--threads: {e}");
+            return 2;
+        }
+    };
+    let cache_cap: usize =
+        match opt(args, "--cache-cap").map(|s| s.parse()).unwrap_or(Ok(1024)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("--cache-cap: {e}");
+                return 2;
+            }
+        };
+    let opts = looptree::serve::ServeOptions {
+        threads,
+        cache_cap,
+        quiet: flag(args, "--quiet"),
+    };
+    let server = match looptree::serve::Server::bind(&format!("127.0.0.1:{port}"), opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: cannot bind 127.0.0.1:{port}: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "looptree serve listening on http://{} (threads={}, cache-cap={})",
+        server.local_addr(),
+        threads,
+        cache_cap
+    );
+    server.run();
+    0
 }
 
 fn cmd_experiments(args: &[String]) -> i32 {

@@ -51,11 +51,13 @@ mod partition;
 mod presets;
 
 pub use pareto::{
-    search_network_pareto, search_network_pareto_dag, NetworkParetoPoint, NetworkParetoResult,
+    search_network_pareto, search_network_pareto_dag, search_network_pareto_memo,
+    FrontSegmentMemo, NetworkParetoPoint, NetworkParetoResult, SegmentFrontPoint,
 };
 pub use partition::{
-    evaluate_partition, evaluate_segments, search_network, search_network_dag,
-    NetworkSearchResult, NetworkSearchSpec, SegmentChoice,
+    evaluate_partition, evaluate_partition_memo, evaluate_segments, evaluate_segments_memo,
+    search_network, search_network_dag, search_network_memo, NetworkSearchResult,
+    NetworkSearchSpec, ScalarSegmentMemo, SegmentChoice,
 };
 pub use presets::{bert_encoder, mobilenet_v2, resnet18, resnet18_chain, vgg16};
 

@@ -166,8 +166,32 @@ impl NetworkParetoResult {
     }
 }
 
-/// A pruned per-segment front point: vector cost + the scored mapping.
-type SegPoint = ParetoPointK<Scored>;
+/// A pruned per-segment front point: vector cost (one value per requested
+/// objective) + the scored mapping that achieves it. This is the unit the
+/// per-segment memo table holds — and what a cross-request
+/// [`FrontSegmentMemo`] caches.
+pub type SegmentFrontPoint = ParetoPointK<Scored>;
+
+/// Internal shorthand.
+type SegPoint = SegmentFrontPoint;
+
+/// An external memo for per-segment *Pareto fronts*, the front-DP analogue
+/// of [`super::ScalarSegmentMemo`]. Consulted once per distinct signature
+/// in the serial pre-pass before the parallel fan-out, so memo traffic is
+/// deterministic for any worker count.
+///
+/// Contract: `lookup` must only return values previously passed to `store`
+/// under the same signature *and* the same (architecture, search spec,
+/// objectives, front cap) context — the caller owns context keying.
+/// Per-segment front extraction is a deterministic function of that
+/// context, so a conforming memo never changes any result. `Some(None)`
+/// records a segment whose search produced no evaluations.
+pub trait FrontSegmentMemo {
+    /// Cached pruned front for `signature`, or `None` on a miss.
+    fn lookup_front(&self, signature: &str) -> Option<Option<Vec<SegmentFrontPoint>>>;
+    /// Record the freshly computed pruned front for `signature`.
+    fn store_front(&self, signature: &str, value: &Option<Vec<SegmentFrontPoint>>);
+}
 
 /// A DP label: running vector cost + backpointer provenance. `S` is the
 /// state id type (prefix length for the chain DP, cover mask for the graph
@@ -224,6 +248,7 @@ fn search_distinct_fronts(
     spec: &NetworkSearchSpec,
     candidates: &[Candidate],
     pool: &Coordinator,
+    memo: Option<&dyn FrontSegmentMemo>,
 ) -> Result<HashMap<String, Option<Vec<SegPoint>>>, String> {
     let objectives = spec.objectives.clone();
     let search = spec.search.clone();
@@ -234,20 +259,33 @@ fn search_distinct_fronts(
     // sit on a multi-objective front.
     let mut spec = spec.clone();
     spec.search.prune = false;
-    search_distinct_map(net, arch, &spec, candidates, pool, move |r| {
-        let points: Vec<SegPoint> = r
-            .evaluated
-            .into_iter()
-            .map(|s| ParetoPointK {
-                costs: objectives
-                    .iter()
-                    .map(|&o| search.score_objective(o, &s.metrics))
-                    .collect(),
-                payload: s,
-            })
-            .collect();
-        cap_front_k(pareto_front_k(points), cap)
-    })
+    search_distinct_map(
+        net,
+        arch,
+        &spec,
+        candidates,
+        pool,
+        move |r| {
+            let points: Vec<SegPoint> = r
+                .evaluated
+                .into_iter()
+                .map(|s| ParetoPointK {
+                    costs: objectives
+                        .iter()
+                        .map(|&o| search.score_objective(o, &s.metrics))
+                        .collect(),
+                    payload: s,
+                })
+                .collect();
+            cap_front_k(pareto_front_k(points), cap)
+        },
+        |sig| memo.and_then(|m| m.lookup_front(sig)),
+        |sig, v| {
+            if let Some(m) = memo {
+                m.store_front(sig, v);
+            }
+        },
+    )
 }
 
 // ------------------------------------------------------ chain (path) DP --
@@ -514,13 +552,27 @@ pub fn search_network_pareto(
     spec: &NetworkSearchSpec,
     pool: &Coordinator,
 ) -> Result<NetworkParetoResult, String> {
+    search_network_pareto_memo(net, arch, spec, pool, None)
+}
+
+/// [`search_network_pareto`] with an optional cross-request segment-front
+/// memo (see [`FrontSegmentMemo`]). With a conforming memo the emitted
+/// front is bit-identical to the memo-less run — only already-searched
+/// signatures are skipped.
+pub fn search_network_pareto_memo(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    pool: &Coordinator,
+    memo: Option<&dyn FrontSegmentMemo>,
+) -> Result<NetworkParetoResult, String> {
     net.validate()?;
     check_spec(spec)?;
     if net.is_chain() {
         let candidates = chain_candidates(net, spec.max_segment_layers);
-        run_front_dp(net, arch, spec, candidates, pool, chain_dp_fronts)
+        run_front_dp(net, arch, spec, candidates, pool, memo, chain_dp_fronts)
     } else {
-        search_network_pareto_dag_impl(net, arch, spec, pool)
+        search_network_pareto_dag_impl(net, arch, spec, pool, memo)
     }
 }
 
@@ -535,7 +587,7 @@ pub fn search_network_pareto_dag(
 ) -> Result<NetworkParetoResult, String> {
     net.validate()?;
     check_spec(spec)?;
-    search_network_pareto_dag_impl(net, arch, spec, pool)
+    search_network_pareto_dag_impl(net, arch, spec, pool, None)
 }
 
 fn search_network_pareto_dag_impl(
@@ -543,11 +595,12 @@ fn search_network_pareto_dag_impl(
     arch: &Arch,
     spec: &NetworkSearchSpec,
     pool: &Coordinator,
+    memo: Option<&dyn FrontSegmentMemo>,
 ) -> Result<NetworkParetoResult, String> {
     // Cheap structural limit first, as in the scalar path.
     real_positions(net)?;
     let candidates = dag_candidates(net, spec.max_segment_layers)?;
-    run_front_dp(net, arch, spec, candidates, pool, dag_dp_fronts)
+    run_front_dp(net, arch, spec, candidates, pool, memo, dag_dp_fronts)
 }
 
 /// The shared front search-and-DP driver behind [`search_network_pareto`]
@@ -576,6 +629,7 @@ fn run_front_dp(
     spec: &NetworkSearchSpec,
     candidates: Vec<Candidate>,
     pool: &Coordinator,
+    memo: Option<&dyn FrontSegmentMemo>,
     dp: fn(
         &Network,
         &[Candidate],
@@ -595,7 +649,7 @@ fn run_front_dp(
             f.floor_costs(&spec.objectives, &spec.search)
         });
         if !pruned.is_empty() && !survivors.is_empty() {
-            let mut fronts = search_distinct_fronts(net, arch, spec, &survivors, pool)?;
+            let mut fronts = search_distinct_fronts(net, arch, spec, &survivors, pool, memo)?;
             let attempt = dp(net, &survivors, &fronts, arity, 0)
                 .and_then(|sols| assemble_front(net, &survivors, &fronts, sols));
             if let Ok(points) = attempt {
@@ -614,13 +668,13 @@ fn run_front_dp(
             // Lossless-guard fallback: a pruned candidate could still reach
             // the front. Search the pruned shapes too (their signatures are
             // disjoint from the survivors') and rerun over everything.
-            fronts.extend(search_distinct_fronts(net, arch, spec, &pruned, pool)?);
+            fronts.extend(search_distinct_fronts(net, arch, spec, &pruned, pool, memo)?);
             let sols = dp(net, &candidates, &fronts, arity, 0)?;
             let points = assemble_front(net, &candidates, &fronts, sols)?;
             return Ok(finish(spec, &fronts, candidates.len(), 0, points));
         }
     }
-    let fronts = search_distinct_fronts(net, arch, spec, &candidates, pool)?;
+    let fronts = search_distinct_fronts(net, arch, spec, &candidates, pool, memo)?;
     let sols = dp(net, &candidates, &fronts, arity, spec.max_front_per_state)?;
     let points = assemble_front(net, &candidates, &fronts, sols)?;
     Ok(finish(spec, &fronts, candidates.len(), 0, points))

@@ -241,6 +241,27 @@ pub(crate) struct Candidate {
     pub(crate) signature: String,
 }
 
+/// An external memo for per-segment scalar search results, letting callers
+/// (the serve-mode [`SegmentCache`](crate::serve::SegmentCache)) reuse
+/// segment searches *across* top-level requests. The in-request
+/// deduplication over equal signatures is unchanged; the memo is consulted
+/// once per distinct signature, during the serial pre-pass before the
+/// parallel fan-out, so lookup/store ordering is deterministic for any
+/// worker count.
+///
+/// Contract: `lookup` must only return values previously passed to `store`
+/// under the same signature *and* the same (architecture, search-spec)
+/// context — the caller owns context keying. Per-segment searches are
+/// deterministic functions of (signature, arch, spec), so a conforming memo
+/// never changes any result, only whether the search re-runs.
+/// `Some(None)` records a search that found no feasible mapping.
+pub trait ScalarSegmentMemo {
+    /// Cached scalar result for `signature`, or `None` on a miss.
+    fn lookup_scalar(&self, signature: &str) -> Option<Option<Scored>>;
+    /// Record the freshly searched scalar result for `signature`.
+    fn store_scalar(&self, signature: &str, value: &Option<Scored>);
+}
+
 /// Drop schedules naming ranks the segment's sink layer does not have
 /// (segment depth changes the rank-name suffix); an empty remainder falls
 /// back to the auto-derived schedules.
@@ -260,15 +281,30 @@ fn mapspace_for_segment(base: &MapSpaceConfig, fs: &crate::einsum::FusionSet) ->
 
 /// Search every distinct signature among `candidates` once, in parallel,
 /// and return the best `Scored` per signature. Segments whose search finds
-/// nothing (or whose specs fail validation) map to `None`.
+/// nothing (or whose specs fail validation) map to `None`. Signatures the
+/// `memo` already holds are not re-searched; fresh results are stored back.
 fn search_distinct(
     net: &Network,
     arch: &Arch,
     spec: &NetworkSearchSpec,
     candidates: &[Candidate],
     pool: &Coordinator,
+    memo: Option<&dyn ScalarSegmentMemo>,
 ) -> Result<HashMap<String, Option<Scored>>, String> {
-    search_distinct_map(net, arch, spec, candidates, pool, |r| r.best)
+    search_distinct_map(
+        net,
+        arch,
+        spec,
+        candidates,
+        pool,
+        |r| r.best,
+        |sig| memo.and_then(|m| m.lookup_scalar(sig)),
+        |sig, v| {
+            if let Some(m) = memo {
+                m.store_scalar(sig, v);
+            }
+        },
+    )
 }
 
 /// The shared memoized per-segment fan-out: search every distinct signature
@@ -276,6 +312,12 @@ fn search_distinct(
 /// signature — the best `Scored` for the scalar DP, a pruned Pareto front
 /// for the front DP. Segments whose search finds nothing (or whose specs
 /// fail validation) map to `None`.
+///
+/// `lookup`/`store` bridge to an optional cross-request memo: both run in
+/// the serial pre-/post-pass (never inside `pool.run`), so memo traffic is
+/// deterministic — one lookup per distinct signature in candidate order,
+/// then one store per freshly searched signature in the same order.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn search_distinct_map<T: Send>(
     net: &Network,
     arch: &Arch,
@@ -283,12 +325,20 @@ pub(crate) fn search_distinct_map<T: Send>(
     candidates: &[Candidate],
     pool: &Coordinator,
     map: impl Fn(search::SearchResult) -> T + Sync,
+    lookup: impl Fn(&str) -> Option<Option<T>>,
+    store: impl Fn(&str, &Option<T>),
 ) -> Result<HashMap<String, Option<T>>, String> {
     let mut order: Vec<(&str, &[usize])> = Vec::new();
     let mut seen: HashSet<&str> = HashSet::new();
+    let mut out: HashMap<String, Option<T>> = HashMap::new();
     for c in candidates {
         if seen.insert(c.signature.as_str()) {
-            order.push((c.signature.as_str(), c.nodes.as_slice()));
+            match lookup(c.signature.as_str()) {
+                Some(cached) => {
+                    out.insert(c.signature.clone(), cached);
+                }
+                None => order.push((c.signature.as_str(), c.nodes.as_slice())),
+            }
         }
     }
     // One Evaluator session per distinct shape; the inner search is serial
@@ -303,9 +353,10 @@ pub(crate) fn search_distinct_map<T: Send>(
         let inner = Coordinator::new(1);
         Ok(search::run(&ev, &seg_spec, &inner).map(&map))
     });
-    let mut out = HashMap::new();
     for ((sig, _), res) in order.into_iter().zip(results) {
-        out.insert(sig.to_string(), res?);
+        let v = res?;
+        store(sig, &v);
+        out.insert(sig.to_string(), v);
     }
     Ok(out)
 }
@@ -411,6 +462,7 @@ fn run_scalar_dp(
     spec: &NetworkSearchSpec,
     candidates: Vec<Candidate>,
     pool: &Coordinator,
+    memo: Option<&dyn ScalarSegmentMemo>,
     dp: fn(
         &Network,
         &[Candidate],
@@ -427,7 +479,7 @@ fn run_scalar_dp(
         let (survivors, pruned, floors) =
             static_prune(net, arch, &candidates, |f| f.floor_score(&spec.search));
         if !pruned.is_empty() && !survivors.is_empty() {
-            let mut costs = search_distinct(net, arch, spec, &survivors, pool)?;
+            let mut costs = search_distinct(net, arch, spec, &survivors, pool, memo)?;
             let min_floor = floors.iter().fold(f64::INFINITY, |a, &b| a.min(b));
             if let Ok(chosen) = dp(net, &survivors, &costs) {
                 let total: f64 = chosen
@@ -446,12 +498,12 @@ fn run_scalar_dp(
             // Lossless-guard fallback: a pruned candidate could still
             // matter. Search the pruned shapes too (their signatures are
             // disjoint from the survivors') and rerun over everything.
-            costs.extend(search_distinct(net, arch, spec, &pruned, pool)?);
+            costs.extend(search_distinct(net, arch, spec, &pruned, pool, memo)?);
             let chosen = dp(net, &candidates, &costs)?;
             return assemble(net, chosen, &costs, candidates.len(), 0);
         }
     }
-    let costs = search_distinct(net, arch, spec, &candidates, pool)?;
+    let costs = search_distinct(net, arch, spec, &candidates, pool, memo)?;
     let chosen = dp(net, &candidates, &costs)?;
     let n = candidates.len();
     assemble(net, chosen, &costs, n, 0)
@@ -747,15 +799,29 @@ pub fn search_network(
     spec: &NetworkSearchSpec,
     pool: &Coordinator,
 ) -> Result<NetworkSearchResult, String> {
+    search_network_memo(net, arch, spec, pool, None)
+}
+
+/// [`search_network`] with an optional cross-request segment memo (see
+/// [`ScalarSegmentMemo`]). With a conforming memo the result is
+/// bit-identical to the memo-less run — only already-searched signatures
+/// are skipped.
+pub fn search_network_memo(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    pool: &Coordinator,
+    memo: Option<&dyn ScalarSegmentMemo>,
+) -> Result<NetworkSearchResult, String> {
     net.validate()?;
     if spec.max_segment_layers == 0 {
         return Err("max_segment_layers must be >= 1".into());
     }
     if net.is_chain() {
         let candidates = chain_candidates(net, spec.max_segment_layers);
-        run_scalar_dp(net, arch, spec, candidates, pool, chain_dp)
+        run_scalar_dp(net, arch, spec, candidates, pool, memo, chain_dp)
     } else {
-        search_network_dag_impl(net, arch, spec, pool)
+        search_network_dag_impl(net, arch, spec, pool, memo)
     }
 }
 
@@ -772,7 +838,7 @@ pub fn search_network_dag(
     if spec.max_segment_layers == 0 {
         return Err("max_segment_layers must be >= 1".into());
     }
-    search_network_dag_impl(net, arch, spec, pool)
+    search_network_dag_impl(net, arch, spec, pool, None)
 }
 
 fn search_network_dag_impl(
@@ -780,12 +846,13 @@ fn search_network_dag_impl(
     arch: &Arch,
     spec: &NetworkSearchSpec,
     pool: &Coordinator,
+    memo: Option<&dyn ScalarSegmentMemo>,
 ) -> Result<NetworkSearchResult, String> {
     // Cheap structural limit first: reject oversized graphs before paying
     // for hundreds of per-segment mapspace searches the DP cannot use.
     real_positions(net)?;
     let candidates = dag_candidates(net, spec.max_segment_layers)?;
-    run_scalar_dp(net, arch, spec, candidates, pool, dag_dp)
+    run_scalar_dp(net, arch, spec, candidates, pool, memo, dag_dp)
 }
 
 /// Score a *given* partition of `net` into explicit node-set segments: the
@@ -798,6 +865,19 @@ pub fn evaluate_segments(
     spec: &NetworkSearchSpec,
     segments: &[Vec<usize>],
     pool: &Coordinator,
+) -> Result<NetworkSearchResult, String> {
+    evaluate_segments_memo(net, arch, spec, segments, pool, None)
+}
+
+/// [`evaluate_segments`] with an optional cross-request segment memo (see
+/// [`ScalarSegmentMemo`]); bit-identical to the memo-less run.
+pub fn evaluate_segments_memo(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    segments: &[Vec<usize>],
+    pool: &Coordinator,
+    memo: Option<&dyn ScalarSegmentMemo>,
 ) -> Result<NetworkSearchResult, String> {
     net.validate()?;
     let n = net.num_layers();
@@ -837,7 +917,7 @@ pub fn evaluate_segments(
     }
     // A fixed partition is scored as given: no candidate is skipped, so the
     // static pruner does not apply here.
-    let costs = search_distinct(net, arch, spec, &candidates, pool)?;
+    let costs = search_distinct(net, arch, spec, &candidates, pool, memo)?;
     let nseg = candidates.len();
     assemble(net, candidates, &costs, nseg, 0)
 }
@@ -853,6 +933,19 @@ pub fn evaluate_partition(
     spec: &NetworkSearchSpec,
     cuts: &[usize],
     pool: &Coordinator,
+) -> Result<NetworkSearchResult, String> {
+    evaluate_partition_memo(net, arch, spec, cuts, pool, None)
+}
+
+/// [`evaluate_partition`] with an optional cross-request segment memo (see
+/// [`ScalarSegmentMemo`]); bit-identical to the memo-less run.
+pub fn evaluate_partition_memo(
+    net: &Network,
+    arch: &Arch,
+    spec: &NetworkSearchSpec,
+    cuts: &[usize],
+    pool: &Coordinator,
+    memo: Option<&dyn ScalarSegmentMemo>,
 ) -> Result<NetworkSearchResult, String> {
     net.validate()?;
     let n = net.num_layers();
@@ -875,5 +968,5 @@ pub fn evaluate_partition(
         .map(|w| (w[0]..w[1]).filter(|&i| !net.layers[i].op.is_virtual()).collect())
         .filter(|s: &Vec<usize>| !s.is_empty())
         .collect();
-    evaluate_segments(net, arch, spec, &segments, pool)
+    evaluate_segments_memo(net, arch, spec, &segments, pool, memo)
 }

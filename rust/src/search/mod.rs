@@ -253,12 +253,33 @@ fn count_symbolic(evaluated: &[Scored]) -> usize {
 /// candidate structurally invalid). Deterministic given (session, spec):
 /// PRNG-driven algorithms derive all randomness from `spec.seed`.
 pub fn run(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<SearchResult> {
+    run_warm(ev, spec, pool, &[])
+}
+
+/// [`run`] with warm-start seeds for the stochastic algorithms: annealing
+/// evaluates every seed up front and starts from the best one (instead of a
+/// random draw), and genetic places the seeds at the head of generation 0.
+/// Exhaustive and random searches enumerate/sample independently of any
+/// starting point, so they ignore `warm`.
+///
+/// Seeds that fail to evaluate are dropped silently. An empty `warm` slice
+/// is bit-identical to [`run`] — no PRNG state is consumed by seeding — so
+/// the cold path is unchanged by construction. Because annealing's starting
+/// point is the best evaluated seed and the seeds join `evaluated`, a
+/// warm-started run whose seeds include a cold run's best mapping can never
+/// report a worse best score than that cold run.
+pub fn run_warm(
+    ev: &Evaluator,
+    spec: &SearchSpec,
+    pool: &Coordinator,
+    warm: &[InterLayerMapping],
+) -> Option<SearchResult> {
     let memo_before = ev.refusal_memo_hits();
     let mut result = match spec.algorithm {
         Algorithm::Exhaustive => exhaustive(ev, spec, pool),
         Algorithm::Random => random(ev, spec, pool),
-        Algorithm::Annealing => annealing(ev, spec),
-        Algorithm::Genetic => genetic(ev, spec, pool),
+        Algorithm::Annealing => annealing(ev, spec, warm),
+        Algorithm::Genetic => genetic(ev, spec, pool, warm),
     };
     if let Some(r) = result.as_mut() {
         r.refusal_memo_hits = ev.refusal_memo_hits() - memo_before;
@@ -437,14 +458,40 @@ fn initial_temperature(spec: &SearchSpec, m: &Metrics) -> f64 {
 
 /// Simulated annealing (SET [29] uses the same strategy for inter-layer
 /// scheduling). Serial by nature; `spec.iters` model evaluations.
-fn annealing(ev: &Evaluator, spec: &SearchSpec) -> Option<SearchResult> {
+/// Warm seeds (see [`run_warm`]) are evaluated up front without touching
+/// the PRNG, and the best seed replaces the random starting draw.
+fn annealing(
+    ev: &Evaluator,
+    spec: &SearchSpec,
+    warm: &[InterLayerMapping],
+) -> Option<SearchResult> {
     let fs = ev.fusion_set();
     let mut rng = Prng::new(spec.seed);
-    let (mut cur, mut cur_metrics) =
-        initial_candidate(fs, &mut rng, INITIAL_CANDIDATE_ATTEMPTS, |m| ev.evaluate(m))?;
+    let mut evaluated: Vec<Scored> = warm
+        .iter()
+        .filter_map(|m| {
+            ev.evaluate(m).ok().map(|metrics| {
+                let score = spec.score(&metrics);
+                Scored { mapping: m.clone(), metrics, score }
+            })
+        })
+        .collect();
+    let seed_best = evaluated
+        .iter()
+        .min_by(|a, b| a.score.total_cmp(&b.score))
+        .cloned();
+    let (mut cur, mut cur_metrics) = match seed_best {
+        Some(s) => (s.mapping, s.metrics),
+        None => {
+            let (c, m) =
+                initial_candidate(fs, &mut rng, INITIAL_CANDIDATE_ATTEMPTS, |m| ev.evaluate(m))?;
+            let score = spec.score(&m);
+            evaluated.push(Scored { mapping: c.clone(), metrics: m.clone(), score });
+            (c, m)
+        }
+    };
     let mut cur_score = spec.score(&cur_metrics);
     let mut best = Scored { mapping: cur.clone(), metrics: cur_metrics.clone(), score: cur_score };
-    let mut evaluated = vec![best.clone()];
 
     let t0 = initial_temperature(spec, &cur_metrics);
     for i in 0..spec.iters {
@@ -479,12 +526,21 @@ fn annealing(ev: &Evaluator, spec: &SearchSpec) -> Option<SearchResult> {
 
 /// Genetic search: tournament selection + mutation (no crossover across
 /// schedules — tile sizes and retention levels recombine).
-fn genetic(ev: &Evaluator, spec: &SearchSpec, pool: &Coordinator) -> Option<SearchResult> {
+/// Warm seeds (see [`run_warm`]) fill the head of generation 0; the
+/// remainder is drawn randomly, so an empty seed set reproduces the cold
+/// run's draws exactly.
+fn genetic(
+    ev: &Evaluator,
+    spec: &SearchSpec,
+    pool: &Coordinator,
+    warm: &[InterLayerMapping],
+) -> Option<SearchResult> {
     let fs = ev.fusion_set();
     let mut rng = Prng::new(spec.seed);
-    let mut pop: Vec<InterLayerMapping> = (0..spec.population)
-        .map(|_| random_mapping(fs, &mut rng))
-        .collect();
+    let mut pop: Vec<InterLayerMapping> = warm.iter().take(spec.population).cloned().collect();
+    while pop.len() < spec.population {
+        pop.push(random_mapping(fs, &mut rng));
+    }
     let mut all: Vec<Scored> = Vec::new();
 
     for _gen in 0..spec.generations {

@@ -1,0 +1,293 @@
+//! The cross-request [`SegmentCache`] behind `looptree serve`.
+//!
+//! Entries are keyed by (canonical segment signature, architecture hash,
+//! search-spec hash). The signature already canonicalizes segment shape —
+//! repeated ResNet blocks share one signature — so repeated blocks *across
+//! requests* are searched once, the DNNFuser observation at serve scale.
+//! Three entry kinds share the table: scalar per-segment best mappings (the
+//! scalar network DP's memo unit), dominance-pruned per-segment Pareto
+//! fronts (the front DP's), and whole-search summaries (`search` requests).
+//! The spec-hash component keeps the kinds and any differing search
+//! configurations in disjoint key spaces.
+//!
+//! Determinism: a conforming entry holds exactly what a fresh search of the
+//! same (signature, arch, spec) would compute — per-segment searches are
+//! deterministic — so cache hits change latency and the `cache_hits`
+//! counter, never a result document. Eviction is FIFO by first insertion,
+//! bounded by the `--cache-cap` entry count (`0` = unbounded).
+//!
+//! Alongside the result cache sits a small *warm pool*: best mappings seen
+//! per (signature, arch), across all spec hashes, feeding
+//! [`crate::search::run_warm`] for `warm_start` requests. Warm seeds are
+//! advisory (they join the evaluated set of a stochastic search), so the
+//! pool deliberately ignores the spec hash — a mapping found by exhaustive
+//! search is a fine starting point for annealing under another objective.
+
+use crate::mapping::InterLayerMapping;
+use crate::network::{FrontSegmentMemo, ScalarSegmentMemo, SegmentFrontPoint};
+use crate::search::Scored;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Hash a canonical string (a serialized arch or spec) to a cache-key
+/// component. [`DefaultHasher`] with its fixed default keys is
+/// deterministic across runs and platforms, so cache keys — unlike
+/// `HashMap` iteration order — are stable.
+pub fn hash64(s: &str) -> u64 {
+    let mut h = DefaultHasher::new();
+    s.hash(&mut h);
+    h.finish()
+}
+
+/// A cached whole-search summary: the pieces of a
+/// [`SearchResult`](crate::search::SearchResult) that enter the serialized
+/// result document (`SearchConfig::result_doc`), without the full evaluated
+/// list. Sufficient to rebuild the response byte-identically.
+#[derive(Debug, Clone)]
+pub struct SearchSummary {
+    /// The minimum-score evaluated mapping.
+    pub best: Scored,
+    /// `evaluated.len()` of the original run.
+    pub evaluated: usize,
+    /// Candidates skipped by provable capacity pruning.
+    pub pruned: usize,
+    /// Evaluations that ran entirely on the symbolic walk.
+    pub symbolic_evals: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Key {
+    signature: String,
+    arch: u64,
+    spec: u64,
+}
+
+#[derive(Clone)]
+enum Entry {
+    Scalar(Option<Scored>),
+    Front(Option<Vec<SegmentFrontPoint>>),
+    Search(SearchSummary),
+}
+
+/// Warm-pool bound per (signature, arch) key: enough seeds to be useful,
+/// small enough that warm evaluation stays a negligible prefix of a search.
+const WARM_POOL_CAP: usize = 8;
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    order: VecDeque<Key>,
+    warm: HashMap<(String, u64), Vec<InterLayerMapping>>,
+    warm_order: VecDeque<(String, u64)>,
+}
+
+/// The shared cross-request cache. All methods take `&self`; interior
+/// mutability is one mutex around the tables (entries are small relative to
+/// the searches they save, so contention is irrelevant) plus lifetime
+/// hit/miss totals for the `/health` endpoint.
+pub struct SegmentCache {
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl SegmentCache {
+    /// An empty cache holding at most `cap` result entries (`0` =
+    /// unbounded). The warm pool is bounded by the same count of keys.
+    pub fn new(cap: usize) -> SegmentCache {
+        SegmentCache {
+            cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                warm: HashMap::new(),
+                warm_order: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Current result-entry count.
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    /// Whether the cache holds no result entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime `(hits, misses)` across all requests.
+    pub fn totals(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn get(&self, key: &Key) -> Option<Entry> {
+        let hit = self.lock().map.get(key).cloned();
+        match &hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    fn put(&self, key: Key, entry: Entry) {
+        let mut inner = self.lock();
+        if inner.map.insert(key.clone(), entry).is_none() {
+            inner.order.push_back(key);
+            if self.cap > 0 {
+                while inner.map.len() > self.cap {
+                    let Some(oldest) = inner.order.pop_front() else { break };
+                    inner.map.remove(&oldest);
+                }
+            }
+        }
+    }
+
+    /// A per-request view binding this cache to one (arch hash, spec hash)
+    /// context, implementing the network memo traits with request-local
+    /// hit/miss counters.
+    pub fn view(&self, arch: u64, spec: u64) -> CacheView<'_> {
+        CacheView {
+            cache: self,
+            arch,
+            spec,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Cached whole-search summary, if present. Counts toward the lifetime
+    /// totals but not any view counters (search requests report their own).
+    pub fn lookup_search(&self, signature: &str, arch: u64, spec: u64) -> Option<SearchSummary> {
+        let key = Key { signature: signature.to_string(), arch, spec };
+        match self.get(&key) {
+            Some(Entry::Search(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Record a completed search's summary.
+    pub fn store_search(&self, signature: &str, arch: u64, spec: u64, summary: &SearchSummary) {
+        let key = Key { signature: signature.to_string(), arch, spec };
+        self.put(key, Entry::Search(summary.clone()));
+    }
+
+    /// The warm-start seeds recorded for (signature, arch), best-known
+    /// order (most recently recorded last).
+    pub fn warm_mappings(&self, signature: &str, arch: u64) -> Vec<InterLayerMapping> {
+        self.lock()
+            .warm
+            .get(&(signature.to_string(), arch))
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Add `mapping` to the warm pool for (signature, arch). Duplicates are
+    /// dropped; the per-key pool and the key count are both bounded (FIFO).
+    pub fn remember_warm(&self, signature: &str, arch: u64, mapping: &InterLayerMapping) {
+        let key = (signature.to_string(), arch);
+        let mut inner = self.lock();
+        if !inner.warm.contains_key(&key) {
+            inner.warm_order.push_back(key.clone());
+            if self.cap > 0 {
+                while inner.warm.len() >= self.cap {
+                    let Some(oldest) = inner.warm_order.pop_front() else { break };
+                    inner.warm.remove(&oldest);
+                }
+            }
+        }
+        let pool = inner.warm.entry(key).or_default();
+        if pool.contains(mapping) {
+            return;
+        }
+        if pool.len() >= WARM_POOL_CAP {
+            pool.remove(0);
+        }
+        pool.push(mapping.clone());
+    }
+}
+
+/// One request's binding of the [`SegmentCache`] to a fixed (arch, spec)
+/// context, with deterministic request-local counters. Implements both
+/// network memo traits; the network search code consults it only in serial
+/// pre-/post-passes, so the counters are reproducible for any worker count.
+pub struct CacheView<'a> {
+    cache: &'a SegmentCache,
+    arch: u64,
+    spec: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CacheView<'_> {
+    /// Distinct signatures this request reused from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct signatures this request searched and stored.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn key(&self, signature: &str) -> Key {
+        Key { signature: signature.to_string(), arch: self.arch, spec: self.spec }
+    }
+}
+
+impl ScalarSegmentMemo for CacheView<'_> {
+    fn lookup_scalar(&self, signature: &str) -> Option<Option<Scored>> {
+        match self.cache.get(&self.key(signature)) {
+            Some(Entry::Scalar(v)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn store_scalar(&self, signature: &str, value: &Option<Scored>) {
+        self.cache.put(self.key(signature), Entry::Scalar(value.clone()));
+        if let Some(s) = value {
+            self.cache.remember_warm(signature, self.arch, &s.mapping);
+        }
+    }
+}
+
+impl FrontSegmentMemo for CacheView<'_> {
+    fn lookup_front(&self, signature: &str) -> Option<Option<Vec<SegmentFrontPoint>>> {
+        match self.cache.get(&self.key(signature)) {
+            Some(Entry::Front(v)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn store_front(&self, signature: &str, value: &Option<Vec<SegmentFrontPoint>>) {
+        self.cache.put(self.key(signature), Entry::Front(value.clone()));
+        // Front points seed the warm pool too: each is a distinct
+        // best-known trade-off mapping for this segment shape.
+        if let Some(front) = value {
+            for p in front.iter().take(WARM_POOL_CAP) {
+                self.cache.remember_warm(signature, self.arch, &p.payload.mapping);
+            }
+        }
+    }
+}

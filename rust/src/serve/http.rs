@@ -1,0 +1,184 @@
+//! Minimal std-only HTTP/1.1 plumbing for `looptree serve`.
+//!
+//! Exactly the subset the protocol needs — `POST` with `Content-Length`
+//! bodies, a `GET /health` probe, `Expect: 100-continue`, and
+//! `Connection: close` responses — over [`std::net::TcpStream`]. No
+//! keep-alive, no chunked transfer, no TLS; see `docs/PROTOCOL.md` for the
+//! wire contract clients rely on.
+
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Header-section cap: a request line plus a handful of headers.
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+/// Body cap — generous for config documents, small enough that a stray
+/// client cannot buffer the server into the ground.
+const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// A parsed inbound request: method, path, raw body bytes.
+pub struct Request {
+    /// HTTP method, uppercase as sent (`GET`, `POST`).
+    pub method: String,
+    /// Request target as sent (`/`, `/health`).
+    pub path: String,
+    /// Raw body (exactly `Content-Length` bytes; empty without one).
+    pub body: Vec<u8>,
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one request from `stream`. `Ok(None)` means the peer connected and
+/// closed without sending anything (a TCP health probe); errors describe
+/// malformed or oversized requests and map to a 400 response.
+pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>, String> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err("request header section too large".into());
+        }
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err("connection closed mid-header".into());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let header =
+        std::str::from_utf8(&buf[..header_end]).map_err(|_| "header section is not UTF-8")?;
+    let mut lines = header.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(format!("malformed request line: {request_line:?}"));
+    }
+    let mut content_length = 0usize;
+    let mut expect_continue = false;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| format!("bad content-length: {value:?}"))?;
+            }
+            "expect" => expect_continue = value.eq_ignore_ascii_case("100-continue"),
+            _ => {}
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err("request body too large".into());
+    }
+    if expect_continue {
+        stream
+            .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+            .map_err(|e| format!("write: {e}"))?;
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-body".into());
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Some(Request { method, path, body }))
+}
+
+/// Write a full `Connection: close` JSON response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &[u8],
+) -> Result<(), String> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body))
+        .map_err(|e| format!("write: {e}"))
+}
+
+/// Blocking JSON-over-HTTP client: POST `doc` to `http://{addr}{path}` and
+/// return `(status, parsed response body)`. This is the in-process client
+/// the integration tests and the serve bench harness drive; it relies on
+/// the server's `Connection: close` framing (read to EOF), which also makes
+/// it a minimal reference client for `docs/PROTOCOL.md`.
+pub fn post_json(addr: &std::net::SocketAddr, path: &str, doc: &Json) -> Result<(u16, Json), String> {
+    let body = doc.pretty();
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body.as_bytes()))
+        .map_err(|e| format!("write {addr}: {e}"))?;
+    let mut resp = Vec::new();
+    stream
+        .read_to_end(&mut resp)
+        .map_err(|e| format!("read {addr}: {e}"))?;
+    let pos = find_subslice(&resp, b"\r\n\r\n")
+        .ok_or_else(|| "response missing header terminator".to_string())?;
+    let header = std::str::from_utf8(&resp[..pos]).map_err(|_| "response header is not UTF-8")?;
+    let status: u16 = header
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("malformed status line: {header:?}"))?;
+    let text = std::str::from_utf8(&resp[pos + 4..]).map_err(|_| "response body is not UTF-8")?;
+    let json = Json::parse(text).map_err(|e| format!("response body: {e}"))?;
+    Ok((status, json))
+}
+
+/// Raw-text POST: like [`post_json`] but returns the body bytes verbatim.
+/// The byte-identity tests use this to compare server output against CLI
+/// output without a parse→print round trip in the way.
+pub fn post_json_raw(
+    addr: &std::net::SocketAddr,
+    path: &str,
+    doc: &Json,
+) -> Result<(u16, String), String> {
+    let body = doc.pretty();
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body.as_bytes()))
+        .map_err(|e| format!("write {addr}: {e}"))?;
+    let mut resp = Vec::new();
+    stream
+        .read_to_end(&mut resp)
+        .map_err(|e| format!("read {addr}: {e}"))?;
+    let pos = find_subslice(&resp, b"\r\n\r\n")
+        .ok_or_else(|| "response missing header terminator".to_string())?;
+    let header = std::str::from_utf8(&resp[..pos]).map_err(|_| "response header is not UTF-8")?;
+    let status: u16 = header
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("malformed status line: {header:?}"))?;
+    let text = std::str::from_utf8(&resp[pos + 4..])
+        .map_err(|_| "response body is not UTF-8")?
+        .to_string();
+    Ok((status, text))
+}

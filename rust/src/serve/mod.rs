@@ -1,0 +1,460 @@
+//! `looptree serve` — a persistent DSE server with a cross-request
+//! segment cache.
+//!
+//! Interactive design-space exploration asks many *related* questions:
+//! sweep an architecture parameter, re-partition the same backbone, re-run
+//! a search with one knob changed. Run as one-shot CLI invocations, every
+//! question re-searches every segment from scratch. This module keeps a
+//! process alive between questions and memoizes per-segment search results
+//! in a [`SegmentCache`] keyed by (canonical segment signature, arch hash,
+//! search-spec hash), so the repeated structure *within* networks that the
+//! network DP already exploits is also exploited *across* requests.
+//!
+//! The wire protocol (see `docs/PROTOCOL.md`) is deliberately thin:
+//! HTTP/1.1 `POST /` with a JSON envelope `{"kind", "config", "id"?,
+//! "warm_start"?}` where `config` is exactly the `--config` document the
+//! CLI accepts, and the response's `result` field is byte-for-byte the
+//! document the one-shot CLI prints with `--json`. Cache accounting
+//! (`cache_hits` / `cache_misses` / `warm_starts`) rides in a separate
+//! `serve` envelope section, so caching is observable without perturbing
+//! the result documents. `GET /health` reports liveness and lifetime cache
+//! totals.
+//!
+//! Determinism: per-segment searches are deterministic, cache traffic
+//! happens in the network DP's serial pre-/post-passes, and concurrent
+//! requests fan out over a shared [`Coordinator`] whose merge is
+//! index-ordered — so response bytes are independent of `--threads` and of
+//! request concurrency, and the counters are pinned by tests and CI. The
+//! one deliberate exception is `warm_start: true`, which seeds stochastic
+//! searches from previously cached mappings and is therefore allowed to
+//! (only) improve on the cold result.
+
+pub mod cache;
+mod http;
+
+pub use cache::{hash64, CacheView, SearchSummary, SegmentCache};
+pub use http::{post_json, post_json_raw};
+
+use crate::analysis::lint_document;
+use crate::coordinator::Coordinator;
+use crate::model::Evaluator;
+use crate::network;
+use crate::search::{self, Algorithm};
+use crate::spec::{
+    serve_error, serve_ok, AnalyzeConfig, NetworkConfig, RequestKind, SearchConfig, ServeRequest,
+    ServeStats,
+};
+use crate::util::bench::LatencyStats;
+use crate::util::json::Json;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Server configuration (the `looptree serve` CLI flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads of the shared [`Coordinator`] (`0` = all cores).
+    pub threads: usize,
+    /// [`SegmentCache`] entry cap (`0` = unbounded).
+    pub cache_cap: usize,
+    /// Suppress the per-request log line.
+    pub quiet: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { threads: 0, cache_cap: 1024, quiet: true }
+    }
+}
+
+/// Shared server state: the cross-request cache and the worker pool. One
+/// instance serves all connections; requests needing parallelism fan out
+/// over the shared pool (deterministic index-ordered merge), so concurrent
+/// requests time-share workers instead of oversubscribing cores.
+pub struct ServeState {
+    cache: SegmentCache,
+    pool: Coordinator,
+    quiet: bool,
+}
+
+impl ServeState {
+    /// Fresh state per `opts` (cold cache).
+    pub fn new(opts: &ServeOptions) -> ServeState {
+        ServeState {
+            cache: SegmentCache::new(opts.cache_cap),
+            pool: Coordinator::new(opts.threads),
+            quiet: opts.quiet,
+        }
+    }
+
+    /// The cross-request cache (tests read its totals).
+    pub fn cache(&self) -> &SegmentCache {
+        &self.cache
+    }
+}
+
+/// Process one request document end to end: parse the envelope, dispatch,
+/// and wrap the outcome. Never panics on malformed input — every failure
+/// becomes an error envelope carrying the request `id` when one was given.
+/// This is the transport-independent core; the HTTP layer and in-process
+/// tests both call it.
+pub fn process_request(state: &ServeState, doc: &Json) -> Json {
+    let req = match ServeRequest::from_json(doc) {
+        Ok(r) => r,
+        Err(e) => return serve_error(doc.get("id").cloned(), &e),
+    };
+    let id = req.id.clone();
+    let kind = req.kind;
+    match handle(state, &req) {
+        Ok((result, stats)) => serve_ok(id, kind, result, &stats),
+        Err(e) => serve_error(id, &e),
+    }
+}
+
+/// Dispatch a parsed request to the matching subcommand path. Each arm
+/// mirrors the one-shot CLI exactly — same config parser, same search
+/// entry point, same `result_doc` builder — so the `result` section is
+/// byte-identical to `looptree <kind> --json`.
+fn handle(state: &ServeState, req: &ServeRequest) -> Result<(Json, ServeStats), String> {
+    match req.kind {
+        RequestKind::Analyze => {
+            let cfg = AnalyzeConfig::from_json(&req.config)?;
+            let ev = Evaluator::new(&cfg.workload, &cfg.arch)
+                .map_err(|e| format!("invalid spec: {e}"))?;
+            let m = ev.evaluate(&cfg.mapping).map_err(|e| format!("evaluation failed: {e}"))?;
+            Ok((cfg.result_doc(&m), ServeStats::default()))
+        }
+        RequestKind::Search => handle_search(state, req),
+        RequestKind::Network => handle_network(state, req),
+        RequestKind::Lint => Ok((lint_document(&req.config).to_json(), ServeStats::default())),
+    }
+}
+
+/// `search` requests cache whole-search summaries (the result document is
+/// reconstructible from best + counters). `warm_start: true` on a
+/// stochastic algorithm bypasses the summary cache and seeds the search
+/// from the warm pool instead.
+fn handle_search(state: &ServeState, req: &ServeRequest) -> Result<(Json, ServeStats), String> {
+    let cfg = SearchConfig::from_json(&req.config)?;
+    let arch_hash = hash64(&cfg.arch.to_json().to_string());
+    let signature = format!("search:{:016x}", hash64(&cfg.workload.to_json().to_string()));
+    let spec_hash = hash64(&format!("search:{}", cfg.search.to_json()));
+    let stochastic = matches!(cfg.search.algorithm, Algorithm::Annealing | Algorithm::Genetic);
+    if req.warm_start && stochastic {
+        let warm = state.cache.warm_mappings(&signature, arch_hash);
+        let ev = Evaluator::new(&cfg.workload, &cfg.arch)
+            .map_err(|e| format!("invalid spec: {e}"))?;
+        let r = search::run_warm(&ev, &cfg.search, &state.pool, &warm)
+            .ok_or_else(|| "search found no feasible mapping".to_string())?;
+        state.cache.remember_warm(&signature, arch_hash, &r.best.mapping);
+        let stats =
+            ServeStats { warm_starts: u64::from(!warm.is_empty()), ..ServeStats::default() };
+        return Ok((cfg.result_doc(&r.best, r.evaluated.len(), r.pruned, r.symbolic_evals), stats));
+    }
+    if let Some(s) = state.cache.lookup_search(&signature, arch_hash, spec_hash) {
+        let stats = ServeStats { cache_hits: 1, ..ServeStats::default() };
+        return Ok((cfg.result_doc(&s.best, s.evaluated, s.pruned, s.symbolic_evals), stats));
+    }
+    let ev = Evaluator::new(&cfg.workload, &cfg.arch).map_err(|e| format!("invalid spec: {e}"))?;
+    let r = search::run(&ev, &cfg.search, &state.pool)
+        .ok_or_else(|| "search found no feasible mapping".to_string())?;
+    state.cache.store_search(
+        &signature,
+        arch_hash,
+        spec_hash,
+        &SearchSummary {
+            best: r.best.clone(),
+            evaluated: r.evaluated.len(),
+            pruned: r.pruned,
+            symbolic_evals: r.symbolic_evals,
+        },
+    );
+    state.cache.remember_warm(&signature, arch_hash, &r.best.mapping);
+    let stats = ServeStats { cache_misses: 1, ..ServeStats::default() };
+    Ok((cfg.result_doc(&r.best, r.evaluated.len(), r.pruned, r.symbolic_evals), stats))
+}
+
+/// `network` requests run through the existing DP entry points with a
+/// [`CacheView`] plugged into their segment-memo hooks, so distinct
+/// segment signatures are fetched or stored one by one — the per-request
+/// hit/miss counters count *segments*, the cache's true unit of reuse.
+fn handle_network(state: &ServeState, req: &ServeRequest) -> Result<(Json, ServeStats), String> {
+    let cfg = NetworkConfig::from_json(&req.config)?;
+    let arch_hash = hash64(&cfg.arch.to_json().to_string());
+    if cfg.pareto {
+        let spec = &cfg.segment_search;
+        let names: Vec<&str> = spec.objectives.iter().map(|o| o.name()).collect();
+        let spec_hash = hash64(&format!(
+            "front:{}|objectives:{}|cap:{}",
+            spec.search.to_json(),
+            names.join(","),
+            spec.max_front_per_state
+        ));
+        let view = state.cache.view(arch_hash, spec_hash);
+        let r = network::search_network_pareto_memo(
+            &cfg.network,
+            &cfg.arch,
+            spec,
+            &state.pool,
+            Some(&view),
+        )?;
+        let stats = ServeStats {
+            cache_hits: view.hits(),
+            cache_misses: view.misses(),
+            warm_starts: 0,
+        };
+        return Ok((cfg.result_doc_pareto(&r), stats));
+    }
+    let spec_hash = hash64(&format!("scalar:{}", cfg.segment_search.search.to_json()));
+    let view = state.cache.view(arch_hash, spec_hash);
+    let r = match &cfg.cuts {
+        Some(cuts) => network::evaluate_partition_memo(
+            &cfg.network,
+            &cfg.arch,
+            &cfg.segment_search,
+            cuts,
+            &state.pool,
+            Some(&view),
+        ),
+        None => network::search_network_memo(
+            &cfg.network,
+            &cfg.arch,
+            &cfg.segment_search,
+            &state.pool,
+            Some(&view),
+        ),
+    }?;
+    let stats =
+        ServeStats { cache_hits: view.hits(), cache_misses: view.misses(), warm_starts: 0 };
+    Ok((cfg.result_doc(&r), stats))
+}
+
+/// One row of `BENCH_serve.json`, built here so the serve bench binary and
+/// [`crate::util::bench::check_serve_bench_schema`] cannot drift apart.
+pub fn bench_row(
+    scenario: &str,
+    clients: usize,
+    requests: usize,
+    lat: &LatencyStats,
+    elapsed: Duration,
+    stats: &ServeStats,
+    all_ok: bool,
+) -> Json {
+    let secs = elapsed.as_secs_f64();
+    let throughput = if secs > 0.0 { requests as f64 / secs } else { 0.0 };
+    Json::Obj(
+        [
+            ("workload".to_string(), Json::Str(scenario.to_string())),
+            ("clients".to_string(), Json::Num(clients as f64)),
+            ("requests".to_string(), Json::Num(requests as f64)),
+            ("mean_ns".to_string(), Json::Num(lat.mean.as_nanos() as f64)),
+            ("p50_ns".to_string(), Json::Num(lat.p50.as_nanos() as f64)),
+            ("p90_ns".to_string(), Json::Num(lat.p90.as_nanos() as f64)),
+            ("p99_ns".to_string(), Json::Num(lat.p99.as_nanos() as f64)),
+            ("throughput_rps".to_string(), Json::Num(throughput)),
+            ("cache_hits".to_string(), Json::Num(stats.cache_hits as f64)),
+            ("cache_misses".to_string(), Json::Num(stats.cache_misses as f64)),
+            ("warm_starts".to_string(), Json::Num(stats.warm_starts as f64)),
+            ("all_ok".to_string(), Json::Bool(all_ok)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+/// Extract the `serve` counter section of a response envelope (zeros when
+/// absent) — the accumulation helper for clients tallying many responses.
+pub fn response_stats(resp: &Json) -> ServeStats {
+    let g = |k: &str| {
+        resp.get("serve")
+            .and_then(|s| s.get(k))
+            .and_then(Json::as_i64)
+            .unwrap_or(0) as u64
+    };
+    ServeStats {
+        cache_hits: g("cache_hits"),
+        cache_misses: g("cache_misses"),
+        warm_starts: g("warm_starts"),
+    }
+}
+
+/// The bound server. [`Server::run`] serves forever on the calling thread
+/// (the CLI path); [`Server::spawn`] serves on a background thread and
+/// returns a stop handle (the test/bench path).
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServeState>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:4517`; port `0` picks a free port).
+    pub fn bind(addr: &str, opts: ServeOptions) -> std::io::Result<Server> {
+        Ok(Server {
+            listener: TcpListener::bind(addr)?,
+            state: Arc::new(ServeState::new(&opts)),
+        })
+    }
+
+    /// The bound socket address (reports the picked port after binding 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has a local address")
+    }
+
+    /// Serve forever: accept loop on the calling thread, one short-lived
+    /// thread per connection (the protocol is `Connection: close`, so
+    /// connections are exactly one request long).
+    pub fn run(self) {
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let state = Arc::clone(&self.state);
+                    std::thread::spawn(move || handle_connection(&state, s));
+                }
+                Err(e) => {
+                    if !self.state.quiet {
+                        eprintln!("[serve] accept failed: {e}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serve on a background thread; the returned handle stops the server
+    /// when dropped (or explicitly via [`ServerHandle::stop`]).
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.local_addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let state = Arc::clone(&self.state);
+        let accept_state = Arc::clone(&self.state);
+        let flag = Arc::clone(&stop);
+        let listener = self.listener;
+        let thread = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let state = Arc::clone(&accept_state);
+                        std::thread::spawn(move || handle_connection(&state, s));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        ServerHandle { addr, state, stop, thread: Some(thread) }
+    }
+}
+
+/// Handle to a [`Server::spawn`]ed background server.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServeState>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The server's socket address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared server state (cache totals etc.).
+    pub fn state(&self) -> &ServeState {
+        &self.state
+    }
+
+    /// POST a request envelope to the server and parse the response.
+    pub fn post(&self, doc: &Json) -> Result<(u16, Json), String> {
+        http::post_json(&self.addr, "/", doc)
+    }
+
+    /// POST a request envelope and return the raw response body text.
+    pub fn post_raw(&self, doc: &Json) -> Result<(u16, String), String> {
+        http::post_json_raw(&self.addr, "/", doc)
+    }
+
+    /// Stop the accept loop and join the server thread. In-flight
+    /// connection threads finish on their own.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(t) = self.thread.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Unblock the accept loop with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(state: &ServeState, mut stream: TcpStream) {
+    let req = match http::read_request(&mut stream) {
+        Ok(Some(r)) => r,
+        Ok(None) => return,
+        Err(e) => {
+            let body = serve_error(None, &e).pretty();
+            let _ = http::write_response(&mut stream, 400, "Bad Request", body.as_bytes());
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let (hits, misses) = state.cache.totals();
+            let body = Json::Obj(
+                [
+                    ("ok".to_string(), Json::Bool(true)),
+                    ("service".to_string(), Json::Str("looptree".to_string())),
+                    ("cache_entries".to_string(), Json::Num(state.cache.len() as f64)),
+                    ("cache_hits_total".to_string(), Json::Num(hits as f64)),
+                    ("cache_misses_total".to_string(), Json::Num(misses as f64)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+            .pretty();
+            let _ = http::write_response(&mut stream, 200, "OK", body.as_bytes());
+        }
+        ("POST", _) => {
+            let doc = match std::str::from_utf8(&req.body)
+                .map_err(|_| "request body is not UTF-8".to_string())
+                .and_then(|t| Json::parse(t).map_err(|e| format!("request body: {e}")))
+            {
+                Ok(d) => d,
+                Err(e) => {
+                    let body = serve_error(None, &e).pretty();
+                    let _ =
+                        http::write_response(&mut stream, 400, "Bad Request", body.as_bytes());
+                    return;
+                }
+            };
+            let resp = process_request(state, &doc);
+            let ok = resp.get("ok").and_then(Json::as_bool).unwrap_or(false);
+            if !state.quiet {
+                let kind = resp.get("kind").and_then(Json::as_str).unwrap_or("?");
+                let s = response_stats(&resp);
+                println!(
+                    "[serve] kind={kind} ok={ok} cache_hits={} cache_misses={} warm_starts={}",
+                    s.cache_hits, s.cache_misses, s.warm_starts
+                );
+            }
+            let (status, reason) = if ok { (200, "OK") } else { (400, "Bad Request") };
+            let _ = http::write_response(&mut stream, status, reason, resp.pretty().as_bytes());
+        }
+        _ => {
+            let body = serve_error(None, "unsupported method or path (POST / or GET /health)")
+                .pretty();
+            let _ = http::write_response(&mut stream, 404, "Not Found", body.as_bytes());
+        }
+    }
+}

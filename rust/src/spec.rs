@@ -20,10 +20,11 @@ use crate::mapping::{InterLayerMapping, Parallelism, Partition};
 use crate::mapspace::MapSpaceConfig;
 use crate::model::{EnergyBreakdown, Metrics, PathCounts};
 use crate::network::{
-    self, LayerOp, LayerSpec, Network, NetworkParetoResult, NetworkSearchSpec,
+    self, LayerOp, LayerSpec, Network, NetworkParetoResult, NetworkSearchResult,
+    NetworkSearchSpec,
 };
 use crate::poly::{AffineExpr, AffineMap};
-use crate::search::{Algorithm, Objective, SearchSpec};
+use crate::search::{Algorithm, Objective, Scored, SearchSpec};
 use crate::util::json::Json;
 use std::collections::HashMap;
 
@@ -1454,6 +1455,18 @@ impl AnalyzeConfig {
         mapping.validate(&workload).map_err(|e| format!("mapping: {e}"))?;
         Ok(AnalyzeConfig { workload, arch, mapping })
     }
+
+    /// The full `looptree analyze --json` result document: this config
+    /// verbatim plus a `metrics` section. The CLI and the serve dispatcher
+    /// both build their responses through this method, so a served analyze
+    /// result is byte-identical to a one-shot run by construction.
+    pub fn result_doc(&self, metrics: &Metrics) -> Json {
+        let mut doc = self.to_json();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("metrics".into(), metrics.to_json());
+        }
+        doc
+    }
 }
 
 /// A complete `looptree search` request: workload + architecture + search
@@ -1494,6 +1507,40 @@ impl SearchConfig {
             None => SearchSpec::default(),
         };
         Ok(SearchConfig { workload, arch, search })
+    }
+
+    /// The full `looptree search --json` result document: this config
+    /// verbatim plus a `result` section (best mapping/schedule/score/metrics
+    /// and the evaluation accounting). The counters are passed as plain
+    /// numbers — not the whole [`crate::search::SearchResult`] — so a cached
+    /// summary can rebuild the exact document without holding every
+    /// evaluated mapping. The CLI and the serve dispatcher both build their
+    /// responses through this method, so a served search result is
+    /// byte-identical to a one-shot run by construction.
+    pub fn result_doc(
+        &self,
+        best: &Scored,
+        evaluated: usize,
+        pruned: usize,
+        symbolic_evals: usize,
+    ) -> Json {
+        let best = jobj(vec![
+            ("mapping", best.mapping.to_json()),
+            ("schedule", jstr(&best.mapping.schedule_string(&self.workload))),
+            ("score", Json::Num(best.score)),
+            ("metrics", best.metrics.to_json()),
+        ]);
+        let result = jobj(vec![
+            ("best", best),
+            ("evaluated", jnum_u(evaluated)),
+            ("pruned", jnum_u(pruned)),
+            ("symbolic_evals", jnum_u(symbolic_evals)),
+        ]);
+        let mut doc = self.to_json();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("result".into(), result);
+        }
+        doc
     }
 }
 
@@ -1577,6 +1624,59 @@ impl NetworkConfig {
         }
         Ok(NetworkConfig { network, arch, segment_search, cuts, pareto })
     }
+
+    /// The full `looptree network --json` result document (scalar DP or
+    /// fixed-cuts evaluation): this config verbatim plus a `result` section
+    /// with the cut set, per-segment choices, totals, and search
+    /// accounting. The CLI and the serve dispatcher both build their
+    /// responses through this method, so a served network result is
+    /// byte-identical to a one-shot run by construction.
+    pub fn result_doc(&self, r: &NetworkSearchResult) -> Json {
+        let segments = Json::Arr(
+            r.segments
+                .iter()
+                .map(|s| {
+                    jobj(vec![
+                        ("range", jarr(vec![jnum_u(s.lo), jnum_u(s.hi)])),
+                        ("nodes", jarr(s.nodes.iter().map(|&i| jnum_u(i)).collect())),
+                        ("span", jstr(&s.span)),
+                        ("mapping", s.best.mapping.to_json()),
+                        ("score", Json::Num(s.best.score)),
+                        ("metrics", s.best.metrics.to_json()),
+                    ])
+                })
+                .collect(),
+        );
+        let result = jobj(vec![
+            ("cuts", jarr(r.cuts.iter().map(|&c| jnum_u(c)).collect())),
+            ("segments", segments),
+            ("total_score", Json::Num(r.total_score)),
+            ("total_latency_cycles", jnum_i(r.total_latency())),
+            ("total_energy_pj", Json::Num(r.total_energy_pj())),
+            ("total_offchip_elems", jnum_i(r.total_offchip())),
+            ("all_fit", Json::Bool(r.all_fit())),
+            ("distinct_searched", jnum_u(r.distinct_searched)),
+            ("candidate_segments", jnum_u(r.candidate_segments)),
+            ("candidates_pruned", jnum_u(r.candidates_pruned)),
+        ]);
+        let mut doc = self.to_json();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("result".into(), result);
+        }
+        doc
+    }
+
+    /// The full `looptree network --pareto --json` result document: this
+    /// config verbatim plus [`NetworkParetoResult::to_json`] as the `result`
+    /// section. Shared by the CLI and the serve dispatcher (see
+    /// [`NetworkConfig::result_doc`]).
+    pub fn result_doc_pareto(&self, r: &NetworkParetoResult) -> Json {
+        let mut doc = self.to_json();
+        if let Json::Obj(o) = &mut doc {
+            o.insert("result".into(), r.to_json());
+        }
+        doc
+    }
 }
 
 // ------------------------------------------------- network Pareto fronts --
@@ -1639,6 +1739,137 @@ impl NetworkParetoResult {
             ("candidates_pruned", jnum_u(self.candidates_pruned)),
         ])
     }
+}
+
+// ------------------------------------------------- serve wire envelopes --
+
+/// The request kinds `looptree serve` dispatches — one per result-emitting
+/// CLI subcommand. See `docs/PROTOCOL.md` for the wire format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Evaluate one mapping ([`AnalyzeConfig`]).
+    Analyze,
+    /// Run a mapspace search ([`SearchConfig`]).
+    Search,
+    /// Partition a whole network — scalar DP, fixed cuts, or Pareto front,
+    /// chosen by the config's own `cuts`/`pareto` fields ([`NetworkConfig`]).
+    Network,
+    /// Lint a config document ([`crate::analysis::lint_document`]).
+    Lint,
+}
+
+impl RequestKind {
+    /// Stable wire name (matches the CLI subcommand).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestKind::Analyze => "analyze",
+            RequestKind::Search => "search",
+            RequestKind::Network => "network",
+            RequestKind::Lint => "lint",
+        }
+    }
+
+    /// Inverse of [`RequestKind::name`].
+    pub fn parse(s: &str) -> Result<RequestKind, String> {
+        match s {
+            "analyze" => Ok(RequestKind::Analyze),
+            "search" => Ok(RequestKind::Search),
+            "network" => Ok(RequestKind::Network),
+            "lint" => Ok(RequestKind::Lint),
+            other => Err(format!(
+                "unknown request kind {other} (expected analyze|search|network|lint)"
+            )),
+        }
+    }
+}
+
+/// A parsed serve request envelope: `{"kind": "...", "config": {...}}`,
+/// optionally with a caller-chosen `id` (echoed verbatim in the response)
+/// and `warm_start` (seed stochastic searches from previously cached best
+/// mappings; see [`crate::search::run_warm`]).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Echoed verbatim in the response envelope; any JSON value.
+    pub id: Option<Json>,
+    /// Which dispatcher handles `config`.
+    pub kind: RequestKind,
+    /// The inner config document, in the exact shape the matching CLI
+    /// subcommand accepts as `--config`.
+    pub config: Json,
+    /// Opt into warm-started stochastic search (annealing/genetic only).
+    /// Warm-started responses are *not* covered by the byte-identity
+    /// guarantee — that is the point of warm-starting.
+    pub warm_start: bool,
+}
+
+impl ServeRequest {
+    /// Parse a request envelope. `config` must be a JSON object; unknown
+    /// envelope fields are ignored (forward compatibility).
+    pub fn from_json(j: &Json) -> Result<ServeRequest, String> {
+        let ctx = "serve request";
+        let kind = RequestKind::parse(str_field(j, "kind", ctx)?)?;
+        let config = field(j, "config", ctx)?;
+        if config.as_obj().is_none() {
+            return Err(format!("{ctx}: field 'config' must be an object"));
+        }
+        let warm_start = match j.get("warm_start") {
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| format!("{ctx}: warm_start must be a bool"))?,
+            None => false,
+        };
+        Ok(ServeRequest { id: j.get("id").cloned(), kind, config: config.clone(), warm_start })
+    }
+}
+
+/// Per-request cross-request-cache accounting, carried in the `serve`
+/// section of every successful response envelope. All counters are
+/// deterministic for a given request sequence (cache traffic happens in
+/// serial pre-passes), so CI can pin them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Distinct segment signatures (or whole-search summaries) this request
+    /// reused from the cross-request cache.
+    pub cache_hits: u64,
+    /// Distinct signatures this request had to search and then stored.
+    pub cache_misses: u64,
+    /// 1 when a stochastic search was warm-started from cached mappings.
+    pub warm_starts: u64,
+}
+
+impl ServeStats {
+    /// Serialize to the `serve` section of a response envelope.
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("cache_hits", jnum_u(self.cache_hits as usize)),
+            ("cache_misses", jnum_u(self.cache_misses as usize)),
+            ("warm_starts", jnum_u(self.warm_starts as usize)),
+        ])
+    }
+}
+
+/// Build a success response envelope: `{"id"?, "kind", "ok": true,
+/// "result": <the exact one-shot CLI --json document>, "serve": {...}}`.
+pub fn serve_ok(id: Option<Json>, kind: RequestKind, result: Json, stats: &ServeStats) -> Json {
+    let mut pairs = vec![
+        ("kind", jstr(kind.name())),
+        ("ok", Json::Bool(true)),
+        ("result", result),
+        ("serve", stats.to_json()),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", id));
+    }
+    jobj(pairs)
+}
+
+/// Build an error response envelope: `{"id"?, "ok": false, "error": msg}`.
+pub fn serve_error(id: Option<Json>, message: &str) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(false)), ("error", jstr(message))];
+    if let Some(id) = id {
+        pairs.push(("id", id));
+    }
+    jobj(pairs)
 }
 
 #[cfg(test)]

@@ -215,6 +215,83 @@ pub fn check_model_eval_bench_schema(doc: &Json) -> Result<(), String> {
     )
 }
 
+/// The per-row numeric keys of `BENCH_serve.json`'s `rows` section. Each
+/// row is one load-test scenario of the serve bench harness: request-level
+/// latency percentiles plus the deterministic cross-request-cache counters
+/// (`clients`, `requests`, `cache_hits`, `cache_misses`, `warm_starts`) the
+/// CI determinism gate diffs across two runs.
+pub const SERVE_BENCH_NUM_KEYS: [&str; 10] = [
+    "clients",
+    "requests",
+    "mean_ns",
+    "p50_ns",
+    "p90_ns",
+    "p99_ns",
+    "throughput_rps",
+    "cache_hits",
+    "cache_misses",
+    "warm_starts",
+];
+
+/// The per-row bool keys of `BENCH_serve.json`'s `rows` section: whether
+/// every response in the scenario came back `ok`.
+pub const SERVE_BENCH_BOOL_KEYS: [&str; 1] = ["all_ok"];
+
+/// Validate a `BENCH_serve.json` document: a `rows` array whose entries
+/// carry a string `workload` (the scenario name), every numeric key of
+/// [`SERVE_BENCH_NUM_KEYS`], and every bool key of
+/// [`SERVE_BENCH_BOOL_KEYS`].
+pub fn check_serve_bench_schema(doc: &Json) -> Result<(), String> {
+    check_rows(doc, "BENCH_serve.json", "rows", &SERVE_BENCH_NUM_KEYS, &SERVE_BENCH_BOOL_KEYS)
+}
+
+/// Latency distribution over a set of per-request wall times, as reported
+/// by the serve load-test harness.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    /// Number of samples summarized.
+    pub count: usize,
+    /// Arithmetic mean.
+    pub mean: Duration,
+    /// Median (nearest-rank).
+    pub p50: Duration,
+    /// 90th percentile (nearest-rank).
+    pub p90: Duration,
+    /// 99th percentile (nearest-rank).
+    pub p99: Duration,
+}
+
+impl LatencyStats {
+    /// Summarize `times`; an empty sample yields all-zero stats.
+    /// Percentiles use the nearest-rank method on the sorted sample, so
+    /// every reported value is an actually observed latency.
+    pub fn from_times(times: &[Duration]) -> LatencyStats {
+        if times.is_empty() {
+            return LatencyStats {
+                count: 0,
+                mean: Duration::ZERO,
+                p50: Duration::ZERO,
+                p90: Duration::ZERO,
+                p99: Duration::ZERO,
+            };
+        }
+        let mut sorted = times.to_vec();
+        sorted.sort();
+        let total: Duration = sorted.iter().sum();
+        let pct = |p: f64| {
+            let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+            sorted[rank.clamp(1, sorted.len()) - 1]
+        };
+        LatencyStats {
+            count: sorted.len(),
+            mean: total / sorted.len() as u32,
+            p50: pct(50.0),
+            p90: pct(90.0),
+            p99: pct(99.0),
+        }
+    }
+}
+
 /// Time `f` for `iters` repetitions after `warmup` repetitions.
 pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
     for _ in 0..warmup {
@@ -289,6 +366,36 @@ mod tests {
         let stale = "{\"rows\":[{\"workload\":\"x\",\"mean_ns\":1.0,\"evaluated\":40,\
                      \"pruned\":0,\"mappings_per_sec\":2.0,\"best_score\":3.0}]}";
         assert!(check_search_bench_schema(&Json::parse(stale).unwrap()).is_err());
+    }
+
+    #[test]
+    fn serve_bench_schema_is_pinned() {
+        let row = "{\"workload\":\"replay-warm\",\"clients\":8.0,\"requests\":64.0,\
+                   \"mean_ns\":1.0,\"p50_ns\":1.0,\"p90_ns\":2.0,\"p99_ns\":3.0,\
+                   \"throughput_rps\":100.0,\"cache_hits\":5.0,\"cache_misses\":0.0,\
+                   \"warm_starts\":0.0,\"all_ok\":true}";
+        let doc = Json::parse(&format!("{{\"rows\":[{row}]}}")).unwrap();
+        check_serve_bench_schema(&doc).unwrap();
+        assert!(check_serve_bench_schema(&Json::parse("{}").unwrap()).is_err());
+        assert!(check_serve_bench_schema(&Json::parse("{\"rows\":[]}").unwrap()).is_err());
+        // A row missing the deterministic cache counters must be rejected.
+        let stale = "{\"rows\":[{\"workload\":\"x\",\"clients\":1.0,\"requests\":1.0,\
+                     \"mean_ns\":1.0,\"p50_ns\":1.0,\"p90_ns\":1.0,\"p99_ns\":1.0,\
+                     \"throughput_rps\":1.0,\"all_ok\":true}]}";
+        assert!(check_serve_bench_schema(&Json::parse(stale).unwrap()).is_err());
+    }
+
+    #[test]
+    fn latency_stats_use_nearest_rank() {
+        let times: Vec<Duration> = (1..=100).map(Duration::from_nanos).collect();
+        let s = LatencyStats::from_times(&times);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, Duration::from_nanos(50));
+        assert_eq!(s.p90, Duration::from_nanos(90));
+        assert_eq!(s.p99, Duration::from_nanos(99));
+        let empty = LatencyStats::from_times(&[]);
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.mean, Duration::ZERO);
     }
 
     #[test]

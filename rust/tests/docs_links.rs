@@ -1,0 +1,90 @@
+//! Relative-link checker for the documentation layer: every `](path)`
+//! markdown link in README.md, docs/*.md, and examples/configs/README.md
+//! must resolve to a file that exists in the repository. External URLs and
+//! in-page anchors are skipped. CI runs this as part of the serve-smoke
+//! job, so a doc reorganization cannot silently strand links.
+
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// Extract `](target)` link targets from markdown text. Good enough for
+/// the repo's docs: it scans for the literal `](` and reads to the
+/// matching `)`, ignoring nested parentheses (none of our links have any).
+fn link_targets(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while let Some(pos) = text[i..].find("](") {
+        let start = i + pos + 2;
+        let Some(len) = text[start..].find(')') else { break };
+        // Trim an optional markdown title suffix: `](path "title")`.
+        let raw = &text[start..start + len];
+        let target = raw.split_whitespace().next().unwrap_or("").to_string();
+        out.push(target);
+        i = start + len;
+        if i >= bytes.len() {
+            break;
+        }
+    }
+    out
+}
+
+fn check_file(doc: &Path, errors: &mut Vec<String>) {
+    let text = std::fs::read_to_string(doc)
+        .unwrap_or_else(|e| panic!("read {}: {e}", doc.display()));
+    let base = doc.parent().expect("doc file has a parent directory");
+    for target in link_targets(&text) {
+        if target.is_empty()
+            || target.starts_with("http://")
+            || target.starts_with("https://")
+            || target.starts_with("mailto:")
+            || target.starts_with('#')
+        {
+            continue;
+        }
+        let path_part = target.split('#').next().unwrap_or(&target);
+        let resolved = base.join(path_part);
+        if !resolved.exists() {
+            errors.push(format!(
+                "{}: broken relative link '{target}' (resolved {})",
+                doc.display(),
+                resolved.display()
+            ));
+        }
+    }
+}
+
+#[test]
+fn all_relative_doc_links_resolve() {
+    let root = repo_root();
+    let mut docs = vec![root.join("README.md"), root.join("examples/configs/README.md")];
+    let docs_dir = root.join("docs");
+    assert!(docs_dir.is_dir(), "docs/ directory is missing");
+    let mut md_in_docs: Vec<PathBuf> = std::fs::read_dir(&docs_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "md"))
+        .collect();
+    md_in_docs.sort();
+    assert!(
+        md_in_docs.len() >= 3,
+        "expected ARCHITECTURE/PROTOCOL/LINTS under docs/, found {md_in_docs:?}"
+    );
+    docs.extend(md_in_docs);
+    let mut errors = Vec::new();
+    for doc in &docs {
+        assert!(doc.exists(), "documentation file missing: {}", doc.display());
+        check_file(doc, &mut errors);
+    }
+    assert!(errors.is_empty(), "broken documentation links:\n{}", errors.join("\n"));
+}
+
+#[test]
+fn link_extraction_handles_titles_and_anchors() {
+    let md = "[a](docs/X.md) [b](https://example.com) [c](#local) [d](Y.md#sec) [e](Z.md \"t\")";
+    let targets = link_targets(md);
+    assert_eq!(targets, vec!["docs/X.md", "https://example.com", "#local", "Y.md#sec", "Z.md"]);
+}

@@ -1,0 +1,269 @@
+//! Integration tests for `looptree serve`: response byte-identity against
+//! the one-shot CLI, cross-request cache determinism, thread-count
+//! independence, warm-started search, and protocol error envelopes.
+
+use looptree::serve::{process_request, response_stats, ServeOptions, ServeState, Server};
+use looptree::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn envelope(kind: &str, config: Json, warm_start: bool) -> Json {
+    let mut pairs = vec![
+        ("kind".to_string(), Json::Str(kind.to_string())),
+        ("config".to_string(), config),
+    ];
+    if warm_start {
+        pairs.push(("warm_start".to_string(), Json::Bool(true)));
+    }
+    Json::Obj(pairs.into_iter().collect())
+}
+
+fn small_network_config() -> Json {
+    Json::parse(
+        r#"{
+            "network": {"name": "t", "layers": [
+                {"name": "c0", "input_shape": [8, 14, 14],
+                 "op": {"op": "conv2d", "out_channels": 8, "r": 3, "s": 3, "stride": 1}},
+                {"name": "c1", "input_shape": [8, 12, 12],
+                 "op": {"op": "conv2d", "out_channels": 8, "r": 3, "s": 3, "stride": 1}},
+                {"name": "c2", "input_shape": [8, 10, 10],
+                 "op": {"op": "conv2d", "out_channels": 8, "r": 3, "s": 3, "stride": 1}}
+            ]},
+            "arch": "generic:256",
+            "segment_search": {
+                "max_segment_layers": 2,
+                "search": {"mapspace": {"uniform_retention": true, "tile_sizes": [4]}}
+            }
+        }"#,
+    )
+    .unwrap()
+}
+
+fn annealing_search_config() -> Json {
+    Json::parse(
+        r#"{
+            "workload": "conv_conv:14x8",
+            "arch": "generic:256",
+            "search": {
+                "algorithm": "annealing", "iters": 60, "seed": 11,
+                "mapspace": {"uniform_retention": true, "tile_sizes": [2, 4]}
+            }
+        }"#,
+    )
+    .unwrap()
+}
+
+fn result_text(resp: &Json) -> String {
+    resp.get("result").expect("response carries a result").pretty()
+}
+
+#[test]
+fn repeated_network_request_is_byte_identical_with_cache_hits() {
+    let state = ServeState::new(&ServeOptions::default());
+    let req = envelope("network", small_network_config(), false);
+    let r1 = process_request(&state, &req);
+    let r2 = process_request(&state, &req);
+    assert_eq!(r1.get("ok").and_then(Json::as_bool), Some(true), "{r1}");
+    let s1 = response_stats(&r1);
+    let s2 = response_stats(&r2);
+    assert!(s1.cache_misses > 0, "first request must populate the cache");
+    assert_eq!(s1.cache_hits, 0, "first request on a cold cache cannot hit");
+    assert!(s2.cache_hits > 0, "second identical request must hit");
+    assert_eq!(s2.cache_misses, 0, "second identical request must not re-search");
+    assert_eq!(
+        result_text(&r1),
+        result_text(&r2),
+        "cache reuse changed the result document"
+    );
+}
+
+#[test]
+fn responses_are_independent_of_thread_count() {
+    let mk = |threads| {
+        ServeState::new(&ServeOptions { threads, ..ServeOptions::default() })
+    };
+    let one = mk(1);
+    let eight = mk(8);
+    for req in [
+        envelope("network", small_network_config(), false),
+        envelope("analyze", Json::parse(r#"{"workload": "conv_conv:28x64"}"#).unwrap(), false),
+        envelope("search", annealing_search_config(), false),
+    ] {
+        let a = process_request(&one, &req);
+        let b = process_request(&eight, &req);
+        assert_eq!(a.pretty(), b.pretty(), "response depends on worker count");
+    }
+}
+
+#[test]
+fn warm_started_search_reports_and_never_regresses() {
+    let state = ServeState::new(&ServeOptions::default());
+    let cold = process_request(&state, &envelope("search", annealing_search_config(), false));
+    assert_eq!(cold.get("ok").and_then(Json::as_bool), Some(true), "{cold}");
+    assert_eq!(response_stats(&cold).cache_misses, 1);
+    let best = |resp: &Json| {
+        resp.get("result")
+            .and_then(|r| r.get("result"))
+            .and_then(|r| r.get("best"))
+            .and_then(|b| b.get("score"))
+            .and_then(Json::as_f64)
+            .expect("search response carries result.best.score")
+    };
+    let cold_best = best(&cold);
+    let warm = process_request(&state, &envelope("search", annealing_search_config(), true));
+    let ws = response_stats(&warm);
+    assert_eq!(ws.warm_starts, 1, "warm pool was seeded, so this must warm-start");
+    assert_eq!((ws.cache_hits, ws.cache_misses), (0, 0), "warm_start bypasses the summary cache");
+    assert!(
+        best(&warm) <= cold_best,
+        "warm-started search regressed: {} > {cold_best}",
+        best(&warm)
+    );
+}
+
+#[test]
+fn error_envelope_carries_id_and_message() {
+    let state = ServeState::new(&ServeOptions::default());
+    let bad_kind =
+        Json::parse(r#"{"id": 7, "kind": "frobnicate", "config": {}}"#).unwrap();
+    let resp = process_request(&state, &bad_kind);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(resp.get("error").and_then(Json::as_str).is_some(), "{resp}");
+    assert_eq!(resp.get("id").and_then(Json::as_i64), Some(7), "id must echo back");
+    let no_config = Json::parse(r#"{"kind": "analyze"}"#).unwrap();
+    let resp = process_request(&state, &no_config);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+}
+
+#[test]
+fn id_rides_through_successful_responses() {
+    let state = ServeState::new(&ServeOptions::default());
+    let mut req = envelope("lint", small_network_config(), false);
+    if let Json::Obj(map) = &mut req {
+        map.insert("id".to_string(), Json::Str("req-42".to_string()));
+    }
+    let resp = process_request(&state, &req);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+    assert_eq!(resp.get("id").and_then(Json::as_str), Some("req-42"));
+    assert_eq!(resp.get("kind").and_then(Json::as_str), Some("lint"));
+}
+
+// ---------------------------------------------------- over-the-wire tests --
+
+#[test]
+fn http_server_round_trips_and_reports_health() {
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn();
+    let req = envelope("network", small_network_config(), false);
+    let (status, r1) = handle.post(&req).unwrap();
+    assert_eq!(status, 200, "{r1}");
+    let (_, r2) = handle.post(&req).unwrap();
+    assert!(response_stats(&r2).cache_hits > 0, "cache must persist across connections");
+    assert_eq!(result_text(&r1), result_text(&r2));
+
+    // Malformed request kinds map to HTTP 400 with an error envelope.
+    let (status, err) = handle
+        .post(&Json::parse(r#"{"kind": "nope", "config": {}}"#).unwrap())
+        .unwrap();
+    assert_eq!(status, 400);
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+
+    let (status, text) = looptree::serve::post_json_raw(
+        &handle.addr(),
+        "/",
+        &envelope("analyze", Json::parse(r#"{"workload": "conv_conv:14x8"}"#).unwrap(), false),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    assert!(text.contains("\"metrics\""), "analyze response carries metrics: {text}");
+
+    // GET /health over a raw socket: liveness plus lifetime cache totals.
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+        s.write_all(b"GET /health HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).unwrap();
+        let raw = String::from_utf8(raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+        let body = raw.split("\r\n\r\n").nth(1).unwrap();
+        let health = Json::parse(body).unwrap();
+        assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(health.get("cache_hits_total").and_then(Json::as_f64).is_some());
+    }
+    handle.stop();
+}
+
+// ------------------------------------------- CLI byte-identity (tentpole) --
+
+fn repo_config_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/configs")
+}
+
+fn cli_json(sub: &str, config_path: &Path) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_looptree"))
+        .args([sub, "--config", config_path.to_str().unwrap(), "--json"])
+        .output()
+        .expect("run one-shot CLI");
+    // lint exits nonzero on findings; every other subcommand must succeed.
+    if sub != "lint" {
+        assert!(
+            out.status.success(),
+            "{sub} {config_path:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    String::from_utf8(out.stdout).expect("CLI emits UTF-8")
+}
+
+/// The acceptance criterion: for every example config, the serve response's
+/// `result` section is byte-for-byte the one-shot CLI `--json` document.
+#[test]
+fn serve_results_match_one_shot_cli_for_every_example_config() {
+    let dir = repo_config_dir();
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("examples/configs exists")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort();
+    assert!(!entries.is_empty(), "no example configs found in {dir:?}");
+    let state = ServeState::new(&ServeOptions::default());
+    let mut checked = 0;
+    for path in &entries {
+        let name = path.file_name().unwrap().to_str().unwrap();
+        let Some(kind) = ["analyze", "search", "network"]
+            .into_iter()
+            .find(|k| name.starts_with(&format!("{k}_")))
+        else {
+            continue;
+        };
+        let config = Json::parse(&std::fs::read_to_string(path).unwrap())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let resp = process_request(&state, &envelope(kind, config, false));
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "{name}: {resp}"
+        );
+        let served = format!("{}\n", result_text(&resp));
+        let cli = cli_json(kind, path);
+        assert_eq!(served, cli, "{name}: serve response diverged from one-shot CLI");
+        checked += 1;
+    }
+    assert!(checked >= 4, "expected to cover the example configs, got {checked}");
+}
+
+/// Lint parity: the serve `lint` result equals `looptree lint --json`.
+#[test]
+fn serve_lint_matches_cli_lint() {
+    let dir = repo_config_dir();
+    let path = dir.join("analyze_conv28.json");
+    let config = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let state = ServeState::new(&ServeOptions::default());
+    let resp = process_request(&state, &envelope("lint", config, false));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+    let served = format!("{}\n", result_text(&resp));
+    let cli = cli_json("lint", &path);
+    assert_eq!(served, cli, "serve lint diverged from one-shot CLI lint");
+}
